@@ -1,0 +1,122 @@
+//! End-to-end validation driver (EXPERIMENTS.md §End-to-end): exercises
+//! all three layers on a realistic workload and reports the paper's
+//! headline metrics.
+//!
+//! 1. Generate the Porto-analog trace (50K points) — L3 dataset substrate.
+//! 2. Run TrueKNN vs the maxDist fixed-radius baseline on the simulated
+//!    RT pipeline — the paper's Table 1/2 headline (speedup + test ratio).
+//! 3. Load the AOT artifacts (L2 JAX graph wrapping the L1 Pallas
+//!    kernel) through PJRT and serve batched kNN requests through the
+//!    coordinator on both routes, reporting latency/throughput — proving
+//!    Python never runs on the request path.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+
+use trueknn::coordinator::{KnnRequest, QueryMode, Service, ServiceConfig};
+use trueknn::dataset::{DatasetKind, DistanceProfile};
+use trueknn::knn::{fixed_radius_knns, trueknn as trueknn_search, FixedRadiusParams, TrueKnnParams};
+use trueknn::util::{Pcg32, Stopwatch};
+
+fn main() {
+    let n = 50_000;
+    let k = 5;
+    println!("=== end-to-end: TrueKNN on the Porto analog, n={n}, k={k} ===\n");
+    let ds = DatasetKind::Taxi.generate(n, 42);
+
+    // ---- headline experiment: TrueKNN vs maxDist baseline -------------
+    println!("[1/3] TrueKNN vs fixed-radius baseline (RT simulator)");
+    let t = trueknn_search(&ds.points, &ds.points, &TrueKnnParams { k, ..Default::default() });
+    assert!(
+        t.is_complete(k, n - 1),
+        "TrueKNN must find k neighbors for every point"
+    );
+    let prof = DistanceProfile::compute(&ds, k);
+    let b = fixed_radius_knns(
+        &ds.points,
+        &ds.points,
+        &FixedRadiusParams {
+            k,
+            radius: prof.max_dist() as f32 * 1.0001,
+            ..Default::default()
+        },
+    );
+    println!(
+        "  TrueKNN : {:>10} ray-sphere tests, {} rounds, sim {:.3}s, wall {:.3}s",
+        t.counters.prim_tests,
+        t.rounds.len(),
+        t.sim_seconds,
+        t.wall_seconds
+    );
+    println!(
+        "  baseline: {:>10} ray-sphere tests, maxDist={:.4}, sim {:.3}s, wall {:.3}s",
+        b.counters.prim_tests,
+        prof.max_dist(),
+        b.sim_seconds,
+        b.wall_seconds
+    );
+    println!(
+        "  headline: speedup {:.1}x (sim), test ratio {:.1}x\n",
+        b.sim_seconds / t.sim_seconds,
+        b.counters.prim_tests as f64 / t.counters.prim_tests as f64
+    );
+
+    // ---- serving: batched requests through the coordinator ------------
+    println!("[2/3] coordinator serving (RT route)");
+    let cfg = ServiceConfig {
+        use_pjrt: true,
+        ..Default::default()
+    };
+    let (svc, handle) = Service::start(ds.points.clone(), cfg);
+    let mut rng = Pcg32::new(99);
+
+    let run_route = |label: &str, mode: QueryMode, handle: &trueknn::coordinator::ServiceHandle| {
+        let n_req = 32;
+        let qpr = 64;
+        let sw = Stopwatch::start();
+        let rxs: Vec<_> = (0..n_req)
+            .map(|id| {
+                let mut local = Pcg32::new(id as u64 * 7 + 1);
+                let queries: Vec<_> = (0..qpr)
+                    .map(|_| ds.points[local.below_usize(ds.len())])
+                    .collect();
+                handle
+                    .submit(KnnRequest::new(id as u64, queries, k).with_mode(mode))
+                    .expect("submit")
+            })
+            .collect();
+        let mut lat_sum = 0.0;
+        let mut served = 0usize;
+        for rx in rxs {
+            let resp = rx.recv().expect("recv");
+            assert!(resp.neighbors.iter().all(|nb| nb.len() == k));
+            lat_sum += resp.latency_seconds;
+            served += resp.neighbors.len();
+        }
+        let wall = sw.elapsed_secs();
+        println!(
+            "  {label:<10} {served} queries in {:.3}s -> {:>7.0} q/s, mean latency {:.2}ms",
+            wall,
+            served as f64 / wall,
+            lat_sum / n_req as f64 * 1e3
+        );
+        served
+    };
+
+    let _ = rng.next_u32();
+    let served_rt = run_route("RT route", QueryMode::Rt, &handle);
+
+    println!("[3/3] coordinator serving (PJRT brute route — L1 Pallas kernel via L2 HLO)");
+    let served_brute = run_route("PJRT route", QueryMode::Brute, &handle);
+
+    let m = handle.metrics().snapshot();
+    println!(
+        "\nservice metrics: requests={} responses={} batches={} rt={} brute={} rejected={}",
+        m.requests, m.responses, m.batches, m.rt_requests, m.brute_requests, m.rejected
+    );
+    svc.shutdown();
+
+    assert_eq!(served_rt, served_brute);
+    println!("\nend_to_end OK");
+}

@@ -1,0 +1,91 @@
+//! kNN classification — the canonical application from the paper's §2.1:
+//! "a query point can be classified into the same class as a majority of
+//! its neighbors".
+//!
+//! Builds a labeled 3-cluster dataset, splits train/test, classifies the
+//! test points by majority vote over TrueKNN neighbors (served through
+//! the coordinator), and reports accuracy with k = √N like the paper's
+//! classifier-oriented k choice.
+//!
+//! ```bash
+//! cargo run --release --example knn_classify
+//! ```
+
+use trueknn::coordinator::{KnnRequest, Service, ServiceConfig};
+use trueknn::geom::Point3;
+use trueknn::util::Pcg32;
+
+fn make_labeled(n: usize, rng: &mut Pcg32) -> (Vec<Point3>, Vec<u8>) {
+    // three anisotropic Gaussian classes with mild overlap
+    let centers = [
+        Point3::new(0.25, 0.25, 0.3),
+        Point3::new(0.75, 0.4, 0.6),
+        Point3::new(0.45, 0.8, 0.4),
+    ];
+    let spread = [0.09f32, 0.07, 0.08];
+    let mut pts = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let c = rng.below(3) as usize;
+        pts.push(Point3::new(
+            centers[c].x + rng.normal() * spread[c],
+            centers[c].y + rng.normal() * spread[c],
+            centers[c].z + rng.normal() * spread[c],
+        ));
+        labels.push(c as u8);
+    }
+    (pts, labels)
+}
+
+fn main() {
+    let mut rng = Pcg32::new(2023);
+    let (train, train_labels) = make_labeled(8_000, &mut rng);
+    let (test, test_labels) = make_labeled(1_000, &mut rng);
+    let k = (train.len() as f64).sqrt() as usize; // paper's classifier k
+
+    println!(
+        "kNN classifier: {} train / {} test points, k={k}",
+        train.len(),
+        test.len()
+    );
+
+    // serve the queries through the coordinator (batched)
+    let (svc, handle) = Service::start(train.clone(), ServiceConfig::default());
+    let mut correct = 0usize;
+    let chunk = 128;
+    let mut rxs = Vec::new();
+    for (i, queries) in test.chunks(chunk).enumerate() {
+        rxs.push(
+            handle
+                .submit(KnnRequest::new(i as u64, queries.to_vec(), k))
+                .expect("submit"),
+        );
+    }
+    let mut idx = 0usize;
+    for rx in rxs {
+        let resp = rx.recv().expect("response");
+        for nb in &resp.neighbors {
+            let mut votes = [0usize; 3];
+            for h in nb {
+                votes[train_labels[h.idx as usize] as usize] += 1;
+            }
+            let pred = votes
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, v)| **v)
+                .map(|(c, _)| c as u8)
+                .unwrap();
+            if pred == test_labels[idx] {
+                correct += 1;
+            }
+            idx += 1;
+        }
+    }
+    svc.shutdown();
+
+    let acc = correct as f64 / test.len() as f64;
+    println!("accuracy: {acc:.3} ({correct}/{})", test.len());
+    // clusters overlap mildly; majority vote should stay far above chance
+    assert!(acc > 0.9, "accuracy {acc} too low");
+    println!("OK");
+}

@@ -1,0 +1,56 @@
+//! Quickstart: run TrueKNN on a synthetic point cloud and compare it
+//! against the paper's fixed-radius baseline.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use trueknn::dataset::{DatasetKind, DistanceProfile};
+use trueknn::knn::{fixed_radius_knns, trueknn as trueknn_search, FixedRadiusParams, TrueKnnParams};
+
+fn main() {
+    // 1. A Porto-like point cloud: dense city core + GPS outliers.
+    let ds = DatasetKind::Taxi.generate(10_000, 42);
+    let k = 5;
+
+    // 2. TrueKNN: no radius needed — it samples a start radius and grows.
+    let result = trueknn_search(&ds.points, &ds.points, &TrueKnnParams { k, ..Default::default() });
+    println!("TrueKNN found {k} neighbors for all {} points:", ds.len());
+    println!(
+        "  rounds={} ray-sphere tests={} simulated GPU time={:.4}s wall={:.4}s",
+        result.rounds.len(),
+        result.counters.prim_tests,
+        result.sim_seconds,
+        result.wall_seconds
+    );
+
+    // 3. The baseline needs the a-priori-unknowable maxDist radius
+    //    (paper §5.2.1 grants it that best case; it still loses).
+    let prof = DistanceProfile::compute(&ds, k);
+    let baseline = fixed_radius_knns(
+        &ds.points,
+        &ds.points,
+        &FixedRadiusParams {
+            k,
+            radius: prof.max_dist() as f32 * 1.0001,
+            ..Default::default()
+        },
+    );
+    println!("Fixed-radius RT-kNNS baseline at radius {:.4}:", prof.max_dist());
+    println!(
+        "  ray-sphere tests={} simulated GPU time={:.4}s",
+        baseline.counters.prim_tests, baseline.sim_seconds
+    );
+    println!(
+        "TrueKNN speedup: {:.1}x (intersection-test ratio {:.1}x)",
+        baseline.sim_seconds / result.sim_seconds,
+        baseline.counters.prim_tests as f64 / result.counters.prim_tests as f64
+    );
+
+    // 4. Results are exact: first query's neighbors.
+    print!("point 0 neighbors:");
+    for n in &result.neighbors[0] {
+        print!(" ({}, {:.4})", n.idx, n.dist);
+    }
+    println!();
+}

@@ -1,0 +1,105 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO text artifacts for Rust.
+
+HLO *text* is the interchange format, not serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once via `make artifacts`; Python never executes on the query path.
+
+Usage: python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (Q, N, k) variants compiled ahead of time. The coordinator pads any
+# request batch up to the nearest variant. Block sizes (128, 256) bound
+# the valid shapes: Q % 128 == 0, N % 256 == 0.
+VARIANTS = [
+    (128, 1024, 32),
+    (128, 4096, 32),
+    (256, 16384, 32),
+]
+RADIUS_VARIANTS = [
+    (128, 4096),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (with return_tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_knn(q: int, n: int, k: int) -> str:
+    spec_q = jax.ShapeDtypeStruct((q, 3), jnp.float32)
+    spec_d = jax.ShapeDtypeStruct((n, 3), jnp.float32)
+    lowered = jax.jit(
+        lambda a, b: model.brute_knn_tuple(a, b, k)
+    ).lower(spec_q, spec_d)
+    return to_hlo_text(lowered)
+
+
+def lower_radius_count(q: int, n: int) -> str:
+    spec_q = jax.ShapeDtypeStruct((q, 3), jnp.float32)
+    spec_d = jax.ShapeDtypeStruct((n, 3), jnp.float32)
+    spec_r = jax.ShapeDtypeStruct((), jnp.float32)
+    lowered = jax.jit(model.radius_count).lower(spec_q, spec_d, spec_r)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact dir")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"pad_sentinel": model.PAD_SENTINEL, "artifacts": []}
+
+    for (q, n, k) in VARIANTS:
+        name = f"brute_knn_q{q}_n{n}_k{k}"
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        text = lower_knn(q, n, k)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append({
+            "name": name,
+            "kind": "brute_knn",
+            "q": q, "n": n, "k": k,
+            "file": os.path.basename(path),
+        })
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for (q, n) in RADIUS_VARIANTS:
+        name = f"radius_count_q{q}_n{n}"
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        text = lower_radius_count(q, n)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append({
+            "name": name,
+            "kind": "radius_count",
+            "q": q, "n": n, "k": 0,
+            "file": os.path.basename(path),
+        })
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

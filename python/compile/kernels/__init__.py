@@ -1,0 +1,8 @@
+"""Layer-1 Pallas kernels (build-time only; never imported at runtime).
+
+`pairwise` holds the tiled squared-distance kernel — the TPU adaptation
+of the paper's software ray-sphere intersection hot loop (DESIGN.md §10).
+`ref` holds the pure-jnp oracles the kernels are validated against.
+"""
+
+from . import pairwise, ref  # noqa: F401

@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth for pytest/hypothesis correctness sweeps and
+double as the naive (unfused, O(Q*N*3) memory) implementation whose
+roofline the kernel is compared against in DESIGN.md §Perf.
+"""
+
+import jax.numpy as jnp
+import jax
+
+
+def pairwise_dist2_ref(q: jax.Array, d: jax.Array) -> jax.Array:
+    """Squared Euclidean distances, [Q, 3] x [N, 3] -> [Q, N].
+
+    Broadcasting form: materializes the [Q, N, 3] difference tensor, so
+    it is memory-bound — exactly what the MXU-shaped kernel avoids.
+    """
+    diff = q[:, None, :] - d[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def knn_ref(q: jax.Array, d: jax.Array, k: int):
+    """Exact brute-force kNN: (distances [Q, k], indices [Q, k])."""
+    d2 = pairwise_dist2_ref(q, d)
+    neg, idx = jax.lax.top_k(-d2, k)
+    return jnp.sqrt(jnp.maximum(-neg, 0.0)), idx
+
+
+def radius_count_ref(q: jax.Array, d: jax.Array, r) -> jax.Array:
+    """Number of data points within radius r of each query, [Q]."""
+    d2 = pairwise_dist2_ref(q, d)
+    return jnp.sum(d2 <= r * r, axis=1).astype(jnp.int32)

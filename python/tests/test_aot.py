@@ -1,0 +1,65 @@
+"""AOT lowering smoke tests: HLO text emission and manifest integrity.
+
+The full `make artifacts` output is exercised end-to-end by the Rust
+runtime integration tests; here we verify the lowering path itself.
+"""
+
+import json
+import subprocess
+import sys
+import os
+
+import pytest
+
+from compile import aot
+
+
+class TestLowering:
+    def test_knn_lowers_to_hlo_text(self):
+        text = aot.lower_knn(128, 1024, 8)
+        assert "ENTRY" in text
+        assert "f32[128,1024]" in text  # the distance matrix
+        # top-k output shapes present
+        assert "f32[128,8]" in text
+        assert "s32[128,8]" in text
+
+    def test_radius_count_lowers(self):
+        text = aot.lower_radius_count(128, 1024)
+        assert "ENTRY" in text
+        assert "s32[128]" in text
+
+    def test_no_mosaic_custom_calls(self):
+        # interpret=True must keep the kernel executable on CPU PJRT:
+        # a Mosaic custom-call in the HLO would break the Rust runtime
+        text = aot.lower_knn(128, 1024, 8)
+        assert "tpu_custom_call" not in text
+        assert "mosaic" not in text.lower()
+
+
+class TestMainOutput:
+    @pytest.fixture(scope="class")
+    def outdir(self, tmp_path_factory):
+        out = tmp_path_factory.mktemp("artifacts")
+        env = dict(os.environ)
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out", str(out)],
+            check=True,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            env=env,
+        )
+        return out
+
+    def test_manifest_lists_every_file(self, outdir):
+        manifest = json.loads((outdir / "manifest.json").read_text())
+        assert len(manifest["artifacts"]) == len(aot.VARIANTS) + len(aot.RADIUS_VARIANTS)
+        for entry in manifest["artifacts"]:
+            f = outdir / entry["file"]
+            assert f.exists(), entry
+            assert f.stat().st_size > 1000
+
+    def test_manifest_variant_fields(self, outdir):
+        manifest = json.loads((outdir / "manifest.json").read_text())
+        kinds = {e["kind"] for e in manifest["artifacts"]}
+        assert kinds == {"brute_knn", "radius_count"}
+        for e in manifest["artifacts"]:
+            assert e["q"] > 0 and e["n"] > 0

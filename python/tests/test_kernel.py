@@ -1,0 +1,113 @@
+"""L1 correctness: the Pallas pairwise-distance kernel vs the pure-jnp
+oracle, including a hypothesis sweep over shapes and dtypes."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels import pairwise, ref
+
+
+def rand(shape, seed, dtype=np.float32, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(dtype)
+
+
+class TestPairwiseAligned:
+    def test_matches_ref_exact_shapes(self):
+        q = rand((128, 3), 0)
+        d = rand((256, 3), 1)
+        got = pairwise.pairwise_dist2(q, d)
+        want = ref.pairwise_dist2_ref(q, d)
+        assert got.shape == (128, 256)
+        assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_multi_tile_grid(self):
+        q = rand((256, 3), 2)
+        d = rand((1024, 3), 3)
+        got = pairwise.pairwise_dist2(q, d)
+        want = ref.pairwise_dist2_ref(q, d)
+        assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_rejects_misaligned_shapes(self):
+        q = rand((100, 3), 4)
+        d = rand((256, 3), 5)
+        with pytest.raises(AssertionError):
+            pairwise.pairwise_dist2(q, d)
+
+    def test_zero_distance_on_diagonal(self):
+        q = rand((128, 3), 6)
+        got = pairwise.pairwise_dist2(q, pairwise.pad_rows(q, 256, 0.0))
+        diag = np.diagonal(np.asarray(got)[:, :128])
+        assert_allclose(diag, np.zeros(128), atol=1e-4)
+
+    def test_nonnegative_everywhere(self):
+        # the kernel clamps cancellation-induced negatives
+        q = rand((128, 3), 7, scale=1e3)
+        d = q + 1e-4
+        got = pairwise.pairwise_dist2(q, pairwise.pad_rows(d, 256, 0.0))
+        assert np.all(np.asarray(got) >= 0.0)
+
+    def test_custom_block_sizes(self):
+        q = rand((64, 3), 8)
+        d = rand((128, 3), 9)
+        got = pairwise.pairwise_dist2(q, d, block_q=32, block_n=64)
+        want = ref.pairwise_dist2_ref(q, d)
+        assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+class TestPairwisePadded:
+    @hypothesis.settings(deadline=None, max_examples=25)
+    @hypothesis.given(
+        nq=st.integers(min_value=1, max_value=300),
+        nd=st.integers(min_value=1, max_value=600),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_arbitrary_shapes_match_ref(self, nq, nd, seed):
+        q = rand((nq, 3), seed)
+        d = rand((nd, 3), seed + 1)
+        got = pairwise.pairwise_dist2_padded(q, d, block_q=64, block_n=128)
+        want = ref.pairwise_dist2_ref(q, d)
+        assert got.shape == (nq, nd)
+        assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @hypothesis.settings(deadline=None, max_examples=10)
+    @hypothesis.given(
+        dtype=st.sampled_from([np.float32, np.float16, jnp.bfloat16]),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_dtype_sweep(self, dtype, seed):
+        # inputs in any float dtype; accumulation is always f32
+        q = rand((96, 3), seed).astype(dtype)
+        d = rand((200, 3), seed + 1).astype(dtype)
+        got = pairwise.pairwise_dist2_padded(q, d, block_q=32, block_n=64)
+        want = ref.pairwise_dist2_ref(
+            np.asarray(q, dtype=np.float32), np.asarray(d, dtype=np.float32)
+        )
+        tol = 1e-4 if dtype == np.float32 else 5e-2
+        assert got.dtype == jnp.float32
+        assert_allclose(got, want, rtol=tol, atol=tol)
+
+    def test_scale_invariance_of_relative_error(self):
+        for scale in [1e-3, 1.0, 1e3]:
+            q = rand((40, 3), 11, scale=scale)
+            d = rand((70, 3), 12, scale=scale)
+            got = pairwise.pairwise_dist2_padded(q, d, block_q=32, block_n=64)
+            want = ref.pairwise_dist2_ref(q, d)
+            assert_allclose(got, want, rtol=1e-3)
+
+
+class TestPadRows:
+    def test_pads_to_multiple(self):
+        x = jnp.ones((5, 3))
+        p = pairwise.pad_rows(x, 8, 0.0)
+        assert p.shape == (8, 3)
+        assert_allclose(np.asarray(p[5:]), np.zeros((3, 3)))
+
+    def test_noop_when_aligned(self):
+        x = jnp.ones((8, 3))
+        assert pairwise.pad_rows(x, 8, 0.0) is x

@@ -1,0 +1,99 @@
+"""L2 correctness: brute_knn / radius_count graphs vs oracles, padding
+semantics, and top-k edge cases."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref, pairwise
+
+
+def cloud(n, seed):
+    rng = np.random.default_rng(seed)
+    return rng.random((n, 3)).astype(np.float32)
+
+
+def brute_np(q, d, k):
+    d2 = ((q[:, None, :] - d[None, :, :]) ** 2).sum(-1)
+    idx = np.argsort(d2, axis=1, kind="stable")[:, :k]
+    return np.sqrt(np.take_along_axis(d2, idx, axis=1)), idx
+
+
+class TestBruteKnn:
+    def test_matches_numpy_oracle(self):
+        q = cloud(128, 0)
+        d = cloud(1024, 1)
+        dists, idx = model.brute_knn(jnp.asarray(q), jnp.asarray(d), 8)
+        nd, _ = brute_np(q, d, 8)
+        assert dists.shape == (128, 8)
+        assert idx.shape == (128, 8)
+        assert_allclose(np.asarray(dists), nd, rtol=1e-4, atol=1e-5)
+
+    def test_distances_ascending(self):
+        q = cloud(128, 2)
+        d = cloud(256, 3)
+        dists, _ = model.brute_knn(jnp.asarray(q), jnp.asarray(d), 16)
+        arr = np.asarray(dists)
+        assert np.all(np.diff(arr, axis=1) >= -1e-6)
+
+    def test_self_query_returns_zero_first(self):
+        d = cloud(256, 4)
+        dists, idx = model.brute_knn(jnp.asarray(d[:128]), jnp.asarray(d), 3)
+        # the matmul expansion leaves ~1e-7 absolute fuzz in dist^2, i.e.
+        # ~3e-4 after sqrt — far below the ~2e-2 nearest-other distance
+        assert_allclose(np.asarray(dists)[:, 0], np.zeros(128), atol=2e-3)
+        assert np.array_equal(np.asarray(idx)[:, 0], np.arange(128))
+
+    def test_pad_sentinel_rows_never_selected(self):
+        q = cloud(128, 5)
+        d_real = cloud(200, 6)
+        d = np.full((256, 3), model.PAD_SENTINEL, dtype=np.float32)
+        d[:200] = d_real
+        _, idx = model.brute_knn(jnp.asarray(q), jnp.asarray(d), 10)
+        assert np.all(np.asarray(idx) < 200), "padding must sort last"
+
+    @hypothesis.settings(deadline=None, max_examples=15)
+    @hypothesis.given(
+        k=st.integers(min_value=1, max_value=32),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_k_sweep(self, k, seed):
+        q = cloud(128, seed)
+        d = cloud(512, seed + 1)
+        dists, _ = model.brute_knn(jnp.asarray(q), jnp.asarray(d), k)
+        nd, _ = brute_np(q, d, k)
+        assert_allclose(np.asarray(dists), nd, rtol=1e-3, atol=1e-3)
+
+
+class TestRadiusCount:
+    def test_matches_ref(self):
+        q = cloud(128, 7)
+        d = cloud(1024, 8)
+        (got,) = model.radius_count(jnp.asarray(q), jnp.asarray(d), jnp.float32(0.3))
+        want = ref.radius_count_ref(jnp.asarray(q), jnp.asarray(d), 0.3)
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+
+    def test_tiny_radius_counts_self_only(self):
+        # exact r=0 is not representable through the matmul expansion's
+        # ~1e-7 dist^2 fuzz; a tiny-but-above-fuzz radius must count
+        # exactly the point itself (random clouds have no 1e-3-neighbors)
+        d = cloud(256, 9)
+        (got,) = model.radius_count(jnp.asarray(d[:128]), jnp.asarray(d), jnp.float32(1e-3))
+        assert np.all(np.asarray(got) == 1)
+
+    def test_huge_radius_counts_everything(self):
+        q = cloud(128, 10)
+        d = cloud(512, 11)
+        (got,) = model.radius_count(jnp.asarray(q), jnp.asarray(d), jnp.float32(100.0))
+        assert np.all(np.asarray(got) == 512)
+
+
+class TestTupleWrapper:
+    def test_brute_knn_tuple_is_tuple(self):
+        q = cloud(128, 12)
+        d = cloud(256, 13)
+        out = model.brute_knn_tuple(jnp.asarray(q), jnp.asarray(d), 4)
+        assert isinstance(out, tuple) and len(out) == 2

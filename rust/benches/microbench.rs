@@ -1,0 +1,105 @@
+//! `cargo bench --bench microbench` — component-level benchmarks:
+//! the §4 refit-vs-rebuild ablation, BVH builder strategies, kd-tree vs
+//! RT-path query cost, heap throughput, and the PJRT brute-force path
+//! (when artifacts are present).
+
+use trueknn::bench::{bench, fmt_secs, BenchConfig, Table};
+use trueknn::dataset::DatasetKind;
+use trueknn::exp::{self, ExpScale};
+use trueknn::knn::{trueknn as trueknn_search, KHeap, TrueKnnParams};
+use trueknn::util::Pcg32;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let scale = ExpScale::from_env();
+
+    // ---- §4 ablation: refit vs rebuild --------------------------------
+    let rows = exp::ablations::refit_vs_rebuild(&[10_000, 50_000, 200_000]);
+    exp::ablations::render_refit(&rows).print();
+
+    // ---- builder strategy ablation -------------------------------------
+    let rows = exp::ablations::builder_ablation(scale);
+    exp::ablations::render_builder(&rows).print();
+
+    // ---- query-path microbenches ---------------------------------------
+    let mut t = Table::new("component microbenches", &["component", "workload", "median"]);
+
+    let ds = DatasetKind::Taxi.generate(20_000, 1);
+    let r = bench("trueknn", &cfg, || {
+        std::hint::black_box(trueknn_search(
+            &ds.points,
+            &ds.points,
+            &TrueKnnParams {
+                k: 5,
+                ..Default::default()
+            },
+        ));
+    });
+    t.row(vec![
+        "trueknn k=5".into(),
+        "taxi 20K".into(),
+        fmt_secs(r.median_s),
+    ]);
+
+    let tree = trueknn::knn::kdtree::KdTree::build(&ds.points);
+    let r = bench("kdtree", &cfg, || {
+        for i in (0..ds.len()).step_by(10) {
+            std::hint::black_box(tree.knn_excluding(ds.points[i], 5, Some(i as u32)));
+        }
+    });
+    t.row(vec![
+        "kdtree knn x2000".into(),
+        "taxi 20K".into(),
+        fmt_secs(r.median_s),
+    ]);
+
+    let mut rng = Pcg32::new(3);
+    let vals: Vec<f32> = (0..1_000_000).map(|_| rng.f32()).collect();
+    let r = bench("kheap", &cfg, || {
+        let mut h = KHeap::new(32);
+        for (i, &v) in vals.iter().enumerate() {
+            h.push(v, i as u32);
+        }
+        std::hint::black_box(h.len());
+    });
+    t.row(vec![
+        "kheap 1M pushes k=32".into(),
+        "uniform".into(),
+        fmt_secs(r.median_s),
+    ]);
+
+    // ---- PJRT path (requires `make artifacts`) --------------------------
+    match trueknn::runtime::PjrtRuntime::load_default() {
+        Ok(rt) => {
+            let bf = trueknn::runtime::PjrtBruteForce::new(&rt);
+            let small = DatasetKind::Uniform.generate(4_096, 2);
+            let queries = small.points[..1024].to_vec();
+            let r = bench("pjrt", &cfg, || {
+                std::hint::black_box(bf.knn(&small.points, &queries, 5, false).unwrap());
+            });
+            t.row(vec![
+                "pjrt brute 1024q".into(),
+                "uniform 4K".into(),
+                fmt_secs(r.median_s),
+            ]);
+            let cpu = bench("cpu-brute", &cfg, || {
+                std::hint::black_box(trueknn::knn::brute::brute_knn(
+                    &small.points,
+                    &queries,
+                    5,
+                    false,
+                ));
+            });
+            t.row(vec![
+                "cpu brute 1024q".into(),
+                "uniform 4K".into(),
+                fmt_secs(cpu.median_s),
+            ]);
+        }
+        Err(e) => {
+            eprintln!("skipping PJRT microbench: {e}");
+        }
+    }
+
+    t.print();
+}

@@ -1,0 +1,49 @@
+//! `cargo bench --bench paper_figures` — regenerates the paper's
+//! Figures 3–9 at the configured scale.
+
+use trueknn::configx::KPolicy;
+use trueknn::exp::{self, ExpScale};
+use trueknn::util::Stopwatch;
+
+fn main() {
+    let scale = ExpScale::from_env();
+    println!("paper_figures @ scale {scale:?} (TRUEKNN_SCALE=full for paper sizes)");
+    let total = Stopwatch::start();
+
+    let sw = Stopwatch::start();
+    let rows = exp::table1::run(scale, KPolicy::SqrtN);
+    exp::figures::fig3(&rows).print();
+    println!("[fig3 in {:.1}s]", sw.elapsed_secs());
+
+    let sw = Stopwatch::start();
+    let f4 = exp::figures::fig4(scale);
+    exp::figures::render_fig4(&f4).print();
+    println!("[fig4 in {:.1}s]", sw.elapsed_secs());
+
+    let sw = Stopwatch::start();
+    let f5 = exp::figures::fig5(scale);
+    exp::figures::render_fig5(&f5, exp::workloads::mid_size(scale)).print();
+    println!("[fig5 in {:.1}s]", sw.elapsed_secs());
+
+    let sw = Stopwatch::start();
+    let f6 = exp::figures::fig6(scale);
+    exp::figures::render_fig6(&f6).print();
+    println!("[fig6 in {:.1}s]", sw.elapsed_secs());
+
+    let sw = Stopwatch::start();
+    let f7 = exp::figures::fig7(scale);
+    exp::figures::render_fig7(&f7).print();
+    println!("[fig7 in {:.1}s]", sw.elapsed_secs());
+
+    let sw = Stopwatch::start();
+    let f8 = exp::figures::fig8(scale);
+    exp::figures::render_pct(&f8, "Fig 8: 99th-percentile speedups (k=√N)").print();
+    println!("[fig8 in {:.1}s]", sw.elapsed_secs());
+
+    let sw = Stopwatch::start();
+    let f9 = exp::figures::fig9(scale);
+    exp::figures::render_pct(&f9, "Fig 9: 99th-percentile 3DIono (k=5)").print();
+    println!("[fig9 in {:.1}s]", sw.elapsed_secs());
+
+    println!("\npaper_figures done in {:.1}s", total.elapsed_secs());
+}

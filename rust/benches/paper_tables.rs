@@ -1,0 +1,35 @@
+//! `cargo bench --bench paper_tables` — regenerates the paper's Tables
+//! 1, 2 and 3 plus the §5.3.1 RTNN comparison at the configured scale
+//! (TRUEKNN_SCALE=small|full; see DESIGN.md §6 and EXPERIMENTS.md).
+
+use trueknn::configx::KPolicy;
+use trueknn::exp::{self, ExpScale};
+use trueknn::util::Stopwatch;
+
+fn main() {
+    let scale = ExpScale::from_env();
+    println!("paper_tables @ scale {scale:?} (TRUEKNN_SCALE=full for paper sizes)");
+    let total = Stopwatch::start();
+
+    let sw = Stopwatch::start();
+    let t1 = exp::table1::run(scale, KPolicy::SqrtN);
+    exp::table1::render(&t1).print();
+    println!("[table1 in {:.1}s]", sw.elapsed_secs());
+
+    let sw = Stopwatch::start();
+    let t2 = exp::table2::run(scale);
+    exp::table2::render(&t2).print();
+    println!("[table2 in {:.1}s]", sw.elapsed_secs());
+
+    let sw = Stopwatch::start();
+    let t3 = exp::table3::run(scale);
+    exp::table3::render(&t3).print();
+    println!("[table3 in {:.1}s]", sw.elapsed_secs());
+
+    let sw = Stopwatch::start();
+    let rt = exp::ablations::rtnn_cmp(scale, None);
+    exp::ablations::render_rtnn(&rt).print();
+    println!("[rtnn_cmp in {:.1}s]", sw.elapsed_secs());
+
+    println!("\npaper_tables done in {:.1}s", total.elapsed_secs());
+}

@@ -1,0 +1,197 @@
+//! Micro/macro benchmark harness — offline substitute for `criterion`.
+//!
+//! Measures a closure with warmup + repeated timed runs and reports
+//! mean/median/stddev/min. Output is a fixed-width table so `cargo
+//! bench` logs read like the paper's tables.
+
+use crate::util::stats::{median, OnlineStats};
+use crate::util::Stopwatch;
+
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 1,
+            iters: 5,
+        }
+    }
+}
+
+/// From the environment: `TRUEKNN_BENCH_ITERS` overrides iterations
+/// (useful to shorten CI runs).
+impl BenchConfig {
+    pub fn from_env() -> Self {
+        let mut cfg = Self::default();
+        if let Ok(v) = std::env::var("TRUEKNN_BENCH_ITERS") {
+            if let Ok(n) = v.parse() {
+                cfg.iters = n;
+            }
+        }
+        cfg
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+    pub iters: usize,
+}
+
+/// Time `f` under the config. The closure runs for its side effects; use
+/// `std::hint::black_box` inside if the optimizer might elide work.
+pub fn bench<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut stats = OnlineStats::new();
+    let mut samples = Vec::with_capacity(cfg.iters);
+    for _ in 0..cfg.iters.max(1) {
+        let sw = Stopwatch::start();
+        f();
+        let s = sw.elapsed_secs();
+        stats.push(s);
+        samples.push(s);
+    }
+    BenchResult {
+        name: name.to_string(),
+        mean_s: stats.mean(),
+        median_s: median(&samples),
+        stddev_s: stats.stddev(),
+        min_s: stats.min(),
+        iters: cfg.iters.max(1),
+    }
+}
+
+/// Fixed-width table printer used by every experiment driver.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n=== {} ===\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Human formatting helpers shared by experiment drivers.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}µs", s * 1e6)
+    }
+}
+
+pub fn fmt_count(c: u64) -> String {
+    if c >= 1_000_000_000 {
+        format!("{:.2}B", c as f64 / 1e9)
+    } else if c >= 1_000_000 {
+        format!("{:.2}M", c as f64 / 1e6)
+    } else if c >= 1_000 {
+        format!("{:.1}K", c as f64 / 1e3)
+    } else {
+        c.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut count = 0;
+        let r = bench(
+            "noop",
+            &BenchConfig {
+                warmup_iters: 2,
+                iters: 3,
+            },
+            || count += 1,
+        );
+        assert_eq!(count, 5);
+        assert_eq!(r.iters, 3);
+        assert!(r.mean_s >= 0.0 && r.min_s <= r.mean_s);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["a", "long_header"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("demo"));
+        assert!(s.contains("long_header"));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("demo", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(fmt_secs(2.5), "2.50s");
+        assert_eq!(fmt_secs(0.0025), "2.50ms");
+        assert_eq!(fmt_secs(2.5e-6), "2.50µs");
+        assert_eq!(fmt_count(999), "999");
+        assert_eq!(fmt_count(1_500), "1.5K");
+        assert_eq!(fmt_count(2_500_000), "2.50M");
+        assert_eq!(fmt_count(3_000_000_000), "3.00B");
+    }
+}

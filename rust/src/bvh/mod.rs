@@ -1,0 +1,289 @@
+//! Bounding Volume Hierarchy (paper §2.2.2) — the acceleration structure
+//! the RT core traverses in hardware.
+//!
+//! Supports the two lifecycle operations the paper relies on:
+//! - `build`: construct the tree over primitive AABBs (median-split on
+//!   the longest centroid axis, with an optional SAH builder used by the
+//!   ablation bench);
+//! - `refit`: after every TrueKNN round grows the sphere radius, the
+//!   boxes are re-fit bottom-up *without* changing topology — the OptiX
+//!   refit the paper measured as 10–25% faster than rebuilding (§4).
+
+mod builder;
+
+pub use builder::BuildStrategy;
+
+use crate::geom::{Aabb, Point3};
+
+/// Arena node. Internal nodes store child indices; leaves store a range
+/// into `prim_order`.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub aabb: Aabb,
+    /// Index of the left child, or `u32::MAX` for leaves.
+    pub left: u32,
+    /// Index of the right child, or `u32::MAX` for leaves.
+    pub right: u32,
+    /// Leaf payload: offset into `prim_order`.
+    pub first_prim: u32,
+    /// Leaf payload: number of primitives (0 for internal nodes).
+    pub prim_count: u32,
+}
+
+impl Node {
+    pub fn is_leaf(&self) -> bool {
+        self.prim_count > 0
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Bvh {
+    pub nodes: Vec<Node>,
+    /// Primitive ids in leaf order.
+    pub prim_order: Vec<u32>,
+    pub root: u32,
+    /// Max primitives per leaf used at build time.
+    pub leaf_size: u32,
+}
+
+impl Bvh {
+    /// Build over primitive AABBs with the default strategy.
+    pub fn build(aabbs: &[Aabb]) -> Bvh {
+        builder::build(aabbs, BuildStrategy::MedianSplit, 4)
+    }
+
+    pub fn build_with(aabbs: &[Aabb], strategy: BuildStrategy, leaf_size: u32) -> Bvh {
+        builder::build(aabbs, strategy, leaf_size)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Bottom-up AABB recomputation over unchanged topology. Nodes are
+    /// laid out so every child index is greater than its parent's, so a
+    /// single reverse sweep suffices. Returns the number of nodes
+    /// refit (the simulator charges refit cost per node).
+    pub fn refit(&mut self, aabbs: &[Aabb]) -> usize {
+        for i in (0..self.nodes.len()).rev() {
+            if self.nodes[i].is_leaf() {
+                let first = self.nodes[i].first_prim as usize;
+                let count = self.nodes[i].prim_count as usize;
+                let mut b = Aabb::EMPTY;
+                for &prim in &self.prim_order[first..first + count] {
+                    b = b.union(&aabbs[prim as usize]);
+                }
+                self.nodes[i].aabb = b;
+            } else {
+                let l = self.nodes[i].left as usize;
+                let r = self.nodes[i].right as usize;
+                self.nodes[i].aabb = self.nodes[l].aabb.union(&self.nodes[r].aabb);
+            }
+        }
+        self.nodes.len()
+    }
+
+    /// Point-query traversal (the degenerate kNN-ray case): visit every
+    /// leaf whose AABB contains `p`, invoking `on_leaf(prim_range)`.
+    /// `on_node` fires per AABB containment test so the RT simulator can
+    /// tally the hardware-unit work.
+    pub fn visit_point<FN, FL>(&self, p: Point3, mut on_node: FN, mut on_leaf: FL)
+    where
+        FN: FnMut(),
+        FL: FnMut(&[u32]),
+    {
+        if self.nodes.is_empty() {
+            return;
+        }
+        let mut stack: Vec<u32> = Vec::with_capacity(64);
+        stack.push(self.root);
+        while let Some(idx) = stack.pop() {
+            let node = &self.nodes[idx as usize];
+            on_node();
+            if !node.aabb.contains(p) {
+                continue;
+            }
+            if node.is_leaf() {
+                let first = node.first_prim as usize;
+                let count = node.prim_count as usize;
+                on_leaf(&self.prim_order[first..first + count]);
+            } else {
+                stack.push(node.left);
+                stack.push(node.right);
+            }
+        }
+    }
+
+    /// Tree statistics for tests and the ablation bench.
+    pub fn depth(&self) -> usize {
+        fn go(bvh: &Bvh, idx: u32) -> usize {
+            let n = &bvh.nodes[idx as usize];
+            if n.is_leaf() {
+                1
+            } else {
+                1 + go(bvh, n.left).max(go(bvh, n.right))
+            }
+        }
+        if self.nodes.is_empty() {
+            0
+        } else {
+            go(self, self.root)
+        }
+    }
+
+    /// Total surface area of internal nodes (SAH quality proxy).
+    pub fn total_surface_area(&self) -> f64 {
+        self.nodes
+            .iter()
+            .map(|n| n.aabb.surface_area() as f64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geom::Sphere;
+    use crate::util::prop;
+    use crate::util::Pcg32;
+
+    fn sphere_aabbs(pts: &[Point3], r: f32) -> Vec<Aabb> {
+        pts.iter().map(|&c| Sphere::new(c, r).aabb()).collect()
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let bvh = Bvh::build(&[]);
+        assert!(bvh.is_empty());
+        let mut visited = 0;
+        bvh.visit_point(Point3::ZERO, || {}, |_| visited += 1);
+        assert_eq!(visited, 0);
+
+        let bvh = Bvh::build(&[Aabb::around_sphere(Point3::splat(0.5), 0.1)]);
+        let mut prims = Vec::new();
+        bvh.visit_point(Point3::splat(0.5), || {}, |p| prims.extend_from_slice(p));
+        assert_eq!(prims, vec![0]);
+    }
+
+    #[test]
+    fn every_prim_reachable_once() {
+        let mut rng = Pcg32::new(5);
+        let pts = prop::random_cloud(&mut rng, 300, false);
+        let bvh = Bvh::build(&sphere_aabbs(&pts, 0.01));
+        let mut sorted = bvh.prim_order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..300).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn parent_contains_children_invariant() {
+        prop::check("parent ⊇ children", 20, |rng| {
+            let n = 16 + rng.below(256) as usize;
+            let dims2 = rng.f32() < 0.5;
+            let pts = prop::random_cloud(rng, n, dims2);
+            let bvh = Bvh::build(&sphere_aabbs(&pts, 0.02));
+            for node in &bvh.nodes {
+                if !node.is_leaf() {
+                    let l = &bvh.nodes[node.left as usize].aabb;
+                    let r = &bvh.nodes[node.right as usize].aabb;
+                    if !node.aabb.contains_box(l) || !node.aabb.contains_box(r) {
+                        return Err("parent does not contain child".into());
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn point_query_finds_exactly_containing_leaves() {
+        prop::check("visit_point completeness", 20, |rng| {
+            let n = 8 + rng.below(200) as usize;
+            let pts = prop::random_cloud(rng, n, false);
+            let r = 0.05 + rng.f32() * 0.1;
+            let aabbs = sphere_aabbs(&pts, r);
+            let bvh = Bvh::build(&aabbs);
+            let q = Point3::new(rng.f32(), rng.f32(), rng.f32());
+            let mut got: Vec<u32> = Vec::new();
+            bvh.visit_point(
+                q,
+                || {},
+                |prims| {
+                    for &p in prims {
+                        if aabbs[p as usize].contains(q) {
+                            got.push(p);
+                        }
+                    }
+                },
+            );
+            got.sort_unstable();
+            let mut expect: Vec<u32> = (0..n as u32)
+                .filter(|&i| aabbs[i as usize].contains(q))
+                .collect();
+            expect.sort_unstable();
+            if got != expect {
+                return Err(format!("got {got:?} expected {expect:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn refit_matches_rebuild_aabbs() {
+        prop::check("refit ≡ rebuild boxes", 10, |rng| {
+            let n = 16 + rng.below(200) as usize;
+            let pts = prop::random_cloud(rng, n, false);
+            let mut bvh = Bvh::build(&sphere_aabbs(&pts, 0.01));
+            let grown = sphere_aabbs(&pts, 0.08);
+            bvh.refit(&grown);
+            // every node must exactly equal the union of its leaf prims
+            for node in &bvh.nodes {
+                if node.is_leaf() {
+                    let first = node.first_prim as usize;
+                    let count = node.prim_count as usize;
+                    let mut b = Aabb::EMPTY;
+                    for &p in &bvh.prim_order[first..first + count] {
+                        b = b.union(&grown[p as usize]);
+                    }
+                    if b != node.aabb {
+                        return Err("leaf box mismatch after refit".into());
+                    }
+                }
+            }
+            // and the invariant still holds
+            for node in &bvh.nodes {
+                if !node.is_leaf() {
+                    let l = &bvh.nodes[node.left as usize].aabb;
+                    let r = &bvh.nodes[node.right as usize].aabb;
+                    if !node.aabb.contains_box(l) || !node.aabb.contains_box(r) {
+                        return Err("invariant broken after refit".into());
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sah_not_worse_than_median_on_clusters() {
+        let ds = crate::dataset::DatasetKind::Taxi.generate(2_000, 6);
+        let aabbs = sphere_aabbs(&ds.points, 0.001);
+        let med = Bvh::build_with(&aabbs, BuildStrategy::MedianSplit, 4);
+        let sah = Bvh::build_with(&aabbs, BuildStrategy::Sah, 4);
+        assert!(
+            sah.total_surface_area() <= med.total_surface_area() * 1.05,
+            "sah {} vs median {}",
+            sah.total_surface_area(),
+            med.total_surface_area()
+        );
+    }
+
+    #[test]
+    fn duplicate_points_build_fine() {
+        let pts = vec![Point3::splat(0.5); 64];
+        let bvh = Bvh::build(&sphere_aabbs(&pts, 0.1));
+        let mut found = 0;
+        bvh.visit_point(Point3::splat(0.5), || {}, |p| found += p.len());
+        assert_eq!(found, 64);
+    }
+}

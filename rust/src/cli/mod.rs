@@ -1,0 +1,238 @@
+//! Dependency-free command-line argument parser (offline substitute for
+//! `clap`).
+//!
+//! Supports subcommands, `--key value`, `--key=value`, boolean `--flag`s,
+//! positional arguments, defaults and `--help` generation.
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+/// Declarative option spec.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// A parsed command line: option values + positionals.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: HashMap<String, String>,
+    flags: HashMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    UnknownOption(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: {1}")]
+    BadValue(String, String),
+    #[error("help requested")]
+    HelpRequested,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::BadValue(name.into(), v.into())),
+        }
+    }
+}
+
+/// A command with a fixed option spec.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: Some(default),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.name, self.about);
+        let _ = writeln!(s, "options:");
+        for o in &self.opts {
+            let kind = if o.is_flag { "" } else { " <value>" };
+            let def = o
+                .default
+                .map(|d| format!(" (default: {d})"))
+                .unwrap_or_default();
+            let _ = writeln!(s, "  --{}{kind}\t{}{def}", o.name, o.help);
+        }
+        s
+    }
+
+    /// Parse `argv` (without program/subcommand names).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        // seed defaults
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(CliError::HelpRequested);
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| CliError::UnknownOption(key.clone()))?;
+                if spec.is_flag {
+                    args.flags.insert(key, true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(key.clone()))?
+                        }
+                    };
+                    args.values.insert(key, val);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("gen", "generate a dataset")
+            .opt("dataset", "dataset name", "taxi")
+            .opt("n", "number of points", "1000")
+            .flag("verbose", "chatty output")
+            .req("out", "output path")
+    }
+
+    fn argv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cmd()
+            .parse(&argv(&["--n", "500", "--out=/tmp/x.csv", "extra"]))
+            .unwrap();
+        assert_eq!(a.get("dataset"), Some("taxi"));
+        assert_eq!(a.get_parse::<usize>("n", 0).unwrap(), 500);
+        assert_eq!(a.get("out"), Some("/tmp/x.csv"));
+        assert!(!a.flag("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn flags_parse() {
+        let a = cmd().parse(&argv(&["--verbose"])).unwrap();
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert_eq!(
+            cmd().parse(&argv(&["--bogus", "1"])).unwrap_err(),
+            CliError::UnknownOption("bogus".into())
+        );
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert_eq!(
+            cmd().parse(&argv(&["--n"])).unwrap_err(),
+            CliError::MissingValue("n".into())
+        );
+    }
+
+    #[test]
+    fn bad_value_reported() {
+        let a = cmd().parse(&argv(&["--n", "xyz"])).unwrap();
+        assert!(matches!(
+            a.get_parse::<usize>("n", 0),
+            Err(CliError::BadValue(_, _))
+        ));
+    }
+
+    #[test]
+    fn help_short_circuits() {
+        assert_eq!(
+            cmd().parse(&argv(&["--help"])).unwrap_err(),
+            CliError::HelpRequested
+        );
+        assert!(cmd().usage().contains("--dataset"));
+    }
+}

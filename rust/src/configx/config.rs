@@ -1,0 +1,211 @@
+//! Typed experiment configuration, loadable from JSON files or built
+//! programmatically. This is the launcher's config system: every
+//! experiment driver and the coordinator service take a `RunConfig`.
+
+use super::json::{Json, JsonError};
+use crate::dataset::DatasetKind;
+
+/// How k is chosen for a run (paper §5.3 sweeps both regimes).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum KPolicy {
+    /// Fixed k (the paper's k = 5 runs).
+    Fixed(usize),
+    /// k = √(dataset size) (the common classifier heuristic, paper [18]).
+    SqrtN,
+}
+
+impl KPolicy {
+    pub fn resolve(&self, n: usize) -> usize {
+        match self {
+            KPolicy::Fixed(k) => *k,
+            KPolicy::SqrtN => ((n as f64).sqrt().round() as usize).max(1),
+        }
+    }
+}
+
+/// One experiment run: dataset, size, k, algorithm selection.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub dataset: DatasetKind,
+    pub n: usize,
+    pub k: KPolicy,
+    pub seed: u64,
+    /// Stop the search at the 99th-percentile radius (paper §5.5.1).
+    pub percentile_cap: Option<f64>,
+    /// Override the sampled start radius (paper Fig 7 sensitivity).
+    pub start_radius: Option<f32>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            dataset: DatasetKind::Uniform,
+            n: 10_000,
+            k: KPolicy::Fixed(5),
+            seed: 42,
+            percentile_cap: None,
+            start_radius: None,
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("json: {0}")]
+    Json(#[from] JsonError),
+    #[error("missing field '{0}'")]
+    Missing(&'static str),
+    #[error("bad field '{0}': {1}")]
+    Bad(&'static str, String),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl RunConfig {
+    /// Parse from a JSON object like
+    /// `{"dataset":"taxi","n":20000,"k":"sqrt","seed":1}`.
+    pub fn from_json(v: &Json) -> Result<Self, ConfigError> {
+        let mut cfg = RunConfig::default();
+        if let Some(d) = v.get("dataset") {
+            let name = d.as_str().ok_or(ConfigError::Missing("dataset"))?;
+            cfg.dataset = name
+                .parse()
+                .map_err(|e: String| ConfigError::Bad("dataset", e))?;
+        }
+        if let Some(n) = v.get("n") {
+            cfg.n = n
+                .as_usize()
+                .ok_or_else(|| ConfigError::Bad("n", "not a number".into()))?;
+        }
+        if let Some(k) = v.get("k") {
+            cfg.k = match k {
+                Json::Num(x) => KPolicy::Fixed(*x as usize),
+                Json::Str(s) if s == "sqrt" => KPolicy::SqrtN,
+                other => return Err(ConfigError::Bad("k", format!("{other:?}"))),
+            };
+        }
+        if let Some(s) = v.get("seed") {
+            cfg.seed = s
+                .as_f64()
+                .ok_or_else(|| ConfigError::Bad("seed", "not a number".into()))?
+                as u64;
+        }
+        if let Some(p) = v.get("percentile_cap") {
+            cfg.percentile_cap = Some(
+                p.as_f64()
+                    .ok_or_else(|| ConfigError::Bad("percentile_cap", "not a number".into()))?,
+            );
+        }
+        if let Some(r) = v.get("start_radius") {
+            cfg.start_radius = Some(
+                r.as_f64()
+                    .ok_or_else(|| ConfigError::Bad("start_radius", "not a number".into()))?
+                    as f32,
+            );
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path)?;
+        let v = super::json::parse(&text)?;
+        Self::from_json(&v)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("dataset", Json::Str(self.dataset.name().into())),
+            ("n", Json::Num(self.n as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            (
+                "k",
+                match self.k {
+                    KPolicy::Fixed(k) => Json::Num(k as f64),
+                    KPolicy::SqrtN => Json::Str("sqrt".into()),
+                },
+            ),
+        ];
+        if let Some(p) = self.percentile_cap {
+            pairs.push(("percentile_cap", Json::Num(p)));
+        }
+        if let Some(r) = self.start_radius {
+            pairs.push(("start_radius", Json::Num(r as f64)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// A batch of runs (one experiment = many RunConfigs + output options).
+#[derive(Clone, Debug, Default)]
+pub struct ExperimentConfig {
+    pub runs: Vec<RunConfig>,
+    pub repeats: usize,
+    pub label: String,
+}
+
+impl ExperimentConfig {
+    pub fn from_file(path: &str) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path)?;
+        let v = super::json::parse(&text)?;
+        let runs = v
+            .get("runs")
+            .and_then(|r| r.as_arr())
+            .ok_or(ConfigError::Missing("runs"))?
+            .iter()
+            .map(RunConfig::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(Self {
+            runs,
+            repeats: v.get("repeats").and_then(|x| x.as_usize()).unwrap_or(1),
+            label: v
+                .get("label")
+                .and_then(|x| x.as_str())
+                .unwrap_or("experiment")
+                .to_string(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kpolicy_resolution() {
+        assert_eq!(KPolicy::Fixed(5).resolve(1_000_000), 5);
+        assert_eq!(KPolicy::SqrtN.resolve(400_000), 632);
+        assert_eq!(KPolicy::SqrtN.resolve(0), 1);
+    }
+
+    #[test]
+    fn run_config_round_trip() {
+        let cfg = RunConfig {
+            dataset: DatasetKind::Taxi,
+            n: 12_345,
+            k: KPolicy::SqrtN,
+            seed: 7,
+            percentile_cap: Some(99.0),
+            start_radius: Some(0.001),
+        };
+        let re = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(re.dataset, DatasetKind::Taxi);
+        assert_eq!(re.n, 12_345);
+        assert_eq!(re.k, KPolicy::SqrtN);
+        assert_eq!(re.percentile_cap, Some(99.0));
+        assert_eq!(re.start_radius, Some(0.001));
+    }
+
+    #[test]
+    fn parse_from_json_text() {
+        let v = crate::configx::json::parse(r#"{"dataset":"road","n":500,"k":7}"#).unwrap();
+        let cfg = RunConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.dataset, DatasetKind::Road);
+        assert_eq!(cfg.k, KPolicy::Fixed(7));
+    }
+
+    #[test]
+    fn bad_dataset_rejected() {
+        let v = crate::configx::json::parse(r#"{"dataset":"mars"}"#).unwrap();
+        assert!(RunConfig::from_json(&v).is_err());
+    }
+}

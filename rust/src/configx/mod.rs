@@ -1,0 +1,8 @@
+//! Configuration subsystem: a JSON parser/serializer (offline substitute
+//! for `serde_json`) and typed experiment configs layered on top.
+
+pub mod json;
+pub mod config;
+
+pub use config::{ExperimentConfig, KPolicy, RunConfig};
+pub use json::{parse as parse_json, Json};

@@ -1,0 +1,182 @@
+//! Dynamic batcher: groups compatible queued requests so one scene
+//! build / one PJRT dispatch serves many callers — the serving-side
+//! analog of the paper's insight that per-round fixed costs (context
+//! switches, BVH work) amortize over query volume.
+
+use super::request::KnnRequest;
+use std::time::Instant;
+
+/// A batch of requests sharing one execution: same k, same mode class.
+#[derive(Debug)]
+pub struct Batch {
+    pub requests: Vec<(KnnRequest, Instant)>,
+    /// Flattened query ranges: request i owns queries[ranges[i].0..ranges[i].1].
+    pub ranges: Vec<(usize, usize)>,
+    pub k: usize,
+}
+
+impl Batch {
+    pub fn total_queries(&self) -> usize {
+        self.ranges.last().map(|r| r.1).unwrap_or(0)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// Flush a batch when it reaches this many queries.
+    pub max_queries: usize,
+    /// Flush whatever is pending after this much waiting.
+    pub max_requests: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self {
+            max_queries: 4096,
+            max_requests: 64,
+        }
+    }
+}
+
+/// Pull-based batcher: the worker drains the queue, the batcher groups.
+#[derive(Debug)]
+pub struct DynamicBatcher {
+    cfg: BatcherConfig,
+    pending: Vec<(KnnRequest, Instant)>,
+}
+
+impl DynamicBatcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Self {
+            cfg,
+            pending: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, req: KnnRequest, arrived: Instant) {
+        self.pending.push((req, arrived));
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Form the next batch: take the oldest request, then greedily add
+    /// every other pending request with the same k (order preserved)
+    /// until a size bound trips. Returns None when idle.
+    pub fn next_batch(&mut self) -> Option<Batch> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        let k = self.pending[0].0.k;
+        let mut requests = Vec::new();
+        let mut total_q = 0usize;
+        let mut i = 0;
+        while i < self.pending.len() {
+            let compatible = self.pending[i].0.k == k;
+            let fits = total_q + self.pending[i].0.queries.len() <= self.cfg.max_queries
+                || requests.is_empty(); // an oversize request still ships alone
+            if compatible && fits && requests.len() < self.cfg.max_requests {
+                let (req, t) = self.pending.remove(i);
+                total_q += req.queries.len();
+                requests.push((req, t));
+                if total_q >= self.cfg.max_queries {
+                    break;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        let mut ranges = Vec::with_capacity(requests.len());
+        let mut off = 0;
+        for (req, _) in &requests {
+            ranges.push((off, off + req.queries.len()));
+            off += req.queries.len();
+        }
+        Some(Batch { requests, ranges, k })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geom::Point3;
+
+    fn req(id: u64, nq: usize, k: usize) -> KnnRequest {
+        KnnRequest::new(id, vec![Point3::ZERO; nq], k)
+    }
+
+    #[test]
+    fn batches_group_same_k() {
+        let mut b = DynamicBatcher::new(BatcherConfig::default());
+        let now = Instant::now();
+        b.push(req(1, 10, 5), now);
+        b.push(req(2, 10, 7), now);
+        b.push(req(3, 10, 5), now);
+        let batch = b.next_batch().unwrap();
+        let ids: Vec<u64> = batch.requests.iter().map(|(r, _)| r.id).collect();
+        assert_eq!(ids, vec![1, 3]);
+        assert_eq!(batch.k, 5);
+        assert_eq!(batch.total_queries(), 20);
+        assert_eq!(batch.ranges, vec![(0, 10), (10, 20)]);
+        // the k=7 request ships next
+        let batch2 = b.next_batch().unwrap();
+        assert_eq!(batch2.requests[0].0.id, 2);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn size_bound_flushes() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            max_queries: 15,
+            max_requests: 64,
+        });
+        let now = Instant::now();
+        b.push(req(1, 10, 5), now);
+        b.push(req(2, 10, 5), now);
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.requests.len(), 1, "second request would exceed cap");
+        assert_eq!(b.pending_len(), 1);
+    }
+
+    #[test]
+    fn oversize_request_ships_alone() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            max_queries: 5,
+            max_requests: 64,
+        });
+        b.push(req(1, 100, 5), Instant::now());
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.total_queries(), 100);
+    }
+
+    #[test]
+    fn no_request_lost_or_duplicated() {
+        crate::util::prop::check("batcher conservation", 20, |rng| {
+            let mut b = DynamicBatcher::new(BatcherConfig {
+                max_queries: 1 + rng.below(50) as usize,
+                max_requests: 1 + rng.below(8) as usize,
+            });
+            let n = 1 + rng.below(40) as usize;
+            let now = Instant::now();
+            for id in 0..n as u64 {
+                b.push(req(id, 1 + rng.below(20) as usize, 1 + rng.below(3) as usize), now);
+            }
+            let mut seen = std::collections::HashSet::new();
+            while let Some(batch) = b.next_batch() {
+                for (r, _) in &batch.requests {
+                    if r.k != batch.k {
+                        return Err("mixed k in batch".into());
+                    }
+                    if !seen.insert(r.id) {
+                        return Err(format!("request {} duplicated", r.id));
+                    }
+                }
+            }
+            if seen.len() != n {
+                return Err(format!("lost requests: {} of {n}", seen.len()));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,82 @@
+//! Service metrics registry: lock-free counters + latency accumulator.
+
+use crate::util::OnlineStats;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub rejected: AtomicU64,
+    pub batches: AtomicU64,
+    pub rt_requests: AtomicU64,
+    pub brute_requests: AtomicU64,
+    pub queries_served: AtomicU64,
+    latency: Mutex<OnlineStats>,
+}
+
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub responses: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub rt_requests: u64,
+    pub brute_requests: u64,
+    pub queries_served: u64,
+    pub latency_mean_s: f64,
+    pub latency_max_s: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(counter: &AtomicU64, v: u64) {
+        counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn record_latency(&self, seconds: f64) {
+        self.latency.lock().unwrap().push(seconds);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let lat = self.latency.lock().unwrap();
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            responses: self.responses.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            rt_requests: self.rt_requests.load(Ordering::Relaxed),
+            brute_requests: self.brute_requests.load(Ordering::Relaxed),
+            queries_served: self.queries_served.load(Ordering::Relaxed),
+            latency_mean_s: if lat.count() > 0 { lat.mean() } else { 0.0 },
+            latency_max_s: if lat.count() > 0 { lat.max() } else { 0.0 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_latency_accumulate() {
+        let m = Metrics::new();
+        Metrics::inc(&m.requests);
+        Metrics::add(&m.queries_served, 10);
+        m.record_latency(0.5);
+        m.record_latency(1.5);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 1);
+        assert_eq!(s.queries_served, 10);
+        assert!((s.latency_mean_s - 1.0).abs() < 1e-12);
+        assert_eq!(s.latency_max_s, 1.5);
+    }
+}

@@ -1,0 +1,32 @@
+//! The L3 serving layer: a batching kNN query service over the RT
+//! simulator and the PJRT brute-force path.
+//!
+//! Architecture (vLLM-router-like, scaled to this problem):
+//!
+//! ```text
+//!   clients ──submit()──▶ bounded queue ──▶ worker thread
+//!                                            │  DynamicBatcher: group
+//!                                            │  compatible requests
+//!                                            ▼
+//!                                  Router: RT path (TrueKNN over the
+//!                                  BVH simulator) vs Brute path (PJRT
+//!                                  artifacts), by workload shape
+//!                                            │
+//!                                            ▼ responses via channel
+//! ```
+//!
+//! No tokio in the offline build; the event loop is a dedicated worker
+//! thread with `std::sync::mpsc` channels, which is also the honest
+//! analog of the paper's single-GPU dispatch loop.
+
+mod request;
+mod metrics;
+mod batcher;
+mod router;
+mod service;
+
+pub use batcher::DynamicBatcher;
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use request::{KnnRequest, KnnResponse, QueryMode, RoutePath};
+pub use router::{Router, RouterConfig};
+pub use service::{Service, ServiceConfig, ServiceError, ServiceHandle};

@@ -1,0 +1,60 @@
+//! Request/response types of the query service.
+
+use crate::geom::Point3;
+use crate::knn::Neighbor;
+
+/// How the caller wants the query executed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueryMode {
+    /// Let the router pick a path from the workload shape.
+    Auto,
+    /// Force the RT-core (TrueKNN) path.
+    Rt,
+    /// Force the PJRT brute-force path.
+    Brute,
+}
+
+/// Which path actually served the request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePath {
+    Rt,
+    Brute,
+    /// PJRT unavailable (no artifacts); brute executed on CPU fallback.
+    BruteCpu,
+}
+
+#[derive(Clone, Debug)]
+pub struct KnnRequest {
+    pub id: u64,
+    pub queries: Vec<Point3>,
+    pub k: usize,
+    pub mode: QueryMode,
+}
+
+impl KnnRequest {
+    pub fn new(id: u64, queries: Vec<Point3>, k: usize) -> Self {
+        Self {
+            id,
+            queries,
+            k,
+            mode: QueryMode::Auto,
+        }
+    }
+
+    pub fn with_mode(mut self, mode: QueryMode) -> Self {
+        self.mode = mode;
+        self
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct KnnResponse {
+    pub id: u64,
+    /// Per query, sorted ascending by distance.
+    pub neighbors: Vec<Vec<Neighbor>>,
+    pub path: RoutePath,
+    /// Seconds from dequeue to completion.
+    pub service_seconds: f64,
+    /// Seconds from submit to completion (includes queueing).
+    pub latency_seconds: f64,
+}

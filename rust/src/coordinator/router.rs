@@ -1,0 +1,99 @@
+//! Route policy: RT (TrueKNN) path vs PJRT brute-force path.
+//!
+//! The crossover follows the paper's own findings: the RT reduction wins
+//! when the BVH can prune (large n, modest k) and loses to dense matmul
+//! when the candidate set approaches the whole dataset (k ~ n) or the
+//! dataset is tiny (fixed costs dominate, §6.1/Fig 9).
+
+use super::request::{KnnRequest, QueryMode, RoutePath};
+
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Below this many data points, brute force always wins.
+    pub brute_below_n: usize,
+    /// If k exceeds this fraction of n, top-k covers most of the data —
+    /// take the matmul path.
+    pub brute_k_fraction: f64,
+    /// Is a PJRT runtime available? (Otherwise brute falls back to CPU.)
+    pub pjrt_available: bool,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self {
+            brute_below_n: 2_000,
+            brute_k_fraction: 0.05,
+            pjrt_available: false,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Router {
+    cfg: RouterConfig,
+}
+
+impl Router {
+    pub fn new(cfg: RouterConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Pick the execution path for a request against `n_data` points.
+    pub fn route(&self, req: &KnnRequest, n_data: usize) -> RoutePath {
+        let brute_path = if self.cfg.pjrt_available {
+            RoutePath::Brute
+        } else {
+            RoutePath::BruteCpu
+        };
+        match req.mode {
+            QueryMode::Rt => RoutePath::Rt,
+            QueryMode::Brute => brute_path,
+            QueryMode::Auto => {
+                if n_data < self.cfg.brute_below_n {
+                    return brute_path;
+                }
+                if (req.k as f64) > self.cfg.brute_k_fraction * n_data as f64 {
+                    return brute_path;
+                }
+                RoutePath::Rt
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geom::Point3;
+
+    fn req(k: usize, mode: QueryMode) -> KnnRequest {
+        KnnRequest::new(0, vec![Point3::ZERO; 8], k).with_mode(mode)
+    }
+
+    #[test]
+    fn explicit_modes_win() {
+        let r = Router::new(RouterConfig::default());
+        assert_eq!(r.route(&req(5, QueryMode::Rt), 10), RoutePath::Rt);
+        assert_eq!(r.route(&req(5, QueryMode::Brute), 1_000_000), RoutePath::BruteCpu);
+    }
+
+    #[test]
+    fn auto_routes_by_shape() {
+        let r = Router::new(RouterConfig {
+            pjrt_available: true,
+            ..Default::default()
+        });
+        // tiny dataset → brute
+        assert_eq!(r.route(&req(5, QueryMode::Auto), 500), RoutePath::Brute);
+        // big dataset, small k → RT
+        assert_eq!(r.route(&req(5, QueryMode::Auto), 100_000), RoutePath::Rt);
+        // huge k → brute
+        assert_eq!(r.route(&req(20_000, QueryMode::Auto), 100_000), RoutePath::Brute);
+    }
+
+    #[test]
+    fn pjrt_unavailable_falls_back_to_cpu() {
+        let r = Router::new(RouterConfig::default());
+        assert_eq!(r.route(&req(5, QueryMode::Auto), 100), RoutePath::BruteCpu);
+    }
+}

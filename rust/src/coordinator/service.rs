@@ -1,0 +1,361 @@
+//! The query service: a worker thread owning the dataset, the RT
+//! simulator structures and (optionally) the PJRT runtime, fed through a
+//! bounded queue with backpressure.
+//!
+//! The PJRT client wraps raw C pointers and is not `Send`, so the
+//! runtime is constructed *inside* the worker thread; callers only touch
+//! channels.
+
+use super::batcher::{BatcherConfig, DynamicBatcher};
+use super::metrics::Metrics;
+use super::request::{KnnRequest, KnnResponse, RoutePath};
+use super::router::{Router, RouterConfig};
+use crate::geom::Point3;
+use crate::knn::{brute::brute_knn, trueknn, TrueKnnParams};
+use crate::runtime::{PjrtBruteForce, PjrtRuntime};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    pub batcher: BatcherConfig,
+    pub router: RouterConfig,
+    /// Bounded queue depth; submits beyond it are rejected (backpressure).
+    pub queue_depth: usize,
+    /// Try to load PJRT artifacts in the worker (falls back to CPU brute).
+    pub use_pjrt: bool,
+    pub trueknn: TrueKnnParams,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            batcher: BatcherConfig::default(),
+            router: RouterConfig::default(),
+            queue_depth: 256,
+            use_pjrt: false,
+            trueknn: TrueKnnParams {
+                exclude_self: false, // service queries are external points
+                ..Default::default()
+            },
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ServiceError {
+    #[error("service queue full (backpressure)")]
+    QueueFull,
+    #[error("service is shut down")]
+    ShutDown,
+}
+
+enum Msg {
+    Request(KnnRequest, Sender<KnnResponse>, Instant),
+    Shutdown,
+}
+
+/// Handle returned by `Service::start`; cheap to clone, submits requests.
+#[derive(Clone)]
+pub struct ServiceHandle {
+    tx: SyncSender<Msg>,
+    metrics: Arc<Metrics>,
+    inflight: Arc<AtomicUsize>,
+}
+
+impl ServiceHandle {
+    /// Submit a request; returns the response channel. Applies
+    /// backpressure by rejecting when the queue is full.
+    pub fn submit(&self, req: KnnRequest) -> Result<Receiver<KnnResponse>, ServiceError> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        Metrics::inc(&self.metrics.requests);
+        match self.tx.try_send(Msg::Request(req, tx, Instant::now())) {
+            Ok(()) => {
+                self.inflight.fetch_add(1, Ordering::SeqCst);
+                Ok(rx)
+            }
+            Err(TrySendError::Full(_)) => {
+                Metrics::inc(&self.metrics.rejected);
+                Err(ServiceError::QueueFull)
+            }
+            Err(TrySendError::Disconnected(_)) => Err(ServiceError::ShutDown),
+        }
+    }
+
+    /// Submit and wait for the response.
+    pub fn query(&self, req: KnnRequest) -> Result<KnnResponse, ServiceError> {
+        let rx = self.submit(req)?;
+        rx.recv().map_err(|_| ServiceError::ShutDown)
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::SeqCst)
+    }
+}
+
+/// The service: owns the worker thread; dropping shuts it down.
+pub struct Service {
+    handle: ServiceHandle,
+    worker: Option<std::thread::JoinHandle<()>>,
+    tx: SyncSender<Msg>,
+}
+
+impl Service {
+    /// Start the worker over a fixed dataset.
+    pub fn start(data: Vec<Point3>, cfg: ServiceConfig) -> (Service, ServiceHandle) {
+        let (tx, rx) = sync_channel::<Msg>(cfg.queue_depth);
+        let metrics = Arc::new(Metrics::new());
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let handle = ServiceHandle {
+            tx: tx.clone(),
+            metrics: metrics.clone(),
+            inflight: inflight.clone(),
+        };
+        let worker_metrics = metrics;
+        let worker_inflight = inflight;
+        let worker = std::thread::spawn(move || {
+            worker_loop(data, cfg, rx, worker_metrics, worker_inflight);
+        });
+        (
+            Service {
+                handle: handle.clone(),
+                worker: Some(worker),
+                tx,
+            },
+            handle,
+        )
+    }
+
+    pub fn handle(&self) -> ServiceHandle {
+        self.handle.clone()
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    data: Vec<Point3>,
+    mut cfg: ServiceConfig,
+    rx: Receiver<Msg>,
+    metrics: Arc<Metrics>,
+    inflight: Arc<AtomicUsize>,
+) {
+    // PJRT runtime is constructed here: the client is not Send.
+    let pjrt: Option<PjrtRuntime> = if cfg.use_pjrt {
+        match PjrtRuntime::load_default() {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                crate::log_warn!("PJRT unavailable, brute falls back to CPU: {e}");
+                None
+            }
+        }
+    } else {
+        None
+    };
+    cfg.router.pjrt_available = pjrt.is_some();
+    let router = Router::new(cfg.router.clone());
+    let mut batcher = DynamicBatcher::new(cfg.batcher.clone());
+    // response channels ride alongside their request through the batcher
+    let mut reply_of: std::collections::HashMap<u64, Sender<KnnResponse>> =
+        std::collections::HashMap::new();
+
+    'outer: loop {
+        // block for the first message, then drain whatever else arrived
+        match rx.recv() {
+            Ok(Msg::Request(req, reply, t)) => {
+                reply_of.insert(req.id, reply);
+                batcher.push(req, t);
+            }
+            Ok(Msg::Shutdown) | Err(_) => break 'outer,
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(Msg::Request(req, reply, t)) => {
+                    reply_of.insert(req.id, reply);
+                    batcher.push(req, t);
+                }
+                Ok(Msg::Shutdown) => {
+                    // serve what's queued, then exit
+                    drain(&data, &cfg, &router, &pjrt, &mut batcher, &mut reply_of, &metrics, &inflight);
+                    break 'outer;
+                }
+                Err(_) => break,
+            }
+        }
+        drain(&data, &cfg, &router, &pjrt, &mut batcher, &mut reply_of, &metrics, &inflight);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn drain(
+    data: &[Point3],
+    cfg: &ServiceConfig,
+    router: &Router,
+    pjrt: &Option<PjrtRuntime>,
+    batcher: &mut DynamicBatcher,
+    reply_of: &mut std::collections::HashMap<u64, Sender<KnnResponse>>,
+    metrics: &Arc<Metrics>,
+    inflight: &Arc<AtomicUsize>,
+) {
+    while let Some(batch) = batcher.next_batch() {
+        Metrics::inc(&metrics.batches);
+        let served = Instant::now();
+        // route by the first request (batch is mode/k-homogeneous enough:
+        // explicit-mode requests are honored per request below)
+        let all_queries: Vec<Point3> = batch
+            .requests
+            .iter()
+            .flat_map(|(r, _)| r.queries.iter().copied())
+            .collect();
+
+        let path = router.route(&batch.requests[0].0, data.len());
+        let neighbors = match path {
+            RoutePath::Rt => {
+                Metrics::add(&metrics.rt_requests, batch.requests.len() as u64);
+                let params = TrueKnnParams {
+                    k: batch.k,
+                    ..cfg.trueknn.clone()
+                };
+                trueknn(data, &all_queries, &params).neighbors
+            }
+            RoutePath::Brute => {
+                Metrics::add(&metrics.brute_requests, batch.requests.len() as u64);
+                match pjrt.as_ref() {
+                    Some(rt) => match PjrtBruteForce::new(rt).knn(data, &all_queries, batch.k, false) {
+                        Ok(res) => res.neighbors,
+                        Err(e) => {
+                            crate::log_error!("PJRT execution failed, CPU fallback: {e}");
+                            brute_knn(data, &all_queries, batch.k, false).neighbors
+                        }
+                    },
+                    None => brute_knn(data, &all_queries, batch.k, false).neighbors,
+                }
+            }
+            RoutePath::BruteCpu => {
+                Metrics::add(&metrics.brute_requests, batch.requests.len() as u64);
+                brute_knn(data, &all_queries, batch.k, false).neighbors
+            }
+        };
+        let service_seconds = served.elapsed().as_secs_f64();
+
+        for ((req, arrived), range) in batch.requests.iter().zip(&batch.ranges) {
+            let latency = arrived.elapsed().as_secs_f64();
+            metrics.record_latency(latency);
+            Metrics::inc(&metrics.responses);
+            Metrics::add(&metrics.queries_served, req.queries.len() as u64);
+            inflight.fetch_sub(1, Ordering::SeqCst);
+            if let Some(reply) = reply_of.remove(&req.id) {
+                let _ = reply.send(KnnResponse {
+                    id: req.id,
+                    neighbors: neighbors[range.0..range.1].to_vec(),
+                    path,
+                    service_seconds,
+                    latency_seconds: latency,
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::DatasetKind;
+    use crate::knn::kdtree::KdTree;
+
+    #[test]
+    fn service_round_trip_exact() {
+        let ds = DatasetKind::Uniform.generate(2_000, 70);
+        let queries: Vec<Point3> = ds.points[..32].to_vec();
+        let (svc, handle) = Service::start(ds.points.clone(), ServiceConfig::default());
+        let resp = handle
+            .query(KnnRequest::new(1, queries.clone(), 4))
+            .unwrap();
+        assert_eq!(resp.neighbors.len(), 32);
+        let tree = KdTree::build(&ds.points);
+        for (q, got) in queries.iter().zip(&resp.neighbors) {
+            let want = tree.knn(*q, 4);
+            assert_eq!(got.len(), 4);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g.dist - w.dist).abs() < 1e-5);
+            }
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_all_served() {
+        let ds = DatasetKind::Uniform.generate(3_000, 71);
+        let (svc, handle) = Service::start(ds.points.clone(), ServiceConfig::default());
+        let mut joins = Vec::new();
+        for t in 0..4u64 {
+            let h = handle.clone();
+            let pts = ds.points.clone();
+            joins.push(std::thread::spawn(move || {
+                for i in 0..5u64 {
+                    let id = t * 100 + i;
+                    let qs = pts[(id as usize * 7) % 1000..][..8].to_vec();
+                    let resp = h.query(KnnRequest::new(id, qs, 3)).unwrap();
+                    assert_eq!(resp.id, id);
+                    assert_eq!(resp.neighbors.len(), 8);
+                    assert!(resp.neighbors.iter().all(|n| n.len() == 3));
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let m = handle.metrics().snapshot();
+        assert_eq!(m.responses, 20);
+        assert_eq!(m.rejected, 0);
+        assert_eq!(m.queries_served, 160);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn explicit_rt_mode_routes_rt() {
+        let ds = DatasetKind::Uniform.generate(2_500, 72);
+        let (svc, handle) = Service::start(ds.points.clone(), ServiceConfig::default());
+        let resp = handle
+            .query(KnnRequest::new(9, ds.points[..4].to_vec(), 2).with_mode(QueryMode::Rt))
+            .unwrap();
+        assert_eq!(resp.path, RoutePath::Rt);
+        let m = handle.metrics().snapshot();
+        assert_eq!(m.rt_requests, 1);
+        svc.shutdown();
+    }
+
+    use super::super::request::QueryMode;
+
+    #[test]
+    fn shutdown_serves_queued_work() {
+        let ds = DatasetKind::Uniform.generate(1_000, 73);
+        let (svc, handle) = Service::start(ds.points.clone(), ServiceConfig::default());
+        let rx = handle
+            .submit(KnnRequest::new(1, ds.points[..4].to_vec(), 2))
+            .unwrap();
+        svc.shutdown();
+        let resp = rx.recv().expect("queued request must still be answered");
+        assert_eq!(resp.id, 1);
+    }
+}

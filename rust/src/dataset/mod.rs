@@ -1,0 +1,203 @@
+//! Datasets: synthetic analogs of the paper's evaluation datasets, CSV
+//! persistence, and distance-distribution statistics.
+//!
+//! The paper evaluates on 3DRoad, Porto, KITTI, 3DIono (real) and a
+//! uniform synthetic. The real datasets are not redistributable here, so
+//! `synth` provides deterministic generators matched to each dataset's
+//! *spatial character* (what the kNN algorithms are actually sensitive
+//! to: clustering structure and outlier tail). See DESIGN.md §4.
+
+pub mod synth;
+pub mod io;
+pub mod stats;
+
+pub use stats::DistanceProfile;
+
+use crate::geom::Point3;
+use crate::util::Pcg32;
+
+/// The five evaluation datasets (paper §5.1) by analog name.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DatasetKind {
+    /// 3DRoad analog: 2D road-network points (filamentary clusters).
+    Road,
+    /// Porto analog: 2D taxi-GPS trajectories (dense core + heavy outlier tail).
+    Taxi,
+    /// KITTI analog: 3D LiDAR-like radial surface scan.
+    Lidar,
+    /// 3DIono analog: 3D anisotropic Gaussian-mixture shells.
+    Iono,
+    /// UniformDist: U[0,1]^3, exactly as the paper.
+    Uniform,
+}
+
+impl DatasetKind {
+    pub const ALL: [DatasetKind; 5] = [
+        DatasetKind::Road,
+        DatasetKind::Taxi,
+        DatasetKind::Lidar,
+        DatasetKind::Iono,
+        DatasetKind::Uniform,
+    ];
+
+    /// The four datasets the paper's main table sweeps (Table 1 / Fig 3).
+    pub const PAPER_MAIN: [DatasetKind; 4] = [
+        DatasetKind::Road,
+        DatasetKind::Taxi,
+        DatasetKind::Iono,
+        DatasetKind::Lidar,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DatasetKind::Road => "road",
+            DatasetKind::Taxi => "taxi",
+            DatasetKind::Lidar => "lidar",
+            DatasetKind::Iono => "iono",
+            DatasetKind::Uniform => "uniform",
+        }
+    }
+
+    /// The paper dataset this analog stands in for.
+    pub fn paper_name(&self) -> &'static str {
+        match self {
+            DatasetKind::Road => "3DRoad",
+            DatasetKind::Taxi => "Porto",
+            DatasetKind::Lidar => "KITTI",
+            DatasetKind::Iono => "3DIono",
+            DatasetKind::Uniform => "UniformDist",
+        }
+    }
+
+    pub fn is_2d(&self) -> bool {
+        matches!(self, DatasetKind::Road | DatasetKind::Taxi)
+    }
+
+    /// Generate `n` points with this kind's generator.
+    pub fn generate(&self, n: usize, seed: u64) -> Dataset {
+        let points = match self {
+            DatasetKind::Road => synth::road(n, seed),
+            DatasetKind::Taxi => synth::taxi(n, seed),
+            DatasetKind::Lidar => synth::lidar(n, seed),
+            DatasetKind::Iono => synth::iono(n, seed),
+            DatasetKind::Uniform => synth::uniform(n, seed),
+        };
+        Dataset {
+            kind: *self,
+            points,
+        }
+    }
+}
+
+impl std::str::FromStr for DatasetKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "road" | "3droad" => Ok(DatasetKind::Road),
+            "taxi" | "porto" => Ok(DatasetKind::Taxi),
+            "lidar" | "kitti" => Ok(DatasetKind::Lidar),
+            "iono" | "3diono" => Ok(DatasetKind::Iono),
+            "uniform" | "uniformdist" => Ok(DatasetKind::Uniform),
+            other => Err(format!(
+                "unknown dataset '{other}' (expected road|taxi|lidar|iono|uniform)"
+            )),
+        }
+    }
+}
+
+/// A point cloud plus its provenance.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub kind: DatasetKind,
+    pub points: Vec<Point3>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Take the first `d` points — the paper "always used the first d
+    /// points" for size sweeps (§5.3).
+    pub fn prefix(&self, d: usize) -> Dataset {
+        Dataset {
+            kind: self.kind,
+            points: self.points[..d.min(self.points.len())].to_vec(),
+        }
+    }
+
+    /// Random sample of `m` points (paper Alg. 2 line 1).
+    pub fn sample(&self, m: usize, rng: &mut Pcg32) -> Vec<Point3> {
+        rng.sample_indices(self.points.len(), m)
+            .into_iter()
+            .map(|i| self.points[i])
+            .collect()
+    }
+
+    pub fn bounding_box(&self) -> crate::geom::Aabb {
+        let mut b = crate::geom::Aabb::EMPTY;
+        for &p in &self.points {
+            b.grow(p);
+        }
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_parse_both_names() {
+        assert_eq!("porto".parse::<DatasetKind>().unwrap(), DatasetKind::Taxi);
+        assert_eq!("road".parse::<DatasetKind>().unwrap(), DatasetKind::Road);
+        assert!("mars".parse::<DatasetKind>().is_err());
+    }
+
+    #[test]
+    fn generators_are_deterministic_and_sized() {
+        for kind in DatasetKind::ALL {
+            let a = kind.generate(500, 9);
+            let b = kind.generate(500, 9);
+            assert_eq!(a.len(), 500, "{kind:?}");
+            assert_eq!(a.points, b.points, "{kind:?} must be deterministic");
+            assert!(a.points.iter().all(|p| p.is_finite()), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn two_d_datasets_have_zero_z() {
+        for kind in DatasetKind::ALL {
+            let d = kind.generate(200, 1);
+            if kind.is_2d() {
+                assert!(d.points.iter().all(|p| p.z == 0.0), "{kind:?}");
+            } else {
+                assert!(d.points.iter().any(|p| p.z != 0.0), "{kind:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn prefix_takes_first_points() {
+        let d = DatasetKind::Uniform.generate(100, 3);
+        let p = d.prefix(10);
+        assert_eq!(p.len(), 10);
+        assert_eq!(p.points[..], d.points[..10]);
+        assert_eq!(d.prefix(1000).len(), 100);
+    }
+
+    #[test]
+    fn sample_draws_from_dataset() {
+        let d = DatasetKind::Uniform.generate(100, 3);
+        let mut rng = Pcg32::new(1);
+        let s = d.sample(10, &mut rng);
+        assert_eq!(s.len(), 10);
+        for p in &s {
+            assert!(d.points.contains(p));
+        }
+    }
+}

@@ -1,0 +1,87 @@
+//! Distance-distribution statistics over a dataset.
+//!
+//! The paper's baseline needs `maxDist` — the maximum distance between
+//! any point and its k-th nearest neighbor (§5.2.1) — and the 99th-
+//! percentile variant needs the 99th percentile of those distances
+//! (§5.5.1). Computed exactly with the kd-tree reference.
+
+use super::Dataset;
+use crate::knn::kdtree::KdTree;
+use crate::util::stats::percentile_sorted;
+
+/// Exact distribution of k-th-NN distances over all points.
+#[derive(Clone, Debug)]
+pub struct DistanceProfile {
+    /// Sorted k-th-neighbor distance per point.
+    pub kth_dists: Vec<f64>,
+    pub k: usize,
+}
+
+impl DistanceProfile {
+    /// Compute the k-th-NN distance for every point (self excluded).
+    pub fn compute(ds: &Dataset, k: usize) -> DistanceProfile {
+        let tree = KdTree::build(&ds.points);
+        let mut kth = Vec::with_capacity(ds.len());
+        for (i, &p) in ds.points.iter().enumerate() {
+            let nn = tree.knn_excluding(p, k, Some(i as u32));
+            let far = nn.last().map(|h| h.dist as f64).unwrap_or(0.0);
+            kth.push(far);
+        }
+        kth.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        DistanceProfile { kth_dists: kth, k }
+    }
+
+    /// The paper's `maxDist`: baseline radius guaranteeing completeness.
+    pub fn max_dist(&self) -> f64 {
+        *self.kth_dists.last().unwrap_or(&0.0)
+    }
+
+    /// Percentile radius (99.0 for the paper's outlier experiment).
+    pub fn percentile_dist(&self, q: f64) -> f64 {
+        if self.kth_dists.is_empty() {
+            0.0
+        } else {
+            percentile_sorted(&self.kth_dists, q)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::DatasetKind;
+
+    #[test]
+    fn max_dist_dominates_percentiles() {
+        let ds = DatasetKind::Taxi.generate(2_000, 8);
+        let prof = DistanceProfile::compute(&ds, 5);
+        let p99 = prof.percentile_dist(99.0);
+        let p50 = prof.percentile_dist(50.0);
+        assert!(prof.max_dist() >= p99);
+        assert!(p99 >= p50);
+        assert!(p50 > 0.0);
+    }
+
+    #[test]
+    fn outlier_tail_visible_in_taxi() {
+        // Porto-analog: maxDist should dwarf the median kNN distance —
+        // this gap is the entire premise of the paper.
+        let ds = DatasetKind::Taxi.generate(4_000, 9);
+        let prof = DistanceProfile::compute(&ds, 5);
+        assert!(
+            prof.max_dist() > 5.0 * prof.percentile_dist(50.0),
+            "maxDist {} vs median {}",
+            prof.max_dist(),
+            prof.percentile_dist(50.0)
+        );
+    }
+
+    #[test]
+    fn kth_dist_is_monotone_in_k() {
+        let ds = DatasetKind::Uniform.generate(500, 10);
+        let p1 = DistanceProfile::compute(&ds, 1);
+        let p5 = DistanceProfile::compute(&ds, 5);
+        assert!(p5.max_dist() >= p1.max_dist());
+        assert!(p5.percentile_dist(50.0) >= p1.percentile_dist(50.0));
+    }
+}

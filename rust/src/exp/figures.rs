@@ -1,0 +1,382 @@
+//! Figure drivers: Fig 3 (speedup vs size), Fig 4 (vs cuML brute force),
+//! Fig 5 (impact of k), Fig 6 (round breakdown), Fig 7 (start radius),
+//! Fig 8/9 (99th-percentile experiments).
+
+use super::workloads::{build, mid_size, paper_sizes, run_pair, ExpScale, EXP_SEED};
+use crate::bench::{fmt_count, fmt_secs, Table};
+use crate::configx::KPolicy;
+use crate::dataset::DatasetKind;
+use crate::knn::{trueknn, RoundStats, TrueKnnParams};
+
+// ---------------------------------------------------------------- Fig 3
+
+/// Fig 3 series: speedup vs dataset size per dataset (k=√N). Reuses the
+/// Table 1 sweep rows.
+pub fn fig3(rows: &[super::table1::Row]) -> Table {
+    let mut t = Table::new(
+        "Fig 3: TrueKNN speedup vs baseline while varying dataset size (k=√N)",
+        &["dataset", "size", "speedup"],
+    );
+    for r in rows {
+        t.row(vec![
+            r.dataset.paper_name().to_string(),
+            r.n.to_string(),
+            format!("{:.1}x", r.speedup()),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------- Fig 4
+
+#[derive(Clone, Debug)]
+pub struct Fig4Row {
+    pub dataset: DatasetKind,
+    pub n: usize,
+    pub trueknn_wall_s: f64,
+    pub brute_wall_s: f64,
+    pub brute_path: &'static str,
+}
+
+impl Fig4Row {
+    pub fn speedup(&self) -> f64 {
+        self.brute_wall_s / self.trueknn_wall_s.max(1e-12)
+    }
+}
+
+/// Fig 4: TrueKNN vs the cuML-analog brute force (PJRT artifacts when
+/// available, CPU brute otherwise), k = 5, wall-clock on this testbed.
+///
+/// Both sides answer the same fixed 1024-query sample per cell (the
+/// paper queries all points; per-query cost comparison is unchanged and
+/// the full-set PJRT run at 50K would take ~10 min per cell on one core).
+pub fn fig4(scale: ExpScale) -> Vec<Fig4Row> {
+    let runtime = crate::runtime::PjrtRuntime::load_default().ok();
+    let n_queries = 1024usize;
+    let mut rows = Vec::new();
+    for kind in DatasetKind::PAPER_MAIN {
+        for &n in &paper_sizes(scale) {
+            let ds = build(kind, n);
+            let queries = &ds.points[..n_queries.min(n)];
+            let t = trueknn(
+                &ds.points,
+                queries,
+                &TrueKnnParams {
+                    k: 5,
+                    seed: EXP_SEED,
+                    exclude_self: false,
+                    ..Default::default()
+                },
+            );
+            let (brute_wall, path) = match runtime.as_ref() {
+                Some(rt) => {
+                    let b = crate::runtime::PjrtBruteForce::new(rt)
+                        .knn(&ds.points, queries, 5, false)
+                        .expect("pjrt brute force");
+                    (b.wall_seconds, "pjrt")
+                }
+                None => {
+                    let b = crate::knn::brute::brute_knn(&ds.points, queries, 5, false);
+                    (b.wall_seconds, "cpu")
+                }
+            };
+            rows.push(Fig4Row {
+                dataset: kind,
+                n,
+                trueknn_wall_s: t.wall_seconds,
+                brute_wall_s: brute_wall,
+                brute_path: path,
+            });
+        }
+    }
+    rows
+}
+
+pub fn render_fig4(rows: &[Fig4Row]) -> Table {
+    let mut t = Table::new(
+        "Fig 4: TrueKNN speedup vs cuML-analog brute force (k=5, wall-clock)",
+        &["dataset", "size", "TrueKNN", "brute", "path", "speedup"],
+    );
+    for r in rows {
+        t.row(vec![
+            r.dataset.paper_name().to_string(),
+            r.n.to_string(),
+            fmt_secs(r.trueknn_wall_s),
+            fmt_secs(r.brute_wall_s),
+            r.brute_path.to_string(),
+            format!("{:.1}x", r.speedup()),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------- Fig 5
+
+#[derive(Clone, Debug)]
+pub struct Fig5Row {
+    pub dataset: DatasetKind,
+    pub k: usize,
+    pub speedup: f64,
+}
+
+/// Fig 5: impact of k (5 vs √N) at the mid size.
+pub fn fig5(scale: ExpScale) -> Vec<Fig5Row> {
+    let n = mid_size(scale);
+    let mut rows = Vec::new();
+    for kind in DatasetKind::PAPER_MAIN {
+        let ds = build(kind, n);
+        for k in [5usize, KPolicy::SqrtN.resolve(n)] {
+            let out = run_pair(&ds, k, None);
+            rows.push(Fig5Row {
+                dataset: kind,
+                k,
+                speedup: out.speedup(),
+            });
+        }
+    }
+    rows
+}
+
+pub fn render_fig5(rows: &[Fig5Row], n: usize) -> Table {
+    let mut t = Table::new(
+        &format!("Fig 5: impact of k at {n} points"),
+        &["dataset", "k", "speedup"],
+    );
+    for r in rows {
+        t.row(vec![
+            r.dataset.paper_name().to_string(),
+            r.k.to_string(),
+            format!("{:.1}x", r.speedup),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------- Fig 6
+
+/// Fig 6a/6b: per-round time and surviving query points on the 3DRoad
+/// analog (k=5, start radius 0.001 like the paper's §5.4.1).
+pub fn fig6(scale: ExpScale) -> Vec<RoundStats> {
+    let ds = build(DatasetKind::Road, mid_size(scale));
+    let res = trueknn(
+        &ds.points,
+        &ds.points,
+        &TrueKnnParams {
+            k: 5,
+            start_radius: Some(0.001),
+            seed: EXP_SEED,
+            ..Default::default()
+        },
+    );
+    res.rounds
+}
+
+pub fn render_fig6(rounds: &[RoundStats]) -> Table {
+    let mut t = Table::new(
+        "Fig 6: 3DRoad round breakdown (k=5, start radius 0.001)",
+        &["round", "radius", "queries", "survivors", "tests", "sim time", "wall"],
+    );
+    for r in rounds {
+        t.row(vec![
+            r.round.to_string(),
+            format!("{:.4}", r.radius),
+            r.queries.to_string(),
+            r.survivors.to_string(),
+            fmt_count(r.prim_tests),
+            fmt_secs(r.sim_seconds),
+            fmt_secs(r.wall_seconds),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------- Fig 7
+
+#[derive(Clone, Debug)]
+pub struct Fig7Row {
+    pub start_radius: f32,
+    pub sim_seconds: f64,
+    pub rounds: usize,
+}
+
+/// Fig 7: sensitivity to the start radius on the Porto analog (k=√N):
+/// sweep the sampled radius scaled by powers of two.
+pub fn fig7(scale: ExpScale) -> Vec<Fig7Row> {
+    let ds = build(DatasetKind::Taxi, mid_size(scale));
+    let k = KPolicy::SqrtN.resolve(ds.len());
+    let sampled = crate::knn::random_sample_radius(&ds.points, EXP_SEED);
+    let mut rows = Vec::new();
+    for scale_pow in [-3i32, -2, -1, 0, 1, 2, 3] {
+        let r0 = sampled * (2.0f32).powi(scale_pow);
+        let res = trueknn(
+            &ds.points,
+            &ds.points,
+            &TrueKnnParams {
+                k,
+                start_radius: Some(r0),
+                seed: EXP_SEED,
+                ..Default::default()
+            },
+        );
+        rows.push(Fig7Row {
+            start_radius: r0,
+            sim_seconds: res.sim_seconds,
+            rounds: res.rounds.len(),
+        });
+    }
+    rows
+}
+
+pub fn render_fig7(rows: &[Fig7Row]) -> Table {
+    let mut t = Table::new(
+        "Fig 7: impact of start radius selection (Porto analog, k=√N)",
+        &["start radius", "sim time", "rounds"],
+    );
+    for r in rows {
+        t.row(vec![
+            format!("{:.6}", r.start_radius),
+            fmt_secs(r.sim_seconds),
+            r.rounds.to_string(),
+        ]);
+    }
+    t
+}
+
+// ------------------------------------------------------------ Fig 8 & 9
+
+#[derive(Clone, Debug)]
+pub struct PctRow {
+    pub dataset: DatasetKind,
+    pub n: usize,
+    pub k: usize,
+    pub speedup: f64,
+}
+
+/// Fig 8: 99th-percentile fixed-radius search, k=√N, on the three
+/// outlier-bearing 3D-capable datasets (paper uses Porto/3DIono/KITTI).
+pub fn fig8(scale: ExpScale) -> Vec<PctRow> {
+    let mut rows = Vec::new();
+    let sizes = &paper_sizes(scale)[..4];
+    for kind in [DatasetKind::Taxi, DatasetKind::Iono, DatasetKind::Lidar] {
+        for &n in sizes {
+            let ds = build(kind, n);
+            let k = KPolicy::SqrtN.resolve(n);
+            let out = run_pair(&ds, k, Some(99.0));
+            rows.push(PctRow {
+                dataset: kind,
+                n,
+                k,
+                speedup: out.speedup(),
+            });
+        }
+    }
+    rows
+}
+
+/// Fig 9: the same experiment with k=5 on 3DIono — the paper's honest
+/// negative result (TrueKNN up to 1.6× *slower*: per-round overheads
+/// don't amortize, §6.1).
+pub fn fig9(scale: ExpScale) -> Vec<PctRow> {
+    let mut rows = Vec::new();
+    let sizes = &paper_sizes(scale)[..4];
+    for &n in sizes {
+        let ds = build(DatasetKind::Iono, n);
+        let out = run_pair(&ds, 5, Some(99.0));
+        rows.push(PctRow {
+            dataset: DatasetKind::Iono,
+            n,
+            k: 5,
+            speedup: out.speedup(),
+        });
+    }
+    rows
+}
+
+pub fn render_pct(rows: &[PctRow], title: &str) -> Table {
+    let mut t = Table::new(title, &["dataset", "size", "k", "speedup"]);
+    for r in rows {
+        t.row(vec![
+            r.dataset.paper_name().to_string(),
+            r.n.to_string(),
+            r.k.to_string(),
+            format!("{:.2}x", r.speedup),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_rounds_shrink_and_radius_doubles() {
+        let ds = build(DatasetKind::Road, 1_500);
+        let res = trueknn(
+            &ds.points,
+            &ds.points,
+            &TrueKnnParams {
+                k: 5,
+                start_radius: Some(0.001),
+                seed: EXP_SEED,
+                ..Default::default()
+            },
+        );
+        let rounds = res.rounds;
+        assert!(rounds.len() >= 2);
+        for w in rounds.windows(2) {
+            assert!(w[1].queries <= w[0].queries);
+        }
+        // last round queries only the stragglers (paper: 3 points)
+        let last = rounds.last().unwrap();
+        assert!(
+            last.queries < rounds[0].queries / 10,
+            "last round queries {} vs first {}",
+            last.queries,
+            rounds[0].queries
+        );
+    }
+
+    #[test]
+    fn fig7_start_radius_barely_matters() {
+        // tiny version of Fig 7: sim time across ±2 octaves must stay
+        // within a small factor of the best
+        let ds = build(DatasetKind::Taxi, 1_200);
+        let sampled = crate::knn::random_sample_radius(&ds.points, EXP_SEED);
+        let mut times = Vec::new();
+        for pow in [-2i32, 0, 2] {
+            let res = trueknn(
+                &ds.points,
+                &ds.points,
+                &TrueKnnParams {
+                    k: 10,
+                    start_radius: Some(sampled * (2.0f32).powi(pow)),
+                    seed: EXP_SEED,
+                    ..Default::default()
+                },
+            );
+            times.push(res.sim_seconds);
+        }
+        let best = times.iter().cloned().fold(f64::INFINITY, f64::min);
+        let worst = times.iter().cloned().fold(0.0, f64::max);
+        assert!(
+            worst / best < 5.0,
+            "start radius should be a minor effect: {times:?}"
+        );
+    }
+
+    #[test]
+    fn fig9_shape_small_k_iono_is_close() {
+        // the paper's negative result: with k=5 and the tight 99th-pct
+        // radius on 3DIono, TrueKNN's advantage collapses (can invert).
+        // Shape check: speedup is small — far below the taxi sqrtN case.
+        let iono = run_pair(&build(DatasetKind::Iono, 1_500), 5, Some(99.0));
+        let taxi = run_pair(&build(DatasetKind::Taxi, 1_500), 38, None);
+        assert!(
+            iono.speedup() < taxi.speedup() / 2.0,
+            "iono p99 k=5 {:.2}x should collapse vs taxi {:.2}x",
+            iono.speedup(),
+            taxi.speedup()
+        );
+    }
+}

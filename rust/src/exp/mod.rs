@@ -1,0 +1,12 @@
+//! Experiment drivers — one per table/figure in the paper's evaluation
+//! (§5) plus the §5.3.1 RTNN comparison and the §4 refit ablation.
+//! DESIGN.md §6 maps each to its bench target.
+
+pub mod workloads;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod figures;
+pub mod ablations;
+
+pub use workloads::{paper_sizes, ExpScale};

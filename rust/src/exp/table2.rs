@@ -1,0 +1,77 @@
+//! Table 2: number of ray-sphere ("ray-object") intersection tests on
+//! the Porto analog, TrueKNN vs baseline — the paper's direct evidence
+//! for where the speedup comes from (§5.3.1).
+
+use super::workloads::{build, paper_sizes, run_pair, ExpScale};
+use crate::bench::{fmt_count, Table};
+use crate::configx::KPolicy;
+use crate::dataset::DatasetKind;
+
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub n: usize,
+    pub trueknn_tests: u64,
+    pub baseline_tests: u64,
+}
+
+impl Row {
+    pub fn ratio(&self) -> f64 {
+        self.baseline_tests as f64 / self.trueknn_tests.max(1) as f64
+    }
+}
+
+pub fn run(scale: ExpScale) -> Vec<Row> {
+    let mut rows = Vec::new();
+    for &n in &paper_sizes(scale) {
+        let ds = build(DatasetKind::Taxi, n);
+        let k = KPolicy::SqrtN.resolve(n);
+        let out = run_pair(&ds, k, None);
+        rows.push(Row {
+            n,
+            trueknn_tests: out.trueknn.counters.prim_tests,
+            baseline_tests: out.baseline.counters.prim_tests,
+        });
+    }
+    rows
+}
+
+pub fn render(rows: &[Row]) -> Table {
+    let mut t = Table::new(
+        "Table 2: ray-sphere intersection tests, Porto analog (k=√N)",
+        &["size", "TrueKNN", "Baseline", "ratio"],
+    );
+    for r in rows {
+        t.row(vec![
+            r.n.to_string(),
+            fmt_count(r.trueknn_tests),
+            fmt_count(r.baseline_tests),
+            format!("{:.1}x", r.ratio()),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratio_grows_with_size_like_the_paper() {
+        // Paper: 9x at 100K growing to 32x at 1M. Shape check at 1/50
+        // scale: the ratio must exceed 1 and grow from the smallest to
+        // the largest size.
+        let sizes = [1_000usize, 4_000];
+        let mut ratios = Vec::new();
+        for &n in &sizes {
+            let ds = build(DatasetKind::Taxi, n);
+            let k = KPolicy::SqrtN.resolve(n);
+            let out = run_pair(&ds, k, None);
+            ratios.push(out.test_ratio());
+        }
+        assert!(ratios[0] > 1.0, "ratios {ratios:?}");
+        assert!(
+            ratios[1] > ratios[0],
+            "ratio must grow with n: {ratios:?}"
+        );
+    }
+}

@@ -1,0 +1,158 @@
+//! Shared experiment workloads: dataset sizes, k policies, and the
+//! TrueKNN-vs-baseline pair runner every table/figure builds on.
+//!
+//! Scaling note (DESIGN.md §4): the paper sweeps 100K–1M points on an
+//! RTX 2060. This testbed is a single CPU core running the RT-core
+//! *simulator*, so the default sweep keeps the paper's ×10 span and both
+//! k regimes at 1/20th the magnitude; `TRUEKNN_SCALE=full` restores
+//! paper-scale sizes (slow: the baseline is intentionally O(n²) at
+//! maxDist radius — that inefficiency is the paper's whole point).
+
+use crate::configx::KPolicy;
+use crate::dataset::{Dataset, DatasetKind, DistanceProfile};
+use crate::knn::{fixed_radius_knns, trueknn, FixedRadiusParams, KnnResult, TrueKnnParams};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExpScale {
+    /// Default: 5K–50K points (×10 span like the paper's 100K–1M).
+    Small,
+    /// Paper-scale: 100K–1M (hours on one core; same code path).
+    Full,
+}
+
+impl ExpScale {
+    pub fn from_env() -> ExpScale {
+        match std::env::var("TRUEKNN_SCALE").as_deref() {
+            Ok("full") => ExpScale::Full,
+            _ => ExpScale::Small,
+        }
+    }
+}
+
+/// The five sweep sizes of Table 1 / Fig 3, scaled.
+pub fn paper_sizes(scale: ExpScale) -> Vec<usize> {
+    match scale {
+        ExpScale::Small => vec![5_000, 10_000, 20_000, 40_000, 50_000],
+        ExpScale::Full => vec![100_000, 200_000, 400_000, 800_000, 1_000_000],
+    }
+}
+
+/// The "400K" single-size experiments (Fig 5/6/7), scaled.
+pub fn mid_size(scale: ExpScale) -> usize {
+    match scale {
+        ExpScale::Small => 20_000,
+        ExpScale::Full => 400_000,
+    }
+}
+
+pub const EXP_SEED: u64 = 20230621; // ICS'23 conference date
+
+/// A TrueKNN-vs-baseline pair on one workload. The baseline radius is
+/// the paper's best case: exactly maxDist (§5.2.1), or the given
+/// percentile for the §5.5.1 variants.
+pub struct PairOutcome {
+    pub trueknn: KnnResult,
+    pub baseline: KnnResult,
+    pub max_dist: f64,
+    pub radius_used: f64,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl PairOutcome {
+    /// Speedup by simulated GPU time (the paper's metric).
+    pub fn speedup(&self) -> f64 {
+        self.trueknn.sim_seconds.max(1e-12).recip() * self.baseline.sim_seconds
+    }
+
+    pub fn test_ratio(&self) -> f64 {
+        self.baseline.counters.prim_tests as f64
+            / self.trueknn.counters.prim_tests.max(1) as f64
+    }
+}
+
+/// Run the canonical pair: TrueKNN (unbounded or percentile-capped) vs
+/// fixed-radius baseline at the matching radius.
+pub fn run_pair(ds: &Dataset, k: usize, percentile: Option<f64>) -> PairOutcome {
+    let prof = DistanceProfile::compute(ds, k);
+    let max_dist = prof.max_dist();
+    let radius_used = match percentile {
+        Some(p) => prof.percentile_dist(p),
+        None => max_dist,
+    };
+    // epsilon-inflate so f32 rounding can't miss the farthest neighbor
+    let radius_f = (radius_used * 1.0001) as f32;
+
+    let t = trueknn(
+        &ds.points,
+        &ds.points,
+        &TrueKnnParams {
+            k,
+            seed: EXP_SEED,
+            radius_cap: percentile.map(|_| radius_f),
+            ..Default::default()
+        },
+    );
+    let b = fixed_radius_knns(
+        &ds.points,
+        &ds.points,
+        &FixedRadiusParams {
+            k,
+            radius: radius_f,
+            ..Default::default()
+        },
+    );
+    PairOutcome {
+        trueknn: t,
+        baseline: b,
+        max_dist,
+        radius_used,
+        k,
+        n: ds.len(),
+    }
+}
+
+/// Build a dataset for an experiment row.
+pub fn build(kind: DatasetKind, n: usize) -> Dataset {
+    kind.generate(n, EXP_SEED)
+}
+
+pub fn resolve_k(policy: KPolicy, n: usize) -> usize {
+    policy.resolve(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_span_10x() {
+        for scale in [ExpScale::Small, ExpScale::Full] {
+            let s = paper_sizes(scale);
+            assert_eq!(s.len(), 5);
+            assert_eq!(s[4] / s[0], 10);
+        }
+    }
+
+    #[test]
+    fn pair_outcome_on_tiny_taxi() {
+        let ds = build(DatasetKind::Taxi, 1_500);
+        let out = run_pair(&ds, 5, None);
+        // both must be complete at maxDist / unbounded
+        assert!(out.trueknn.is_complete(5, ds.len() - 1));
+        assert!(out.baseline.is_complete(5, ds.len() - 1));
+        // the paper's headline: TrueKNN does far fewer tests
+        assert!(out.test_ratio() > 1.5, "ratio {}", out.test_ratio());
+        assert!(out.speedup() > 1.0, "speedup {}", out.speedup());
+    }
+
+    #[test]
+    fn percentile_pair_caps_radius() {
+        let ds = build(DatasetKind::Taxi, 1_500);
+        let out = run_pair(&ds, 5, Some(99.0));
+        assert!(out.radius_used < out.max_dist);
+        // capped TrueKNN leaves outliers short, same as the capped baseline
+        let t_short = out.trueknn.neighbors.iter().filter(|n| n.len() < 5).count();
+        assert!(t_short > 0);
+    }
+}

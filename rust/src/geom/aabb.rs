@@ -1,0 +1,173 @@
+//! Axis-aligned bounding box — the bounding volume of the paper's BVH
+//! (§2.2.2) and the unit the RT core tests rays against in hardware.
+
+use super::point::Point3;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Aabb {
+    pub min: Point3,
+    pub max: Point3,
+}
+
+impl Aabb {
+    /// Empty box: grows from nothing under `grow`/`union`.
+    pub const EMPTY: Aabb = Aabb {
+        min: Point3::splat(f32::INFINITY),
+        max: Point3::splat(f32::NEG_INFINITY),
+    };
+
+    pub fn new(min: Point3, max: Point3) -> Self {
+        Self { min, max }
+    }
+
+    /// Box enclosing a sphere of radius `r` at `c` — the paper's
+    /// `BoundingBox` program (Alg. 1 line 2).
+    #[inline(always)]
+    pub fn around_sphere(c: Point3, r: f32) -> Self {
+        Self {
+            min: c - Point3::splat(r),
+            max: c + Point3::splat(r),
+        }
+    }
+
+    #[inline(always)]
+    pub fn grow(&mut self, p: Point3) {
+        self.min = self.min.min(p);
+        self.max = self.max.max(p);
+    }
+
+    #[inline(always)]
+    pub fn union(&self, o: &Aabb) -> Aabb {
+        Aabb {
+            min: self.min.min(o.min),
+            max: self.max.max(o.max),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.min.x > self.max.x || self.min.y > self.max.y || self.min.z > self.max.z
+    }
+
+    /// Point-in-box test — what the RT core evaluates for the paper's
+    /// infinitesimal rays (a ray of length FLOAT_MIN intersects an AABB
+    /// iff its origin lies inside it).
+    #[inline(always)]
+    pub fn contains(&self, p: Point3) -> bool {
+        p.x >= self.min.x
+            && p.x <= self.max.x
+            && p.y >= self.min.y
+            && p.y <= self.max.y
+            && p.z >= self.min.z
+            && p.z <= self.max.z
+    }
+
+    pub fn contains_box(&self, o: &Aabb) -> bool {
+        o.is_empty()
+            || (self.contains(o.min) && self.contains(o.max))
+    }
+
+    pub fn centroid(&self) -> Point3 {
+        (self.min + self.max) * 0.5
+    }
+
+    pub fn extent(&self) -> Point3 {
+        self.max - self.min
+    }
+
+    /// Surface area (for the SAH builder).
+    pub fn surface_area(&self) -> f32 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        let e = self.extent();
+        2.0 * (e.x * e.y + e.y * e.z + e.z * e.x)
+    }
+
+    /// Index of the widest axis (0, 1 or 2).
+    pub fn longest_axis(&self) -> usize {
+        let e = self.extent();
+        if e.x >= e.y && e.x >= e.z {
+            0
+        } else if e.y >= e.z {
+            1
+        } else {
+            2
+        }
+    }
+
+    /// Slab test for a finite ray segment; used by general ray queries
+    /// (the paper's kNN rays use the degenerate `contains` form).
+    pub fn intersects_ray(&self, origin: Point3, inv_dir: Point3, t_max: f32) -> bool {
+        let mut t0 = 0.0f32;
+        let mut t1 = t_max;
+        for axis in 0..3 {
+            let inv = inv_dir[axis];
+            let mut near = (self.min[axis] - origin[axis]) * inv;
+            let mut far = (self.max[axis] - origin[axis]) * inv;
+            if near > far {
+                std::mem::swap(&mut near, &mut far);
+            }
+            t0 = t0.max(near);
+            t1 = t1.min(far);
+            if t0 > t1 {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_grows_to_point() {
+        let mut b = Aabb::EMPTY;
+        assert!(b.is_empty());
+        b.grow(Point3::new(1.0, 2.0, 3.0));
+        assert!(!b.is_empty());
+        assert_eq!(b.min, b.max);
+    }
+
+    #[test]
+    fn union_encloses_both() {
+        let a = Aabb::new(Point3::ZERO, Point3::splat(1.0));
+        let b = Aabb::new(Point3::splat(0.5), Point3::splat(2.0));
+        let u = a.union(&b);
+        assert!(u.contains_box(&a) && u.contains_box(&b));
+        assert_eq!(u.min, Point3::ZERO);
+        assert_eq!(u.max, Point3::splat(2.0));
+    }
+
+    #[test]
+    fn sphere_box_contains_sphere_surface() {
+        let b = Aabb::around_sphere(Point3::splat(1.0), 0.25);
+        assert!(b.contains(Point3::new(1.25, 1.0, 1.0)));
+        assert!(!b.contains(Point3::new(1.26, 1.0, 1.0)));
+    }
+
+    #[test]
+    fn surface_area_unit_cube() {
+        let b = Aabb::new(Point3::ZERO, Point3::splat(1.0));
+        assert_eq!(b.surface_area(), 6.0);
+        assert_eq!(Aabb::EMPTY.surface_area(), 0.0);
+    }
+
+    #[test]
+    fn longest_axis_picks_widest() {
+        let b = Aabb::new(Point3::ZERO, Point3::new(1.0, 3.0, 2.0));
+        assert_eq!(b.longest_axis(), 1);
+    }
+
+    #[test]
+    fn slab_test_hits_and_misses() {
+        let b = Aabb::new(Point3::ZERO, Point3::splat(1.0));
+        let dir = Point3::new(1.0, 0.0, 0.0);
+        let inv = Point3::new(1.0 / dir.x, f32::INFINITY, f32::INFINITY);
+        assert!(b.intersects_ray(Point3::new(-1.0, 0.5, 0.5), inv, 10.0));
+        assert!(!b.intersects_ray(Point3::new(-1.0, 2.5, 0.5), inv, 10.0));
+        // segment too short to reach the box
+        assert!(!b.intersects_ray(Point3::new(-1.0, 0.5, 0.5), inv, 0.5));
+    }
+}

@@ -1,0 +1,44 @@
+//! Geometric primitives: points, axis-aligned bounding boxes, spheres and
+//! rays — the vocabulary of the simulated OptiX pipeline.
+//!
+//! Everything is natively 3D, exactly like the RT hardware the paper
+//! targets; 2D datasets set `z = 0` (paper §5.2).
+
+mod point;
+mod aabb;
+mod ray;
+mod sphere;
+
+pub use aabb::Aabb;
+pub use point::Point3;
+pub use ray::Ray;
+pub use sphere::Sphere;
+
+/// Squared Euclidean distance — the hot comparison in every intersection
+/// test; kept separate so call sites avoid the sqrt.
+#[inline(always)]
+pub fn dist2(a: Point3, b: Point3) -> f32 {
+    let dx = a.x - b.x;
+    let dy = a.y - b.y;
+    let dz = a.z - b.z;
+    dx * dx + dy * dy + dz * dz
+}
+
+/// Euclidean distance.
+#[inline(always)]
+pub fn dist(a: Point3, b: Point3) -> f32 {
+    dist2(a, b).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dist_matches_dist2() {
+        let a = Point3::new(1.0, 2.0, 3.0);
+        let b = Point3::new(4.0, 6.0, 3.0);
+        assert_eq!(dist2(a, b), 25.0);
+        assert_eq!(dist(a, b), 5.0);
+    }
+}

@@ -1,0 +1,170 @@
+//! 3D point / vector type.
+
+use std::ops::{Add, Div, Index, Mul, Sub};
+
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct Point3 {
+    pub x: f32,
+    pub y: f32,
+    pub z: f32,
+}
+
+impl Point3 {
+    pub const ZERO: Point3 = Point3 {
+        x: 0.0,
+        y: 0.0,
+        z: 0.0,
+    };
+
+    #[inline(always)]
+    pub const fn new(x: f32, y: f32, z: f32) -> Self {
+        Self { x, y, z }
+    }
+
+    /// 2D constructor used by the planar datasets (z pinned to 0, paper §5.2).
+    #[inline(always)]
+    pub const fn new2(x: f32, y: f32) -> Self {
+        Self { x, y, z: 0.0 }
+    }
+
+    pub const fn splat(v: f32) -> Self {
+        Self { x: v, y: v, z: v }
+    }
+
+    #[inline(always)]
+    pub fn min(self, o: Point3) -> Point3 {
+        Point3::new(self.x.min(o.x), self.y.min(o.y), self.z.min(o.z))
+    }
+
+    #[inline(always)]
+    pub fn max(self, o: Point3) -> Point3 {
+        Point3::new(self.x.max(o.x), self.y.max(o.y), self.z.max(o.z))
+    }
+
+    #[inline(always)]
+    pub fn dot(self, o: Point3) -> f32 {
+        self.x * o.x + self.y * o.y + self.z * o.z
+    }
+
+    pub fn cross(self, o: Point3) -> Point3 {
+        Point3::new(
+            self.y * o.z - self.z * o.y,
+            self.z * o.x - self.x * o.z,
+            self.x * o.y - self.y * o.x,
+        )
+    }
+
+    #[inline(always)]
+    pub fn norm2(self) -> f32 {
+        self.dot(self)
+    }
+
+    #[inline(always)]
+    pub fn norm(self) -> f32 {
+        self.norm2().sqrt()
+    }
+
+    pub fn normalized(self) -> Point3 {
+        let n = self.norm();
+        if n == 0.0 {
+            Point3::ZERO
+        } else {
+            self / n
+        }
+    }
+
+    pub fn is_finite(self) -> bool {
+        self.x.is_finite() && self.y.is_finite() && self.z.is_finite()
+    }
+
+    /// Component array view (used when flattening for the PJRT path).
+    pub fn to_array(self) -> [f32; 3] {
+        [self.x, self.y, self.z]
+    }
+}
+
+impl Add for Point3 {
+    type Output = Point3;
+    #[inline(always)]
+    fn add(self, o: Point3) -> Point3 {
+        Point3::new(self.x + o.x, self.y + o.y, self.z + o.z)
+    }
+}
+
+impl Sub for Point3 {
+    type Output = Point3;
+    #[inline(always)]
+    fn sub(self, o: Point3) -> Point3 {
+        Point3::new(self.x - o.x, self.y - o.y, self.z - o.z)
+    }
+}
+
+impl Mul<f32> for Point3 {
+    type Output = Point3;
+    #[inline(always)]
+    fn mul(self, s: f32) -> Point3 {
+        Point3::new(self.x * s, self.y * s, self.z * s)
+    }
+}
+
+impl Div<f32> for Point3 {
+    type Output = Point3;
+    #[inline(always)]
+    fn div(self, s: f32) -> Point3 {
+        Point3::new(self.x / s, self.y / s, self.z / s)
+    }
+}
+
+impl Index<usize> for Point3 {
+    type Output = f32;
+    fn index(&self, i: usize) -> &f32 {
+        match i {
+            0 => &self.x,
+            1 => &self.y,
+            2 => &self.z,
+            _ => panic!("Point3 index {i} out of range"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vector_algebra() {
+        let a = Point3::new(1.0, 2.0, 3.0);
+        let b = Point3::new(4.0, 5.0, 6.0);
+        assert_eq!(a + b, Point3::new(5.0, 7.0, 9.0));
+        assert_eq!(b - a, Point3::splat(3.0));
+        assert_eq!(a * 2.0, Point3::new(2.0, 4.0, 6.0));
+        assert_eq!(a.dot(b), 32.0);
+        assert_eq!(a.cross(b), Point3::new(-3.0, 6.0, -3.0));
+    }
+
+    #[test]
+    fn normalize_handles_zero() {
+        assert_eq!(Point3::ZERO.normalized(), Point3::ZERO);
+        let n = Point3::new(3.0, 0.0, 4.0).normalized();
+        assert!((n.norm() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn min_max_componentwise() {
+        let a = Point3::new(1.0, 5.0, 3.0);
+        let b = Point3::new(2.0, 4.0, 3.0);
+        assert_eq!(a.min(b), Point3::new(1.0, 4.0, 3.0));
+        assert_eq!(a.max(b), Point3::new(2.0, 5.0, 3.0));
+    }
+
+    #[test]
+    fn new2_pins_z() {
+        assert_eq!(Point3::new2(1.0, 2.0).z, 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn index_out_of_range() {
+        let _ = Point3::ZERO[3];
+    }
+}

@@ -1,0 +1,48 @@
+//! Rays as launched by the paper's `RayGen` program (§2.3): origin at the
+//! query point, fixed direction (0,0,1), and an infinitesimal extent —
+//! "a ray of infinitesimal length is sufficient to intersect neighbors".
+
+use super::point::Point3;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Ray {
+    pub origin: Point3,
+    pub dir: Point3,
+    pub t_min: f32,
+    pub t_max: f32,
+    /// Index of the query point that generated this ray (the OptiX launch
+    /// index); lets intersection programs write results per query.
+    pub query_id: u32,
+}
+
+impl Ray {
+    /// The paper's kNN ray: direction (0,0,1), t ∈ [0, FLOAT_MIN].
+    pub fn knn(origin: Point3, query_id: u32) -> Self {
+        Self {
+            origin,
+            dir: Point3::new(0.0, 0.0, 1.0),
+            t_min: 0.0,
+            t_max: f32::MIN_POSITIVE,
+            query_id,
+        }
+    }
+
+    /// Is this ray degenerate (point-like)? True for all kNN rays; the
+    /// traversal then reduces ray-AABB tests to point-in-box tests.
+    pub fn is_point_like(&self) -> bool {
+        self.t_max <= f32::MIN_POSITIVE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knn_ray_is_point_like() {
+        let r = Ray::knn(Point3::splat(0.5), 7);
+        assert!(r.is_point_like());
+        assert_eq!(r.query_id, 7);
+        assert_eq!(r.dir, Point3::new(0.0, 0.0, 1.0));
+    }
+}

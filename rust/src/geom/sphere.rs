@@ -1,0 +1,50 @@
+//! Sphere primitives — the scene objects of the RT-kNNS reduction
+//! (§2.3): one sphere per data point, radius = current search radius.
+
+use super::point::Point3;
+use super::aabb::Aabb;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Sphere {
+    pub center: Point3,
+    pub radius: f32,
+}
+
+impl Sphere {
+    pub fn new(center: Point3, radius: f32) -> Self {
+        Self { center, radius }
+    }
+
+    pub fn aabb(&self) -> Aabb {
+        Aabb::around_sphere(self.center, self.radius)
+    }
+
+    /// The paper's software `Intersection` program: does the (point-like)
+    /// ray origin lie inside this sphere? Equivalent to
+    /// `dist(origin, center) <= radius`.
+    #[inline(always)]
+    pub fn contains(&self, p: Point3) -> bool {
+        super::dist2(self.center, p) <= self.radius * self.radius
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contains_boundary_inclusive() {
+        let s = Sphere::new(Point3::ZERO, 1.0);
+        assert!(s.contains(Point3::new(1.0, 0.0, 0.0)));
+        assert!(s.contains(Point3::ZERO));
+        assert!(!s.contains(Point3::new(1.0, 0.1, 0.0)));
+    }
+
+    #[test]
+    fn aabb_encloses_sphere() {
+        let s = Sphere::new(Point3::new(1.0, -1.0, 2.0), 0.5);
+        let b = s.aabb();
+        assert_eq!(b.min, Point3::new(0.5, -1.5, 1.5));
+        assert_eq!(b.max, Point3::new(1.5, -0.5, 2.5));
+    }
+}

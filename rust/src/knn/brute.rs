@@ -1,0 +1,91 @@
+//! CPU brute-force exact kNN — the shader-core ("cuML") computation
+//! pattern executed scalar-side. The PJRT-accelerated version of the
+//! same computation lives in `runtime::brute` and is the Fig 4 baseline;
+//! this one is the small-input fallback and the oracle of last resort.
+
+use super::{KHeap, KnnResult, Neighbor};
+use crate::geom::{dist2, Point3};
+use crate::util::Stopwatch;
+
+/// Exact kNN by exhaustive scan: O(|queries| · |data|).
+pub fn brute_knn(
+    data: &[Point3],
+    queries: &[Point3],
+    k: usize,
+    exclude_self: bool,
+) -> KnnResult {
+    let wall = Stopwatch::start();
+    let mut result = KnnResult::new(queries.len());
+    for (qi, &q) in queries.iter().enumerate() {
+        let mut heap = KHeap::new(k);
+        for (di, &d) in data.iter().enumerate() {
+            if exclude_self && di == qi {
+                continue;
+            }
+            heap.push(dist2(d, q), di as u32);
+        }
+        result.counters.prim_tests += data.len() as u64;
+        result.counters.heap_pushes += heap.pushes;
+        result.neighbors[qi] = heap.into_sorted();
+    }
+    result.counters.rays = queries.len() as u64;
+    result.wall_seconds = wall.elapsed_secs();
+    // brute force has no BVH/ray machinery; its simulated time is the
+    // prim-test + sort cost only
+    result.sim_seconds = crate::rt::CostModel::default().seconds(&result.counters, 1);
+    result
+}
+
+/// Convenience: single-query exact kNN.
+pub fn brute_knn_single(data: &[Point3], q: Point3, k: usize) -> Vec<Neighbor> {
+    let mut heap = KHeap::new(k);
+    for (di, &d) in data.iter().enumerate() {
+        heap.push(dist2(d, q), di as u32);
+    }
+    heap.into_sorted()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::knn::kdtree::KdTree;
+    use crate::util::prop;
+
+    #[test]
+    fn brute_matches_kdtree() {
+        prop::check("brute ≡ kdtree", 20, |rng| {
+            let n = 2 + rng.below(200) as usize;
+            let k = 1 + rng.below(8) as usize;
+            let pts = prop::random_cloud(rng, n, false);
+            let res = brute_knn(&pts, &pts, k, true);
+            let tree = KdTree::build(&pts);
+            for (i, got) in res.neighbors.iter().enumerate() {
+                let want = tree.knn_excluding(pts[i], k, Some(i as u32));
+                if got.len() != want.len() {
+                    return Err(format!("q{i} len {} vs {}", got.len(), want.len()));
+                }
+                for (g, w) in got.iter().zip(&want) {
+                    if (g.dist - w.dist).abs() > 1e-5 {
+                        return Err(format!("q{i} {} vs {}", g.dist, w.dist));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn test_counts_are_quadratic() {
+        let pts = prop::random_cloud(&mut crate::util::Pcg32::new(1), 100, false);
+        let res = brute_knn(&pts, &pts, 3, true);
+        assert_eq!(res.counters.prim_tests, 100 * 100);
+    }
+
+    #[test]
+    fn single_query_includes_exact_point() {
+        let pts = vec![Point3::ZERO, Point3::splat(1.0)];
+        let nn = brute_knn_single(&pts, Point3::ZERO, 1);
+        assert_eq!(nn[0].idx, 0);
+        assert_eq!(nn[0].dist, 0.0);
+    }
+}

@@ -1,0 +1,146 @@
+//! Fixed-radius RT-kNNS — the paper's Algorithm 1 and its evaluation
+//! baseline (§5.2.1: radius = maxDist so every point is guaranteed to
+//! find its k neighbors; §5.5.1 uses the 99th-percentile radius).
+
+use super::program::KnnProgram;
+use super::{KnnResult, RoundStats};
+use crate::geom::{Point3, Ray};
+use crate::rt::{CostModel, HwCounters, Pipeline, Scene};
+use crate::util::Stopwatch;
+
+#[derive(Clone, Debug)]
+pub struct FixedRadiusParams {
+    pub k: usize,
+    pub radius: f32,
+    /// Queries are dataset points themselves (exclude self-hits).
+    pub exclude_self: bool,
+    pub cost_model: CostModel,
+}
+
+impl Default for FixedRadiusParams {
+    fn default() -> Self {
+        Self {
+            k: 5,
+            radius: 1.0,
+            exclude_self: true,
+            cost_model: CostModel::default(),
+        }
+    }
+}
+
+/// One-shot fixed-radius kNN over `data`, querying every point of
+/// `queries` (`queries` usually aliases `data`; pass the same slice).
+pub fn fixed_radius_knns(
+    data: &[Point3],
+    queries: &[Point3],
+    params: &FixedRadiusParams,
+) -> KnnResult {
+    let wall = Stopwatch::start();
+    let mut result = KnnResult::new(queries.len());
+    let mut counters = HwCounters::new();
+
+    // Alg. 1 lines 1–3: spheres, AABBs, BVH.
+    let scene = Scene::build(data.to_vec(), params.radius, &mut counters);
+    // one host→device switch to upload + launch
+    counters.context_switches += 1;
+
+    // Alg. 1 lines 4–13: one ray per query.
+    let rays: Vec<Ray> = queries
+        .iter()
+        .enumerate()
+        .map(|(i, &p)| Ray::knn(p, i as u32))
+        .collect();
+    let mut program = KnnProgram::new(queries.len(), params.k, params.exclude_self);
+    Pipeline::launch(&scene, &rays, &mut program, &mut counters);
+    counters.heap_pushes = program.total_pushes();
+
+    for (q, heap) in program.heaps.into_iter().enumerate() {
+        result.neighbors[q] = heap.into_sorted();
+    }
+    result.launches = 1;
+    result.counters = counters;
+    result.wall_seconds = wall.elapsed_secs();
+    result.rounds.push(RoundStats {
+        round: 0,
+        radius: params.radius,
+        queries: queries.len(),
+        survivors: result
+            .neighbors
+            .iter()
+            .filter(|n| n.len() < params.k)
+            .count(),
+        prim_tests: result.counters.prim_tests,
+        sim_seconds: params.cost_model.seconds(&result.counters, 1),
+        wall_seconds: result.wall_seconds,
+    });
+    result.finalize_sim_time(&params.cost_model);
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{DatasetKind, DistanceProfile};
+    use crate::knn::kdtree::KdTree;
+
+    #[test]
+    fn maxdist_radius_is_exact_and_complete() {
+        let ds = DatasetKind::Uniform.generate(800, 30);
+        let k = 5;
+        let prof = DistanceProfile::compute(&ds, k);
+        let params = FixedRadiusParams {
+            k,
+            radius: prof.max_dist() as f32 * 1.0001,
+            ..Default::default()
+        };
+        let res = fixed_radius_knns(&ds.points, &ds.points, &params);
+        assert!(res.is_complete(k, ds.len() - 1));
+
+        let tree = KdTree::build(&ds.points);
+        for (i, got) in res.neighbors.iter().enumerate() {
+            let want = tree.knn_excluding(ds.points[i], k, Some(i as u32));
+            assert_eq!(got.len(), want.len(), "query {i}");
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g.dist - w.dist).abs() < 1e-5, "query {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn small_radius_misses_neighbors() {
+        // the paper's core complaint about fixed-radius search
+        let ds = DatasetKind::Taxi.generate(2_000, 31);
+        let params = FixedRadiusParams {
+            k: 5,
+            radius: 1e-6,
+            ..Default::default()
+        };
+        let res = fixed_radius_knns(&ds.points, &ds.points, &params);
+        assert!(!res.is_complete(5, ds.len() - 1));
+        let incomplete = res.rounds[0].survivors;
+        assert!(incomplete > ds.len() / 2, "only {incomplete} incomplete");
+    }
+
+    #[test]
+    fn larger_radius_costs_more_tests() {
+        let ds = DatasetKind::Uniform.generate(1_000, 32);
+        let small = fixed_radius_knns(
+            &ds.points,
+            &ds.points,
+            &FixedRadiusParams {
+                radius: 0.05,
+                ..Default::default()
+            },
+        );
+        let large = fixed_radius_knns(
+            &ds.points,
+            &ds.points,
+            &FixedRadiusParams {
+                radius: 0.8,
+                ..Default::default()
+            },
+        );
+        assert!(large.counters.prim_tests > 5 * small.counters.prim_tests);
+        assert!(large.sim_seconds > small.sim_seconds);
+    }
+}

@@ -1,0 +1,201 @@
+//! Bounded max-heap holding the k best (smallest-distance) candidates —
+//! the "list of k nearest neighbors" whose maintenance cost the paper
+//! identifies as the sorting overhead (§3.4, §5.3.2).
+
+use super::Neighbor;
+
+/// Max-heap on squared distance, capacity `k`. `push` keeps the k
+/// smallest items seen; `pushes` counts successful insertions (the
+/// sorting-work telemetry fed to `HwCounters::heap_pushes`).
+#[derive(Clone, Debug)]
+pub struct KHeap {
+    k: usize,
+    /// (dist2, idx) max-heap order on dist2.
+    items: Vec<(f32, u32)>,
+    pub pushes: u64,
+}
+
+impl KHeap {
+    pub fn new(k: usize) -> Self {
+        Self {
+            k,
+            items: Vec::with_capacity(k),
+            pushes: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.items.len() == self.k
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.k
+    }
+
+    /// Current worst (largest) kept squared distance, or +inf if not full.
+    pub fn bound2(&self) -> f32 {
+        if self.is_full() {
+            self.items[0].0
+        } else {
+            f32::INFINITY
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.items.clear();
+    }
+
+    /// Offer a candidate; returns true if kept.
+    #[inline]
+    pub fn push(&mut self, dist2: f32, idx: u32) -> bool {
+        if self.k == 0 || dist2.is_nan() {
+            // a NaN distance (degenerate query coordinates) is never a
+            // valid neighbor and would poison the max-heap ordering
+            return false;
+        }
+        if self.items.len() < self.k {
+            self.items.push((dist2, idx));
+            self.sift_up(self.items.len() - 1);
+            self.pushes += 1;
+            true
+        } else if dist2 < self.items[0].0 {
+            self.items[0] = (dist2, idx);
+            self.sift_down(0);
+            self.pushes += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.items[i].0 > self.items[parent].0 {
+                self.items.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut largest = i;
+            if l < self.items.len() && self.items[l].0 > self.items[largest].0 {
+                largest = l;
+            }
+            if r < self.items.len() && self.items[r].0 > self.items[largest].0 {
+                largest = r;
+            }
+            if largest == i {
+                return;
+            }
+            self.items.swap(i, largest);
+            i = largest;
+        }
+    }
+
+    /// Drain into a distance-ascending neighbor list.
+    pub fn into_sorted(self) -> Vec<Neighbor> {
+        let mut v: Vec<Neighbor> = self
+            .items
+            .into_iter()
+            .map(|(d2, idx)| Neighbor {
+                idx,
+                dist: d2.sqrt(),
+            })
+            .collect();
+        v.sort_by(|a, b| a.dist.total_cmp(&b.dist).then(a.idx.cmp(&b.idx)));
+        v
+    }
+
+    /// Sorted copy without consuming.
+    pub fn sorted(&self) -> Vec<Neighbor> {
+        self.clone().into_sorted()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn keeps_k_smallest() {
+        let mut h = KHeap::new(3);
+        for (i, d) in [5.0f32, 1.0, 4.0, 2.0, 3.0, 0.5].iter().enumerate() {
+            h.push(*d, i as u32);
+        }
+        let out = h.into_sorted();
+        let dists: Vec<f32> = out.iter().map(|n| n.dist * n.dist).collect();
+        assert_eq!(out.len(), 3);
+        assert!((dists[0] - 0.5).abs() < 1e-6);
+        assert!((dists[1] - 1.0).abs() < 1e-6);
+        assert!((dists[2] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_capacity_rejects() {
+        let mut h = KHeap::new(0);
+        assert!(!h.push(1.0, 0));
+        assert!(h.is_empty());
+        assert_eq!(h.pushes, 0);
+    }
+
+    #[test]
+    fn bound_tracks_worst_kept() {
+        let mut h = KHeap::new(2);
+        assert_eq!(h.bound2(), f32::INFINITY);
+        h.push(4.0, 0);
+        h.push(9.0, 1);
+        assert_eq!(h.bound2(), 9.0);
+        h.push(1.0, 2);
+        assert_eq!(h.bound2(), 4.0);
+    }
+
+    #[test]
+    fn heap_matches_sort_property() {
+        prop::check("kheap ≡ sort-then-truncate", 50, |rng| {
+            let n = 1 + rng.below(200) as usize;
+            let k = 1 + rng.below(20) as usize;
+            let xs: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            let mut h = KHeap::new(k);
+            for (i, &x) in xs.iter().enumerate() {
+                h.push(x, i as u32);
+            }
+            let got: Vec<f32> = h.into_sorted().iter().map(|n| n.dist * n.dist).collect();
+            let mut want = xs.clone();
+            want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            want.truncate(k);
+            if got.len() != want.len() {
+                return Err(format!("len {} vs {}", got.len(), want.len()));
+            }
+            for (g, w) in got.iter().zip(&want) {
+                if (g - w).abs() > 1e-5 {
+                    return Err(format!("{g} vs {w}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pushes_counts_insertions_only() {
+        let mut h = KHeap::new(1);
+        h.push(1.0, 0); // kept
+        h.push(2.0, 1); // rejected
+        h.push(0.5, 2); // replaces
+        assert_eq!(h.pushes, 2);
+    }
+}

@@ -1,0 +1,280 @@
+//! Exact kd-tree kNN — the validation oracle for every RT path, and the
+//! ball-tree stand-in for the paper's Alg. 2 start-radius sampler (the
+//! paper uses scikit-learn; we build our own, §2.3 of DESIGN.md).
+
+use super::{KHeap, Neighbor};
+use crate::geom::{dist2, Point3};
+
+#[derive(Clone, Debug)]
+enum KdNode {
+    Leaf {
+        first: u32,
+        count: u32,
+    },
+    Split {
+        axis: u8,
+        value: f32,
+        left: u32,
+        right: u32,
+    },
+}
+
+#[derive(Clone, Debug)]
+pub struct KdTree {
+    nodes: Vec<KdNode>,
+    /// Point ids in leaf order.
+    order: Vec<u32>,
+    points: Vec<Point3>,
+    root: u32,
+}
+
+const LEAF: usize = 16;
+
+impl KdTree {
+    pub fn build(points: &[Point3]) -> KdTree {
+        let mut tree = KdTree {
+            nodes: Vec::new(),
+            order: (0..points.len() as u32).collect(),
+            points: points.to_vec(),
+            root: 0,
+        };
+        if points.is_empty() {
+            return tree;
+        }
+        let mut order = std::mem::take(&mut tree.order);
+        let root = tree.subdivide(&mut order, 0, points.len());
+        tree.order = order;
+        tree.root = root;
+        tree
+    }
+
+    fn subdivide(&mut self, order: &mut [u32], lo: usize, hi: usize) -> u32 {
+        let idx = self.nodes.len() as u32;
+        let count = hi - lo;
+        if count <= LEAF {
+            self.nodes.push(KdNode::Leaf {
+                first: lo as u32,
+                count: count as u32,
+            });
+            return idx;
+        }
+        // widest axis of the point extent
+        let mut bb = crate::geom::Aabb::EMPTY;
+        for &p in &order[lo..hi] {
+            bb.grow(self.points[p as usize]);
+        }
+        let axis = bb.longest_axis();
+        let mid = lo + count / 2;
+        order[lo..hi].select_nth_unstable_by(mid - lo, |&a, &b| {
+            self.points[a as usize][axis]
+                .partial_cmp(&self.points[b as usize][axis])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let value = self.points[order[mid] as usize][axis];
+        self.nodes.push(KdNode::Split {
+            axis: axis as u8,
+            value,
+            left: u32::MAX,
+            right: u32::MAX,
+        });
+        let l = self.subdivide(order, lo, mid);
+        let r = self.subdivide(order, mid, hi);
+        if let KdNode::Split { left, right, .. } = &mut self.nodes[idx as usize] {
+            *left = l;
+            *right = r;
+        }
+        idx
+    }
+
+    /// Exact k nearest neighbors of `q`; `exclude` removes one point id
+    /// (self-queries). Sorted ascending by distance.
+    pub fn knn_excluding(&self, q: Point3, k: usize, exclude: Option<u32>) -> Vec<Neighbor> {
+        if self.points.is_empty() || k == 0 {
+            return Vec::new();
+        }
+        let mut heap = KHeap::new(k);
+        self.search(self.root, q, exclude, &mut heap);
+        heap.into_sorted()
+    }
+
+    pub fn knn(&self, q: Point3, k: usize) -> Vec<Neighbor> {
+        self.knn_excluding(q, k, None)
+    }
+
+    fn search(&self, node: u32, q: Point3, exclude: Option<u32>, heap: &mut KHeap) {
+        match &self.nodes[node as usize] {
+            KdNode::Leaf { first, count } => {
+                let first = *first as usize;
+                let count = *count as usize;
+                for &p in &self.order[first..first + count] {
+                    if exclude == Some(p) {
+                        continue;
+                    }
+                    heap.push(dist2(self.points[p as usize], q), p);
+                }
+            }
+            KdNode::Split {
+                axis,
+                value,
+                left,
+                right,
+            } => {
+                let delta = q[*axis as usize] - value;
+                let (near, far) = if delta < 0.0 {
+                    (*left, *right)
+                } else {
+                    (*right, *left)
+                };
+                self.search(near, q, exclude, heap);
+                if delta * delta < heap.bound2() {
+                    self.search(far, q, exclude, heap);
+                }
+            }
+        }
+    }
+
+    /// All points within radius `r` of `q` (used by tests).
+    pub fn range(&self, q: Point3, r: f32) -> Vec<u32> {
+        let mut out = Vec::new();
+        if self.points.is_empty() {
+            return out;
+        }
+        let r2 = r * r;
+        let mut stack = vec![self.root];
+        while let Some(node) = stack.pop() {
+            match &self.nodes[node as usize] {
+                KdNode::Leaf { first, count } => {
+                    let first = *first as usize;
+                    let count = *count as usize;
+                    for &p in &self.order[first..first + count] {
+                        if dist2(self.points[p as usize], q) <= r2 {
+                            out.push(p);
+                        }
+                    }
+                }
+                KdNode::Split {
+                    axis,
+                    value,
+                    left,
+                    right,
+                } => {
+                    let delta = q[*axis as usize] - value;
+                    if delta < 0.0 {
+                        stack.push(*left);
+                        if delta * delta <= r2 {
+                            stack.push(*right);
+                        }
+                    } else {
+                        stack.push(*right);
+                        if delta * delta <= r2 {
+                            stack.push(*left);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn brute_knn(pts: &[Point3], q: Point3, k: usize, exclude: Option<u32>) -> Vec<Neighbor> {
+        let mut all: Vec<Neighbor> = pts
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| exclude != Some(*i as u32))
+            .map(|(i, &p)| Neighbor {
+                idx: i as u32,
+                dist: crate::geom::dist(p, q),
+            })
+            .collect();
+        all.sort_by(|a, b| a.dist.partial_cmp(&b.dist).unwrap().then(a.idx.cmp(&b.idx)));
+        all.truncate(k);
+        all
+    }
+
+    #[test]
+    fn knn_matches_brute_force() {
+        prop::check("kdtree knn ≡ brute force", 30, |rng| {
+            let n = 1 + rng.below(400) as usize;
+            let k = 1 + rng.below(12) as usize;
+            let dims2 = rng.f32() < 0.3;
+            let pts = prop::random_cloud(rng, n, dims2);
+            let tree = KdTree::build(&pts);
+            let qi = rng.below_usize(n);
+            let exclude = if rng.f32() < 0.5 { Some(qi as u32) } else { None };
+            let got = tree.knn_excluding(pts[qi], k, exclude);
+            let want = brute_knn(&pts, pts[qi], k, exclude);
+            if got.len() != want.len() {
+                return Err(format!("len {} vs {}", got.len(), want.len()));
+            }
+            for (g, w) in got.iter().zip(&want) {
+                if (g.dist - w.dist).abs() > 1e-5 {
+                    return Err(format!("dist {} vs {}", g.dist, w.dist));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn range_matches_brute_force() {
+        prop::check("kdtree range ≡ brute force", 30, |rng| {
+            let n = 1 + rng.below(300) as usize;
+            let pts = prop::random_cloud(rng, n, false);
+            let tree = KdTree::build(&pts);
+            let q = Point3::new(rng.f32(), rng.f32(), rng.f32());
+            let r = rng.f32() * 0.5;
+            let mut got = tree.range(q, r);
+            got.sort_unstable();
+            let mut want: Vec<u32> = (0..n as u32)
+                .filter(|&i| crate::geom::dist(pts[i as usize], q) <= r)
+                .collect();
+            want.sort_unstable();
+            if got != want {
+                return Err(format!("got {got:?} want {want:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_and_degenerate() {
+        let tree = KdTree::build(&[]);
+        assert!(tree.knn(Point3::ZERO, 3).is_empty());
+        assert!(tree.range(Point3::ZERO, 1.0).is_empty());
+
+        // all-identical points
+        let pts = vec![Point3::splat(0.3); 40];
+        let tree = KdTree::build(&pts);
+        let nn = tree.knn(Point3::splat(0.3), 5);
+        assert_eq!(nn.len(), 5);
+        assert!(nn.iter().all(|n| n.dist == 0.0));
+    }
+
+    #[test]
+    fn k_larger_than_n_returns_all() {
+        let pts = vec![
+            Point3::new(0.0, 0.0, 0.0),
+            Point3::new(1.0, 0.0, 0.0),
+            Point3::new(2.0, 0.0, 0.0),
+        ];
+        let tree = KdTree::build(&pts);
+        let nn = tree.knn(Point3::ZERO, 10);
+        assert_eq!(nn.len(), 3);
+        assert_eq!(nn[0].idx, 0);
+        assert_eq!(nn[2].idx, 2);
+    }
+}

@@ -1,0 +1,114 @@
+//! The kNN `Intersection` program: mirrors the paper's implementation
+//! choice of doing all kNN logic inside the software intersection test
+//! with AnyHit/ClosestHit disabled (§4).
+
+use super::KHeap;
+use crate::geom::Ray;
+use crate::rt::IntersectionProgram;
+
+/// Maintains one bounded k-heap per query point. Query ids are *global*
+/// dataset indices, so TrueKNN can launch shrinking ray subsets across
+/// rounds while results land in stable slots.
+pub struct KnnProgram {
+    pub heaps: Vec<KHeap>,
+    /// Exclude the sphere whose id equals the ray's query id (self-hit
+    /// when the query set is the dataset itself).
+    pub exclude_self: bool,
+}
+
+impl KnnProgram {
+    pub fn new(n_queries: usize, k: usize, exclude_self: bool) -> Self {
+        Self {
+            heaps: (0..n_queries).map(|_| KHeap::new(k)).collect(),
+            exclude_self,
+        }
+    }
+
+    /// Reset the heaps for a re-queried subset (each TrueKNN round
+    /// re-discovers everything inside the bigger radius, §3.3).
+    pub fn reset(&mut self, query_ids: &[u32]) {
+        for &q in query_ids {
+            self.heaps[q as usize].clear();
+        }
+    }
+
+    /// Total heap insertions across all queries (sorting-work telemetry).
+    pub fn total_pushes(&self) -> u64 {
+        self.heaps.iter().map(|h| h.pushes).sum()
+    }
+}
+
+impl IntersectionProgram for KnnProgram {
+    #[inline]
+    fn hit(&mut self, ray: &Ray, prim: u32, dist2: f32) {
+        if self.exclude_self && prim == ray.query_id {
+            return;
+        }
+        self.heaps[ray.query_id as usize].push(dist2, prim);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rt::{HwCounters, Pipeline, Scene};
+    use crate::geom::Point3;
+    use crate::util::prop;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn program_collects_k_nearest_within_radius() {
+        let mut rng = Pcg32::new(21);
+        let pts = prop::random_cloud(&mut rng, 500, false);
+        let r = 0.2;
+        let k = 5;
+        let mut c = HwCounters::new();
+        let scene = Scene::build(pts.clone(), r, &mut c);
+        let rays: Vec<crate::geom::Ray> = (0..pts.len())
+            .map(|i| crate::geom::Ray::knn(pts[i], i as u32))
+            .collect();
+        let mut prog = KnnProgram::new(pts.len(), k, true);
+        Pipeline::launch(&scene, &rays, &mut prog, &mut c);
+
+        let tree = crate::knn::kdtree::KdTree::build(&pts);
+        for i in 0..pts.len() {
+            let got = prog.heaps[i].sorted();
+            let exact = tree.knn_excluding(pts[i], k, Some(i as u32));
+            let exact_in_r: Vec<_> = exact.into_iter().filter(|n| n.dist <= r).collect();
+            assert_eq!(got.len(), exact_in_r.len(), "query {i}");
+            for (g, w) in got.iter().zip(&exact_in_r) {
+                assert!((g.dist - w.dist).abs() < 1e-5, "query {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn self_hit_excluded_only_when_asked() {
+        let pts = vec![Point3::ZERO, Point3::new(0.1, 0.0, 0.0)];
+        let mut c = HwCounters::new();
+        let scene = Scene::build(pts.clone(), 1.0, &mut c);
+        let rays = vec![crate::geom::Ray::knn(pts[0], 0)];
+
+        let mut incl = KnnProgram::new(2, 5, false);
+        Pipeline::launch(&scene, &rays, &mut incl, &mut c);
+        assert_eq!(incl.heaps[0].len(), 2, "self included");
+
+        let mut excl = KnnProgram::new(2, 5, true);
+        Pipeline::launch(&scene, &rays, &mut excl, &mut c);
+        let got = excl.heaps[0].sorted();
+        assert_eq!(got.len(), 1, "self excluded");
+        assert_eq!(got[0].idx, 1);
+    }
+
+    #[test]
+    fn reset_clears_only_named_queries() {
+        let mut prog = KnnProgram::new(3, 2, false);
+        prog.heaps[0].push(1.0, 1);
+        prog.heaps[1].push(1.0, 1);
+        prog.heaps[2].push(1.0, 1);
+        prog.reset(&[0, 2]);
+        assert!(prog.heaps[0].is_empty());
+        assert_eq!(prog.heaps[1].len(), 1);
+        assert!(prog.heaps[2].is_empty());
+    }
+}

@@ -1,0 +1,293 @@
+//! RTNN-style optimized fixed-radius baseline (Zhu, PPoPP'22 — the
+//! paper's §5.3.1 comparison). RTNN keeps the single-radius search but
+//! adds two optimizations:
+//!
+//! 1. **query reordering**: sort queries along a Morton (Z-order) curve
+//!    so consecutive rays touch the same BVH subtrees (ray coherence —
+//!    on the GPU this reduces divergence; in our simulator it improves
+//!    cache locality, which shows up in wall-clock);
+//! 2. **query partitioning**: split sorted queries into spatial chunks
+//!    and search each chunk against only the data points that can
+//!    possibly be within `radius` of the chunk's bounding box — this
+//!    genuinely removes intersection tests, the effect RTNN reports.
+//!
+//! The paper shows *unoptimized* TrueKNN still beats this by 1.5–8×.
+
+use super::program::KnnProgram;
+use super::{KnnResult, RoundStats};
+use crate::geom::{Aabb, Point3, Ray};
+use crate::rt::{CostModel, HwCounters, Pipeline, Scene};
+use crate::util::Stopwatch;
+
+#[derive(Clone, Debug)]
+pub struct RtnnParams {
+    pub k: usize,
+    pub radius: f32,
+    pub exclude_self: bool,
+    /// Number of spatial query partitions.
+    pub partitions: usize,
+    pub cost_model: CostModel,
+}
+
+impl Default for RtnnParams {
+    fn default() -> Self {
+        Self {
+            k: 5,
+            radius: 1.0,
+            exclude_self: true,
+            partitions: 16,
+            cost_model: CostModel::default(),
+        }
+    }
+}
+
+/// 30-bit 3D Morton code over the unit-normalized position.
+pub fn morton3(p: Point3, bb: &Aabb) -> u32 {
+    let e = bb.extent();
+    let norm = |v: f32, lo: f32, ext: f32| {
+        if ext <= 0.0 {
+            0u32
+        } else {
+            (((v - lo) / ext).clamp(0.0, 1.0) * 1023.0) as u32
+        }
+    };
+    let x = norm(p.x, bb.min.x, e.x);
+    let y = norm(p.y, bb.min.y, e.y);
+    let z = norm(p.z, bb.min.z, e.z);
+    part1by2(x) | (part1by2(y) << 1) | (part1by2(z) << 2)
+}
+
+#[inline]
+fn part1by2(mut v: u32) -> u32 {
+    v &= 0x3FF;
+    v = (v | (v << 16)) & 0x030000FF;
+    v = (v | (v << 8)) & 0x0300F00F;
+    v = (v | (v << 4)) & 0x030C30C3;
+    v = (v | (v << 2)) & 0x09249249;
+    v
+}
+
+/// RTNN fixed-radius kNN with both optimizations enabled.
+pub fn rtnn_knns(data: &[Point3], queries: &[Point3], params: &RtnnParams) -> KnnResult {
+    let wall = Stopwatch::start();
+    let mut result = KnnResult::new(queries.len());
+    if data.is_empty() || queries.is_empty() {
+        return result;
+    }
+    let mut counters = HwCounters::new();
+
+    // --- optimization 1: Z-order query sort ---
+    let mut bb = Aabb::EMPTY;
+    for &q in queries {
+        bb.grow(q);
+    }
+    let mut order: Vec<u32> = (0..queries.len() as u32).collect();
+    order.sort_by_key(|&i| morton3(queries[i as usize], &bb));
+
+    // --- optimization 2: spatial query partitioning ---
+    let parts = params.partitions.max(1).min(order.len());
+    let chunk = order.len().div_ceil(parts);
+    let mut program = KnnProgram::new(queries.len(), params.k, params.exclude_self);
+    let mut launches = 0u64;
+    let mut prev_pushes = 0u64;
+
+    for part in order.chunks(chunk) {
+        // chunk bounds inflated by the radius: only data points inside
+        // can intersect any chunk query
+        let mut pb = Aabb::EMPTY;
+        for &q in part {
+            pb.grow(queries[q as usize]);
+        }
+        pb.min = pb.min - Point3::splat(params.radius);
+        pb.max = pb.max + Point3::splat(params.radius);
+
+        // cull data and remember original ids
+        let mut ids: Vec<u32> = Vec::new();
+        let mut culled: Vec<Point3> = Vec::new();
+        for (i, &d) in data.iter().enumerate() {
+            if pb.contains(d) {
+                ids.push(i as u32);
+                culled.push(d);
+            }
+        }
+        if culled.is_empty() {
+            continue;
+        }
+        let scene = Scene::build(culled, params.radius, &mut counters);
+        counters.context_switches += 1;
+        let rays: Vec<Ray> = part
+            .iter()
+            .map(|&q| Ray::knn(queries[q as usize], q))
+            .collect();
+        // remap prim ids back to global ids inside a shim program
+        let mut shim = Remap {
+            inner: &mut program,
+            ids: &ids,
+        };
+        Pipeline::launch(&scene, &rays, &mut shim, &mut counters);
+        launches += 1;
+        let pushes = program.total_pushes();
+        counters.heap_pushes += pushes - prev_pushes;
+        prev_pushes = pushes;
+    }
+
+    for (q, heap) in program.heaps.into_iter().enumerate() {
+        result.neighbors[q] = heap.into_sorted();
+    }
+    result.launches = launches;
+    result.counters = counters;
+    result.wall_seconds = wall.elapsed_secs();
+    result.rounds.push(RoundStats {
+        round: 0,
+        radius: params.radius,
+        queries: queries.len(),
+        survivors: result
+            .neighbors
+            .iter()
+            .filter(|n| n.len() < params.k)
+            .count(),
+        prim_tests: result.counters.prim_tests,
+        sim_seconds: params.cost_model.seconds(&result.counters, launches),
+        wall_seconds: result.wall_seconds,
+    });
+    result.finalize_sim_time(&params.cost_model);
+    result
+}
+
+/// Adapter translating culled-scene primitive ids back to dataset ids.
+struct Remap<'a> {
+    inner: &'a mut KnnProgram,
+    ids: &'a [u32],
+}
+
+impl crate::rt::IntersectionProgram for Remap<'_> {
+    #[inline]
+    fn hit(&mut self, ray: &Ray, prim: u32, dist2: f32) {
+        let global = self.ids[prim as usize];
+        if self.inner.exclude_self && global == ray.query_id {
+            return;
+        }
+        self.inner.heaps[ray.query_id as usize].push(dist2, global);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{DatasetKind, DistanceProfile};
+    use crate::knn::{fixed_radius_knns, FixedRadiusParams};
+
+    #[test]
+    fn morton_orders_near_points_together() {
+        let bb = Aabb::new(Point3::ZERO, Point3::splat(1.0));
+        let a = morton3(Point3::new(0.1, 0.1, 0.1), &bb);
+        let b = morton3(Point3::new(0.12, 0.1, 0.1), &bb);
+        let c = morton3(Point3::new(0.9, 0.9, 0.9), &bb);
+        assert!(a.abs_diff(b) < a.abs_diff(c));
+    }
+
+    #[test]
+    fn rtnn_is_exact_at_maxdist_radius() {
+        let ds = DatasetKind::Uniform.generate(800, 60);
+        let k = 5;
+        let prof = DistanceProfile::compute(&ds, k);
+        let r = prof.max_dist() as f32 * 1.0001;
+        let rtnn = rtnn_knns(
+            &ds.points,
+            &ds.points,
+            &RtnnParams {
+                k,
+                radius: r,
+                ..Default::default()
+            },
+        );
+        let base = fixed_radius_knns(
+            &ds.points,
+            &ds.points,
+            &FixedRadiusParams {
+                k,
+                radius: r,
+                ..Default::default()
+            },
+        );
+        assert!(rtnn.is_complete(k, ds.len() - 1));
+        for (a, b) in rtnn.neighbors.iter().zip(&base.neighbors) {
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b) {
+                assert!((x.dist - y.dist).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn partitioning_reduces_traversal_work() {
+        // RTNN's partitioning lets each query traverse a much smaller
+        // BVH. Software prim tests are bounded below by true candidate
+        // counts either way, so the hardware-side traversal (ray-AABB
+        // tests) is where the win shows; prim tests must not regress.
+        let ds = DatasetKind::Road.generate(3_000, 61);
+        let prof = DistanceProfile::compute(&ds, 5);
+        let r = prof.percentile_dist(90.0) as f32;
+        let plain = fixed_radius_knns(
+            &ds.points,
+            &ds.points,
+            &FixedRadiusParams {
+                k: 5,
+                radius: r,
+                ..Default::default()
+            },
+        );
+        let opt = rtnn_knns(
+            &ds.points,
+            &ds.points,
+            &RtnnParams {
+                k: 5,
+                radius: r,
+                partitions: 32,
+                ..Default::default()
+            },
+        );
+        assert!(
+            opt.counters.aabb_tests < plain.counters.aabb_tests,
+            "rtnn aabb {} vs plain {}",
+            opt.counters.aabb_tests,
+            plain.counters.aabb_tests
+        );
+        assert!(
+            opt.counters.prim_tests <= plain.counters.prim_tests * 110 / 100,
+            "rtnn prim {} vs plain {}",
+            opt.counters.prim_tests,
+            plain.counters.prim_tests
+        );
+    }
+
+    #[test]
+    fn single_partition_degenerates_to_plain() {
+        let ds = DatasetKind::Uniform.generate(300, 62);
+        let r = 0.3;
+        let opt = rtnn_knns(
+            &ds.points,
+            &ds.points,
+            &RtnnParams {
+                k: 3,
+                radius: r,
+                partitions: 1,
+                ..Default::default()
+            },
+        );
+        let plain = fixed_radius_knns(
+            &ds.points,
+            &ds.points,
+            &FixedRadiusParams {
+                k: 3,
+                radius: r,
+                ..Default::default()
+            },
+        );
+        // same completeness; test counts equal since nothing is culled
+        // (partition box inflated by r covers everything here)
+        for (a, b) in opt.neighbors.iter().zip(&plain.neighbors) {
+            assert_eq!(a.len(), b.len());
+        }
+    }
+}

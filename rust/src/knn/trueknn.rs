@@ -1,0 +1,294 @@
+//! TrueKNN — the paper's Algorithm 3, the system's headline contribution.
+//!
+//! Multi-round fixed-radius search: start from the sampled radius
+//! (Alg. 2), remove every query that filled its k-heap, double the
+//! radius, *refit* the BVH (not rebuild, §4) and re-query only the
+//! survivors, until none remain. Per-round telemetry feeds Fig 6.
+
+use super::program::KnnProgram;
+use super::start_radius::random_sample_radius;
+use super::{KnnResult, RoundStats};
+use crate::geom::{Point3, Ray};
+use crate::rt::{CostModel, HwCounters, Pipeline, Scene};
+use crate::util::Stopwatch;
+
+#[derive(Clone, Debug)]
+pub struct TrueKnnParams {
+    pub k: usize,
+    /// Override the Alg. 2 sampled start radius (Fig 7 sensitivity).
+    pub start_radius: Option<f32>,
+    /// Stop growing once the radius reaches this cap — the paper's
+    /// 99th-percentile experiment (§5.5.1) terminates at the cap and
+    /// leaves outlier queries incomplete.
+    pub radius_cap: Option<f32>,
+    pub exclude_self: bool,
+    pub seed: u64,
+    pub cost_model: CostModel,
+    /// Safety valve; the radius doubles each round so 64 rounds cover
+    /// any f32 scale.
+    pub max_rounds: usize,
+}
+
+impl Default for TrueKnnParams {
+    fn default() -> Self {
+        Self {
+            k: 5,
+            start_radius: None,
+            radius_cap: None,
+            exclude_self: true,
+            seed: 42,
+            cost_model: CostModel::default(),
+            max_rounds: 64,
+        }
+    }
+}
+
+/// Algorithm 3 over `data`, querying all of `queries` (usually the same
+/// slice — the paper's "find the k nearest neighbors of all points").
+pub fn trueknn(data: &[Point3], queries: &[Point3], params: &TrueKnnParams) -> KnnResult {
+    let wall_total = Stopwatch::start();
+    let mut result = KnnResult::new(queries.len());
+    if data.is_empty() || queries.is_empty() || params.k == 0 {
+        return result;
+    }
+
+    // A query can only ever find this many neighbors; completion must be
+    // judged against it or k > n would loop forever.
+    let max_possible = if params.exclude_self {
+        data.len().saturating_sub(1)
+    } else {
+        data.len()
+    };
+    let target = params.k.min(max_possible);
+
+    // Alg. 3 line 1: start radius via random sampling (Alg. 2).
+    let mut radius = params
+        .start_radius
+        .unwrap_or_else(|| random_sample_radius(data, params.seed));
+    if let Some(cap) = params.radius_cap {
+        radius = radius.min(cap);
+    }
+
+    let mut counters = HwCounters::new();
+    let mut scene = Scene::build(data.to_vec(), radius, &mut counters);
+    counters.context_switches += 1; // initial upload + launch
+    let mut program = KnnProgram::new(queries.len(), params.k, params.exclude_self);
+
+    let mut active: Vec<u32> = (0..queries.len() as u32).collect();
+    let mut launches = 0u64;
+    let mut round = 0usize;
+    let mut prev_pushes = 0u64;
+
+    // Alg. 3 lines 2–13.
+    while !active.is_empty() && round < params.max_rounds {
+        let round_wall = Stopwatch::start();
+        let before = counters;
+
+        // Each round re-discovers everything within the larger radius, so
+        // survivors' heaps restart clean (matches the re-query semantics
+        // of Alg. 3 line 3).
+        program.reset(&active);
+        let rays: Vec<Ray> = active
+            .iter()
+            .map(|&q| Ray::knn(queries[q as usize], q))
+            .collect();
+        Pipeline::launch(&scene, &rays, &mut program, &mut counters);
+        launches += 1;
+        let pushes = program.total_pushes();
+        counters.heap_pushes += pushes - prev_pushes;
+        prev_pushes = pushes;
+
+        // Alg. 3 lines 4–8: retire completed queries.
+        let queried = active.len();
+        active.retain(|&q| program.heaps[q as usize].len() < target);
+
+        let mut delta = counters;
+        // counter delta for this round
+        delta.rays -= before.rays;
+        delta.aabb_tests -= before.aabb_tests;
+        delta.prim_tests -= before.prim_tests;
+        delta.hits -= before.hits;
+        delta.heap_pushes -= before.heap_pushes;
+        delta.builds -= before.builds;
+        delta.build_prims -= before.build_prims;
+        delta.refits -= before.refits;
+        delta.refit_nodes -= before.refit_nodes;
+        delta.context_switches -= before.context_switches;
+        result.rounds.push(RoundStats {
+            round,
+            radius,
+            queries: queried,
+            survivors: active.len(),
+            prim_tests: delta.prim_tests,
+            sim_seconds: params.cost_model.seconds(&delta, 1),
+            wall_seconds: round_wall.elapsed_secs(),
+        });
+
+        if active.is_empty() {
+            break;
+        }
+        // 99th-percentile variant: stop once the cap radius has been
+        // searched; survivors stay incomplete by design.
+        if let Some(cap) = params.radius_cap {
+            if radius >= cap {
+                break;
+            }
+            radius = (radius * 2.0).min(cap);
+        } else {
+            radius *= 2.0;
+        }
+
+        // Alg. 3 lines 10–11: grow spheres + refit (charges 2 context
+        // switches, §6.2.1).
+        scene.refit(radius, &mut counters);
+        round += 1;
+    }
+
+    for (q, heap) in program.heaps.iter().enumerate() {
+        result.neighbors[q] = heap.sorted();
+    }
+    result.launches = launches;
+    result.counters = counters;
+    result.wall_seconds = wall_total.elapsed_secs();
+    result.finalize_sim_time(&params.cost_model);
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::DatasetKind;
+    use crate::knn::kdtree::KdTree;
+    use crate::knn::{fixed_radius_knns, FixedRadiusParams};
+
+    fn assert_exact(res: &KnnResult, points: &[Point3], k: usize) {
+        let tree = KdTree::build(points);
+        for (i, got) in res.neighbors.iter().enumerate() {
+            let want = tree.knn_excluding(points[i], k, Some(i as u32));
+            assert_eq!(got.len(), want.len(), "query {i} count");
+            for (g, w) in got.iter().zip(&want) {
+                assert!(
+                    (g.dist - w.dist).abs() < 1e-5,
+                    "query {i}: {} vs {}",
+                    g.dist,
+                    w.dist
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn exact_on_every_dataset_kind() {
+        for kind in DatasetKind::ALL {
+            let ds = kind.generate(600, 50);
+            let res = trueknn(&ds.points, &ds.points, &TrueKnnParams::default());
+            assert!(res.is_complete(5, ds.len() - 1), "{kind:?} incomplete");
+            assert_exact(&res, &ds.points, 5);
+        }
+    }
+
+    #[test]
+    fn multiple_rounds_happen_and_radius_doubles() {
+        let ds = DatasetKind::Taxi.generate(2_000, 51);
+        let res = trueknn(&ds.points, &ds.points, &TrueKnnParams::default());
+        assert!(res.rounds.len() > 2, "expected multi-round execution");
+        for w in res.rounds.windows(2) {
+            assert!((w[1].radius / w[0].radius - 2.0).abs() < 1e-3);
+            // survivors shrink monotonically
+            assert!(w[1].queries <= w[0].queries);
+            assert_eq!(w[1].queries, w[0].survivors);
+        }
+    }
+
+    #[test]
+    fn fewer_prim_tests_than_maxdist_baseline() {
+        // the paper's core result (Table 2)
+        let ds = DatasetKind::Taxi.generate(3_000, 52);
+        let k = 5;
+        let t = trueknn(&ds.points, &ds.points, &TrueKnnParams::default());
+        let prof = crate::dataset::DistanceProfile::compute(&ds, k);
+        let b = fixed_radius_knns(
+            &ds.points,
+            &ds.points,
+            &FixedRadiusParams {
+                k,
+                radius: prof.max_dist() as f32 * 1.0001,
+                ..Default::default()
+            },
+        );
+        assert!(
+            b.counters.prim_tests > 2 * t.counters.prim_tests,
+            "baseline {} vs trueknn {}",
+            b.counters.prim_tests,
+            t.counters.prim_tests
+        );
+        assert!(b.sim_seconds > t.sim_seconds);
+    }
+
+    #[test]
+    fn radius_cap_terminates_with_outliers_unresolved() {
+        let ds = DatasetKind::Taxi.generate(2_000, 53);
+        let prof = crate::dataset::DistanceProfile::compute(&ds, 5);
+        let cap = prof.percentile_dist(99.0) as f32;
+        let res = trueknn(
+            &ds.points,
+            &ds.points,
+            &TrueKnnParams {
+                radius_cap: Some(cap),
+                ..Default::default()
+            },
+        );
+        // ~99% of queries complete, outliers are (correctly) left short
+        let complete = res.neighbors.iter().filter(|n| n.len() == 5).count();
+        assert!(complete >= ds.len() * 97 / 100, "complete {complete}");
+        assert!(complete < ds.len(), "cap must leave outliers unresolved");
+        assert!(res.rounds.last().unwrap().radius <= cap * 1.0001);
+    }
+
+    #[test]
+    fn k_larger_than_dataset_terminates() {
+        let ds = DatasetKind::Uniform.generate(10, 54);
+        let res = trueknn(
+            &ds.points,
+            &ds.points,
+            &TrueKnnParams {
+                k: 50,
+                ..Default::default()
+            },
+        );
+        for n in &res.neighbors {
+            assert_eq!(n.len(), 9, "all other points found");
+        }
+    }
+
+    #[test]
+    fn empty_inputs_are_safe() {
+        let res = trueknn(&[], &[], &TrueKnnParams::default());
+        assert!(res.neighbors.is_empty());
+        let ds = DatasetKind::Uniform.generate(5, 55);
+        let res = trueknn(
+            &ds.points,
+            &ds.points,
+            &TrueKnnParams {
+                k: 0,
+                ..Default::default()
+            },
+        );
+        assert!(res.neighbors.iter().all(|n| n.is_empty()));
+    }
+
+    #[test]
+    fn explicit_start_radius_is_honored() {
+        let ds = DatasetKind::Uniform.generate(500, 56);
+        let res = trueknn(
+            &ds.points,
+            &ds.points,
+            &TrueKnnParams {
+                start_radius: Some(0.001),
+                ..Default::default()
+            },
+        );
+        assert!((res.rounds[0].radius - 0.001).abs() < 1e-9);
+        assert!(res.is_complete(5, ds.len() - 1));
+    }
+}

@@ -1,0 +1,32 @@
+//! TrueKNN: RT-core-accelerated unbounded k-nearest-neighbor search.
+//!
+//! Reproduction of "RT-kNNS Unbound: Using RT Cores to Accelerate
+//! Unrestricted Neighbor Search" (Nagarajan, Mandarapu, Kulkarni, ICS'23)
+//! on a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **Layer 3 (this crate)** — the coordinator: datasets, the simulated
+//!   RT-core pipeline (BVH build/refit/traversal with a hardware cost
+//!   model), the TrueKNN multi-round algorithm and every baseline the
+//!   paper compares against, a batching query service, and the benchmark
+//!   harness that regenerates every table and figure in the paper.
+//! - **Layer 2 (python/compile/model.py)** — JAX compute graphs for the
+//!   brute-force ("shader core" / cuML-analog) distance + top-k path,
+//!   AOT-lowered to HLO text at build time.
+//! - **Layer 1 (python/compile/kernels/)** — Pallas tiled pairwise
+//!   distance kernel feeding Layer 2, validated against a pure-jnp oracle.
+//!
+//! Python never runs on the query path: `runtime` loads the AOT artifacts
+//! through PJRT and executes them from Rust.
+
+pub mod util;
+pub mod geom;
+pub mod dataset;
+pub mod bvh;
+pub mod rt;
+pub mod knn;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench;
+pub mod exp;
+pub mod cli;
+pub mod configx;

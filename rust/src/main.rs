@@ -1,0 +1,435 @@
+//! `trueknn` — the launcher binary.
+//!
+//! ```text
+//! trueknn gen       generate a synthetic dataset analog to CSV
+//! trueknn knn       run a single kNN search (any algorithm)
+//! trueknn exp       regenerate a paper table/figure (table1|fig6|...)
+//! trueknn runtime   inspect/smoke-test the PJRT artifacts
+//! trueknn serve     run the batching query service demo
+//! ```
+
+use trueknn::cli::{Args, CliError, Command};
+use trueknn::configx::KPolicy;
+use trueknn::dataset::{Dataset, DatasetKind};
+use trueknn::exp::{self, ExpScale};
+use trueknn::knn;
+use trueknn::{log_error, log_info};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match argv.first().map(String::as_str) {
+        Some("gen") => dispatch(cmd_gen(), &argv[1..], run_gen),
+        Some("knn") => dispatch(cmd_knn(), &argv[1..], run_knn),
+        Some("exp") => dispatch(cmd_exp(), &argv[1..], run_exp),
+        Some("runtime") => dispatch(cmd_runtime(), &argv[1..], run_runtime),
+        Some("serve") => dispatch(cmd_serve(), &argv[1..], run_serve),
+        Some("--help") | Some("-h") | None => {
+            print_usage();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown command '{other}'");
+            print_usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    println!("trueknn — RT-accelerated unbounded kNN search (ICS'23 reproduction)");
+    println!("commands:");
+    println!("  gen      generate a synthetic dataset to CSV");
+    println!("  knn      run one kNN search (trueknn|baseline|rtnn|brute|kdtree)");
+    println!("  exp      regenerate a paper table/figure");
+    println!("  runtime  inspect the PJRT artifacts");
+    println!("  serve    run the batching query service demo");
+    println!("run `trueknn <command> --help` for options");
+}
+
+fn dispatch(cmd: Command, argv: &[String], f: fn(&Args) -> Result<(), String>) -> i32 {
+    match cmd.parse(argv) {
+        Ok(args) => match f(&args) {
+            Ok(()) => 0,
+            Err(e) => {
+                log_error!("{e}");
+                1
+            }
+        },
+        Err(CliError::HelpRequested) => {
+            print!("{}", cmd.usage());
+            0
+        }
+        Err(e) => {
+            eprintln!("{e}\n\n{}", cmd.usage());
+            2
+        }
+    }
+}
+
+// ------------------------------------------------------------------- gen
+
+fn cmd_gen() -> Command {
+    Command::new("gen", "generate a synthetic dataset analog to CSV")
+        .opt("dataset", "road|taxi|lidar|iono|uniform", "taxi")
+        .opt("n", "number of points", "10000")
+        .opt("seed", "PRNG seed", "42")
+        .req("out", "output CSV path")
+}
+
+fn run_gen(a: &Args) -> Result<(), String> {
+    let kind: DatasetKind = a.get_str("dataset", "taxi").parse()?;
+    let n: usize = a.get_parse("n", 10_000).map_err(|e| e.to_string())?;
+    let seed: u64 = a.get_parse("seed", 42).map_err(|e| e.to_string())?;
+    let out = a.get("out").ok_or("--out is required")?;
+    let ds = kind.generate(n, seed);
+    trueknn::dataset::io::save_csv(&ds, out).map_err(|e| e.to_string())?;
+    log_info!("wrote {} points ({}) to {out}", ds.len(), kind.name());
+    Ok(())
+}
+
+// ------------------------------------------------------------------- knn
+
+fn cmd_knn() -> Command {
+    Command::new("knn", "run a single kNN search")
+        .opt("dataset", "road|taxi|lidar|iono|uniform", "taxi")
+        .opt("input", "CSV file instead of a generator", "")
+        .opt("n", "number of points", "10000")
+        .opt("k", "neighbors per point, or 'sqrt'", "5")
+        .opt("seed", "PRNG seed", "42")
+        .opt("algo", "trueknn|baseline|rtnn|brute|kdtree", "trueknn")
+        .opt("percentile", "cap search at this percentile radius", "")
+        .opt("start-radius", "override the sampled start radius", "")
+        .flag("verify", "check results against the exact kd-tree")
+}
+
+fn load_dataset(a: &Args) -> Result<Dataset, String> {
+    let kind: DatasetKind = a.get_str("dataset", "taxi").parse()?;
+    let input = a.get_str("input", "");
+    if !input.is_empty() {
+        return trueknn::dataset::io::load_csv(&input, kind).map_err(|e| e.to_string());
+    }
+    let n: usize = a.get_parse("n", 10_000).map_err(|e| e.to_string())?;
+    let seed: u64 = a.get_parse("seed", 42).map_err(|e| e.to_string())?;
+    Ok(kind.generate(n, seed))
+}
+
+fn run_knn(a: &Args) -> Result<(), String> {
+    let ds = load_dataset(a)?;
+    let k = match a.get_str("k", "5").as_str() {
+        "sqrt" => KPolicy::SqrtN.resolve(ds.len()),
+        s => s.parse::<usize>().map_err(|_| format!("bad k '{s}'"))?,
+    };
+    let algo = a.get_str("algo", "trueknn");
+    let percentile: Option<f64> = match a.get_str("percentile", "").as_str() {
+        "" => None,
+        s => Some(s.parse().map_err(|_| format!("bad percentile '{s}'"))?),
+    };
+    let seed: u64 = a.get_parse("seed", 42).map_err(|e| e.to_string())?;
+
+    let result = match algo.as_str() {
+        "trueknn" => {
+            let radius_cap = percentile.map(|p| {
+                let prof = trueknn::dataset::DistanceProfile::compute(&ds, k);
+                (prof.percentile_dist(p) * 1.0001) as f32
+            });
+            let start_radius = match a.get_str("start-radius", "").as_str() {
+                "" => None,
+                s => Some(s.parse::<f32>().map_err(|_| "bad start-radius")?),
+            };
+            knn::trueknn(
+                &ds.points,
+                &ds.points,
+                &knn::TrueKnnParams {
+                    k,
+                    seed,
+                    radius_cap,
+                    start_radius,
+                    ..Default::default()
+                },
+            )
+        }
+        "baseline" => {
+            let prof = trueknn::dataset::DistanceProfile::compute(&ds, k);
+            let radius = (prof.percentile_dist(percentile.unwrap_or(100.0)) * 1.0001) as f32;
+            log_info!("baseline radius (maxDist rule): {radius}");
+            knn::fixed_radius_knns(
+                &ds.points,
+                &ds.points,
+                &knn::FixedRadiusParams {
+                    k,
+                    radius,
+                    ..Default::default()
+                },
+            )
+        }
+        "rtnn" => {
+            let prof = trueknn::dataset::DistanceProfile::compute(&ds, k);
+            let radius = (prof.percentile_dist(percentile.unwrap_or(100.0)) * 1.0001) as f32;
+            knn::rtnn::rtnn_knns(
+                &ds.points,
+                &ds.points,
+                &knn::rtnn::RtnnParams {
+                    k,
+                    radius,
+                    ..Default::default()
+                },
+            )
+        }
+        "brute" => knn::brute::brute_knn(&ds.points, &ds.points, k, true),
+        "kdtree" => {
+            let tree = knn::kdtree::KdTree::build(&ds.points);
+            let mut res = knn::KnnResult::new(ds.len());
+            let sw = trueknn::util::Stopwatch::start();
+            for (i, &p) in ds.points.iter().enumerate() {
+                res.neighbors[i] = tree.knn_excluding(p, k, Some(i as u32));
+            }
+            res.wall_seconds = sw.elapsed_secs();
+            res.sim_seconds = res.wall_seconds;
+            res
+        }
+        other => return Err(format!("unknown algo '{other}'")),
+    };
+
+    println!(
+        "algo={algo} dataset={} n={} k={k}",
+        ds.kind.name(),
+        ds.len()
+    );
+    println!(
+        "sim_time={:.4}s wall_time={:.4}s rounds={} launches={}",
+        result.sim_seconds,
+        result.wall_seconds,
+        result.rounds.len(),
+        result.launches
+    );
+    println!(
+        "tests: ray-sphere={} ray-aabb={} heap_pushes={} switches={}",
+        result.counters.prim_tests,
+        result.counters.aabb_tests,
+        result.counters.heap_pushes,
+        result.counters.context_switches
+    );
+    let complete = result
+        .neighbors
+        .iter()
+        .filter(|nb| nb.len() >= k.min(ds.len() - 1))
+        .count();
+    println!("complete queries: {complete}/{}", ds.len());
+
+    if a.flag("verify") {
+        let tree = knn::kdtree::KdTree::build(&ds.points);
+        let mut bad = 0;
+        for (i, got) in result.neighbors.iter().enumerate() {
+            let want = tree.knn_excluding(ds.points[i], got.len(), Some(i as u32));
+            for (g, w) in got.iter().zip(&want) {
+                if (g.dist - w.dist).abs() > 1e-4 {
+                    bad += 1;
+                    break;
+                }
+            }
+        }
+        if bad > 0 && percentile.is_none() && algo != "baseline" {
+            return Err(format!("verification FAILED for {bad} queries"));
+        }
+        println!("verification: {bad} mismatching queries (0 expected for unbounded search)");
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------------- exp
+
+fn cmd_exp() -> Command {
+    Command::new(
+        "exp",
+        "regenerate a paper table/figure: table1|table2|table3|fig3|fig4|fig5|fig6|fig7|fig8|fig9|rtnn|refit|builder|all",
+    )
+    .opt("scale", "small|full (TRUEKNN_SCALE also works)", "")
+}
+
+fn run_exp(a: &Args) -> Result<(), String> {
+    let scale = match a.get_str("scale", "").as_str() {
+        "full" => ExpScale::Full,
+        "small" => ExpScale::Small,
+        _ => ExpScale::from_env(),
+    };
+    let which = a
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all")
+        .to_string();
+    run_experiment(&which, scale)
+}
+
+/// Shared by the CLI and the bench binaries.
+fn run_experiment(which: &str, scale: ExpScale) -> Result<(), String> {
+    let all = which == "all";
+    let mut matched = false;
+    if all || which == "table1" || which == "fig3" {
+        matched = true;
+        let rows = exp::table1::run(scale, KPolicy::SqrtN);
+        exp::table1::render(&rows).print();
+        exp::figures::fig3(&rows).print();
+    }
+    if all || which == "table2" {
+        matched = true;
+        let rows = exp::table2::run(scale);
+        exp::table2::render(&rows).print();
+    }
+    if all || which == "table3" {
+        matched = true;
+        let rows = exp::table3::run(scale);
+        exp::table3::render(&rows).print();
+    }
+    if all || which == "fig4" {
+        matched = true;
+        let rows = exp::figures::fig4(scale);
+        exp::figures::render_fig4(&rows).print();
+    }
+    if all || which == "fig5" {
+        matched = true;
+        let rows = exp::figures::fig5(scale);
+        exp::figures::render_fig5(&rows, exp::workloads::mid_size(scale)).print();
+    }
+    if all || which == "fig6" {
+        matched = true;
+        let rounds = exp::figures::fig6(scale);
+        exp::figures::render_fig6(&rounds).print();
+    }
+    if all || which == "fig7" {
+        matched = true;
+        let rows = exp::figures::fig7(scale);
+        exp::figures::render_fig7(&rows).print();
+    }
+    if all || which == "fig8" {
+        matched = true;
+        let rows = exp::figures::fig8(scale);
+        exp::figures::render_pct(&rows, "Fig 8: 99th-percentile speedups (k=√N)").print();
+    }
+    if all || which == "fig9" {
+        matched = true;
+        let rows = exp::figures::fig9(scale);
+        exp::figures::render_pct(&rows, "Fig 9: 99th-percentile 3DIono (k=5)").print();
+    }
+    if all || which == "rtnn" {
+        matched = true;
+        let rows = exp::ablations::rtnn_cmp(scale, None);
+        exp::ablations::render_rtnn(&rows).print();
+    }
+    if all || which == "refit" {
+        matched = true;
+        let rows = exp::ablations::refit_vs_rebuild(&[10_000, 50_000, 200_000]);
+        exp::ablations::render_refit(&rows).print();
+    }
+    if all || which == "builder" {
+        matched = true;
+        let rows = exp::ablations::builder_ablation(scale);
+        exp::ablations::render_builder(&rows).print();
+    }
+    if !matched {
+        return Err(format!("unknown experiment '{which}'"));
+    }
+    Ok(())
+}
+
+// --------------------------------------------------------------- runtime
+
+fn cmd_runtime() -> Command {
+    Command::new("runtime", "inspect and smoke-test the PJRT artifacts")
+        .flag("smoke", "execute a tiny brute-force query through PJRT")
+}
+
+fn run_runtime(a: &Args) -> Result<(), String> {
+    let rt = trueknn::runtime::PjrtRuntime::load_default().map_err(|e| e.to_string())?;
+    println!("artifact dir: {}", rt.dir.display());
+    let mut names = rt.program_names();
+    names.sort();
+    for name in names {
+        let s = rt.spec(name).unwrap();
+        println!("  {name}: q={} n={} k={}", s.q, s.n, s.k);
+    }
+    if a.flag("smoke") {
+        let ds = DatasetKind::Uniform.generate(1_000, 1);
+        let bf = trueknn::runtime::PjrtBruteForce::new(&rt);
+        let res = bf
+            .knn(&ds.points, &ds.points[..16], 5, false)
+            .map_err(|e| e.to_string())?;
+        let tree = knn::kdtree::KdTree::build(&ds.points);
+        for (i, got) in res.neighbors.iter().enumerate() {
+            let want = tree.knn(ds.points[i], 5);
+            for (g, w) in got.iter().zip(&want) {
+                if (g.dist - w.dist).abs() > 1e-3 {
+                    return Err(format!("smoke mismatch on query {i}"));
+                }
+            }
+        }
+        println!("PJRT smoke test OK ({} launches)", res.launches);
+    }
+    Ok(())
+}
+
+// ----------------------------------------------------------------- serve
+
+fn cmd_serve() -> Command {
+    Command::new("serve", "run the batching query service demo")
+        .opt("dataset", "road|taxi|lidar|iono|uniform", "taxi")
+        .opt("n", "dataset size", "20000")
+        .opt("requests", "number of client requests", "64")
+        .opt("queries-per-request", "queries per request", "16")
+        .opt("k", "neighbors per query", "5")
+        .flag("pjrt", "use the PJRT brute path when routed")
+}
+
+fn run_serve(a: &Args) -> Result<(), String> {
+    use trueknn::coordinator::{KnnRequest, Service, ServiceConfig};
+    let kind: DatasetKind = a.get_str("dataset", "taxi").parse()?;
+    let n: usize = a.get_parse("n", 20_000).map_err(|e| e.to_string())?;
+    let n_req: usize = a.get_parse("requests", 64).map_err(|e| e.to_string())?;
+    let qpr: usize = a
+        .get_parse("queries-per-request", 16)
+        .map_err(|e| e.to_string())?;
+    let k: usize = a.get_parse("k", 5).map_err(|e| e.to_string())?;
+
+    let ds = kind.generate(n, 42);
+    let cfg = ServiceConfig {
+        use_pjrt: a.flag("pjrt"),
+        ..Default::default()
+    };
+    let (svc, handle) = Service::start(ds.points.clone(), cfg);
+
+    let sw = trueknn::util::Stopwatch::start();
+    let mut rng = trueknn::util::Pcg32::new(7);
+    let mut receivers = Vec::new();
+    for id in 0..n_req as u64 {
+        let queries: Vec<_> = (0..qpr)
+            .map(|_| ds.points[rng.below_usize(ds.len())])
+            .collect();
+        receivers.push(
+            handle
+                .submit(KnnRequest::new(id, queries, k))
+                .map_err(|e| e.to_string())?,
+        );
+    }
+    let mut served = 0;
+    for rx in receivers {
+        let resp = rx.recv().map_err(|e| e.to_string())?;
+        served += resp.neighbors.len();
+    }
+    let elapsed = sw.elapsed_secs();
+    let m = handle.metrics().snapshot();
+    println!(
+        "served {served} queries in {elapsed:.3}s ({:.0} q/s)",
+        served as f64 / elapsed
+    );
+    println!(
+        "batches={} rt={} brute={} mean_latency={:.2}ms max_latency={:.2}ms",
+        m.batches,
+        m.rt_requests,
+        m.brute_requests,
+        m.latency_mean_s * 1e3,
+        m.latency_max_s * 1e3
+    );
+    svc.shutdown();
+    Ok(())
+}

@@ -1,0 +1,136 @@
+//! Simulated-GPU-time model over `HwCounters`.
+//!
+//! The unit costs are calibrated to the qualitative regime of the RTX
+//! 2060 testbed the paper used (§5.2, §6.2.1):
+//! - a hardware ray-AABB test is the cheapest event;
+//! - a software ray-sphere `Intersection` program invocation costs a few
+//!   times more (it leaves the RT core for the SM);
+//! - maintaining the k-nearest list costs per heap operation — the
+//!   "sorting time" of §3.4;
+//! - a BVH *refit* is 20% cheaper per primitive than a *build*, matching
+//!   the paper's measured 10–25% (§4);
+//! - a host↔device context switch is microseconds — irrelevant for big
+//!   rounds, dominant when a round queries 3 points (§6.2.1 / Fig 9).
+//!
+//! Absolute values are not the claim (see DESIGN.md §7); every experiment
+//! reports simulated time and wall-clock side by side.
+
+use super::HwCounters;
+
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Seconds per hardware ray-AABB test.
+    pub c_aabb: f64,
+    /// Seconds per software ray-sphere test.
+    pub c_prim: f64,
+    /// Seconds per k-heap push (candidate sorting).
+    pub c_heap: f64,
+    /// Seconds per primitive at BVH build.
+    pub c_build: f64,
+    /// Seconds per node at BVH refit.
+    pub c_refit: f64,
+    /// Seconds per host↔device context switch.
+    pub c_switch: f64,
+    /// Fixed per-launch overhead (kernel dispatch).
+    pub c_launch: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self {
+            c_aabb: 0.4e-9,
+            c_prim: 2.0e-9,
+            c_heap: 4.0e-9,
+            c_build: 25.0e-9,
+            // A BVH over n prims with leaf size 4 has ~n/2 nodes, so a
+            // whole-tree refit costs ~0.8× a build — inside the paper's
+            // measured "refit is 10–25% faster than rebuild" band (§4).
+            // (On this CPU substrate the *wall-clock* refit is ~30×
+            // cheaper; the model pins the GPU ratio the paper reports.)
+            c_refit: 40.0e-9,
+            c_switch: 30.0e-6,
+            c_launch: 10.0e-6,
+        }
+    }
+}
+
+impl CostModel {
+    /// Simulated seconds for a counter block; `launches` = number of
+    /// optixLaunch invocations the block spans.
+    pub fn seconds(&self, c: &HwCounters, launches: u64) -> f64 {
+        self.c_aabb * c.aabb_tests as f64
+            + self.c_prim * c.prim_tests as f64
+            + self.c_heap * c.heap_pushes as f64
+            + self.c_build * c.build_prims as f64
+            + self.c_refit * c.refit_nodes as f64
+            + self.c_switch * c.context_switches as f64
+            + self.c_launch * launches as f64
+    }
+
+    /// Cost of one full BVH build over `n` primitives vs one refit of the
+    /// same tree — used by the A1 ablation (refit 10–25% cheaper).
+    pub fn build_cost(&self, prims: u64) -> f64 {
+        self.c_build * prims as f64
+    }
+
+    pub fn refit_cost(&self, nodes: u64) -> f64 {
+        self.c_refit * nodes as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn costs_are_additive() {
+        let m = CostModel::default();
+        let a = HwCounters {
+            prim_tests: 1_000,
+            ..Default::default()
+        };
+        let b = HwCounters {
+            aabb_tests: 1_000,
+            ..Default::default()
+        };
+        let mut ab = a;
+        ab.add(&b);
+        let sum = m.seconds(&a, 1) + m.seconds(&b, 1);
+        assert!((m.seconds(&ab, 2) - sum).abs() < 1e-15);
+    }
+
+    #[test]
+    fn software_tests_cost_more_than_hardware() {
+        let m = CostModel::default();
+        assert!(m.c_prim > m.c_aabb);
+    }
+
+    #[test]
+    fn refit_is_10_to_25_pct_cheaper_than_build() {
+        let m = CostModel::default();
+        // a BVH over n prims with leaf_size 4 has ~2·(n/4) ≈ n/2 nodes;
+        // the simulated refit/rebuild ratio must land in the paper's
+        // measured band (refit 10–25% faster, i.e. ratio 0.75–0.90).
+        let n = 100_000u64;
+        let nodes = 2 * n / 4;
+        let ratio = m.refit_cost(nodes) / m.build_cost(n);
+        assert!((0.72..=0.92).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn context_switch_dominates_tiny_rounds() {
+        let m = CostModel::default();
+        // a round testing 3 rays against a handful of prims…
+        let tiny = HwCounters {
+            rays: 3,
+            aabb_tests: 60,
+            prim_tests: 40,
+            context_switches: 2,
+            ..Default::default()
+        };
+        let work = m.c_aabb * 60.0 + m.c_prim * 40.0;
+        let overhead = m.c_switch * 2.0 + m.c_launch;
+        assert!(overhead > 100.0 * work, "switch must dominate tiny rounds");
+        assert!(m.seconds(&tiny, 1) > overhead);
+    }
+}

@@ -1,0 +1,75 @@
+//! Hardware event counters — the simulator's ground truth.
+//!
+//! Table 2 of the paper compares ray-sphere ("ray-object") intersection
+//! test counts; §5.3.1 notes ray-AABB tests happen in hardware and are
+//! unobservable on the real GPU. Our simulator observes both.
+
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct HwCounters {
+    /// Rays launched (one per active query point per round).
+    pub rays: u64,
+    /// Ray-AABB containment tests (the RT core's hardware unit).
+    pub aabb_tests: u64,
+    /// Ray-sphere tests (the software `Intersection` program).
+    pub prim_tests: u64,
+    /// Sphere hits recorded (neighbor candidates found).
+    pub hits: u64,
+    /// Bounded-heap insertions — the paper's "sorting time" proxy.
+    pub heap_pushes: u64,
+    /// BVH full builds, and primitives touched by them.
+    pub builds: u64,
+    pub build_prims: u64,
+    /// BVH refits, and nodes touched by them.
+    pub refits: u64,
+    pub refit_nodes: u64,
+    /// Host↔device context switches (§6.2.1: two per round — device→host
+    /// to grow the boxes, host→device to relaunch RayGen).
+    pub context_switches: u64,
+}
+
+impl HwCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Accumulate another counter block (used to sum per-round counters).
+    pub fn add(&mut self, o: &HwCounters) {
+        self.rays += o.rays;
+        self.aabb_tests += o.aabb_tests;
+        self.prim_tests += o.prim_tests;
+        self.hits += o.hits;
+        self.heap_pushes += o.heap_pushes;
+        self.builds += o.builds;
+        self.build_prims += o.build_prims;
+        self.refits += o.refits;
+        self.refit_nodes += o.refit_nodes;
+        self.context_switches += o.context_switches;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_accumulates_all_fields() {
+        let mut a = HwCounters {
+            rays: 1,
+            aabb_tests: 2,
+            prim_tests: 3,
+            hits: 4,
+            heap_pushes: 5,
+            builds: 6,
+            build_prims: 7,
+            refits: 8,
+            refit_nodes: 9,
+            context_switches: 10,
+        };
+        let b = a;
+        a.add(&b);
+        assert_eq!(a.rays, 2);
+        assert_eq!(a.aabb_tests, 4);
+        assert_eq!(a.prim_tests, 6);
+        assert_eq!(a.context_switches, 20);
+    }
+}

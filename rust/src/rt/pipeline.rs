@@ -1,0 +1,215 @@
+//! `optixLaunch` equivalent: run a batch of rays through the scene's BVH
+//! and invoke the user's software `Intersection` program on hits.
+//!
+//! The paper's kNN rays are point-like (origin = query point, length
+//! FLOAT_MIN, §2.3), so the hardware ray-AABB test degenerates to a
+//! point-in-box test, and the software ray-sphere test to a point-in-
+//! sphere test. Both are counted per invocation.
+//!
+//! §Perf notes: the traversal loop is the simulator's hot path (billions
+//! of events per baseline run). It reads sphere centers from the scene's
+//! *leaf-ordered* copy (contiguous within a leaf), reuses one traversal
+//! stack across all rays of a launch, computes the squared distance once
+//! and passes it to the program, and only touches the primitive-id
+//! remapping table on an actual hit.
+
+use super::{HwCounters, Scene};
+use crate::geom::{dist2, Ray};
+
+/// The user's software intersection program (OptiX `Intersection`). The
+/// paper implements the whole kNN logic here, with AnyHit/ClosestHit
+/// disabled for speed (§4) — we mirror that structure. `hit` fires once
+/// per ray-sphere test that succeeds (origin inside the sphere).
+pub trait IntersectionProgram {
+    fn hit(&mut self, ray: &Ray, prim: u32, dist2: f32);
+}
+
+/// Stateless launcher; all state lives in the scene and the program.
+pub struct Pipeline;
+
+impl Pipeline {
+    /// Launch `rays` against `scene`. Per ray: traverse the BVH (counting
+    /// one hardware AABB test per node visited), then run the software
+    /// intersection test on each leaf primitive (counting one software
+    /// test each). Results accumulate in `program`.
+    pub fn launch<P: IntersectionProgram>(
+        scene: &Scene,
+        rays: &[Ray],
+        program: &mut P,
+        counters: &mut HwCounters,
+    ) {
+        let r2 = scene.radius * scene.radius;
+        let nodes = &scene.bvh.nodes;
+        let ordered = &scene.ordered_centers;
+        let prim_ids = &scene.bvh.prim_order;
+        if nodes.is_empty() {
+            counters.rays += rays.len() as u64;
+            return;
+        }
+        let root = scene.bvh.root;
+        let mut stack: Vec<u32> = Vec::with_capacity(128);
+
+        let mut aabb_tests = 0u64;
+        let mut prim_tests = 0u64;
+        let mut hits = 0u64;
+        for ray in rays {
+            counters.rays += 1;
+            let origin = ray.origin;
+            stack.clear();
+            stack.push(root);
+            while let Some(idx) = stack.pop() {
+                let node = &nodes[idx as usize];
+                aabb_tests += 1;
+                if !node.aabb.contains(origin) {
+                    continue;
+                }
+                if node.is_leaf() {
+                    let first = node.first_prim as usize;
+                    let count = node.prim_count as usize;
+                    prim_tests += count as u64;
+                    for j in first..first + count {
+                        let d2 = dist2(ordered[j], origin);
+                        if d2 <= r2 {
+                            hits += 1;
+                            program.hit(ray, prim_ids[j], d2);
+                        }
+                    }
+                } else {
+                    stack.push(node.left);
+                    stack.push(node.right);
+                }
+            }
+        }
+        counters.aabb_tests += aabb_tests;
+        counters.prim_tests += prim_tests;
+        counters.hits += hits;
+    }
+}
+
+/// A trivial program that records hit primitive ids — used by tests and
+/// by the fixed-radius *range query* public API.
+#[derive(Default)]
+pub struct CollectHits {
+    pub per_query: Vec<Vec<u32>>,
+}
+
+impl CollectHits {
+    pub fn new(n_queries: usize) -> Self {
+        Self {
+            per_query: vec![Vec::new(); n_queries],
+        }
+    }
+}
+
+impl IntersectionProgram for CollectHits {
+    fn hit(&mut self, ray: &Ray, prim: u32, _dist2: f32) {
+        self.per_query[ray.query_id as usize].push(prim);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geom::dist;
+    use crate::geom::Point3;
+    use crate::util::{prop, Pcg32};
+
+    /// Brute-force oracle: all points within r of q.
+    fn oracle(pts: &[Point3], q: Point3, r: f32) -> Vec<u32> {
+        let mut v: Vec<u32> = (0..pts.len() as u32)
+            .filter(|&i| dist(pts[i as usize], q) <= r)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    #[test]
+    fn launch_matches_brute_force_oracle() {
+        prop::check("pipeline ≡ brute force range query", 25, |rng| {
+            let n = 16 + rng.below(300) as usize;
+            let dims2 = rng.f32() < 0.3;
+            let pts = prop::random_cloud(rng, n, dims2);
+            let r = 0.02 + rng.f32() * 0.2;
+            let mut counters = HwCounters::new();
+            let scene = Scene::build(pts.clone(), r, &mut counters);
+            let n_q = 10.min(n);
+            let rays: Vec<Ray> = (0..n_q)
+                .map(|i| Ray::knn(pts[i * (n / n_q)], i as u32))
+                .collect();
+            let mut prog = CollectHits::new(n_q);
+            Pipeline::launch(&scene, &rays, &mut prog, &mut counters);
+            for (qi, ray) in rays.iter().enumerate() {
+                let mut got = prog.per_query[qi].clone();
+                got.sort_unstable();
+                let want = oracle(&pts, ray.origin, r);
+                if got != want {
+                    return Err(format!("query {qi}: got {got:?} want {want:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn counters_scale_with_radius() {
+        let mut rng = Pcg32::new(6);
+        let pts = prop::random_cloud(&mut rng, 1_000, false);
+        let rays: Vec<Ray> = pts
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| Ray::knn(p, i as u32))
+            .collect();
+
+        let run = |r: f32| {
+            let mut c = HwCounters::new();
+            let scene = Scene::build(pts.clone(), r, &mut c);
+            let mut prog = CollectHits::new(pts.len());
+            Pipeline::launch(&scene, &rays, &mut prog, &mut c);
+            c
+        };
+        let small = run(0.01);
+        let large = run(0.5);
+        assert!(
+            large.prim_tests > 10 * small.prim_tests,
+            "large radius must blow up software tests: {} vs {}",
+            large.prim_tests,
+            small.prim_tests
+        );
+        assert!(large.hits > small.hits);
+        assert_eq!(small.rays, 1_000);
+    }
+
+    #[test]
+    fn every_ray_hits_its_own_sphere() {
+        // each data point's own sphere always contains it (dist 0)
+        let mut rng = Pcg32::new(7);
+        let pts = prop::random_cloud(&mut rng, 200, false);
+        let mut c = HwCounters::new();
+        let scene = Scene::build(pts.clone(), 1e-6, &mut c);
+        let rays: Vec<Ray> = pts
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| Ray::knn(p, i as u32))
+            .collect();
+        let mut prog = CollectHits::new(pts.len());
+        Pipeline::launch(&scene, &rays, &mut prog, &mut c);
+        for (i, hits) in prog.per_query.iter().enumerate() {
+            assert!(
+                hits.contains(&(i as u32)),
+                "ray {i} must intersect its own sphere"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_scene_launch_is_safe() {
+        let mut c = HwCounters::new();
+        let scene = Scene::build(Vec::new(), 0.1, &mut c);
+        let rays = vec![Ray::knn(Point3::ZERO, 0)];
+        let mut prog = CollectHits::new(1);
+        Pipeline::launch(&scene, &rays, &mut prog, &mut c);
+        assert_eq!(c.rays, 1);
+        assert_eq!(c.prim_tests, 0);
+        assert!(prog.per_query[0].is_empty());
+    }
+}

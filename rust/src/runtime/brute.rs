@@ -1,0 +1,109 @@
+//! Brute-force kNN through the AOT artifacts — the cuML analog of the
+//! paper's Fig 4 baseline, running entirely on the PJRT "shader core"
+//! path (Pallas distance kernel + top-k, no BVH, no RT pipeline).
+//!
+//! Handles the impedance mismatch between arbitrary (queries, data, k)
+//! requests and the fixed-shape programs: data is padded with the
+//! manifest's sentinel, queries are chunked to the program's batch size,
+//! oversize datasets are sharded across multiple executions and merged.
+
+use super::client::{PjrtRuntime, RuntimeError};
+use crate::geom::Point3;
+use crate::knn::{KHeap, KnnResult};
+use crate::util::Stopwatch;
+
+pub struct PjrtBruteForce<'rt> {
+    rt: &'rt PjrtRuntime,
+}
+
+impl<'rt> PjrtBruteForce<'rt> {
+    pub fn new(rt: &'rt PjrtRuntime) -> Self {
+        Self { rt }
+    }
+
+    /// Exact kNN of `queries` against `data`; `exclude_self` drops hits
+    /// whose index equals the query's own index (dataset self-queries).
+    pub fn knn(
+        &self,
+        data: &[Point3],
+        queries: &[Point3],
+        k: usize,
+        exclude_self: bool,
+    ) -> Result<KnnResult, RuntimeError> {
+        let wall = Stopwatch::start();
+        let mut result = KnnResult::new(queries.len());
+        if data.is_empty() || queries.is_empty() || k == 0 {
+            return Ok(result);
+        }
+        let sentinel = self.rt.manifest.pad_sentinel;
+
+        // Self-exclusion consumes one extra top-k slot; ask the program
+        // for k+1 and trim after.
+        let want_k = if exclude_self { k + 1 } else { k };
+        let spec = match self.rt.manifest.best_brute_fit(data.len(), want_k) {
+            Some(s) => s.clone(),
+            None => self
+                .rt
+                .manifest
+                .largest_brute()
+                .ok_or_else(|| RuntimeError::UnknownProgram("brute_knn".into()))?
+                .clone(),
+        };
+        if spec.k < want_k {
+            return Err(RuntimeError::Shape(format!(
+                "no artifact with k >= {want_k} (largest is {})",
+                spec.k
+            )));
+        }
+
+        // Shard data across fixed-size windows; per query merge shard
+        // results in a bounded heap.
+        let mut heaps: Vec<KHeap> = (0..queries.len()).map(|_| KHeap::new(k)).collect();
+        let n_shards = data.len().div_ceil(spec.n);
+        for shard in 0..n_shards {
+            let lo = shard * spec.n;
+            let hi = (lo + spec.n).min(data.len());
+            let mut dbuf = vec![sentinel; spec.n * 3];
+            for (i, p) in data[lo..hi].iter().enumerate() {
+                dbuf[i * 3] = p.x;
+                dbuf[i * 3 + 1] = p.y;
+                dbuf[i * 3 + 2] = p.z;
+            }
+            // chunk queries to the program's batch size
+            for (ci, chunk) in queries.chunks(spec.q).enumerate() {
+                let mut qbuf = vec![0.0f32; spec.q * 3];
+                for (i, p) in chunk.iter().enumerate() {
+                    qbuf[i * 3] = p.x;
+                    qbuf[i * 3 + 1] = p.y;
+                    qbuf[i * 3 + 2] = p.z;
+                }
+                let (dists, idx) = self.rt.run_brute_knn(&spec.name, &qbuf, &dbuf)?;
+                result.launches += 1;
+                for (qi_local, _) in chunk.iter().enumerate() {
+                    let qi = ci * spec.q + qi_local;
+                    for j in 0..spec.k {
+                        let d = dists[qi_local * spec.k + j];
+                        let raw = idx[qi_local * spec.k + j];
+                        if raw < 0 || (raw as usize) >= hi - lo {
+                            continue; // padding row
+                        }
+                        let global = (lo + raw as usize) as u32;
+                        if exclude_self && global as usize == qi {
+                            continue;
+                        }
+                        heaps[qi].push(d * d, global);
+                    }
+                }
+                result.counters.prim_tests += (chunk.len() * (hi - lo)) as u64;
+            }
+        }
+        for (qi, heap) in heaps.into_iter().enumerate() {
+            result.counters.heap_pushes += heap.pushes;
+            result.neighbors[qi] = heap.into_sorted();
+        }
+        result.counters.rays = queries.len() as u64;
+        result.wall_seconds = wall.elapsed_secs();
+        result.sim_seconds = result.wall_seconds; // PJRT path: measured, not modeled
+        Ok(result)
+    }
+}

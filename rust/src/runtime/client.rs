@@ -1,0 +1,163 @@
+//! PJRT client wrapper: compile HLO-text artifacts once, execute many
+//! times. Mirrors /opt/xla-example/load_hlo with a program registry on
+//! top.
+
+use super::manifest::{ArtifactSpec, Manifest};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("xla: {0}")]
+    Xla(String),
+    #[error("manifest: {0}")]
+    Manifest(#[from] super::manifest::ManifestError),
+    #[error("unknown program '{0}'")]
+    UnknownProgram(String),
+    #[error("artifact dir not found; run `make artifacts` first")]
+    NoArtifacts,
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}
+
+/// One compiled program + its lowering-time shape contract.
+pub struct Program {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The process-wide PJRT runtime: CPU client + compiled program registry.
+pub struct PjrtRuntime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    programs: HashMap<String, Program>,
+    pub manifest: Manifest,
+    pub dir: PathBuf,
+}
+
+impl PjrtRuntime {
+    /// Load every artifact in `dir` (compiling is ~ms per program on the
+    /// CPU plugin; done once at startup, never on the query path).
+    pub fn load(dir: &Path) -> Result<PjrtRuntime, RuntimeError> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut programs = HashMap::new();
+        for spec in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(dir.join(&spec.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            programs.insert(
+                spec.name.clone(),
+                Program {
+                    spec: spec.clone(),
+                    exe,
+                },
+            );
+        }
+        Ok(PjrtRuntime {
+            client,
+            programs,
+            manifest,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Load from the default artifact location.
+    pub fn load_default() -> Result<PjrtRuntime, RuntimeError> {
+        let dir = super::find_artifact_dir().ok_or(RuntimeError::NoArtifacts)?;
+        Self::load(&dir)
+    }
+
+    pub fn program_names(&self) -> Vec<&str> {
+        self.programs.keys().map(String::as_str).collect()
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.programs.get(name).map(|p| &p.spec)
+    }
+
+    /// Execute a brute_knn program: `queries` is Q*3 floats, `data` is
+    /// N*3 floats, both exactly the lowered shape (the caller pads).
+    /// Returns (dists [Q*k], idx [Q*k]) row-major.
+    pub fn run_brute_knn(
+        &self,
+        name: &str,
+        queries: &[f32],
+        data: &[f32],
+    ) -> Result<(Vec<f32>, Vec<i32>), RuntimeError> {
+        let prog = self
+            .programs
+            .get(name)
+            .ok_or_else(|| RuntimeError::UnknownProgram(name.into()))?;
+        let (q, n) = (prog.spec.q, prog.spec.n);
+        if queries.len() != q * 3 {
+            return Err(RuntimeError::Shape(format!(
+                "queries: got {} floats, program wants {}",
+                queries.len(),
+                q * 3
+            )));
+        }
+        if data.len() != n * 3 {
+            return Err(RuntimeError::Shape(format!(
+                "data: got {} floats, program wants {}",
+                data.len(),
+                n * 3
+            )));
+        }
+        let ql = xla::Literal::vec1(queries).reshape(&[q as i64, 3])?;
+        let dl = xla::Literal::vec1(data).reshape(&[n as i64, 3])?;
+        let result = prog.exe.execute::<xla::Literal>(&[ql, dl])?[0][0].to_literal_sync()?;
+        let (dists, idx) = result.to_tuple2()?;
+        Ok((dists.to_vec::<f32>()?, idx.to_vec::<i32>()?))
+    }
+
+    /// Execute a radius_count program. Returns per-query counts [Q].
+    pub fn run_radius_count(
+        &self,
+        name: &str,
+        queries: &[f32],
+        data: &[f32],
+        radius: f32,
+    ) -> Result<Vec<i32>, RuntimeError> {
+        let prog = self
+            .programs
+            .get(name)
+            .ok_or_else(|| RuntimeError::UnknownProgram(name.into()))?;
+        let (q, n) = (prog.spec.q, prog.spec.n);
+        if queries.len() != q * 3 || data.len() != n * 3 {
+            return Err(RuntimeError::Shape(format!(
+                "radius_count wants q={q} n={n}, got {}/{}",
+                queries.len() / 3,
+                data.len() / 3
+            )));
+        }
+        let ql = xla::Literal::vec1(queries).reshape(&[q as i64, 3])?;
+        let dl = xla::Literal::vec1(data).reshape(&[n as i64, 3])?;
+        let rl = xla::Literal::scalar(radius);
+        let result = prog.exe.execute::<xla::Literal>(&[ql, dl, rl])?[0][0].to_literal_sync()?;
+        let counts = result.to_tuple1()?;
+        Ok(counts.to_vec::<i32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Integration tests that need real artifacts live in
+    // rust/tests/runtime_roundtrip.rs (they require `make artifacts`).
+    use super::*;
+
+    #[test]
+    fn missing_dir_is_reported() {
+        match PjrtRuntime::load(Path::new("/nonexistent")) {
+            Err(RuntimeError::Manifest(_)) => {}
+            Err(other) => panic!("wrong error: {other}"),
+            Ok(_) => panic!("load must fail for a missing dir"),
+        }
+    }
+}

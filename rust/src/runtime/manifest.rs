@@ -1,0 +1,164 @@
+//! Artifact manifest (`artifacts/manifest.json`) — the contract between
+//! `python/compile/aot.py` and the Rust runtime.
+
+use crate::configx::json::{parse, Json};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    BruteKnn,
+    RadiusCount,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub kind: ArtifactKind,
+    /// Query batch size the program was lowered for.
+    pub q: usize,
+    /// Data size the program was lowered for.
+    pub n: usize,
+    /// Top-k width (0 for radius_count).
+    pub k: usize,
+    pub file: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub pad_sentinel: f32,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("json: {0}")]
+    Json(#[from] crate::configx::json::JsonError),
+    #[error("manifest missing field: {0}")]
+    Missing(&'static str),
+    #[error("unknown artifact kind: {0}")]
+    UnknownKind(String),
+}
+
+impl Manifest {
+    pub fn load(dir: &std::path::Path) -> Result<Manifest, ManifestError> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest, ManifestError> {
+        let v = parse(text)?;
+        let pad_sentinel = v
+            .get("pad_sentinel")
+            .and_then(Json::as_f64)
+            .ok_or(ManifestError::Missing("pad_sentinel"))? as f32;
+        let arts = v
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or(ManifestError::Missing("artifacts"))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let kind_str = a
+                .get("kind")
+                .and_then(Json::as_str)
+                .ok_or(ManifestError::Missing("kind"))?;
+            let kind = match kind_str {
+                "brute_knn" => ArtifactKind::BruteKnn,
+                "radius_count" => ArtifactKind::RadiusCount,
+                other => return Err(ManifestError::UnknownKind(other.into())),
+            };
+            artifacts.push(ArtifactSpec {
+                name: a
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or(ManifestError::Missing("name"))?
+                    .to_string(),
+                kind,
+                q: a.get("q").and_then(Json::as_usize).ok_or(ManifestError::Missing("q"))?,
+                n: a.get("n").and_then(Json::as_usize).ok_or(ManifestError::Missing("n"))?,
+                k: a.get("k").and_then(Json::as_usize).unwrap_or(0),
+                file: a
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or(ManifestError::Missing("file"))?
+                    .to_string(),
+            });
+        }
+        Ok(Manifest {
+            pad_sentinel,
+            artifacts,
+        })
+    }
+
+    /// Smallest brute_knn variant able to serve `n` data points and `k`
+    /// neighbors (queries are chunked to the variant's q).
+    pub fn best_brute_fit(&self, n: usize, k: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::BruteKnn && a.n >= n && a.k >= k)
+            .min_by_key(|a| (a.n, a.q))
+    }
+
+    /// Largest brute_knn variant (fallback when `n` exceeds all variants;
+    /// the caller shards the data).
+    pub fn largest_brute(&self) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::BruteKnn)
+            .max_by_key(|a| a.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "pad_sentinel": 1e9,
+      "artifacts": [
+        {"name": "brute_knn_q128_n1024_k32", "kind": "brute_knn",
+         "q": 128, "n": 1024, "k": 32, "file": "a.hlo.txt"},
+        {"name": "brute_knn_q256_n16384_k32", "kind": "brute_knn",
+         "q": 256, "n": 16384, "k": 32, "file": "b.hlo.txt"},
+        {"name": "radius_count_q128_n4096", "kind": "radius_count",
+         "q": 128, "n": 4096, "k": 0, "file": "c.hlo.txt"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.pad_sentinel, 1e9);
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.artifacts[0].kind, ArtifactKind::BruteKnn);
+        assert_eq!(m.artifacts[2].kind, ArtifactKind::RadiusCount);
+    }
+
+    #[test]
+    fn best_fit_picks_smallest_sufficient() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.best_brute_fit(500, 5).unwrap().n, 1024);
+        assert_eq!(m.best_brute_fit(5000, 5).unwrap().n, 16384);
+        assert!(m.best_brute_fit(100_000, 5).is_none());
+        assert!(m.best_brute_fit(100, 64).is_none(), "k too large");
+        assert_eq!(m.largest_brute().unwrap().n, 16384);
+    }
+
+    #[test]
+    fn rejects_bad_kind() {
+        let bad = SAMPLE.replace("radius_count", "warp_drive");
+        assert!(matches!(
+            Manifest::parse(&bad),
+            Err(ManifestError::UnknownKind(_))
+        ));
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        if let Some(dir) = crate::runtime::find_artifact_dir() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.artifacts.is_empty());
+            assert!(m.best_brute_fit(1024, 5).is_some());
+        }
+    }
+}

@@ -1,0 +1,34 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//! Python never runs here — the artifacts are self-contained XLA
+//! programs compiled once per process by the PJRT CPU client.
+
+mod manifest;
+mod client;
+mod brute;
+
+pub use brute::PjrtBruteForce;
+pub use client::{PjrtRuntime, RuntimeError};
+pub use manifest::{ArtifactKind, ArtifactSpec, Manifest};
+
+/// Default artifact directory relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// Locate the artifact directory: `TRUEKNN_ARTIFACTS` env var, else
+/// `artifacts/` relative to the working directory, else relative to the
+/// crate root (so `cargo test` finds it from any cwd).
+pub fn find_artifact_dir() -> Option<std::path::PathBuf> {
+    if let Ok(dir) = std::env::var("TRUEKNN_ARTIFACTS") {
+        let p = std::path::PathBuf::from(dir);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    for base in [".", env!("CARGO_MANIFEST_DIR")] {
+        let p = std::path::Path::new(base).join(DEFAULT_ARTIFACT_DIR);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    None
+}

@@ -1,0 +1,116 @@
+//! Minimal leveled logger (the `log`/`env_logger` pair is unavailable
+//! offline). Level comes from `TRUEKNN_LOG` (error|warn|info|debug|trace),
+//! defaulting to `info`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    fn parse(s: &str) -> Level {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Info,
+        }
+    }
+
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
+static INIT: OnceLock<()> = OnceLock::new();
+
+pub fn max_level() -> Level {
+    INIT.get_or_init(|| {
+        let lvl = std::env::var("TRUEKNN_LOG")
+            .map(|s| Level::parse(&s))
+            .unwrap_or(Level::Info);
+        LEVEL.store(lvl as u8, Ordering::Relaxed);
+    });
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+/// Override the level programmatically (used by `--verbose`/`--quiet`).
+pub fn set_level(lvl: Level) {
+    INIT.get_or_init(|| ());
+    LEVEL.store(lvl as u8, Ordering::Relaxed);
+}
+
+pub fn log(lvl: Level, module: &str, msg: std::fmt::Arguments<'_>) {
+    if lvl <= max_level() {
+        eprintln!("[{} {}] {}", lvl.tag(), module, msg);
+    }
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Info, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Warn, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Debug, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Error, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(Level::parse("error"), Level::Error);
+        assert_eq!(Level::parse("TRACE"), Level::Trace);
+        assert_eq!(Level::parse("bogus"), Level::Info);
+    }
+
+    #[test]
+    fn set_level_wins() {
+        set_level(Level::Warn);
+        assert_eq!(max_level(), Level::Warn);
+        set_level(Level::Info);
+        assert_eq!(max_level(), Level::Info);
+    }
+}

@@ -1,0 +1,16 @@
+//! Shared utility substrates: PRNG, timing, statistics, logging and a
+//! small property-testing harness.
+//!
+//! The build environment is fully offline, so crates like `rand`,
+//! `criterion` and `proptest` are unavailable; these modules provide the
+//! subset of their functionality the rest of the library needs.
+
+pub mod rng;
+pub mod timer;
+pub mod stats;
+pub mod logger;
+pub mod prop;
+
+pub use rng::{Pcg32, SplitMix64};
+pub use stats::{percentile, OnlineStats};
+pub use timer::Stopwatch;

@@ -1,0 +1,76 @@
+//! A tiny property-based testing harness (offline substitute for
+//! `proptest`). Each property runs `cases` times with a fresh seeded PRNG;
+//! failures report the seed so the exact case can be replayed.
+//!
+//! ```no_run
+//! use trueknn::util::prop::check;
+//! check("sorted stays sorted", 64, |rng| {
+//!     let mut v: Vec<u32> = (0..100).map(|_| rng.next_u32()).collect();
+//!     v.sort_unstable();
+//!     if v.windows(2).all(|w| w[0] <= w[1]) { Ok(()) } else { Err("out of order".into()) }
+//! });
+//! ```
+
+use super::rng::Pcg32;
+
+/// Run `prop` for `cases` independent seeded cases; panic with the failing
+/// seed on the first failure. The base seed can be pinned via
+/// `TRUEKNN_PROP_SEED` to replay a failure.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    let base: u64 = std::env::var("TRUEKNN_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Pcg32::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case} (replay with TRUEKNN_PROP_SEED={base}): {msg}"
+            );
+        }
+    }
+}
+
+/// Generate a random point cloud in the unit cube; `dims2` pins z = 0 to
+/// mimic the paper's 2D-in-3D handling.
+pub fn random_cloud(rng: &mut Pcg32, n: usize, dims2: bool) -> Vec<crate::geom::Point3> {
+    (0..n)
+        .map(|_| {
+            crate::geom::Point3::new(
+                rng.f32(),
+                rng.f32(),
+                if dims2 { 0.0 } else { rng.f32() },
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("tautology", 16, |_| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'contradiction' failed")]
+    fn failing_property_panics_with_seed() {
+        check("contradiction", 4, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn random_cloud_respects_dims() {
+        let mut rng = Pcg32::new(3);
+        let c = random_cloud(&mut rng, 50, true);
+        assert_eq!(c.len(), 50);
+        assert!(c.iter().all(|p| p.z == 0.0));
+        let c3 = random_cloud(&mut rng, 50, false);
+        assert!(c3.iter().any(|p| p.z != 0.0));
+    }
+}

@@ -1,0 +1,88 @@
+//! Wall-clock timing helpers.
+
+use std::time::{Duration, Instant};
+
+/// A restartable stopwatch accumulating elapsed time across segments.
+#[derive(Debug)]
+pub struct Stopwatch {
+    started: Option<Instant>,
+    accum: Duration,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self {
+            started: None,
+            accum: Duration::ZERO,
+        }
+    }
+
+    pub fn start() -> Self {
+        Self {
+            started: Some(Instant::now()),
+            accum: Duration::ZERO,
+        }
+    }
+
+    pub fn resume(&mut self) {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+    }
+
+    pub fn pause(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.accum += t0.elapsed();
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.accum
+            + self
+                .started
+                .map(|t0| t0.elapsed())
+                .unwrap_or(Duration::ZERO)
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(5));
+        sw.pause();
+        let a = sw.elapsed();
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(sw.elapsed(), a, "paused stopwatch must not advance");
+        sw.resume();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(sw.elapsed() > a);
+    }
+
+    #[test]
+    fn timed_returns_result() {
+        let (v, secs) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

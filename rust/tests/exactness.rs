@@ -1,0 +1,112 @@
+//! Cross-algorithm exactness: every search path must agree with the
+//! exact kd-tree oracle on every dataset kind.
+
+use trueknn::dataset::{DatasetKind, DistanceProfile};
+use trueknn::knn::kdtree::KdTree;
+use trueknn::knn::rtnn::{rtnn_knns, RtnnParams};
+use trueknn::knn::{
+    brute::brute_knn, fixed_radius_knns, trueknn as trueknn_search, FixedRadiusParams,
+    KnnResult, TrueKnnParams,
+};
+
+fn assert_matches_oracle(res: &KnnResult, points: &[trueknn::geom::Point3], k: usize, tag: &str) {
+    let tree = KdTree::build(points);
+    for (i, got) in res.neighbors.iter().enumerate() {
+        let want = tree.knn_excluding(points[i], k, Some(i as u32));
+        assert_eq!(got.len(), want.len(), "{tag}: query {i} count");
+        for (g, w) in got.iter().zip(&want) {
+            assert!(
+                (g.dist - w.dist).abs() < 1e-5,
+                "{tag}: query {i}: {} vs {}",
+                g.dist,
+                w.dist
+            );
+        }
+    }
+}
+
+#[test]
+fn all_paths_exact_on_all_datasets() {
+    for kind in DatasetKind::ALL {
+        let ds = kind.generate(800, 99);
+        let k = 6;
+        let prof = DistanceProfile::compute(&ds, k);
+        let r = prof.max_dist() as f32 * 1.0001;
+
+        let t = trueknn_search(&ds.points, &ds.points, &TrueKnnParams { k, ..Default::default() });
+        assert_matches_oracle(&t, &ds.points, k, &format!("trueknn/{kind:?}"));
+
+        let f = fixed_radius_knns(
+            &ds.points,
+            &ds.points,
+            &FixedRadiusParams { k, radius: r, ..Default::default() },
+        );
+        assert_matches_oracle(&f, &ds.points, k, &format!("fixed/{kind:?}"));
+
+        let rt = rtnn_knns(
+            &ds.points,
+            &ds.points,
+            &RtnnParams { k, radius: r, ..Default::default() },
+        );
+        assert_matches_oracle(&rt, &ds.points, k, &format!("rtnn/{kind:?}"));
+
+        let b = brute_knn(&ds.points, &ds.points, k, true);
+        assert_matches_oracle(&b, &ds.points, k, &format!("brute/{kind:?}"));
+    }
+}
+
+#[test]
+fn external_query_points_are_supported() {
+    // queries need not be dataset members
+    let ds = DatasetKind::Iono.generate(1_000, 100);
+    let queries = DatasetKind::Uniform.generate(64, 101).points;
+    let k = 4;
+    let t = trueknn_search(
+        &ds.points,
+        &queries,
+        &TrueKnnParams {
+            k,
+            exclude_self: false,
+            ..Default::default()
+        },
+    );
+    let tree = KdTree::build(&ds.points);
+    for (i, got) in t.neighbors.iter().enumerate() {
+        let want = tree.knn(queries[i], k);
+        assert_eq!(got.len(), k, "query {i}");
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g.dist - w.dist).abs() < 1e-5);
+        }
+    }
+}
+
+#[test]
+fn duplicate_heavy_dataset_is_exact() {
+    // many coincident points stress tie handling and BVH degeneracy
+    let mut points = vec![trueknn::geom::Point3::splat(0.5); 50];
+    points.extend(DatasetKind::Uniform.generate(200, 102).points);
+    let k = 8;
+    let t = trueknn_search(&points, &points, &TrueKnnParams { k, ..Default::default() });
+    let tree = KdTree::build(&points);
+    for (i, got) in t.neighbors.iter().enumerate() {
+        let want = tree.knn_excluding(points[i], k, Some(i as u32));
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g.dist - w.dist).abs() < 1e-5, "query {i}");
+        }
+    }
+}
+
+#[test]
+fn collinear_degenerate_geometry() {
+    // all points on a line: BVH boxes are flat, kd-tree splits degenerate
+    let points: Vec<_> = (0..300)
+        .map(|i| trueknn::geom::Point3::new(i as f32 / 300.0, 0.0, 0.0))
+        .collect();
+    let t = trueknn_search(&points, &points, &TrueKnnParams { k: 3, ..Default::default() });
+    assert!(t.is_complete(3, points.len() - 1));
+    // interior point's neighbors are its adjacent samples
+    let nb = &t.neighbors[150];
+    let idxs: Vec<u32> = nb.iter().map(|n| n.idx).collect();
+    assert!(idxs.contains(&149) && idxs.contains(&151), "{idxs:?}");
+}

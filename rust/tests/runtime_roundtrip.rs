@@ -1,0 +1,130 @@
+//! PJRT runtime integration: artifacts → compile → execute → exact
+//! numerics. Requires `make artifacts`; every test skips cleanly (with
+//! a note) when artifacts are absent so `cargo test` works pre-build.
+
+use trueknn::dataset::DatasetKind;
+use trueknn::knn::kdtree::KdTree;
+use trueknn::runtime::{PjrtBruteForce, PjrtRuntime};
+
+fn runtime() -> Option<PjrtRuntime> {
+    match PjrtRuntime::load_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping PJRT test (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn artifacts_compile_and_list() {
+    let Some(rt) = runtime() else { return };
+    let names = rt.program_names();
+    assert!(names.len() >= 3, "expected several artifacts: {names:?}");
+    assert!(names.iter().any(|n| n.starts_with("brute_knn")));
+    assert!(names.iter().any(|n| n.starts_with("radius_count")));
+}
+
+#[test]
+fn brute_knn_matches_kdtree_exactly() {
+    let Some(rt) = runtime() else { return };
+    let bf = PjrtBruteForce::new(&rt);
+    for kind in [DatasetKind::Uniform, DatasetKind::Taxi] {
+        let ds = kind.generate(900, 7);
+        let queries = &ds.points[..100];
+        let res = bf.knn(&ds.points, queries, 5, false).expect("pjrt knn");
+        let tree = KdTree::build(&ds.points);
+        for (i, got) in res.neighbors.iter().enumerate() {
+            let want = tree.knn(queries[i], 5);
+            assert_eq!(got.len(), 5, "{kind:?} query {i}");
+            for (g, w) in got.iter().zip(&want) {
+                assert!(
+                    (g.dist - w.dist).abs() < 2e-3,
+                    "{kind:?} query {i}: {} vs {}",
+                    g.dist,
+                    w.dist
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn exclude_self_drops_the_zero_hit() {
+    let Some(rt) = runtime() else { return };
+    let bf = PjrtBruteForce::new(&rt);
+    let ds = DatasetKind::Uniform.generate(500, 8);
+    let res = bf.knn(&ds.points, &ds.points[..50], 3, true).unwrap();
+    for (i, nb) in res.neighbors.iter().enumerate() {
+        assert_eq!(nb.len(), 3);
+        assert!(nb.iter().all(|n| n.idx as usize != i), "query {i} kept self");
+        assert!(nb[0].dist > 1e-4, "query {i} still has a zero hit");
+    }
+}
+
+#[test]
+fn data_sharding_crosses_artifact_boundary() {
+    let Some(rt) = runtime() else { return };
+    // force sharding: use more data than the largest artifact n
+    let largest = rt.manifest.largest_brute().unwrap().n;
+    let n = largest + 1_000;
+    let ds = DatasetKind::Uniform.generate(n, 9);
+    let bf = PjrtBruteForce::new(&rt);
+    let queries = &ds.points[..32];
+    let res = bf.knn(&ds.points, queries, 4, false).expect("sharded knn");
+    assert!(res.launches > 1, "sharding must issue multiple launches");
+    let tree = KdTree::build(&ds.points);
+    for (i, got) in res.neighbors.iter().enumerate() {
+        let want = tree.knn(queries[i], 4);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g.dist - w.dist).abs() < 2e-3, "query {i}");
+        }
+    }
+}
+
+#[test]
+fn oversized_k_is_a_clean_error() {
+    let Some(rt) = runtime() else { return };
+    let bf = PjrtBruteForce::new(&rt);
+    let ds = DatasetKind::Uniform.generate(200, 10);
+    let max_k = rt
+        .manifest
+        .artifacts
+        .iter()
+        .map(|a| a.k)
+        .max()
+        .unwrap_or(0);
+    let err = bf.knn(&ds.points, &ds.points[..4], max_k + 1, false);
+    assert!(err.is_err(), "k beyond every artifact must error, not truncate");
+}
+
+#[test]
+fn radius_count_runs() {
+    let Some(rt) = runtime() else { return };
+    let spec = rt
+        .manifest
+        .artifacts
+        .iter()
+        .find(|a| a.kind == trueknn::runtime::ArtifactKind::RadiusCount)
+        .expect("radius_count artifact")
+        .clone();
+    let ds = DatasetKind::Uniform.generate(spec.n, 11);
+    let queries: Vec<f32> = ds.points[..spec.q]
+        .iter()
+        .flat_map(|p| p.to_array())
+        .collect();
+    let data: Vec<f32> = ds.points.iter().flat_map(|p| p.to_array()).collect();
+    let counts = rt
+        .run_radius_count(&spec.name, &queries, &data, 0.2)
+        .expect("radius_count");
+    assert_eq!(counts.len(), spec.q);
+    // sanity vs exact range query
+    let tree = KdTree::build(&ds.points);
+    for (i, &c) in counts.iter().enumerate().take(8) {
+        let exact = tree.range(ds.points[i], 0.2).len() as i32;
+        assert!(
+            (c - exact).abs() <= 1, // f32 fuzz at the boundary
+            "query {i}: pjrt {c} vs exact {exact}"
+        );
+    }
+}

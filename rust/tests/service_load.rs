@@ -1,0 +1,148 @@
+//! Coordinator service under load: concurrency, backpressure, failure
+//! injection, and response integrity.
+
+use trueknn::coordinator::{
+    KnnRequest, QueryMode, Service, ServiceConfig, ServiceError,
+};
+use trueknn::dataset::DatasetKind;
+use trueknn::geom::Point3;
+use trueknn::knn::kdtree::KdTree;
+
+#[test]
+fn heavy_concurrent_load_no_loss() {
+    let ds = DatasetKind::Taxi.generate(5_000, 1);
+    let (svc, handle) = Service::start(ds.points.clone(), ServiceConfig::default());
+    let n_threads = 8;
+    let per_thread = 10;
+    let mut joins = Vec::new();
+    for t in 0..n_threads {
+        let h = handle.clone();
+        let pts = ds.points.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut ok = 0;
+            for i in 0..per_thread {
+                let id = (t * 1000 + i) as u64;
+                let qs = pts[(id as usize * 13) % 4000..][..8].to_vec();
+                match h.query(KnnRequest::new(id, qs, 3)) {
+                    Ok(resp) => {
+                        assert_eq!(resp.id, id);
+                        assert_eq!(resp.neighbors.len(), 8);
+                        ok += 1;
+                    }
+                    Err(ServiceError::QueueFull) => { /* backpressure is legal */ }
+                    Err(e) => panic!("unexpected error: {e}"),
+                }
+            }
+            ok
+        }));
+    }
+    let total: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
+    let m = handle.metrics().snapshot();
+    assert_eq!(m.responses as usize, total);
+    assert_eq!(m.responses + m.rejected, m.requests);
+    svc.shutdown();
+}
+
+#[test]
+fn backpressure_rejects_when_queue_full() {
+    let ds = DatasetKind::Uniform.generate(30_000, 2);
+    let cfg = ServiceConfig {
+        queue_depth: 2,
+        ..Default::default()
+    };
+    let (svc, handle) = Service::start(ds.points.clone(), cfg);
+    // flood with heavy requests (big k, many queries, RT-forced) so the
+    // worker stays busy and the tiny queue overflows
+    let mut rejected = 0;
+    let mut receivers = Vec::new();
+    for id in 0..50u64 {
+        let req = KnnRequest::new(id, ds.points[..512].to_vec(), 64).with_mode(QueryMode::Rt);
+        match handle.submit(req) {
+            Ok(rx) => receivers.push(rx),
+            Err(ServiceError::QueueFull) => rejected += 1,
+            Err(e) => panic!("unexpected: {e}"),
+        }
+    }
+    assert!(rejected > 0, "a depth-2 queue must reject under flood");
+    for rx in receivers {
+        let _ = rx.recv().expect("accepted requests must complete");
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn mixed_modes_and_ks_all_correct() {
+    let ds = DatasetKind::Iono.generate(4_000, 3);
+    let (svc, handle) = Service::start(ds.points.clone(), ServiceConfig::default());
+    let tree = KdTree::build(&ds.points);
+    let modes = [QueryMode::Auto, QueryMode::Rt, QueryMode::Brute];
+    let mut rxs = Vec::new();
+    for id in 0..12u64 {
+        let k = 1 + (id as usize % 5);
+        let q = ds.points[(id as usize * 97) % 3000..][..4].to_vec();
+        let req = KnnRequest::new(id, q, k).with_mode(modes[id as usize % 3]);
+        rxs.push((id, k, handle.submit(req).unwrap()));
+    }
+    for (id, k, rx) in rxs {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.id, id);
+        for (qi, nb) in resp.neighbors.iter().enumerate() {
+            assert_eq!(nb.len(), k, "req {id} query {qi}");
+            let q = ds.points[(id as usize * 97) % 3000 + qi];
+            let want = tree.knn(q, k);
+            for (g, w) in nb.iter().zip(&want) {
+                assert!((g.dist - w.dist).abs() < 1e-4, "req {id}");
+            }
+        }
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn failure_injection_empty_and_degenerate_requests() {
+    let ds = DatasetKind::Uniform.generate(1_000, 4);
+    let (svc, handle) = Service::start(ds.points.clone(), ServiceConfig::default());
+
+    // empty query list: legal, returns empty response
+    let resp = handle.query(KnnRequest::new(1, vec![], 3)).unwrap();
+    assert!(resp.neighbors.is_empty());
+
+    // k = 0: every query returns no neighbors
+    let resp = handle
+        .query(KnnRequest::new(2, ds.points[..4].to_vec(), 0))
+        .unwrap();
+    assert!(resp.neighbors.iter().all(|n| n.is_empty()));
+
+    // k > n: capped at dataset size
+    let resp = handle
+        .query(KnnRequest::new(3, vec![Point3::splat(0.5)], 5_000))
+        .unwrap();
+    assert_eq!(resp.neighbors[0].len(), ds.len());
+
+    // NaN coordinates: must not wedge the worker (response may be empty)
+    let _ = handle.query(KnnRequest::new(
+        4,
+        vec![Point3::new(f32::NAN, 0.0, 0.0)],
+        3,
+    ));
+    // the service is still alive afterwards
+    let resp = handle
+        .query(KnnRequest::new(5, ds.points[..2].to_vec(), 2))
+        .unwrap();
+    assert_eq!(resp.neighbors.len(), 2);
+    svc.shutdown();
+}
+
+#[test]
+fn service_survives_many_short_lifecycles() {
+    // start/stop churn: no deadlocks, no leaked worker panics
+    for seed in 0..5 {
+        let ds = DatasetKind::Uniform.generate(500, seed);
+        let (svc, handle) = Service::start(ds.points.clone(), ServiceConfig::default());
+        let resp = handle
+            .query(KnnRequest::new(seed, ds.points[..2].to_vec(), 2))
+            .unwrap();
+        assert_eq!(resp.neighbors.len(), 2);
+        svc.shutdown();
+    }
+}
