@@ -16,7 +16,7 @@
 
 use trueknn::coordinator::{KnnRequest, QueryMode, Service, ServiceConfig};
 use trueknn::dataset::{DatasetKind, DistanceProfile};
-use trueknn::knn::{fixed_radius_knns, trueknn as trueknn_search, FixedRadiusParams, TrueKnnParams};
+use trueknn::index::{Backend, IndexBuilder, NeighborIndex};
 use trueknn::util::{Pcg32, Stopwatch};
 
 fn main() {
@@ -26,22 +26,19 @@ fn main() {
     let ds = DatasetKind::Taxi.generate(n, 42);
 
     // ---- headline experiment: TrueKNN vs maxDist baseline -------------
-    println!("[1/3] TrueKNN vs fixed-radius baseline (RT simulator)");
-    let t = trueknn_search(&ds.points, &ds.points, &TrueKnnParams { k, ..Default::default() });
+    println!("[1/3] TrueKNN vs fixed-radius baseline (RT simulator, index API)");
+    let mut t_index = IndexBuilder::new(Backend::TrueKnn).build(ds.points.clone());
+    let t = t_index.knn(&ds.points, k);
     assert!(
         t.is_complete(k, n - 1),
         "TrueKNN must find k neighbors for every point"
     );
+    assert_eq!(t_index.build_stats().counters.builds, 1);
     let prof = DistanceProfile::compute(&ds, k);
-    let b = fixed_radius_knns(
-        &ds.points,
-        &ds.points,
-        &FixedRadiusParams {
-            k,
-            radius: prof.max_dist() as f32 * 1.0001,
-            ..Default::default()
-        },
-    );
+    let mut b_index = IndexBuilder::new(Backend::FixedRadius)
+        .radius(prof.max_dist() as f32 * 1.0001)
+        .build(ds.points.clone());
+    let b = b_index.knn(&ds.points, k);
     println!(
         "  TrueKNN : {:>10} ray-sphere tests, {} rounds, sim {:.3}s, wall {:.3}s",
         t.counters.prim_tests,
@@ -112,8 +109,12 @@ fn main() {
 
     let m = handle.metrics().snapshot();
     println!(
-        "\nservice metrics: requests={} responses={} batches={} rt={} brute={} rejected={}",
-        m.requests, m.responses, m.batches, m.rt_requests, m.brute_requests, m.rejected
+        "\nservice metrics: requests={} responses={} batches={} rt={} brute={} rejected={} builds={}",
+        m.requests, m.responses, m.batches, m.rt_requests, m.brute_requests, m.rejected, m.builds
+    );
+    assert!(
+        m.builds <= 2,
+        "one index per served route path — builds must not scale with batches"
     );
     svc.shutdown();
 

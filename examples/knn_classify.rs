@@ -81,7 +81,12 @@ fn main() {
             idx += 1;
         }
     }
+    let m = handle.metrics().snapshot();
     svc.shutdown();
+    println!(
+        "served {} batches with {} index build(s) — the BVH amortizes across the test set",
+        m.batches, m.builds
+    );
 
     let acc = correct as f64 / test.len() as f64;
     println!("accuracy: {acc:.3} ({correct}/{})", test.len());

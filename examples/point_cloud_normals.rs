@@ -12,7 +12,7 @@
 
 use trueknn::dataset::DatasetKind;
 use trueknn::geom::Point3;
-use trueknn::knn::{trueknn as trueknn_search, TrueKnnParams};
+use trueknn::index::{Backend, IndexBuilder, NeighborIndex};
 use trueknn::util::Stopwatch;
 
 /// Smallest-eigenvector of a 3x3 symmetric covariance via inverse power
@@ -77,7 +77,8 @@ fn main() {
     println!("estimating surface normals for {n} LiDAR-like points (k={k})");
 
     let sw = Stopwatch::start();
-    let knn = trueknn_search(&ds.points, &ds.points, &TrueKnnParams { k, ..Default::default() });
+    let mut index = IndexBuilder::new(Backend::TrueKnn).build(ds.points.clone());
+    let knn = index.knn(&ds.points, k);
     let knn_s = sw.elapsed_secs();
 
     let sw = Stopwatch::start();

@@ -1,20 +1,28 @@
-//! Quickstart: run TrueKNN on a synthetic point cloud and compare it
-//! against the paper's fixed-radius baseline.
+//! Quickstart: build a `NeighborIndex` once, query it many times, and
+//! compare TrueKNN against the paper's fixed-radius baseline.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
 use trueknn::dataset::{DatasetKind, DistanceProfile};
-use trueknn::knn::{fixed_radius_knns, trueknn as trueknn_search, FixedRadiusParams, TrueKnnParams};
+use trueknn::index::{Backend, IndexBuilder, NeighborIndex};
 
 fn main() {
     // 1. A Porto-like point cloud: dense city core + GPS outliers.
     let ds = DatasetKind::Taxi.generate(10_000, 42);
     let k = 5;
 
-    // 2. TrueKNN: no radius needed — it samples a start radius and grows.
-    let result = trueknn_search(&ds.points, &ds.points, &TrueKnnParams { k, ..Default::default() });
+    // 2. Build a TrueKNN index ONCE. No radius needed — it samples a
+    //    start radius (Alg. 2) at build time and grows per query.
+    let mut index = IndexBuilder::new(Backend::TrueKnn)
+        .seed(42)
+        .build(ds.points.clone());
+
+    // 3. Query it MANY times: the BVH is built exactly once and only
+    //    refit between calls — the serving-side version of the paper's
+    //    amortization argument.
+    let result = index.knn(&ds.points, k);
     println!("TrueKNN found {k} neighbors for all {} points:", ds.len());
     println!(
         "  rounds={} ray-sphere tests={} simulated GPU time={:.4}s wall={:.4}s",
@@ -23,34 +31,53 @@ fn main() {
         result.sim_seconds,
         result.wall_seconds
     );
-
-    // 3. The baseline needs the a-priori-unknowable maxDist radius
-    //    (paper §5.2.1 grants it that best case; it still loses).
-    let prof = DistanceProfile::compute(&ds, k);
-    let baseline = fixed_radius_knns(
-        &ds.points,
-        &ds.points,
-        &FixedRadiusParams {
-            k,
-            radius: prof.max_dist() as f32 * 1.0001,
-            ..Default::default()
-        },
+    let again = index.knn(&ds.points, 16); // new k, same structure
+    let near = index.range(&ds.points[..4], 0.02); // range query, same structure
+    let stats = index.build_stats();
+    println!(
+        "  three queries, {} BVH build(s) (start radius {:.5})",
+        stats.counters.builds,
+        stats.start_radius.unwrap()
     );
+    assert_eq!(stats.counters.builds, 1, "the structure must be reused");
+    assert!(again.is_complete(16, ds.len() - 1));
+    println!(
+        "  range r=0.02 around point 0: {} neighbors",
+        near.neighbors[0].len()
+    );
+
+    // 4. The baseline backend needs the a-priori-unknowable maxDist
+    //    radius (paper §5.2.1 grants it that best case; it still loses).
+    let prof = DistanceProfile::compute(&ds, k);
+    let mut baseline = IndexBuilder::new(Backend::FixedRadius)
+        .radius(prof.max_dist() as f32 * 1.0001)
+        .build(ds.points.clone());
+    let base = baseline.knn(&ds.points, k);
     println!("Fixed-radius RT-kNNS baseline at radius {:.4}:", prof.max_dist());
     println!(
         "  ray-sphere tests={} simulated GPU time={:.4}s",
-        baseline.counters.prim_tests, baseline.sim_seconds
+        base.counters.prim_tests, base.sim_seconds
     );
     println!(
         "TrueKNN speedup: {:.1}x (intersection-test ratio {:.1}x)",
-        baseline.sim_seconds / result.sim_seconds,
-        baseline.counters.prim_tests as f64 / result.counters.prim_tests as f64
+        base.sim_seconds / result.sim_seconds,
+        base.counters.prim_tests as f64 / result.counters.prim_tests as f64
     );
 
-    // 4. Results are exact: first query's neighbors.
+    // 5. Results are exact: first query's neighbors.
     print!("point 0 neighbors:");
     for n in &result.neighbors[0] {
         print!(" ({}, {:.4})", n.idx, n.dist);
     }
     println!();
+
+    // Migrating from the old free functions? Each maps to a backend:
+    //   knn::trueknn            -> Backend::TrueKnn
+    //   knn::fixed_radius_knns  -> Backend::FixedRadius
+    //   knn::rtnn::rtnn_knns    -> Backend::Rtnn
+    //   KdTree::knn             -> Backend::KdTree
+    //   knn::brute::brute_knn   -> Backend::BruteCpu
+    //   runtime::PjrtBruteForce -> Backend::BrutePjrt
+    // The free functions still work; they now build a throwaway index
+    // per call — hold an index to stop paying that build.
 }

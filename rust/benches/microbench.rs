@@ -6,6 +6,7 @@
 use trueknn::bench::{bench, fmt_secs, BenchConfig, Table};
 use trueknn::dataset::DatasetKind;
 use trueknn::exp::{self, ExpScale};
+use trueknn::index::{Backend, IndexBuilder, NeighborIndex};
 use trueknn::knn::{trueknn as trueknn_search, KHeap, TrueKnnParams};
 use trueknn::util::Pcg32;
 
@@ -36,7 +37,30 @@ fn main() {
         ));
     });
     t.row(vec![
-        "trueknn k=5".into(),
+        "trueknn k=5 (one-shot shim)".into(),
+        "taxi 20K".into(),
+        fmt_secs(r.median_s),
+    ]);
+
+    // build-once/query-many: the index amortizes the BVH build that the
+    // one-shot shim above pays on every iteration
+    let mut index = IndexBuilder::new(Backend::TrueKnn)
+        .exclude_self(false)
+        .build(ds.points.clone());
+    let batch = ds.points[..1024].to_vec();
+    let r = bench("index-knn", &cfg, || {
+        std::hint::black_box(index.knn(&batch, 5));
+    });
+    t.row(vec![
+        "TrueKnn index knn 1024q (cached BVH)".into(),
+        "taxi 20K".into(),
+        fmt_secs(r.median_s),
+    ]);
+    let r = bench("index-build", &cfg, || {
+        std::hint::black_box(IndexBuilder::new(Backend::TrueKnn).build(ds.points.clone()));
+    });
+    t.row(vec![
+        "TrueKnn index build".into(),
         "taxi 20K".into(),
         fmt_secs(r.median_s),
     ]);

@@ -24,17 +24,26 @@ pub struct Args {
     pub positional: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum CliError {
-    #[error("unknown option --{0}")]
     UnknownOption(String),
-    #[error("option --{0} requires a value")]
     MissingValue(String),
-    #[error("invalid value for --{0}: {1}")]
     BadValue(String, String),
-    #[error("help requested")]
     HelpRequested,
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::UnknownOption(name) => write!(f, "unknown option --{name}"),
+            CliError::MissingValue(name) => write!(f, "option --{name} requires a value"),
+            CliError::BadValue(name, v) => write!(f, "invalid value for --{name}: {v}"),
+            CliError::HelpRequested => write!(f, "help requested"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     pub fn get(&self, name: &str) -> Option<&str> {

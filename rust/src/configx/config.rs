@@ -49,16 +49,37 @@ impl Default for RunConfig {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("json: {0}")]
-    Json(#[from] JsonError),
-    #[error("missing field '{0}'")]
+    Json(JsonError),
     Missing(&'static str),
-    #[error("bad field '{0}': {1}")]
     Bad(&'static str, String),
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Json(e) => write!(f, "json: {e}"),
+            ConfigError::Missing(field) => write!(f, "missing field '{field}'"),
+            ConfigError::Bad(field, why) => write!(f, "bad field '{field}': {why}"),
+            ConfigError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl From<JsonError> for ConfigError {
+    fn from(e: JsonError) -> Self {
+        ConfigError::Json(e)
+    }
+}
+
+impl From<std::io::Error> for ConfigError {
+    fn from(e: std::io::Error) -> Self {
+        ConfigError::Io(e)
+    }
 }
 
 impl RunConfig {

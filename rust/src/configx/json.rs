@@ -17,19 +17,28 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum JsonError {
-    #[error("unexpected end of input at byte {0}")]
     Eof(usize),
-    #[error("unexpected character '{0}' at byte {1}")]
     Unexpected(char, usize),
-    #[error("invalid number at byte {0}")]
     BadNumber(usize),
-    #[error("invalid escape '\\{0}' at byte {1}")]
     BadEscape(char, usize),
-    #[error("trailing garbage at byte {0}")]
     Trailing(usize),
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JsonError::Eof(at) => write!(f, "unexpected end of input at byte {at}"),
+            JsonError::Unexpected(c, at) => write!(f, "unexpected character '{c}' at byte {at}"),
+            JsonError::BadNumber(at) => write!(f, "invalid number at byte {at}"),
+            JsonError::BadEscape(c, at) => write!(f, "invalid escape '\\{c}' at byte {at}"),
+            JsonError::Trailing(at) => write!(f, "trailing garbage at byte {at}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn as_f64(&self) -> Option<f64> {

@@ -3,16 +3,19 @@
 //! analog of the paper's insight that per-round fixed costs (context
 //! switches, BVH work) amortize over query volume.
 
-use super::request::KnnRequest;
+use super::request::{KnnRequest, QueryMode};
 use std::time::Instant;
 
-/// A batch of requests sharing one execution: same k, same mode class.
+/// A batch of requests sharing one execution: same k **and** same
+/// [`QueryMode`], so the router's per-batch decision honors every
+/// request's explicit mode.
 #[derive(Debug)]
 pub struct Batch {
     pub requests: Vec<(KnnRequest, Instant)>,
     /// Flattened query ranges: request i owns queries[ranges[i].0..ranges[i].1].
     pub ranges: Vec<(usize, usize)>,
     pub k: usize,
+    pub mode: QueryMode,
 }
 
 impl Batch {
@@ -62,18 +65,21 @@ impl DynamicBatcher {
     }
 
     /// Form the next batch: take the oldest request, then greedily add
-    /// every other pending request with the same k (order preserved)
-    /// until a size bound trips. Returns None when idle.
+    /// every other pending request with the same k and the same mode
+    /// (order preserved) until a size bound trips. Returns None when
+    /// idle. Mode homogeneity is what lets the service route a whole
+    /// batch while still honoring each request's explicit `QueryMode`.
     pub fn next_batch(&mut self) -> Option<Batch> {
         if self.pending.is_empty() {
             return None;
         }
         let k = self.pending[0].0.k;
+        let mode = self.pending[0].0.mode;
         let mut requests = Vec::new();
         let mut total_q = 0usize;
         let mut i = 0;
         while i < self.pending.len() {
-            let compatible = self.pending[i].0.k == k;
+            let compatible = self.pending[i].0.k == k && self.pending[i].0.mode == mode;
             let fits = total_q + self.pending[i].0.queries.len() <= self.cfg.max_queries
                 || requests.is_empty(); // an oversize request still ships alone
             if compatible && fits && requests.len() < self.cfg.max_requests {
@@ -93,7 +99,12 @@ impl DynamicBatcher {
             ranges.push((off, off + req.queries.len()));
             off += req.queries.len();
         }
-        Some(Batch { requests, ranges, k })
+        Some(Batch {
+            requests,
+            ranges,
+            k,
+            mode,
+        })
     }
 }
 
@@ -152,6 +163,7 @@ mod tests {
 
     #[test]
     fn no_request_lost_or_duplicated() {
+        use super::super::request::QueryMode;
         crate::util::prop::check("batcher conservation", 20, |rng| {
             let mut b = DynamicBatcher::new(BatcherConfig {
                 max_queries: 1 + rng.below(50) as usize,
@@ -159,14 +171,20 @@ mod tests {
             });
             let n = 1 + rng.below(40) as usize;
             let now = Instant::now();
+            let modes = [QueryMode::Auto, QueryMode::Rt, QueryMode::Brute];
             for id in 0..n as u64 {
-                b.push(req(id, 1 + rng.below(20) as usize, 1 + rng.below(3) as usize), now);
+                let r = req(id, 1 + rng.below(20) as usize, 1 + rng.below(3) as usize)
+                    .with_mode(modes[rng.below(3) as usize]);
+                b.push(r, now);
             }
             let mut seen = std::collections::HashSet::new();
             while let Some(batch) = b.next_batch() {
                 for (r, _) in &batch.requests {
                     if r.k != batch.k {
                         return Err("mixed k in batch".into());
+                    }
+                    if r.mode != batch.mode {
+                        return Err("mixed mode in batch".into());
                     }
                     if !seen.insert(r.id) {
                         return Err(format!("request {} duplicated", r.id));
@@ -178,5 +196,23 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn mixed_modes_split_into_homogeneous_batches() {
+        use super::super::request::QueryMode;
+        let mut b = DynamicBatcher::new(BatcherConfig::default());
+        let now = Instant::now();
+        b.push(req(1, 4, 5).with_mode(QueryMode::Rt), now);
+        b.push(req(2, 4, 5).with_mode(QueryMode::Brute), now);
+        b.push(req(3, 4, 5).with_mode(QueryMode::Rt), now);
+        let first = b.next_batch().unwrap();
+        assert_eq!(first.mode, QueryMode::Rt);
+        let ids: Vec<u64> = first.requests.iter().map(|(r, _)| r.id).collect();
+        assert_eq!(ids, vec![1, 3], "same-mode requests batch together");
+        let second = b.next_batch().unwrap();
+        assert_eq!(second.mode, QueryMode::Brute);
+        assert_eq!(second.requests[0].0.id, 2);
+        assert!(b.next_batch().is_none());
     }
 }

@@ -13,6 +13,10 @@ pub struct Metrics {
     pub rt_requests: AtomicU64,
     pub brute_requests: AtomicU64,
     pub queries_served: AtomicU64,
+    /// Acceleration-structure builds performed by the worker's indexes.
+    /// Amortization claim: stays at 1 per dataset per route path no
+    /// matter how many batches are served.
+    pub builds: AtomicU64,
     latency: Mutex<OnlineStats>,
 }
 
@@ -25,6 +29,7 @@ pub struct MetricsSnapshot {
     pub rt_requests: u64,
     pub brute_requests: u64,
     pub queries_served: u64,
+    pub builds: u64,
     pub latency_mean_s: f64,
     pub latency_max_s: f64,
 }
@@ -56,6 +61,7 @@ impl Metrics {
             rt_requests: self.rt_requests.load(Ordering::Relaxed),
             brute_requests: self.brute_requests.load(Ordering::Relaxed),
             queries_served: self.queries_served.load(Ordering::Relaxed),
+            builds: self.builds.load(Ordering::Relaxed),
             latency_mean_s: if lat.count() > 0 { lat.mean() } else { 0.0 },
             latency_max_s: if lat.count() > 0 { lat.max() } else { 0.0 },
         }

@@ -4,7 +4,7 @@ use crate::geom::Point3;
 use crate::knn::Neighbor;
 
 /// How the caller wants the query executed.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum QueryMode {
     /// Let the router pick a path from the workload shape.
     Auto,
@@ -14,8 +14,9 @@ pub enum QueryMode {
     Brute,
 }
 
-/// Which path actually served the request.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Which path actually served the request. Also the key under which the
+/// service holds its persistent [`crate::index::NeighborIndex`]es.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum RoutePath {
     Rt,
     Brute,

@@ -1,18 +1,26 @@
-//! The query service: a worker thread owning the dataset, the RT
-//! simulator structures and (optionally) the PJRT runtime, fed through a
-//! bounded queue with backpressure.
+//! The query service: a worker thread owning one persistent
+//! [`NeighborIndex`] per route path, fed through a bounded queue with
+//! backpressure.
+//!
+//! This is where the paper's amortization argument pays off at the
+//! serving layer: the worker builds each acceleration structure **once
+//! per dataset** (tracked by the `builds` metric) and every batch after
+//! that only refits/queries it. Before the index API, every batch paid a
+//! full BVH build.
 //!
 //! The PJRT client wraps raw C pointers and is not `Send`, so the
-//! runtime is constructed *inside* the worker thread; callers only touch
-//! channels.
+//! runtime (and every index) is constructed *inside* the worker thread;
+//! callers only touch channels.
 
 use super::batcher::{BatcherConfig, DynamicBatcher};
 use super::metrics::Metrics;
 use super::request::{KnnRequest, KnnResponse, RoutePath};
 use super::router::{Router, RouterConfig};
 use crate::geom::Point3;
-use crate::knn::{brute::brute_knn, trueknn, TrueKnnParams};
-use crate::runtime::{PjrtBruteForce, PjrtRuntime};
+use crate::index::{BruteCpuIndex, BrutePjrtIndex, IndexConfig, NeighborIndex, TrueKnnIndex};
+use crate::knn::TrueKnnParams;
+use crate::runtime::PjrtRuntime;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::Arc;
@@ -44,13 +52,22 @@ impl Default for ServiceConfig {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum ServiceError {
-    #[error("service queue full (backpressure)")]
     QueueFull,
-    #[error("service is shut down")]
     ShutDown,
 }
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::QueueFull => write!(f, "service queue full (backpressure)"),
+            ServiceError::ShutDown => write!(f, "service is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
 
 enum Msg {
     Request(KnnRequest, Sender<KnnResponse>, Instant),
@@ -137,8 +154,17 @@ impl Service {
     }
 
     pub fn shutdown(mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
+        self.shutdown_and_join();
+        // Drop runs next but finds the worker already taken: exactly one
+        // Msg::Shutdown is ever sent.
+    }
+
+    /// Shared by `shutdown` and `Drop`: signal the worker once and wait
+    /// for it to drain. Idempotent — the `worker.take()` guard makes a
+    /// second call a no-op.
+    fn shutdown_and_join(&mut self) {
         if let Some(w) = self.worker.take() {
+            let _ = self.tx.send(Msg::Shutdown);
             let _ = w.join();
         }
     }
@@ -146,10 +172,69 @@ impl Service {
 
 impl Drop for Service {
     fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
+        self.shutdown_and_join();
+    }
+}
+
+/// Per-worker index registry: one persistent [`NeighborIndex`] per route
+/// path, built lazily on first use (the PJRT one eagerly, because the
+/// router must know up front whether that path exists).
+///
+/// Each index owns a copy of the dataset (plus `data` here for building
+/// further paths), trading memory for the zero-sharing ownership model —
+/// at most 3 copies when every path is exercised. Sharing via
+/// `Arc<[Point3]>` is the next step if dataset sizes outgrow that.
+struct IndexRegistry {
+    data: Vec<Point3>,
+    trueknn: TrueKnnParams,
+    by_path: HashMap<RoutePath, Box<dyn NeighborIndex>>,
+}
+
+impl IndexRegistry {
+    fn new(data: Vec<Point3>, cfg: &ServiceConfig) -> Self {
+        IndexRegistry {
+            data,
+            trueknn: cfg.trueknn.clone(),
+            by_path: HashMap::new(),
         }
+    }
+
+    /// Service queries are external points: never self-exclude.
+    fn brute_config() -> IndexConfig {
+        IndexConfig {
+            exclude_self: false,
+            ..Default::default()
+        }
+    }
+
+    fn install(&mut self, path: RoutePath, index: Box<dyn NeighborIndex>, metrics: &Metrics) {
+        Metrics::add(&metrics.builds, index.build_stats().counters.builds);
+        self.by_path.insert(path, index);
+    }
+
+    /// The index serving `path`, building it on first use. Each build is
+    /// charged to the `builds` metric exactly once — every later batch on
+    /// the same path reuses the structure.
+    fn get(&mut self, path: RoutePath, metrics: &Metrics) -> &mut Box<dyn NeighborIndex> {
+        if !self.by_path.contains_key(&path) {
+            let index: Box<dyn NeighborIndex> = match path {
+                RoutePath::Rt => Box::new(TrueKnnIndex::new(
+                    self.data.clone(),
+                    self.trueknn.to_index_config(),
+                )),
+                // Reached only if the eagerly-installed PJRT index is
+                // missing (runtime load raced or failed): rebuild with
+                // whatever runtime is available now.
+                RoutePath::Brute => {
+                    Box::new(BrutePjrtIndex::new(self.data.clone(), Self::brute_config()))
+                }
+                RoutePath::BruteCpu => {
+                    Box::new(BruteCpuIndex::new(self.data.clone(), Self::brute_config()))
+                }
+            };
+            self.install(path, index, metrics);
+        }
+        self.by_path.get_mut(&path).expect("just inserted")
     }
 }
 
@@ -160,24 +245,33 @@ fn worker_loop(
     metrics: Arc<Metrics>,
     inflight: Arc<AtomicUsize>,
 ) {
-    // PJRT runtime is constructed here: the client is not Send.
-    let pjrt: Option<PjrtRuntime> = if cfg.use_pjrt {
-        match PjrtRuntime::load_default() {
+    let mut registry = IndexRegistry::new(data, &cfg);
+    // PJRT runtime is constructed here: the client is not Send. Loaded
+    // eagerly (when asked for) so the router knows the path exists.
+    if cfg.use_pjrt {
+        let runtime = match PjrtRuntime::load_default() {
             Ok(rt) => Some(rt),
             Err(e) => {
                 crate::log_warn!("PJRT unavailable, brute falls back to CPU: {e}");
                 None
             }
+        };
+        cfg.router.pjrt_available = runtime.is_some();
+        if runtime.is_some() {
+            let index = BrutePjrtIndex::with_runtime(
+                registry.data.clone(),
+                runtime,
+                IndexRegistry::brute_config(),
+            );
+            registry.install(RoutePath::Brute, Box::new(index), &metrics);
         }
     } else {
-        None
-    };
-    cfg.router.pjrt_available = pjrt.is_some();
+        cfg.router.pjrt_available = false;
+    }
     let router = Router::new(cfg.router.clone());
     let mut batcher = DynamicBatcher::new(cfg.batcher.clone());
     // response channels ride alongside their request through the batcher
-    let mut reply_of: std::collections::HashMap<u64, Sender<KnnResponse>> =
-        std::collections::HashMap::new();
+    let mut reply_of: HashMap<u64, Sender<KnnResponse>> = HashMap::new();
 
     'outer: loop {
         // block for the first message, then drain whatever else arrived
@@ -196,66 +290,44 @@ fn worker_loop(
                 }
                 Ok(Msg::Shutdown) => {
                     // serve what's queued, then exit
-                    drain(&data, &cfg, &router, &pjrt, &mut batcher, &mut reply_of, &metrics, &inflight);
+                    drain(&router, &mut registry, &mut batcher, &mut reply_of, &metrics, &inflight);
                     break 'outer;
                 }
                 Err(_) => break,
             }
         }
-        drain(&data, &cfg, &router, &pjrt, &mut batcher, &mut reply_of, &metrics, &inflight);
+        drain(&router, &mut registry, &mut batcher, &mut reply_of, &metrics, &inflight);
     }
 }
 
-#[allow(clippy::too_many_arguments)]
 fn drain(
-    data: &[Point3],
-    cfg: &ServiceConfig,
     router: &Router,
-    pjrt: &Option<PjrtRuntime>,
+    registry: &mut IndexRegistry,
     batcher: &mut DynamicBatcher,
-    reply_of: &mut std::collections::HashMap<u64, Sender<KnnResponse>>,
+    reply_of: &mut HashMap<u64, Sender<KnnResponse>>,
     metrics: &Arc<Metrics>,
     inflight: &Arc<AtomicUsize>,
 ) {
     while let Some(batch) = batcher.next_batch() {
         Metrics::inc(&metrics.batches);
         let served = Instant::now();
-        // route by the first request (batch is mode/k-homogeneous enough:
-        // explicit-mode requests are honored per request below)
         let all_queries: Vec<Point3> = batch
             .requests
             .iter()
             .flat_map(|(r, _)| r.queries.iter().copied())
             .collect();
 
-        let path = router.route(&batch.requests[0].0, data.len());
-        let neighbors = match path {
-            RoutePath::Rt => {
-                Metrics::add(&metrics.rt_requests, batch.requests.len() as u64);
-                let params = TrueKnnParams {
-                    k: batch.k,
-                    ..cfg.trueknn.clone()
-                };
-                trueknn(data, &all_queries, &params).neighbors
+        // Batches are (k, mode)-homogeneous, so routing the first request
+        // routes every request in the batch identically.
+        let n_data = registry.data.len();
+        let path = router.route(&batch.requests[0].0, n_data);
+        match path {
+            RoutePath::Rt => Metrics::add(&metrics.rt_requests, batch.requests.len() as u64),
+            RoutePath::Brute | RoutePath::BruteCpu => {
+                Metrics::add(&metrics.brute_requests, batch.requests.len() as u64)
             }
-            RoutePath::Brute => {
-                Metrics::add(&metrics.brute_requests, batch.requests.len() as u64);
-                match pjrt.as_ref() {
-                    Some(rt) => match PjrtBruteForce::new(rt).knn(data, &all_queries, batch.k, false) {
-                        Ok(res) => res.neighbors,
-                        Err(e) => {
-                            crate::log_error!("PJRT execution failed, CPU fallback: {e}");
-                            brute_knn(data, &all_queries, batch.k, false).neighbors
-                        }
-                    },
-                    None => brute_knn(data, &all_queries, batch.k, false).neighbors,
-                }
-            }
-            RoutePath::BruteCpu => {
-                Metrics::add(&metrics.brute_requests, batch.requests.len() as u64);
-                brute_knn(data, &all_queries, batch.k, false).neighbors
-            }
-        };
+        }
+        let neighbors = registry.get(path, metrics).knn(&all_queries, batch.k).neighbors;
         let service_seconds = served.elapsed().as_secs_f64();
 
         for ((req, arrived), range) in batch.requests.iter().zip(&batch.ranges) {
@@ -346,6 +418,65 @@ mod tests {
     }
 
     use super::super::request::QueryMode;
+
+    #[test]
+    fn serving_many_batches_builds_one_index() {
+        // the tentpole claim: N batches against one dataset = exactly 1
+        // acceleration-structure build (the seed rebuilt the BVH per batch)
+        let ds = DatasetKind::Taxi.generate(3_000, 74);
+        let (svc, handle) = Service::start(ds.points.clone(), ServiceConfig::default());
+        let n_batches = 6u64;
+        for id in 0..n_batches {
+            let q = ds.points[(id as usize * 31) % 2000..][..8].to_vec();
+            // query() waits for the response, so every request is its own batch
+            let resp = handle
+                .query(KnnRequest::new(id, q, 4).with_mode(QueryMode::Rt))
+                .unwrap();
+            assert_eq!(resp.path, RoutePath::Rt);
+            assert!(resp.neighbors.iter().all(|n| n.len() == 4));
+        }
+        let m = handle.metrics().snapshot();
+        assert_eq!(m.batches, n_batches);
+        assert_eq!(m.builds, 1, "BVH must be built once, not once per batch");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn mixed_mode_submissions_route_per_mode() {
+        // regression for the old behavior where a whole batch followed
+        // requests[0]'s mode: submit an interleaved burst and check every
+        // response took the path its own request asked for
+        let ds = DatasetKind::Uniform.generate(2_500, 75);
+        let (svc, handle) = Service::start(ds.points.clone(), ServiceConfig::default());
+        let mut rxs = Vec::new();
+        for id in 0..12u64 {
+            let mode = if id % 2 == 0 { QueryMode::Rt } else { QueryMode::Brute };
+            let q = ds.points[(id as usize * 13) % 2000..][..4].to_vec();
+            rxs.push((
+                id,
+                mode,
+                handle
+                    .submit(KnnRequest::new(id, q, 3).with_mode(mode))
+                    .unwrap(),
+            ));
+        }
+        for (id, mode, rx) in rxs {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.id, id);
+            let want = match mode {
+                QueryMode::Rt => RoutePath::Rt,
+                // no PJRT in this config: Brute lands on the CPU path
+                QueryMode::Brute => RoutePath::BruteCpu,
+                QueryMode::Auto => unreachable!(),
+            };
+            assert_eq!(resp.path, want, "request {id} mis-routed");
+            assert!(resp.neighbors.iter().all(|n| n.len() == 3));
+        }
+        let m = handle.metrics().snapshot();
+        assert_eq!(m.rt_requests, 6);
+        assert_eq!(m.brute_requests, 6);
+        svc.shutdown();
+    }
 
     #[test]
     fn shutdown_serves_queued_work() {

@@ -6,12 +6,29 @@ use super::{Dataset, DatasetKind};
 use crate::geom::Point3;
 use std::io::{BufRead, BufWriter, Write};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum IoError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("line {0}: expected 2 or 3 comma-separated floats, got '{1}'")]
+    Io(std::io::Error),
     BadLine(usize, String),
+}
+
+impl std::fmt::Display for IoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IoError::Io(e) => write!(f, "io: {e}"),
+            IoError::BadLine(line, row) => {
+                write!(f, "line {line}: expected 2 or 3 comma-separated floats, got '{row}'")
+            }
+        }
+    }
+}
+
+impl std::error::Error for IoError {}
+
+impl From<std::io::Error> for IoError {
+    fn from(e: std::io::Error) -> Self {
+        IoError::Io(e)
+    }
 }
 
 /// Load `x,y[,z]` rows; `#`-prefixed lines and a non-numeric first row

@@ -7,8 +7,9 @@ use crate::bvh::{Bvh, BuildStrategy};
 use crate::configx::KPolicy;
 use crate::dataset::DatasetKind;
 use crate::geom::Aabb;
+use crate::index::{Backend, IndexBuilder, IndexConfig, NeighborIndex};
 use crate::knn::rtnn::{rtnn_knns, RtnnParams};
-use crate::knn::{trueknn, TrueKnnParams};
+use crate::rt::CostModel;
 
 // ------------------------------------------------------- RTNN comparison
 
@@ -36,15 +37,14 @@ pub fn rtnn_cmp(scale: ExpScale, sizes: Option<&[usize]>) -> Vec<RtnnCmpRow> {
         let ds = build(DatasetKind::Taxi, n);
         let k = KPolicy::SqrtN.resolve(n);
         let prof = crate::dataset::DistanceProfile::compute(&ds, k);
-        let t = trueknn(
-            &ds.points,
-            &ds.points,
-            &TrueKnnParams {
-                k,
+        let mut t_index = IndexBuilder::new(Backend::TrueKnn)
+            .config(IndexConfig {
                 seed: EXP_SEED,
                 ..Default::default()
-            },
-        );
+            })
+            .build(ds.points.clone());
+        let mut t = t_index.knn(&ds.points, k);
+        t_index.build_stats().absorb_into(&mut t, &CostModel::default());
         let r = rtnn_knns(
             &ds.points,
             &ds.points,

@@ -6,7 +6,9 @@ use super::workloads::{build, mid_size, paper_sizes, run_pair, ExpScale, EXP_SEE
 use crate::bench::{fmt_count, fmt_secs, Table};
 use crate::configx::KPolicy;
 use crate::dataset::DatasetKind;
-use crate::knn::{trueknn, RoundStats, TrueKnnParams};
+use crate::index::{Backend, IndexBuilder, IndexConfig, NeighborIndex};
+use crate::knn::RoundStats;
+use crate::rt::CostModel;
 
 // ---------------------------------------------------------------- Fig 3
 
@@ -58,16 +60,15 @@ pub fn fig4(scale: ExpScale) -> Vec<Fig4Row> {
         for &n in &paper_sizes(scale) {
             let ds = build(kind, n);
             let queries = &ds.points[..n_queries.min(n)];
-            let t = trueknn(
-                &ds.points,
-                queries,
-                &TrueKnnParams {
-                    k: 5,
+            let mut t_index = IndexBuilder::new(Backend::TrueKnn)
+                .config(IndexConfig {
                     seed: EXP_SEED,
                     exclude_self: false,
                     ..Default::default()
-                },
-            );
+                })
+                .build(ds.points.clone());
+            let mut t = t_index.knn(queries, 5);
+            t_index.build_stats().absorb_into(&mut t, &CostModel::default());
             let (brute_wall, path) = match runtime.as_ref() {
                 Some(rt) => {
                     let b = crate::runtime::PjrtBruteForce::new(rt)
@@ -158,17 +159,11 @@ pub fn render_fig5(rows: &[Fig5Row], n: usize) -> Table {
 /// analog (k=5, start radius 0.001 like the paper's §5.4.1).
 pub fn fig6(scale: ExpScale) -> Vec<RoundStats> {
     let ds = build(DatasetKind::Road, mid_size(scale));
-    let res = trueknn(
-        &ds.points,
-        &ds.points,
-        &TrueKnnParams {
-            k: 5,
-            start_radius: Some(0.001),
-            seed: EXP_SEED,
-            ..Default::default()
-        },
-    );
-    res.rounds
+    let mut index = IndexBuilder::new(Backend::TrueKnn)
+        .seed(EXP_SEED)
+        .start_radius(0.001)
+        .build(ds.points.clone());
+    index.knn(&ds.points, 5).rounds
 }
 
 pub fn render_fig6(rounds: &[RoundStats]) -> Table {
@@ -208,16 +203,12 @@ pub fn fig7(scale: ExpScale) -> Vec<Fig7Row> {
     let mut rows = Vec::new();
     for scale_pow in [-3i32, -2, -1, 0, 1, 2, 3] {
         let r0 = sampled * (2.0f32).powi(scale_pow);
-        let res = trueknn(
-            &ds.points,
-            &ds.points,
-            &TrueKnnParams {
-                k,
-                start_radius: Some(r0),
-                seed: EXP_SEED,
-                ..Default::default()
-            },
-        );
+        let mut index = IndexBuilder::new(Backend::TrueKnn)
+            .seed(EXP_SEED)
+            .start_radius(r0)
+            .build(ds.points.clone());
+        let mut res = index.knn(&ds.points, k);
+        index.build_stats().absorb_into(&mut res, &CostModel::default());
         rows.push(Fig7Row {
             start_radius: r0,
             sim_seconds: res.sim_seconds,
@@ -308,6 +299,7 @@ pub fn render_pct(rows: &[PctRow], title: &str) -> Table {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::knn::{trueknn, TrueKnnParams};
 
     #[test]
     fn fig6_rounds_shrink_and_radius_doubles() {

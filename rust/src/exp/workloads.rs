@@ -10,7 +10,9 @@
 
 use crate::configx::KPolicy;
 use crate::dataset::{Dataset, DatasetKind, DistanceProfile};
-use crate::knn::{fixed_radius_knns, trueknn, FixedRadiusParams, KnnResult, TrueKnnParams};
+use crate::index::{Backend, IndexBuilder, IndexConfig, NeighborIndex};
+use crate::knn::KnnResult;
+use crate::rt::CostModel;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ExpScale {
@@ -72,7 +74,9 @@ impl PairOutcome {
 }
 
 /// Run the canonical pair: TrueKNN (unbounded or percentile-capped) vs
-/// fixed-radius baseline at the matching radius.
+/// fixed-radius baseline at the matching radius. Both sides go through
+/// the index API; the one-time build is folded back into each result so
+/// rows report build + query like the paper does.
 pub fn run_pair(ds: &Dataset, k: usize, percentile: Option<f64>) -> PairOutcome {
     let prof = DistanceProfile::compute(ds, k);
     let max_dist = prof.max_dist();
@@ -82,26 +86,24 @@ pub fn run_pair(ds: &Dataset, k: usize, percentile: Option<f64>) -> PairOutcome 
     };
     // epsilon-inflate so f32 rounding can't miss the farthest neighbor
     let radius_f = (radius_used * 1.0001) as f32;
+    let model = CostModel::default();
 
-    let t = trueknn(
-        &ds.points,
-        &ds.points,
-        &TrueKnnParams {
-            k,
+    let mut t_index = IndexBuilder::new(Backend::TrueKnn)
+        .config(IndexConfig {
             seed: EXP_SEED,
             radius_cap: percentile.map(|_| radius_f),
             ..Default::default()
-        },
-    );
-    let b = fixed_radius_knns(
-        &ds.points,
-        &ds.points,
-        &FixedRadiusParams {
-            k,
-            radius: radius_f,
-            ..Default::default()
-        },
-    );
+        })
+        .build(ds.points.clone());
+    let mut t = t_index.knn(&ds.points, k);
+    t_index.build_stats().absorb_into(&mut t, &model);
+
+    let mut b_index = IndexBuilder::new(Backend::FixedRadius)
+        .radius(radius_f)
+        .build(ds.points.clone());
+    let mut b = b_index.knn(&ds.points, k);
+    b_index.build_stats().absorb_into(&mut b, &model);
+
     PairOutcome {
         trueknn: t,
         baseline: b,

@@ -1,0 +1,379 @@
+//! Exact backends: the kd-tree oracle, the CPU brute-force scan, and
+//! the PJRT-accelerated brute force (cuML analog). These are the
+//! shader-core side of the router's RT-vs-brute decision.
+
+use super::{finish_range, Backend, BuildStats, IndexConfig, NeighborIndex};
+use crate::geom::{dist2, Point3};
+use crate::knn::kdtree::KdTree;
+use crate::knn::{KHeap, KnnResult, Neighbor};
+use crate::rt::HwCounters;
+use crate::runtime::{PjrtBruteForce, PjrtRuntime};
+use crate::util::Stopwatch;
+
+// ---------------------------------------------------------------- kdtree
+
+pub struct KdTreeIndex {
+    cfg: IndexConfig,
+    data: Vec<Point3>,
+    tree: KdTree,
+    build: HwCounters,
+    build_seconds: f64,
+}
+
+impl KdTreeIndex {
+    pub fn new(data: Vec<Point3>, cfg: IndexConfig) -> Self {
+        let sw = Stopwatch::start();
+        let tree = KdTree::build(&data);
+        // charge tree construction like a BVH build so the amortization
+        // telemetry is comparable across backends
+        let mut build = HwCounters::new();
+        build.builds += 1;
+        build.build_prims += data.len() as u64;
+        KdTreeIndex {
+            cfg,
+            data,
+            tree,
+            build,
+            build_seconds: sw.elapsed_secs(),
+        }
+    }
+}
+
+impl NeighborIndex for KdTreeIndex {
+    fn backend(&self) -> Backend {
+        Backend::KdTree
+    }
+
+    fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    fn knn(&mut self, queries: &[Point3], k: usize) -> KnnResult {
+        let wall = Stopwatch::start();
+        let mut result = KnnResult::new(queries.len());
+        for (i, &q) in queries.iter().enumerate() {
+            let exclude = if self.cfg.exclude_self {
+                Some(i as u32)
+            } else {
+                None
+            };
+            result.neighbors[i] = self.tree.knn_excluding(q, k, exclude);
+        }
+        result.counters.rays = queries.len() as u64;
+        result.wall_seconds = wall.elapsed_secs();
+        // exact CPU path: measured, not modeled
+        result.sim_seconds = result.wall_seconds;
+        result
+    }
+
+    fn range(&mut self, queries: &[Point3], radius: f32) -> KnnResult {
+        let wall = Stopwatch::start();
+        let mut result = KnnResult::new(queries.len());
+        let per_query = queries
+            .iter()
+            .enumerate()
+            .map(|(i, &q)| {
+                self.tree
+                    .range(q, radius)
+                    .into_iter()
+                    .filter(|&p| !(self.cfg.exclude_self && p as usize == i))
+                    .map(|p| Neighbor {
+                        idx: p,
+                        dist: dist2(self.data[p as usize], q),
+                    })
+                    .collect()
+            })
+            .collect();
+        result.neighbors = finish_range(per_query);
+        result.counters.rays = queries.len() as u64;
+        result.wall_seconds = wall.elapsed_secs();
+        result.sim_seconds = result.wall_seconds;
+        result
+    }
+
+    fn insert(&mut self, points: &[Point3]) {
+        if points.is_empty() {
+            return;
+        }
+        let sw = Stopwatch::start();
+        // a kd-tree has no refit lifecycle: inserts rebuild
+        self.data.extend_from_slice(points);
+        self.tree = KdTree::build(&self.data);
+        self.build.builds += 1;
+        self.build.build_prims += self.data.len() as u64;
+        self.build_seconds += sw.elapsed_secs();
+    }
+
+    fn build_stats(&self) -> BuildStats {
+        BuildStats {
+            backend: Backend::KdTree,
+            n_points: self.data.len(),
+            counters: self.build,
+            build_seconds: self.build_seconds,
+            start_radius: None,
+            radius_schedule: Vec::new(),
+        }
+    }
+}
+
+// ------------------------------------------------------------- brute cpu
+
+pub struct BruteCpuIndex {
+    cfg: IndexConfig,
+    data: Vec<Point3>,
+}
+
+impl BruteCpuIndex {
+    pub fn new(data: Vec<Point3>, cfg: IndexConfig) -> Self {
+        BruteCpuIndex { cfg, data }
+    }
+}
+
+/// Exhaustive range scan shared by the CPU backend and the PJRT range
+/// path (the radius_count artifact returns counts, not neighbor lists).
+/// Returns per-query in-radius hits as (idx, dist²) for `finish_range`.
+pub(crate) fn cpu_range_scan(
+    data: &[Point3],
+    queries: &[Point3],
+    radius: f32,
+    exclude_self: bool,
+    counters: &mut HwCounters,
+) -> Vec<Vec<Neighbor>> {
+    let r2 = radius * radius;
+    queries
+        .iter()
+        .enumerate()
+        .map(|(qi, &q)| {
+            counters.prim_tests += data.len() as u64;
+            let mut hits = Vec::new();
+            for (di, &d) in data.iter().enumerate() {
+                if exclude_self && di == qi {
+                    continue;
+                }
+                let d2 = dist2(d, q);
+                if d2 <= r2 {
+                    hits.push(Neighbor {
+                        idx: di as u32,
+                        dist: d2,
+                    });
+                }
+            }
+            hits
+        })
+        .collect()
+}
+
+/// Exhaustive scan shared by the CPU backend and the PJRT fallback.
+pub(crate) fn cpu_brute_scan(
+    data: &[Point3],
+    queries: &[Point3],
+    k: usize,
+    exclude_self: bool,
+    cfg: &IndexConfig,
+) -> KnnResult {
+    let wall = Stopwatch::start();
+    let mut result = KnnResult::new(queries.len());
+    for (qi, &q) in queries.iter().enumerate() {
+        let mut heap = KHeap::new(k);
+        for (di, &d) in data.iter().enumerate() {
+            if exclude_self && di == qi {
+                continue;
+            }
+            heap.push(dist2(d, q), di as u32);
+        }
+        result.counters.prim_tests += data.len() as u64;
+        result.counters.heap_pushes += heap.pushes;
+        result.neighbors[qi] = heap.into_sorted();
+    }
+    result.counters.rays = queries.len() as u64;
+    result.wall_seconds = wall.elapsed_secs();
+    // no BVH/ray machinery; simulated time is prim-test + sort cost only
+    result.sim_seconds = cfg.cost_model.seconds(&result.counters, 1);
+    result
+}
+
+impl NeighborIndex for BruteCpuIndex {
+    fn backend(&self) -> Backend {
+        Backend::BruteCpu
+    }
+
+    fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    fn knn(&mut self, queries: &[Point3], k: usize) -> KnnResult {
+        cpu_brute_scan(&self.data, queries, k, self.cfg.exclude_self, &self.cfg)
+    }
+
+    fn range(&mut self, queries: &[Point3], radius: f32) -> KnnResult {
+        let wall = Stopwatch::start();
+        let mut result = KnnResult::new(queries.len());
+        let per_query = cpu_range_scan(
+            &self.data,
+            queries,
+            radius,
+            self.cfg.exclude_self,
+            &mut result.counters,
+        );
+        result.neighbors = finish_range(per_query);
+        result.counters.rays = queries.len() as u64;
+        result.wall_seconds = wall.elapsed_secs();
+        result.sim_seconds = self.cfg.cost_model.seconds(&result.counters, 1);
+        result
+    }
+
+    fn insert(&mut self, points: &[Point3]) {
+        self.data.extend_from_slice(points);
+    }
+
+    fn build_stats(&self) -> BuildStats {
+        BuildStats {
+            backend: Backend::BruteCpu,
+            n_points: self.data.len(),
+            counters: HwCounters::new(), // nothing to build
+            build_seconds: 0.0,
+            start_radius: None,
+            radius_schedule: Vec::new(),
+        }
+    }
+}
+
+// ------------------------------------------------------------ brute pjrt
+
+/// Brute force through the AOT PJRT artifacts. The compiled executables
+/// are the persistent structure: loaded and compiled once at build,
+/// reused on every query. Falls back to the CPU scan when the runtime
+/// (or the artifact directory) is unavailable, so results stay exact
+/// either way.
+pub struct BrutePjrtIndex {
+    cfg: IndexConfig,
+    data: Vec<Point3>,
+    runtime: Option<PjrtRuntime>,
+}
+
+impl BrutePjrtIndex {
+    pub fn new(data: Vec<Point3>, cfg: IndexConfig) -> Self {
+        let runtime = match PjrtRuntime::load_default() {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                crate::log_warn!("PJRT unavailable, brute falls back to CPU: {e}");
+                None
+            }
+        };
+        Self::with_runtime(data, runtime, cfg)
+    }
+
+    /// Wrap an already-loaded runtime (the service loads it itself so the
+    /// router can learn availability before any index exists).
+    pub fn with_runtime(data: Vec<Point3>, runtime: Option<PjrtRuntime>, cfg: IndexConfig) -> Self {
+        BrutePjrtIndex { cfg, data, runtime }
+    }
+
+    pub fn pjrt_available(&self) -> bool {
+        self.runtime.is_some()
+    }
+}
+
+impl NeighborIndex for BrutePjrtIndex {
+    fn backend(&self) -> Backend {
+        Backend::BrutePjrt
+    }
+
+    fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    fn knn(&mut self, queries: &[Point3], k: usize) -> KnnResult {
+        if let Some(rt) = self.runtime.as_ref() {
+            match PjrtBruteForce::new(rt).knn(&self.data, queries, k, self.cfg.exclude_self) {
+                Ok(res) => return res,
+                Err(e) => {
+                    crate::log_error!("PJRT execution failed, CPU fallback: {e}");
+                }
+            }
+        }
+        cpu_brute_scan(&self.data, queries, k, self.cfg.exclude_self, &self.cfg)
+    }
+
+    fn range(&mut self, queries: &[Point3], radius: f32) -> KnnResult {
+        // the radius_count artifact returns counts, not neighbor lists;
+        // range queries take the exact CPU path
+        let wall = Stopwatch::start();
+        let mut result = KnnResult::new(queries.len());
+        let per_query = cpu_range_scan(
+            &self.data,
+            queries,
+            radius,
+            self.cfg.exclude_self,
+            &mut result.counters,
+        );
+        result.neighbors = finish_range(per_query);
+        result.counters.rays = queries.len() as u64;
+        result.wall_seconds = wall.elapsed_secs();
+        result.sim_seconds = self.cfg.cost_model.seconds(&result.counters, 1);
+        result
+    }
+
+    fn insert(&mut self, points: &[Point3]) {
+        // the PJRT path re-shards data per call; no device structure to
+        // maintain
+        self.data.extend_from_slice(points);
+    }
+
+    fn build_stats(&self) -> BuildStats {
+        BuildStats {
+            backend: Backend::BrutePjrt,
+            n_points: self.data.len(),
+            counters: HwCounters::new(),
+            build_seconds: 0.0,
+            start_radius: None,
+            radius_schedule: Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::DatasetKind;
+
+    #[test]
+    fn kdtree_index_excludes_self_by_position() {
+        let ds = DatasetKind::Uniform.generate(300, 95);
+        let mut idx = KdTreeIndex::new(ds.points.clone(), IndexConfig::default());
+        let res = idx.knn(&ds.points, 3);
+        for (i, nb) in res.neighbors.iter().enumerate() {
+            assert!(nb.iter().all(|n| n.idx as usize != i), "query {i} kept self");
+        }
+    }
+
+    #[test]
+    fn kdtree_insert_rebuilds_and_counts() {
+        let ds = DatasetKind::Uniform.generate(100, 96);
+        let mut idx = KdTreeIndex::new(ds.points.clone(), IndexConfig::default());
+        idx.insert(&[Point3::splat(0.5)]);
+        let stats = idx.build_stats();
+        assert_eq!(stats.counters.builds, 2);
+        assert_eq!(stats.n_points, 101);
+    }
+
+    #[test]
+    fn brute_indexes_agree_with_each_other() {
+        // without artifacts, BrutePjrt falls back to the same CPU scan
+        let ds = DatasetKind::Iono.generate(400, 97);
+        let mut cpu = BruteCpuIndex::new(ds.points.clone(), IndexConfig::default());
+        let mut pjrt = BrutePjrtIndex::with_runtime(
+            ds.points.clone(),
+            PjrtRuntime::load_default().ok(),
+            IndexConfig::default(),
+        );
+        let a = cpu.knn(&ds.points[..32], 5);
+        let b = pjrt.knn(&ds.points[..32], 5);
+        for (x, y) in a.neighbors.iter().zip(&b.neighbors) {
+            assert_eq!(x.len(), y.len());
+            for (g, w) in x.iter().zip(y) {
+                assert!((g.dist - w.dist).abs() < 2e-3);
+            }
+        }
+    }
+}

@@ -1,0 +1,335 @@
+//! Fixed-radius backends over a persistent scene: the paper's Alg. 1
+//! baseline and the RTNN-style variant (Zhu, PPoPP'22).
+//!
+//! Both keep one sphere BVH at the configured search radius for their
+//! whole lifetime. The RTNN index retains the query-reordering
+//! optimization (Morton sort + chunked launches for ray coherence); the
+//! per-call data-culling of the one-shot `knn::rtnn::rtnn_knns` is
+//! inherently per-query-set (it builds a scene per query partition) and
+//! cannot persist, so the free function remains the reference
+//! implementation of that experiment.
+
+use super::{default_radius, scene_range, Backend, BuildStats, IndexConfig, NeighborIndex};
+use crate::geom::{Aabb, Point3, Ray};
+use crate::knn::program::KnnProgram;
+use crate::knn::rtnn::morton3;
+use crate::knn::{KnnResult, RoundStats};
+use crate::rt::{HwCounters, Pipeline, Scene};
+use crate::util::Stopwatch;
+
+pub struct FixedRadiusIndex {
+    cfg: IndexConfig,
+    radius: f32,
+    scene: Scene,
+    build: HwCounters,
+    build_seconds: f64,
+}
+
+impl FixedRadiusIndex {
+    pub fn new(data: Vec<Point3>, cfg: IndexConfig) -> Self {
+        let sw = Stopwatch::start();
+        let radius = cfg.radius.unwrap_or_else(|| default_radius(&data));
+        let mut build = HwCounters::new();
+        let scene = Scene::build(data, radius, &mut build);
+        FixedRadiusIndex {
+            cfg,
+            radius,
+            scene,
+            build,
+            build_seconds: sw.elapsed_secs(),
+        }
+    }
+
+    pub fn radius(&self) -> f32 {
+        self.radius
+    }
+}
+
+impl NeighborIndex for FixedRadiusIndex {
+    fn backend(&self) -> Backend {
+        Backend::FixedRadius
+    }
+
+    fn len(&self) -> usize {
+        self.scene.len()
+    }
+
+    /// Alg. 1 lines 4–13 against the persistent scene: one launch, one
+    /// ray per query. Queries farther than the index radius from their
+    /// k-th neighbor come back short — by design (the paper's complaint).
+    fn knn(&mut self, queries: &[Point3], k: usize) -> KnnResult {
+        let wall = Stopwatch::start();
+        let mut result = KnnResult::new(queries.len());
+        let mut counters = HwCounters::new();
+        // a range() call may have refit the scene to another radius
+        if self.scene.radius != self.radius {
+            self.scene.refit(self.radius, &mut counters);
+        }
+        counters.context_switches += 1;
+
+        let rays: Vec<Ray> = queries
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| Ray::knn(p, i as u32))
+            .collect();
+        let mut program = KnnProgram::new(queries.len(), k, self.cfg.exclude_self);
+        Pipeline::launch(&self.scene, &rays, &mut program, &mut counters);
+        counters.heap_pushes += program.total_pushes();
+
+        for (q, heap) in program.heaps.into_iter().enumerate() {
+            result.neighbors[q] = heap.into_sorted();
+        }
+        result.launches = 1;
+        result.counters = counters;
+        result.wall_seconds = wall.elapsed_secs();
+        result.rounds.push(RoundStats {
+            round: 0,
+            radius: self.radius,
+            queries: queries.len(),
+            survivors: result.neighbors.iter().filter(|n| n.len() < k).count(),
+            prim_tests: result.counters.prim_tests,
+            sim_seconds: self.cfg.cost_model.seconds(&result.counters, 1),
+            wall_seconds: result.wall_seconds,
+        });
+        result.finalize_sim_time(&self.cfg.cost_model);
+        result
+    }
+
+    fn range(&mut self, queries: &[Point3], radius: f32) -> KnnResult {
+        scene_range(
+            &mut self.scene,
+            queries,
+            radius,
+            self.cfg.exclude_self,
+            &self.cfg.cost_model,
+        )
+    }
+
+    fn insert(&mut self, points: &[Point3]) {
+        let sw = Stopwatch::start();
+        // keep the structure at the search radius before grafting so the
+        // new prims get correctly-sized boxes
+        if self.scene.radius != self.radius {
+            self.scene.refit(self.radius, &mut self.build);
+        }
+        self.scene.insert(points, &mut self.build);
+        self.build_seconds += sw.elapsed_secs();
+    }
+
+    fn build_stats(&self) -> BuildStats {
+        BuildStats {
+            backend: Backend::FixedRadius,
+            n_points: self.scene.len(),
+            counters: self.build,
+            build_seconds: self.build_seconds,
+            start_radius: None,
+            radius_schedule: Vec::new(),
+        }
+    }
+}
+
+pub struct RtnnIndex {
+    cfg: IndexConfig,
+    radius: f32,
+    scene: Scene,
+    build: HwCounters,
+    build_seconds: f64,
+}
+
+impl RtnnIndex {
+    pub fn new(data: Vec<Point3>, cfg: IndexConfig) -> Self {
+        let sw = Stopwatch::start();
+        let radius = cfg.radius.unwrap_or_else(|| default_radius(&data));
+        let mut build = HwCounters::new();
+        let scene = Scene::build(data, radius, &mut build);
+        RtnnIndex {
+            cfg,
+            radius,
+            scene,
+            build,
+            build_seconds: sw.elapsed_secs(),
+        }
+    }
+}
+
+impl NeighborIndex for RtnnIndex {
+    fn backend(&self) -> Backend {
+        Backend::Rtnn
+    }
+
+    fn len(&self) -> usize {
+        self.scene.len()
+    }
+
+    /// Fixed-radius search with RTNN's query reordering: queries are
+    /// Morton-sorted and launched in spatial chunks so consecutive rays
+    /// traverse the same BVH subtrees.
+    fn knn(&mut self, queries: &[Point3], k: usize) -> KnnResult {
+        let wall = Stopwatch::start();
+        let mut result = KnnResult::new(queries.len());
+        if self.scene.is_empty() || queries.is_empty() {
+            result.wall_seconds = wall.elapsed_secs();
+            return result;
+        }
+        let mut counters = HwCounters::new();
+        if self.scene.radius != self.radius {
+            self.scene.refit(self.radius, &mut counters);
+        }
+
+        // optimization 1: Z-order query sort
+        let mut bb = Aabb::EMPTY;
+        for &q in queries {
+            bb.grow(q);
+        }
+        let mut order: Vec<u32> = (0..queries.len() as u32).collect();
+        order.sort_by_key(|&i| morton3(queries[i as usize], &bb));
+
+        // optimization 2: chunked launches along the curve
+        let parts = self.cfg.partitions.max(1).min(order.len());
+        let chunk = order.len().div_ceil(parts);
+        let mut program = KnnProgram::new(queries.len(), k, self.cfg.exclude_self);
+        let mut launches = 0u64;
+        let mut prev_pushes = 0u64;
+
+        for part in order.chunks(chunk) {
+            counters.context_switches += 1;
+            let rays: Vec<Ray> = part
+                .iter()
+                .map(|&q| Ray::knn(queries[q as usize], q))
+                .collect();
+            Pipeline::launch(&self.scene, &rays, &mut program, &mut counters);
+            launches += 1;
+            let pushes = program.total_pushes();
+            counters.heap_pushes += pushes - prev_pushes;
+            prev_pushes = pushes;
+        }
+
+        for (q, heap) in program.heaps.into_iter().enumerate() {
+            result.neighbors[q] = heap.into_sorted();
+        }
+        result.launches = launches;
+        result.counters = counters;
+        result.wall_seconds = wall.elapsed_secs();
+        result.rounds.push(RoundStats {
+            round: 0,
+            radius: self.radius,
+            queries: queries.len(),
+            survivors: result.neighbors.iter().filter(|n| n.len() < k).count(),
+            prim_tests: result.counters.prim_tests,
+            sim_seconds: self.cfg.cost_model.seconds(&result.counters, launches),
+            wall_seconds: result.wall_seconds,
+        });
+        result.finalize_sim_time(&self.cfg.cost_model);
+        result
+    }
+
+    fn range(&mut self, queries: &[Point3], radius: f32) -> KnnResult {
+        scene_range(
+            &mut self.scene,
+            queries,
+            radius,
+            self.cfg.exclude_self,
+            &self.cfg.cost_model,
+        )
+    }
+
+    fn insert(&mut self, points: &[Point3]) {
+        let sw = Stopwatch::start();
+        if self.scene.radius != self.radius {
+            self.scene.refit(self.radius, &mut self.build);
+        }
+        self.scene.insert(points, &mut self.build);
+        self.build_seconds += sw.elapsed_secs();
+    }
+
+    fn build_stats(&self) -> BuildStats {
+        BuildStats {
+            backend: Backend::Rtnn,
+            n_points: self.scene.len(),
+            counters: self.build,
+            build_seconds: self.build_seconds,
+            start_radius: None,
+            radius_schedule: Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{DatasetKind, DistanceProfile};
+    use crate::knn::kdtree::KdTree;
+
+    #[test]
+    fn fixed_index_reuses_one_scene_across_ks() {
+        let ds = DatasetKind::Uniform.generate(700, 90);
+        let prof = DistanceProfile::compute(&ds, 16);
+        let mut idx = FixedRadiusIndex::new(
+            ds.points.clone(),
+            IndexConfig {
+                radius: Some(prof.max_dist() as f32 * 1.0001),
+                ..Default::default()
+            },
+        );
+        let tree = KdTree::build(&ds.points);
+        for k in [1usize, 5, 16] {
+            let res = idx.knn(&ds.points, k);
+            for (i, got) in res.neighbors.iter().enumerate() {
+                let want = tree.knn_excluding(ds.points[i], k, Some(i as u32));
+                assert_eq!(got.len(), want.len(), "k={k} query {i}");
+                for (g, w) in got.iter().zip(&want) {
+                    assert!((g.dist - w.dist).abs() < 1e-5, "k={k} query {i}");
+                }
+            }
+        }
+        assert_eq!(idx.build_stats().counters.builds, 1);
+    }
+
+    #[test]
+    fn small_radius_leaves_queries_incomplete() {
+        let ds = DatasetKind::Taxi.generate(1_000, 91);
+        let mut idx = FixedRadiusIndex::new(
+            ds.points.clone(),
+            IndexConfig {
+                radius: Some(1e-6),
+                ..Default::default()
+            },
+        );
+        let res = idx.knn(&ds.points, 5);
+        assert!(!res.is_complete(5, ds.len() - 1));
+        assert!(res.rounds[0].survivors > ds.len() / 2);
+    }
+
+    #[test]
+    fn rtnn_index_exact_and_launches_in_chunks() {
+        let ds = DatasetKind::Road.generate(600, 92);
+        let mut idx = RtnnIndex::new(
+            ds.points.clone(),
+            IndexConfig {
+                partitions: 8,
+                ..Default::default()
+            },
+        );
+        let res = idx.knn(&ds.points, 4);
+        assert_eq!(res.launches, 8);
+        let tree = KdTree::build(&ds.points);
+        for (i, got) in res.neighbors.iter().enumerate() {
+            let want = tree.knn_excluding(ds.points[i], 4, Some(i as u32));
+            assert_eq!(got.len(), want.len(), "query {i}");
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g.dist - w.dist).abs() < 1e-5, "query {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn range_then_knn_restores_the_index_radius() {
+        let ds = DatasetKind::Uniform.generate(400, 93);
+        let mut idx = FixedRadiusIndex::new(ds.points.clone(), IndexConfig::default());
+        let r0 = idx.radius();
+        let _ = idx.range(&ds.points[..8], 0.01);
+        let res = idx.knn(&ds.points, 3);
+        assert!(res.is_complete(3, ds.len() - 1), "refit back to {r0} failed");
+        assert!(res.counters.refits >= 1, "knn must refit after range moved the scene");
+    }
+}

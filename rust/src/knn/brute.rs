@@ -5,35 +5,26 @@
 
 use super::{KHeap, KnnResult, Neighbor};
 use crate::geom::{dist2, Point3};
-use crate::util::Stopwatch;
+use crate::index::{BruteCpuIndex, IndexConfig, NeighborIndex};
 
 /// Exact kNN by exhaustive scan: O(|queries| · |data|).
+///
+/// Compatibility shim over [`BruteCpuIndex`] (which has no build cost —
+/// the scan has nothing to amortize).
 pub fn brute_knn(
     data: &[Point3],
     queries: &[Point3],
     k: usize,
     exclude_self: bool,
 ) -> KnnResult {
-    let wall = Stopwatch::start();
-    let mut result = KnnResult::new(queries.len());
-    for (qi, &q) in queries.iter().enumerate() {
-        let mut heap = KHeap::new(k);
-        for (di, &d) in data.iter().enumerate() {
-            if exclude_self && di == qi {
-                continue;
-            }
-            heap.push(dist2(d, q), di as u32);
-        }
-        result.counters.prim_tests += data.len() as u64;
-        result.counters.heap_pushes += heap.pushes;
-        result.neighbors[qi] = heap.into_sorted();
-    }
-    result.counters.rays = queries.len() as u64;
-    result.wall_seconds = wall.elapsed_secs();
-    // brute force has no BVH/ray machinery; its simulated time is the
-    // prim-test + sort cost only
-    result.sim_seconds = crate::rt::CostModel::default().seconds(&result.counters, 1);
-    result
+    let mut index = BruteCpuIndex::new(
+        data.to_vec(),
+        IndexConfig {
+            exclude_self,
+            ..Default::default()
+        },
+    );
+    index.knn(queries, k)
 }
 
 /// Convenience: single-query exact kNN.

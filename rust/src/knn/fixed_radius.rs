@@ -1,12 +1,14 @@
 //! Fixed-radius RT-kNNS — the paper's Algorithm 1 and its evaluation
 //! baseline (§5.2.1: radius = maxDist so every point is guaranteed to
 //! find its k neighbors; §5.5.1 uses the 99th-percentile radius).
+//!
+//! The algorithm lives in [`crate::index::FixedRadiusIndex`];
+//! [`fixed_radius_knns`] is the one-shot compatibility shim.
 
-use super::program::KnnProgram;
-use super::{KnnResult, RoundStats};
-use crate::geom::{Point3, Ray};
-use crate::rt::{CostModel, HwCounters, Pipeline, Scene};
-use crate::util::Stopwatch;
+use super::KnnResult;
+use crate::geom::Point3;
+use crate::index::{FixedRadiusIndex, IndexConfig, NeighborIndex};
+use crate::rt::CostModel;
 
 #[derive(Clone, Debug)]
 pub struct FixedRadiusParams {
@@ -28,52 +30,34 @@ impl Default for FixedRadiusParams {
     }
 }
 
+impl FixedRadiusParams {
+    /// The equivalent index configuration.
+    pub fn to_index_config(&self) -> IndexConfig {
+        IndexConfig {
+            exclude_self: self.exclude_self,
+            cost_model: self.cost_model,
+            radius: Some(self.radius),
+            ..Default::default()
+        }
+    }
+}
+
 /// One-shot fixed-radius kNN over `data`, querying every point of
 /// `queries` (`queries` usually aliases `data`; pass the same slice).
+///
+/// Compatibility shim over [`FixedRadiusIndex`]: builds, queries once
+/// and folds the build into the result. Hold a [`FixedRadiusIndex`] to
+/// amortize the BVH across query batches.
 pub fn fixed_radius_knns(
     data: &[Point3],
     queries: &[Point3],
     params: &FixedRadiusParams,
 ) -> KnnResult {
-    let wall = Stopwatch::start();
-    let mut result = KnnResult::new(queries.len());
-    let mut counters = HwCounters::new();
-
-    // Alg. 1 lines 1–3: spheres, AABBs, BVH.
-    let scene = Scene::build(data.to_vec(), params.radius, &mut counters);
-    // one host→device switch to upload + launch
-    counters.context_switches += 1;
-
-    // Alg. 1 lines 4–13: one ray per query.
-    let rays: Vec<Ray> = queries
-        .iter()
-        .enumerate()
-        .map(|(i, &p)| Ray::knn(p, i as u32))
-        .collect();
-    let mut program = KnnProgram::new(queries.len(), params.k, params.exclude_self);
-    Pipeline::launch(&scene, &rays, &mut program, &mut counters);
-    counters.heap_pushes = program.total_pushes();
-
-    for (q, heap) in program.heaps.into_iter().enumerate() {
-        result.neighbors[q] = heap.into_sorted();
-    }
-    result.launches = 1;
-    result.counters = counters;
-    result.wall_seconds = wall.elapsed_secs();
-    result.rounds.push(RoundStats {
-        round: 0,
-        radius: params.radius,
-        queries: queries.len(),
-        survivors: result
-            .neighbors
-            .iter()
-            .filter(|n| n.len() < params.k)
-            .count(),
-        prim_tests: result.counters.prim_tests,
-        sim_seconds: params.cost_model.seconds(&result.counters, 1),
-        wall_seconds: result.wall_seconds,
-    });
-    result.finalize_sim_time(&params.cost_model);
+    let mut index = FixedRadiusIndex::new(data.to_vec(), params.to_index_config());
+    let mut result = index.knn(queries, params.k);
+    index
+        .build_stats()
+        .absorb_into(&mut result, &params.cost_model);
     result
 }
 

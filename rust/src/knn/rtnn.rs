@@ -12,6 +12,12 @@
 //!    genuinely removes intersection tests, the effect RTNN reports.
 //!
 //! The paper shows *unoptimized* TrueKNN still beats this by 1.5–8×.
+//!
+//! [`rtnn_knns`] stays a one-shot function: the partition-culling step
+//! builds a scene per *query* chunk, which by construction cannot
+//! persist across query sets. The build-once variant is
+//! [`crate::index::RtnnIndex`], which keeps one full-data BVH alive and
+//! retains the Morton reordering (optimization 1) only.
 
 use super::program::KnnProgram;
 use super::{KnnResult, RoundStats};

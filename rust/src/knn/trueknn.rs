@@ -4,13 +4,17 @@
 //! (Alg. 2), remove every query that filled its k-heap, double the
 //! radius, *refit* the BVH (not rebuild, §4) and re-query only the
 //! survivors, until none remain. Per-round telemetry feeds Fig 6.
+//!
+//! The algorithm now lives in [`crate::index::TrueKnnIndex`], which
+//! keeps the BVH and the sampled start radius alive across queries;
+//! [`trueknn`] below is a compatibility shim that builds a throwaway
+//! index, runs one query and folds the build cost back into the result
+//! — identical totals to the original one-shot implementation.
 
-use super::program::KnnProgram;
-use super::start_radius::random_sample_radius;
-use super::{KnnResult, RoundStats};
-use crate::geom::{Point3, Ray};
-use crate::rt::{CostModel, HwCounters, Pipeline, Scene};
-use crate::util::Stopwatch;
+use super::KnnResult;
+use crate::geom::Point3;
+use crate::index::{IndexConfig, NeighborIndex, TrueKnnIndex};
+use crate::rt::CostModel;
 
 #[derive(Clone, Debug)]
 pub struct TrueKnnParams {
@@ -43,114 +47,39 @@ impl Default for TrueKnnParams {
     }
 }
 
+impl TrueKnnParams {
+    /// The equivalent index configuration (k is a per-query argument in
+    /// the index API, not part of the build).
+    pub fn to_index_config(&self) -> IndexConfig {
+        IndexConfig {
+            exclude_self: self.exclude_self,
+            seed: self.seed,
+            cost_model: self.cost_model,
+            start_radius: self.start_radius,
+            radius_cap: self.radius_cap,
+            max_rounds: self.max_rounds,
+            ..Default::default()
+        }
+    }
+}
+
 /// Algorithm 3 over `data`, querying all of `queries` (usually the same
 /// slice — the paper's "find the k nearest neighbors of all points").
+///
+/// Compatibility shim over [`TrueKnnIndex`]: builds a one-shot index,
+/// queries it once and folds the build into the reported counters /
+/// timings, matching the historical one-shot behavior. Callers issuing
+/// more than one query against the same data should hold a
+/// [`TrueKnnIndex`] instead and pay the build once.
 pub fn trueknn(data: &[Point3], queries: &[Point3], params: &TrueKnnParams) -> KnnResult {
-    let wall_total = Stopwatch::start();
-    let mut result = KnnResult::new(queries.len());
     if data.is_empty() || queries.is_empty() || params.k == 0 {
-        return result;
+        return KnnResult::new(queries.len());
     }
-
-    // A query can only ever find this many neighbors; completion must be
-    // judged against it or k > n would loop forever.
-    let max_possible = if params.exclude_self {
-        data.len().saturating_sub(1)
-    } else {
-        data.len()
-    };
-    let target = params.k.min(max_possible);
-
-    // Alg. 3 line 1: start radius via random sampling (Alg. 2).
-    let mut radius = params
-        .start_radius
-        .unwrap_or_else(|| random_sample_radius(data, params.seed));
-    if let Some(cap) = params.radius_cap {
-        radius = radius.min(cap);
-    }
-
-    let mut counters = HwCounters::new();
-    let mut scene = Scene::build(data.to_vec(), radius, &mut counters);
-    counters.context_switches += 1; // initial upload + launch
-    let mut program = KnnProgram::new(queries.len(), params.k, params.exclude_self);
-
-    let mut active: Vec<u32> = (0..queries.len() as u32).collect();
-    let mut launches = 0u64;
-    let mut round = 0usize;
-    let mut prev_pushes = 0u64;
-
-    // Alg. 3 lines 2–13.
-    while !active.is_empty() && round < params.max_rounds {
-        let round_wall = Stopwatch::start();
-        let before = counters;
-
-        // Each round re-discovers everything within the larger radius, so
-        // survivors' heaps restart clean (matches the re-query semantics
-        // of Alg. 3 line 3).
-        program.reset(&active);
-        let rays: Vec<Ray> = active
-            .iter()
-            .map(|&q| Ray::knn(queries[q as usize], q))
-            .collect();
-        Pipeline::launch(&scene, &rays, &mut program, &mut counters);
-        launches += 1;
-        let pushes = program.total_pushes();
-        counters.heap_pushes += pushes - prev_pushes;
-        prev_pushes = pushes;
-
-        // Alg. 3 lines 4–8: retire completed queries.
-        let queried = active.len();
-        active.retain(|&q| program.heaps[q as usize].len() < target);
-
-        let mut delta = counters;
-        // counter delta for this round
-        delta.rays -= before.rays;
-        delta.aabb_tests -= before.aabb_tests;
-        delta.prim_tests -= before.prim_tests;
-        delta.hits -= before.hits;
-        delta.heap_pushes -= before.heap_pushes;
-        delta.builds -= before.builds;
-        delta.build_prims -= before.build_prims;
-        delta.refits -= before.refits;
-        delta.refit_nodes -= before.refit_nodes;
-        delta.context_switches -= before.context_switches;
-        result.rounds.push(RoundStats {
-            round,
-            radius,
-            queries: queried,
-            survivors: active.len(),
-            prim_tests: delta.prim_tests,
-            sim_seconds: params.cost_model.seconds(&delta, 1),
-            wall_seconds: round_wall.elapsed_secs(),
-        });
-
-        if active.is_empty() {
-            break;
-        }
-        // 99th-percentile variant: stop once the cap radius has been
-        // searched; survivors stay incomplete by design.
-        if let Some(cap) = params.radius_cap {
-            if radius >= cap {
-                break;
-            }
-            radius = (radius * 2.0).min(cap);
-        } else {
-            radius *= 2.0;
-        }
-
-        // Alg. 3 lines 10–11: grow spheres + refit (charges 2 context
-        // switches, §6.2.1).
-        scene.refit(radius, &mut counters);
-        round += 1;
-    }
-
-    for (q, heap) in program.heaps.iter().enumerate() {
-        result.neighbors[q] = heap.sorted();
-    }
-    result.launches = launches;
-    result.counters = counters;
-    result.wall_seconds = wall_total.elapsed_secs();
-    result.finalize_sim_time(&params.cost_model);
+    let mut index = TrueKnnIndex::new(data.to_vec(), params.to_index_config());
+    let mut result = index.knn(queries, params.k);
+    index
+        .build_stats()
+        .absorb_into(&mut result, &params.cost_model);
     result
 }
 

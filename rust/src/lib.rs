@@ -17,6 +17,48 @@
 //!
 //! Python never runs on the query path: `runtime` loads the AOT artifacts
 //! through PJRT and executes them from Rust.
+//!
+//! # The `NeighborIndex` API: build once, query many
+//!
+//! Every search algorithm is a [`index::Backend`] behind the
+//! [`index::NeighborIndex`] trait. Build an index over your data once,
+//! then issue as many `knn` / `range` queries as you like — the
+//! acceleration structure (BVH, kd-tree, compiled PJRT executables)
+//! persists across calls and grows in place via `insert`:
+//!
+//! ```no_run
+//! use trueknn::dataset::DatasetKind;
+//! use trueknn::index::{Backend, IndexBuilder, NeighborIndex};
+//!
+//! let ds = DatasetKind::Taxi.generate(50_000, 42);
+//! let mut index = IndexBuilder::new(Backend::TrueKnn)
+//!     .seed(42)
+//!     .build(ds.points.clone());
+//! let nn5 = index.knn(&ds.points[..1024], 5);    // one BVH build, above
+//! let nn16 = index.knn(&ds.points[..1024], 16);  // reuses it (refit only)
+//! let near = index.range(&ds.points[..64], 0.05);
+//! assert_eq!(index.build_stats().counters.builds, 1);
+//! # let _ = (nn5, nn16, near);
+//! ```
+//!
+//! The batching service ([`coordinator::Service`]) holds one index per
+//! route path, so a serving session performs exactly one
+//! acceleration-structure build per dataset — visible as the `builds`
+//! service metric — instead of one per request batch.
+//!
+//! ## Migrating from the free functions
+//!
+//! The historical one-shot entry points remain as shims over the trait;
+//! each maps to a backend:
+//!
+//! | free function               | backend                        |
+//! |-----------------------------|--------------------------------|
+//! | `knn::trueknn`              | [`index::Backend::TrueKnn`]    |
+//! | `knn::fixed_radius_knns`    | [`index::Backend::FixedRadius`]|
+//! | `knn::rtnn::rtnn_knns`      | [`index::Backend::Rtnn`] (Morton reordering; the per-call partition culling stays one-shot) |
+//! | `knn::kdtree::KdTree::knn`  | [`index::Backend::KdTree`]     |
+//! | `knn::brute::brute_knn`     | [`index::Backend::BruteCpu`]   |
+//! | `runtime::PjrtBruteForce`   | [`index::Backend::BrutePjrt`]  |
 
 pub mod util;
 pub mod geom;
@@ -24,6 +66,7 @@ pub mod dataset;
 pub mod bvh;
 pub mod rt;
 pub mod knn;
+pub mod index;
 pub mod runtime;
 pub mod coordinator;
 pub mod bench;

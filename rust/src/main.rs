@@ -12,6 +12,7 @@ use trueknn::cli::{Args, CliError, Command};
 use trueknn::configx::KPolicy;
 use trueknn::dataset::{Dataset, DatasetKind};
 use trueknn::exp::{self, ExpScale};
+use trueknn::index::{Backend, IndexBuilder, IndexConfig, NeighborIndex};
 use trueknn::knn;
 use trueknn::{log_error, log_info};
 
@@ -40,7 +41,7 @@ fn print_usage() {
     println!("trueknn — RT-accelerated unbounded kNN search (ICS'23 reproduction)");
     println!("commands:");
     println!("  gen      generate a synthetic dataset to CSV");
-    println!("  knn      run one kNN search (trueknn|baseline|rtnn|brute|kdtree)");
+    println!("  knn      run one kNN search (trueknn|baseline|rtnn|kdtree|brute|pjrt)");
     println!("  exp      regenerate a paper table/figure");
     println!("  runtime  inspect the PJRT artifacts");
     println!("  serve    run the batching query service demo");
@@ -91,13 +92,13 @@ fn run_gen(a: &Args) -> Result<(), String> {
 // ------------------------------------------------------------------- knn
 
 fn cmd_knn() -> Command {
-    Command::new("knn", "run a single kNN search")
+    Command::new("knn", "run a single kNN search through the index API")
         .opt("dataset", "road|taxi|lidar|iono|uniform", "taxi")
         .opt("input", "CSV file instead of a generator", "")
         .opt("n", "number of points", "10000")
         .opt("k", "neighbors per point, or 'sqrt'", "5")
         .opt("seed", "PRNG seed", "42")
-        .opt("algo", "trueknn|baseline|rtnn|brute|kdtree", "trueknn")
+        .opt("algo", "trueknn|baseline|rtnn|kdtree|brute|pjrt", "trueknn")
         .opt("percentile", "cap search at this percentile radius", "")
         .opt("start-radius", "override the sampled start radius", "")
         .flag("verify", "check results against the exact kd-tree")
@@ -127,70 +128,73 @@ fn run_knn(a: &Args) -> Result<(), String> {
     };
     let seed: u64 = a.get_parse("seed", 42).map_err(|e| e.to_string())?;
 
-    let result = match algo.as_str() {
-        "trueknn" => {
-            let radius_cap = percentile.map(|p| {
+    // `rtnn` keeps the paper-faithful one-shot implementation: its
+    // per-partition data culling builds a scene per *query* chunk and
+    // cannot go through a persistent index (see knn::rtnn docs). This
+    // keeps `trueknn knn --algo rtnn` numbers consistent with the
+    // `trueknn exp rtnn` ablation. `Backend::Rtnn` (Morton reordering
+    // over one persistent BVH) remains available through the library.
+    if algo == "rtnn" {
+        let prof = trueknn::dataset::DistanceProfile::compute(&ds, k);
+        let radius = (prof.percentile_dist(percentile.unwrap_or(100.0)) * 1.0001) as f32;
+        let result = knn::rtnn::rtnn_knns(
+            &ds.points,
+            &ds.points,
+            &knn::rtnn::RtnnParams {
+                k,
+                radius,
+                ..Default::default()
+            },
+        );
+        return report_knn(a, &ds, k, "rtnn", percentile, &result);
+    }
+
+    // every other algorithm goes through the unified index API:
+    // configure, build once, query
+    let backend: Backend = algo.parse()?;
+    let mut cfg = IndexConfig {
+        seed,
+        ..Default::default()
+    };
+    match backend {
+        Backend::TrueKnn => {
+            cfg.radius_cap = percentile.map(|p| {
                 let prof = trueknn::dataset::DistanceProfile::compute(&ds, k);
                 (prof.percentile_dist(p) * 1.0001) as f32
             });
-            let start_radius = match a.get_str("start-radius", "").as_str() {
+            cfg.start_radius = match a.get_str("start-radius", "").as_str() {
                 "" => None,
                 s => Some(s.parse::<f32>().map_err(|_| "bad start-radius")?),
             };
-            knn::trueknn(
-                &ds.points,
-                &ds.points,
-                &knn::TrueKnnParams {
-                    k,
-                    seed,
-                    radius_cap,
-                    start_radius,
-                    ..Default::default()
-                },
-            )
         }
-        "baseline" => {
+        Backend::FixedRadius | Backend::Rtnn => {
             let prof = trueknn::dataset::DistanceProfile::compute(&ds, k);
             let radius = (prof.percentile_dist(percentile.unwrap_or(100.0)) * 1.0001) as f32;
-            log_info!("baseline radius (maxDist rule): {radius}");
-            knn::fixed_radius_knns(
-                &ds.points,
-                &ds.points,
-                &knn::FixedRadiusParams {
-                    k,
-                    radius,
-                    ..Default::default()
-                },
-            )
+            log_info!("fixed search radius (maxDist rule): {radius}");
+            cfg.radius = Some(radius);
         }
-        "rtnn" => {
-            let prof = trueknn::dataset::DistanceProfile::compute(&ds, k);
-            let radius = (prof.percentile_dist(percentile.unwrap_or(100.0)) * 1.0001) as f32;
-            knn::rtnn::rtnn_knns(
-                &ds.points,
-                &ds.points,
-                &knn::rtnn::RtnnParams {
-                    k,
-                    radius,
-                    ..Default::default()
-                },
-            )
-        }
-        "brute" => knn::brute::brute_knn(&ds.points, &ds.points, k, true),
-        "kdtree" => {
-            let tree = knn::kdtree::KdTree::build(&ds.points);
-            let mut res = knn::KnnResult::new(ds.len());
-            let sw = trueknn::util::Stopwatch::start();
-            for (i, &p) in ds.points.iter().enumerate() {
-                res.neighbors[i] = tree.knn_excluding(p, k, Some(i as u32));
-            }
-            res.wall_seconds = sw.elapsed_secs();
-            res.sim_seconds = res.wall_seconds;
-            res
-        }
-        other => return Err(format!("unknown algo '{other}'")),
-    };
+        Backend::KdTree | Backend::BruteCpu | Backend::BrutePjrt => {}
+    }
+    let cost_model = cfg.cost_model;
+    let mut index = IndexBuilder::new(backend).config(cfg).build(ds.points.clone());
+    let mut result = index.knn(&ds.points, k);
+    // the one-shot CLI reports build + query as one number, like the
+    // original free functions did
+    if matches!(backend, Backend::TrueKnn | Backend::FixedRadius | Backend::Rtnn) {
+        index.build_stats().absorb_into(&mut result, &cost_model);
+    }
+    report_knn(a, &ds, k, &algo, percentile, &result)
+}
 
+/// Shared result reporting + optional oracle verification for `knn`.
+fn report_knn(
+    a: &Args,
+    ds: &Dataset,
+    k: usize,
+    algo: &str,
+    percentile: Option<f64>,
+    result: &trueknn::knn::KnnResult,
+) -> Result<(), String> {
     println!(
         "algo={algo} dataset={} n={} k={k}",
         ds.kind.name(),

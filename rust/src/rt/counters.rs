@@ -45,6 +45,23 @@ impl HwCounters {
         self.refit_nodes += o.refit_nodes;
         self.context_switches += o.context_switches;
     }
+
+    /// Field-wise difference against an earlier snapshot of the same
+    /// accumulator (used for per-round telemetry deltas).
+    pub fn delta(&self, before: &HwCounters) -> HwCounters {
+        HwCounters {
+            rays: self.rays - before.rays,
+            aabb_tests: self.aabb_tests - before.aabb_tests,
+            prim_tests: self.prim_tests - before.prim_tests,
+            hits: self.hits - before.hits,
+            heap_pushes: self.heap_pushes - before.heap_pushes,
+            builds: self.builds - before.builds,
+            build_prims: self.build_prims - before.build_prims,
+            refits: self.refits - before.refits,
+            refit_nodes: self.refit_nodes - before.refit_nodes,
+            context_switches: self.context_switches - before.context_switches,
+        }
+    }
 }
 
 #[cfg(test)]

@@ -1,25 +1,53 @@
 //! PJRT client wrapper: compile HLO-text artifacts once, execute many
 //! times. Mirrors /opt/xla-example/load_hlo with a program registry on
 //! top.
+//!
+//! The real client depends on the `xla` crate, which is unavailable in
+//! the offline registry; it compiles only under `--cfg trueknn_xla`
+//! (see Cargo.toml). The default build ships a stub whose `load`
+//! reports the runtime as unavailable, so every call site falls back to
+//! the CPU brute-force path and all tests skip cleanly.
 
 use super::manifest::{ArtifactSpec, Manifest};
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RuntimeError {
-    #[error("xla: {0}")]
     Xla(String),
-    #[error("manifest: {0}")]
-    Manifest(#[from] super::manifest::ManifestError),
-    #[error("unknown program '{0}'")]
+    Manifest(super::manifest::ManifestError),
     UnknownProgram(String),
-    #[error("artifact dir not found; run `make artifacts` first")]
     NoArtifacts,
-    #[error("shape mismatch: {0}")]
     Shape(String),
+    /// Compiled without `--cfg trueknn_xla`: no PJRT client in this build.
+    Unavailable,
 }
 
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::Xla(e) => write!(f, "xla: {e}"),
+            RuntimeError::Manifest(e) => write!(f, "manifest: {e}"),
+            RuntimeError::UnknownProgram(name) => write!(f, "unknown program '{name}'"),
+            RuntimeError::NoArtifacts => {
+                write!(f, "artifact dir not found; run `make artifacts` first")
+            }
+            RuntimeError::Shape(e) => write!(f, "shape mismatch: {e}"),
+            RuntimeError::Unavailable => {
+                write!(f, "PJRT disabled: build with --cfg trueknn_xla and the xla crate")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+impl From<super::manifest::ManifestError> for RuntimeError {
+    fn from(e: super::manifest::ManifestError) -> Self {
+        RuntimeError::Manifest(e)
+    }
+}
+
+#[cfg(trueknn_xla)]
 impl From<xla::Error> for RuntimeError {
     fn from(e: xla::Error) -> Self {
         RuntimeError::Xla(e.to_string())
@@ -27,6 +55,7 @@ impl From<xla::Error> for RuntimeError {
 }
 
 /// One compiled program + its lowering-time shape contract.
+#[cfg(trueknn_xla)]
 pub struct Program {
     pub spec: ArtifactSpec,
     exe: xla::PjRtLoadedExecutable,
@@ -34,9 +63,11 @@ pub struct Program {
 
 /// The process-wide PJRT runtime: CPU client + compiled program registry.
 pub struct PjrtRuntime {
+    #[cfg(trueknn_xla)]
     #[allow(dead_code)]
     client: xla::PjRtClient,
-    programs: HashMap<String, Program>,
+    #[cfg(trueknn_xla)]
+    programs: std::collections::HashMap<String, Program>,
     pub manifest: Manifest,
     pub dir: PathBuf,
 }
@@ -44,10 +75,11 @@ pub struct PjrtRuntime {
 impl PjrtRuntime {
     /// Load every artifact in `dir` (compiling is ~ms per program on the
     /// CPU plugin; done once at startup, never on the query path).
+    #[cfg(trueknn_xla)]
     pub fn load(dir: &Path) -> Result<PjrtRuntime, RuntimeError> {
         let manifest = Manifest::load(dir)?;
         let client = xla::PjRtClient::cpu()?;
-        let mut programs = HashMap::new();
+        let mut programs = std::collections::HashMap::new();
         for spec in &manifest.artifacts {
             let proto = xla::HloModuleProto::from_text_file(dir.join(&spec.file))?;
             let comp = xla::XlaComputation::from_proto(&proto);
@@ -68,23 +100,44 @@ impl PjrtRuntime {
         })
     }
 
+    /// Stub load: validates the manifest so errors are still precise,
+    /// then reports the runtime as unavailable in this build.
+    #[cfg(not(trueknn_xla))]
+    pub fn load(dir: &Path) -> Result<PjrtRuntime, RuntimeError> {
+        let _manifest = Manifest::load(dir)?;
+        Err(RuntimeError::Unavailable)
+    }
+
     /// Load from the default artifact location.
     pub fn load_default() -> Result<PjrtRuntime, RuntimeError> {
         let dir = super::find_artifact_dir().ok_or(RuntimeError::NoArtifacts)?;
         Self::load(&dir)
     }
 
+    #[cfg(trueknn_xla)]
     pub fn program_names(&self) -> Vec<&str> {
         self.programs.keys().map(String::as_str).collect()
     }
 
+    #[cfg(not(trueknn_xla))]
+    pub fn program_names(&self) -> Vec<&str> {
+        Vec::new()
+    }
+
+    #[cfg(trueknn_xla)]
     pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
         self.programs.get(name).map(|p| &p.spec)
+    }
+
+    #[cfg(not(trueknn_xla))]
+    pub fn spec(&self, _name: &str) -> Option<&ArtifactSpec> {
+        None
     }
 
     /// Execute a brute_knn program: `queries` is Q*3 floats, `data` is
     /// N*3 floats, both exactly the lowered shape (the caller pads).
     /// Returns (dists [Q*k], idx [Q*k]) row-major.
+    #[cfg(trueknn_xla)]
     pub fn run_brute_knn(
         &self,
         name: &str,
@@ -117,7 +170,18 @@ impl PjrtRuntime {
         Ok((dists.to_vec::<f32>()?, idx.to_vec::<i32>()?))
     }
 
+    #[cfg(not(trueknn_xla))]
+    pub fn run_brute_knn(
+        &self,
+        _name: &str,
+        _queries: &[f32],
+        _data: &[f32],
+    ) -> Result<(Vec<f32>, Vec<i32>), RuntimeError> {
+        Err(RuntimeError::Unavailable)
+    }
+
     /// Execute a radius_count program. Returns per-query counts [Q].
+    #[cfg(trueknn_xla)]
     pub fn run_radius_count(
         &self,
         name: &str,
@@ -143,6 +207,17 @@ impl PjrtRuntime {
         let result = prog.exe.execute::<xla::Literal>(&[ql, dl, rl])?[0][0].to_literal_sync()?;
         let counts = result.to_tuple1()?;
         Ok(counts.to_vec::<i32>()?)
+    }
+
+    #[cfg(not(trueknn_xla))]
+    pub fn run_radius_count(
+        &self,
+        _name: &str,
+        _queries: &[f32],
+        _data: &[f32],
+        _radius: f32,
+    ) -> Result<Vec<i32>, RuntimeError> {
+        Err(RuntimeError::Unavailable)
     }
 }
 

@@ -28,16 +28,37 @@ pub struct Manifest {
     pub artifacts: Vec<ArtifactSpec>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ManifestError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("json: {0}")]
-    Json(#[from] crate::configx::json::JsonError),
-    #[error("manifest missing field: {0}")]
+    Io(std::io::Error),
+    Json(crate::configx::json::JsonError),
     Missing(&'static str),
-    #[error("unknown artifact kind: {0}")]
     UnknownKind(String),
+}
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManifestError::Io(e) => write!(f, "io: {e}"),
+            ManifestError::Json(e) => write!(f, "json: {e}"),
+            ManifestError::Missing(field) => write!(f, "manifest missing field: {field}"),
+            ManifestError::UnknownKind(kind) => write!(f, "unknown artifact kind: {kind}"),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {}
+
+impl From<std::io::Error> for ManifestError {
+    fn from(e: std::io::Error) -> Self {
+        ManifestError::Io(e)
+    }
+}
+
+impl From<crate::configx::json::JsonError> for ManifestError {
+    fn from(e: crate::configx::json::JsonError) -> Self {
+        ManifestError::Json(e)
+    }
 }
 
 impl Manifest {

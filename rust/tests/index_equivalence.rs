@@ -1,0 +1,119 @@
+//! Backend-equivalence property suite: every `Backend` variant must
+//! agree with the exact kd-tree oracle on every synthetic dataset kind —
+//! exact neighbor distances, lists sorted ascending, self-exclusion
+//! respected — for k ∈ {1, 5, 16}, including *repeated* queries against
+//! the same index instance (the stale-cached-structure trap: TrueKNN
+//! leaves its BVH at a grown radius, `range` refits it to an arbitrary
+//! one; the next query must still be exact).
+
+use trueknn::dataset::DatasetKind;
+use trueknn::index::{Backend, IndexBuilder, NeighborIndex};
+use trueknn::knn::kdtree::KdTree;
+use trueknn::knn::Neighbor;
+
+const KS: [usize; 3] = [1, 5, 16];
+
+fn assert_exact(got: &[Neighbor], want: &[Neighbor], tag: &str) {
+    assert_eq!(got.len(), want.len(), "{tag}: count");
+    for (g, w) in got.iter().zip(want) {
+        assert!(
+            (g.dist - w.dist).abs() < 1e-4,
+            "{tag}: {} vs {}",
+            g.dist,
+            w.dist
+        );
+    }
+    for w in got.windows(2) {
+        assert!(w[0].dist <= w[1].dist, "{tag}: not sorted ascending");
+    }
+}
+
+#[test]
+fn every_backend_matches_the_kdtree_oracle() {
+    for kind in DatasetKind::ALL {
+        let ds = kind.generate(400, 123);
+        let tree = KdTree::build(&ds.points);
+        for backend in Backend::ALL {
+            // exclude_self defaults to true: query j excludes data point j
+            let mut index = IndexBuilder::new(backend).build(ds.points.clone());
+            let builds_at_start = index.build_stats().counters.builds;
+            for k in KS {
+                // two passes against the SAME instance: catches results
+                // computed off a structure left stale by the previous call
+                for pass in 0..2 {
+                    let res = index.knn(&ds.points, k);
+                    for (i, got) in res.neighbors.iter().enumerate() {
+                        let tag = format!("{backend}/{kind:?} k={k} pass={pass} query={i}");
+                        assert!(
+                            got.iter().all(|n| n.idx as usize != i),
+                            "{tag}: self not excluded"
+                        );
+                        let want = tree.knn_excluding(ds.points[i], k, Some(i as u32));
+                        assert_exact(got, &want, &tag);
+                    }
+                }
+            }
+            assert_eq!(
+                index.build_stats().counters.builds,
+                builds_at_start,
+                "{backend}/{kind:?}: querying must never rebuild the structure"
+            );
+        }
+    }
+}
+
+#[test]
+fn range_between_knns_does_not_poison_the_structure() {
+    // range() refits scene-backed structures to an arbitrary radius; the
+    // next knn must refit back and stay exact
+    let ds = DatasetKind::Taxi.generate(500, 124);
+    let tree = KdTree::build(&ds.points);
+    for backend in Backend::ALL {
+        let mut index = IndexBuilder::new(backend).build(ds.points.clone());
+        let _ = index.knn(&ds.points, 5);
+        let _ = index.range(&ds.points[..4], 1e-4);
+        let res = index.knn(&ds.points, 5);
+        for (i, got) in res.neighbors.iter().enumerate() {
+            let want = tree.knn_excluding(ds.points[i], 5, Some(i as u32));
+            assert_exact(got, &want, &format!("{backend} after range, query {i}"));
+        }
+    }
+}
+
+#[test]
+fn external_queries_agree_across_backends() {
+    // queries that are not dataset members: exclude_self off
+    let ds = DatasetKind::Iono.generate(600, 125);
+    let queries = DatasetKind::Uniform.generate(48, 126).points;
+    let tree = KdTree::build(&ds.points);
+    for backend in Backend::ALL {
+        let mut index = IndexBuilder::new(backend)
+            .exclude_self(false)
+            .build(ds.points.clone());
+        let res = index.knn(&queries, 5);
+        for (i, got) in res.neighbors.iter().enumerate() {
+            let want = tree.knn(queries[i], 5);
+            assert_exact(got, &want, &format!("{backend} external query {i}"));
+        }
+    }
+}
+
+#[test]
+fn insert_keeps_every_backend_on_the_oracle() {
+    let ds = DatasetKind::Road.generate(300, 127);
+    let extra = DatasetKind::Road.generate(60, 128).points;
+    let all: Vec<_> = ds.points.iter().chain(&extra).copied().collect();
+    let tree = KdTree::build(&all);
+    for backend in Backend::ALL {
+        let mut index = IndexBuilder::new(backend)
+            .exclude_self(false)
+            .build(ds.points.clone());
+        index.insert(&extra);
+        assert_eq!(index.len(), all.len(), "{backend}");
+        let res = index.knn(&all[..64], 5);
+        for (i, got) in res.neighbors.iter().enumerate() {
+            let want = tree.knn(all[i], 5);
+            assert_exact(got, &want, &format!("{backend} post-insert query {i}"));
+        }
+    }
+}
