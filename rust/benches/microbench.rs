@@ -126,4 +126,9 @@ fn main() {
     }
 
     t.print();
+
+    // ---- PR2: parallel launch engine + shell re-query -------------------
+    // (same measurements `trueknn bench` writes to BENCH_PR2.json)
+    let report = trueknn::bench::pr2::run(50_000, 10_000, cfg.iters);
+    trueknn::bench::pr2::render(&report).print();
 }

@@ -4,6 +4,8 @@
 //! mean/median/stddev/min. Output is a fixed-width table so `cargo
 //! bench` logs read like the paper's tables.
 
+pub mod pr2;
+
 use crate::util::stats::{median, OnlineStats};
 use crate::util::Stopwatch;
 

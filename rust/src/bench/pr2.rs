@@ -1,0 +1,250 @@
+//! The PR2 perf microbench: parallel launch throughput and TrueKNN
+//! shell re-query heap traffic, emitted as `BENCH_PR2.json` so CI can
+//! archive the perf trajectory run over run.
+//!
+//! Two measurements:
+//!
+//! 1. **Launch throughput** — one `Pipeline::launch_parallel` over every
+//!    point of a uniform dataset (spheres at the sampled Alg. 2 start
+//!    radius, k = 5), at 1 thread and at all cores. The wall-clock
+//!    numbers are machine-dependent; the JSON records both so the
+//!    speedup ratio is what gets tracked.
+//! 2. **Shell re-query** — a full TrueKNN search on the clustered taxi
+//!    analog with shell re-query on vs. the reset-per-round baseline.
+//!    `heap_pushes` is a deterministic counter, so this pair is exact
+//!    telemetry, not timing.
+
+use crate::configx::Json;
+use crate::dataset::DatasetKind;
+use crate::exec::Executor;
+use crate::geom::Ray;
+use crate::index::{Backend, IndexBuilder};
+use crate::knn::program::KnnProgram;
+use crate::knn::random_sample_radius;
+use crate::rt::{HwCounters, Pipeline, Scene};
+use crate::util::Stopwatch;
+
+use super::{fmt_count, Table};
+
+#[derive(Clone, Debug)]
+pub struct LaunchRow {
+    pub threads: usize,
+    /// Best-of-`iters` wall seconds for one full launch.
+    pub seconds: f64,
+    pub rays_per_s: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Pr2Report {
+    pub launch_n: usize,
+    pub launch_radius: f32,
+    pub iters: usize,
+    pub launch: Vec<LaunchRow>,
+    /// Throughput at max threads / throughput at 1 thread.
+    pub launch_speedup: f64,
+    pub shell_n: usize,
+    pub shell_k: usize,
+    pub shell_rounds: usize,
+    pub heap_pushes_shell: u64,
+    pub heap_pushes_reset: u64,
+    /// Sanity: both variants returned identical neighbor distances.
+    pub shell_exact: bool,
+}
+
+/// Run both measurements. `iters` timed repetitions per configuration,
+/// reporting the minimum (the least-perturbed sample).
+pub fn run(launch_n: usize, shell_n: usize, iters: usize) -> Pr2Report {
+    let iters = iters.max(1);
+
+    // ---- 1. launch throughput, 1 thread vs all cores ----------------
+    let ds = DatasetKind::Uniform.generate(launch_n, 42);
+    let radius = random_sample_radius(&ds.points, 42);
+    let mut c = HwCounters::new();
+    let scene = Scene::build(ds.points.clone(), radius, &mut c);
+    let rays: Vec<Ray> = ds
+        .points
+        .iter()
+        .enumerate()
+        .map(|(i, &p)| Ray::knn(p, i as u32))
+        .collect();
+
+    // 1 and all-cores for the trajectory, plus the acceptance point at 4
+    // threads (measured even on smaller machines — oversubscription is a
+    // valid sample, just bounded by the cores available).
+    let max_threads = Executor::auto().threads();
+    let mut thread_counts = vec![1usize, 4, max_threads];
+    thread_counts.sort_unstable();
+    thread_counts.dedup();
+    let mut launch = Vec::new();
+    for &t in &thread_counts {
+        let exec = Executor::new(t);
+        let mut best = f64::INFINITY;
+        for it in 0..=iters {
+            let mut prog = KnnProgram::new(ds.len(), 5, true);
+            let mut counters = HwCounters::new();
+            let sw = Stopwatch::start();
+            Pipeline::launch_parallel(&scene, &rays, &mut prog, &mut counters, &exec);
+            let s = sw.elapsed_secs();
+            if it > 0 {
+                // iteration 0 is warmup
+                best = best.min(s);
+            }
+        }
+        launch.push(LaunchRow {
+            threads: t,
+            seconds: best,
+            rays_per_s: ds.len() as f64 / best.max(1e-12),
+        });
+    }
+    // speedup is all-cores vs 1 thread — NOT the pinned 4-thread sample,
+    // which on small machines is an oversubscription artifact
+    let launch_speedup = {
+        let one = launch.iter().find(|r| r.threads == 1);
+        let max = launch.iter().find(|r| r.threads == max_threads);
+        match (one, max) {
+            (Some(one), Some(max)) if max_threads > 1 => {
+                max.rays_per_s / one.rays_per_s.max(1e-12)
+            }
+            _ => 1.0,
+        }
+    };
+
+    // ---- 2. shell re-query vs reset-per-round heap traffic ----------
+    let shell_k = 5usize;
+    let tds = DatasetKind::Taxi.generate(shell_n, 42);
+    let mut shell_idx = IndexBuilder::new(Backend::TrueKnn)
+        .seed(42)
+        .build(tds.points.clone());
+    let shell_res = shell_idx.knn(&tds.points, shell_k);
+    let mut reset_idx = IndexBuilder::new(Backend::TrueKnn)
+        .seed(42)
+        .shell_requery(false)
+        .build(tds.points.clone());
+    let reset_res = reset_idx.knn(&tds.points, shell_k);
+    let shell_exact = shell_res
+        .neighbors
+        .iter()
+        .zip(&reset_res.neighbors)
+        .all(|(a, b)| {
+            a.len() == b.len()
+                && a.iter()
+                    .zip(b)
+                    .all(|(x, y)| (x.dist - y.dist).abs() < 1e-6)
+        });
+
+    Pr2Report {
+        launch_n: ds.len(),
+        launch_radius: radius,
+        iters,
+        launch,
+        launch_speedup,
+        shell_n: tds.len(),
+        shell_k,
+        shell_rounds: shell_res.rounds.len(),
+        heap_pushes_shell: shell_res.counters.heap_pushes,
+        heap_pushes_reset: reset_res.counters.heap_pushes,
+        shell_exact,
+    }
+}
+
+pub fn to_json(r: &Pr2Report) -> Json {
+    let threads: Vec<Json> = r
+        .launch
+        .iter()
+        .map(|row| {
+            Json::obj(vec![
+                ("threads", Json::Num(row.threads as f64)),
+                ("seconds", Json::Num(row.seconds)),
+                ("rays_per_s", Json::Num(row.rays_per_s)),
+            ])
+        })
+        .collect();
+    let savings = if r.heap_pushes_reset > 0 {
+        1.0 - r.heap_pushes_shell as f64 / r.heap_pushes_reset as f64
+    } else {
+        0.0
+    };
+    Json::obj(vec![
+        ("bench", Json::Str("pr2".into())),
+        (
+            "launch",
+            Json::obj(vec![
+                ("dataset", Json::Str("uniform".into())),
+                ("n", Json::Num(r.launch_n as f64)),
+                ("k", Json::Num(5.0)),
+                ("radius", Json::Num(r.launch_radius as f64)),
+                ("iters", Json::Num(r.iters as f64)),
+                ("threads", Json::Arr(threads)),
+                ("speedup_max_vs_1", Json::Num(r.launch_speedup)),
+            ]),
+        ),
+        (
+            "trueknn_shell",
+            Json::obj(vec![
+                ("dataset", Json::Str("taxi".into())),
+                ("n", Json::Num(r.shell_n as f64)),
+                ("k", Json::Num(r.shell_k as f64)),
+                ("rounds", Json::Num(r.shell_rounds as f64)),
+                ("heap_pushes_shell", Json::Num(r.heap_pushes_shell as f64)),
+                ("heap_pushes_reset", Json::Num(r.heap_pushes_reset as f64)),
+                ("push_savings", Json::Num(savings)),
+                ("results_match", Json::Bool(r.shell_exact)),
+            ]),
+        ),
+    ])
+}
+
+pub fn render(r: &Pr2Report) -> Table {
+    let mut t = Table::new(
+        "PR2 microbench: parallel launch + shell re-query",
+        &["metric", "value"],
+    );
+    for row in &r.launch {
+        t.row(vec![
+            format!("launch {}k rays, {} thread(s)", r.launch_n / 1000, row.threads),
+            format!("{:.0} rays/s ({:.3}s)", row.rays_per_s, row.seconds),
+        ]);
+    }
+    t.row(vec![
+        "launch speedup (max vs 1 thread)".into(),
+        format!("{:.2}x", r.launch_speedup),
+    ]);
+    t.row(vec![
+        format!("TrueKNN heap pushes, shell re-query (taxi {}k)", r.shell_n / 1000),
+        fmt_count(r.heap_pushes_shell),
+    ]);
+    t.row(vec![
+        "TrueKNN heap pushes, reset-per-round".into(),
+        fmt_count(r.heap_pushes_reset),
+    ]);
+    t.row(vec![
+        "shell results exact vs baseline".into(),
+        r.shell_exact.to_string(),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_runs_small_and_serializes() {
+        let r = run(2_000, 800, 1);
+        assert_eq!(r.launch_n, 2_000);
+        assert!(r.launch[0].rays_per_s > 0.0);
+        assert!(r.shell_exact, "shell must not change results");
+        assert!(
+            r.heap_pushes_shell <= r.heap_pushes_reset,
+            "shell {} vs reset {}",
+            r.heap_pushes_shell,
+            r.heap_pushes_reset
+        );
+        let j = to_json(&r).to_string();
+        assert!(j.contains("\"bench\":\"pr2\""));
+        assert!(j.contains("heap_pushes_shell"));
+        // and it must parse back
+        let parsed = crate::configx::parse_json(&j).unwrap();
+        assert!(parsed.get("launch").is_some());
+    }
+}

@@ -4,20 +4,28 @@
 //! Supports the two lifecycle operations the paper relies on:
 //! - `build`: construct the tree over primitive AABBs (median-split on
 //!   the longest centroid axis, with an optional SAH builder used by the
-//!   ablation bench);
+//!   ablation bench); `build_parallel` forks subtrees across the
+//!   [`crate::exec`] engine and produces a bitwise-identical arena;
 //! - `refit`: after every TrueKNN round grows the sphere radius, the
 //!   boxes are re-fit bottom-up *without* changing topology — the OptiX
 //!   refit the paper measured as 10–25% faster than rebuilding (§4).
+//!   `refit_parallel` sweeps independent subtrees concurrently.
+//!
+//! The arena is laid out in **preorder** (node, left-subtree block,
+//! right-subtree block). Two consumers rely on that invariant: the
+//! refit reverse sweep (children have larger indices than parents) and
+//! the parallel refit (every subtree is one contiguous node range).
 
 mod builder;
 
 pub use builder::BuildStrategy;
 
+use crate::exec::Executor;
 use crate::geom::{Aabb, Point3};
 
 /// Arena node. Internal nodes store child indices; leaves store a range
 /// into `prim_order`.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Node {
     pub aabb: Aabb,
     /// Index of the left child, or `u32::MAX` for leaves.
@@ -46,14 +54,31 @@ pub struct Bvh {
     pub leaf_size: u32,
 }
 
+/// Trees below this node count refit serially: the frontier bookkeeping
+/// would cost more than the sweep itself.
+const PAR_REFIT_MIN: usize = 4096;
+
 impl Bvh {
-    /// Build over primitive AABBs with the default strategy.
+    /// Build over primitive AABBs with the default strategy (serial).
     pub fn build(aabbs: &[Aabb]) -> Bvh {
-        builder::build(aabbs, BuildStrategy::MedianSplit, 4)
+        builder::build(aabbs, BuildStrategy::MedianSplit, 4, Executor::serial())
     }
 
     pub fn build_with(aabbs: &[Aabb], strategy: BuildStrategy, leaf_size: u32) -> Bvh {
-        builder::build(aabbs, strategy, leaf_size)
+        builder::build(aabbs, strategy, leaf_size, Executor::serial())
+    }
+
+    /// Build with subtree-level parallelism. The output arena is
+    /// bitwise-identical to the serial build at any thread count (the
+    /// builder grafts forked subtrees back at the serial preorder
+    /// offsets).
+    pub fn build_parallel(
+        aabbs: &[Aabb],
+        strategy: BuildStrategy,
+        leaf_size: u32,
+        exec: Executor,
+    ) -> Bvh {
+        builder::build(aabbs, strategy, leaf_size, exec)
     }
 
     pub fn is_empty(&self) -> bool {
@@ -65,37 +90,137 @@ impl Bvh {
     /// single reverse sweep suffices. Returns the number of nodes
     /// refit (the simulator charges refit cost per node).
     pub fn refit(&mut self, aabbs: &[Aabb]) -> usize {
-        for i in (0..self.nodes.len()).rev() {
-            if self.nodes[i].is_leaf() {
-                let first = self.nodes[i].first_prim as usize;
-                let count = self.nodes[i].prim_count as usize;
-                let mut b = Aabb::EMPTY;
-                for &prim in &self.prim_order[first..first + count] {
-                    b = b.union(&aabbs[prim as usize]);
-                }
-                self.nodes[i].aabb = b;
-            } else {
-                let l = self.nodes[i].left as usize;
-                let r = self.nodes[i].right as usize;
-                self.nodes[i].aabb = self.nodes[l].aabb.union(&self.nodes[r].aabb);
-            }
-        }
-        self.nodes.len()
+        self.refit_parallel(aabbs, Executor::serial())
     }
 
-    /// Point-query traversal (the degenerate kNN-ray case): visit every
-    /// leaf whose AABB contains `p`, invoking `on_leaf(prim_range)`.
-    /// `on_node` fires per AABB containment test so the RT simulator can
-    /// tally the hardware-unit work.
-    pub fn visit_point<FN, FL>(&self, p: Point3, mut on_node: FN, mut on_leaf: FL)
-    where
-        FN: FnMut(),
-        FL: FnMut(&[u32]),
+    /// [`Bvh::refit`] with per-subtree parallelism: descend from the root
+    /// to a frontier of independent subtrees, sweep each subtree's
+    /// contiguous arena block on its own thread, then fix the handful of
+    /// ancestor nodes above the frontier serially. Box values are unions
+    /// in a fixed per-node order, so the result is bitwise-identical to
+    /// the serial sweep.
+    pub fn refit_parallel(&mut self, aabbs: &[Aabb], exec: Executor) -> usize {
+        let n_nodes = self.nodes.len();
+        if n_nodes == 0 {
+            return 0;
+        }
+        if exec.threads() <= 1 || n_nodes < PAR_REFIT_MIN {
+            refit_block(&mut self.nodes, 0, &self.prim_order, aabbs);
+            return n_nodes;
+        }
+
+        // Frontier: split one level at a time until we have enough
+        // independent subtrees to feed every worker a few blocks.
+        let target = exec.threads() * 4;
+        let mut frontier: Vec<u32> = vec![self.root];
+        let mut interior: Vec<u32> = Vec::new();
+        while frontier.len() < target
+            && frontier.iter().any(|&i| !self.nodes[i as usize].is_leaf())
+        {
+            let mut next = Vec::with_capacity(frontier.len() * 2);
+            for &i in &frontier {
+                let nd = &self.nodes[i as usize];
+                if nd.is_leaf() {
+                    next.push(i);
+                } else {
+                    interior.push(i);
+                    next.push(nd.left);
+                    next.push(nd.right);
+                }
+            }
+            frontier = next;
+        }
+
+        // Preorder layout ⇒ each frontier subtree is one contiguous node
+        // block; carve them out as disjoint mutable slices.
+        let mut blocks: Vec<(usize, usize)> = frontier
+            .iter()
+            .map(|&f| (f as usize, self.subtree_end(f)))
+            .collect();
+        blocks.sort_unstable();
+        let prim_order = &self.prim_order;
+        let mut tasks: Vec<(usize, &mut [Node])> = Vec::with_capacity(blocks.len());
+        let mut rest: &mut [Node] = &mut self.nodes;
+        let mut consumed = 0usize;
+        for &(start, end) in &blocks {
+            debug_assert!(start >= consumed && end > start);
+            let (_gap, tail) = std::mem::take(&mut rest).split_at_mut(start - consumed);
+            let (blk, tail) = tail.split_at_mut(end - start);
+            tasks.push((start, blk));
+            rest = tail;
+            consumed = end;
+        }
+
+        std::thread::scope(|s| {
+            // Static round-robin over the index-sorted blocks: adjacent
+            // blocks (which share subtree depth, hence size class) land
+            // on different workers. Bucket 0 runs on the calling thread.
+            let workers = exec.threads().min(tasks.len());
+            let mut buckets: Vec<Vec<(usize, &mut [Node])>> =
+                (0..workers).map(|_| Vec::new()).collect();
+            for (i, t) in tasks.into_iter().enumerate() {
+                buckets[i % workers].push(t);
+            }
+            let mut buckets = buckets.into_iter();
+            let own = buckets.next().unwrap_or_default();
+            for bucket in buckets {
+                s.spawn(move || {
+                    for (offset, blk) in bucket {
+                        refit_block(blk, offset, prim_order, aabbs);
+                    }
+                });
+            }
+            for (offset, blk) in own {
+                refit_block(blk, offset, prim_order, aabbs);
+            }
+        });
+
+        // Ancestors above the frontier, children-first (reverse arena
+        // order respects the child-after-parent invariant).
+        interior.sort_unstable();
+        for &i in interior.iter().rev() {
+            let i = i as usize;
+            let l = self.nodes[i].left as usize;
+            let r = self.nodes[i].right as usize;
+            let merged = self.nodes[l].aabb.union(&self.nodes[r].aabb);
+            self.nodes[i].aabb = merged;
+        }
+        n_nodes
+    }
+
+    /// One-past-the-end of `idx`'s contiguous preorder block: the
+    /// rightmost descendant leaf plus one.
+    fn subtree_end(&self, mut idx: u32) -> usize {
+        loop {
+            let n = &self.nodes[idx as usize];
+            if n.is_leaf() {
+                return idx as usize + 1;
+            }
+            idx = n.right;
+        }
+    }
+
+    /// The single traversal core shared by [`Bvh::visit_point`] and the
+    /// RT pipeline's launch loop (they must not drift): visit every node
+    /// whose AABB contains `p`, firing `on_node` per containment test and
+    /// `on_leaf(first_prim, prim_count)` per containing leaf. The caller
+    /// supplies the stack so a launch can reuse one allocation across
+    /// rays.
+    #[inline(always)]
+    pub fn for_each_leaf_containing<N, L>(
+        &self,
+        p: Point3,
+        stack: &mut Vec<u32>,
+        mut on_node: N,
+        mut on_leaf: L,
+    ) where
+        N: FnMut(),
+        L: FnMut(usize, usize),
     {
         if self.nodes.is_empty() {
             return;
         }
-        let mut stack: Vec<u32> = Vec::with_capacity(64);
+        stack.clear();
         stack.push(self.root);
         while let Some(idx) = stack.pop() {
             let node = &self.nodes[idx as usize];
@@ -104,14 +229,28 @@ impl Bvh {
                 continue;
             }
             if node.is_leaf() {
-                let first = node.first_prim as usize;
-                let count = node.prim_count as usize;
-                on_leaf(&self.prim_order[first..first + count]);
+                on_leaf(node.first_prim as usize, node.prim_count as usize);
             } else {
                 stack.push(node.left);
                 stack.push(node.right);
             }
         }
+    }
+
+    /// Point-query traversal (the degenerate kNN-ray case): visit every
+    /// leaf whose AABB contains `p`, invoking `on_leaf(prim_range)`.
+    /// `on_node` fires per AABB containment test so the RT simulator can
+    /// tally the hardware-unit work. Thin wrapper over
+    /// [`Bvh::for_each_leaf_containing`].
+    pub fn visit_point<FN, FL>(&self, p: Point3, on_node: FN, mut on_leaf: FL)
+    where
+        FN: FnMut(),
+        FL: FnMut(&[u32]),
+    {
+        let mut stack: Vec<u32> = Vec::with_capacity(64);
+        self.for_each_leaf_containing(p, &mut stack, on_node, |first, count| {
+            on_leaf(&self.prim_order[first..first + count])
+        });
     }
 
     /// Tree statistics for tests and the ablation bench.
@@ -137,6 +276,28 @@ impl Bvh {
             .iter()
             .map(|n| n.aabb.surface_area() as f64)
             .sum()
+    }
+}
+
+/// Reverse-sweep refit of one contiguous (preorder) node block whose
+/// global arena offset is `offset`. Children of a block node always lie
+/// inside the block (they belong to the same subtree).
+fn refit_block(nodes: &mut [Node], offset: usize, prim_order: &[u32], aabbs: &[Aabb]) {
+    for i in (0..nodes.len()).rev() {
+        if nodes[i].is_leaf() {
+            let first = nodes[i].first_prim as usize;
+            let count = nodes[i].prim_count as usize;
+            let mut b = Aabb::EMPTY;
+            for &prim in &prim_order[first..first + count] {
+                b = b.union(&aabbs[prim as usize]);
+            }
+            nodes[i].aabb = b;
+        } else {
+            let l = nodes[i].left as usize - offset;
+            let r = nodes[i].right as usize - offset;
+            let merged = nodes[l].aabb.union(&nodes[r].aabb);
+            nodes[i].aabb = merged;
+        }
     }
 }
 
@@ -262,6 +423,42 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn parallel_build_is_bitwise_identical_to_serial() {
+        // above PAR_BUILD_MIN so forks actually happen
+        let mut rng = Pcg32::new(11);
+        let pts = prop::random_cloud(&mut rng, 12_000, false);
+        let aabbs = sphere_aabbs(&pts, 0.01);
+        let serial = Bvh::build(&aabbs);
+        for threads in [2usize, 3, 8] {
+            let par = Bvh::build_parallel(
+                &aabbs,
+                BuildStrategy::MedianSplit,
+                4,
+                Executor::new(threads),
+            );
+            assert_eq!(par.root, serial.root, "threads={threads}");
+            assert_eq!(par.prim_order, serial.prim_order, "threads={threads}");
+            assert_eq!(par.nodes, serial.nodes, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_refit_is_bitwise_identical_to_serial() {
+        let mut rng = Pcg32::new(12);
+        let pts = prop::random_cloud(&mut rng, 10_000, false);
+        let base = Bvh::build(&sphere_aabbs(&pts, 0.005));
+        let grown = sphere_aabbs(&pts, 0.02);
+        let mut serial = base.clone();
+        let n_serial = serial.refit(&grown);
+        for threads in [2usize, 8] {
+            let mut par = base.clone();
+            let n_par = par.refit_parallel(&grown, Executor::new(threads));
+            assert_eq!(n_par, n_serial);
+            assert_eq!(par.nodes, serial.nodes, "threads={threads}");
+        }
     }
 
     #[test]

@@ -34,6 +34,9 @@ pub struct RunConfig {
     pub percentile_cap: Option<f64>,
     /// Override the sampled start radius (paper Fig 7 sensitivity).
     pub start_radius: Option<f32>,
+    /// Worker threads for the parallel launch engine (None/0 = all
+    /// cores). Purely a throughput knob — results never depend on it.
+    pub threads: Option<usize>,
 }
 
 impl Default for RunConfig {
@@ -45,6 +48,7 @@ impl Default for RunConfig {
             seed: 42,
             percentile_cap: None,
             start_radius: None,
+            threads: None,
         }
     }
 }
@@ -124,6 +128,12 @@ impl RunConfig {
                     as f32,
             );
         }
+        if let Some(t) = v.get("threads") {
+            cfg.threads = Some(
+                t.as_usize()
+                    .ok_or_else(|| ConfigError::Bad("threads", "not a number".into()))?,
+            );
+        }
         Ok(cfg)
     }
 
@@ -131,6 +141,19 @@ impl RunConfig {
         let text = std::fs::read_to_string(path)?;
         let v = super::json::parse(&text)?;
         Self::from_json(&v)
+    }
+
+    /// The index configuration this run asks for — the bridge consumers
+    /// use so every knob here (seed, start radius, threads) actually
+    /// reaches the engine. `radius_cap` stays with the caller: resolving
+    /// a percentile needs the dataset's distance profile.
+    pub fn to_index_config(&self) -> crate::index::IndexConfig {
+        crate::index::IndexConfig {
+            seed: self.seed,
+            start_radius: self.start_radius,
+            threads: self.threads.unwrap_or(0),
+            ..Default::default()
+        }
     }
 
     pub fn to_json(&self) -> Json {
@@ -151,6 +174,9 @@ impl RunConfig {
         }
         if let Some(r) = self.start_radius {
             pairs.push(("start_radius", Json::Num(r as f64)));
+        }
+        if let Some(t) = self.threads {
+            pairs.push(("threads", Json::Num(t as f64)));
         }
         Json::obj(pairs)
     }
@@ -207,6 +233,7 @@ mod tests {
             seed: 7,
             percentile_cap: Some(99.0),
             start_radius: Some(0.001),
+            threads: Some(8),
         };
         let re = RunConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(re.dataset, DatasetKind::Taxi);
@@ -214,6 +241,13 @@ mod tests {
         assert_eq!(re.k, KPolicy::SqrtN);
         assert_eq!(re.percentile_cap, Some(99.0));
         assert_eq!(re.start_radius, Some(0.001));
+        assert_eq!(re.threads, Some(8));
+        // the knob must reach the engine config, not just round-trip
+        let idx = re.to_index_config();
+        assert_eq!(idx.threads, 8);
+        assert_eq!(idx.start_radius, Some(0.001));
+        assert_eq!(idx.seed, 7);
+        assert_eq!(RunConfig::default().to_index_config().threads, 0);
     }
 
     #[test]

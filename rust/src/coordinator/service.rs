@@ -11,6 +11,12 @@
 //! The PJRT client wraps raw C pointers and is not `Send`, so the
 //! runtime (and every index) is constructed *inside* the worker thread;
 //! callers only touch channels.
+//!
+//! Per-batch ray launches go through the [`crate::exec`] parallel engine:
+//! the RT index inherits `ServiceConfig::trueknn.threads` (0 = all
+//! cores), so one worker thread owns the index while each batch's
+//! traversal fans out across cores — results are identical at any
+//! thread count by the engine's determinism contract.
 
 use super::batcher::{BatcherConfig, DynamicBatcher};
 use super::metrics::Metrics;

@@ -1,0 +1,262 @@
+//! Deterministic parallel execution engine — std-only (`std::thread::scope`),
+//! no atomics, no locks, no work queues.
+//!
+//! # Determinism contract (shard-then-merge)
+//!
+//! Every parallel operation in the crate follows the same discipline so
+//! that results are **bitwise-identical at any thread count**:
+//!
+//! 1. **Contiguous sharding.** Work of size `n` is split into contiguous
+//!    index ranges ([`Executor::shard_ranges`]). Shard boundaries depend
+//!    only on `n`, the thread count and a minimum chunk size — never on
+//!    timing.
+//! 2. **Isolated workers.** Each shard runs on its own thread with its
+//!    own scratch state (traversal stack, [`crate::rt::HwCounters`],
+//!    program shard). Workers share only immutable input; there are no
+//!    atomics or mutexes in the hot loop, so there is nothing to race on.
+//! 3. **Ordered merge.** The spawning thread joins workers **in shard
+//!    order** and folds their outputs left-to-right. Every per-query
+//!    output is produced by exactly one shard, and global counters are
+//!    sums of per-item contributions, so the merged result is the same
+//!    as a serial run — bitwise, not just approximately.
+//!
+//! The contract holds because the primitives this crate parallelizes are
+//! item-independent: a ray launch only touches state keyed by its own
+//! query id, a BVH subtree build only touches its own primitive range,
+//! and a subtree refit only touches its own (preorder-contiguous) node
+//! block. The engine makes that independence explicit instead of hiding
+//! it behind synchronization.
+//!
+//! `Executor` is a trivially-copyable handle (just a resolved thread
+//! count); scoped threads are spawned per operation. On the workloads
+//! this crate cares about (≥ thousands of primitives per launch) the
+//! spawn cost is noise; below the per-shard minimum the engine runs the
+//! serial path on the calling thread, which by the contract above
+//! produces the identical result.
+
+use std::ops::Range;
+
+/// Resolved parallelism handle. `Copy` on purpose: embedding it in a
+/// scene or index costs one `usize` and no lifetime entanglement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Executor {
+    threads: usize,
+}
+
+impl Default for Executor {
+    fn default() -> Self {
+        Self::auto()
+    }
+}
+
+impl Executor {
+    /// `threads == 0` means "use all available cores" ([`Executor::auto`]).
+    pub fn new(threads: usize) -> Executor {
+        if threads == 0 {
+            Self::auto()
+        } else {
+            Executor { threads }
+        }
+    }
+
+    pub fn auto() -> Executor {
+        Executor {
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+        }
+    }
+
+    pub fn serial() -> Executor {
+        Executor { threads: 1 }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Split `[0, n)` into at most `threads` contiguous ranges of at
+    /// least `min_chunk` items each (except possibly when `n` itself is
+    /// smaller). Deterministic in `(n, threads, min_chunk)`.
+    pub fn shard_ranges(&self, n: usize, min_chunk: usize) -> Vec<Range<usize>> {
+        if n == 0 {
+            return Vec::new();
+        }
+        let min_chunk = min_chunk.max(1);
+        let shards = (n / min_chunk).clamp(1, self.threads);
+        let base = n / shards;
+        let rem = n % shards;
+        let mut ranges = Vec::with_capacity(shards);
+        let mut start = 0;
+        for s in 0..shards {
+            let len = base + usize::from(s < rem);
+            ranges.push(start..start + len);
+            start += len;
+        }
+        debug_assert_eq!(start, n);
+        ranges
+    }
+
+    /// Run `f(shard_index, range)` over the shards of `[0, n)` and return
+    /// the outputs **in shard order**. Shard 0 runs on the calling
+    /// thread; with one shard (or `n < 2·min_chunk`) no thread is
+    /// spawned at all.
+    pub fn run<T, F>(&self, n: usize, min_chunk: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize, Range<usize>) -> T + Sync,
+    {
+        let ranges = self.shard_ranges(n, min_chunk);
+        if ranges.len() <= 1 {
+            return ranges.into_iter().enumerate().map(|(i, r)| f(i, r)).collect();
+        }
+        std::thread::scope(|s| {
+            let f = &f;
+            let handles: Vec<_> = ranges
+                .iter()
+                .cloned()
+                .enumerate()
+                .skip(1)
+                .map(|(i, r)| s.spawn(move || f(i, r)))
+                .collect();
+            let mut out = Vec::with_capacity(ranges.len());
+            out.push(f(0, ranges[0].clone()));
+            for h in handles {
+                out.push(h.join().expect("exec worker panicked"));
+            }
+            out
+        })
+    }
+
+    /// Shard `data` into disjoint mutable chunks and run `f(offset, chunk)`
+    /// on each concurrently. Chunks are disjoint slices of one buffer, so
+    /// the writes cannot overlap; the merge is the buffer itself.
+    pub fn for_each_chunk<T, F>(&self, data: &mut [T], min_chunk: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        let ranges = self.shard_ranges(data.len(), min_chunk);
+        if ranges.len() <= 1 {
+            if !data.is_empty() {
+                f(0, data);
+            }
+            return;
+        }
+        std::thread::scope(|s| {
+            let f = &f;
+            let mut rest = data;
+            let mut first: Option<(usize, &mut [T])> = None;
+            for r in ranges {
+                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(r.len());
+                rest = tail;
+                let start = r.start;
+                if first.is_none() {
+                    // chunk 0 runs on the calling thread, below
+                    first = Some((start, chunk));
+                } else {
+                    s.spawn(move || f(start, chunk));
+                }
+            }
+            if let Some((start, chunk)) = first {
+                f(start, chunk);
+            }
+        });
+    }
+}
+
+/// Two-way fork-join: run `fa` on the calling thread and `fb` on a scoped
+/// worker, returning both results. The recursion primitive of the
+/// parallel BVH builder.
+pub fn join<A, B, FA, FB>(fa: FA, fb: FB) -> (A, B)
+where
+    A: Send,
+    B: Send,
+    FA: FnOnce() -> A + Send,
+    FB: FnOnce() -> B + Send,
+{
+    std::thread::scope(|s| {
+        let hb = s.spawn(fb);
+        let a = fa();
+        (a, hb.join().expect("exec join worker panicked"))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_ranges_cover_and_respect_min_chunk() {
+        for threads in [1usize, 2, 3, 8] {
+            let ex = Executor::new(threads);
+            for n in [0usize, 1, 7, 64, 100, 1_000] {
+                for min_chunk in [1usize, 32, 500] {
+                    let ranges = ex.shard_ranges(n, min_chunk);
+                    assert!(ranges.len() <= threads);
+                    let covered: usize = ranges.iter().map(|r| r.len()).sum();
+                    assert_eq!(covered, n, "t={threads} n={n} mc={min_chunk}");
+                    for w in ranges.windows(2) {
+                        assert_eq!(w[0].end, w[1].start, "ranges must be contiguous");
+                    }
+                    if n >= min_chunk {
+                        for r in &ranges {
+                            assert!(r.len() >= min_chunk.min(n), "undersized shard");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_threads_resolves_to_available_parallelism() {
+        assert!(Executor::new(0).threads() >= 1);
+        assert_eq!(Executor::serial().threads(), 1);
+    }
+
+    #[test]
+    fn run_returns_results_in_shard_order() {
+        let ex = Executor::new(4);
+        let out = ex.run(1_000, 1, |i, r| (i, r.start, r.end));
+        assert_eq!(out.len(), 4);
+        for (i, (si, start, end)) in out.iter().enumerate() {
+            assert_eq!(i, *si);
+            assert!(start < end);
+        }
+        assert_eq!(out[0].1, 0);
+        assert_eq!(out[3].2, 1_000);
+    }
+
+    #[test]
+    fn run_sums_match_serial() {
+        let data: Vec<u64> = (0..10_000).collect();
+        let serial: u64 = data.iter().sum();
+        for threads in [1usize, 2, 8] {
+            let parts = Executor::new(threads).run(data.len(), 64, |_, r| {
+                data[r].iter().sum::<u64>()
+            });
+            assert_eq!(parts.iter().sum::<u64>(), serial);
+        }
+    }
+
+    #[test]
+    fn for_each_chunk_touches_every_item_once() {
+        let mut data = vec![0u32; 5_000];
+        Executor::new(8).for_each_chunk(&mut data, 16, |offset, chunk| {
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x += (offset + i) as u32 + 1;
+            }
+        });
+        for (i, x) in data.iter().enumerate() {
+            assert_eq!(*x, i as u32 + 1, "item {i}");
+        }
+    }
+
+    #[test]
+    fn join_runs_both_sides() {
+        let (a, b) = join(|| 2 + 2, || "ok");
+        assert_eq!(a, 4);
+        assert_eq!(b, "ok");
+    }
+}

@@ -47,7 +47,7 @@ pub use trueknn::TrueKnnIndex;
 
 use crate::geom::{Aabb, Point3, Ray};
 use crate::knn::{KnnResult, Neighbor};
-use crate::rt::{CostModel, HwCounters, IntersectionProgram, Pipeline, Scene};
+use crate::rt::{CostModel, HwCounters, IntersectionProgram, Pipeline, Scene, ShardableProgram};
 use crate::util::Stopwatch;
 
 /// Which search algorithm backs a [`NeighborIndex`].
@@ -133,6 +133,15 @@ pub struct IndexConfig {
     pub radius: Option<f32>,
     /// Rtnn: number of Morton-ordered query chunks per launch.
     pub partitions: usize,
+    /// Worker threads for the parallel launch engine and structure
+    /// maintenance (0 = all available cores). Results are
+    /// bitwise-identical at any value — this is purely a throughput knob.
+    pub threads: usize,
+    /// TrueKNN: keep survivors' partial heaps across rounds and discard
+    /// hits inside the previous radius (shell re-query), instead of
+    /// resetting and re-pushing everything each round. Exact either way;
+    /// `false` restores the reset-per-round baseline for ablations.
+    pub shell_requery: bool,
 }
 
 impl Default for IndexConfig {
@@ -146,6 +155,8 @@ impl Default for IndexConfig {
             max_rounds: 64,
             radius: None,
             partitions: 16,
+            threads: 0,
+            shell_requery: true,
         }
     }
 }
@@ -267,6 +278,19 @@ impl IndexBuilder {
         self
     }
 
+    /// Worker threads (0 = all cores). Only changes throughput, never
+    /// results.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.cfg.threads = n;
+        self
+    }
+
+    /// Toggle TrueKNN shell re-query (on by default).
+    pub fn shell_requery(mut self, v: bool) -> Self {
+        self.cfg.shell_requery = v;
+        self
+    }
+
     /// Build the acceleration structure over `data` and return the index.
     pub fn build(self, data: Vec<Point3>) -> Box<dyn NeighborIndex> {
         match self.backend {
@@ -325,8 +349,60 @@ impl IntersectionProgram for RangeCollect {
     }
 }
 
+/// Per-shard state of [`RangeCollect`] for the parallel launch engine:
+/// the owned queries' hit lists in ray order, addressed via `begin_ray`.
+pub(crate) struct RangeShard {
+    ids: Vec<u32>,
+    per_query: Vec<Vec<Neighbor>>,
+    cur: usize,
+    exclude_self: bool,
+}
+
+impl IntersectionProgram for RangeShard {
+    #[inline]
+    fn begin_ray(&mut self, local_ray_index: u32) {
+        self.cur = local_ray_index as usize;
+    }
+
+    #[inline]
+    fn hit(&mut self, ray: &Ray, prim: u32, dist2: f32) {
+        if self.exclude_self && prim == ray.query_id {
+            return;
+        }
+        self.per_query[self.cur].push(Neighbor {
+            idx: prim,
+            dist: dist2,
+        });
+    }
+}
+
+impl ShardableProgram for RangeCollect {
+    type Shard = RangeShard;
+
+    fn split(&mut self, rays: &[Ray]) -> RangeShard {
+        let ids: Vec<u32> = rays.iter().map(|r| r.query_id).collect();
+        let per_query = ids
+            .iter()
+            .map(|&q| std::mem::take(&mut self.per_query[q as usize]))
+            .collect();
+        RangeShard {
+            ids,
+            per_query,
+            cur: 0,
+            exclude_self: self.exclude_self,
+        }
+    }
+
+    fn merge(&mut self, shard: RangeShard) {
+        for (q, hits) in shard.ids.into_iter().zip(shard.per_query) {
+            self.per_query[q as usize] = hits;
+        }
+    }
+}
+
 /// Shared range-query path for the scene-backed backends: refit the
-/// persistent BVH to the requested radius and launch once.
+/// persistent BVH to the requested radius and launch once, sharded over
+/// the scene's executor.
 pub(crate) fn scene_range(
     scene: &mut Scene,
     queries: &[Point3],
@@ -351,7 +427,8 @@ pub(crate) fn scene_range(
         .map(|(i, &p)| Ray::knn(p, i as u32))
         .collect();
     let mut prog = RangeCollect::new(queries.len(), exclude_self);
-    Pipeline::launch(scene, &rays, &mut prog, &mut counters);
+    let exec = scene.exec;
+    Pipeline::launch_parallel(scene, &rays, &mut prog, &mut counters, &exec);
     result.neighbors = finish_range(prog.per_query);
     result.launches = 1;
     result.counters = counters;

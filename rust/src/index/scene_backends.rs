@@ -10,6 +10,7 @@
 //! implementation of that experiment.
 
 use super::{default_radius, scene_range, Backend, BuildStats, IndexConfig, NeighborIndex};
+use crate::exec::Executor;
 use crate::geom::{Aabb, Point3, Ray};
 use crate::knn::program::KnnProgram;
 use crate::knn::rtnn::morton3;
@@ -29,8 +30,9 @@ impl FixedRadiusIndex {
     pub fn new(data: Vec<Point3>, cfg: IndexConfig) -> Self {
         let sw = Stopwatch::start();
         let radius = cfg.radius.unwrap_or_else(|| default_radius(&data));
+        let exec = Executor::new(cfg.threads);
         let mut build = HwCounters::new();
-        let scene = Scene::build(data, radius, &mut build);
+        let scene = Scene::build_with_exec(data, radius, &mut build, exec);
         FixedRadiusIndex {
             cfg,
             radius,
@@ -73,7 +75,8 @@ impl NeighborIndex for FixedRadiusIndex {
             .map(|(i, &p)| Ray::knn(p, i as u32))
             .collect();
         let mut program = KnnProgram::new(queries.len(), k, self.cfg.exclude_self);
-        Pipeline::launch(&self.scene, &rays, &mut program, &mut counters);
+        let exec = self.scene.exec;
+        Pipeline::launch_parallel(&self.scene, &rays, &mut program, &mut counters, &exec);
         counters.heap_pushes += program.total_pushes();
 
         for (q, heap) in program.heaps.into_iter().enumerate() {
@@ -140,8 +143,9 @@ impl RtnnIndex {
     pub fn new(data: Vec<Point3>, cfg: IndexConfig) -> Self {
         let sw = Stopwatch::start();
         let radius = cfg.radius.unwrap_or_else(|| default_radius(&data));
+        let exec = Executor::new(cfg.threads);
         let mut build = HwCounters::new();
-        let scene = Scene::build(data, radius, &mut build);
+        let scene = Scene::build_with_exec(data, radius, &mut build, exec);
         RtnnIndex {
             cfg,
             radius,
@@ -190,6 +194,7 @@ impl NeighborIndex for RtnnIndex {
         let mut program = KnnProgram::new(queries.len(), k, self.cfg.exclude_self);
         let mut launches = 0u64;
         let mut prev_pushes = 0u64;
+        let exec = self.scene.exec;
 
         for part in order.chunks(chunk) {
             counters.context_switches += 1;
@@ -197,7 +202,7 @@ impl NeighborIndex for RtnnIndex {
                 .iter()
                 .map(|&q| Ray::knn(queries[q as usize], q))
                 .collect();
-            Pipeline::launch(&self.scene, &rays, &mut program, &mut counters);
+            Pipeline::launch_parallel(&self.scene, &rays, &mut program, &mut counters, &exec);
             launches += 1;
             let pushes = program.total_pushes();
             counters.heap_pushes += pushes - prev_pushes;

@@ -6,8 +6,24 @@
 //! the BVH is *refit* back down to the start radius (the same §4 refit
 //! the algorithm already uses between rounds), so a serving loop pays
 //! one build per dataset instead of one per batch.
+//!
+//! Two per-round optimizations on top of Alg. 3:
+//!
+//! - **Parallel launches**: every round's rays go through
+//!   [`Pipeline::launch_parallel`], sharded across the configured
+//!   executor (results bitwise-identical at any thread count).
+//! - **Shell re-query** (`IndexConfig::shell_requery`, on by default):
+//!   instead of resetting survivors' heaps and re-discovering every hit
+//!   inside the grown radius (Alg. 3 line 3), survivors keep their
+//!   partial heaps and the intersection program discards hits with
+//!   `d2 ≤ r_prev²` — each round pays heap traffic only for the annulus
+//!   `(r_prev, r]`. Exact, because a survivor (`< k` hits so far) kept
+//!   *every* hit inside `r_prev` in its heap; the re-discovery overhead
+//!   is the cost RTNN (Zhu, PPoPP'22) identifies as dominant in
+//!   iterative RT neighbor search.
 
 use super::{scene_range, Backend, BuildStats, IndexConfig, NeighborIndex};
+use crate::exec::Executor;
 use crate::geom::{Point3, Ray};
 use crate::knn::program::KnnProgram;
 use crate::knn::start_radius::random_sample_radius;
@@ -38,8 +54,9 @@ impl TrueKnnIndex {
         if let Some(cap) = cfg.radius_cap {
             initial = initial.min(cap);
         }
+        let exec = Executor::new(cfg.threads);
         let mut build = HwCounters::new();
-        let scene = Scene::build(data, initial, &mut build);
+        let scene = Scene::build_with_exec(data, initial, &mut build, exec);
         TrueKnnIndex {
             cfg,
             scene,
@@ -97,6 +114,10 @@ impl NeighborIndex for TrueKnnIndex {
         let mut launches = 0u64;
         let mut round = 0usize;
         let mut prev_pushes = 0u64;
+        // Squared radius already searched by earlier rounds; the shell
+        // filter drops re-discovered hits at or below it. Negative for
+        // round 0 so distance-0 duplicates are accepted.
+        let mut searched_r2 = -1.0f32;
         self.schedule.clear();
 
         // Alg. 3 lines 2–13.
@@ -105,14 +126,22 @@ impl NeighborIndex for TrueKnnIndex {
             let before = counters;
             self.schedule.push(radius);
 
-            // Each round re-discovers everything within the larger
-            // radius, so survivors' heaps restart clean (Alg. 3 line 3).
-            program.reset(&active);
+            if self.cfg.shell_requery {
+                // Survivors keep their partial heaps; only the annulus
+                // (r_prev, r] may push.
+                program.set_shell_floor(searched_r2);
+            } else {
+                // Ablation baseline: each round re-discovers everything
+                // within the larger radius, so survivors' heaps restart
+                // clean (Alg. 3 line 3).
+                program.reset(&active);
+            }
             let rays: Vec<Ray> = active
                 .iter()
                 .map(|&q| Ray::knn(queries[q as usize], q))
                 .collect();
-            Pipeline::launch(&self.scene, &rays, &mut program, &mut counters);
+            let exec = self.scene.exec;
+            Pipeline::launch_parallel(&self.scene, &rays, &mut program, &mut counters, &exec);
             launches += 1;
             let pushes = program.total_pushes();
             counters.heap_pushes += pushes - prev_pushes;
@@ -136,6 +165,7 @@ impl NeighborIndex for TrueKnnIndex {
             if active.is_empty() {
                 break;
             }
+            searched_r2 = radius * radius;
             // 99th-percentile variant: stop once the cap radius has been
             // searched; survivors stay incomplete by design.
             if let Some(cap) = self.cfg.radius_cap {
@@ -242,5 +272,44 @@ mod tests {
         assert!((b.rounds[0].radius - r0).abs() < 1e-12);
         // deterministic schedule: same start, same doubling
         assert_eq!(a.rounds.len(), b.rounds.len());
+    }
+
+    #[test]
+    fn shell_requery_matches_reset_baseline_with_fewer_pushes() {
+        let ds = DatasetKind::Taxi.generate(1_000, 83);
+        // a pinned small start radius guarantees a multi-round search
+        let mut shell = TrueKnnIndex::new(
+            ds.points.clone(),
+            IndexConfig {
+                start_radius: Some(0.002),
+                ..Default::default()
+            },
+        );
+        let mut reset = TrueKnnIndex::new(
+            ds.points.clone(),
+            IndexConfig {
+                start_radius: Some(0.002),
+                shell_requery: false,
+                ..Default::default()
+            },
+        );
+        let a = shell.knn(&ds.points, 5);
+        let b = reset.knn(&ds.points, 5);
+        // identical neighbor distances, same schedule
+        assert_eq!(a.rounds.len(), b.rounds.len());
+        for (ga, gb) in a.neighbors.iter().zip(&b.neighbors) {
+            assert_eq!(ga.len(), gb.len());
+            for (x, y) in ga.iter().zip(gb) {
+                assert!((x.dist - y.dist).abs() < 1e-6);
+            }
+        }
+        // multi-round searches must save heap traffic
+        assert!(a.rounds.len() > 1, "need multiple rounds to see the effect");
+        assert!(
+            a.counters.heap_pushes < b.counters.heap_pushes,
+            "shell {} must push less than reset {}",
+            a.counters.heap_pushes,
+            b.counters.heap_pushes
+        );
     }
 }

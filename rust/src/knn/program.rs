@@ -1,10 +1,22 @@
 //! The kNN `Intersection` program: mirrors the paper's implementation
 //! choice of doing all kNN logic inside the software intersection test
 //! with AnyHit/ClosestHit disabled (§4).
+//!
+//! Two execution features layer on top of the basic k-heap maintenance:
+//!
+//! - **Shell (annulus) filter** for TrueKNN's shell re-query: survivors
+//!   keep their partial heaps across rounds, and hits with
+//!   `dist2 <= min_dist2` (already discovered inside the previous
+//!   round's radius) are discarded before touching the heap. Exact,
+//!   because a surviving query's `< k` prior hits all already sit in its
+//!   heap — only the annulus `(r_prev, r]` contributes new candidates.
+//! - **Sharding** for the parallel launch engine: each query's heap is
+//!   *moved* into the shard that owns its ray and moved back on merge,
+//!   so every heap sees the exact push sequence of a serial run.
 
 use super::KHeap;
 use crate::geom::Ray;
-use crate::rt::IntersectionProgram;
+use crate::rt::{IntersectionProgram, ShardableProgram};
 
 /// Maintains one bounded k-heap per query point. Query ids are *global*
 /// dataset indices, so TrueKNN can launch shrinking ray subsets across
@@ -14,6 +26,10 @@ pub struct KnnProgram {
     /// Exclude the sphere whose id equals the ray's query id (self-hit
     /// when the query set is the dataset itself).
     pub exclude_self: bool,
+    /// Shell floor: hits at squared distance ≤ this are discarded.
+    /// Negative (the default) accepts everything including exact
+    /// duplicates at distance 0.
+    min_dist2: f32,
 }
 
 impl KnnProgram {
@@ -21,15 +37,25 @@ impl KnnProgram {
         Self {
             heaps: (0..n_queries).map(|_| KHeap::new(k)).collect(),
             exclude_self,
+            min_dist2: -1.0,
         }
     }
 
-    /// Reset the heaps for a re-queried subset (each TrueKNN round
-    /// re-discovers everything inside the bigger radius, §3.3).
+    /// Reset the heaps for a re-queried subset — the pre-shell-re-query
+    /// TrueKNN behavior (each round re-discovers everything inside the
+    /// bigger radius, §3.3), kept for the ablation baseline.
     pub fn reset(&mut self, query_ids: &[u32]) {
         for &q in query_ids {
             self.heaps[q as usize].clear();
         }
+    }
+
+    /// Set the shell floor for the next launch: hits with
+    /// `dist2 <= min_dist2` are dropped before the heap. Pass the
+    /// previous round's squared radius to pay heap traffic only for the
+    /// annulus; a negative value disables the filter.
+    pub fn set_shell_floor(&mut self, min_dist2: f32) {
+        self.min_dist2 = min_dist2;
     }
 
     /// Total heap insertions across all queries (sorting-work telemetry).
@@ -41,6 +67,9 @@ impl KnnProgram {
 impl IntersectionProgram for KnnProgram {
     #[inline]
     fn hit(&mut self, ray: &Ray, prim: u32, dist2: f32) {
+        if dist2 <= self.min_dist2 {
+            return;
+        }
         if self.exclude_self && prim == ray.query_id {
             return;
         }
@@ -48,11 +77,64 @@ impl IntersectionProgram for KnnProgram {
     }
 }
 
+/// Per-shard state: the owned queries' heaps in ray order, addressed by
+/// `begin_ray` so the hit path stays lookup-free.
+pub struct KnnShard {
+    ids: Vec<u32>,
+    heaps: Vec<KHeap>,
+    cur: usize,
+    exclude_self: bool,
+    min_dist2: f32,
+}
+
+impl IntersectionProgram for KnnShard {
+    #[inline]
+    fn begin_ray(&mut self, local_ray_index: u32) {
+        self.cur = local_ray_index as usize;
+    }
+
+    #[inline]
+    fn hit(&mut self, ray: &Ray, prim: u32, dist2: f32) {
+        if dist2 <= self.min_dist2 {
+            return;
+        }
+        if self.exclude_self && prim == ray.query_id {
+            return;
+        }
+        self.heaps[self.cur].push(dist2, prim);
+    }
+}
+
+impl ShardableProgram for KnnProgram {
+    type Shard = KnnShard;
+
+    fn split(&mut self, rays: &[Ray]) -> KnnShard {
+        let ids: Vec<u32> = rays.iter().map(|r| r.query_id).collect();
+        let heaps = ids
+            .iter()
+            .map(|&q| std::mem::replace(&mut self.heaps[q as usize], KHeap::new(0)))
+            .collect();
+        KnnShard {
+            ids,
+            heaps,
+            cur: 0,
+            exclude_self: self.exclude_self,
+            min_dist2: self.min_dist2,
+        }
+    }
+
+    fn merge(&mut self, shard: KnnShard) {
+        for (q, h) in shard.ids.into_iter().zip(shard.heaps) {
+            self.heaps[q as usize] = h;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::rt::{HwCounters, Pipeline, Scene};
     use crate::geom::Point3;
+    use crate::rt::{HwCounters, Pipeline, Scene};
     use crate::util::prop;
     use crate::util::Pcg32;
 
@@ -110,5 +192,49 @@ mod tests {
         assert!(prog.heaps[0].is_empty());
         assert_eq!(prog.heaps[1].len(), 1);
         assert!(prog.heaps[2].is_empty());
+    }
+
+    #[test]
+    fn shell_floor_drops_already_discovered_hits() {
+        let pts = vec![
+            Point3::ZERO,
+            Point3::new(0.1, 0.0, 0.0), // d2 = 0.01 — inside the shell floor
+            Point3::new(0.5, 0.0, 0.0), // d2 = 0.25 — in the annulus
+        ];
+        let mut c = HwCounters::new();
+        let scene = Scene::build(pts.clone(), 1.0, &mut c);
+        let rays = vec![crate::geom::Ray::knn(pts[0], 0)];
+
+        let mut prog = KnnProgram::new(3, 5, true);
+        prog.set_shell_floor(0.04); // previous radius 0.2 squared
+        Pipeline::launch(&scene, &rays, &mut prog, &mut c);
+        let got = prog.heaps[0].sorted();
+        assert_eq!(got.len(), 1, "only the annulus hit may land");
+        assert_eq!(got[0].idx, 2);
+
+        // distance-0 duplicates pass the default (negative) floor
+        let mut dup = KnnProgram::new(3, 5, false);
+        Pipeline::launch(&scene, &rays, &mut dup, &mut c);
+        assert_eq!(dup.heaps[0].len(), 3, "default floor accepts d2 = 0");
+    }
+
+    #[test]
+    fn split_and_merge_round_trip_preserves_heaps_and_pushes() {
+        let mut prog = KnnProgram::new(4, 2, false);
+        prog.heaps[1].push(1.0, 7);
+        prog.heaps[3].push(2.0, 8);
+        let rays = vec![
+            crate::geom::Ray::knn(Point3::ZERO, 3),
+            crate::geom::Ray::knn(Point3::ZERO, 1),
+        ];
+        let mut shard = prog.split(&rays);
+        assert!(prog.heaps[1].is_empty() && prog.heaps[3].is_empty());
+        // shard state follows begin_ray, not query-id arithmetic
+        shard.begin_ray(0);
+        shard.hit(&rays[0], 9, 0.5);
+        prog.merge(shard);
+        assert_eq!(prog.heaps[3].len(), 2, "shard pushed into query 3");
+        assert_eq!(prog.heaps[1].len(), 1, "query 1 restored untouched");
+        assert_eq!(prog.total_pushes(), 3);
     }
 }

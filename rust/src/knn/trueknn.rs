@@ -31,6 +31,9 @@ pub struct TrueKnnParams {
     /// Safety valve; the radius doubles each round so 64 rounds cover
     /// any f32 scale.
     pub max_rounds: usize,
+    /// Worker threads for the parallel launch engine (0 = all cores).
+    /// Results are identical at any value.
+    pub threads: usize,
 }
 
 impl Default for TrueKnnParams {
@@ -43,6 +46,7 @@ impl Default for TrueKnnParams {
             seed: 42,
             cost_model: CostModel::default(),
             max_rounds: 64,
+            threads: 0,
         }
     }
 }
@@ -58,6 +62,7 @@ impl TrueKnnParams {
             start_radius: self.start_radius,
             radius_cap: self.radius_cap,
             max_rounds: self.max_rounds,
+            threads: self.threads,
             ..Default::default()
         }
     }

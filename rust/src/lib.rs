@@ -61,6 +61,7 @@
 //! | `runtime::PjrtBruteForce`   | [`index::Backend::BrutePjrt`]  |
 
 pub mod util;
+pub mod exec;
 pub mod geom;
 pub mod dataset;
 pub mod bvh;

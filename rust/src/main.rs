@@ -6,10 +6,11 @@
 //! trueknn exp       regenerate a paper table/figure (table1|fig6|...)
 //! trueknn runtime   inspect/smoke-test the PJRT artifacts
 //! trueknn serve     run the batching query service demo
+//! trueknn bench     parallel-engine microbench, writes BENCH_PR2.json
 //! ```
 
 use trueknn::cli::{Args, CliError, Command};
-use trueknn::configx::KPolicy;
+use trueknn::configx::{KPolicy, RunConfig};
 use trueknn::dataset::{Dataset, DatasetKind};
 use trueknn::exp::{self, ExpScale};
 use trueknn::index::{Backend, IndexBuilder, IndexConfig, NeighborIndex};
@@ -24,6 +25,7 @@ fn main() {
         Some("exp") => dispatch(cmd_exp(), &argv[1..], run_exp),
         Some("runtime") => dispatch(cmd_runtime(), &argv[1..], run_runtime),
         Some("serve") => dispatch(cmd_serve(), &argv[1..], run_serve),
+        Some("bench") => dispatch(cmd_bench(), &argv[1..], run_bench),
         Some("--help") | Some("-h") | None => {
             print_usage();
             0
@@ -45,6 +47,7 @@ fn print_usage() {
     println!("  exp      regenerate a paper table/figure");
     println!("  runtime  inspect the PJRT artifacts");
     println!("  serve    run the batching query service demo");
+    println!("  bench    launch-throughput + shell re-query microbench (BENCH_PR2.json)");
     println!("run `trueknn <command> --help` for options");
 }
 
@@ -93,6 +96,11 @@ fn run_gen(a: &Args) -> Result<(), String> {
 
 fn cmd_knn() -> Command {
     Command::new("knn", "run a single kNN search through the index API")
+        .opt(
+            "config",
+            "run-config JSON file; supplies dataset/n/k/seed/percentile/start-radius/threads",
+            "",
+        )
         .opt("dataset", "road|taxi|lidar|iono|uniform", "taxi")
         .opt("input", "CSV file instead of a generator", "")
         .opt("n", "number of points", "10000")
@@ -101,6 +109,7 @@ fn cmd_knn() -> Command {
         .opt("algo", "trueknn|baseline|rtnn|kdtree|brute|pjrt", "trueknn")
         .opt("percentile", "cap search at this percentile radius", "")
         .opt("start-radius", "override the sampled start radius", "")
+        .opt("threads", "launch-engine worker threads (0 = all cores)", "0")
         .flag("verify", "check results against the exact kd-tree")
 }
 
@@ -116,17 +125,31 @@ fn load_dataset(a: &Args) -> Result<Dataset, String> {
 }
 
 fn run_knn(a: &Args) -> Result<(), String> {
-    let ds = load_dataset(a)?;
-    let k = match a.get_str("k", "5").as_str() {
-        "sqrt" => KPolicy::SqrtN.resolve(ds.len()),
-        s => s.parse::<usize>().map_err(|_| format!("bad k '{s}'"))?,
+    // a --config file supplies the whole run description; the individual
+    // flags cover the same knobs for quick one-offs
+    let file_cfg: Option<RunConfig> = match a.get_str("config", "").as_str() {
+        "" => None,
+        path => Some(RunConfig::from_file(path).map_err(|e| e.to_string())?),
+    };
+    let ds = match &file_cfg {
+        Some(rc) => rc.dataset.generate(rc.n, rc.seed),
+        None => load_dataset(a)?,
+    };
+    let k = match &file_cfg {
+        Some(rc) => rc.k.resolve(ds.len()),
+        None => match a.get_str("k", "5").as_str() {
+            "sqrt" => KPolicy::SqrtN.resolve(ds.len()),
+            s => s.parse::<usize>().map_err(|_| format!("bad k '{s}'"))?,
+        },
     };
     let algo = a.get_str("algo", "trueknn");
-    let percentile: Option<f64> = match a.get_str("percentile", "").as_str() {
-        "" => None,
-        s => Some(s.parse().map_err(|_| format!("bad percentile '{s}'"))?),
+    let percentile: Option<f64> = match &file_cfg {
+        Some(rc) => rc.percentile_cap,
+        None => match a.get_str("percentile", "").as_str() {
+            "" => None,
+            s => Some(s.parse().map_err(|_| format!("bad percentile '{s}'"))?),
+        },
     };
-    let seed: u64 = a.get_parse("seed", 42).map_err(|e| e.to_string())?;
 
     // `rtnn` keeps the paper-faithful one-shot implementation: its
     // per-partition data culling builds a scene per *query* chunk and
@@ -152,9 +175,14 @@ fn run_knn(a: &Args) -> Result<(), String> {
     // every other algorithm goes through the unified index API:
     // configure, build once, query
     let backend: Backend = algo.parse()?;
-    let mut cfg = IndexConfig {
-        seed,
-        ..Default::default()
+    let mut cfg = match &file_cfg {
+        // seed, start radius and threads flow straight from the file
+        Some(rc) => rc.to_index_config(),
+        None => IndexConfig {
+            seed: a.get_parse("seed", 42).map_err(|e| e.to_string())?,
+            threads: a.get_parse("threads", 0).map_err(|e| e.to_string())?,
+            ..Default::default()
+        },
     };
     match backend {
         Backend::TrueKnn => {
@@ -162,10 +190,12 @@ fn run_knn(a: &Args) -> Result<(), String> {
                 let prof = trueknn::dataset::DistanceProfile::compute(&ds, k);
                 (prof.percentile_dist(p) * 1.0001) as f32
             });
-            cfg.start_radius = match a.get_str("start-radius", "").as_str() {
-                "" => None,
-                s => Some(s.parse::<f32>().map_err(|_| "bad start-radius")?),
-            };
+            if file_cfg.is_none() {
+                cfg.start_radius = match a.get_str("start-radius", "").as_str() {
+                    "" => None,
+                    s => Some(s.parse::<f32>().map_err(|_| "bad start-radius")?),
+                };
+            }
         }
         Backend::FixedRadius | Backend::Rtnn => {
             let prof = trueknn::dataset::DistanceProfile::compute(&ds, k);
@@ -382,6 +412,7 @@ fn cmd_serve() -> Command {
         .opt("requests", "number of client requests", "64")
         .opt("queries-per-request", "queries per request", "16")
         .opt("k", "neighbors per query", "5")
+        .opt("threads", "launch-engine worker threads (0 = all cores)", "0")
         .flag("pjrt", "use the PJRT brute path when routed")
 }
 
@@ -396,10 +427,11 @@ fn run_serve(a: &Args) -> Result<(), String> {
     let k: usize = a.get_parse("k", 5).map_err(|e| e.to_string())?;
 
     let ds = kind.generate(n, 42);
-    let cfg = ServiceConfig {
+    let mut cfg = ServiceConfig {
         use_pjrt: a.flag("pjrt"),
         ..Default::default()
     };
+    cfg.trueknn.threads = a.get_parse("threads", 0).map_err(|e| e.to_string())?;
     let (svc, handle) = Service::start(ds.points.clone(), cfg);
 
     let sw = trueknn::util::Stopwatch::start();
@@ -435,5 +467,34 @@ fn run_serve(a: &Args) -> Result<(), String> {
         m.latency_max_s * 1e3
     );
     svc.shutdown();
+    Ok(())
+}
+
+// ----------------------------------------------------------------- bench
+
+fn cmd_bench() -> Command {
+    Command::new(
+        "bench",
+        "parallel launch throughput + TrueKNN shell re-query microbench",
+    )
+    .opt("n", "points for the launch-throughput bench", "100000")
+    .opt("shell-n", "points for the TrueKNN shell bench", "20000")
+    .opt("iters", "timed iterations per configuration", "3")
+    .opt("out", "output JSON path", "BENCH_PR2.json")
+}
+
+fn run_bench(a: &Args) -> Result<(), String> {
+    let n: usize = a.get_parse("n", 100_000).map_err(|e| e.to_string())?;
+    let shell_n: usize = a.get_parse("shell-n", 20_000).map_err(|e| e.to_string())?;
+    let iters: usize = a.get_parse("iters", 3).map_err(|e| e.to_string())?;
+    let out = a.get_str("out", "BENCH_PR2.json");
+    let report = trueknn::bench::pr2::run(n, shell_n, iters);
+    trueknn::bench::pr2::render(&report).print();
+    if !report.shell_exact {
+        return Err("shell re-query changed results vs the reset baseline".into());
+    }
+    std::fs::write(&out, trueknn::bench::pr2::to_json(&report).to_string())
+        .map_err(|e| e.to_string())?;
+    log_info!("wrote {out}");
     Ok(())
 }

@@ -28,5 +28,5 @@ mod pipeline;
 
 pub use counters::HwCounters;
 pub use cost::CostModel;
-pub use pipeline::{CollectHits, IntersectionProgram, Pipeline};
+pub use pipeline::{CollectHits, CollectHitsShard, IntersectionProgram, Pipeline, ShardableProgram};
 pub use scene::Scene;

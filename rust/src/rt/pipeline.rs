@@ -11,9 +11,19 @@
 //! *leaf-ordered* copy (contiguous within a leaf), reuses one traversal
 //! stack across all rays of a launch, computes the squared distance once
 //! and passes it to the program, and only touches the primitive-id
-//! remapping table on an actual hit.
+//! remapping table on an actual hit. The tree walk itself is
+//! [`crate::bvh::Bvh::for_each_leaf_containing`] — one inlined core
+//! shared with `visit_point` so the two cannot drift.
+//!
+//! [`Pipeline::launch_parallel`] shards a launch's rays across the
+//! [`crate::exec`] engine: rays are independent (a hit only touches
+//! state keyed by its own query id), so each worker runs the serial loop
+//! over a contiguous ray range with its own stack, counters and
+//! [`ShardableProgram::Shard`], and the ordered merge reproduces the
+//! serial result bit for bit.
 
 use super::{HwCounters, Scene};
+use crate::exec::Executor;
 use crate::geom::{dist2, Ray};
 
 /// The user's software intersection program (OptiX `Intersection`). The
@@ -21,8 +31,38 @@ use crate::geom::{dist2, Ray};
 /// disabled for speed (§4) — we mirror that structure. `hit` fires once
 /// per ray-sphere test that succeeds (origin inside the sphere).
 pub trait IntersectionProgram {
+    /// Called once before each ray's traversal with the ray's index
+    /// *within the launched slice*. Programs whose state is keyed by the
+    /// global `Ray::query_id` can ignore it; shard programs use it to
+    /// address per-ray state without a lookup in the hit path.
+    #[inline]
+    fn begin_ray(&mut self, _local_ray_index: u32) {}
+
     fn hit(&mut self, ray: &Ray, prim: u32, dist2: f32);
 }
+
+/// A program the parallel engine can shard. Each launch visits a query
+/// id at most once, so per-query state can be *moved* into the shard
+/// that owns the query's ray and moved back on merge — every heap sees
+/// the exact push sequence of a serial run, and counters are per-ray
+/// sums, so results and telemetry are bitwise-identical at any thread
+/// count.
+pub trait ShardableProgram: IntersectionProgram {
+    type Shard: IntersectionProgram + Send;
+
+    /// Move the state owned by `rays` into a shard. Called in shard
+    /// order before any worker starts.
+    fn split(&mut self, rays: &[Ray]) -> Self::Shard;
+
+    /// Fold a finished shard back. Called in shard order after all
+    /// workers complete.
+    fn merge(&mut self, shard: Self::Shard);
+}
+
+/// Below this many rays a launch runs serially: a ray traversal is
+/// microseconds, so tiny launches (TrueKNN straggler rounds) would pay
+/// more in thread spawns than they save.
+const PAR_LAUNCH_MIN_RAYS: usize = 64;
 
 /// Stateless launcher; all state lives in the scene and the program.
 pub struct Pipeline;
@@ -38,34 +78,90 @@ impl Pipeline {
         program: &mut P,
         counters: &mut HwCounters,
     ) {
+        let mut stack: Vec<u32> = Vec::with_capacity(128);
+        Self::launch_slice(scene, rays, program, &mut stack, counters);
+    }
+
+    /// [`Pipeline::launch`] with the rays sharded across `exec`. Requires
+    /// a [`ShardableProgram`]; results, hit order per query, and every
+    /// counter are identical to the serial launch.
+    pub fn launch_parallel<P: ShardableProgram>(
+        scene: &Scene,
+        rays: &[Ray],
+        program: &mut P,
+        counters: &mut HwCounters,
+        exec: &Executor,
+    ) {
+        let ranges = exec.shard_ranges(rays.len(), PAR_LAUNCH_MIN_RAYS);
+        if ranges.len() <= 1 {
+            return Self::launch(scene, rays, program, counters);
+        }
+        let mut shards: Vec<(std::ops::Range<usize>, P::Shard)> = ranges
+            .into_iter()
+            .map(|r| {
+                let shard = program.split(&rays[r.clone()]);
+                (r, shard)
+            })
+            .collect();
+        let shard_counters: Vec<HwCounters> = std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(shards.len() - 1);
+            let mut iter = shards.iter_mut();
+            let first = iter.next().expect("at least two shards");
+            for (range, shard) in iter {
+                let rays = &rays[range.clone()];
+                handles.push(s.spawn(move || {
+                    let mut c = HwCounters::new();
+                    let mut stack: Vec<u32> = Vec::with_capacity(128);
+                    Self::launch_slice(scene, rays, shard, &mut stack, &mut c);
+                    c
+                }));
+            }
+            let mut out = Vec::with_capacity(handles.len() + 1);
+            let mut c = HwCounters::new();
+            let mut stack: Vec<u32> = Vec::with_capacity(128);
+            Self::launch_slice(scene, &rays[first.0.clone()], &mut first.1, &mut stack, &mut c);
+            out.push(c);
+            for h in handles {
+                out.push(h.join().expect("launch worker panicked"));
+            }
+            out
+        });
+        for c in &shard_counters {
+            counters.add(c);
+        }
+        for (_, shard) in shards {
+            program.merge(shard);
+        }
+    }
+
+    /// The serial traversal loop over one ray slice — the unit both the
+    /// public serial launch and every parallel worker run.
+    fn launch_slice<P: IntersectionProgram>(
+        scene: &Scene,
+        rays: &[Ray],
+        program: &mut P,
+        stack: &mut Vec<u32>,
+        counters: &mut HwCounters,
+    ) {
         let r2 = scene.radius * scene.radius;
-        let nodes = &scene.bvh.nodes;
         let ordered = &scene.ordered_centers;
         let prim_ids = &scene.bvh.prim_order;
-        if nodes.is_empty() {
+        if scene.bvh.nodes.is_empty() {
             counters.rays += rays.len() as u64;
             return;
         }
-        let root = scene.bvh.root;
-        let mut stack: Vec<u32> = Vec::with_capacity(128);
-
         let mut aabb_tests = 0u64;
         let mut prim_tests = 0u64;
         let mut hits = 0u64;
-        for ray in rays {
+        for (ri, ray) in rays.iter().enumerate() {
             counters.rays += 1;
+            program.begin_ray(ri as u32);
             let origin = ray.origin;
-            stack.clear();
-            stack.push(root);
-            while let Some(idx) = stack.pop() {
-                let node = &nodes[idx as usize];
-                aabb_tests += 1;
-                if !node.aabb.contains(origin) {
-                    continue;
-                }
-                if node.is_leaf() {
-                    let first = node.first_prim as usize;
-                    let count = node.prim_count as usize;
+            scene.bvh.for_each_leaf_containing(
+                origin,
+                stack,
+                || aabb_tests += 1,
+                |first, count| {
                     prim_tests += count as u64;
                     for j in first..first + count {
                         let d2 = dist2(ordered[j], origin);
@@ -74,11 +170,8 @@ impl Pipeline {
                             program.hit(ray, prim_ids[j], d2);
                         }
                     }
-                } else {
-                    stack.push(node.left);
-                    stack.push(node.right);
-                }
-            }
+                },
+            );
         }
         counters.aabb_tests += aabb_tests;
         counters.prim_tests += prim_tests;
@@ -104,6 +197,49 @@ impl CollectHits {
 impl IntersectionProgram for CollectHits {
     fn hit(&mut self, ray: &Ray, prim: u32, _dist2: f32) {
         self.per_query[ray.query_id as usize].push(prim);
+    }
+}
+
+/// Per-shard state of [`CollectHits`]: the owned queries' hit lists in
+/// ray order, addressed via `begin_ray`.
+pub struct CollectHitsShard {
+    ids: Vec<u32>,
+    per_query: Vec<Vec<u32>>,
+    cur: usize,
+}
+
+impl IntersectionProgram for CollectHitsShard {
+    #[inline]
+    fn begin_ray(&mut self, local_ray_index: u32) {
+        self.cur = local_ray_index as usize;
+    }
+
+    #[inline]
+    fn hit(&mut self, _ray: &Ray, prim: u32, _dist2: f32) {
+        self.per_query[self.cur].push(prim);
+    }
+}
+
+impl ShardableProgram for CollectHits {
+    type Shard = CollectHitsShard;
+
+    fn split(&mut self, rays: &[Ray]) -> CollectHitsShard {
+        let ids: Vec<u32> = rays.iter().map(|r| r.query_id).collect();
+        let per_query = ids
+            .iter()
+            .map(|&q| std::mem::take(&mut self.per_query[q as usize]))
+            .collect();
+        CollectHitsShard {
+            ids,
+            per_query,
+            cur: 0,
+        }
+    }
+
+    fn merge(&mut self, shard: CollectHitsShard) {
+        for (q, hits) in shard.ids.into_iter().zip(shard.per_query) {
+            self.per_query[q as usize] = hits;
+        }
     }
 }
 
@@ -148,6 +284,39 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn parallel_launch_is_bitwise_identical_to_serial() {
+        let mut rng = Pcg32::new(31);
+        let pts = prop::random_cloud(&mut rng, 2_000, false);
+        let r = 0.08;
+        let mut c0 = HwCounters::new();
+        let scene = Scene::build(pts.clone(), r, &mut c0);
+        let rays: Vec<Ray> = pts
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| Ray::knn(p, i as u32))
+            .collect();
+
+        let mut serial = CollectHits::new(pts.len());
+        let mut serial_c = HwCounters::new();
+        Pipeline::launch(&scene, &rays, &mut serial, &mut serial_c);
+
+        for threads in [2usize, 3, 8] {
+            let mut par = CollectHits::new(pts.len());
+            let mut par_c = HwCounters::new();
+            Pipeline::launch_parallel(
+                &scene,
+                &rays,
+                &mut par,
+                &mut par_c,
+                &Executor::new(threads),
+            );
+            // identical per-query hit lists *in identical order*
+            assert_eq!(par.per_query, serial.per_query, "threads={threads}");
+            assert_eq!(par_c, serial_c, "threads={threads} counters");
+        }
     }
 
     #[test]
@@ -210,6 +379,11 @@ mod tests {
         Pipeline::launch(&scene, &rays, &mut prog, &mut c);
         assert_eq!(c.rays, 1);
         assert_eq!(c.prim_tests, 0);
+        assert!(prog.per_query[0].is_empty());
+
+        // the parallel path short-circuits identically
+        let mut prog = CollectHits::new(1);
+        Pipeline::launch_parallel(&scene, &rays, &mut prog, &mut c, &Executor::new(8));
         assert!(prog.per_query[0].is_empty());
     }
 }

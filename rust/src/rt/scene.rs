@@ -1,9 +1,15 @@
 //! The OptiX scene: one sphere per data point (the RT-kNNS reduction,
 //! §2.3) and the BVH over their AABBs, with build/refit lifecycle.
+//!
+//! Structure maintenance (build, refit, insert) runs through the
+//! [`crate::exec`] engine: the BVH build forks subtrees and the refit
+//! sweeps independent subtrees concurrently, with bitwise-identical
+//! output at any thread count.
 
-use crate::bvh::Bvh;
-use crate::geom::{Aabb, Point3};
 use super::HwCounters;
+use crate::bvh::{BuildStrategy, Bvh};
+use crate::exec::Executor;
+use crate::geom::{Aabb, Point3};
 
 #[derive(Clone, Debug)]
 pub struct Scene {
@@ -17,16 +23,36 @@ pub struct Scene {
     pub radius: f32,
     pub aabbs: Vec<Aabb>,
     pub bvh: Bvh,
+    /// Parallel engine for structure maintenance (build/refit/insert).
+    pub exec: Executor,
+    /// Primitive count at the last full build; [`Scene::insert`] triggers
+    /// an automatic rebuild once grafted points outnumber it.
+    pub built_prims: usize,
 }
 
+/// Per-chunk minimum for the parallel AABB regrow in refit/rebuild.
+const PAR_AABB_MIN: usize = 8192;
+
 impl Scene {
-    /// `createSpheres` + `createAABB` + `constructBVH` (Alg. 1 lines 1–3).
+    /// `createSpheres` + `createAABB` + `constructBVH` (Alg. 1 lines 1–3),
+    /// built with the default (auto) executor.
     pub fn build(centers: Vec<Point3>, radius: f32, counters: &mut HwCounters) -> Scene {
+        Self::build_with_exec(centers, radius, counters, Executor::auto())
+    }
+
+    /// [`Scene::build`] with an explicit executor; the scene keeps it for
+    /// every later refit/insert/rebuild.
+    pub fn build_with_exec(
+        centers: Vec<Point3>,
+        radius: f32,
+        counters: &mut HwCounters,
+        exec: Executor,
+    ) -> Scene {
         let aabbs: Vec<Aabb> = centers
             .iter()
             .map(|&c| Aabb::around_sphere(c, radius))
             .collect();
-        let bvh = Bvh::build(&aabbs);
+        let bvh = Bvh::build_parallel(&aabbs, BuildStrategy::MedianSplit, 4, exec);
         counters.builds += 1;
         counters.build_prims += centers.len() as u64;
         let ordered_centers = bvh
@@ -34,12 +60,15 @@ impl Scene {
             .iter()
             .map(|&p| centers[p as usize])
             .collect();
+        let built_prims = centers.len();
         Scene {
             centers,
             ordered_centers,
             radius,
             aabbs,
             bvh,
+            exec,
+            built_prims,
         }
     }
 
@@ -48,11 +77,8 @@ impl Scene {
     /// context switches of §6.2.1 (device→host to mutate the boxes,
     /// host→device to relaunch).
     pub fn refit(&mut self, radius: f32, counters: &mut HwCounters) {
-        self.radius = radius;
-        for (b, &c) in self.aabbs.iter_mut().zip(&self.centers) {
-            *b = Aabb::around_sphere(c, radius);
-        }
-        let nodes = self.bvh.refit(&self.aabbs);
+        self.regrow_aabbs(radius);
+        let nodes = self.bvh.refit_parallel(&self.aabbs, self.exec);
         // topology (and hence leaf order) is unchanged by a refit
         counters.refits += 1;
         counters.refit_nodes += nodes as u64;
@@ -63,17 +89,26 @@ impl Scene {
     /// is appended to the BVH leaf whose bounds it perturbs least (the
     /// leaf with the nearest centroid), then the whole tree is *refit*
     /// bottom-up — the OptiX "update" lifecycle, charged as a refit, not
-    /// a build. Tree quality degrades gracefully under heavy insertion;
-    /// callers that insert more than they built should rebuild.
+    /// a build. Tree quality degrades gracefully under light insertion;
+    /// once the points grafted since the last full build outnumber the
+    /// originally-built primitives, the scene rebuilds automatically
+    /// (charged honestly as a build in `counters`).
     pub fn insert(&mut self, new_points: &[Point3], counters: &mut HwCounters) {
         if new_points.is_empty() {
             return;
         }
-        // No topology to graft onto: fall back to a fresh build.
-        if self.bvh.nodes.is_empty() {
+        // Rebuild instead of grafting when there is no topology to graft
+        // onto (empty scene ⇒ built_prims == 0), or when the points
+        // grafted since the last full build would outnumber the built
+        // primitives — past that the degraded tree costs more per query
+        // than a rebuild does once.
+        let grafted = self.centers.len() - self.built_prims + new_points.len();
+        if self.bvh.nodes.is_empty() || grafted > self.built_prims {
             let mut centers = std::mem::take(&mut self.centers);
             centers.extend_from_slice(new_points);
-            *self = Scene::build(centers, self.radius, counters);
+            *self = Scene::build_with_exec(centers, self.radius, counters, self.exec);
+            // same device round-trip the graft path and `rebuild` charge
+            counters.context_switches += 2;
             return;
         }
         // One pass per point over the *leaves* (not all nodes) to pick a
@@ -131,7 +166,7 @@ impl Scene {
             .iter()
             .map(|&p| self.centers[p as usize])
             .collect();
-        let nodes = self.bvh.refit(&self.aabbs);
+        let nodes = self.bvh.refit_parallel(&self.aabbs, self.exec);
         counters.refits += 1;
         counters.refit_nodes += nodes as u64;
         counters.context_switches += 2;
@@ -140,20 +175,32 @@ impl Scene {
     /// Full rebuild at a new radius — the alternative the paper measured
     /// as 10–25% slower than refit; kept for the A1 ablation.
     pub fn rebuild(&mut self, radius: f32, counters: &mut HwCounters) {
-        self.radius = radius;
-        for (b, &c) in self.aabbs.iter_mut().zip(&self.centers) {
-            *b = Aabb::around_sphere(c, radius);
-        }
-        self.bvh = Bvh::build(&self.aabbs);
+        self.regrow_aabbs(radius);
+        self.bvh = Bvh::build_parallel(&self.aabbs, BuildStrategy::MedianSplit, 4, self.exec);
         self.ordered_centers = self
             .bvh
             .prim_order
             .iter()
             .map(|&p| self.centers[p as usize])
             .collect();
+        self.built_prims = self.centers.len();
         counters.builds += 1;
         counters.build_prims += self.centers.len() as u64;
         counters.context_switches += 2;
+    }
+
+    /// Set the common radius and regrow every sphere's AABB, in parallel
+    /// chunks — shared by [`Scene::refit`] and [`Scene::rebuild`] so the
+    /// two lifecycle paths cannot desynchronize geometrically.
+    fn regrow_aabbs(&mut self, radius: f32) {
+        self.radius = radius;
+        let centers = &self.centers;
+        self.exec
+            .for_each_chunk(&mut self.aabbs, PAR_AABB_MIN, |offset, chunk| {
+                for (i, b) in chunk.iter_mut().enumerate() {
+                    *b = Aabb::around_sphere(centers[offset + i], radius);
+                }
+            });
     }
 
     pub fn len(&self) -> usize {
@@ -179,6 +226,7 @@ mod tests {
         assert_eq!(c.builds, 1);
         assert_eq!(c.build_prims, 100);
         assert_eq!(s.aabbs.len(), 100);
+        assert_eq!(s.built_prims, 100);
     }
 
     #[test]
@@ -219,6 +267,43 @@ mod tests {
         crate::rt::Pipeline::launch(&s, &rays, &mut prog, &mut c);
         for (i, hits) in prog.per_query.iter().enumerate() {
             assert!(hits.contains(&(i as u32)), "point {i} lost after insert");
+        }
+    }
+
+    #[test]
+    fn insert_beyond_built_size_triggers_auto_rebuild() {
+        let mut c = HwCounters::new();
+        let mut rng = Pcg32::new(10);
+        let pts = prop::random_cloud(&mut rng, 100, false);
+        let mut s = Scene::build(pts.clone(), 0.2, &mut c);
+        assert_eq!(c.builds, 1);
+
+        // first graft stays within the built size: refit only
+        let extra1 = prop::random_cloud(&mut rng, 60, false);
+        s.insert(&extra1, &mut c);
+        assert_eq!(c.builds, 1);
+        assert_eq!(c.refits, 1);
+
+        // second graft pushes total grafted (120) past built (100):
+        // automatic rebuild, honestly counted
+        let extra2 = prop::random_cloud(&mut rng, 60, false);
+        s.insert(&extra2, &mut c);
+        assert_eq!(c.builds, 2, "grafts beyond built size must rebuild");
+        assert_eq!(s.len(), 220);
+        assert_eq!(s.built_prims, 220, "rebuild resets the graft budget");
+        assert_eq!(c.build_prims, 100 + 220);
+
+        // everything stays discoverable after the rebuild
+        let all: Vec<Point3> = pts.iter().chain(&extra1).chain(&extra2).copied().collect();
+        let rays: Vec<crate::geom::Ray> = all
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| crate::geom::Ray::knn(p, i as u32))
+            .collect();
+        let mut prog = crate::rt::CollectHits::new(all.len());
+        crate::rt::Pipeline::launch(&s, &rays, &mut prog, &mut c);
+        for (i, hits) in prog.per_query.iter().enumerate() {
+            assert!(hits.contains(&(i as u32)), "point {i} lost after rebuild");
         }
     }
 

@@ -99,6 +99,84 @@ fn external_queries_agree_across_backends() {
 }
 
 #[test]
+fn thread_count_matrix_is_bitwise_deterministic() {
+    // the exec engine's contract: sharding is a throughput knob, never a
+    // semantics knob — neighbors AND hardware counters must be identical
+    // at 1, 2 and 8 threads, for both the multi-round TrueKNN path and
+    // the single-launch fixed-radius path
+    let ds = DatasetKind::Taxi.generate(900, 130);
+    for backend in [Backend::TrueKnn, Backend::FixedRadius] {
+        let mut baseline = None;
+        for threads in [1usize, 2, 8] {
+            let mut index = IndexBuilder::new(backend)
+                .threads(threads)
+                .build(ds.points.clone());
+            let res = index.knn(&ds.points, 5);
+            // bitwise: compare float *bits*, not approximate distances
+            let flat: Vec<(u32, u32)> = res
+                .neighbors
+                .iter()
+                .flat_map(|q| q.iter().map(|n| (n.idx, n.dist.to_bits())))
+                .collect();
+            let counters = (
+                res.counters.rays,
+                res.counters.aabb_tests,
+                res.counters.prim_tests,
+                res.counters.hits,
+                res.counters.heap_pushes,
+            );
+            match &baseline {
+                None => baseline = Some((flat, counters)),
+                Some((base_flat, base_counters)) => {
+                    assert_eq!(
+                        &flat, base_flat,
+                        "{backend} threads={threads}: neighbors must be bitwise-identical"
+                    );
+                    assert_eq!(
+                        &counters, base_counters,
+                        "{backend} threads={threads}: counters must be identical"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn shell_requery_drops_heap_pushes_and_stays_exact() {
+    // the annulus filter must strictly reduce heap traffic on a
+    // multi-round clustered workload while matching the kd-tree oracle
+    let ds = DatasetKind::Taxi.generate(1_200, 131);
+    let tree = KdTree::build(&ds.points);
+
+    // a pinned small start radius guarantees a multi-round search
+    let mut shell_idx = IndexBuilder::new(Backend::TrueKnn)
+        .start_radius(0.002)
+        .build(ds.points.clone());
+    let shell = shell_idx.knn(&ds.points, 5);
+    let mut reset_idx = IndexBuilder::new(Backend::TrueKnn)
+        .start_radius(0.002)
+        .shell_requery(false)
+        .build(ds.points.clone());
+    let reset = reset_idx.knn(&ds.points, 5);
+
+    assert!(shell.rounds.len() > 1, "workload must be multi-round");
+    assert!(
+        shell.counters.heap_pushes < reset.counters.heap_pushes,
+        "shell re-query pushes ({}) must strictly drop vs reset-per-round ({})",
+        shell.counters.heap_pushes,
+        reset.counters.heap_pushes
+    );
+    // identical traversal work — only heap traffic changes
+    assert_eq!(shell.counters.prim_tests, reset.counters.prim_tests);
+    assert_eq!(shell.counters.hits, reset.counters.hits);
+    for (i, got) in shell.neighbors.iter().enumerate() {
+        let want = tree.knn_excluding(ds.points[i], 5, Some(i as u32));
+        assert_exact(got, &want, &format!("shell re-query query {i}"));
+    }
+}
+
+#[test]
 fn insert_keeps_every_backend_on_the_oracle() {
     let ds = DatasetKind::Road.generate(300, 127);
     let extra = DatasetKind::Road.generate(60, 128).points;
