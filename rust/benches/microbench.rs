@@ -131,4 +131,9 @@ fn main() {
     // (same measurements `trueknn bench` writes to BENCH_PR2.json)
     let report = trueknn::bench::pr2::run(50_000, 10_000, cfg.iters);
     trueknn::bench::pr2::render(&report).print();
+
+    // ---- PR3: SoA leaf loop + cohort scheduling + round bookkeeping -----
+    // (same measurements `trueknn bench` writes to BENCH_PR3.json)
+    let report = trueknn::bench::pr3::run(50_000, 10_000, cfg.iters);
+    trueknn::bench::pr3::render(&report).print();
 }

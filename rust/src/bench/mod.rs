@@ -5,6 +5,7 @@
 //! bench` logs read like the paper's tables.
 
 pub mod pr2;
+pub mod pr3;
 
 use crate::util::stats::{median, OnlineStats};
 use crate::util::Stopwatch;

@@ -1,0 +1,347 @@
+//! The PR3 perf microbench: cache-coherent hot path, emitted as
+//! `BENCH_PR3.json` so CI can archive the perf trajectory alongside
+//! `BENCH_PR2.json`.
+//!
+//! Three measurements:
+//!
+//! 1. **SoA vs AoS leaf loop** — one serial launch over every point
+//!    (k = 5) through the leaf-ordered SoA [`crate::store::PointStore`]
+//!    vs the pre-PR AoS reference loop
+//!    ([`Pipeline::launch_aos_reference`]). Same traversal, same BVH —
+//!    only the inner distance loop's memory layout differs.
+//! 2. **Cohort scheduling on/off** — parallel launch throughput at
+//!    1 thread and all cores, with and without Morton query-cohort
+//!    scheduling. Results are bitwise-identical either way (checked);
+//!    only the schedule, and hence the wall-clock, moves.
+//! 3. **End-to-end TrueKNN** — a full multi-round search on the taxi
+//!    analog at threads {1, 4, max}, timing the complete round loop
+//!    (launch + retire/compact + refit + assembly, all of which are now
+//!    parallel).
+
+use crate::configx::Json;
+use crate::dataset::DatasetKind;
+use crate::exec::Executor;
+use crate::geom::Ray;
+use crate::index::{Backend, IndexBuilder};
+use crate::knn::program::KnnProgram;
+use crate::knn::random_sample_radius;
+use crate::rt::{HwCounters, Pipeline, Scene};
+use crate::util::Stopwatch;
+
+use super::{fmt_secs, Table};
+
+#[derive(Clone, Debug)]
+pub struct CohortRow {
+    pub threads: usize,
+    /// Best-of-`iters` wall seconds with cohort scheduling on / off.
+    pub on_seconds: f64,
+    pub off_seconds: f64,
+}
+
+impl CohortRow {
+    pub fn speedup(&self) -> f64 {
+        self.off_seconds / self.on_seconds.max(1e-12)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrueKnnRow {
+    pub threads: usize,
+    /// Best-of-`iters` wall seconds for one full multi-round search.
+    pub seconds: f64,
+    pub rounds: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Pr3Report {
+    pub launch_n: usize,
+    pub launch_radius: f32,
+    pub iters: usize,
+    /// Serial (1-thread) inner-loop layout comparison.
+    pub soa_seconds: f64,
+    pub aos_seconds: f64,
+    /// Sanity: both loops returned identical results and counters.
+    pub layout_match: bool,
+    pub cohort: Vec<CohortRow>,
+    /// Sanity: cohort on/off returned identical results and counters.
+    pub cohort_match: bool,
+    pub trueknn_n: usize,
+    pub trueknn: Vec<TrueKnnRow>,
+}
+
+impl Pr3Report {
+    pub fn soa_speedup(&self) -> f64 {
+        self.aos_seconds / self.soa_seconds.max(1e-12)
+    }
+}
+
+fn heap_signature(prog: &KnnProgram) -> Vec<(u32, u32)> {
+    prog.heaps
+        .iter()
+        .flat_map(|h| h.sorted().into_iter().map(|n| (n.idx, n.dist.to_bits())))
+        .collect()
+}
+
+/// Run all three measurements. `iters` timed repetitions per
+/// configuration, reporting the minimum (the least-perturbed sample).
+pub fn run(launch_n: usize, trueknn_n: usize, iters: usize) -> Pr3Report {
+    let iters = iters.max(1);
+
+    // ---- 1. SoA vs AoS inner loop (serial) --------------------------
+    let ds = DatasetKind::Uniform.generate(launch_n, 42);
+    let radius = random_sample_radius(&ds.points, 42);
+    let mut c = HwCounters::new();
+    let mut scene = Scene::build(ds.points.clone(), radius, &mut c);
+    let rays: Vec<Ray> = ds
+        .points
+        .iter()
+        .enumerate()
+        .map(|(i, &p)| Ray::knn(p, i as u32))
+        .collect();
+
+    // warmup + reference signature for the match checks, untimed
+    let (soa_sig, soa_counters) = {
+        let mut prog = KnnProgram::new(ds.len(), 5, true);
+        let mut counters = HwCounters::new();
+        Pipeline::launch(&scene, &rays, &mut prog, &mut counters);
+        (heap_signature(&prog), counters)
+    };
+    let mut soa_seconds = f64::INFINITY;
+    for _ in 0..iters {
+        let mut prog = KnnProgram::new(ds.len(), 5, true);
+        let mut counters = HwCounters::new();
+        let sw = Stopwatch::start();
+        Pipeline::launch(&scene, &rays, &mut prog, &mut counters);
+        soa_seconds = soa_seconds.min(sw.elapsed_secs());
+    }
+    // the AoS copy is materialized outside the timed region: the bench
+    // compares loop layouts, not a one-time gather
+    let aos_points = scene.store.to_aos();
+    let layout_match = {
+        let mut prog = KnnProgram::new(ds.len(), 5, true);
+        let mut counters = HwCounters::new();
+        Pipeline::launch_aos_reference(&scene, &aos_points, &rays, &mut prog, &mut counters);
+        heap_signature(&prog) == soa_sig && counters == soa_counters
+    };
+    let mut aos_seconds = f64::INFINITY;
+    for _ in 0..iters {
+        let mut prog = KnnProgram::new(ds.len(), 5, true);
+        let mut counters = HwCounters::new();
+        let sw = Stopwatch::start();
+        Pipeline::launch_aos_reference(&scene, &aos_points, &rays, &mut prog, &mut counters);
+        aos_seconds = aos_seconds.min(sw.elapsed_secs());
+    }
+
+    // ---- 2. cohort scheduling on/off × threads {1, max} -------------
+    let max_threads = Executor::auto().threads();
+    let mut thread_counts = vec![1usize, max_threads];
+    thread_counts.sort_unstable();
+    thread_counts.dedup();
+    let mut cohort = Vec::new();
+    let mut cohort_match = true;
+    for &t in &thread_counts {
+        let exec = Executor::new(t);
+        let mut measure = |enabled: bool| {
+            scene.cohort = enabled;
+            // warmup + signature, untimed
+            let sig = {
+                let mut prog = KnnProgram::new(ds.len(), 5, true);
+                let mut counters = HwCounters::new();
+                Pipeline::launch_parallel(&scene, &rays, &mut prog, &mut counters, &exec);
+                heap_signature(&prog)
+            };
+            let mut best = f64::INFINITY;
+            for _ in 0..iters {
+                let mut prog = KnnProgram::new(ds.len(), 5, true);
+                let mut counters = HwCounters::new();
+                let sw = Stopwatch::start();
+                Pipeline::launch_parallel(&scene, &rays, &mut prog, &mut counters, &exec);
+                best = best.min(sw.elapsed_secs());
+            }
+            (best, sig)
+        };
+        let (off_seconds, off_sig) = measure(false);
+        let (on_seconds, on_sig) = measure(true);
+        cohort_match &= on_sig == off_sig;
+        cohort.push(CohortRow {
+            threads: t,
+            on_seconds,
+            off_seconds,
+        });
+    }
+
+    // ---- 3. end-to-end TrueKNN rounds at threads {1, 4, max} --------
+    let tds = DatasetKind::Taxi.generate(trueknn_n, 42);
+    let mut tk_threads = vec![1usize, 4, max_threads];
+    tk_threads.sort_unstable();
+    tk_threads.dedup();
+    let mut trueknn = Vec::new();
+    for &t in &tk_threads {
+        let mut index = IndexBuilder::new(Backend::TrueKnn)
+            .seed(42)
+            .threads(t)
+            .build(tds.points.clone());
+        let mut best = f64::INFINITY;
+        let mut rounds = 0usize;
+        for it in 0..=iters {
+            let sw = Stopwatch::start();
+            let res = index.knn(&tds.points, 5);
+            let s = sw.elapsed_secs();
+            if it > 0 {
+                best = best.min(s);
+            }
+            rounds = res.rounds.len();
+        }
+        trueknn.push(TrueKnnRow {
+            threads: t,
+            seconds: best,
+            rounds,
+        });
+    }
+
+    Pr3Report {
+        launch_n: ds.len(),
+        launch_radius: radius,
+        iters,
+        soa_seconds,
+        aos_seconds,
+        layout_match,
+        cohort,
+        cohort_match,
+        trueknn_n: tds.len(),
+        trueknn,
+    }
+}
+
+pub fn to_json(r: &Pr3Report) -> Json {
+    let cohort: Vec<Json> = r
+        .cohort
+        .iter()
+        .map(|row| {
+            Json::obj(vec![
+                ("threads", Json::Num(row.threads as f64)),
+                ("cohort_on_seconds", Json::Num(row.on_seconds)),
+                ("cohort_off_seconds", Json::Num(row.off_seconds)),
+                ("cohort_speedup", Json::Num(row.speedup())),
+            ])
+        })
+        .collect();
+    let trueknn: Vec<Json> = r
+        .trueknn
+        .iter()
+        .map(|row| {
+            Json::obj(vec![
+                ("threads", Json::Num(row.threads as f64)),
+                ("seconds", Json::Num(row.seconds)),
+                ("rounds", Json::Num(row.rounds as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("bench", Json::Str("pr3".into())),
+        (
+            "leaf_loop",
+            Json::obj(vec![
+                ("dataset", Json::Str("uniform".into())),
+                ("n", Json::Num(r.launch_n as f64)),
+                ("k", Json::Num(5.0)),
+                ("radius", Json::Num(r.launch_radius as f64)),
+                ("iters", Json::Num(r.iters as f64)),
+                ("soa_seconds", Json::Num(r.soa_seconds)),
+                ("aos_seconds", Json::Num(r.aos_seconds)),
+                ("soa_speedup", Json::Num(r.soa_speedup())),
+                ("results_match", Json::Bool(r.layout_match)),
+            ]),
+        ),
+        (
+            "cohort_launch",
+            Json::obj(vec![
+                ("dataset", Json::Str("uniform".into())),
+                ("n", Json::Num(r.launch_n as f64)),
+                ("rows", Json::Arr(cohort)),
+                ("results_match", Json::Bool(r.cohort_match)),
+            ]),
+        ),
+        (
+            "trueknn_rounds",
+            Json::obj(vec![
+                ("dataset", Json::Str("taxi".into())),
+                ("n", Json::Num(r.trueknn_n as f64)),
+                ("k", Json::Num(5.0)),
+                ("rows", Json::Arr(trueknn)),
+            ]),
+        ),
+    ])
+}
+
+pub fn render(r: &Pr3Report) -> Table {
+    let mut t = Table::new(
+        "PR3 microbench: SoA leaf loop + cohort scheduling + round bookkeeping",
+        &["metric", "value"],
+    );
+    t.row(vec![
+        format!("leaf loop SoA, {}k rays serial", r.launch_n / 1000),
+        fmt_secs(r.soa_seconds),
+    ]);
+    t.row(vec![
+        "leaf loop AoS reference".into(),
+        fmt_secs(r.aos_seconds),
+    ]);
+    t.row(vec![
+        "SoA speedup (AoS / SoA)".into(),
+        format!("{:.2}x", r.soa_speedup()),
+    ]);
+    t.row(vec![
+        "layouts agree bitwise".into(),
+        r.layout_match.to_string(),
+    ]);
+    for row in &r.cohort {
+        t.row(vec![
+            format!("cohort launch, {} thread(s)", row.threads),
+            format!(
+                "on {} / off {} ({:.2}x)",
+                fmt_secs(row.on_seconds),
+                fmt_secs(row.off_seconds),
+                row.speedup()
+            ),
+        ]);
+    }
+    t.row(vec![
+        "cohorting invisible in results".into(),
+        r.cohort_match.to_string(),
+    ]);
+    for row in &r.trueknn {
+        t.row(vec![
+            format!(
+                "TrueKNN end-to-end (taxi {}k, {} rounds), {} thread(s)",
+                r.trueknn_n / 1000,
+                row.rounds,
+                row.threads
+            ),
+            fmt_secs(row.seconds),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_runs_small_and_serializes() {
+        let r = run(2_000, 600, 1);
+        assert_eq!(r.launch_n, 2_000);
+        assert!(r.soa_seconds > 0.0 && r.aos_seconds > 0.0);
+        assert!(r.layout_match, "SoA and AoS loops must agree bitwise");
+        assert!(r.cohort_match, "cohorting must not change results");
+        assert!(!r.trueknn.is_empty());
+        let j = to_json(&r).to_string();
+        assert!(j.contains("\"bench\":\"pr3\""));
+        assert!(j.contains("soa_speedup"));
+        assert!(j.contains("cohort_launch"));
+        let parsed = crate::configx::parse_json(&j).unwrap();
+        assert!(parsed.get("leaf_loop").is_some());
+        assert!(parsed.get("trueknn_rounds").is_some());
+    }
+}

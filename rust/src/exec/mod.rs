@@ -163,6 +163,51 @@ impl Executor {
             }
         });
     }
+
+    /// Shard two equal-length buffers into *matching* disjoint chunk
+    /// pairs and run `f(offset, a_chunk, b_chunk)` on each concurrently —
+    /// the gather/scatter primitive of per-query result assembly (drain
+    /// heap `i` into output slot `i`). Chunk pairs cover the same index
+    /// range of both buffers, so item `i` of `a` is always processed
+    /// alongside item `i` of `b`, and the merged result is the buffers
+    /// themselves.
+    pub fn for_each_chunk2<A, B, F>(&self, a: &mut [A], b: &mut [B], min_chunk: usize, f: F)
+    where
+        A: Send,
+        B: Send,
+        F: Fn(usize, &mut [A], &mut [B]) + Sync,
+    {
+        assert_eq!(a.len(), b.len(), "paired buffers must match in length");
+        let ranges = self.shard_ranges(a.len(), min_chunk);
+        if ranges.len() <= 1 {
+            if !a.is_empty() {
+                f(0, a, b);
+            }
+            return;
+        }
+        std::thread::scope(|s| {
+            let f = &f;
+            let mut rest_a = a;
+            let mut rest_b = b;
+            let mut first: Option<(usize, &mut [A], &mut [B])> = None;
+            for r in ranges {
+                let (ca, ta) = std::mem::take(&mut rest_a).split_at_mut(r.len());
+                let (cb, tb) = std::mem::take(&mut rest_b).split_at_mut(r.len());
+                rest_a = ta;
+                rest_b = tb;
+                let start = r.start;
+                if first.is_none() {
+                    // chunk-pair 0 runs on the calling thread, below
+                    first = Some((start, ca, cb));
+                } else {
+                    s.spawn(move || f(start, ca, cb));
+                }
+            }
+            if let Some((start, ca, cb)) = first {
+                f(start, ca, cb);
+            }
+        });
+    }
 }
 
 /// Two-way fork-join: run `fa` on the calling thread and `fb` on a scoped
@@ -251,6 +296,31 @@ mod tests {
         for (i, x) in data.iter().enumerate() {
             assert_eq!(*x, i as u32 + 1, "item {i}");
         }
+    }
+
+    #[test]
+    fn for_each_chunk2_pairs_matching_indices() {
+        let mut heaps: Vec<u32> = (0..3_000).collect();
+        let mut out = vec![0u32; 3_000];
+        Executor::new(8).for_each_chunk2(&mut heaps, &mut out, 16, |offset, a, b| {
+            for (i, (x, y)) in a.iter_mut().zip(b.iter_mut()).enumerate() {
+                assert_eq!(*x as usize, offset + i, "chunks must stay aligned");
+                *y = *x * 2;
+                *x = 0;
+            }
+        });
+        for (i, y) in out.iter().enumerate() {
+            assert_eq!(*y, i as u32 * 2, "item {i}");
+        }
+        assert!(heaps.iter().all(|&x| x == 0), "source drained");
+    }
+
+    #[test]
+    #[should_panic(expected = "paired buffers must match")]
+    fn for_each_chunk2_rejects_mismatched_lengths() {
+        let mut a = vec![0u8; 3];
+        let mut b = vec![0u8; 4];
+        Executor::new(2).for_each_chunk2(&mut a, &mut b, 1, |_, _, _| {});
     }
 
     #[test]

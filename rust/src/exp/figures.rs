@@ -362,6 +362,9 @@ mod tests {
         // the paper's negative result: with k=5 and the tight 99th-pct
         // radius on 3DIono, TrueKNN's advantage collapses (can invert).
         // Shape check: speedup is small — far below the taxi sqrtN case.
+        // Both speedups are counter-driven simulated ratios (run_pair
+        // finalizes sim time from HwCounters), so a loaded machine
+        // cannot flip this.
         let iono = run_pair(&build(DatasetKind::Iono, 1_500), 5, Some(99.0));
         let taxi = run_pair(&build(DatasetKind::Taxi, 1_500), 38, None);
         assert!(

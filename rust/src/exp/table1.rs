@@ -95,7 +95,8 @@ mod tests {
         // Miniature version of the sweep: one size, all four datasets.
         // Sizes below ~4K sit under the crossover where per-round fixed
         // costs (context switches) dominate — the same effect the paper
-        // documents in §6.1/Fig 9 — so the check runs at 5K.
+        // documents in §6.1/Fig 9 — so the check runs at 5K. The speedup
+        // is a counter-driven simulated ratio: deterministic under load.
         for kind in DatasetKind::PAPER_MAIN {
             let ds = build(kind, 5_000);
             let k = KPolicy::SqrtN.resolve(5_000);

@@ -1,8 +1,15 @@
 //! Exact backends: the kd-tree oracle, the CPU brute-force scan, and
 //! the PJRT-accelerated brute force (cuML analog). These are the
 //! shader-core side of the router's RT-vs-brute decision.
+//!
+//! All three honor `IndexConfig::threads` through the [`crate::exec`]
+//! engine: queries are sharded contiguously, each worker computes its
+//! queries exactly as the serial loop would, and the ordered merge (list
+//! concat + integer counter sums) reproduces the serial result bit for
+//! bit — the same determinism contract as the scene-backed backends.
 
 use super::{finish_range, Backend, BuildStats, IndexConfig, NeighborIndex};
+use crate::exec::Executor;
 use crate::geom::{dist2, Point3};
 use crate::knn::kdtree::KdTree;
 use crate::knn::{KHeap, KnnResult, Neighbor};
@@ -10,12 +17,17 @@ use crate::rt::HwCounters;
 use crate::runtime::{PjrtBruteForce, PjrtRuntime};
 use crate::util::Stopwatch;
 
+/// Per-shard minimum queries for the exact backends (a kd-tree descent
+/// or a brute scan per query — substantial per item, so shard early).
+const PAR_EXACT_MIN_QUERIES: usize = 16;
+
 // ---------------------------------------------------------------- kdtree
 
 pub struct KdTreeIndex {
     cfg: IndexConfig,
     data: Vec<Point3>,
     tree: KdTree,
+    exec: Executor,
     build: HwCounters,
     build_seconds: f64,
 }
@@ -29,10 +41,12 @@ impl KdTreeIndex {
         let mut build = HwCounters::new();
         build.builds += 1;
         build.build_prims += data.len() as u64;
+        let exec = Executor::new(cfg.threads);
         KdTreeIndex {
             cfg,
             data,
             tree,
+            exec,
             build,
             build_seconds: sw.elapsed_secs(),
         }
@@ -51,14 +65,19 @@ impl NeighborIndex for KdTreeIndex {
     fn knn(&mut self, queries: &[Point3], k: usize) -> KnnResult {
         let wall = Stopwatch::start();
         let mut result = KnnResult::new(queries.len());
-        for (i, &q) in queries.iter().enumerate() {
-            let exclude = if self.cfg.exclude_self {
-                Some(i as u32)
-            } else {
-                None
-            };
-            result.neighbors[i] = self.tree.knn_excluding(q, k, exclude);
-        }
+        let tree = &self.tree;
+        let exclude_self = self.cfg.exclude_self;
+        let parts = self
+            .exec
+            .run(queries.len(), PAR_EXACT_MIN_QUERIES, |_, range| {
+                range
+                    .map(|i| {
+                        let exclude = if exclude_self { Some(i as u32) } else { None };
+                        tree.knn_excluding(queries[i], k, exclude)
+                    })
+                    .collect::<Vec<_>>()
+            });
+        result.neighbors = parts.concat();
         result.counters.rays = queries.len() as u64;
         result.wall_seconds = wall.elapsed_secs();
         // exact CPU path: measured, not modeled
@@ -69,22 +88,27 @@ impl NeighborIndex for KdTreeIndex {
     fn range(&mut self, queries: &[Point3], radius: f32) -> KnnResult {
         let wall = Stopwatch::start();
         let mut result = KnnResult::new(queries.len());
-        let per_query = queries
-            .iter()
-            .enumerate()
-            .map(|(i, &q)| {
-                self.tree
-                    .range(q, radius)
-                    .into_iter()
-                    .filter(|&p| !(self.cfg.exclude_self && p as usize == i))
-                    .map(|p| Neighbor {
-                        idx: p,
-                        dist: dist2(self.data[p as usize], q),
+        let tree = &self.tree;
+        let data = &self.data;
+        let exclude_self = self.cfg.exclude_self;
+        let parts = self
+            .exec
+            .run(queries.len(), PAR_EXACT_MIN_QUERIES, |_, range| {
+                range
+                    .map(|i| {
+                        let q = queries[i];
+                        tree.range(q, radius)
+                            .into_iter()
+                            .filter(|&p| !(exclude_self && p as usize == i))
+                            .map(|p| Neighbor {
+                                idx: p,
+                                dist: dist2(data[p as usize], q),
+                            })
+                            .collect::<Vec<_>>()
                     })
-                    .collect()
-            })
-            .collect();
-        result.neighbors = finish_range(per_query);
+                    .collect::<Vec<_>>()
+            });
+        result.neighbors = finish_range(parts.concat(), &self.exec);
         result.counters.rays = queries.len() as u64;
         result.wall_seconds = wall.elapsed_secs();
         result.sim_seconds = result.wall_seconds;
@@ -121,16 +145,20 @@ impl NeighborIndex for KdTreeIndex {
 pub struct BruteCpuIndex {
     cfg: IndexConfig,
     data: Vec<Point3>,
+    exec: Executor,
 }
 
 impl BruteCpuIndex {
     pub fn new(data: Vec<Point3>, cfg: IndexConfig) -> Self {
-        BruteCpuIndex { cfg, data }
+        let exec = Executor::new(cfg.threads);
+        BruteCpuIndex { cfg, data, exec }
     }
 }
 
 /// Exhaustive range scan shared by the CPU backend and the PJRT range
 /// path (the radius_count artifact returns counts, not neighbor lists).
+/// Queries are sharded across `exec`; each worker scans `data` in order,
+/// so the merged lists and summed counters equal the serial scan.
 /// Returns per-query in-radius hits as (idx, dist²) for `finish_range`.
 pub(crate) fn cpu_range_scan(
     data: &[Point3],
@@ -138,53 +166,71 @@ pub(crate) fn cpu_range_scan(
     radius: f32,
     exclude_self: bool,
     counters: &mut HwCounters,
+    exec: &Executor,
 ) -> Vec<Vec<Neighbor>> {
     let r2 = radius * radius;
-    queries
-        .iter()
-        .enumerate()
-        .map(|(qi, &q)| {
-            counters.prim_tests += data.len() as u64;
-            let mut hits = Vec::new();
-            for (di, &d) in data.iter().enumerate() {
-                if exclude_self && di == qi {
-                    continue;
+    let parts = exec.run(queries.len(), PAR_EXACT_MIN_QUERIES, |_, range| {
+        range
+            .map(|qi| {
+                let q = queries[qi];
+                let mut hits = Vec::new();
+                for (di, &d) in data.iter().enumerate() {
+                    if exclude_self && di == qi {
+                        continue;
+                    }
+                    let d2 = dist2(d, q);
+                    if d2 <= r2 {
+                        hits.push(Neighbor {
+                            idx: di as u32,
+                            dist: d2,
+                        });
+                    }
                 }
-                let d2 = dist2(d, q);
-                if d2 <= r2 {
-                    hits.push(Neighbor {
-                        idx: di as u32,
-                        dist: d2,
-                    });
-                }
-            }
-            hits
-        })
-        .collect()
+                hits
+            })
+            .collect::<Vec<_>>()
+    });
+    counters.prim_tests += data.len() as u64 * queries.len() as u64;
+    parts.concat()
 }
 
 /// Exhaustive scan shared by the CPU backend and the PJRT fallback.
+/// Sharded across `exec` with the same ordered-merge contract as the
+/// range scan: per-query heaps see the identical push sequence.
 pub(crate) fn cpu_brute_scan(
     data: &[Point3],
     queries: &[Point3],
     k: usize,
     exclude_self: bool,
     cfg: &IndexConfig,
+    exec: &Executor,
 ) -> KnnResult {
     let wall = Stopwatch::start();
     let mut result = KnnResult::new(queries.len());
-    for (qi, &q) in queries.iter().enumerate() {
-        let mut heap = KHeap::new(k);
-        for (di, &d) in data.iter().enumerate() {
-            if exclude_self && di == qi {
-                continue;
+    let parts = exec.run(queries.len(), PAR_EXACT_MIN_QUERIES, |_, range| {
+        let mut neighbors = Vec::with_capacity(range.len());
+        let mut heap_pushes = 0u64;
+        for qi in range {
+            let q = queries[qi];
+            let mut heap = KHeap::new(k);
+            for (di, &d) in data.iter().enumerate() {
+                if exclude_self && di == qi {
+                    continue;
+                }
+                heap.push(dist2(d, q), di as u32);
             }
-            heap.push(dist2(d, q), di as u32);
+            heap_pushes += heap.pushes;
+            neighbors.push(heap.into_sorted());
         }
-        result.counters.prim_tests += data.len() as u64;
-        result.counters.heap_pushes += heap.pushes;
-        result.neighbors[qi] = heap.into_sorted();
+        (neighbors, heap_pushes)
+    });
+    let mut neighbors = Vec::with_capacity(queries.len());
+    for (part, pushes) in parts {
+        neighbors.extend(part);
+        result.counters.heap_pushes += pushes;
     }
+    result.neighbors = neighbors;
+    result.counters.prim_tests += data.len() as u64 * queries.len() as u64;
     result.counters.rays = queries.len() as u64;
     result.wall_seconds = wall.elapsed_secs();
     // no BVH/ray machinery; simulated time is prim-test + sort cost only
@@ -202,7 +248,14 @@ impl NeighborIndex for BruteCpuIndex {
     }
 
     fn knn(&mut self, queries: &[Point3], k: usize) -> KnnResult {
-        cpu_brute_scan(&self.data, queries, k, self.cfg.exclude_self, &self.cfg)
+        cpu_brute_scan(
+            &self.data,
+            queries,
+            k,
+            self.cfg.exclude_self,
+            &self.cfg,
+            &self.exec,
+        )
     }
 
     fn range(&mut self, queries: &[Point3], radius: f32) -> KnnResult {
@@ -214,8 +267,9 @@ impl NeighborIndex for BruteCpuIndex {
             radius,
             self.cfg.exclude_self,
             &mut result.counters,
+            &self.exec,
         );
-        result.neighbors = finish_range(per_query);
+        result.neighbors = finish_range(per_query, &self.exec);
         result.counters.rays = queries.len() as u64;
         result.wall_seconds = wall.elapsed_secs();
         result.sim_seconds = self.cfg.cost_model.seconds(&result.counters, 1);
@@ -249,6 +303,9 @@ pub struct BrutePjrtIndex {
     cfg: IndexConfig,
     data: Vec<Point3>,
     runtime: Option<PjrtRuntime>,
+    /// Engine for the CPU fallback and range paths (the PJRT executables
+    /// parallelize internally).
+    exec: Executor,
 }
 
 impl BrutePjrtIndex {
@@ -266,7 +323,13 @@ impl BrutePjrtIndex {
     /// Wrap an already-loaded runtime (the service loads it itself so the
     /// router can learn availability before any index exists).
     pub fn with_runtime(data: Vec<Point3>, runtime: Option<PjrtRuntime>, cfg: IndexConfig) -> Self {
-        BrutePjrtIndex { cfg, data, runtime }
+        let exec = Executor::new(cfg.threads);
+        BrutePjrtIndex {
+            cfg,
+            data,
+            runtime,
+            exec,
+        }
     }
 
     pub fn pjrt_available(&self) -> bool {
@@ -292,7 +355,14 @@ impl NeighborIndex for BrutePjrtIndex {
                 }
             }
         }
-        cpu_brute_scan(&self.data, queries, k, self.cfg.exclude_self, &self.cfg)
+        cpu_brute_scan(
+            &self.data,
+            queries,
+            k,
+            self.cfg.exclude_self,
+            &self.cfg,
+            &self.exec,
+        )
     }
 
     fn range(&mut self, queries: &[Point3], radius: f32) -> KnnResult {
@@ -306,8 +376,9 @@ impl NeighborIndex for BrutePjrtIndex {
             radius,
             self.cfg.exclude_self,
             &mut result.counters,
+            &self.exec,
         );
-        result.neighbors = finish_range(per_query);
+        result.neighbors = finish_range(per_query, &self.exec);
         result.counters.rays = queries.len() as u64;
         result.wall_seconds = wall.elapsed_secs();
         result.sim_seconds = self.cfg.cost_model.seconds(&result.counters, 1);

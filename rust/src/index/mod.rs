@@ -137,6 +137,12 @@ pub struct IndexConfig {
     /// maintenance (0 = all available cores). Results are
     /// bitwise-identical at any value — this is purely a throughput knob.
     pub threads: usize,
+    /// Morton query-cohort scheduling for parallel launches (on by
+    /// default): sort each launch's rays along the Z-order curve into
+    /// cache-sized cohorts before sharding, so every worker walks a
+    /// compact run of BVH subtrees. Like `threads`, a pure schedule
+    /// knob — results and counters are bitwise-identical either way.
+    pub cohort_queries: bool,
     /// TrueKNN: keep survivors' partial heaps across rounds and discard
     /// hits inside the previous radius (shell re-query), instead of
     /// resetting and re-pushing everything each round. Exact either way;
@@ -156,6 +162,7 @@ impl Default for IndexConfig {
             radius: None,
             partitions: 16,
             threads: 0,
+            cohort_queries: true,
             shell_requery: true,
         }
     }
@@ -282,6 +289,13 @@ impl IndexBuilder {
     /// results.
     pub fn threads(mut self, n: usize) -> Self {
         self.cfg.threads = n;
+        self
+    }
+
+    /// Toggle Morton query-cohort scheduling (on by default). Only
+    /// changes the launch schedule, never results.
+    pub fn cohort_queries(mut self, v: bool) -> Self {
+        self.cfg.cohort_queries = v;
         self
     }
 
@@ -429,7 +443,7 @@ pub(crate) fn scene_range(
     let mut prog = RangeCollect::new(queries.len(), exclude_self);
     let exec = scene.exec;
     Pipeline::launch_parallel(scene, &rays, &mut prog, &mut counters, &exec);
-    result.neighbors = finish_range(prog.per_query);
+    result.neighbors = finish_range(prog.per_query, &exec);
     result.launches = 1;
     result.counters = counters;
     result.wall_seconds = wall.elapsed_secs();
@@ -437,11 +451,35 @@ pub(crate) fn scene_range(
     result
 }
 
-/// Convert collected squared distances to sorted real-distance lists.
-pub(crate) fn finish_range(per_query: Vec<Vec<Neighbor>>) -> Vec<Vec<Neighbor>> {
-    per_query
-        .into_iter()
-        .map(|mut hits| {
+/// Per-chunk minimum for the sharded per-query result assembly passes
+/// (sqrt + sort of short neighbor lists — cheap per item).
+pub(crate) const PAR_ASSEMBLY_MIN: usize = 512;
+
+/// Drain every k-heap into its aligned result slot, sharded across
+/// `exec` — the shared per-query assembly pass of TrueKNN and the
+/// fixed-radius backends. Chunk pairs keep heap `i` aligned with output
+/// slot `i`, so this equals the serial drain.
+pub(crate) fn assemble_sorted(
+    heaps: &mut [crate::knn::KHeap],
+    out: &mut [Vec<Neighbor>],
+    exec: &crate::exec::Executor,
+) {
+    exec.for_each_chunk2(heaps, out, PAR_ASSEMBLY_MIN, |_, heaps, out| {
+        for (h, o) in heaps.iter_mut().zip(out.iter_mut()) {
+            *o = std::mem::replace(h, crate::knn::KHeap::new(0)).into_sorted();
+        }
+    });
+}
+
+/// Convert collected squared distances to sorted real-distance lists —
+/// per-query work sharded across `exec` (the per-query sqrt+sort is
+/// independent, so the in-place chunked pass equals the serial one).
+pub(crate) fn finish_range(
+    mut per_query: Vec<Vec<Neighbor>>,
+    exec: &crate::exec::Executor,
+) -> Vec<Vec<Neighbor>> {
+    exec.for_each_chunk(&mut per_query, PAR_ASSEMBLY_MIN, |_, chunk| {
+        for hits in chunk.iter_mut() {
             for h in hits.iter_mut() {
                 h.dist = h.dist.sqrt();
             }
@@ -451,9 +489,9 @@ pub(crate) fn finish_range(per_query: Vec<Vec<Neighbor>>) -> Vec<Vec<Neighbor>> 
                     .unwrap_or(std::cmp::Ordering::Equal)
                     .then(a.idx.cmp(&b.idx))
             });
-            hits
-        })
-        .collect()
+        }
+    });
+    per_query
 }
 
 #[cfg(test)]

@@ -9,7 +9,9 @@
 //! cannot persist, so the free function remains the reference
 //! implementation of that experiment.
 
-use super::{default_radius, scene_range, Backend, BuildStats, IndexConfig, NeighborIndex};
+use super::{
+    assemble_sorted, default_radius, scene_range, Backend, BuildStats, IndexConfig, NeighborIndex,
+};
 use crate::exec::Executor;
 use crate::geom::{Aabb, Point3, Ray};
 use crate::knn::program::KnnProgram;
@@ -32,7 +34,8 @@ impl FixedRadiusIndex {
         let radius = cfg.radius.unwrap_or_else(|| default_radius(&data));
         let exec = Executor::new(cfg.threads);
         let mut build = HwCounters::new();
-        let scene = Scene::build_with_exec(data, radius, &mut build, exec);
+        let mut scene = Scene::build_with_exec(data, radius, &mut build, exec);
+        scene.cohort = cfg.cohort_queries;
         FixedRadiusIndex {
             cfg,
             radius,
@@ -79,9 +82,7 @@ impl NeighborIndex for FixedRadiusIndex {
         Pipeline::launch_parallel(&self.scene, &rays, &mut program, &mut counters, &exec);
         counters.heap_pushes += program.total_pushes();
 
-        for (q, heap) in program.heaps.into_iter().enumerate() {
-            result.neighbors[q] = heap.into_sorted();
-        }
+        assemble_sorted(&mut program.heaps, &mut result.neighbors, &exec);
         result.launches = 1;
         result.counters = counters;
         result.wall_seconds = wall.elapsed_secs();
@@ -145,7 +146,8 @@ impl RtnnIndex {
         let radius = cfg.radius.unwrap_or_else(|| default_radius(&data));
         let exec = Executor::new(cfg.threads);
         let mut build = HwCounters::new();
-        let scene = Scene::build_with_exec(data, radius, &mut build, exec);
+        let mut scene = Scene::build_with_exec(data, radius, &mut build, exec);
+        scene.cohort = cfg.cohort_queries;
         RtnnIndex {
             cfg,
             radius,
@@ -209,9 +211,7 @@ impl NeighborIndex for RtnnIndex {
             prev_pushes = pushes;
         }
 
-        for (q, heap) in program.heaps.into_iter().enumerate() {
-            result.neighbors[q] = heap.into_sorted();
-        }
+        assemble_sorted(&mut program.heaps, &mut result.neighbors, &exec);
         result.launches = launches;
         result.counters = counters;
         result.wall_seconds = wall.elapsed_secs();

@@ -21,8 +21,13 @@
 //!   *every* hit inside `r_prev` in its heap; the re-discovery overhead
 //!   is the cost RTNN (Zhu, PPoPP'22) identifies as dominant in
 //!   iterative RT neighbor search.
+//! - **Parallel round bookkeeping**: the retire/compact of the active
+//!   query set and the final per-query heap-drain assembly are sharded
+//!   across the same executor (ordered merges, so both equal their
+//!   serial forms bit for bit) — the per-round serial wall between
+//!   launches is gone.
 
-use super::{scene_range, Backend, BuildStats, IndexConfig, NeighborIndex};
+use super::{assemble_sorted, scene_range, Backend, BuildStats, IndexConfig, NeighborIndex};
 use crate::exec::Executor;
 use crate::geom::{Point3, Ray};
 use crate::knn::program::KnnProgram;
@@ -30,6 +35,10 @@ use crate::knn::start_radius::random_sample_radius;
 use crate::knn::{KnnResult, RoundStats};
 use crate::rt::{HwCounters, Pipeline, Scene};
 use crate::util::Stopwatch;
+
+/// Per-chunk minimum for the sharded per-round retire filter (a heap
+/// length check per query — very cheap per item).
+const PAR_BOOKKEEPING_MIN: usize = 1024;
 
 pub struct TrueKnnIndex {
     cfg: IndexConfig,
@@ -56,7 +65,8 @@ impl TrueKnnIndex {
         }
         let exec = Executor::new(cfg.threads);
         let mut build = HwCounters::new();
-        let scene = Scene::build_with_exec(data, initial, &mut build, exec);
+        let mut scene = Scene::build_with_exec(data, initial, &mut build, exec);
+        scene.cohort = cfg.cohort_queries;
         TrueKnnIndex {
             cfg,
             scene,
@@ -147,9 +157,23 @@ impl NeighborIndex for TrueKnnIndex {
             counters.heap_pushes += pushes - prev_pushes;
             prev_pushes = pushes;
 
-            // Alg. 3 lines 4–8: retire completed queries.
+            // Alg. 3 lines 4–8: retire completed queries — sharded
+            // filter with an ordered concat, identical to a serial
+            // `retain` (survivors keep their relative order) but off the
+            // per-round serial wall between launches.
             let queried = active.len();
-            active.retain(|&q| program.heaps[q as usize].len() < target);
+            let survivors = {
+                let act: &[u32] = &active;
+                let heaps = &program.heaps;
+                exec.run(act.len(), PAR_BOOKKEEPING_MIN, |_, r| {
+                    act[r]
+                        .iter()
+                        .copied()
+                        .filter(|&q| heaps[q as usize].len() < target)
+                        .collect::<Vec<u32>>()
+                })
+            };
+            active = survivors.concat();
 
             let delta = counters.delta(&before);
             result.rounds.push(RoundStats {
@@ -183,9 +207,9 @@ impl NeighborIndex for TrueKnnIndex {
             round += 1;
         }
 
-        for (q, heap) in program.heaps.iter().enumerate() {
-            result.neighbors[q] = heap.sorted();
-        }
+        // Per-query result assembly, sharded then merged in place.
+        let exec = self.scene.exec;
+        assemble_sorted(&mut program.heaps, &mut result.neighbors, &exec);
         result.launches = launches;
         result.counters = counters;
         result.wall_seconds = wall_total.elapsed_secs();

@@ -47,31 +47,10 @@ impl Default for RtnnParams {
     }
 }
 
-/// 30-bit 3D Morton code over the unit-normalized position.
-pub fn morton3(p: Point3, bb: &Aabb) -> u32 {
-    let e = bb.extent();
-    let norm = |v: f32, lo: f32, ext: f32| {
-        if ext <= 0.0 {
-            0u32
-        } else {
-            (((v - lo) / ext).clamp(0.0, 1.0) * 1023.0) as u32
-        }
-    };
-    let x = norm(p.x, bb.min.x, e.x);
-    let y = norm(p.y, bb.min.y, e.y);
-    let z = norm(p.z, bb.min.z, e.z);
-    part1by2(x) | (part1by2(y) << 1) | (part1by2(z) << 2)
-}
-
-#[inline]
-fn part1by2(mut v: u32) -> u32 {
-    v &= 0x3FF;
-    v = (v | (v << 16)) & 0x030000FF;
-    v = (v | (v << 8)) & 0x0300F00F;
-    v = (v | (v << 4)) & 0x030C30C3;
-    v = (v | (v << 2)) & 0x09249249;
-    v
-}
+/// 30-bit 3D Morton code over the unit-normalized position. The
+/// canonical encoder lives in [`crate::store`] (the launch engine's
+/// cohort scheduling shares it); re-exported here for compatibility.
+pub use crate::store::morton3;
 
 /// RTNN fixed-radius kNN with both optimizations enabled.
 pub fn rtnn_knns(data: &[Point3], queries: &[Point3], params: &RtnnParams) -> KnnResult {

@@ -63,6 +63,7 @@
 pub mod util;
 pub mod exec;
 pub mod geom;
+pub mod store;
 pub mod dataset;
 pub mod bvh;
 pub mod rt;

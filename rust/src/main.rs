@@ -6,7 +6,7 @@
 //! trueknn exp       regenerate a paper table/figure (table1|fig6|...)
 //! trueknn runtime   inspect/smoke-test the PJRT artifacts
 //! trueknn serve     run the batching query service demo
-//! trueknn bench     parallel-engine microbench, writes BENCH_PR2.json
+//! trueknn bench     perf microbenches, writes BENCH_PR2.json + BENCH_PR3.json
 //! ```
 
 use trueknn::cli::{Args, CliError, Command};
@@ -47,7 +47,7 @@ fn print_usage() {
     println!("  exp      regenerate a paper table/figure");
     println!("  runtime  inspect the PJRT artifacts");
     println!("  serve    run the batching query service demo");
-    println!("  bench    launch-throughput + shell re-query microbench (BENCH_PR2.json)");
+    println!("  bench    perf microbenches (BENCH_PR2.json + BENCH_PR3.json)");
     println!("run `trueknn <command> --help` for options");
 }
 
@@ -475,12 +475,13 @@ fn run_serve(a: &Args) -> Result<(), String> {
 fn cmd_bench() -> Command {
     Command::new(
         "bench",
-        "parallel launch throughput + TrueKNN shell re-query microbench",
+        "perf microbenches: launch throughput + shell re-query (PR2), SoA leaf loop + cohort scheduling + round bookkeeping (PR3)",
     )
     .opt("n", "points for the launch-throughput bench", "100000")
-    .opt("shell-n", "points for the TrueKNN shell bench", "20000")
+    .opt("shell-n", "points for the TrueKNN shell/round bench", "20000")
     .opt("iters", "timed iterations per configuration", "3")
-    .opt("out", "output JSON path", "BENCH_PR2.json")
+    .opt("out", "PR2 output JSON path", "BENCH_PR2.json")
+    .opt("pr3-out", "PR3 output JSON path", "BENCH_PR3.json")
 }
 
 fn run_bench(a: &Args) -> Result<(), String> {
@@ -488,6 +489,8 @@ fn run_bench(a: &Args) -> Result<(), String> {
     let shell_n: usize = a.get_parse("shell-n", 20_000).map_err(|e| e.to_string())?;
     let iters: usize = a.get_parse("iters", 3).map_err(|e| e.to_string())?;
     let out = a.get_str("out", "BENCH_PR2.json");
+    let pr3_out = a.get_str("pr3-out", "BENCH_PR3.json");
+
     let report = trueknn::bench::pr2::run(n, shell_n, iters);
     trueknn::bench::pr2::render(&report).print();
     if !report.shell_exact {
@@ -496,5 +499,17 @@ fn run_bench(a: &Args) -> Result<(), String> {
     std::fs::write(&out, trueknn::bench::pr2::to_json(&report).to_string())
         .map_err(|e| e.to_string())?;
     log_info!("wrote {out}");
+
+    let pr3 = trueknn::bench::pr3::run(n, shell_n, iters);
+    trueknn::bench::pr3::render(&pr3).print();
+    if !pr3.layout_match {
+        return Err("SoA leaf loop changed results vs the AoS reference".into());
+    }
+    if !pr3.cohort_match {
+        return Err("cohort scheduling changed results".into());
+    }
+    std::fs::write(&pr3_out, trueknn::bench::pr3::to_json(&pr3).to_string())
+        .map_err(|e| e.to_string())?;
+    log_info!("wrote {pr3_out}");
     Ok(())
 }

@@ -7,13 +7,14 @@
 //! sphere test. Both are counted per invocation.
 //!
 //! §Perf notes: the traversal loop is the simulator's hot path (billions
-//! of events per baseline run). It reads sphere centers from the scene's
-//! *leaf-ordered* copy (contiguous within a leaf), reuses one traversal
-//! stack across all rays of a launch, computes the squared distance once
-//! and passes it to the program, and only touches the primitive-id
-//! remapping table on an actual hit. The tree walk itself is
-//! [`crate::bvh::Bvh::for_each_leaf_containing`] — one inlined core
-//! shared with `visit_point` so the two cannot drift.
+//! of events per baseline run). It streams sphere centers from the
+//! scene's leaf-ordered SoA [`crate::store::PointStore`] (three
+//! contiguous `f32` arrays per leaf, no AoS stride, no `prim_order`
+//! gather in the distance loop), reuses one traversal stack across all
+//! rays of a launch, computes the squared distance once and passes it to
+//! the program, and only touches the id remap on an actual hit. The tree
+//! walk itself is [`crate::bvh::Bvh::for_each_leaf_containing`] — one
+//! inlined core shared with `visit_point` so the two cannot drift.
 //!
 //! [`Pipeline::launch_parallel`] shards a launch's rays across the
 //! [`crate::exec`] engine: rays are independent (a hit only touches
@@ -21,10 +22,21 @@
 //! over a contiguous ray range with its own stack, counters and
 //! [`ShardableProgram::Shard`], and the ordered merge reproduces the
 //! serial result bit for bit.
+//!
+//! **Query-cohort scheduling** (`Scene::cohort`, on by default): large
+//! launches sort their rays along the store's Morton curve and cut the
+//! sorted sequence into cache-sized cohorts; shard boundaries fall on
+//! cohort boundaries, so each worker walks a compact run of BVH subtrees
+//! instead of thrashing the whole tree. Because per-query state is keyed
+//! by `Ray::query_id` and every counter is a per-ray integer sum, the
+//! schedule change is invisible: results *and* counters are
+//! bitwise-identical with cohorting on or off, at any thread count.
 
 use super::{HwCounters, Scene};
 use crate::exec::Executor;
-use crate::geom::{dist2, Ray};
+use crate::geom::{dist2, Aabb, Point3, Ray};
+use crate::store::morton3;
+use std::ops::Range;
 
 /// The user's software intersection program (OptiX `Intersection`). The
 /// paper implements the whole kNN logic here, with AnyHit/ClosestHit
@@ -64,6 +76,14 @@ pub trait ShardableProgram: IntersectionProgram {
 /// more in thread spawns than they save.
 const PAR_LAUNCH_MIN_RAYS: usize = 64;
 
+/// Rays per scheduling cohort. A cohort's working set — its rays, their
+/// per-query heap state, and the BVH subtree slice its Morton run maps
+/// to — is sized to sit in a core's private cache; shard boundaries are
+/// cut on cohort multiples so no two workers split one cohort. Launches
+/// at or below one cohort keep the caller's ray order (nothing to
+/// schedule).
+const COHORT_RAYS: usize = 1024;
+
 /// Stateless launcher; all state lives in the scene and the program.
 pub struct Pipeline;
 
@@ -84,7 +104,8 @@ impl Pipeline {
 
     /// [`Pipeline::launch`] with the rays sharded across `exec`. Requires
     /// a [`ShardableProgram`]; results, hit order per query, and every
-    /// counter are identical to the serial launch.
+    /// counter are identical to the serial launch — with or without the
+    /// scene's cohort scheduling.
     pub fn launch_parallel<P: ShardableProgram>(
         scene: &Scene,
         rays: &[Ray],
@@ -92,11 +113,68 @@ impl Pipeline {
         counters: &mut HwCounters,
         exec: &Executor,
     ) {
+        if scene.cohort && rays.len() > COHORT_RAYS {
+            return Self::launch_cohorted(scene, rays, program, counters, exec);
+        }
         let ranges = exec.shard_ranges(rays.len(), PAR_LAUNCH_MIN_RAYS);
         if ranges.len() <= 1 {
             return Self::launch(scene, rays, program, counters);
         }
-        let mut shards: Vec<(std::ops::Range<usize>, P::Shard)> = ranges
+        Self::launch_sharded(scene, rays, ranges, program, counters);
+    }
+
+    /// Cohort-scheduled launch: rays sorted along the Morton curve of
+    /// their origins, cut into [`COHORT_RAYS`]-sized cohorts, shards
+    /// assigned whole cohorts. Pure schedule — every ray still runs the
+    /// identical traversal, per-query state is keyed by query id, and
+    /// counters are integer per-ray sums, so the output is bitwise-equal
+    /// to the unscheduled launch.
+    fn launch_cohorted<P: ShardableProgram>(
+        scene: &Scene,
+        rays: &[Ray],
+        program: &mut P,
+        counters: &mut HwCounters,
+        exec: &Executor,
+    ) {
+        let mut bb = Aabb::EMPTY;
+        for r in rays {
+            bb.grow(r.origin);
+        }
+        // (code, input index): the index tie-break makes the sort a
+        // deterministic total order even for duplicate codes
+        let mut keys: Vec<(u32, u32)> = rays
+            .iter()
+            .enumerate()
+            .map(|(i, r)| (morton3(r.origin, &bb), i as u32))
+            .collect();
+        keys.sort_unstable();
+        let sorted: Vec<Ray> = keys.iter().map(|&(_, i)| rays[i as usize]).collect();
+
+        let cohorts = sorted.len().div_ceil(COHORT_RAYS);
+        let ranges: Vec<Range<usize>> = exec
+            .shard_ranges(cohorts, 1)
+            .into_iter()
+            .map(|r| r.start * COHORT_RAYS..(r.end * COHORT_RAYS).min(sorted.len()))
+            .collect();
+        if ranges.len() <= 1 {
+            // one worker still benefits from walking the curve in order
+            return Self::launch(scene, &sorted, program, counters);
+        }
+        Self::launch_sharded(scene, &sorted, ranges, program, counters);
+    }
+
+    /// Shard-then-merge over pre-cut contiguous ranges of `rays` (which
+    /// may be a cohort-sorted copy): split per-query state in shard
+    /// order, run every shard on its own thread, fold counters and
+    /// shards back in shard order.
+    fn launch_sharded<P: ShardableProgram>(
+        scene: &Scene,
+        rays: &[Ray],
+        ranges: Vec<Range<usize>>,
+        program: &mut P,
+        counters: &mut HwCounters,
+    ) {
+        let mut shards: Vec<(Range<usize>, P::Shard)> = ranges
             .into_iter()
             .map(|r| {
                 let shard = program.split(&rays[r.clone()]);
@@ -144,8 +222,7 @@ impl Pipeline {
         counters: &mut HwCounters,
     ) {
         let r2 = scene.radius * scene.radius;
-        let ordered = &scene.ordered_centers;
-        let prim_ids = &scene.bvh.prim_order;
+        let store = &scene.store;
         if scene.bvh.nodes.is_empty() {
             counters.rays += rays.len() as u64;
             return;
@@ -160,6 +237,53 @@ impl Pipeline {
             scene.bvh.for_each_leaf_containing(
                 origin,
                 stack,
+                || aabb_tests += 1,
+                |first, count| {
+                    prim_tests += count as u64;
+                    for j in first..first + count {
+                        let d2 = store.dist2_to(j, origin);
+                        if d2 <= r2 {
+                            hits += 1;
+                            program.hit(ray, store.id(j), d2);
+                        }
+                    }
+                },
+            );
+        }
+        counters.aabb_tests += aabb_tests;
+        counters.prim_tests += prim_tests;
+        counters.hits += hits;
+    }
+
+    /// Reference launch over a caller-provided leaf-ordered **AoS** copy
+    /// of the store ([`crate::store::PointStore::to_aos`]) — the pre-SoA
+    /// inner loop, kept so the PR3 bench can measure the layout delta
+    /// and tests can pin the two loops to bitwise-identical results.
+    /// Serial only; not part of the query path.
+    pub fn launch_aos_reference<P: IntersectionProgram>(
+        scene: &Scene,
+        ordered: &[Point3],
+        rays: &[Ray],
+        program: &mut P,
+        counters: &mut HwCounters,
+    ) {
+        let r2 = scene.radius * scene.radius;
+        let prim_ids = &scene.bvh.prim_order;
+        if scene.bvh.nodes.is_empty() {
+            counters.rays += rays.len() as u64;
+            return;
+        }
+        let mut stack: Vec<u32> = Vec::with_capacity(128);
+        let mut aabb_tests = 0u64;
+        let mut prim_tests = 0u64;
+        let mut hits = 0u64;
+        for (ri, ray) in rays.iter().enumerate() {
+            counters.rays += 1;
+            program.begin_ray(ri as u32);
+            let origin = ray.origin;
+            scene.bvh.for_each_leaf_containing(
+                origin,
+                &mut stack,
                 || aabb_tests += 1,
                 |first, count| {
                     prim_tests += count as u64;
@@ -317,6 +441,75 @@ mod tests {
             assert_eq!(par.per_query, serial.per_query, "threads={threads}");
             assert_eq!(par_c, serial_c, "threads={threads} counters");
         }
+    }
+
+    #[test]
+    fn cohort_scheduling_is_bitwise_invisible() {
+        // well above COHORT_RAYS so cohorts actually engage; compare the
+        // cohort-off serial result against cohort on/off at several
+        // thread counts — per-query hit lists and counters must match
+        // exactly
+        let mut rng = Pcg32::new(33);
+        let pts = prop::random_cloud(&mut rng, 4_000, false);
+        let mut c0 = HwCounters::new();
+        let mut scene = Scene::build(pts.clone(), 0.05, &mut c0);
+        let rays: Vec<Ray> = pts
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| Ray::knn(p, i as u32))
+            .collect();
+
+        scene.cohort = false;
+        let mut serial = CollectHits::new(pts.len());
+        let mut serial_c = HwCounters::new();
+        Pipeline::launch(&scene, &rays, &mut serial, &mut serial_c);
+
+        for cohort in [false, true] {
+            scene.cohort = cohort;
+            for threads in [1usize, 2, 8] {
+                let mut par = CollectHits::new(pts.len());
+                let mut par_c = HwCounters::new();
+                Pipeline::launch_parallel(
+                    &scene,
+                    &rays,
+                    &mut par,
+                    &mut par_c,
+                    &Executor::new(threads),
+                );
+                assert_eq!(
+                    par.per_query, serial.per_query,
+                    "cohort={cohort} threads={threads}"
+                );
+                assert_eq!(par_c, serial_c, "cohort={cohort} threads={threads} counters");
+            }
+        }
+    }
+
+    #[test]
+    fn aos_reference_loop_matches_soa_launch() {
+        // the bench-only AoS loop and the SoA hot loop must agree bit
+        // for bit — hit order, ids, distances, counters
+        let mut rng = Pcg32::new(34);
+        let pts = prop::random_cloud(&mut rng, 1_000, false);
+        let mut c0 = HwCounters::new();
+        let scene = Scene::build(pts.clone(), 0.1, &mut c0);
+        let rays: Vec<Ray> = pts
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| Ray::knn(p, i as u32))
+            .collect();
+
+        let mut soa = CollectHits::new(pts.len());
+        let mut soa_c = HwCounters::new();
+        Pipeline::launch(&scene, &rays, &mut soa, &mut soa_c);
+
+        let aos_pts = scene.store.to_aos();
+        let mut aos = CollectHits::new(pts.len());
+        let mut aos_c = HwCounters::new();
+        Pipeline::launch_aos_reference(&scene, &aos_pts, &rays, &mut aos, &mut aos_c);
+
+        assert_eq!(soa.per_query, aos.per_query);
+        assert_eq!(soa_c, aos_c);
     }
 
     #[test]

@@ -9,22 +9,29 @@
 use super::HwCounters;
 use crate::bvh::{BuildStrategy, Bvh};
 use crate::exec::Executor;
-use crate::geom::{Aabb, Point3};
+use crate::geom::{dist2, Aabb, Point3};
+use crate::store::PointStore;
+use std::collections::HashMap;
 
 #[derive(Clone, Debug)]
 pub struct Scene {
-    /// Sphere centers = the data points.
+    /// Sphere centers = the data points, in dataset order.
     pub centers: Vec<Point3>,
-    /// Centers permuted into BVH leaf order — the traversal hot loop
-    /// reads these contiguously instead of chasing `prim_order` into a
-    /// random-access `centers` (§Perf: ~25% fewer cache misses).
-    pub ordered_centers: Vec<Point3>,
+    /// Centers in BVH leaf order as an SoA [`PointStore`] — the traversal
+    /// hot loop streams its three coordinate arrays contiguously per leaf
+    /// and touches the id remap only on hits (§Perf).
+    pub store: PointStore,
     /// Current common sphere radius (grows every TrueKNN round).
     pub radius: f32,
     pub aabbs: Vec<Aabb>,
     pub bvh: Bvh,
     /// Parallel engine for structure maintenance (build/refit/insert).
     pub exec: Executor,
+    /// Morton query-cohort scheduling for parallel launches against this
+    /// scene (see [`crate::rt::Pipeline::launch_parallel`]). Purely a
+    /// schedule knob: results and counters are bitwise-identical either
+    /// way.
+    pub cohort: bool,
     /// Primitive count at the last full build; [`Scene::insert`] triggers
     /// an automatic rebuild once grafted points outnumber it.
     pub built_prims: usize,
@@ -32,6 +39,10 @@ pub struct Scene {
 
 /// Per-chunk minimum for the parallel AABB regrow in refit/rebuild.
 const PAR_AABB_MIN: usize = 8192;
+
+/// Per-chunk minimum for the parallel leaf-assignment walk in
+/// [`Scene::insert`] (one short BVH descent per point).
+const PAR_INSERT_MIN: usize = 256;
 
 impl Scene {
     /// `createSpheres` + `createAABB` + `constructBVH` (Alg. 1 lines 1–3),
@@ -55,19 +66,40 @@ impl Scene {
         let bvh = Bvh::build_parallel(&aabbs, BuildStrategy::MedianSplit, 4, exec);
         counters.builds += 1;
         counters.build_prims += centers.len() as u64;
-        let ordered_centers = bvh
-            .prim_order
-            .iter()
-            .map(|&p| centers[p as usize])
-            .collect();
+        let store = PointStore::from_leaf_order(&centers, &bvh.prim_order);
         let built_prims = centers.len();
         Scene {
             centers,
-            ordered_centers,
+            store,
             radius,
             aabbs,
             bvh,
             exec,
+            cohort: true,
+            built_prims,
+        }
+    }
+
+    /// Assemble a scene around an externally-built BVH (the ablation
+    /// drivers build trees with specific strategies); derives the SoA
+    /// store from the tree's leaf order.
+    pub fn from_parts(
+        centers: Vec<Point3>,
+        radius: f32,
+        aabbs: Vec<Aabb>,
+        bvh: Bvh,
+        exec: Executor,
+    ) -> Scene {
+        let store = PointStore::from_leaf_order(&centers, &bvh.prim_order);
+        let built_prims = centers.len();
+        Scene {
+            centers,
+            store,
+            radius,
+            aabbs,
+            bvh,
+            exec,
+            cohort: true,
             built_prims,
         }
     }
@@ -87,12 +119,13 @@ impl Scene {
 
     /// Incremental insertion without a topology rebuild: each new sphere
     /// is appended to the BVH leaf whose bounds it perturbs least (the
-    /// leaf with the nearest centroid), then the whole tree is *refit*
-    /// bottom-up — the OptiX "update" lifecycle, charged as a refit, not
-    /// a build. Tree quality degrades gracefully under light insertion;
-    /// once the points grafted since the last full build outnumber the
-    /// originally-built primitives, the scene rebuilds automatically
-    /// (charged honestly as a build in `counters`).
+    /// nearest-centroid leaf among those whose box already contains the
+    /// point), then the whole tree is *refit* bottom-up — the OptiX
+    /// "update" lifecycle, charged as a refit, not a build. Tree quality
+    /// degrades gracefully under light insertion; once the points grafted
+    /// since the last full build outnumber the originally-built
+    /// primitives, the scene rebuilds automatically (charged honestly as
+    /// a build in `counters`).
     pub fn insert(&mut self, new_points: &[Point3], counters: &mut HwCounters) {
         if new_points.is_empty() {
             return;
@@ -104,16 +137,18 @@ impl Scene {
         // than a rebuild does once.
         let grafted = self.centers.len() - self.built_prims + new_points.len();
         if self.bvh.nodes.is_empty() || grafted > self.built_prims {
+            let cohort = self.cohort;
             let mut centers = std::mem::take(&mut self.centers);
             centers.extend_from_slice(new_points);
             *self = Scene::build_with_exec(centers, self.radius, counters, self.exec);
+            self.cohort = cohort;
             // same device round-trip the graft path and `rebuild` charge
             counters.context_switches += 2;
             return;
         }
-        // One pass per point over the *leaves* (not all nodes) to pick a
-        // target, then a single splice of prim_order — O(P·L + N), not
-        // O(P·(nodes + N)).
+        // Leaf table built once per batch; `slot_of_first` lets the BVH
+        // walk below name the leaf it landed in (leaf prim ranges are
+        // disjoint, so `first_prim` identifies a leaf uniquely).
         let leaves: Vec<usize> = (0..self.bvh.nodes.len())
             .filter(|&i| self.bvh.nodes[i].is_leaf())
             .collect();
@@ -121,22 +156,64 @@ impl Scene {
             .iter()
             .map(|&i| self.bvh.nodes[i].aabb.centroid())
             .collect();
-        let mut added: Vec<Vec<u32>> = vec![Vec::new(); leaves.len()];
-        for &p in new_points {
-            let prim = self.centers.len() as u32;
-            self.centers.push(p);
-            self.aabbs.push(Aabb::around_sphere(p, self.radius));
-            let mut best = 0usize;
-            let mut best_d2 = f32::INFINITY;
-            for (li, &c) in centroids.iter().enumerate() {
-                let d2 = crate::geom::dist2(c, p);
-                if d2 < best_d2 {
-                    best_d2 = d2;
-                    best = li;
+        let slot_of_first: HashMap<u32, usize> = leaves
+            .iter()
+            .enumerate()
+            .map(|(li, &i)| (self.bvh.nodes[i].first_prim, li))
+            .collect();
+        // Target selection: one short BVH descent per pending point
+        // (batched across the exec engine) replaces the old full
+        // leaf-centroid scan per point — O(P·depth) typical instead of
+        // O(P·L), and the batch shares one leaf table. Points outside
+        // every leaf box (rare: far-out inserts) fall back to the global
+        // centroid scan so the choice is always defined. Host-side
+        // maintenance, like the old scan: not charged to the counters.
+        let bvh = &self.bvh;
+        let best: Vec<usize> = self
+            .exec
+            .run(new_points.len(), PAR_INSERT_MIN, |_, range| {
+                let mut stack: Vec<u32> = Vec::with_capacity(64);
+                let mut out = Vec::with_capacity(range.len());
+                for &p in &new_points[range] {
+                    let mut best_li = usize::MAX;
+                    let mut best_d2 = f32::INFINITY;
+                    bvh.for_each_leaf_containing(
+                        p,
+                        &mut stack,
+                        || {},
+                        |first, _count| {
+                            let li = slot_of_first[&(first as u32)];
+                            let d2 = dist2(centroids[li], p);
+                            if d2 < best_d2 {
+                                best_d2 = d2;
+                                best_li = li;
+                            }
+                        },
+                    );
+                    if best_li == usize::MAX {
+                        for (li, &c) in centroids.iter().enumerate() {
+                            let d2 = dist2(c, p);
+                            if d2 < best_d2 {
+                                best_d2 = d2;
+                                best_li = li;
+                            }
+                        }
+                    }
+                    // NaN coordinates defeat every `<` comparison; fall
+                    // back to leaf 0 (matching the old scan's default)
+                    // instead of indexing out of bounds below
+                    out.push(if best_li == usize::MAX { 0 } else { best_li });
                 }
-            }
-            added[best].push(prim);
+                out
+            })
+            .concat();
+        // Serial scatter keeps prim-id assignment in input order.
+        let mut added: Vec<Vec<u32>> = vec![Vec::new(); leaves.len()];
+        for (i, &p) in new_points.iter().enumerate() {
+            added[best[i]].push((self.centers.len() + i) as u32);
+            self.aabbs.push(Aabb::around_sphere(p, self.radius));
         }
+        self.centers.extend_from_slice(new_points);
 
         // Rebuild prim_order leaf-by-leaf in storage order, appending
         // each leaf's grafted prims to its range.
@@ -160,12 +237,7 @@ impl Scene {
         debug_assert_eq!(new_order.len(), self.centers.len());
         self.bvh.prim_order = new_order;
 
-        self.ordered_centers = self
-            .bvh
-            .prim_order
-            .iter()
-            .map(|&p| self.centers[p as usize])
-            .collect();
+        self.store = PointStore::from_leaf_order(&self.centers, &self.bvh.prim_order);
         let nodes = self.bvh.refit_parallel(&self.aabbs, self.exec);
         counters.refits += 1;
         counters.refit_nodes += nodes as u64;
@@ -177,12 +249,7 @@ impl Scene {
     pub fn rebuild(&mut self, radius: f32, counters: &mut HwCounters) {
         self.regrow_aabbs(radius);
         self.bvh = Bvh::build_parallel(&self.aabbs, BuildStrategy::MedianSplit, 4, self.exec);
-        self.ordered_centers = self
-            .bvh
-            .prim_order
-            .iter()
-            .map(|&p| self.centers[p as usize])
-            .collect();
+        self.store = PointStore::from_leaf_order(&self.centers, &self.bvh.prim_order);
         self.built_prims = self.centers.len();
         counters.builds += 1;
         counters.build_prims += self.centers.len() as u64;
@@ -314,6 +381,68 @@ mod tests {
         s.insert(&[Point3::splat(0.5)], &mut c);
         assert_eq!(s.len(), 1);
         assert_eq!(c.builds, 2, "empty scene has no topology to refit");
+    }
+
+    #[test]
+    fn insert_assignment_is_thread_count_invariant() {
+        // the batched leaf-assignment walk shards points across the exec
+        // engine; the chosen leaves (hence prim_order) must not depend on
+        // the thread count
+        let mut rng = Pcg32::new(15);
+        let pts = prop::random_cloud(&mut rng, 1_500, false);
+        let extra = prop::random_cloud(&mut rng, 600, false);
+        let mut base: Option<Vec<u32>> = None;
+        for threads in [1usize, 2, 8] {
+            let mut c = HwCounters::new();
+            let mut s =
+                Scene::build_with_exec(pts.clone(), 0.05, &mut c, Executor::new(threads));
+            s.insert(&extra, &mut c);
+            assert_eq!(c.refits, 1, "threads={threads}: graft must refit");
+            match &base {
+                None => base = Some(s.bvh.prim_order.clone()),
+                Some(b) => assert_eq!(&s.bvh.prim_order, b, "threads={threads}"),
+            }
+        }
+    }
+
+    #[test]
+    fn store_tracks_leaf_order_through_lifecycle() {
+        // the SoA store must equal centers[prim_order] after build,
+        // graft, auto-rebuild and explicit rebuild
+        let mut c = HwCounters::new();
+        let mut rng = Pcg32::new(16);
+        let pts = prop::random_cloud(&mut rng, 200, false);
+        let mut s = Scene::build(pts, 0.1, &mut c);
+        let check = |s: &Scene, tag: &str| {
+            assert_eq!(s.store.len(), s.centers.len(), "{tag}");
+            assert_eq!(s.store.ids(), &s.bvh.prim_order[..], "{tag}");
+            for slot in 0..s.store.len() {
+                let id = s.store.id(slot) as usize;
+                assert_eq!(s.store.point(slot), s.centers[id], "{tag} slot {slot}");
+            }
+        };
+        check(&s, "build");
+        let extra = prop::random_cloud(&mut rng, 50, false);
+        s.insert(&extra, &mut c);
+        check(&s, "graft");
+        s.rebuild(0.2, &mut c);
+        check(&s, "rebuild");
+        let extra2 = prop::random_cloud(&mut rng, 300, false);
+        s.insert(&extra2, &mut c);
+        check(&s, "auto-rebuild");
+    }
+
+    #[test]
+    fn cohort_flag_survives_auto_rebuild() {
+        let mut c = HwCounters::new();
+        let mut rng = Pcg32::new(17);
+        let pts = prop::random_cloud(&mut rng, 100, false);
+        let mut s = Scene::build(pts, 0.1, &mut c);
+        s.cohort = false;
+        let extra = prop::random_cloud(&mut rng, 150, false);
+        s.insert(&extra, &mut c); // grafted > built ⇒ auto-rebuild
+        assert_eq!(c.builds, 2);
+        assert!(!s.cohort, "rebuild must not reset the schedule knob");
     }
 
     #[test]

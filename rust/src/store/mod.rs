@@ -1,0 +1,212 @@
+//! Cache-coherent point storage for the traversal hot path (§Perf).
+//!
+//! [`PointStore`] holds the scene's sphere centers as three
+//! structure-of-arrays coordinate streams (`xs`/`ys`/`zs`) permuted into
+//! **BVH leaf order**, plus the slot→original-id remap that lets results
+//! keep reporting dataset indices. The layout serves the two consumers
+//! of the innermost distance loop:
+//!
+//! - a leaf's primitives are one contiguous slot range, so the loop
+//!   streams three sequential `f32` arrays (12 bytes of useful data per
+//!   point, no struct padding, no `prim_order` gather) instead of
+//!   striding through an AoS `Vec<Point3>` in dataset order;
+//! - the id remap (`ids[slot]`) is touched only on an actual hit, which
+//!   is orders of magnitude rarer than a distance test.
+//!
+//! The BVH leaf order is itself produced by recursive spatial splits, so
+//! consecutive slots are spatially adjacent — the same property a Morton
+//! sort provides. The canonical [`morton3`] encoder lives here too: the
+//! RTNN-style query reordering and the launch engine's query-cohort
+//! scheduling ([`crate::rt::Pipeline`]) both sort queries along it so a
+//! cohort of rays walks one compact BVH subtree while it is hot in
+//! cache.
+
+use crate::geom::{Aabb, Point3};
+
+/// Leaf-ordered SoA copy of the scene's sphere centers.
+#[derive(Clone, Debug, Default)]
+pub struct PointStore {
+    xs: Vec<f32>,
+    ys: Vec<f32>,
+    zs: Vec<f32>,
+    /// Slot → original dataset id (the contents of `prim_order`).
+    ids: Vec<u32>,
+}
+
+impl PointStore {
+    pub fn new() -> PointStore {
+        PointStore::default()
+    }
+
+    /// Gather `centers` into leaf order. `prim_order[slot]` names the
+    /// original point stored at `slot` — one sequential pass, rebuilt
+    /// whenever the BVH topology (and hence the leaf order) changes.
+    pub fn from_leaf_order(centers: &[Point3], prim_order: &[u32]) -> PointStore {
+        debug_assert_eq!(centers.len(), prim_order.len());
+        let n = prim_order.len();
+        let mut xs = Vec::with_capacity(n);
+        let mut ys = Vec::with_capacity(n);
+        let mut zs = Vec::with_capacity(n);
+        for &p in prim_order {
+            let c = centers[p as usize];
+            xs.push(c.x);
+            ys.push(c.y);
+            zs.push(c.z);
+        }
+        PointStore {
+            xs,
+            ys,
+            zs,
+            ids: prim_order.to_vec(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Squared distance from the point in `slot` to `p`, with the exact
+    /// operation order of [`crate::geom::dist2`] (stored − query, per
+    /// axis) so the SoA loop is bitwise-identical to the AoS one.
+    #[inline(always)]
+    pub fn dist2_to(&self, slot: usize, p: Point3) -> f32 {
+        let dx = self.xs[slot] - p.x;
+        let dy = self.ys[slot] - p.y;
+        let dz = self.zs[slot] - p.z;
+        dx * dx + dy * dy + dz * dz
+    }
+
+    /// Original dataset id of the point in `slot`.
+    #[inline(always)]
+    pub fn id(&self, slot: usize) -> u32 {
+        self.ids[slot]
+    }
+
+    pub fn ids(&self) -> &[u32] {
+        &self.ids
+    }
+
+    /// The point in `slot`, reassembled.
+    pub fn point(&self, slot: usize) -> Point3 {
+        Point3::new(self.xs[slot], self.ys[slot], self.zs[slot])
+    }
+
+    /// Leaf-ordered AoS copy — the pre-SoA hot-loop layout, kept so the
+    /// PR3 bench can measure the layout delta and tests can pin the two
+    /// loops to identical results.
+    pub fn to_aos(&self) -> Vec<Point3> {
+        (0..self.len()).map(|i| self.point(i)).collect()
+    }
+}
+
+/// 30-bit 3D Morton (Z-order) code of `p` normalized over `bb` — the
+/// shared space-filling-curve key for query reordering (RTNN) and the
+/// launch engine's cohort scheduling.
+pub fn morton3(p: Point3, bb: &Aabb) -> u32 {
+    let e = bb.extent();
+    let norm = |v: f32, lo: f32, ext: f32| {
+        if ext <= 0.0 {
+            0u32
+        } else {
+            (((v - lo) / ext).clamp(0.0, 1.0) * 1023.0) as u32
+        }
+    };
+    let x = norm(p.x, bb.min.x, e.x);
+    let y = norm(p.y, bb.min.y, e.y);
+    let z = norm(p.z, bb.min.z, e.z);
+    part1by2(x) | (part1by2(y) << 1) | (part1by2(z) << 2)
+}
+
+#[inline]
+fn part1by2(mut v: u32) -> u32 {
+    v &= 0x3FF;
+    v = (v | (v << 16)) & 0x030000FF;
+    v = (v | (v << 8)) & 0x0300F00F;
+    v = (v | (v << 4)) & 0x030C30C3;
+    v = (v | (v << 2)) & 0x09249249;
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geom::dist2;
+    use crate::util::{prop, Pcg32};
+
+    #[test]
+    fn gather_round_trips_ids_and_coordinates() {
+        let mut rng = Pcg32::new(41);
+        let pts = prop::random_cloud(&mut rng, 100, false);
+        // an arbitrary permutation stands in for a BVH leaf order
+        let mut order: Vec<u32> = (0..100).collect();
+        for i in (1..order.len()).rev() {
+            let j = rng.below_usize(i + 1);
+            order.swap(i, j);
+        }
+        let store = PointStore::from_leaf_order(&pts, &order);
+        assert_eq!(store.len(), 100);
+        for slot in 0..store.len() {
+            let original = pts[store.id(slot) as usize];
+            assert_eq!(store.point(slot), original, "slot {slot}");
+        }
+        assert_eq!(store.ids(), &order[..]);
+    }
+
+    #[test]
+    fn dist2_to_is_bitwise_dist2() {
+        prop::check("SoA dist2 ≡ AoS dist2", 20, |rng| {
+            let pts = prop::random_cloud(rng, 64, false);
+            let order: Vec<u32> = (0..64).collect();
+            let store = PointStore::from_leaf_order(&pts, &order);
+            let q = Point3::new(rng.f32(), rng.f32(), rng.f32());
+            for (i, &p) in pts.iter().enumerate() {
+                let a = store.dist2_to(i, q);
+                let b = dist2(p, q);
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("slot {i}: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn to_aos_matches_slots() {
+        let pts = vec![
+            Point3::new(0.1, 0.2, 0.3),
+            Point3::new(0.4, 0.5, 0.6),
+            Point3::new(0.7, 0.8, 0.9),
+        ];
+        let store = PointStore::from_leaf_order(&pts, &[2, 0, 1]);
+        let aos = store.to_aos();
+        assert_eq!(aos, vec![pts[2], pts[0], pts[1]]);
+    }
+
+    #[test]
+    fn morton_orders_near_points_together() {
+        let bb = Aabb::new(Point3::ZERO, Point3::splat(1.0));
+        let a = morton3(Point3::new(0.1, 0.1, 0.1), &bb);
+        let b = morton3(Point3::new(0.12, 0.1, 0.1), &bb);
+        let c = morton3(Point3::new(0.9, 0.9, 0.9), &bb);
+        assert!(a.abs_diff(b) < a.abs_diff(c));
+    }
+
+    #[test]
+    fn morton_degenerate_extent_is_zero() {
+        // a flat (2D) box must not divide by zero on the pinned axis
+        let bb = Aabb::new(Point3::ZERO, Point3::new(1.0, 1.0, 0.0));
+        let code = morton3(Point3::new(0.5, 0.5, 0.0), &bb);
+        assert_eq!(code & 0x4, 0, "z bits must be zero");
+    }
+
+    #[test]
+    fn empty_store_is_empty() {
+        let store = PointStore::from_leaf_order(&[], &[]);
+        assert!(store.is_empty());
+        assert!(store.to_aos().is_empty());
+    }
+}

@@ -143,6 +143,80 @@ fn thread_count_matrix_is_bitwise_deterministic() {
 }
 
 #[test]
+fn cohort_scheduling_matrix_is_bitwise_transparent() {
+    // The PR3 hot-path rework (Morton/SoA point store + query-cohort
+    // scheduling + parallel round bookkeeping) must be invisible in
+    // results AND counters: for every backend, every combination of
+    // cohort {off, on} × threads {1, 2, 8} — including a range query and
+    // a post-insert re-query against the same instance — must be
+    // bitwise-identical to the cohort-off single-thread baseline. That
+    // baseline runs the unscheduled serial schedule (the pre-PR launch
+    // order); the insert leaf-assignment heuristic is new in this PR but
+    // deterministic, so the post-insert portion pins thread/cohort
+    // invariance rather than pre-PR equality. 1 500 queries > one
+    // cohort, so the scheduler actually engages on the scene-backed
+    // backends.
+    let ds = DatasetKind::Taxi.generate(1_500, 132);
+    let extra = DatasetKind::Taxi.generate(200, 133).points;
+    let all: Vec<_> = ds.points.iter().chain(&extra).copied().collect();
+
+    let signature = |index: &mut dyn NeighborIndex| {
+        let knn = index.knn(&ds.points, 5);
+        let range = index.range(&ds.points[..300], 0.02);
+        index.insert(&extra);
+        let post_insert = index.knn(&all, 5);
+        let mut flat: Vec<(u32, u32)> = Vec::new();
+        let mut counters = Vec::new();
+        for res in [&knn, &range, &post_insert] {
+            flat.extend(
+                res.neighbors
+                    .iter()
+                    .flat_map(|q| q.iter().map(|n| (n.idx, n.dist.to_bits()))),
+            );
+            counters.push((
+                res.counters.rays,
+                res.counters.aabb_tests,
+                res.counters.prim_tests,
+                res.counters.hits,
+                res.counters.heap_pushes,
+                res.counters.refits,
+                res.counters.refit_nodes,
+                res.counters.builds,
+                res.counters.context_switches,
+            ));
+        }
+        (flat, counters)
+    };
+
+    for backend in Backend::ALL {
+        let mut baseline = None;
+        for cohort in [false, true] {
+            for threads in [1usize, 2, 8] {
+                let mut index = IndexBuilder::new(backend)
+                    .exclude_self(false)
+                    .threads(threads)
+                    .cohort_queries(cohort)
+                    .build(ds.points.clone());
+                let sig = signature(index.as_mut());
+                match &baseline {
+                    None => baseline = Some(sig),
+                    Some(base) => {
+                        assert_eq!(
+                            &sig.0, &base.0,
+                            "{backend} cohort={cohort} threads={threads}: neighbors drifted"
+                        );
+                        assert_eq!(
+                            &sig.1, &base.1,
+                            "{backend} cohort={cohort} threads={threads}: counters drifted"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn shell_requery_drops_heap_pushes_and_stays_exact() {
     // the annulus filter must strictly reduce heap traffic on a
     // multi-round clustered workload while matching the kd-tree oracle
