@@ -1,0 +1,230 @@
+//! The PR4 perf microbench: worker-pool serving throughput, emitted as
+//! `BENCH_PR4.json` so CI can archive the perf trajectory alongside
+//! `BENCH_PR2/PR3.json`.
+//!
+//! One measurement, swept over the pool dimensions: a fixed mixed-route
+//! request log (alternating RT-forced and brute-forced requests, so both
+//! route owners work) replayed through a [`Service`] at
+//! `workers × threads` ∈ {1, 2, max} × {1, max}. The pool dimension is
+//! batch-level parallelism (concurrent batches on different workers);
+//! the thread dimension is launch-level parallelism inside each batch —
+//! the two-level story of the pool coordinator.
+//!
+//! Every configuration's responses are checked bitwise against the
+//! `workers = 1, threads = 1` oracle (`pool_match`): the pool must be a
+//! pure throughput knob.
+
+use crate::configx::Json;
+use crate::coordinator::{KnnRequest, QueryMode, RoutePath, Service, ServiceConfig};
+use crate::dataset::DatasetKind;
+use crate::exec::Executor;
+use crate::geom::Point3;
+use crate::knn::TrueKnnParams;
+use crate::util::Stopwatch;
+
+use super::{fmt_secs, Table};
+
+const BENCH_K: usize = 5;
+
+#[derive(Clone, Debug)]
+pub struct PoolRow {
+    pub workers: usize,
+    pub threads: usize,
+    /// Best-of-`iters` wall seconds for one full replay of the log.
+    pub seconds: f64,
+    pub qps: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Pr4Report {
+    pub n: usize,
+    pub requests: usize,
+    pub queries_per_request: usize,
+    pub k: usize,
+    pub iters: usize,
+    /// Every `(workers, threads)` configuration returned responses
+    /// bitwise-identical to the `workers = 1, threads = 1` oracle.
+    pub pool_match: bool,
+    pub rows: Vec<PoolRow>,
+}
+
+/// Per-response bitwise signature: route + every neighbor's (idx, dist bits).
+type ResponseSig = (RoutePath, Vec<(u32, u32)>);
+
+/// The deterministic mixed-route log: request i is RT-forced when even,
+/// brute-forced when odd, with queries drawn from the dataset at
+/// deterministic offsets.
+fn request_log(points: &[Point3], requests: usize, qpr: usize) -> Vec<KnnRequest> {
+    (0..requests as u64)
+        .map(|id| {
+            let mode = if id % 2 == 0 { QueryMode::Rt } else { QueryMode::Brute };
+            let start = (id as usize * 137) % (points.len() - qpr);
+            KnnRequest::new(id, points[start..start + qpr].to_vec(), BENCH_K).with_mode(mode)
+        })
+        .collect()
+}
+
+/// Replay the log once (all submits, then all receives) and return the
+/// wall seconds plus each response's signature, indexed by request id.
+fn replay(
+    handle: &crate::coordinator::ServiceHandle,
+    log: &[KnnRequest],
+) -> (f64, Vec<ResponseSig>) {
+    let sw = Stopwatch::start();
+    let receivers: Vec<_> = log
+        .iter()
+        .map(|req| handle.submit(req.clone()).expect("bench queue sized for the log"))
+        .collect();
+    let mut sigs: Vec<ResponseSig> = vec![(RoutePath::Rt, Vec::new()); log.len()];
+    for rx in receivers {
+        let resp = rx.recv().expect("worker died mid-bench");
+        let sig = resp
+            .neighbors
+            .iter()
+            .flat_map(|nb| nb.iter().map(|n| (n.idx, n.dist.to_bits())))
+            .collect();
+        sigs[resp.id as usize] = (resp.path, sig);
+    }
+    (sw.elapsed_secs(), sigs)
+}
+
+/// Run the sweep. `iters` timed replays per configuration, reporting the
+/// minimum (the least-perturbed sample).
+pub fn run(n: usize, requests: usize, qpr: usize, iters: usize) -> Pr4Report {
+    let iters = iters.max(1);
+    let ds = DatasetKind::Taxi.generate(n, 42);
+    let log = request_log(&ds.points, requests, qpr);
+
+    // the service caps its pool at RoutePath::COUNT (more workers could
+    // never own a route); label the rows with the effective size
+    let max_workers = Executor::auto().threads().min(RoutePath::COUNT);
+    let mut worker_counts = vec![1usize, 2, max_workers];
+    worker_counts.sort_unstable();
+    worker_counts.dedup();
+    let mut thread_counts = vec![1usize, Executor::auto().threads()];
+    thread_counts.sort_unstable();
+    thread_counts.dedup();
+
+    let mut oracle: Option<Vec<ResponseSig>> = None;
+    let mut pool_match = true;
+    let mut rows = Vec::new();
+    for &workers in &worker_counts {
+        for &threads in &thread_counts {
+            let cfg = ServiceConfig {
+                workers,
+                // size the queues for the whole log: the bench measures
+                // throughput, not backpressure
+                queue_depth: requests.max(256),
+                trueknn: TrueKnnParams {
+                    exclude_self: false,
+                    threads,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let (svc, handle) = Service::start(ds.points.clone(), cfg);
+            // untimed warmup replay: builds both route indexes, so the
+            // timed replays measure serving, not construction
+            let (_, sigs) = replay(&handle, &log);
+            match &oracle {
+                None => oracle = Some(sigs),
+                Some(want) => pool_match &= &sigs == want,
+            }
+            let mut best = f64::INFINITY;
+            for _ in 0..iters {
+                let (s, sigs) = replay(&handle, &log);
+                pool_match &= Some(&sigs) == oracle.as_ref();
+                best = best.min(s);
+            }
+            svc.shutdown();
+            rows.push(PoolRow {
+                workers,
+                threads,
+                seconds: best,
+                qps: (requests * qpr) as f64 / best.max(1e-12),
+            });
+        }
+    }
+
+    Pr4Report {
+        n: ds.len(),
+        requests,
+        queries_per_request: qpr,
+        k: BENCH_K,
+        iters,
+        pool_match,
+        rows,
+    }
+}
+
+pub fn to_json(r: &Pr4Report) -> Json {
+    let rows: Vec<Json> = r
+        .rows
+        .iter()
+        .map(|row| {
+            Json::obj(vec![
+                ("workers", Json::Num(row.workers as f64)),
+                ("threads", Json::Num(row.threads as f64)),
+                ("seconds", Json::Num(row.seconds)),
+                ("qps", Json::Num(row.qps)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("bench", Json::Str("pr4".into())),
+        (
+            "pool_serve",
+            Json::obj(vec![
+                ("dataset", Json::Str("taxi".into())),
+                ("n", Json::Num(r.n as f64)),
+                ("requests", Json::Num(r.requests as f64)),
+                ("queries_per_request", Json::Num(r.queries_per_request as f64)),
+                ("k", Json::Num(r.k as f64)),
+                ("iters", Json::Num(r.iters as f64)),
+                ("rows", Json::Arr(rows)),
+                ("results_match", Json::Bool(r.pool_match)),
+            ]),
+        ),
+    ])
+}
+
+pub fn render(r: &Pr4Report) -> Table {
+    let mut t = Table::new(
+        "PR4 microbench: worker-pool serving throughput (mixed-route log)",
+        &["workers", "threads", "replay", "q/s"],
+    );
+    for row in &r.rows {
+        t.row(vec![
+            row.workers.to_string(),
+            row.threads.to_string(),
+            fmt_secs(row.seconds),
+            format!("{:.0}", row.qps),
+        ]);
+    }
+    t.row(vec![
+        "pool invisible in results".into(),
+        String::new(),
+        String::new(),
+        r.pool_match.to_string(),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_runs_small_and_serializes() {
+        let r = run(1_500, 12, 4, 1);
+        assert_eq!(r.requests, 12);
+        assert!(r.pool_match, "pool must not change responses");
+        assert!(!r.rows.is_empty());
+        assert!(r.rows.iter().all(|row| row.seconds > 0.0));
+        let j = to_json(&r).to_string();
+        assert!(j.contains("\"bench\":\"pr4\""));
+        assert!(j.contains("pool_serve"));
+        let parsed = crate::configx::parse_json(&j).unwrap();
+        assert!(parsed.get("pool_serve").is_some());
+    }
+}

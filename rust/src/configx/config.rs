@@ -37,6 +37,10 @@ pub struct RunConfig {
     /// Worker threads for the parallel launch engine (None/0 = all
     /// cores). Purely a throughput knob — results never depend on it.
     pub threads: Option<usize>,
+    /// Coordinator pool size for `serve` runs (None/0 = all cores).
+    /// Like `threads`, a pure throughput knob: service responses are
+    /// bitwise-identical at any pool size.
+    pub workers: Option<usize>,
 }
 
 impl Default for RunConfig {
@@ -49,6 +53,7 @@ impl Default for RunConfig {
             percentile_cap: None,
             start_radius: None,
             threads: None,
+            workers: None,
         }
     }
 }
@@ -134,6 +139,12 @@ impl RunConfig {
                     .ok_or_else(|| ConfigError::Bad("threads", "not a number".into()))?,
             );
         }
+        if let Some(w) = v.get("workers") {
+            cfg.workers = Some(
+                w.as_usize()
+                    .ok_or_else(|| ConfigError::Bad("workers", "not a number".into()))?,
+            );
+        }
         Ok(cfg)
     }
 
@@ -151,6 +162,8 @@ impl RunConfig {
         crate::index::IndexConfig {
             seed: self.seed,
             start_radius: self.start_radius,
+            // 0/unset resolves to the TRUEKNN_THREADS-aware default
+            // inside Executor::new
             threads: self.threads.unwrap_or(0),
             ..Default::default()
         }
@@ -177,6 +190,9 @@ impl RunConfig {
         }
         if let Some(t) = self.threads {
             pairs.push(("threads", Json::Num(t as f64)));
+        }
+        if let Some(w) = self.workers {
+            pairs.push(("workers", Json::Num(w as f64)));
         }
         Json::obj(pairs)
     }
@@ -234,6 +250,7 @@ mod tests {
             percentile_cap: Some(99.0),
             start_radius: Some(0.001),
             threads: Some(8),
+            workers: Some(4),
         };
         let re = RunConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(re.dataset, DatasetKind::Taxi);
@@ -242,11 +259,14 @@ mod tests {
         assert_eq!(re.percentile_cap, Some(99.0));
         assert_eq!(re.start_radius, Some(0.001));
         assert_eq!(re.threads, Some(8));
+        assert_eq!(re.workers, Some(4));
         // the knob must reach the engine config, not just round-trip
         let idx = re.to_index_config();
         assert_eq!(idx.threads, 8);
         assert_eq!(idx.start_radius, Some(0.001));
         assert_eq!(idx.seed, 7);
+        // the knob is pass-through: 0 stays 0 here, and Executor::new
+        // resolves it (TRUEKNN_THREADS if set, else all cores)
         assert_eq!(RunConfig::default().to_index_config().threads, 0);
     }
 

@@ -2,13 +2,19 @@
 //! build / one PJRT dispatch serves many callers — the serving-side
 //! analog of the paper's insight that per-round fixed costs (context
 //! switches, BVH work) amortize over query volume.
+//!
+//! Each pool worker owns one batcher, downstream of its bounded queue.
+//! Requests arrive already routed (the handle routes at submit time so
+//! it can pick the owning worker); the batcher carries the route path
+//! through to the batch so the worker never re-routes — the submit-time
+//! decision is the only routing decision.
 
-use super::request::{KnnRequest, QueryMode};
+use super::request::{KnnRequest, QueryMode, RoutePath};
 use std::time::Instant;
 
-/// A batch of requests sharing one execution: same k **and** same
-/// [`QueryMode`], so the router's per-batch decision honors every
-/// request's explicit mode.
+/// A batch of requests sharing one execution: same k, same
+/// [`QueryMode`] **and** same [`RoutePath`], so one index serves the
+/// whole batch while every request's explicit mode is honored.
 #[derive(Debug)]
 pub struct Batch {
     pub requests: Vec<(KnnRequest, Instant)>,
@@ -16,6 +22,8 @@ pub struct Batch {
     pub ranges: Vec<(usize, usize)>,
     pub k: usize,
     pub mode: QueryMode,
+    /// The submit-time routing decision, shared by every request here.
+    pub path: RoutePath,
 }
 
 impl Batch {
@@ -41,11 +49,11 @@ impl Default for BatcherConfig {
     }
 }
 
-/// Pull-based batcher: the worker drains the queue, the batcher groups.
+/// Pull-based batcher: the worker drains its queue, the batcher groups.
 #[derive(Debug)]
 pub struct DynamicBatcher {
     cfg: BatcherConfig,
-    pending: Vec<(KnnRequest, Instant)>,
+    pending: Vec<(KnnRequest, RoutePath, Instant)>,
 }
 
 impl DynamicBatcher {
@@ -56,8 +64,8 @@ impl DynamicBatcher {
         }
     }
 
-    pub fn push(&mut self, req: KnnRequest, arrived: Instant) {
-        self.pending.push((req, arrived));
+    pub fn push(&mut self, req: KnnRequest, path: RoutePath, arrived: Instant) {
+        self.pending.push((req, path, arrived));
     }
 
     pub fn pending_len(&self) -> usize {
@@ -65,25 +73,28 @@ impl DynamicBatcher {
     }
 
     /// Form the next batch: take the oldest request, then greedily add
-    /// every other pending request with the same k and the same mode
+    /// every other pending request with the same k, mode and route path
     /// (order preserved) until a size bound trips. Returns None when
-    /// idle. Mode homogeneity is what lets the service route a whole
-    /// batch while still honoring each request's explicit `QueryMode`.
+    /// idle. The (k, mode, path) homogeneity is what lets the worker
+    /// serve a whole batch through one index while still honoring each
+    /// request's explicit `QueryMode`.
     pub fn next_batch(&mut self) -> Option<Batch> {
         if self.pending.is_empty() {
             return None;
         }
         let k = self.pending[0].0.k;
         let mode = self.pending[0].0.mode;
+        let path = self.pending[0].1;
         let mut requests = Vec::new();
         let mut total_q = 0usize;
         let mut i = 0;
         while i < self.pending.len() {
-            let compatible = self.pending[i].0.k == k && self.pending[i].0.mode == mode;
-            let fits = total_q + self.pending[i].0.queries.len() <= self.cfg.max_queries
+            let (req_i, path_i, _) = &self.pending[i];
+            let compatible = req_i.k == k && req_i.mode == mode && *path_i == path;
+            let fits = total_q + req_i.queries.len() <= self.cfg.max_queries
                 || requests.is_empty(); // an oversize request still ships alone
             if compatible && fits && requests.len() < self.cfg.max_requests {
-                let (req, t) = self.pending.remove(i);
+                let (req, _, t) = self.pending.remove(i);
                 total_q += req.queries.len();
                 requests.push((req, t));
                 if total_q >= self.cfg.max_queries {
@@ -104,6 +115,7 @@ impl DynamicBatcher {
             ranges,
             k,
             mode,
+            path,
         })
     }
 }
@@ -121,13 +133,14 @@ mod tests {
     fn batches_group_same_k() {
         let mut b = DynamicBatcher::new(BatcherConfig::default());
         let now = Instant::now();
-        b.push(req(1, 10, 5), now);
-        b.push(req(2, 10, 7), now);
-        b.push(req(3, 10, 5), now);
+        b.push(req(1, 10, 5), RoutePath::Rt, now);
+        b.push(req(2, 10, 7), RoutePath::Rt, now);
+        b.push(req(3, 10, 5), RoutePath::Rt, now);
         let batch = b.next_batch().unwrap();
         let ids: Vec<u64> = batch.requests.iter().map(|(r, _)| r.id).collect();
         assert_eq!(ids, vec![1, 3]);
         assert_eq!(batch.k, 5);
+        assert_eq!(batch.path, RoutePath::Rt);
         assert_eq!(batch.total_queries(), 20);
         assert_eq!(batch.ranges, vec![(0, 10), (10, 20)]);
         // the k=7 request ships next
@@ -143,8 +156,8 @@ mod tests {
             max_requests: 64,
         });
         let now = Instant::now();
-        b.push(req(1, 10, 5), now);
-        b.push(req(2, 10, 5), now);
+        b.push(req(1, 10, 5), RoutePath::Rt, now);
+        b.push(req(2, 10, 5), RoutePath::Rt, now);
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.requests.len(), 1, "second request would exceed cap");
         assert_eq!(b.pending_len(), 1);
@@ -156,7 +169,7 @@ mod tests {
             max_queries: 5,
             max_requests: 64,
         });
-        b.push(req(1, 100, 5), Instant::now());
+        b.push(req(1, 100, 5), RoutePath::Rt, Instant::now());
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.total_queries(), 100);
     }
@@ -175,7 +188,8 @@ mod tests {
             for id in 0..n as u64 {
                 let r = req(id, 1 + rng.below(20) as usize, 1 + rng.below(3) as usize)
                     .with_mode(modes[rng.below(3) as usize]);
-                b.push(r, now);
+                let path = RoutePath::ALL[rng.below(3) as usize];
+                b.push(r, path, now);
             }
             let mut seen = std::collections::HashSet::new();
             while let Some(batch) = b.next_batch() {
@@ -203,16 +217,34 @@ mod tests {
         use super::super::request::QueryMode;
         let mut b = DynamicBatcher::new(BatcherConfig::default());
         let now = Instant::now();
-        b.push(req(1, 4, 5).with_mode(QueryMode::Rt), now);
-        b.push(req(2, 4, 5).with_mode(QueryMode::Brute), now);
-        b.push(req(3, 4, 5).with_mode(QueryMode::Rt), now);
+        b.push(req(1, 4, 5).with_mode(QueryMode::Rt), RoutePath::Rt, now);
+        b.push(req(2, 4, 5).with_mode(QueryMode::Brute), RoutePath::BruteCpu, now);
+        b.push(req(3, 4, 5).with_mode(QueryMode::Rt), RoutePath::Rt, now);
         let first = b.next_batch().unwrap();
         assert_eq!(first.mode, QueryMode::Rt);
+        assert_eq!(first.path, RoutePath::Rt);
         let ids: Vec<u64> = first.requests.iter().map(|(r, _)| r.id).collect();
         assert_eq!(ids, vec![1, 3], "same-mode requests batch together");
         let second = b.next_batch().unwrap();
         assert_eq!(second.mode, QueryMode::Brute);
+        assert_eq!(second.path, RoutePath::BruteCpu);
         assert_eq!(second.requests[0].0.id, 2);
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn same_mode_different_path_never_batches() {
+        // Auto-mode requests can land on different paths when k differs;
+        // if k matches but the submit-time route differs (e.g. a request
+        // routed before an availability change), the batch must split
+        let mut b = DynamicBatcher::new(BatcherConfig::default());
+        let now = Instant::now();
+        b.push(req(1, 4, 5), RoutePath::Rt, now);
+        b.push(req(2, 4, 5), RoutePath::BruteCpu, now);
+        let first = b.next_batch().unwrap();
+        assert_eq!(first.requests.len(), 1);
+        assert_eq!(first.path, RoutePath::Rt);
+        let second = b.next_batch().unwrap();
+        assert_eq!(second.path, RoutePath::BruteCpu);
     }
 }

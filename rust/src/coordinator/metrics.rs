@@ -1,8 +1,37 @@
 //! Service metrics registry: lock-free counters + latency accumulator.
+//!
+//! Since the worker-pool coordinator, backpressure is accounted **per
+//! worker**: each pool worker owns a [`WorkerMetrics`] slot (accepted
+//! submits, rejects, batches, inserts, live queue depth and its
+//! high-water mark), and acceleration-structure builds are tracked as a
+//! **per-route gauge** — the amortization claim is now "each route's
+//! structure is built exactly once, on exactly one worker", which the
+//! gauge makes directly observable.
 
+use super::request::RoutePath;
 use crate::util::OnlineStats;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+
+/// Per-worker counters of the pool: the operator-facing backpressure
+/// story ("which queue is hot, which rejects") lives here.
+#[derive(Default)]
+pub struct WorkerMetrics {
+    /// Messages accepted into this worker's bounded queue.
+    pub submitted: AtomicU64,
+    /// Submissions bounced off this worker's full queue.
+    pub rejected: AtomicU64,
+    pub batches: AtomicU64,
+    pub inserts: AtomicU64,
+    /// Messages currently sitting in the queue (incremented before the
+    /// send, decremented by the worker on receive — never underflows).
+    pub queue_depth: AtomicU64,
+    /// Deepest the queue has been, recorded at accept time. Best-effort
+    /// under contention: the observed depth includes other submitters'
+    /// in-flight attempts, so a burst can read slightly above the
+    /// queue's physical capacity — operator telemetry, not an invariant.
+    pub queue_hwm: AtomicU64,
+}
 
 #[derive(Default)]
 pub struct Metrics {
@@ -13,11 +42,26 @@ pub struct Metrics {
     pub rt_requests: AtomicU64,
     pub brute_requests: AtomicU64,
     pub queries_served: AtomicU64,
-    /// Acceleration-structure builds performed by the worker's indexes.
-    /// Amortization claim: stays at 1 per dataset per route path no
-    /// matter how many batches are served.
-    pub builds: AtomicU64,
+    pub inserts: AtomicU64,
+    pub points_inserted: AtomicU64,
+    /// Acceleration-structure builds per route path (gauge: the owning
+    /// worker stores its index's current build count after every install,
+    /// batch and insert). Amortization claim: each exercised route stays
+    /// at 1 per dataset no matter how many batches are served.
+    route_builds: [AtomicU64; RoutePath::COUNT],
+    /// One slot per pool worker.
+    pub workers: Vec<WorkerMetrics>,
     latency: Mutex<OnlineStats>,
+}
+
+#[derive(Clone, Debug)]
+pub struct WorkerSnapshot {
+    pub submitted: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub inserts: u64,
+    pub queue_depth: u64,
+    pub queue_hwm: u64,
 }
 
 #[derive(Clone, Debug)]
@@ -29,14 +73,29 @@ pub struct MetricsSnapshot {
     pub rt_requests: u64,
     pub brute_requests: u64,
     pub queries_served: u64,
+    pub inserts: u64,
+    pub points_inserted: u64,
+    /// Sum of the per-route build gauges.
     pub builds: u64,
+    /// `(route, builds)` for every route path, exercised or not.
+    pub route_builds: Vec<(RoutePath, u64)>,
+    pub workers: Vec<WorkerSnapshot>,
     pub latency_mean_s: f64,
     pub latency_max_s: f64,
 }
 
 impl Metrics {
+    /// A registry with no per-worker slots (standalone/unit use).
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// A registry for a pool of `workers` workers.
+    pub fn with_workers(workers: usize) -> Self {
+        Metrics {
+            workers: (0..workers).map(|_| WorkerMetrics::default()).collect(),
+            ..Default::default()
+        }
     }
 
     pub fn inc(counter: &AtomicU64) {
@@ -47,12 +106,22 @@ impl Metrics {
         counter.fetch_add(v, Ordering::Relaxed);
     }
 
+    /// Update the per-route build gauge to the owning index's current
+    /// build count.
+    pub fn set_route_builds(&self, path: RoutePath, builds: u64) {
+        self.route_builds[path.index()].store(builds, Ordering::Relaxed);
+    }
+
     pub fn record_latency(&self, seconds: f64) {
         self.latency.lock().unwrap().push(seconds);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
         let lat = self.latency.lock().unwrap();
+        let route_builds: Vec<(RoutePath, u64)> = RoutePath::ALL
+            .iter()
+            .map(|&p| (p, self.route_builds[p.index()].load(Ordering::Relaxed)))
+            .collect();
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             responses: self.responses.load(Ordering::Relaxed),
@@ -61,10 +130,36 @@ impl Metrics {
             rt_requests: self.rt_requests.load(Ordering::Relaxed),
             brute_requests: self.brute_requests.load(Ordering::Relaxed),
             queries_served: self.queries_served.load(Ordering::Relaxed),
-            builds: self.builds.load(Ordering::Relaxed),
+            inserts: self.inserts.load(Ordering::Relaxed),
+            points_inserted: self.points_inserted.load(Ordering::Relaxed),
+            builds: route_builds.iter().map(|&(_, b)| b).sum(),
+            route_builds,
+            workers: self
+                .workers
+                .iter()
+                .map(|w| WorkerSnapshot {
+                    submitted: w.submitted.load(Ordering::Relaxed),
+                    rejected: w.rejected.load(Ordering::Relaxed),
+                    batches: w.batches.load(Ordering::Relaxed),
+                    inserts: w.inserts.load(Ordering::Relaxed),
+                    queue_depth: w.queue_depth.load(Ordering::Relaxed),
+                    queue_hwm: w.queue_hwm.load(Ordering::Relaxed),
+                })
+                .collect(),
             latency_mean_s: if lat.count() > 0 { lat.mean() } else { 0.0 },
             latency_max_s: if lat.count() > 0 { lat.max() } else { 0.0 },
         }
+    }
+}
+
+impl MetricsSnapshot {
+    /// Builds performed for one route path.
+    pub fn builds_of(&self, path: RoutePath) -> u64 {
+        self.route_builds
+            .iter()
+            .find(|(p, _)| *p == path)
+            .map(|&(_, b)| b)
+            .unwrap_or(0)
     }
 }
 
@@ -84,5 +179,31 @@ mod tests {
         assert_eq!(s.queries_served, 10);
         assert!((s.latency_mean_s - 1.0).abs() < 1e-12);
         assert_eq!(s.latency_max_s, 1.5);
+        assert!(s.workers.is_empty());
+    }
+
+    #[test]
+    fn route_builds_are_gauges_summed_into_builds() {
+        let m = Metrics::new();
+        m.set_route_builds(RoutePath::Rt, 1);
+        m.set_route_builds(RoutePath::Rt, 1); // idempotent store, not add
+        m.set_route_builds(RoutePath::BruteCpu, 2);
+        let s = m.snapshot();
+        assert_eq!(s.builds, 3);
+        assert_eq!(s.builds_of(RoutePath::Rt), 1);
+        assert_eq!(s.builds_of(RoutePath::Brute), 0);
+        assert_eq!(s.builds_of(RoutePath::BruteCpu), 2);
+    }
+
+    #[test]
+    fn per_worker_slots_track_independently() {
+        let m = Metrics::with_workers(3);
+        Metrics::inc(&m.workers[1].submitted);
+        Metrics::add(&m.workers[1].queue_hwm, 7);
+        let s = m.snapshot();
+        assert_eq!(s.workers.len(), 3);
+        assert_eq!(s.workers[1].submitted, 1);
+        assert_eq!(s.workers[1].queue_hwm, 7);
+        assert_eq!(s.workers[0].submitted, 0);
     }
 }

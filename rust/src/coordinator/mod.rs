@@ -1,23 +1,32 @@
 //! The L3 serving layer: a batching kNN query service over the RT
-//! simulator and the PJRT brute-force path.
+//! simulator and the PJRT brute-force path, served by a route-sharded
+//! worker pool.
 //!
 //! Architecture (vLLM-router-like, scaled to this problem):
 //!
 //! ```text
-//!   clients ──submit()──▶ bounded queue ──▶ worker thread
-//!                                            │  DynamicBatcher: group
-//!                                            │  compatible requests
-//!                                            ▼
-//!                                  Router: RT path (TrueKNN over the
-//!                                  BVH simulator) vs Brute path (PJRT
-//!                                  artifacts), by workload shape
-//!                                            │
-//!                                            ▼ responses via channel
+//!   clients ──submit()──▶ Router: pick path (RT vs brute, by workload
+//!              │          shape) + owning worker (rendezvous hash of
+//!              │          the route, so indexes never migrate)
+//!              ▼
+//!    per-worker bounded queues (backpressure accounted per worker)
+//!       │            │            │
+//!       ▼            ▼            ▼
+//!    worker 0     worker 1  …  worker W-1      (ServiceConfig::workers)
+//!    DynamicBatcher: group     each worker owns the persistent
+//!    compatible requests       indexes of its route shard; per-batch
+//!       │                      traversal fans across exec threads
+//!       ▼ responses via channel  (batch-level × launch-level parallelism)
 //! ```
 //!
-//! No tokio in the offline build; the event loop is a dedicated worker
-//! thread with `std::sync::mpsc` channels, which is also the honest
-//! analog of the paper's single-GPU dispatch loop.
+//! Responses are bitwise-identical at any pool size and any thread
+//! count: routing is a pure function, a route's requests stay FIFO on
+//! one worker, inserts are broadcast barriers, and per-request results
+//! never depend on batch composition (engine determinism contract).
+//!
+//! No tokio in the offline build; the event loop is a pool of dedicated
+//! worker threads with `std::sync::mpsc` channels, which is also the
+//! honest analog of a multi-GPU dispatch loop over per-device queues.
 
 mod request;
 mod metrics;
@@ -25,8 +34,8 @@ mod batcher;
 mod router;
 mod service;
 
-pub use batcher::DynamicBatcher;
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
+pub use metrics::{Metrics, MetricsSnapshot, WorkerMetrics, WorkerSnapshot};
 pub use request::{KnnRequest, KnnResponse, QueryMode, RoutePath};
 pub use router::{Router, RouterConfig};
 pub use service::{Service, ServiceConfig, ServiceError, ServiceHandle};

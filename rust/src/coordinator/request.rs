@@ -24,6 +24,28 @@ pub enum RoutePath {
     BruteCpu,
 }
 
+impl RoutePath {
+    pub const ALL: [RoutePath; 3] = [RoutePath::Rt, RoutePath::Brute, RoutePath::BruteCpu];
+    pub const COUNT: usize = 3;
+
+    /// Dense index into per-route metric tables.
+    pub fn index(self) -> usize {
+        match self {
+            RoutePath::Rt => 0,
+            RoutePath::Brute => 1,
+            RoutePath::BruteCpu => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RoutePath::Rt => "rt",
+            RoutePath::Brute => "brute",
+            RoutePath::BruteCpu => "brute-cpu",
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct KnnRequest {
     pub id: u64,

@@ -1,9 +1,24 @@
-//! Route policy: RT (TrueKNN) path vs PJRT brute-force path.
+//! Route policy: RT (TrueKNN) path vs PJRT brute-force path, and the
+//! route→worker assignment of the pool coordinator.
 //!
 //! The crossover follows the paper's own findings: the RT reduction wins
 //! when the BVH can prune (large n, modest k) and loses to dense matmul
 //! when the candidate set approaches the whole dataset (k ~ n) or the
 //! dataset is tiny (fixed costs dominate, §6.1/Fig 9).
+//!
+//! Worker assignment uses **rendezvous (highest-random-weight) hashing**:
+//! every `(route, worker)` pair gets a deterministic pseudo-random
+//! weight and the route lands on the arg-max worker. Properties the
+//! pool relies on:
+//!
+//! - the assignment is a pure function of `(route, pool size)` — any
+//!   handle, worker or test computes the same owner with no shared
+//!   state;
+//! - a route therefore has exactly **one** owning worker for the life of
+//!   the pool: its index is built once and never migrates;
+//! - growing the pool only ever moves routes *onto* the new worker
+//!   (minimal disruption), so perf comparisons across pool sizes keep
+//!   per-route build counts comparable.
 
 use super::request::{KnnRequest, QueryMode, RoutePath};
 
@@ -33,9 +48,39 @@ pub struct Router {
     cfg: RouterConfig,
 }
 
+/// SplitMix64 finalizer — the weight function of the rendezvous hash.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Salt mixed into the rendezvous weights. Any value keeps the
+/// rendezvous properties; this one is chosen so the crate's three fixed
+/// routes actually spread at the feasible pool sizes: at 2 workers Rt
+/// sits alone (separated from both brute variants, so the two routes
+/// that can serve traffic together never share a worker), and at 3
+/// workers every route has its own worker. Changing it remaps routes —
+/// harmless between runs (indexes are per-process), but keep it stable
+/// within a release.
+const SPREAD_SALT: u64 = 7;
+
 impl Router {
     pub fn new(cfg: RouterConfig) -> Self {
         Self { cfg }
+    }
+
+    /// The pool worker owning `path` in a pool of `workers` workers:
+    /// rendezvous hashing, deterministic and shared-state-free (see the
+    /// module docs for the properties the coordinator relies on).
+    pub fn worker_for(path: RoutePath, workers: usize) -> usize {
+        assert!(workers > 0, "worker pool cannot be empty");
+        (0..workers)
+            .max_by_key(|&w| {
+                splitmix64(SPREAD_SALT ^ (((path.index() as u64) << 32) | (w as u64 + 1)))
+            })
+            .expect("non-empty range")
     }
 
     /// Pick the execution path for a request against `n_data` points.
@@ -95,5 +140,62 @@ mod tests {
     fn pjrt_unavailable_falls_back_to_cpu() {
         let r = Router::new(RouterConfig::default());
         assert_eq!(r.route(&req(5, QueryMode::Auto), 100), RoutePath::BruteCpu);
+    }
+
+    #[test]
+    fn worker_assignment_is_deterministic_and_in_range() {
+        for workers in 1..=16 {
+            for path in RoutePath::ALL {
+                let w = Router::worker_for(path, workers);
+                assert!(w < workers, "{path:?} @ {workers} -> {w}");
+                assert_eq!(w, Router::worker_for(path, workers), "not deterministic");
+            }
+        }
+        // a single worker owns everything
+        for path in RoutePath::ALL {
+            assert_eq!(Router::worker_for(path, 1), 0);
+        }
+    }
+
+    #[test]
+    fn growing_the_pool_only_moves_routes_to_the_new_worker() {
+        // the rendezvous property: going from W to W+1 workers, a route
+        // either keeps its owner or moves to worker W — never between
+        // two old workers (an old worker's weight for the route did not
+        // change, so a different old worker cannot newly win)
+        for workers in 1..16usize {
+            for path in RoutePath::ALL {
+                let before = Router::worker_for(path, workers);
+                let after = Router::worker_for(path, workers + 1);
+                assert!(
+                    after == before || after == workers,
+                    "{path:?}: {workers}->{} remapped {before}->{after}",
+                    workers + 1
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pool_of_three_gives_every_route_its_own_worker() {
+        // SPREAD_SALT is chosen for exactly this: at the max feasible
+        // pool size, no two routes share a worker
+        let owners: std::collections::HashSet<usize> = RoutePath::ALL
+            .iter()
+            .map(|&p| Router::worker_for(p, 3))
+            .collect();
+        assert_eq!(owners.len(), 3, "routes must spread across a 3-pool");
+    }
+
+    #[test]
+    fn pool_of_two_separates_rt_from_both_brute_variants() {
+        // only one brute variant serves traffic in a given process
+        // (pjrt_available is fixed at startup), so the pairs that can
+        // actually run concurrently are (Rt, Brute) and (Rt, BruteCpu) —
+        // both must land on different workers for batch-level
+        // parallelism to exist at 2 workers
+        let rt = Router::worker_for(RoutePath::Rt, 2);
+        assert_ne!(rt, Router::worker_for(RoutePath::Brute, 2));
+        assert_ne!(rt, Router::worker_for(RoutePath::BruteCpu, 2));
     }
 }

@@ -1,22 +1,44 @@
-//! The query service: a worker thread owning one persistent
-//! [`NeighborIndex`] per route path, fed through a bounded queue with
-//! backpressure.
+//! The query service: a **pool** of worker threads, each owning the
+//! persistent [`NeighborIndex`]es for a disjoint shard of route paths,
+//! fed through per-worker bounded queues with backpressure.
 //!
 //! This is where the paper's amortization argument pays off at the
-//! serving layer: the worker builds each acceleration structure **once
-//! per dataset** (tracked by the `builds` metric) and every batch after
-//! that only refits/queries it. Before the index API, every batch paid a
-//! full BVH build.
+//! serving layer: the owning worker builds each route's acceleration
+//! structure **once per dataset** (tracked by the per-route build gauge)
+//! and every batch after that only refits/queries it. Before the index
+//! API, every batch paid a full BVH build; before the pool, batches from
+//! one queue never overlapped.
+//!
+//! Pool architecture:
+//!
+//! - **Routing at submit time.** [`ServiceHandle::submit`] routes the
+//!   request ([`Router::route`]) and picks the owning worker by
+//!   rendezvous hashing ([`Router::worker_for`]) — a pure function of
+//!   `(route, pool size)`, so a route's index is built exactly once, on
+//!   exactly one worker, and never migrates.
+//! - **Per-worker queues.** Each worker has its own bounded queue
+//!   (`queue_depth` slots each); rejects, live depth and the high-water
+//!   mark are accounted per worker in [`Metrics`]. Requests for one
+//!   route keep their submit order (single queue, FIFO), which is what
+//!   makes replays deterministic.
+//! - **Two-level parallelism.** Workers serve batches concurrently
+//!   (batch-level), and each worker's per-batch traversal fans out
+//!   across the [`crate::exec`] engine threads (launch-level,
+//!   `ServiceConfig::trueknn.threads`, 0 = all cores). Per-request
+//!   results depend only on the request and the route's index state —
+//!   never on batch composition or thread count — so responses are
+//!   bitwise-identical to a `workers = 1` service by the engine's
+//!   determinism contract.
+//! - **Inserts are barriers.** [`ServiceHandle::insert`] broadcasts the
+//!   points to every worker; a worker drains its pending batches before
+//!   applying them, so a query observes exactly the inserts submitted
+//!   before it — at any pool size.
 //!
 //! The PJRT client wraps raw C pointers and is not `Send`, so the
-//! runtime (and every index) is constructed *inside* the worker thread;
-//! callers only touch channels.
-//!
-//! Per-batch ray launches go through the [`crate::exec`] parallel engine:
-//! the RT index inherits `ServiceConfig::trueknn.threads` (0 = all
-//! cores), so one worker thread owns the index while each batch's
-//! traversal fans out across cores — results are identical at any
-//! thread count by the engine's determinism contract.
+//! runtime (and every index) is constructed *inside* the worker that
+//! owns the Brute route; `Service::start` waits for a readiness
+//! handshake from each worker so the handle's router knows up front
+//! whether the PJRT path exists.
 
 use super::batcher::{BatcherConfig, DynamicBatcher};
 use super::metrics::Metrics;
@@ -36,9 +58,16 @@ use std::time::Instant;
 pub struct ServiceConfig {
     pub batcher: BatcherConfig,
     pub router: RouterConfig,
-    /// Bounded queue depth; submits beyond it are rejected (backpressure).
+    /// Pool size: worker threads, each owning a disjoint shard of route
+    /// paths (0 = all available cores). Capped at
+    /// [`RoutePath::COUNT`] — a worker beyond that could never own a
+    /// route, yet would still replicate every insert.
+    pub workers: usize,
+    /// Bounded queue depth **per worker**; submits beyond it are
+    /// rejected (backpressure).
     pub queue_depth: usize,
-    /// Try to load PJRT artifacts in the worker (falls back to CPU brute).
+    /// Try to load PJRT artifacts in the owning worker (falls back to
+    /// CPU brute).
     pub use_pjrt: bool,
     pub trueknn: TrueKnnParams,
 }
@@ -48,6 +77,7 @@ impl Default for ServiceConfig {
         Self {
             batcher: BatcherConfig::default(),
             router: RouterConfig::default(),
+            workers: 0,
             queue_depth: 256,
             use_pjrt: false,
             trueknn: TrueKnnParams {
@@ -76,34 +106,59 @@ impl std::fmt::Display for ServiceError {
 impl std::error::Error for ServiceError {}
 
 enum Msg {
-    Request(KnnRequest, Sender<KnnResponse>, Instant),
+    Request(KnnRequest, RoutePath, Sender<KnnResponse>, Instant),
+    /// Broadcast to every worker; applied between batches.
+    Insert(Arc<Vec<Point3>>),
     Shutdown,
 }
 
 /// Handle returned by `Service::start`; cheap to clone, submits requests.
 #[derive(Clone)]
 pub struct ServiceHandle {
-    tx: SyncSender<Msg>,
+    txs: Arc<Vec<SyncSender<Msg>>>,
+    router: Arc<Router>,
+    /// Indexed points (base + inserts) — the `n` of the routing policy.
+    data_len: Arc<AtomicUsize>,
+    /// Serializes insert broadcasts: concurrent inserts must reach every
+    /// worker's queue in one global order, or the workers' views of the
+    /// data (and point ids) would fork per route.
+    insert_lock: Arc<std::sync::Mutex<()>>,
     metrics: Arc<Metrics>,
     inflight: Arc<AtomicUsize>,
 }
 
 impl ServiceHandle {
-    /// Submit a request; returns the response channel. Applies
-    /// backpressure by rejecting when the queue is full.
+    /// Submit a request; returns the response channel. Routes the
+    /// request to its owning worker and applies backpressure by
+    /// rejecting when that worker's queue is full.
     pub fn submit(&self, req: KnnRequest) -> Result<Receiver<KnnResponse>, ServiceError> {
         let (tx, rx) = std::sync::mpsc::channel();
         Metrics::inc(&self.metrics.requests);
-        match self.tx.try_send(Msg::Request(req, tx, Instant::now())) {
+        let path = self.router.route(&req, self.data_len.load(Ordering::SeqCst));
+        let w = Router::worker_for(path, self.txs.len());
+        let wm = &self.metrics.workers[w];
+        // depth is incremented *before* the send so the worker-side
+        // decrement can never observe it missing (no underflow); the
+        // high-water mark is recorded only for accepted messages, and is
+        // best-effort under contention (see its doc in WorkerMetrics)
+        let depth = wm.queue_depth.fetch_add(1, Ordering::SeqCst) + 1;
+        match self.txs[w].try_send(Msg::Request(req, path, tx, Instant::now())) {
             Ok(()) => {
+                wm.queue_hwm.fetch_max(depth, Ordering::SeqCst);
+                Metrics::inc(&wm.submitted);
                 self.inflight.fetch_add(1, Ordering::SeqCst);
                 Ok(rx)
             }
             Err(TrySendError::Full(_)) => {
+                wm.queue_depth.fetch_sub(1, Ordering::SeqCst);
                 Metrics::inc(&self.metrics.rejected);
+                Metrics::inc(&wm.rejected);
                 Err(ServiceError::QueueFull)
             }
-            Err(TrySendError::Disconnected(_)) => Err(ServiceError::ShutDown),
+            Err(TrySendError::Disconnected(_)) => {
+                wm.queue_depth.fetch_sub(1, Ordering::SeqCst);
+                Err(ServiceError::ShutDown)
+            }
         }
     }
 
@@ -113,6 +168,39 @@ impl ServiceHandle {
         rx.recv().map_err(|_| ServiceError::ShutDown)
     }
 
+    /// Add points to the served dataset: broadcast to every worker, each
+    /// of which updates its own indexes between batches. Uses a blocking
+    /// send (never rejected) — inserts are rare, and dropping one on a
+    /// full queue would silently fork the workers' views of the data.
+    ///
+    /// Ordering contract: queries **submitted** after `insert` returns
+    /// observe the new points on every route; queries submitted before
+    /// it may or may not, exactly as with a single worker.
+    pub fn insert(&self, points: &[Point3]) -> Result<(), ServiceError> {
+        if points.is_empty() {
+            return Ok(());
+        }
+        let pts = Arc::new(points.to_vec());
+        // one global insert order across all workers: without the lock,
+        // two concurrent inserts could land as [A, B] on one worker and
+        // [B, A] on another, forking point ids between routes
+        let _broadcast = self.insert_lock.lock().unwrap();
+        for (w, tx) in self.txs.iter().enumerate() {
+            let wm = &self.metrics.workers[w];
+            let depth = wm.queue_depth.fetch_add(1, Ordering::SeqCst) + 1;
+            if tx.send(Msg::Insert(pts.clone())).is_err() {
+                wm.queue_depth.fetch_sub(1, Ordering::SeqCst);
+                return Err(ServiceError::ShutDown);
+            }
+            wm.queue_hwm.fetch_max(depth, Ordering::SeqCst);
+            Metrics::inc(&wm.submitted);
+        }
+        self.data_len.fetch_add(points.len(), Ordering::SeqCst);
+        Metrics::inc(&self.metrics.inserts);
+        Metrics::add(&self.metrics.points_inserted, points.len() as u64);
+        Ok(())
+    }
+
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
     }
@@ -120,36 +208,86 @@ impl ServiceHandle {
     pub fn inflight(&self) -> usize {
         self.inflight.load(Ordering::SeqCst)
     }
+
+    /// Pool size (resolved, never 0).
+    pub fn workers(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Points currently served (base dataset + accepted inserts).
+    pub fn data_len(&self) -> usize {
+        self.data_len.load(Ordering::SeqCst)
+    }
 }
 
-/// The service: owns the worker thread; dropping shuts it down.
+/// The service: owns the worker pool; dropping shuts it down.
 pub struct Service {
     handle: ServiceHandle,
-    worker: Option<std::thread::JoinHandle<()>>,
-    tx: SyncSender<Msg>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    txs: Vec<SyncSender<Msg>>,
 }
 
 impl Service {
-    /// Start the worker over a fixed dataset.
+    /// Start the pool over a fixed dataset. Blocks until every worker
+    /// has reported ready (and the Brute owner has resolved PJRT
+    /// availability), so routing decisions are stable from the first
+    /// submit.
     pub fn start(data: Vec<Point3>, cfg: ServiceConfig) -> (Service, ServiceHandle) {
-        let (tx, rx) = sync_channel::<Msg>(cfg.queue_depth);
-        let metrics = Arc::new(Metrics::new());
-        let inflight = Arc::new(AtomicUsize::new(0));
-        let handle = ServiceHandle {
-            tx: tx.clone(),
-            metrics: metrics.clone(),
-            inflight: inflight.clone(),
+        let requested = if cfg.workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            cfg.workers
         };
-        let worker_metrics = metrics;
-        let worker_inflight = inflight;
-        let worker = std::thread::spawn(move || {
-            worker_loop(data, cfg, rx, worker_metrics, worker_inflight);
-        });
+        // only RoutePath::COUNT distinct owners can ever exist; extra
+        // workers would idle forever while still replicating inserts
+        let n_workers = requested.clamp(1, RoutePath::COUNT);
+        let metrics = Arc::new(Metrics::with_workers(n_workers));
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let base = Arc::new(data);
+        let (ready_tx, ready_rx) = sync_channel::<bool>(n_workers);
+        let mut txs = Vec::with_capacity(n_workers);
+        let mut workers = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let (tx, rx) = sync_channel::<Msg>(cfg.queue_depth);
+            let worker_base = base.clone();
+            let worker_cfg = cfg.clone();
+            let worker_ready = ready_tx.clone();
+            let worker_metrics = metrics.clone();
+            let worker_inflight = inflight.clone();
+            workers.push(std::thread::spawn(move || {
+                worker_loop(
+                    w,
+                    n_workers,
+                    worker_base,
+                    worker_cfg,
+                    rx,
+                    worker_ready,
+                    worker_metrics,
+                    worker_inflight,
+                );
+            }));
+            txs.push(tx);
+        }
+        drop(ready_tx);
+        let mut pjrt_available = false;
+        for _ in 0..n_workers {
+            pjrt_available |= ready_rx.recv().unwrap_or(false);
+        }
+        let mut router_cfg = cfg.router.clone();
+        router_cfg.pjrt_available = pjrt_available;
+        let handle = ServiceHandle {
+            txs: Arc::new(txs.clone()),
+            router: Arc::new(Router::new(router_cfg)),
+            data_len: Arc::new(AtomicUsize::new(base.len())),
+            insert_lock: Arc::new(std::sync::Mutex::new(())),
+            metrics,
+            inflight,
+        };
         (
             Service {
                 handle: handle.clone(),
-                worker: Some(worker),
-                tx,
+                workers,
+                txs,
             },
             handle,
         )
@@ -161,16 +299,21 @@ impl Service {
 
     pub fn shutdown(mut self) {
         self.shutdown_and_join();
-        // Drop runs next but finds the worker already taken: exactly one
-        // Msg::Shutdown is ever sent.
+        // Drop runs next but finds the pool already drained: exactly one
+        // Msg::Shutdown is ever sent per worker.
     }
 
-    /// Shared by `shutdown` and `Drop`: signal the worker once and wait
-    /// for it to drain. Idempotent — the `worker.take()` guard makes a
-    /// second call a no-op.
+    /// Shared by `shutdown` and `Drop`: signal every worker once and
+    /// wait for all of them to drain. Idempotent — draining `workers`
+    /// makes a second call a no-op.
     fn shutdown_and_join(&mut self) {
-        if let Some(w) = self.worker.take() {
-            let _ = self.tx.send(Msg::Shutdown);
+        if self.workers.is_empty() {
+            return;
+        }
+        for tx in &self.txs {
+            let _ = tx.send(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
@@ -182,99 +325,121 @@ impl Drop for Service {
     }
 }
 
-/// Per-worker index registry: one persistent [`NeighborIndex`] per route
-/// path, built lazily on first use (the PJRT one eagerly, because the
-/// router must know up front whether that path exists).
+/// Per-worker index registry: one persistent [`NeighborIndex`] per
+/// **owned** route path, built lazily on first use (the PJRT one eagerly
+/// in the owning worker, because the router must know up front whether
+/// that path exists).
 ///
-/// Each index owns a copy of the dataset (plus `data` here for building
-/// further paths), trading memory for the zero-sharing ownership model —
-/// at most 3 copies when every path is exercised. Sharing via
-/// `Arc<[Point3]>` is the next step if dataset sizes outgrow that.
+/// The base dataset is shared read-only across the pool (`Arc`); a
+/// worker only materializes its own copy inside the indexes it actually
+/// builds, so idle workers cost no dataset memory.
 struct IndexRegistry {
-    data: Vec<Point3>,
+    base: Arc<Vec<Point3>>,
+    /// Points inserted after start, in arrival order.
+    extra: Vec<Point3>,
     trueknn: TrueKnnParams,
     by_path: HashMap<RoutePath, Box<dyn NeighborIndex>>,
 }
 
 impl IndexRegistry {
-    fn new(data: Vec<Point3>, cfg: &ServiceConfig) -> Self {
+    fn new(base: Arc<Vec<Point3>>, cfg: &ServiceConfig) -> Self {
         IndexRegistry {
-            data,
+            base,
+            extra: Vec::new(),
             trueknn: cfg.trueknn.clone(),
             by_path: HashMap::new(),
         }
     }
 
-    /// Service queries are external points: never self-exclude.
-    fn brute_config() -> IndexConfig {
+    /// Everything this registry indexes (base + inserts so far).
+    fn full_data(&self) -> Vec<Point3> {
+        self.base.iter().chain(self.extra.iter()).copied().collect()
+    }
+
+    /// Service queries are external points: never self-exclude. Brute
+    /// scans inherit the service's launch-engine thread count so both
+    /// routes get launch-level parallelism under batch-level parallelism.
+    fn brute_config(&self) -> IndexConfig {
         IndexConfig {
             exclude_self: false,
+            threads: self.trueknn.threads,
             ..Default::default()
         }
     }
 
     fn install(&mut self, path: RoutePath, index: Box<dyn NeighborIndex>, metrics: &Metrics) {
-        Metrics::add(&metrics.builds, index.build_stats().counters.builds);
+        metrics.set_route_builds(path, index.build_stats().counters.builds);
         self.by_path.insert(path, index);
     }
 
-    /// The index serving `path`, building it on first use. Each build is
-    /// charged to the `builds` metric exactly once — every later batch on
-    /// the same path reuses the structure.
+    /// The index serving `path`, building it on first use. The per-route
+    /// build gauge tracks the index's build count — it stays at 1 across
+    /// a serving session because every later batch on the same path
+    /// reuses the structure.
     fn get(&mut self, path: RoutePath, metrics: &Metrics) -> &mut Box<dyn NeighborIndex> {
         if !self.by_path.contains_key(&path) {
+            let data = self.full_data();
             let index: Box<dyn NeighborIndex> = match path {
-                RoutePath::Rt => Box::new(TrueKnnIndex::new(
-                    self.data.clone(),
-                    self.trueknn.to_index_config(),
-                )),
+                RoutePath::Rt => {
+                    Box::new(TrueKnnIndex::new(data, self.trueknn.to_index_config()))
+                }
                 // Reached only if the eagerly-installed PJRT index is
                 // missing (runtime load raced or failed): rebuild with
                 // whatever runtime is available now.
-                RoutePath::Brute => {
-                    Box::new(BrutePjrtIndex::new(self.data.clone(), Self::brute_config()))
-                }
-                RoutePath::BruteCpu => {
-                    Box::new(BruteCpuIndex::new(self.data.clone(), Self::brute_config()))
-                }
+                RoutePath::Brute => Box::new(BrutePjrtIndex::new(data, self.brute_config())),
+                RoutePath::BruteCpu => Box::new(BruteCpuIndex::new(data, self.brute_config())),
             };
             self.install(path, index, metrics);
         }
         self.by_path.get_mut(&path).expect("just inserted")
     }
+
+    /// Apply an insert to every already-built index (lazily-built ones
+    /// pick the points up from `extra` at build time), refreshing the
+    /// per-route build gauges in case an insert triggered a rebuild.
+    fn apply_insert(&mut self, points: &[Point3], metrics: &Metrics) {
+        self.extra.extend_from_slice(points);
+        for (path, index) in self.by_path.iter_mut() {
+            index.insert(points);
+            metrics.set_route_builds(*path, index.build_stats().counters.builds);
+        }
+    }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
-    data: Vec<Point3>,
-    mut cfg: ServiceConfig,
+    worker_id: usize,
+    n_workers: usize,
+    base: Arc<Vec<Point3>>,
+    cfg: ServiceConfig,
     rx: Receiver<Msg>,
+    ready: SyncSender<bool>,
     metrics: Arc<Metrics>,
     inflight: Arc<AtomicUsize>,
 ) {
-    let mut registry = IndexRegistry::new(data, &cfg);
-    // PJRT runtime is constructed here: the client is not Send. Loaded
-    // eagerly (when asked for) so the router knows the path exists.
-    if cfg.use_pjrt {
-        let runtime = match PjrtRuntime::load_default() {
-            Ok(rt) => Some(rt),
+    let mut registry = IndexRegistry::new(base, &cfg);
+    // PJRT runtime is constructed here: the client is not Send. Only the
+    // worker that owns the Brute route loads it (eagerly, so the
+    // readiness handshake can tell the router the path exists).
+    let mut pjrt_available = false;
+    if cfg.use_pjrt && Router::worker_for(RoutePath::Brute, n_workers) == worker_id {
+        match PjrtRuntime::load_default() {
+            Ok(rt) => {
+                let index = BrutePjrtIndex::with_runtime(
+                    registry.full_data(),
+                    Some(rt),
+                    registry.brute_config(),
+                );
+                registry.install(RoutePath::Brute, Box::new(index), &metrics);
+                pjrt_available = true;
+            }
             Err(e) => {
                 crate::log_warn!("PJRT unavailable, brute falls back to CPU: {e}");
-                None
             }
-        };
-        cfg.router.pjrt_available = runtime.is_some();
-        if runtime.is_some() {
-            let index = BrutePjrtIndex::with_runtime(
-                registry.data.clone(),
-                runtime,
-                IndexRegistry::brute_config(),
-            );
-            registry.install(RoutePath::Brute, Box::new(index), &metrics);
         }
-    } else {
-        cfg.router.pjrt_available = false;
     }
-    let router = Router::new(cfg.router.clone());
+    let _ = ready.send(pjrt_available);
+
     let mut batcher = DynamicBatcher::new(cfg.batcher.clone());
     // response channels ride alongside their request through the batcher
     let mut reply_of: HashMap<u64, Sender<KnnResponse>> = HashMap::new();
@@ -282,32 +447,98 @@ fn worker_loop(
     'outer: loop {
         // block for the first message, then drain whatever else arrived
         match rx.recv() {
-            Ok(Msg::Request(req, reply, t)) => {
-                reply_of.insert(req.id, reply);
-                batcher.push(req, t);
-            }
-            Ok(Msg::Shutdown) | Err(_) => break 'outer,
-        }
-        loop {
-            match rx.try_recv() {
-                Ok(Msg::Request(req, reply, t)) => {
-                    reply_of.insert(req.id, reply);
-                    batcher.push(req, t);
-                }
-                Ok(Msg::Shutdown) => {
-                    // serve what's queued, then exit
-                    drain(&router, &mut registry, &mut batcher, &mut reply_of, &metrics, &inflight);
+            Ok(msg) => {
+                let keep = on_msg(
+                    worker_id,
+                    msg,
+                    &mut registry,
+                    &mut batcher,
+                    &mut reply_of,
+                    &metrics,
+                    &inflight,
+                );
+                if !keep {
                     break 'outer;
                 }
-                Err(_) => break,
+            }
+            Err(_) => break 'outer,
+        }
+        while let Ok(msg) = rx.try_recv() {
+            let keep = on_msg(
+                worker_id,
+                msg,
+                &mut registry,
+                &mut batcher,
+                &mut reply_of,
+                &metrics,
+                &inflight,
+            );
+            if !keep {
+                break 'outer;
             }
         }
-        drain(&router, &mut registry, &mut batcher, &mut reply_of, &metrics, &inflight);
+        drain(worker_id, &mut registry, &mut batcher, &mut reply_of, &metrics, &inflight);
+    }
+
+    // Reconcile gauges for messages accepted behind the shutdown signal:
+    // their replies are dropped (clients observe ShutDown on recv), but
+    // queue depth and inflight must not stay overstated forever. A
+    // submit that races past this sweep before the channel disconnects
+    // can still leak one tick — the gauges are operator telemetry, not
+    // invariants.
+    let wm = &metrics.workers[worker_id];
+    while let Ok(msg) = rx.try_recv() {
+        match msg {
+            Msg::Request(..) => {
+                wm.queue_depth.fetch_sub(1, Ordering::SeqCst);
+                inflight.fetch_sub(1, Ordering::SeqCst);
+            }
+            Msg::Insert(_) => {
+                wm.queue_depth.fetch_sub(1, Ordering::SeqCst);
+            }
+            Msg::Shutdown => {}
+        }
+    }
+}
+
+/// Handle one queue message on the worker thread; returns `false` when
+/// the worker should exit.
+fn on_msg(
+    worker_id: usize,
+    msg: Msg,
+    registry: &mut IndexRegistry,
+    batcher: &mut DynamicBatcher,
+    reply_of: &mut HashMap<u64, Sender<KnnResponse>>,
+    metrics: &Arc<Metrics>,
+    inflight: &Arc<AtomicUsize>,
+) -> bool {
+    let wm = &metrics.workers[worker_id];
+    match msg {
+        Msg::Request(req, path, reply, t) => {
+            wm.queue_depth.fetch_sub(1, Ordering::SeqCst);
+            reply_of.insert(req.id, reply);
+            batcher.push(req, path, t);
+            true
+        }
+        Msg::Insert(points) => {
+            wm.queue_depth.fetch_sub(1, Ordering::SeqCst);
+            // the insert is a barrier: everything submitted before it is
+            // served against the pre-insert structures first
+            drain(worker_id, registry, batcher, reply_of, metrics, inflight);
+            registry.apply_insert(&points, metrics);
+            Metrics::inc(&wm.inserts);
+            true
+        }
+        Msg::Shutdown => {
+            // serve what's queued, then exit
+            drain(worker_id, registry, batcher, reply_of, metrics, inflight);
+            false
+        }
     }
 }
 
 fn drain(
-    router: &Router,
+    worker_id: usize,
     registry: &mut IndexRegistry,
     batcher: &mut DynamicBatcher,
     reply_of: &mut HashMap<u64, Sender<KnnResponse>>,
@@ -316,6 +547,7 @@ fn drain(
 ) {
     while let Some(batch) = batcher.next_batch() {
         Metrics::inc(&metrics.batches);
+        Metrics::inc(&metrics.workers[worker_id].batches);
         let served = Instant::now();
         let all_queries: Vec<Point3> = batch
             .requests
@@ -323,17 +555,20 @@ fn drain(
             .flat_map(|(r, _)| r.queries.iter().copied())
             .collect();
 
-        // Batches are (k, mode)-homogeneous, so routing the first request
-        // routes every request in the batch identically.
-        let n_data = registry.data.len();
-        let path = router.route(&batch.requests[0].0, n_data);
+        // the batch carries its submit-time routing decision; the worker
+        // never re-routes
+        let path = batch.path;
         match path {
             RoutePath::Rt => Metrics::add(&metrics.rt_requests, batch.requests.len() as u64),
             RoutePath::Brute | RoutePath::BruteCpu => {
                 Metrics::add(&metrics.brute_requests, batch.requests.len() as u64)
             }
         }
-        let neighbors = registry.get(path, metrics).knn(&all_queries, batch.k).neighbors;
+        let index = registry.get(path, metrics);
+        let neighbors = index.knn(&all_queries, batch.k).neighbors;
+        // refresh the gauge: queries only refit, but staying at the
+        // index's own count keeps the claim honest if that ever changes
+        metrics.set_route_builds(path, index.build_stats().counters.builds);
         let service_seconds = served.elapsed().as_secs_f64();
 
         for ((req, arrived), range) in batch.requests.iter().zip(&batch.ranges) {
@@ -444,6 +679,7 @@ mod tests {
         let m = handle.metrics().snapshot();
         assert_eq!(m.batches, n_batches);
         assert_eq!(m.builds, 1, "BVH must be built once, not once per batch");
+        assert_eq!(m.builds_of(RoutePath::Rt), 1);
         svc.shutdown();
     }
 
@@ -494,5 +730,75 @@ mod tests {
         svc.shutdown();
         let resp = rx.recv().expect("queued request must still be answered");
         assert_eq!(resp.id, 1);
+    }
+
+    #[test]
+    fn pool_spreads_routes_across_workers() {
+        // with 2 workers the rendezvous hash puts Rt and BruteCpu on
+        // different workers (pinned by Router::worker_for); per-worker
+        // batch counters must show both of them working
+        let ds = DatasetKind::Uniform.generate(2_500, 76);
+        let cfg = ServiceConfig {
+            workers: 2,
+            ..Default::default()
+        };
+        let (svc, handle) = Service::start(ds.points.clone(), cfg);
+        assert_eq!(handle.workers(), 2);
+        let w_rt = Router::worker_for(RoutePath::Rt, 2);
+        let w_cpu = Router::worker_for(RoutePath::BruteCpu, 2);
+        assert_ne!(w_rt, w_cpu, "2-worker pool must split the test routes");
+        for id in 0..6u64 {
+            let mode = if id % 2 == 0 { QueryMode::Rt } else { QueryMode::Brute };
+            let q = ds.points[(id as usize * 11) % 2000..][..4].to_vec();
+            let resp = handle.query(KnnRequest::new(id, q, 3).with_mode(mode)).unwrap();
+            assert_eq!(resp.id, id);
+        }
+        let m = handle.metrics().snapshot();
+        assert_eq!(m.workers.len(), 2);
+        assert!(m.workers[w_rt].batches >= 1, "Rt owner served nothing");
+        assert!(m.workers[w_cpu].batches >= 1, "BruteCpu owner served nothing");
+        assert_eq!(m.workers[w_rt].rejected + m.workers[w_cpu].rejected, 0);
+        assert!(m.workers[w_rt].queue_hwm >= 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn insert_is_visible_to_later_queries_on_every_route() {
+        let ds = DatasetKind::Uniform.generate(2_200, 77);
+        let cfg = ServiceConfig {
+            workers: 2,
+            ..Default::default()
+        };
+        let (svc, handle) = Service::start(ds.points.clone(), cfg);
+        // prime both routes so the insert exercises built indexes too
+        for (id, mode) in [(1u64, QueryMode::Rt), (2, QueryMode::Brute)] {
+            handle
+                .query(KnnRequest::new(id, ds.points[..4].to_vec(), 2).with_mode(mode))
+                .unwrap();
+        }
+        // a far-away cluster the base dataset cannot explain
+        let extra: Vec<Point3> = (0..8)
+            .map(|i| Point3::new(10.0 + i as f32 * 1e-3, 10.0, 10.0))
+            .collect();
+        handle.insert(&extra).unwrap();
+        assert_eq!(handle.data_len(), 2_200 + 8);
+        for (id, mode) in [(3u64, QueryMode::Rt), (4, QueryMode::Brute)] {
+            let resp = handle
+                .query(KnnRequest::new(id, vec![Point3::splat(10.0)], 3).with_mode(mode))
+                .unwrap();
+            for n in &resp.neighbors[0] {
+                assert!(
+                    n.idx as usize >= 2_200,
+                    "{mode:?} query near the inserted cluster found base point {}",
+                    n.idx
+                );
+            }
+        }
+        let m = handle.metrics().snapshot();
+        assert_eq!(m.inserts, 1);
+        assert_eq!(m.points_inserted, 8);
+        // the insert refit the Rt structure; it must not have rebuilt
+        assert_eq!(m.builds_of(RoutePath::Rt), 1);
+        svc.shutdown();
     }
 }

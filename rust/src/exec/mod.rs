@@ -50,10 +50,18 @@ impl Default for Executor {
 }
 
 impl Executor {
-    /// `threads == 0` means "use all available cores" ([`Executor::auto`]).
+    /// `threads == 0` means "use the environment default": the
+    /// `TRUEKNN_THREADS` count if set ([`env_threads`]), otherwise all
+    /// available cores ([`Executor::auto`]). An explicit nonzero count
+    /// always wins. This is the single resolution point, so every
+    /// zero/unset thread knob in the crate (index configs, CLI flags,
+    /// service configs) honors the variable consistently.
     pub fn new(threads: usize) -> Executor {
         if threads == 0 {
-            Self::auto()
+            match env_threads() {
+                0 => Self::auto(),
+                n => Executor { threads: n },
+            }
         } else {
             Executor { threads }
         }
@@ -208,6 +216,20 @@ impl Executor {
             }
         });
     }
+}
+
+/// Worker-thread count forced through the environment:
+/// `TRUEKNN_THREADS=<n>` pins every thread knob left at its `0`/unset
+/// default — resolution happens inside [`Executor::new`], so index
+/// configs, CLI flags and the service all honor it uniformly (CI runs
+/// the whole tier-1 suite at 1 and 2 this way). Unset, empty or `0`
+/// keeps the all-cores default; an explicitly configured nonzero thread
+/// count always wins over the variable.
+pub fn env_threads() -> usize {
+    std::env::var("TRUEKNN_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0)
 }
 
 /// Two-way fork-join: run `fa` on the calling thread and `fb` on a scoped

@@ -134,8 +134,10 @@ pub struct IndexConfig {
     /// Rtnn: number of Morton-ordered query chunks per launch.
     pub partitions: usize,
     /// Worker threads for the parallel launch engine and structure
-    /// maintenance (0 = all available cores). Results are
-    /// bitwise-identical at any value — this is purely a throughput knob.
+    /// maintenance (0 = the environment default: `TRUEKNN_THREADS` if
+    /// set, else all cores — resolved by [`crate::exec::Executor::new`]).
+    /// Results are bitwise-identical at any value — this is purely a
+    /// throughput knob.
     pub threads: usize,
     /// Morton query-cohort scheduling for parallel launches (on by
     /// default): sort each launch's rays along the Z-order curve into

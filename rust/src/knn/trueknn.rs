@@ -31,8 +31,10 @@ pub struct TrueKnnParams {
     /// Safety valve; the radius doubles each round so 64 rounds cover
     /// any f32 scale.
     pub max_rounds: usize,
-    /// Worker threads for the parallel launch engine (0 = all cores).
-    /// Results are identical at any value.
+    /// Worker threads for the parallel launch engine (0 = the
+    /// environment default: `TRUEKNN_THREADS` if set, else all cores —
+    /// resolved by [`crate::exec::Executor::new`]). Results are
+    /// identical at any value.
     pub threads: usize,
 }
 

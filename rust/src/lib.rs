@@ -41,10 +41,12 @@
 //! # let _ = (nn5, nn16, near);
 //! ```
 //!
-//! The batching service ([`coordinator::Service`]) holds one index per
-//! route path, so a serving session performs exactly one
-//! acceleration-structure build per dataset — visible as the `builds`
-//! service metric — instead of one per request batch.
+//! The batching service ([`coordinator::Service`]) is a route-sharded
+//! worker pool: each route path is pinned to one pool worker (rendezvous
+//! hashing), which holds that route's persistent index — so a serving
+//! session performs exactly one acceleration-structure build per route
+//! per dataset (visible as the per-route `builds` gauge) no matter how
+//! many batches are served or how many workers run.
 //!
 //! ## Migrating from the free functions
 //!

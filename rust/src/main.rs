@@ -5,8 +5,8 @@
 //! trueknn knn       run a single kNN search (any algorithm)
 //! trueknn exp       regenerate a paper table/figure (table1|fig6|...)
 //! trueknn runtime   inspect/smoke-test the PJRT artifacts
-//! trueknn serve     run the batching query service demo
-//! trueknn bench     perf microbenches, writes BENCH_PR2.json + BENCH_PR3.json
+//! trueknn serve     run the batching query service demo (worker pool)
+//! trueknn bench     perf microbenches, writes BENCH_PR2/PR3/PR4.json
 //! ```
 
 use trueknn::cli::{Args, CliError, Command};
@@ -46,8 +46,8 @@ fn print_usage() {
     println!("  knn      run one kNN search (trueknn|baseline|rtnn|kdtree|brute|pjrt)");
     println!("  exp      regenerate a paper table/figure");
     println!("  runtime  inspect the PJRT artifacts");
-    println!("  serve    run the batching query service demo");
-    println!("  bench    perf microbenches (BENCH_PR2.json + BENCH_PR3.json)");
+    println!("  serve    run the batching query service demo (worker pool)");
+    println!("  bench    perf microbenches (BENCH_PR2/PR3/PR4.json)");
     println!("run `trueknn <command> --help` for options");
 }
 
@@ -407,31 +407,55 @@ fn run_runtime(a: &Args) -> Result<(), String> {
 
 fn cmd_serve() -> Command {
     Command::new("serve", "run the batching query service demo")
+        .opt(
+            "config",
+            "run-config JSON file; supplies dataset/n/seed/threads/workers",
+            "",
+        )
         .opt("dataset", "road|taxi|lidar|iono|uniform", "taxi")
         .opt("n", "dataset size", "20000")
         .opt("requests", "number of client requests", "64")
         .opt("queries-per-request", "queries per request", "16")
         .opt("k", "neighbors per query", "5")
         .opt("threads", "launch-engine worker threads (0 = all cores)", "0")
+        .opt("workers", "coordinator pool workers (0 = all cores)", "0")
         .flag("pjrt", "use the PJRT brute path when routed")
 }
 
 fn run_serve(a: &Args) -> Result<(), String> {
     use trueknn::coordinator::{KnnRequest, Service, ServiceConfig};
-    let kind: DatasetKind = a.get_str("dataset", "taxi").parse()?;
-    let n: usize = a.get_parse("n", 20_000).map_err(|e| e.to_string())?;
+    let file_cfg: Option<RunConfig> = match a.get_str("config", "").as_str() {
+        "" => None,
+        path => Some(RunConfig::from_file(path).map_err(|e| e.to_string())?),
+    };
+    let ds = match &file_cfg {
+        Some(rc) => rc.dataset.generate(rc.n, rc.seed),
+        None => {
+            let kind: DatasetKind = a.get_str("dataset", "taxi").parse()?;
+            let n: usize = a.get_parse("n", 20_000).map_err(|e| e.to_string())?;
+            kind.generate(n, 42)
+        }
+    };
     let n_req: usize = a.get_parse("requests", 64).map_err(|e| e.to_string())?;
     let qpr: usize = a
         .get_parse("queries-per-request", 16)
         .map_err(|e| e.to_string())?;
     let k: usize = a.get_parse("k", 5).map_err(|e| e.to_string())?;
 
-    let ds = kind.generate(n, 42);
     let mut cfg = ServiceConfig {
         use_pjrt: a.flag("pjrt"),
         ..Default::default()
     };
-    cfg.trueknn.threads = a.get_parse("threads", 0).map_err(|e| e.to_string())?;
+    // 0 resolves to the TRUEKNN_THREADS-aware default inside
+    // Executor::new, exactly like the knn/config path
+    cfg.trueknn.threads = match &file_cfg {
+        Some(rc) => rc.threads.unwrap_or(0),
+        None => a.get_parse("threads", 0).map_err(|e| e.to_string())?,
+    };
+    cfg.workers = match &file_cfg {
+        Some(rc) => rc.workers.unwrap_or(0),
+        None => a.get_parse("workers", 0).map_err(|e| e.to_string())?,
+    };
     let (svc, handle) = Service::start(ds.points.clone(), cfg);
 
     let sw = trueknn::util::Stopwatch::start();
@@ -455,17 +479,32 @@ fn run_serve(a: &Args) -> Result<(), String> {
     let elapsed = sw.elapsed_secs();
     let m = handle.metrics().snapshot();
     println!(
-        "served {served} queries in {elapsed:.3}s ({:.0} q/s)",
-        served as f64 / elapsed
+        "served {served} queries in {elapsed:.3}s ({:.0} q/s, {} pool workers)",
+        served as f64 / elapsed,
+        handle.workers()
     );
     println!(
-        "batches={} rt={} brute={} mean_latency={:.2}ms max_latency={:.2}ms",
+        "batches={} rt={} brute={} rejected={} mean_latency={:.2}ms max_latency={:.2}ms",
         m.batches,
         m.rt_requests,
         m.brute_requests,
+        m.rejected,
         m.latency_mean_s * 1e3,
         m.latency_max_s * 1e3
     );
+    let builds: Vec<String> = m
+        .route_builds
+        .iter()
+        .map(|(p, b)| format!("{}={b}", p.name()))
+        .collect();
+    println!("builds: {}", builds.join(" "));
+    // the operator's backpressure story: which queues filled, who rejected
+    for (w, ws) in m.workers.iter().enumerate() {
+        println!(
+            "worker {w}: submitted={} batches={} rejected={} queue_hwm={}",
+            ws.submitted, ws.batches, ws.rejected, ws.queue_hwm
+        );
+    }
     svc.shutdown();
     Ok(())
 }
@@ -475,21 +514,29 @@ fn run_serve(a: &Args) -> Result<(), String> {
 fn cmd_bench() -> Command {
     Command::new(
         "bench",
-        "perf microbenches: launch throughput + shell re-query (PR2), SoA leaf loop + cohort scheduling + round bookkeeping (PR3)",
+        "perf microbenches: launch throughput + shell re-query (PR2), SoA leaf loop + cohort scheduling + round bookkeeping (PR3), worker-pool serving throughput (PR4)",
     )
     .opt("n", "points for the launch-throughput bench", "100000")
     .opt("shell-n", "points for the TrueKNN shell/round bench", "20000")
+    .opt("serve-n", "points for the pool serving bench", "20000")
+    .opt("serve-requests", "requests per pool-serving replay", "48")
+    .opt("serve-queries", "queries per request in the serving bench", "16")
     .opt("iters", "timed iterations per configuration", "3")
     .opt("out", "PR2 output JSON path", "BENCH_PR2.json")
     .opt("pr3-out", "PR3 output JSON path", "BENCH_PR3.json")
+    .opt("pr4-out", "PR4 output JSON path", "BENCH_PR4.json")
 }
 
 fn run_bench(a: &Args) -> Result<(), String> {
     let n: usize = a.get_parse("n", 100_000).map_err(|e| e.to_string())?;
     let shell_n: usize = a.get_parse("shell-n", 20_000).map_err(|e| e.to_string())?;
+    let serve_n: usize = a.get_parse("serve-n", 20_000).map_err(|e| e.to_string())?;
+    let serve_requests: usize = a.get_parse("serve-requests", 48).map_err(|e| e.to_string())?;
+    let serve_queries: usize = a.get_parse("serve-queries", 16).map_err(|e| e.to_string())?;
     let iters: usize = a.get_parse("iters", 3).map_err(|e| e.to_string())?;
     let out = a.get_str("out", "BENCH_PR2.json");
     let pr3_out = a.get_str("pr3-out", "BENCH_PR3.json");
+    let pr4_out = a.get_str("pr4-out", "BENCH_PR4.json");
 
     let report = trueknn::bench::pr2::run(n, shell_n, iters);
     trueknn::bench::pr2::render(&report).print();
@@ -511,5 +558,14 @@ fn run_bench(a: &Args) -> Result<(), String> {
     std::fs::write(&pr3_out, trueknn::bench::pr3::to_json(&pr3).to_string())
         .map_err(|e| e.to_string())?;
     log_info!("wrote {pr3_out}");
+
+    let pr4 = trueknn::bench::pr4::run(serve_n, serve_requests, serve_queries, iters);
+    trueknn::bench::pr4::render(&pr4).print();
+    if !pr4.pool_match {
+        return Err("worker pool changed responses vs the single-worker oracle".into());
+    }
+    std::fs::write(&pr4_out, trueknn::bench::pr4::to_json(&pr4).to_string())
+        .map_err(|e| e.to_string())?;
+    log_info!("wrote {pr4_out}");
     Ok(())
 }

@@ -234,6 +234,97 @@ fn prop_refit_scene_equals_fresh_build_results() {
 }
 
 #[test]
+fn prop_shell_cohort_thread_matrix_exact_and_push_monotone() {
+    // The full shell_requery × cohort_queries × threads matrix on random
+    // clouds: every configuration must be exact against the kd-tree
+    // oracle; results and heap_pushes must be bitwise-invariant under
+    // cohort/thread changes (pure schedule knobs); and the shell filter
+    // may only ever *reduce* heap traffic versus the reset-per-round
+    // baseline. Seeded — replay failures with TRUEKNN_PROP_SEED=<seed>.
+    use trueknn::index::{Backend, IndexBuilder, IndexConfig};
+    check("shell×cohort×threads matrix", 5, |rng| {
+        let n = 60 + rng.below(240) as usize;
+        let k = 1 + rng.below(8) as usize;
+        let pts = random_cloud(rng, n, false);
+        let seed = rng.next_u64();
+        // a pinned small start radius forces a multi-round search, so
+        // the shell filter has annuli to skip
+        let start = 0.01 + rng.f32() * 0.02;
+        let tree = KdTree::build(&pts);
+        // per shell setting: (heap_pushes, bitwise result signature) —
+        // cohort and threads must not move either
+        let mut per_shell: std::collections::HashMap<bool, (u64, Vec<Vec<(u32, u32)>>)> =
+            std::collections::HashMap::new();
+        for shell in [false, true] {
+            for cohort in [false, true] {
+                for threads in [1usize, 2, 8] {
+                    let tag = format!("shell={shell} cohort={cohort} threads={threads}");
+                    let cfg = IndexConfig {
+                        seed,
+                        start_radius: Some(start),
+                        shell_requery: shell,
+                        cohort_queries: cohort,
+                        threads,
+                        ..Default::default()
+                    };
+                    let mut idx = IndexBuilder::new(Backend::TrueKnn)
+                        .config(cfg)
+                        .build(pts.clone());
+                    let res = idx.knn(&pts, k);
+                    for (i, got) in res.neighbors.iter().enumerate() {
+                        let want = tree.knn_excluding(pts[i], k, Some(i as u32));
+                        if got.len() != want.len() {
+                            return Err(format!(
+                                "{tag} query {i}: {} vs {} results",
+                                got.len(),
+                                want.len()
+                            ));
+                        }
+                        for (g, w) in got.iter().zip(&want) {
+                            if (g.dist - w.dist).abs() > 1e-5 {
+                                return Err(format!(
+                                    "{tag} query {i}: {} vs {}",
+                                    g.dist, w.dist
+                                ));
+                            }
+                        }
+                    }
+                    let sig: Vec<Vec<(u32, u32)>> = res
+                        .neighbors
+                        .iter()
+                        .map(|nb| nb.iter().map(|x| (x.idx, x.dist.to_bits())).collect())
+                        .collect();
+                    let pushes = res.counters.heap_pushes;
+                    match per_shell.get(&shell) {
+                        None => {
+                            per_shell.insert(shell, (pushes, sig));
+                        }
+                        Some((want_pushes, want_sig)) => {
+                            if pushes != *want_pushes {
+                                return Err(format!(
+                                    "{tag}: heap_pushes {pushes} != {want_pushes} under a \
+                                     different schedule (must be schedule-invariant)"
+                                ));
+                            }
+                            if &sig != want_sig {
+                                return Err(format!("{tag}: results changed bitwise"));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if per_shell[&true].0 > per_shell[&false].0 {
+            return Err(format!(
+                "shell re-query pushed more than the reset baseline: {} > {}",
+                per_shell[&true].0, per_shell[&false].0
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_2d_datasets_equivalent_to_projected_3d() {
     // paper: 2D handled by pinning z=0 — verify search in the plane is
     // unaffected by the z machinery
