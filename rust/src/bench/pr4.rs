@@ -49,24 +49,48 @@ pub struct Pr4Report {
 }
 
 /// Per-response bitwise signature: route + every neighbor's (idx, dist bits).
-type ResponseSig = (RoutePath, Vec<(u32, u32)>);
+pub(crate) type ResponseSig = (RoutePath, Vec<(u32, u32)>);
 
-/// The deterministic mixed-route log: request i is RT-forced when even,
-/// brute-forced when odd, with queries drawn from the dataset at
-/// deterministic offsets.
-fn request_log(points: &[Point3], requests: usize, qpr: usize) -> Vec<KnnRequest> {
+/// Deterministic request log shared by the serving benches (PR4/PR5):
+/// queries are dataset slices at `stride`-spaced offsets, `mode_of`
+/// picks each request's forced mode. `qpr` clamps to the dataset size
+/// so degenerate CLI combinations (`--serve-queries >= --serve-n`)
+/// degrade instead of panicking on an empty offset range — callers
+/// must clamp the same way before computing throughput.
+pub(crate) fn request_log_with(
+    points: &[Point3],
+    requests: usize,
+    qpr: usize,
+    stride: usize,
+    mode_of: impl Fn(u64) -> QueryMode,
+) -> Vec<KnnRequest> {
+    let qpr = qpr.min(points.len());
+    let span = (points.len() - qpr).max(1);
     (0..requests as u64)
         .map(|id| {
-            let mode = if id % 2 == 0 { QueryMode::Rt } else { QueryMode::Brute };
-            let start = (id as usize * 137) % (points.len() - qpr);
-            KnnRequest::new(id, points[start..start + qpr].to_vec(), BENCH_K).with_mode(mode)
+            let start = (id as usize * stride) % span;
+            KnnRequest::new(id, points[start..start + qpr].to_vec(), BENCH_K)
+                .with_mode(mode_of(id))
         })
         .collect()
 }
 
+/// The PR4 mixed-route log: request i is RT-forced when even,
+/// brute-forced when odd.
+fn request_log(points: &[Point3], requests: usize, qpr: usize) -> Vec<KnnRequest> {
+    request_log_with(points, requests, qpr, 137, |id| {
+        if id % 2 == 0 {
+            QueryMode::Rt
+        } else {
+            QueryMode::Brute
+        }
+    })
+}
+
 /// Replay the log once (all submits, then all receives) and return the
 /// wall seconds plus each response's signature, indexed by request id.
-fn replay(
+/// Shared with the PR5 sharding bench.
+pub(crate) fn replay(
     handle: &crate::coordinator::ServiceHandle,
     log: &[KnnRequest],
 ) -> (f64, Vec<ResponseSig>) {
@@ -93,6 +117,9 @@ fn replay(
 pub fn run(n: usize, requests: usize, qpr: usize, iters: usize) -> Pr4Report {
     let iters = iters.max(1);
     let ds = DatasetKind::Taxi.generate(n, 42);
+    // the log clamps oversized requests the same way; clamping here too
+    // keeps the reported queries_per_request and q/s honest
+    let qpr = qpr.min(ds.len());
     let log = request_log(&ds.points, requests, qpr);
 
     // the service caps its pool at RoutePath::COUNT (more workers could

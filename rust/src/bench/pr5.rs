@@ -1,0 +1,212 @@
+//! The PR5 perf microbench: **single hot route** serving throughput
+//! under spatial dataset sharding, emitted as `BENCH_PR5.json` so CI can
+//! archive the perf trajectory alongside `BENCH_PR2/PR3/PR4.json`.
+//!
+//! The PR4 bench showed batch-level parallelism across *routes*; its
+//! ceiling is one worker per route, so a log that hammers one route
+//! serializes again. This bench replays an RT-only request log (every
+//! request forced down the hot path) through a [`Service`] at
+//! `shards × workers` ∈ {1, 2, max} × {1, max}, with the launch engine
+//! pinned to one thread so the shard/worker dimension is the only
+//! parallelism being measured. Unsharded rows pin the serial baseline;
+//! sharded rows show the hot route spreading across `min(S, pool)`
+//! workers.
+//!
+//! Every configuration's responses are checked bitwise against the
+//! `shards = 1, workers = 1` oracle (`shard_match`): spatial sharding
+//! must be a pure throughput knob.
+
+use crate::configx::Json;
+use crate::coordinator::{KnnRequest, QueryMode, RoutePath, Service, ServiceConfig};
+use crate::dataset::DatasetKind;
+use crate::exec::Executor;
+use crate::geom::Point3;
+use crate::knn::TrueKnnParams;
+
+use super::pr4::{replay, request_log_with, ResponseSig};
+use super::{fmt_secs, Table};
+
+const BENCH_K: usize = 5;
+
+#[derive(Clone, Debug)]
+pub struct ShardRow {
+    pub shards: usize,
+    /// Pool size requested (0 = all cores) and the size the service
+    /// actually resolved it to.
+    pub workers_requested: usize,
+    pub workers: usize,
+    /// Best-of-`iters` wall seconds for one full replay of the log.
+    pub seconds: f64,
+    pub qps: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Pr5Report {
+    pub n: usize,
+    pub requests: usize,
+    pub queries_per_request: usize,
+    pub k: usize,
+    pub iters: usize,
+    /// Every `(shards, workers)` configuration returned responses
+    /// bitwise-identical to the `shards = 1, workers = 1` oracle.
+    pub shard_match: bool,
+    pub rows: Vec<ShardRow>,
+}
+
+/// The hot-route log: every request RT-forced, built on the shared
+/// serving-bench log helper.
+fn hot_route_log(points: &[Point3], requests: usize, qpr: usize) -> Vec<KnnRequest> {
+    request_log_with(points, requests, qpr, 151, |_| QueryMode::Rt)
+}
+
+/// Run the sweep. `iters` timed replays per configuration, reporting the
+/// minimum (the least-perturbed sample).
+pub fn run(n: usize, requests: usize, qpr: usize, iters: usize) -> Pr5Report {
+    let iters = iters.max(1);
+    let ds = DatasetKind::Taxi.generate(n, 42);
+    // the log clamps oversized requests the same way; clamping here too
+    // keeps the reported queries_per_request and q/s honest
+    let qpr = qpr.min(ds.len());
+    let log = hot_route_log(&ds.points, requests, qpr);
+
+    let cores = Executor::auto().threads();
+    let mut shard_counts = vec![1usize, 2, cores.clamp(2, 8)];
+    shard_counts.sort_unstable();
+    shard_counts.dedup();
+    // 0 = all cores; the service caps the pool at the owner-slot count
+    // ((COUNT - 1) + shards when sharded), so the resolved size is
+    // reported per row
+    let worker_counts = [1usize, 0];
+
+    let mut oracle: Option<Vec<ResponseSig>> = None;
+    let mut shard_match = true;
+    let mut rows = Vec::new();
+    for &shards in &shard_counts {
+        for &workers in &worker_counts {
+            let cfg = ServiceConfig {
+                workers,
+                shards,
+                // size the queues for the whole scatter (requests ×
+                // shards messages): the bench measures throughput, not
+                // backpressure
+                queue_depth: (requests * shards).max(256),
+                trueknn: TrueKnnParams {
+                    exclude_self: false,
+                    // launch-level parallelism pinned off: the sweep
+                    // isolates the shard/worker (batch-level) dimension
+                    threads: 1,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let (svc, handle) = Service::start(ds.points.clone(), cfg);
+            // untimed warmup replay on top of the eager shard builds, so
+            // timed replays measure serving, not construction
+            let (_, sigs) = replay(&handle, &log);
+            match &oracle {
+                None => oracle = Some(sigs),
+                Some(want) => shard_match &= &sigs == want,
+            }
+            let mut best = f64::INFINITY;
+            for _ in 0..iters {
+                let (s, sigs) = replay(&handle, &log);
+                shard_match &= Some(&sigs) == oracle.as_ref();
+                best = best.min(s);
+            }
+            let resolved = handle.workers();
+            svc.shutdown();
+            rows.push(ShardRow {
+                shards,
+                workers_requested: workers,
+                workers: resolved,
+                seconds: best,
+                qps: (requests * qpr) as f64 / best.max(1e-12),
+            });
+        }
+    }
+
+    Pr5Report {
+        n: ds.len(),
+        requests,
+        queries_per_request: qpr,
+        k: BENCH_K,
+        iters,
+        shard_match,
+        rows,
+    }
+}
+
+pub fn to_json(r: &Pr5Report) -> Json {
+    let rows: Vec<Json> = r
+        .rows
+        .iter()
+        .map(|row| {
+            Json::obj(vec![
+                ("shards", Json::Num(row.shards as f64)),
+                ("workers_requested", Json::Num(row.workers_requested as f64)),
+                ("workers", Json::Num(row.workers as f64)),
+                ("seconds", Json::Num(row.seconds)),
+                ("qps", Json::Num(row.qps)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("bench", Json::Str("pr5".into())),
+        (
+            "sharded_hot_route",
+            Json::obj(vec![
+                ("dataset", Json::Str("taxi".into())),
+                ("n", Json::Num(r.n as f64)),
+                ("requests", Json::Num(r.requests as f64)),
+                ("queries_per_request", Json::Num(r.queries_per_request as f64)),
+                ("k", Json::Num(r.k as f64)),
+                ("iters", Json::Num(r.iters as f64)),
+                ("route", Json::Str(RoutePath::Rt.name().into())),
+                ("rows", Json::Arr(rows)),
+                ("results_match", Json::Bool(r.shard_match)),
+            ]),
+        ),
+    ])
+}
+
+pub fn render(r: &Pr5Report) -> Table {
+    let mut t = Table::new(
+        "PR5 microbench: sharded hot-route serving throughput (RT-only log)",
+        &["shards", "workers", "replay", "q/s"],
+    );
+    for row in &r.rows {
+        t.row(vec![
+            row.shards.to_string(),
+            format!("{} ({})", row.workers, row.workers_requested),
+            fmt_secs(row.seconds),
+            format!("{:.0}", row.qps),
+        ]);
+    }
+    t.row(vec![
+        "sharding invisible in results".into(),
+        String::new(),
+        String::new(),
+        r.shard_match.to_string(),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_runs_small_and_serializes() {
+        let r = run(1_500, 10, 4, 1);
+        assert_eq!(r.requests, 10);
+        assert!(r.shard_match, "sharding must not change responses");
+        assert!(!r.rows.is_empty());
+        assert!(r.rows.iter().all(|row| row.seconds > 0.0));
+        assert!(r.rows.iter().any(|row| row.shards > 1));
+        let j = to_json(&r).to_string();
+        assert!(j.contains("\"bench\":\"pr5\""));
+        assert!(j.contains("sharded_hot_route"));
+        let parsed = crate::configx::parse_json(&j).unwrap();
+        assert!(parsed.get("sharded_hot_route").is_some());
+    }
+}

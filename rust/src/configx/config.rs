@@ -41,6 +41,10 @@ pub struct RunConfig {
     /// Like `threads`, a pure throughput knob: service responses are
     /// bitwise-identical at any pool size.
     pub workers: Option<usize>,
+    /// Spatial shards for the RT route's dataset in `serve` runs
+    /// (None/1 = unsharded). A pure throughput knob too: scatter-gather
+    /// responses are bitwise-identical at any shard count.
+    pub shards: Option<usize>,
 }
 
 impl Default for RunConfig {
@@ -54,6 +58,7 @@ impl Default for RunConfig {
             start_radius: None,
             threads: None,
             workers: None,
+            shards: None,
         }
     }
 }
@@ -145,6 +150,12 @@ impl RunConfig {
                     .ok_or_else(|| ConfigError::Bad("workers", "not a number".into()))?,
             );
         }
+        if let Some(s) = v.get("shards") {
+            cfg.shards = Some(
+                s.as_usize()
+                    .ok_or_else(|| ConfigError::Bad("shards", "not a number".into()))?,
+            );
+        }
         Ok(cfg)
     }
 
@@ -193,6 +204,9 @@ impl RunConfig {
         }
         if let Some(w) = self.workers {
             pairs.push(("workers", Json::Num(w as f64)));
+        }
+        if let Some(s) = self.shards {
+            pairs.push(("shards", Json::Num(s as f64)));
         }
         Json::obj(pairs)
     }
@@ -251,6 +265,7 @@ mod tests {
             start_radius: Some(0.001),
             threads: Some(8),
             workers: Some(4),
+            shards: Some(2),
         };
         let re = RunConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(re.dataset, DatasetKind::Taxi);
@@ -260,6 +275,7 @@ mod tests {
         assert_eq!(re.start_radius, Some(0.001));
         assert_eq!(re.threads, Some(8));
         assert_eq!(re.workers, Some(4));
+        assert_eq!(re.shards, Some(2));
         // the knob must reach the engine config, not just round-trip
         let idx = re.to_index_config();
         assert_eq!(idx.threads, 8);

@@ -13,8 +13,9 @@ use super::request::{KnnRequest, QueryMode, RoutePath};
 use std::time::Instant;
 
 /// A batch of requests sharing one execution: same k, same
-/// [`QueryMode`] **and** same [`RoutePath`], so one index serves the
-/// whole batch while every request's explicit mode is honored.
+/// [`QueryMode`], same [`RoutePath`] **and** same shard, so one index
+/// (or one shard sub-index) serves the whole batch while every
+/// request's explicit mode is honored.
 #[derive(Debug)]
 pub struct Batch {
     pub requests: Vec<(KnnRequest, Instant)>,
@@ -24,6 +25,11 @@ pub struct Batch {
     pub mode: QueryMode,
     /// The submit-time routing decision, shared by every request here.
     pub path: RoutePath,
+    /// For a sharded route: which spatial shard this batch queries
+    /// (`None` = the route's whole unsharded index). Carried from the
+    /// handle's scatter, so the worker serves it against exactly the
+    /// shard sub-index the submit addressed.
+    pub shard: Option<usize>,
 }
 
 impl Batch {
@@ -53,7 +59,7 @@ impl Default for BatcherConfig {
 #[derive(Debug)]
 pub struct DynamicBatcher {
     cfg: BatcherConfig,
-    pending: Vec<(KnnRequest, RoutePath, Instant)>,
+    pending: Vec<(KnnRequest, RoutePath, Option<usize>, Instant)>,
 }
 
 impl DynamicBatcher {
@@ -64,8 +70,14 @@ impl DynamicBatcher {
         }
     }
 
-    pub fn push(&mut self, req: KnnRequest, path: RoutePath, arrived: Instant) {
-        self.pending.push((req, path, arrived));
+    pub fn push(
+        &mut self,
+        req: KnnRequest,
+        path: RoutePath,
+        shard: Option<usize>,
+        arrived: Instant,
+    ) {
+        self.pending.push((req, path, shard, arrived));
     }
 
     pub fn pending_len(&self) -> usize {
@@ -73,11 +85,11 @@ impl DynamicBatcher {
     }
 
     /// Form the next batch: take the oldest request, then greedily add
-    /// every other pending request with the same k, mode and route path
-    /// (order preserved) until a size bound trips. Returns None when
-    /// idle. The (k, mode, path) homogeneity is what lets the worker
-    /// serve a whole batch through one index while still honoring each
-    /// request's explicit `QueryMode`.
+    /// every other pending request with the same k, mode, route path and
+    /// shard (order preserved) until a size bound trips. Returns None
+    /// when idle. The (k, mode, path, shard) homogeneity is what lets
+    /// the worker serve a whole batch through one index while still
+    /// honoring each request's explicit `QueryMode`.
     pub fn next_batch(&mut self) -> Option<Batch> {
         if self.pending.is_empty() {
             return None;
@@ -85,16 +97,18 @@ impl DynamicBatcher {
         let k = self.pending[0].0.k;
         let mode = self.pending[0].0.mode;
         let path = self.pending[0].1;
+        let shard = self.pending[0].2;
         let mut requests = Vec::new();
         let mut total_q = 0usize;
         let mut i = 0;
         while i < self.pending.len() {
-            let (req_i, path_i, _) = &self.pending[i];
-            let compatible = req_i.k == k && req_i.mode == mode && *path_i == path;
+            let (req_i, path_i, shard_i, _) = &self.pending[i];
+            let compatible =
+                req_i.k == k && req_i.mode == mode && *path_i == path && *shard_i == shard;
             let fits = total_q + req_i.queries.len() <= self.cfg.max_queries
                 || requests.is_empty(); // an oversize request still ships alone
             if compatible && fits && requests.len() < self.cfg.max_requests {
-                let (req, _, t) = self.pending.remove(i);
+                let (req, _, _, t) = self.pending.remove(i);
                 total_q += req.queries.len();
                 requests.push((req, t));
                 if total_q >= self.cfg.max_queries {
@@ -116,6 +130,7 @@ impl DynamicBatcher {
             k,
             mode,
             path,
+            shard,
         })
     }
 }
@@ -133,9 +148,9 @@ mod tests {
     fn batches_group_same_k() {
         let mut b = DynamicBatcher::new(BatcherConfig::default());
         let now = Instant::now();
-        b.push(req(1, 10, 5), RoutePath::Rt, now);
-        b.push(req(2, 10, 7), RoutePath::Rt, now);
-        b.push(req(3, 10, 5), RoutePath::Rt, now);
+        b.push(req(1, 10, 5), RoutePath::Rt, None, now);
+        b.push(req(2, 10, 7), RoutePath::Rt, None, now);
+        b.push(req(3, 10, 5), RoutePath::Rt, None, now);
         let batch = b.next_batch().unwrap();
         let ids: Vec<u64> = batch.requests.iter().map(|(r, _)| r.id).collect();
         assert_eq!(ids, vec![1, 3]);
@@ -156,8 +171,8 @@ mod tests {
             max_requests: 64,
         });
         let now = Instant::now();
-        b.push(req(1, 10, 5), RoutePath::Rt, now);
-        b.push(req(2, 10, 5), RoutePath::Rt, now);
+        b.push(req(1, 10, 5), RoutePath::Rt, None, now);
+        b.push(req(2, 10, 5), RoutePath::Rt, None, now);
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.requests.len(), 1, "second request would exceed cap");
         assert_eq!(b.pending_len(), 1);
@@ -169,7 +184,7 @@ mod tests {
             max_queries: 5,
             max_requests: 64,
         });
-        b.push(req(1, 100, 5), RoutePath::Rt, Instant::now());
+        b.push(req(1, 100, 5), RoutePath::Rt, None, Instant::now());
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.total_queries(), 100);
     }
@@ -189,7 +204,11 @@ mod tests {
                 let r = req(id, 1 + rng.below(20) as usize, 1 + rng.below(3) as usize)
                     .with_mode(modes[rng.below(3) as usize]);
                 let path = RoutePath::ALL[rng.below(3) as usize];
-                b.push(r, path, now);
+                let shard = match rng.below(3) {
+                    0 => None,
+                    s => Some(s as usize),
+                };
+                b.push(r, path, shard, now);
             }
             let mut seen = std::collections::HashSet::new();
             while let Some(batch) = b.next_batch() {
@@ -217,9 +236,9 @@ mod tests {
         use super::super::request::QueryMode;
         let mut b = DynamicBatcher::new(BatcherConfig::default());
         let now = Instant::now();
-        b.push(req(1, 4, 5).with_mode(QueryMode::Rt), RoutePath::Rt, now);
-        b.push(req(2, 4, 5).with_mode(QueryMode::Brute), RoutePath::BruteCpu, now);
-        b.push(req(3, 4, 5).with_mode(QueryMode::Rt), RoutePath::Rt, now);
+        b.push(req(1, 4, 5).with_mode(QueryMode::Rt), RoutePath::Rt, None, now);
+        b.push(req(2, 4, 5).with_mode(QueryMode::Brute), RoutePath::BruteCpu, None, now);
+        b.push(req(3, 4, 5).with_mode(QueryMode::Rt), RoutePath::Rt, None, now);
         let first = b.next_batch().unwrap();
         assert_eq!(first.mode, QueryMode::Rt);
         assert_eq!(first.path, RoutePath::Rt);
@@ -233,14 +252,33 @@ mod tests {
     }
 
     #[test]
+    fn different_shards_never_batch_together() {
+        // a sharded route's scatter sends one message per shard; each
+        // batch must stay pinned to one shard sub-index
+        let mut b = DynamicBatcher::new(BatcherConfig::default());
+        let now = Instant::now();
+        b.push(req(1, 4, 5), RoutePath::Rt, Some(0), now);
+        b.push(req(1, 4, 5), RoutePath::Rt, Some(1), now);
+        b.push(req(2, 4, 5), RoutePath::Rt, Some(0), now);
+        let first = b.next_batch().unwrap();
+        assert_eq!(first.shard, Some(0));
+        let ids: Vec<u64> = first.requests.iter().map(|(r, _)| r.id).collect();
+        assert_eq!(ids, vec![1, 2], "same-shard messages batch together");
+        let second = b.next_batch().unwrap();
+        assert_eq!(second.shard, Some(1));
+        assert_eq!(second.requests.len(), 1);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
     fn same_mode_different_path_never_batches() {
         // Auto-mode requests can land on different paths when k differs;
         // if k matches but the submit-time route differs (e.g. a request
         // routed before an availability change), the batch must split
         let mut b = DynamicBatcher::new(BatcherConfig::default());
         let now = Instant::now();
-        b.push(req(1, 4, 5), RoutePath::Rt, now);
-        b.push(req(2, 4, 5), RoutePath::BruteCpu, now);
+        b.push(req(1, 4, 5), RoutePath::Rt, None, now);
+        b.push(req(2, 4, 5), RoutePath::BruteCpu, None, now);
         let first = b.next_batch().unwrap();
         assert_eq!(first.requests.len(), 1);
         assert_eq!(first.path, RoutePath::Rt);

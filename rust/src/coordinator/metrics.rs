@@ -49,6 +49,13 @@ pub struct Metrics {
     /// batch and insert). Amortization claim: each exercised route stays
     /// at 1 per dataset no matter how many batches are served.
     route_builds: [AtomicU64; RoutePath::COUNT],
+    /// Per-shard build gauges of the sharded route (empty when sharding
+    /// is off). Like `route_builds`, the owning worker stores the shard
+    /// structure's cumulative build count (rebalance rebuilds included).
+    pub shard_builds: Vec<AtomicU64>,
+    /// Queries served per shard of the sharded route (every scattered
+    /// sub-batch adds its query count to its shard's slot).
+    pub shard_queries: Vec<AtomicU64>,
     /// One slot per pool worker.
     pub workers: Vec<WorkerMetrics>,
     latency: Mutex<OnlineStats>,
@@ -79,6 +86,10 @@ pub struct MetricsSnapshot {
     pub builds: u64,
     /// `(route, builds)` for every route path, exercised or not.
     pub route_builds: Vec<(RoutePath, u64)>,
+    /// Per-shard builds of the sharded route (empty when sharding off).
+    pub shard_builds: Vec<u64>,
+    /// Per-shard queries served (aligned with `shard_builds`).
+    pub shard_queries: Vec<u64>,
     pub workers: Vec<WorkerSnapshot>,
     pub latency_mean_s: f64,
     pub latency_max_s: f64,
@@ -92,8 +103,16 @@ impl Metrics {
 
     /// A registry for a pool of `workers` workers.
     pub fn with_workers(workers: usize) -> Self {
+        Self::with_pool(workers, 0)
+    }
+
+    /// A registry for a pool of `workers` workers serving a route
+    /// sharded `shards` ways (0 = sharding off: no per-shard slots).
+    pub fn with_pool(workers: usize, shards: usize) -> Self {
         Metrics {
             workers: (0..workers).map(|_| WorkerMetrics::default()).collect(),
+            shard_builds: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            shard_queries: (0..shards).map(|_| AtomicU64::new(0)).collect(),
             ..Default::default()
         }
     }
@@ -112,6 +131,13 @@ impl Metrics {
         self.route_builds[path.index()].store(builds, Ordering::Relaxed);
     }
 
+    /// Update one shard's build gauge to its structure's cumulative
+    /// build count (the owning worker calls this after every build,
+    /// batch, insert and rebalance).
+    pub fn set_shard_builds(&self, shard: usize, builds: u64) {
+        self.shard_builds[shard].store(builds, Ordering::Relaxed);
+    }
+
     pub fn record_latency(&self, seconds: f64) {
         self.latency.lock().unwrap().push(seconds);
     }
@@ -120,7 +146,21 @@ impl Metrics {
         let lat = self.latency.lock().unwrap();
         let route_builds: Vec<(RoutePath, u64)> = RoutePath::ALL
             .iter()
-            .map(|&p| (p, self.route_builds[p.index()].load(Ordering::Relaxed)))
+            .map(|&p| {
+                // a sharded RT route's structure work lives in the
+                // per-shard gauges; surface their sum as the route's
+                // build count so the amortization gauge stays comparable
+                // between sharded and unsharded runs
+                let builds = if p == RoutePath::Rt && !self.shard_builds.is_empty() {
+                    self.shard_builds
+                        .iter()
+                        .map(|b| b.load(Ordering::Relaxed))
+                        .sum()
+                } else {
+                    self.route_builds[p.index()].load(Ordering::Relaxed)
+                };
+                (p, builds)
+            })
             .collect();
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
@@ -134,6 +174,16 @@ impl Metrics {
             points_inserted: self.points_inserted.load(Ordering::Relaxed),
             builds: route_builds.iter().map(|&(_, b)| b).sum(),
             route_builds,
+            shard_builds: self
+                .shard_builds
+                .iter()
+                .map(|b| b.load(Ordering::Relaxed))
+                .collect(),
+            shard_queries: self
+                .shard_queries
+                .iter()
+                .map(|q| q.load(Ordering::Relaxed))
+                .collect(),
             workers: self
                 .workers
                 .iter()
@@ -193,6 +243,20 @@ mod tests {
         assert_eq!(s.builds_of(RoutePath::Rt), 1);
         assert_eq!(s.builds_of(RoutePath::Brute), 0);
         assert_eq!(s.builds_of(RoutePath::BruteCpu), 2);
+    }
+
+    #[test]
+    fn shard_slots_gauge_and_accumulate() {
+        let m = Metrics::with_pool(2, 3);
+        m.set_shard_builds(1, 1);
+        m.set_shard_builds(1, 2); // gauge: overwrites, e.g. after a rebalance
+        Metrics::add(&m.shard_queries[1], 16);
+        Metrics::add(&m.shard_queries[1], 4);
+        let s = m.snapshot();
+        assert_eq!(s.shard_builds, vec![0, 2, 0]);
+        assert_eq!(s.shard_queries, vec![0, 20, 0]);
+        // sharding off: no slots at all
+        assert!(Metrics::with_workers(2).snapshot().shard_builds.is_empty());
     }
 
     #[test]

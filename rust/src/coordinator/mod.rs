@@ -24,6 +24,16 @@
 //! one worker, inserts are broadcast barriers, and per-request results
 //! never depend on batch composition (engine determinism contract).
 //!
+//! A route configured with `ServiceConfig::shards > 1` additionally
+//! splits its *dataset* into spatial shards ([`crate::shard`]): each
+//! shard's sub-index lives on its own worker
+//! ([`Router::worker_for_shard`]), the handle scatters such a request to
+//! every shard owner, and the last-finishing owner gathers — merging the
+//! per-shard partials into the one exact response. That turns the
+//! remaining hot-route serialization into data parallelism while
+//! keeping responses bitwise-identical to the unsharded single-worker
+//! oracle at any shards × workers × threads.
+//!
 //! No tokio in the offline build; the event loop is a pool of dedicated
 //! worker threads with `std::sync::mpsc` channels, which is also the
 //! honest analog of a multi-GPU dispatch loop over per-device queues.

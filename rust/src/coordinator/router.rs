@@ -19,6 +19,13 @@
 //! - growing the pool only ever moves routes *onto* the new worker
 //!   (minimal disruption), so perf comparisons across pool sizes keep
 //!   per-route build counts comparable.
+//!
+//! A **sharded** route (dataset split into spatial shards, see
+//! [`crate::shard`]) maps shard → worker through
+//! [`Router::worker_for_shard`]: the route's rendezvous anchor plus a
+//! round-robin offset, so `S` shards always occupy `min(S, pool)`
+//! distinct workers — the hot route's batches provably spread instead
+//! of depending on hash luck.
 
 use super::request::{KnnRequest, QueryMode, RoutePath};
 
@@ -81,6 +88,19 @@ impl Router {
                 splitmix64(SPREAD_SALT ^ (((path.index() as u64) << 32) | (w as u64 + 1)))
             })
             .expect("non-empty range")
+    }
+
+    /// The pool worker owning spatial shard `shard` of a sharded route:
+    /// the route's rendezvous anchor ([`Router::worker_for`]) plus a
+    /// round-robin offset. Still a pure function of
+    /// `(route, shard, pool size)` — every handle and worker computes
+    /// the same owner with no shared state — and, unlike a per-shard
+    /// rendezvous draw, it *guarantees* a route with `S` shards occupies
+    /// exactly `min(S, workers)` distinct workers, which is the whole
+    /// point of sharding a hot route: its batches are served
+    /// concurrently the moment the pool has a second worker.
+    pub fn worker_for_shard(path: RoutePath, shard: usize, workers: usize) -> usize {
+        (Self::worker_for(path, workers) + shard) % workers
     }
 
     /// Pick the execution path for a request against `n_data` points.
@@ -185,6 +205,28 @@ mod tests {
             .map(|&p| Router::worker_for(p, 3))
             .collect();
         assert_eq!(owners.len(), 3, "routes must spread across a 3-pool");
+    }
+
+    #[test]
+    fn shard_owners_spread_round_robin_from_the_route_anchor() {
+        for workers in 1..=8usize {
+            let anchor = Router::worker_for(RoutePath::Rt, workers);
+            let mut owners = std::collections::HashSet::new();
+            for shard in 0..8 {
+                let w = Router::worker_for_shard(RoutePath::Rt, shard, workers);
+                assert!(w < workers);
+                assert_eq!(w, (anchor + shard) % workers, "not anchored");
+                owners.insert(w);
+            }
+            // 8 shards must occupy min(8, workers) distinct workers —
+            // the concurrency guarantee the sharded hot route relies on
+            assert_eq!(owners.len(), workers.min(8), "workers={workers}");
+        }
+        // shard 0 sits on the route's rendezvous anchor itself
+        assert_eq!(
+            Router::worker_for_shard(RoutePath::Rt, 0, 3),
+            Router::worker_for(RoutePath::Rt, 3)
+        );
     }
 
     #[test]

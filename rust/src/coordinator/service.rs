@@ -33,6 +33,21 @@
 //!   points to every worker; a worker drains its pending batches before
 //!   applying them, so a query observes exactly the inserts submitted
 //!   before it — at any pool size.
+//! - **Sharded hot route.** With `ServiceConfig::shards > 1` the RT
+//!   route's dataset is cut into balanced Morton-range shards
+//!   ([`crate::shard`]); shard `s` lives on worker
+//!   [`Router::worker_for_shard`]`(Rt, s, pool)`, so one hot route
+//!   occupies `min(S, pool)` workers. The handle **scatters** each RT
+//!   request (one message per shard, under the insert lock so the
+//!   scattered slices see one consistent point set) and the worker
+//!   delivering the last per-shard partial **gathers**: it merges the
+//!   partials per query (k smallest under `(distance, id)`) and sends
+//!   the one response. Every shard owner holds a replica of the one
+//!   partition `Service::start` computed and applies the broadcast
+//!   insert stream to it through the same routing step, so shard
+//!   membership — and the rebalance-on-overflow rebuild — stays
+//!   consistent across owners with no coordination, and responses stay
+//!   bitwise-identical to an unsharded single-worker service.
 //!
 //! The PJRT client wraps raw C pointers and is not `Send`, so the
 //! runtime (and every index) is constructed *inside* the worker that
@@ -44,14 +59,16 @@ use super::batcher::{BatcherConfig, DynamicBatcher};
 use super::metrics::Metrics;
 use super::request::{KnnRequest, KnnResponse, RoutePath};
 use super::router::{Router, RouterConfig};
+use crate::exec::Executor;
 use crate::geom::Point3;
 use crate::index::{BruteCpuIndex, BrutePjrtIndex, IndexConfig, NeighborIndex, TrueKnnIndex};
-use crate::knn::TrueKnnParams;
+use crate::knn::{Neighbor, TrueKnnParams};
 use crate::runtime::PjrtRuntime;
+use crate::shard::{merge_topk, Partition};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 #[derive(Clone, Debug)]
@@ -59,9 +76,10 @@ pub struct ServiceConfig {
     pub batcher: BatcherConfig,
     pub router: RouterConfig,
     /// Pool size: worker threads, each owning a disjoint shard of route
-    /// paths (0 = all available cores). Capped at
-    /// [`RoutePath::COUNT`] — a worker beyond that could never own a
-    /// route, yet would still replicate every insert.
+    /// paths (0 = all available cores). Capped at the owner-slot count —
+    /// [`RoutePath::COUNT`], or `(COUNT - 1) + shards` when the RT route
+    /// is sharded — a worker beyond that could never own anything, yet
+    /// would still replicate every insert.
     pub workers: usize,
     /// Bounded queue depth **per worker**; submits beyond it are
     /// rejected (backpressure).
@@ -69,6 +87,16 @@ pub struct ServiceConfig {
     /// Try to load PJRT artifacts in the owning worker (falls back to
     /// CPU brute).
     pub use_pjrt: bool,
+    /// Spatial shards for the **RT route's** dataset (1 = unsharded).
+    /// Above 1 the route's points are cut into balanced Morton-range
+    /// shards (see [`crate::shard`]); shard `s` lives on worker
+    /// [`Router::worker_for_shard`]`(Rt, s, pool)`, every worker routes
+    /// inserts through the identical deterministic partition, and the
+    /// handle scatter-gathers each RT request across the shard owners —
+    /// responses stay bitwise-identical to an unsharded single-worker
+    /// service while a single hot route finally runs on several workers
+    /// at once.
+    pub shards: usize,
     pub trueknn: TrueKnnParams,
 }
 
@@ -80,6 +108,7 @@ impl Default for ServiceConfig {
             workers: 0,
             queue_depth: 256,
             use_pjrt: false,
+            shards: 1,
             trueknn: TrueKnnParams {
                 exclude_self: false, // service queries are external points
                 ..Default::default()
@@ -106,10 +135,44 @@ impl std::fmt::Display for ServiceError {
 impl std::error::Error for ServiceError {}
 
 enum Msg {
-    Request(KnnRequest, RoutePath, Sender<KnnResponse>, Instant),
+    /// One routed request (or, for a sharded route, one shard's slice of
+    /// a scattered request — the `Option<usize>` names the shard).
+    Request(KnnRequest, RoutePath, Option<usize>, ReplySink, Instant),
     /// Broadcast to every worker; applied between batches.
     Insert(Arc<Vec<Point3>>),
     Shutdown,
+}
+
+/// Where a request's result goes: straight back to the client, or into
+/// the scatter-gather rendezvous of a sharded request.
+enum ReplySink {
+    Direct(Sender<KnnResponse>),
+    Gather(Arc<Gather>),
+}
+
+/// Rendezvous of one scattered request: per-shard partials accumulate
+/// here, and whichever worker delivers the **last** partial merges and
+/// replies. The merged result depends only on the partials (fixed merge
+/// order over shard ids), never on delivery order — that is what keeps
+/// scatter-gather responses bitwise-identical to the unsharded oracle.
+struct Gather {
+    id: u64,
+    k: usize,
+    path: RoutePath,
+    submitted: Instant,
+    state: Mutex<GatherState>,
+}
+
+struct GatherState {
+    /// Taken by the completing worker; behind the mutex so the gather
+    /// stays `Sync` on every supported toolchain (`mpsc::Sender` only
+    /// recently became `Sync` itself).
+    reply: Option<Sender<KnnResponse>>,
+    /// One slot per shard; `Some` once that shard's partial landed.
+    partials: Vec<Option<Vec<Vec<Neighbor>>>>,
+    filled: usize,
+    /// Critical-path service time: the slowest shard batch.
+    service_seconds: f64,
 }
 
 /// Handle returned by `Service::start`; cheap to clone, submits requests.
@@ -121,33 +184,52 @@ pub struct ServiceHandle {
     data_len: Arc<AtomicUsize>,
     /// Serializes insert broadcasts: concurrent inserts must reach every
     /// worker's queue in one global order, or the workers' views of the
-    /// data (and point ids) would fork per route.
-    insert_lock: Arc<std::sync::Mutex<()>>,
+    /// data (and point ids) would fork per route. The sharded scatter
+    /// takes the same lock so an insert can never land between two
+    /// shards of one request.
+    insert_lock: Arc<Mutex<()>>,
+    /// RT-route shard count (1 = unsharded).
+    shards: usize,
     metrics: Arc<Metrics>,
     inflight: Arc<AtomicUsize>,
 }
 
 impl ServiceHandle {
     /// Submit a request; returns the response channel. Routes the
-    /// request to its owning worker and applies backpressure by
-    /// rejecting when that worker's queue is full.
+    /// request to its owning worker — or, on a sharded RT route,
+    /// scatters it to every shard owner — and applies backpressure by
+    /// rejecting when a target worker's queue is full.
     pub fn submit(&self, req: KnnRequest) -> Result<Receiver<KnnResponse>, ServiceError> {
         let (tx, rx) = std::sync::mpsc::channel();
         Metrics::inc(&self.metrics.requests);
         let path = self.router.route(&req, self.data_len.load(Ordering::SeqCst));
-        let w = Router::worker_for(path, self.txs.len());
+        if path == RoutePath::Rt && self.shards > 1 {
+            self.scatter(req, path, tx)?;
+        } else {
+            let w = Router::worker_for(path, self.txs.len());
+            self.try_send(
+                w,
+                Msg::Request(req, path, None, ReplySink::Direct(tx), Instant::now()),
+            )?;
+        }
+        Ok(rx)
+    }
+
+    /// Try-send one message to worker `w` with full backpressure
+    /// accounting. The depth is incremented *before* the send so the
+    /// worker-side decrement can never observe it missing (no
+    /// underflow); the high-water mark is recorded only for accepted
+    /// messages, and is best-effort under contention (see its doc in
+    /// WorkerMetrics).
+    fn try_send(&self, w: usize, msg: Msg) -> Result<(), ServiceError> {
         let wm = &self.metrics.workers[w];
-        // depth is incremented *before* the send so the worker-side
-        // decrement can never observe it missing (no underflow); the
-        // high-water mark is recorded only for accepted messages, and is
-        // best-effort under contention (see its doc in WorkerMetrics)
         let depth = wm.queue_depth.fetch_add(1, Ordering::SeqCst) + 1;
-        match self.txs[w].try_send(Msg::Request(req, path, tx, Instant::now())) {
+        match self.txs[w].try_send(msg) {
             Ok(()) => {
                 wm.queue_hwm.fetch_max(depth, Ordering::SeqCst);
                 Metrics::inc(&wm.submitted);
                 self.inflight.fetch_add(1, Ordering::SeqCst);
-                Ok(rx)
+                Ok(())
             }
             Err(TrySendError::Full(_)) => {
                 wm.queue_depth.fetch_sub(1, Ordering::SeqCst);
@@ -160,6 +242,55 @@ impl ServiceHandle {
                 Err(ServiceError::ShutDown)
             }
         }
+    }
+
+    /// Scatter a sharded-route request: one message per shard to that
+    /// shard's owning worker. Runs under the insert lock so the
+    /// scattered sub-requests observe one consistent point set — an
+    /// insert broadcast can never interleave between two shards of the
+    /// same request. A mid-scatter rejection abandons the gather:
+    /// already-enqueued shard messages are still served (their gauges
+    /// settle normally) but the merged reply has no receiver.
+    fn scatter(
+        &self,
+        req: KnnRequest,
+        path: RoutePath,
+        reply: Sender<KnnResponse>,
+    ) -> Result<(), ServiceError> {
+        let gather = Arc::new(Gather {
+            id: req.id,
+            k: req.k,
+            path,
+            submitted: Instant::now(),
+            state: Mutex::new(GatherState {
+                reply: Some(reply),
+                partials: vec![None; self.shards],
+                filled: 0,
+                service_seconds: 0.0,
+            }),
+        });
+        // build every per-shard message (request clones included) before
+        // taking the lock, so the critical section every scatter and
+        // insert contends on is just the S try_sends
+        let msgs: Vec<(usize, Msg)> = (0..self.shards)
+            .map(|s| {
+                (
+                    Router::worker_for_shard(path, s, self.txs.len()),
+                    Msg::Request(
+                        req.clone(),
+                        path,
+                        Some(s),
+                        ReplySink::Gather(gather.clone()),
+                        Instant::now(),
+                    ),
+                )
+            })
+            .collect();
+        let _order = self.insert_lock.lock().unwrap();
+        for (w, msg) in msgs {
+            self.try_send(w, msg)?;
+        }
+        Ok(())
     }
 
     /// Submit and wait for the response.
@@ -238,12 +369,34 @@ impl Service {
         } else {
             cfg.workers
         };
-        // only RoutePath::COUNT distinct owners can ever exist; extra
-        // workers would idle forever while still replicating inserts
-        let n_workers = requested.clamp(1, RoutePath::COUNT);
-        let metrics = Arc::new(Metrics::with_workers(n_workers));
+        let shards = cfg.shards.max(1);
+        // cap the pool at the number of distinct owners that can ever
+        // exist: each unsharded route is one owner, and a sharded RT
+        // route expands into one owner per shard; workers beyond that
+        // would idle forever while still replicating inserts
+        let route_slots = if shards > 1 {
+            RoutePath::COUNT - 1 + shards
+        } else {
+            RoutePath::COUNT
+        };
+        let n_workers = requested.clamp(1, route_slots);
+        let metrics = Arc::new(Metrics::with_pool(
+            n_workers,
+            if shards > 1 { shards } else { 0 },
+        ));
         let inflight = Arc::new(AtomicUsize::new(0));
         let base = Arc::new(data);
+        // the partition is a pure function of (base, shards): build it
+        // once here and hand every worker the same copy, instead of S
+        // duplicate Morton-sort passes before the ready handshake. The
+        // no-coordination argument is only needed for the post-start
+        // insert stream, which each replica applies identically.
+        let partition = if shards > 1 {
+            let exec = Executor::new(cfg.trueknn.threads);
+            Some(Arc::new(Partition::build(&base[..], shards, &exec)))
+        } else {
+            None
+        };
         let (ready_tx, ready_rx) = sync_channel::<bool>(n_workers);
         let mut txs = Vec::with_capacity(n_workers);
         let mut workers = Vec::with_capacity(n_workers);
@@ -251,6 +404,7 @@ impl Service {
             let (tx, rx) = sync_channel::<Msg>(cfg.queue_depth);
             let worker_base = base.clone();
             let worker_cfg = cfg.clone();
+            let worker_part = partition.clone();
             let worker_ready = ready_tx.clone();
             let worker_metrics = metrics.clone();
             let worker_inflight = inflight.clone();
@@ -259,6 +413,7 @@ impl Service {
                     w,
                     n_workers,
                     worker_base,
+                    worker_part,
                     worker_cfg,
                     rx,
                     worker_ready,
@@ -279,7 +434,8 @@ impl Service {
             txs: Arc::new(txs.clone()),
             router: Arc::new(Router::new(router_cfg)),
             data_len: Arc::new(AtomicUsize::new(base.len())),
-            insert_lock: Arc::new(std::sync::Mutex::new(())),
+            insert_lock: Arc::new(Mutex::new(())),
+            shards,
             metrics,
             inflight,
         };
@@ -325,10 +481,26 @@ impl Drop for Service {
     }
 }
 
+/// One shard sub-index of the sharded RT route, held by its owning
+/// worker. The shard-local→global id remap lives in the registry's
+/// [`Partition`] (`shards[s].ids`) — one source of truth shared with the
+/// routing/rebalance logic, not a second copy here.
+struct ShardSlot {
+    index: Box<dyn NeighborIndex>,
+    /// Builds performed by sub-indexes this slot retired at rebalances,
+    /// so the per-shard build gauge accumulates instead of resetting.
+    retired_builds: u64,
+}
+
 /// Per-worker index registry: one persistent [`NeighborIndex`] per
 /// **owned** route path, built lazily on first use (the PJRT one eagerly
 /// in the owning worker, because the router must know up front whether
-/// that path exists).
+/// that path exists). When the RT route is sharded, the registry instead
+/// holds one [`ShardSlot`] per **owned shard**, built eagerly at worker
+/// start from the deterministic partition of the base data — every
+/// worker computes the identical partition without coordination, which
+/// is what lets each one route the shared insert stream (and detect
+/// rebalance overflows) in lock-step.
 ///
 /// The base dataset is shared read-only across the pool (`Arc`); a
 /// worker only materializes its own copy inside the indexes it actually
@@ -339,15 +511,96 @@ struct IndexRegistry {
     extra: Vec<Point3>,
     trueknn: TrueKnnParams,
     by_path: HashMap<RoutePath, Box<dyn NeighborIndex>>,
+    /// RT-route shard count (1 = sharding off).
+    shards: usize,
+    /// Shard ids of the RT route this worker owns.
+    my_shards: Vec<usize>,
+    /// The deterministic partition (built over the base data; present on
+    /// shard-owning workers only). Every owner applies the shared insert
+    /// stream to it through [`Partition::group_routed`], so all replicas
+    /// hold identical shard membership — and evaluate the
+    /// [`Partition::overflowed`] rebalance predicate to the same answer
+    /// at the same insert barrier — with no coordination.
+    partition: Option<Partition>,
+    shard_slots: HashMap<usize, ShardSlot>,
 }
 
 impl IndexRegistry {
-    fn new(base: Arc<Vec<Point3>>, cfg: &ServiceConfig) -> Self {
+    fn new(
+        base: Arc<Vec<Point3>>,
+        cfg: &ServiceConfig,
+        worker_id: usize,
+        n_workers: usize,
+    ) -> Self {
+        let shards = cfg.shards.max(1);
+        let my_shards: Vec<usize> = if shards > 1 {
+            (0..shards)
+                .filter(|&s| Router::worker_for_shard(RoutePath::Rt, s, n_workers) == worker_id)
+                .collect()
+        } else {
+            Vec::new()
+        };
         IndexRegistry {
             base,
             extra: Vec::new(),
             trueknn: cfg.trueknn.clone(),
             by_path: HashMap::new(),
+            shards,
+            my_shards,
+            partition: None,
+            shard_slots: HashMap::new(),
+        }
+    }
+
+    /// Eagerly build this worker's owned shard sub-indexes from the
+    /// partition `Service::start` computed once over the base data
+    /// (no-op when sharding is off or this worker owns none). Runs
+    /// before the ready handshake so a sharded route serves from the
+    /// first submit.
+    fn build_owned_shards(&mut self, partition: Option<&Arc<Partition>>, metrics: &Metrics) {
+        if self.shards <= 1 || self.my_shards.is_empty() {
+            return;
+        }
+        let part: Partition = partition
+            .expect("sharded service must hand its workers the start partition")
+            .as_ref()
+            .clone();
+        let base = self.base.clone();
+        let owned = self.my_shards.clone();
+        for s in owned {
+            let slot = self.build_shard_slot(&base, &part, s, 0);
+            metrics.set_shard_builds(
+                s,
+                slot.retired_builds + slot.index.build_stats().counters.builds,
+            );
+            self.shard_slots.insert(s, slot);
+        }
+        self.partition = Some(part);
+    }
+
+    /// Build one shard's sub-index over `data[part.shards[s]]` with the
+    /// service's RT config — except `exclude_self`, which is forced off:
+    /// shard-local positions don't align with batch query positions, so
+    /// positional exclusion inside a shard would drop an arbitrary
+    /// unrelated point per shard (the same reason `ShardedIndex` forces
+    /// it off on its inner indexes). Service queries are external points
+    /// by contract, so the gather needs no exclusion of its own.
+    fn build_shard_slot(
+        &self,
+        data: &[Point3],
+        part: &Partition,
+        s: usize,
+        retired_builds: u64,
+    ) -> ShardSlot {
+        let set = &part.shards[s];
+        let pts: Vec<Point3> = set.ids.iter().map(|&i| data[i as usize]).collect();
+        let cfg = IndexConfig {
+            exclude_self: false,
+            ..self.trueknn.to_index_config()
+        };
+        ShardSlot {
+            index: Box::new(TrueKnnIndex::new(pts, cfg)),
+            retired_builds,
         }
     }
 
@@ -380,8 +633,17 @@ impl IndexRegistry {
         if !self.by_path.contains_key(&path) {
             let data = self.full_data();
             let index: Box<dyn NeighborIndex> = match path {
+                // service queries are external points: never
+                // self-exclude (positional exclusion is meaningless
+                // against batch-concatenated queries, and forcing it off
+                // here keeps the unsharded RT route consistent with the
+                // sharded one — sharding stays a pure throughput knob)
                 RoutePath::Rt => {
-                    Box::new(TrueKnnIndex::new(data, self.trueknn.to_index_config()))
+                    let cfg = IndexConfig {
+                        exclude_self: false,
+                        ..self.trueknn.to_index_config()
+                    };
+                    Box::new(TrueKnnIndex::new(data, cfg))
                 }
                 // Reached only if the eagerly-installed PJRT index is
                 // missing (runtime load raced or failed): rebuild with
@@ -397,12 +659,77 @@ impl IndexRegistry {
     /// Apply an insert to every already-built index (lazily-built ones
     /// pick the points up from `extra` at build time), refreshing the
     /// per-route build gauges in case an insert triggered a rebuild.
+    ///
+    /// On a shard-owning worker the points are also routed through the
+    /// shared deterministic partition into the owned shard sub-indexes;
+    /// global ids are assigned against the pre-insert total so they
+    /// match the unsharded oracle's ids exactly. Every owner tracks all
+    /// shards' sizes from the same stream, so the rebalance decision
+    /// below fires on every owner at the same insert barrier.
     fn apply_insert(&mut self, points: &[Point3], metrics: &Metrics) {
+        if let Some(part) = &mut self.partition {
+            let old_total = self.base.len() + self.extra.len();
+            // the SAME grouping step ShardedIndex::insert runs — every
+            // replica extends its partition identically, and only the
+            // owned shards' sub-indexes do real work
+            let grouped = part.group_routed(points, old_total);
+            for (s, (ids, pts)) in grouped.into_iter().enumerate() {
+                if pts.is_empty() {
+                    continue;
+                }
+                let set = &mut part.shards[s];
+                for &p in &pts {
+                    set.aabb.grow(p);
+                }
+                set.ids.extend(ids);
+                if let Some(slot) = self.shard_slots.get_mut(&s) {
+                    slot.index.insert(&pts);
+                    metrics.set_shard_builds(
+                        s,
+                        slot.retired_builds + slot.index.build_stats().counters.builds,
+                    );
+                }
+            }
+        }
         self.extra.extend_from_slice(points);
         for (path, index) in self.by_path.iter_mut() {
             index.insert(points);
             metrics.set_route_builds(*path, index.build_stats().counters.builds);
         }
+        let total = self.base.len() + self.extra.len();
+        if self.partition.as_ref().is_some_and(|p| p.overflowed(total)) {
+            self.rebalance_shards(metrics);
+        }
+    }
+
+    /// Rebalance: re-partition the full dataset and rebuild this
+    /// worker's owned shards. Deterministic — every owner computes the
+    /// same partition from the same data at the same barrier. Retired
+    /// build counts roll into the per-shard gauges so they accumulate.
+    fn rebalance_shards(&mut self, metrics: &Metrics) {
+        let exec = Executor::new(self.trueknn.threads);
+        let data = self.full_data();
+        let part = Partition::build(&data, self.shards, &exec);
+        let mut retired: HashMap<usize, u64> = self
+            .shard_slots
+            .drain()
+            .map(|(s, slot)| {
+                (
+                    s,
+                    slot.retired_builds + slot.index.build_stats().counters.builds,
+                )
+            })
+            .collect();
+        let owned = self.my_shards.clone();
+        for s in owned {
+            let slot = self.build_shard_slot(&data, &part, s, retired.remove(&s).unwrap_or(0));
+            metrics.set_shard_builds(
+                s,
+                slot.retired_builds + slot.index.build_stats().counters.builds,
+            );
+            self.shard_slots.insert(s, slot);
+        }
+        self.partition = Some(part);
     }
 }
 
@@ -411,13 +738,19 @@ fn worker_loop(
     worker_id: usize,
     n_workers: usize,
     base: Arc<Vec<Point3>>,
+    partition: Option<Arc<Partition>>,
     cfg: ServiceConfig,
     rx: Receiver<Msg>,
     ready: SyncSender<bool>,
     metrics: Arc<Metrics>,
     inflight: Arc<AtomicUsize>,
 ) {
-    let mut registry = IndexRegistry::new(base, &cfg);
+    let mut registry = IndexRegistry::new(base, &cfg, worker_id, n_workers);
+    // Sharded RT route: owned shard sub-indexes are built before the
+    // ready handshake, from the one partition Service::start computed
+    // over the base data, so the route serves from the first submit and
+    // every owner starts from identical shard membership.
+    registry.build_owned_shards(partition.as_ref(), &metrics);
     // PJRT runtime is constructed here: the client is not Send. Only the
     // worker that owns the Brute route loads it (eagerly, so the
     // readiness handshake can tell the router the path exists).
@@ -441,8 +774,10 @@ fn worker_loop(
     let _ = ready.send(pjrt_available);
 
     let mut batcher = DynamicBatcher::new(cfg.batcher.clone());
-    // response channels ride alongside their request through the batcher
-    let mut reply_of: HashMap<u64, Sender<KnnResponse>> = HashMap::new();
+    // response sinks ride alongside their request through the batcher,
+    // keyed by (request id, shard tag) — a worker owning several shards
+    // of one route receives one message per owned shard
+    let mut reply_of: HashMap<(u64, u64), ReplySink> = HashMap::new();
 
     'outer: loop {
         // block for the first message, then drain whatever else arrived
@@ -501,6 +836,12 @@ fn worker_loop(
     }
 }
 
+/// The reply-map key of one queued message: request id plus the shard
+/// it addresses (`u64::MAX` = the unsharded whole-route message).
+fn sink_key(id: u64, shard: Option<usize>) -> (u64, u64) {
+    (id, shard.map_or(u64::MAX, |s| s as u64))
+}
+
 /// Handle one queue message on the worker thread; returns `false` when
 /// the worker should exit.
 fn on_msg(
@@ -508,16 +849,16 @@ fn on_msg(
     msg: Msg,
     registry: &mut IndexRegistry,
     batcher: &mut DynamicBatcher,
-    reply_of: &mut HashMap<u64, Sender<KnnResponse>>,
+    reply_of: &mut HashMap<(u64, u64), ReplySink>,
     metrics: &Arc<Metrics>,
     inflight: &Arc<AtomicUsize>,
 ) -> bool {
     let wm = &metrics.workers[worker_id];
     match msg {
-        Msg::Request(req, path, reply, t) => {
+        Msg::Request(req, path, shard, sink, t) => {
             wm.queue_depth.fetch_sub(1, Ordering::SeqCst);
-            reply_of.insert(req.id, reply);
-            batcher.push(req, path, t);
+            reply_of.insert(sink_key(req.id, shard), sink);
+            batcher.push(req, path, shard, t);
             true
         }
         Msg::Insert(points) => {
@@ -541,7 +882,7 @@ fn drain(
     worker_id: usize,
     registry: &mut IndexRegistry,
     batcher: &mut DynamicBatcher,
-    reply_of: &mut HashMap<u64, Sender<KnnResponse>>,
+    reply_of: &mut HashMap<(u64, u64), ReplySink>,
     metrics: &Arc<Metrics>,
     inflight: &Arc<AtomicUsize>,
 ) {
@@ -558,6 +899,54 @@ fn drain(
         // the batch carries its submit-time routing decision; the worker
         // never re-routes
         let path = batch.path;
+
+        if let Some(s) = batch.shard {
+            // sharded scatter leg: serve this shard's slice of every
+            // request against the owned sub-index, remap shard-local ids
+            // to global ones, and park each partial in its gather — the
+            // delivery completing a gather merges and replies. Shard
+            // batches only ever land on the owner (routing is the same
+            // pure function the handle used) and owners build eagerly,
+            // so slot and partition always exist here.
+            Metrics::add(&metrics.shard_queries[s], all_queries.len() as u64);
+            let slot = registry
+                .shard_slots
+                .get_mut(&s)
+                .expect("shard batch routed to a non-owner worker");
+            let res = slot.index.knn(&all_queries, batch.k);
+            metrics.set_shard_builds(
+                s,
+                slot.retired_builds + slot.index.build_stats().counters.builds,
+            );
+            let ids = &registry
+                .partition
+                .as_ref()
+                .expect("shard batch without a partition")
+                .shards[s]
+                .ids;
+            let neighbors: Vec<Vec<Neighbor>> = res
+                .neighbors
+                .iter()
+                .map(|nb| {
+                    nb.iter()
+                        .map(|n| Neighbor {
+                            idx: ids[n.idx as usize],
+                            dist: n.dist,
+                        })
+                        .collect()
+                })
+                .collect();
+            let service_seconds = served.elapsed().as_secs_f64();
+            for ((req, _arrived), range) in batch.requests.iter().zip(&batch.ranges) {
+                inflight.fetch_sub(1, Ordering::SeqCst);
+                if let Some(ReplySink::Gather(g)) = reply_of.remove(&sink_key(req.id, Some(s))) {
+                    let partial = neighbors[range.0..range.1].to_vec();
+                    deliver_partial(&g, s, partial, service_seconds, metrics);
+                }
+            }
+            continue;
+        }
+
         match path {
             RoutePath::Rt => Metrics::add(&metrics.rt_requests, batch.requests.len() as u64),
             RoutePath::Brute | RoutePath::BruteCpu => {
@@ -577,7 +966,7 @@ fn drain(
             Metrics::inc(&metrics.responses);
             Metrics::add(&metrics.queries_served, req.queries.len() as u64);
             inflight.fetch_sub(1, Ordering::SeqCst);
-            if let Some(reply) = reply_of.remove(&req.id) {
+            if let Some(ReplySink::Direct(reply)) = reply_of.remove(&sink_key(req.id, None)) {
                 let _ = reply.send(KnnResponse {
                     id: req.id,
                     neighbors: neighbors[range.0..range.1].to_vec(),
@@ -588,6 +977,59 @@ fn drain(
             }
         }
     }
+}
+
+/// Park one shard's partial in the gather; the delivery that completes
+/// the set merges every shard's per-query list (k smallest under
+/// `(distance, id)` — the same order the unsharded heap drain sorts by)
+/// and sends the response. The merge consumes the partials in shard-id
+/// order, so the outcome is independent of which worker finished last.
+fn deliver_partial(
+    g: &Gather,
+    shard: usize,
+    partial: Vec<Vec<Neighbor>>,
+    service_seconds: f64,
+    metrics: &Arc<Metrics>,
+) {
+    let done = {
+        let mut st = g.state.lock().unwrap();
+        if st.partials[shard].is_none() {
+            st.filled += 1;
+        }
+        st.partials[shard] = Some(partial);
+        st.service_seconds = st.service_seconds.max(service_seconds);
+        if st.filled < st.partials.len() {
+            None
+        } else {
+            let parts: Vec<Vec<Vec<Neighbor>>> =
+                st.partials.iter_mut().map(|p| p.take().expect("filled")).collect();
+            // the reply moves out with us; the merge runs off the lock
+            let slowest = st.service_seconds;
+            st.reply.take().map(|reply| (parts, slowest, reply))
+        }
+    };
+    let Some((parts, service_seconds, reply)) = done else {
+        return;
+    };
+    let n_queries = parts.first().map_or(0, |p| p.len());
+    let mut neighbors: Vec<Vec<Neighbor>> = vec![Vec::new(); n_queries];
+    for part in &parts {
+        for (qi, nb) in part.iter().enumerate() {
+            merge_topk(&mut neighbors[qi], nb, g.k);
+        }
+    }
+    let latency = g.submitted.elapsed().as_secs_f64();
+    metrics.record_latency(latency);
+    Metrics::inc(&metrics.responses);
+    Metrics::add(&metrics.queries_served, n_queries as u64);
+    Metrics::add(&metrics.rt_requests, 1);
+    let _ = reply.send(KnnResponse {
+        id: g.id,
+        neighbors,
+        path: g.path,
+        service_seconds,
+        latency_seconds: latency,
+    });
 }
 
 #[cfg(test)]
@@ -759,6 +1201,45 @@ mod tests {
         assert!(m.workers[w_cpu].batches >= 1, "BruteCpu owner served nothing");
         assert_eq!(m.workers[w_rt].rejected + m.workers[w_cpu].rejected, 0);
         assert!(m.workers[w_rt].queue_hwm >= 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn sharded_route_round_trip_exact() {
+        // smoke test of the scatter-gather plumbing: a 2-shard RT route
+        // on a 4-worker pool answers exactly like the kd-tree oracle
+        let ds = DatasetKind::Uniform.generate(2_400, 78);
+        let cfg = ServiceConfig {
+            workers: 4,
+            shards: 2,
+            ..Default::default()
+        };
+        let (svc, handle) = Service::start(ds.points.clone(), cfg);
+        assert_eq!(handle.workers(), 4, "sharded pool must not cap at 3");
+        let queries: Vec<Point3> = ds.points[..24].to_vec();
+        let resp = handle
+            .query(KnnRequest::new(1, queries.clone(), 4).with_mode(QueryMode::Rt))
+            .unwrap();
+        assert_eq!(resp.path, RoutePath::Rt);
+        assert_eq!(resp.neighbors.len(), 24);
+        let tree = KdTree::build(&ds.points);
+        for (q, got) in queries.iter().zip(&resp.neighbors) {
+            let want = tree.knn(*q, 4);
+            assert_eq!(got.len(), 4);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g.dist - w.dist).abs() < 1e-5);
+            }
+        }
+        let m = handle.metrics().snapshot();
+        assert_eq!(m.shard_builds, vec![1, 1], "one build per shard");
+        assert_eq!(m.shard_queries.iter().sum::<u64>(), 48, "24 queries × 2 shards");
+        assert_eq!(
+            m.builds_of(RoutePath::Rt),
+            2,
+            "route gauge must surface the per-shard builds"
+        );
+        assert_eq!(m.responses, 1);
+        assert_eq!(m.rt_requests, 1);
         svc.shutdown();
     }
 

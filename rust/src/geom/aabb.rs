@@ -66,6 +66,33 @@ impl Aabb {
             || (self.contains(o.min) && self.contains(o.max))
     }
 
+    /// Squared distance from `p` to the closest point of the box (0 when
+    /// inside). The shard scatter-gather prune's lower bound: per axis
+    /// the gap is computed as a single subtraction, and f32 subtraction
+    /// and multiplication are correctly rounded (hence monotone), so for
+    /// any point `q` inside the box the computed value never exceeds the
+    /// [`super::dist2`]-computed distance to `q` — pruning on it is
+    /// exact even at the last representable bit.
+    #[inline]
+    pub fn dist2_to_point(&self, p: Point3) -> f32 {
+        if self.is_empty() {
+            return f32::INFINITY;
+        }
+        let axis_gap = |v: f32, lo: f32, hi: f32| {
+            if v < lo {
+                lo - v
+            } else if v > hi {
+                v - hi
+            } else {
+                0.0
+            }
+        };
+        let dx = axis_gap(p.x, self.min.x, self.max.x);
+        let dy = axis_gap(p.y, self.min.y, self.max.y);
+        let dz = axis_gap(p.z, self.min.z, self.max.z);
+        dx * dx + dy * dy + dz * dz
+    }
+
     pub fn centroid(&self) -> Point3 {
         (self.min + self.max) * 0.5
     }
@@ -158,6 +185,39 @@ mod tests {
     fn longest_axis_picks_widest() {
         let b = Aabb::new(Point3::ZERO, Point3::new(1.0, 3.0, 2.0));
         assert_eq!(b.longest_axis(), 1);
+    }
+
+    #[test]
+    fn dist2_to_point_inside_face_corner_and_empty() {
+        let b = Aabb::new(Point3::ZERO, Point3::splat(1.0));
+        assert_eq!(b.dist2_to_point(Point3::splat(0.5)), 0.0, "inside");
+        assert_eq!(b.dist2_to_point(Point3::new(2.0, 0.5, 0.5)), 1.0, "face");
+        assert_eq!(b.dist2_to_point(Point3::new(2.0, 2.0, 2.0)), 3.0, "corner");
+        assert_eq!(b.dist2_to_point(Point3::new(-1.0, 0.5, 0.5)), 1.0, "min side");
+        assert_eq!(Aabb::EMPTY.dist2_to_point(Point3::ZERO), f32::INFINITY);
+    }
+
+    #[test]
+    fn dist2_to_point_lower_bounds_member_distances() {
+        use crate::geom::dist2;
+        use crate::util::{prop, Pcg32};
+        let mut rng = Pcg32::new(55);
+        let pts = prop::random_cloud(&mut rng, 200, false);
+        let mut b = Aabb::EMPTY;
+        for &p in &pts {
+            b.grow(p);
+        }
+        for _ in 0..200 {
+            let q = Point3::new(
+                rng.range_f32(-2.0, 3.0),
+                rng.range_f32(-2.0, 3.0),
+                rng.range_f32(-2.0, 3.0),
+            );
+            let lb = b.dist2_to_point(q);
+            for &p in &pts {
+                assert!(lb <= dist2(p, q), "box bound above a member distance");
+            }
+        }
     }
 
     #[test]

@@ -150,6 +150,13 @@ pub struct IndexConfig {
     /// resetting and re-pushing everything each round. Exact either way;
     /// `false` restores the reset-per-round baseline for ablations.
     pub shell_requery: bool,
+    /// Spatial shards (1 = unsharded). Above 1 the builder wraps the
+    /// backend in a [`crate::shard::ShardedIndex`]: the dataset is split
+    /// into balanced Morton-range shards, each with its own backend
+    /// index, and queries scatter-gather exactly across them — results
+    /// are bitwise-identical to the unsharded backend at any shard
+    /// count (see the shard module's determinism contract).
+    pub shards: usize,
 }
 
 impl Default for IndexConfig {
@@ -166,6 +173,7 @@ impl Default for IndexConfig {
             threads: 0,
             cohort_queries: true,
             shell_requery: true,
+            shards: 1,
         }
     }
 }
@@ -307,8 +315,17 @@ impl IndexBuilder {
         self
     }
 
+    /// Spatial shards (1 = unsharded; see [`IndexConfig::shards`]).
+    pub fn shards(mut self, n: usize) -> Self {
+        self.cfg.shards = n;
+        self
+    }
+
     /// Build the acceleration structure over `data` and return the index.
     pub fn build(self, data: Vec<Point3>) -> Box<dyn NeighborIndex> {
+        if self.cfg.shards > 1 {
+            return Box::new(crate::shard::ShardedIndex::new(self.backend, data, self.cfg));
+        }
         match self.backend {
             Backend::TrueKnn => Box::new(TrueKnnIndex::new(data, self.cfg)),
             Backend::FixedRadius => Box::new(FixedRadiusIndex::new(data, self.cfg)),

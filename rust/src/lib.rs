@@ -46,7 +46,12 @@
 //! hashing), which holds that route's persistent index — so a serving
 //! session performs exactly one acceleration-structure build per route
 //! per dataset (visible as the per-route `builds` gauge) no matter how
-//! many batches are served or how many workers run.
+//! many batches are served or how many workers run. A hot route can
+//! additionally shard its *dataset* ([`shard`], `IndexConfig::shards` /
+//! `ServiceConfig::shards`): balanced Morton-range shards, one backend
+//! index each, queried by exact scatter-gather — bitwise-identical to
+//! the unsharded index at any shard count, while the route's batches
+//! spread across `min(shards, pool)` workers.
 //!
 //! ## Migrating from the free functions
 //!
@@ -71,6 +76,7 @@ pub mod bvh;
 pub mod rt;
 pub mod knn;
 pub mod index;
+pub mod shard;
 pub mod runtime;
 pub mod coordinator;
 pub mod bench;

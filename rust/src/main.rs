@@ -6,7 +6,7 @@
 //! trueknn exp       regenerate a paper table/figure (table1|fig6|...)
 //! trueknn runtime   inspect/smoke-test the PJRT artifacts
 //! trueknn serve     run the batching query service demo (worker pool)
-//! trueknn bench     perf microbenches, writes BENCH_PR2/PR3/PR4.json
+//! trueknn bench     perf microbenches, writes BENCH_PR2/PR3/PR4/PR5.json
 //! ```
 
 use trueknn::cli::{Args, CliError, Command};
@@ -47,7 +47,7 @@ fn print_usage() {
     println!("  exp      regenerate a paper table/figure");
     println!("  runtime  inspect the PJRT artifacts");
     println!("  serve    run the batching query service demo (worker pool)");
-    println!("  bench    perf microbenches (BENCH_PR2/PR3/PR4.json)");
+    println!("  bench    perf microbenches (BENCH_PR2/PR3/PR4/PR5.json)");
     println!("run `trueknn <command> --help` for options");
 }
 
@@ -409,7 +409,7 @@ fn cmd_serve() -> Command {
     Command::new("serve", "run the batching query service demo")
         .opt(
             "config",
-            "run-config JSON file; supplies dataset/n/seed/threads/workers",
+            "run-config JSON file; supplies dataset/n/seed/threads/workers/shards",
             "",
         )
         .opt("dataset", "road|taxi|lidar|iono|uniform", "taxi")
@@ -419,6 +419,11 @@ fn cmd_serve() -> Command {
         .opt("k", "neighbors per query", "5")
         .opt("threads", "launch-engine worker threads (0 = all cores)", "0")
         .opt("workers", "coordinator pool workers (0 = all cores)", "0")
+        .opt(
+            "shards",
+            "spatial shards for the RT route's dataset (1 = unsharded)",
+            "1",
+        )
         .flag("pjrt", "use the PJRT brute path when routed")
 }
 
@@ -456,6 +461,11 @@ fn run_serve(a: &Args) -> Result<(), String> {
         Some(rc) => rc.workers.unwrap_or(0),
         None => a.get_parse("workers", 0).map_err(|e| e.to_string())?,
     };
+    cfg.shards = match &file_cfg {
+        Some(rc) => rc.shards.unwrap_or(1),
+        None => a.get_parse("shards", 1).map_err(|e| e.to_string())?,
+    }
+    .max(1);
     let (svc, handle) = Service::start(ds.points.clone(), cfg);
 
     let sw = trueknn::util::Stopwatch::start();
@@ -498,6 +508,17 @@ fn run_serve(a: &Args) -> Result<(), String> {
         .map(|(p, b)| format!("{}={b}", p.name()))
         .collect();
     println!("builds: {}", builds.join(" "));
+    // sharded RT route: where each shard's structure work and traffic went
+    if !m.shard_builds.is_empty() {
+        let per: Vec<String> = m
+            .shard_builds
+            .iter()
+            .zip(&m.shard_queries)
+            .enumerate()
+            .map(|(s, (b, q))| format!("s{s}:builds={b},queries={q}"))
+            .collect();
+        println!("rt shards: {}", per.join(" "));
+    }
     // the operator's backpressure story: which queues filled, who rejected
     for (w, ws) in m.workers.iter().enumerate() {
         println!(
@@ -514,7 +535,7 @@ fn run_serve(a: &Args) -> Result<(), String> {
 fn cmd_bench() -> Command {
     Command::new(
         "bench",
-        "perf microbenches: launch throughput + shell re-query (PR2), SoA leaf loop + cohort scheduling + round bookkeeping (PR3), worker-pool serving throughput (PR4)",
+        "perf microbenches: launch throughput + shell re-query (PR2), SoA leaf loop + cohort scheduling + round bookkeeping (PR3), worker-pool serving throughput (PR4), sharded hot-route throughput (PR5)",
     )
     .opt("n", "points for the launch-throughput bench", "100000")
     .opt("shell-n", "points for the TrueKNN shell/round bench", "20000")
@@ -525,6 +546,7 @@ fn cmd_bench() -> Command {
     .opt("out", "PR2 output JSON path", "BENCH_PR2.json")
     .opt("pr3-out", "PR3 output JSON path", "BENCH_PR3.json")
     .opt("pr4-out", "PR4 output JSON path", "BENCH_PR4.json")
+    .opt("pr5-out", "PR5 output JSON path", "BENCH_PR5.json")
 }
 
 fn run_bench(a: &Args) -> Result<(), String> {
@@ -537,6 +559,7 @@ fn run_bench(a: &Args) -> Result<(), String> {
     let out = a.get_str("out", "BENCH_PR2.json");
     let pr3_out = a.get_str("pr3-out", "BENCH_PR3.json");
     let pr4_out = a.get_str("pr4-out", "BENCH_PR4.json");
+    let pr5_out = a.get_str("pr5-out", "BENCH_PR5.json");
 
     let report = trueknn::bench::pr2::run(n, shell_n, iters);
     trueknn::bench::pr2::render(&report).print();
@@ -567,5 +590,14 @@ fn run_bench(a: &Args) -> Result<(), String> {
     std::fs::write(&pr4_out, trueknn::bench::pr4::to_json(&pr4).to_string())
         .map_err(|e| e.to_string())?;
     log_info!("wrote {pr4_out}");
+
+    let pr5 = trueknn::bench::pr5::run(serve_n, serve_requests, serve_queries, iters);
+    trueknn::bench::pr5::render(&pr5).print();
+    if !pr5.shard_match {
+        return Err("dataset sharding changed responses vs the unsharded oracle".into());
+    }
+    std::fs::write(&pr5_out, trueknn::bench::pr5::to_json(&pr5).to_string())
+        .map_err(|e| e.to_string())?;
+    log_info!("wrote {pr5_out}");
     Ok(())
 }

@@ -141,13 +141,16 @@ impl Pipeline {
             bb.grow(r.origin);
         }
         // (code, input index): the index tie-break makes the sort a
-        // deterministic total order even for duplicate codes
+        // deterministic total order even for duplicate codes. The sort
+        // itself is the parallel stable radix over the 30-bit codes
+        // (comparison sort below its small-n floor) — same total order
+        // as `sort_unstable()`, at any thread count.
         let mut keys: Vec<(u32, u32)> = rays
             .iter()
             .enumerate()
             .map(|(i, r)| (morton3(r.origin, &bb), i as u32))
             .collect();
-        keys.sort_unstable();
+        crate::store::sort_morton_keys(&mut keys, exec);
         let sorted: Vec<Ray> = keys.iter().map(|&(_, i)| rays[i as usize]).collect();
 
         let cohorts = sorted.len().div_ceil(COHORT_RAYS);

@@ -164,45 +164,74 @@ impl Scene {
         // Target selection: one short BVH descent per pending point
         // (batched across the exec engine) replaces the old full
         // leaf-centroid scan per point — O(P·depth) typical instead of
-        // O(P·L), and the batch shares one leaf table. Points outside
-        // every leaf box (rare: far-out inserts) fall back to the global
-        // centroid scan so the choice is always defined. Host-side
+        // O(P·L), and the batch shares one leaf table. Host-side
         // maintenance, like the old scan: not charged to the counters.
+        //
+        // The batch is classified once up front: a point the root box
+        // cannot contain (out of bounds, or NaN coordinates — `contains`
+        // rejects both) can never land in a leaf, so its descent is
+        // wasted work and it routes straight to its fallback. The common
+        // all-clean batch short-circuits the per-point containment test
+        // entirely and runs the descent shard with no fallback dispatch.
         let bvh = &self.bvh;
+        let root_box = bvh.nodes[bvh.root as usize].aabb;
+        let all_in_box = new_points.iter().all(|&p| root_box.contains(p));
+        // descent target: nearest-centroid leaf among those whose box
+        // contains the point; usize::MAX when no leaf does (a coverage
+        // gap between leaf boxes — possible even inside the root)
+        let assign_by_descent = |p: Point3, stack: &mut Vec<u32>| -> usize {
+            let mut best_li = usize::MAX;
+            let mut best_d2 = f32::INFINITY;
+            bvh.for_each_leaf_containing(
+                p,
+                stack,
+                || {},
+                |first, _count| {
+                    let li = slot_of_first[&(first as u32)];
+                    let d2 = dist2(centroids[li], p);
+                    if d2 < best_d2 {
+                        best_d2 = d2;
+                        best_li = li;
+                    }
+                },
+            );
+            best_li
+        };
+        // fallback: global nearest-centroid scan. NaN coordinates defeat
+        // every `<` comparison; leaf 0 is the deterministic default
+        // (matching the pre-classification scan's outcome) instead of an
+        // out-of-bounds index below.
+        let global_scan = |p: Point3| -> usize {
+            let mut best_li = usize::MAX;
+            let mut best_d2 = f32::INFINITY;
+            for (li, &c) in centroids.iter().enumerate() {
+                let d2 = dist2(c, p);
+                if d2 < best_d2 {
+                    best_d2 = d2;
+                    best_li = li;
+                }
+            }
+            if best_li == usize::MAX {
+                0
+            } else {
+                best_li
+            }
+        };
         let best: Vec<usize> = self
             .exec
             .run(new_points.len(), PAR_INSERT_MIN, |_, range| {
                 let mut stack: Vec<u32> = Vec::with_capacity(64);
                 let mut out = Vec::with_capacity(range.len());
                 for &p in &new_points[range] {
-                    let mut best_li = usize::MAX;
-                    let mut best_d2 = f32::INFINITY;
-                    bvh.for_each_leaf_containing(
-                        p,
-                        &mut stack,
-                        || {},
-                        |first, _count| {
-                            let li = slot_of_first[&(first as u32)];
-                            let d2 = dist2(centroids[li], p);
-                            if d2 < best_d2 {
-                                best_d2 = d2;
-                                best_li = li;
-                            }
-                        },
-                    );
-                    if best_li == usize::MAX {
-                        for (li, &c) in centroids.iter().enumerate() {
-                            let d2 = dist2(c, p);
-                            if d2 < best_d2 {
-                                best_d2 = d2;
-                                best_li = li;
-                            }
+                    let li = if all_in_box || root_box.contains(p) {
+                        match assign_by_descent(p, &mut stack) {
+                            usize::MAX => global_scan(p),
+                            li => li,
                         }
-                    }
-                    // NaN coordinates defeat every `<` comparison; fall
-                    // back to leaf 0 (matching the old scan's default)
-                    // instead of indexing out of bounds below
-                    out.push(if best_li == usize::MAX { 0 } else { best_li });
+                    } else {
+                        global_scan(p)
+                    };
+                    out.push(li);
                 }
                 out
             })
@@ -402,6 +431,94 @@ mod tests {
                 None => base = Some(s.bvh.prim_order.clone()),
                 Some(b) => assert_eq!(&s.bvh.prim_order, b, "threads={threads}"),
             }
+        }
+    }
+
+    #[test]
+    fn insert_mixed_batch_routes_fallbacks_deterministically() {
+        // regression for the batch classification: a batch mixing clean,
+        // NaN and far-out points must bypass the all-clean short-circuit
+        // (dirty points route straight to their fallback), stay
+        // thread-count invariant, and keep every finite point findable
+        let mut rng = Pcg32::new(18);
+        let pts = prop::random_cloud(&mut rng, 400, false);
+        let mut mixed = prop::random_cloud(&mut rng, 60, false);
+        mixed.push(Point3::new(f32::NAN, 0.5, 0.5));
+        mixed.push(Point3::splat(50.0)); // far outside the root box
+        mixed.push(Point3::new(-9.0, 0.1, 0.2)); // below the root box
+        let all: Vec<Point3> = pts.iter().chain(&mixed).copied().collect();
+        let mut base: Option<Vec<u32>> = None;
+        for threads in [1usize, 2, 8] {
+            let mut c = HwCounters::new();
+            let mut s =
+                Scene::build_with_exec(pts.clone(), 0.1, &mut c, Executor::new(threads));
+            s.insert(&mixed, &mut c);
+            assert_eq!(s.len(), 463, "threads={threads}");
+            assert_eq!(s.store.len(), 463, "threads={threads}");
+            assert_eq!(c.refits, 1, "threads={threads}: mixed batch must still graft");
+            match &base {
+                None => base = Some(s.bvh.prim_order.clone()),
+                Some(b) => assert_eq!(&s.bvh.prim_order, b, "threads={threads}"),
+            }
+            // every finite point, old and new (including the far-out
+            // ones), stays discoverable by the pipeline
+            let rays: Vec<crate::geom::Ray> = all
+                .iter()
+                .enumerate()
+                .filter(|(_, p)| p.is_finite())
+                .map(|(i, &p)| crate::geom::Ray::knn(p, i as u32))
+                .collect();
+            let mut prog = crate::rt::CollectHits::new(all.len());
+            crate::rt::Pipeline::launch(&s, &rays, &mut prog, &mut c);
+            for ray in &rays {
+                let i = ray.query_id as usize;
+                assert!(
+                    prog.per_query[i].contains(&(i as u32)),
+                    "threads={threads}: point {i} lost after mixed insert"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dirty_companions_do_not_move_clean_assignments() {
+        // the batch classification is an optimization, never a semantic
+        // change: each point's leaf choice is a pure function of the
+        // shared pre-insert leaf table and the point itself, so riding
+        // NaN/far-out companions along (which disables the all-clean
+        // short-circuit) must leave every clean point's leaf unchanged
+        let mut rng = Pcg32::new(19);
+        let pts = prop::random_cloud(&mut rng, 300, false);
+        let clean = prop::random_cloud(&mut rng, 80, false);
+        let mut dirty = clean.clone();
+        dirty.push(Point3::new(f32::NAN, 0.2, 0.2));
+        dirty.push(Point3::splat(77.0));
+        let mut c = HwCounters::new();
+        let mut a = Scene::build(pts.clone(), 0.1, &mut c);
+        a.insert(&clean, &mut c);
+        let mut b = Scene::build(pts, 0.1, &mut c);
+        b.insert(&dirty, &mut c);
+        // grafts keep the node arena's topology, so leaf node indices
+        // are comparable between the twin scenes
+        let leaf_of = |s: &Scene, id: u32| -> usize {
+            s.bvh
+                .nodes
+                .iter()
+                .enumerate()
+                .filter(|(_, n)| n.is_leaf())
+                .find(|(_, n)| {
+                    let f = n.first_prim as usize;
+                    s.bvh.prim_order[f..f + n.prim_count as usize].contains(&id)
+                })
+                .map(|(i, _)| i)
+                .expect("grafted id must sit in a leaf")
+        };
+        for i in 0..clean.len() as u32 {
+            assert_eq!(
+                leaf_of(&a, 300 + i),
+                leaf_of(&b, 300 + i),
+                "clean point {i} moved because of its dirty companions"
+            );
         }
     }
 

@@ -1,0 +1,563 @@
+//! Spatial dataset sharding: exact scatter-gather kNN over per-shard
+//! indexes.
+//!
+//! The coordinator pool (PR 4) parallelizes across *routes*, but one hot
+//! route still owns one monolithic index — its batches serialize no
+//! matter the pool size. This module makes the *dataset* the unit of
+//! parallelism, the way RTNN (Zhu, PPoPP'22) partitions the point set
+//! for RT-style neighbor search: a [`Partition`] splits the data into
+//! `S` balanced Morton-range shards, [`ShardedIndex`] owns one backend
+//! index per shard behind the ordinary [`crate::index::NeighborIndex`]
+//! trait, and the coordinator spreads a sharded route's shard indexes
+//! across pool workers (see [`crate::coordinator`]) so a single hot
+//! route finally serves batches on several workers at once.
+//!
+//! # Exactness: the prune argument
+//!
+//! `knn` visits a query's shards in ascending box-distance order and
+//! skips any shard whose box distance exceeds the query's current k-th
+//! neighbor distance. That skip is exact, not approximate:
+//!
+//! - every shard box **contains** all of the shard's points (tight at
+//!   build, grown — never shrunk — by inserts), so the box distance
+//!   lower-bounds the distance to every member
+//!   ([`crate::geom::Aabb::dist2_to_point`] documents why the bound
+//!   survives f32 rounding: subtraction/multiplication are correctly
+//!   rounded, hence monotone);
+//! - a shard is skipped only when that lower bound **strictly** exceeds
+//!   the current k-th distance, so no point that could enter the top-k
+//!   (or re-break a tie at the boundary) is ever behind a skipped box;
+//! - the per-query accumulator keeps the k smallest candidates under the
+//!   total order `(distance, id)` — the same order the unsharded
+//!   backends' heap drain sorts by.
+//!
+//! `range` is pruned the same way against the query radius (a shard
+//! farther than `r` from the query cannot hold an in-radius point) and
+//! concatenates per-shard hits in shard order before the same final sort
+//! as the unsharded range path.
+//!
+//! # Determinism contract
+//!
+//! Results are **bitwise-identical across shard counts, worker counts
+//! and thread counts**, and equal to the unsharded backend:
+//!
+//! - each per-point distance is computed by the inner backend with the
+//!   crate's single canonical op order, so a (point, query) pair yields
+//!   the same f32 everywhere;
+//! - the partition, the scatter order (ascending box distance, shard id
+//!   tie-break) and the gather merge are pure functions of the data —
+//!   never of timing;
+//! - the merged top-k under `(distance, id)` coincides with the
+//!   unsharded heap's content whenever the k-th distance is unique.
+//!   Exact distance **ties at a k-th boundary** — distinct points at
+//!   bitwise-equal distance, measure-zero for continuous data — are the
+//!   one documented divergence: the unsharded heap (and each shard's
+//!   inner heap at its own fetch boundary) keeps whichever tied
+//!   candidate its leaf order pushed first, while the gather merge
+//!   breaks ties by global id. At a **fixed** shard count every
+//!   schedule is deterministic, so results stay bitwise-identical
+//!   across worker and thread counts unconditionally; across
+//!   *different* shard counts a boundary tie may select a different
+//!   tied candidate.
+//!
+//! `insert` routes each point to its owning shard through the
+//! partition's Morton cut ranges ([`Partition::route`] — deterministic
+//! for any input, including NaN/out-of-box points). Once any shard
+//! outgrows **twice its balanced share**, the whole index re-partitions
+//! and rebuilds (a rebalance, honestly counted in `build_stats`), so
+//! adversarial insert streams cannot silently degrade one shard into a
+//! monolith.
+
+mod partition;
+
+pub use partition::{Partition, ShardSet};
+
+use crate::exec::Executor;
+use crate::geom::Point3;
+use crate::index::{Backend, BuildStats, IndexBuilder, IndexConfig, NeighborIndex};
+use crate::knn::{KnnResult, Neighbor};
+use crate::rt::HwCounters;
+use crate::util::Stopwatch;
+
+/// Per-chunk minimum for the parallel per-query shard-order pass (one
+/// box distance + short sort per query).
+const PAR_ORDER_MIN: usize = 256;
+
+/// Merge `cands` into `acc`, keeping the `k` smallest under the gather
+/// total order `(distance, id)`. Shared by [`ShardedIndex::knn`] and the
+/// coordinator's scatter-gather so the two merge paths cannot drift.
+pub fn merge_topk(acc: &mut Vec<Neighbor>, cands: &[Neighbor], k: usize) {
+    if cands.is_empty() || k == 0 {
+        return;
+    }
+    acc.extend_from_slice(cands);
+    acc.sort_by(|a, b| a.dist.total_cmp(&b.dist).then(a.idx.cmp(&b.idx)));
+    acc.truncate(k);
+}
+
+/// The unsharded range path's final comparator (see
+/// `index::finish_range`), applied to a gathered concatenation.
+fn sort_range_hits(hits: &mut [Neighbor]) {
+    hits.sort_by(|a, b| {
+        a.dist
+            .partial_cmp(&b.dist)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.idx.cmp(&b.idx))
+    });
+}
+
+/// A [`NeighborIndex`] that owns one backend index per spatial shard and
+/// answers queries by exact scatter-gather. Built through
+/// [`IndexBuilder`] whenever [`IndexConfig::shards`] exceeds 1; reports
+/// the wrapped backend from [`NeighborIndex::backend`] — the sharding
+/// layer is transparent to callers.
+pub struct ShardedIndex {
+    backend: Backend,
+    cfg: IndexConfig,
+    /// Global point store: id = position, across base data and inserts.
+    data: Vec<Point3>,
+    part: Partition,
+    /// One backend index per shard, aligned with `part.shards`. Inner
+    /// indexes are built with `exclude_self = false` (shard-local
+    /// positions don't align with global query positions); the gather
+    /// applies the global positional exclusion instead.
+    inner: Vec<Box<dyn NeighborIndex>>,
+    exec: Executor,
+    /// Structure counters of inner indexes retired by rebalance rebuilds,
+    /// so `build_stats` keeps the full history.
+    retired: HwCounters,
+    rebalances: u64,
+    build_seconds: f64,
+}
+
+fn build_inner(
+    backend: Backend,
+    data: &[Point3],
+    part: &Partition,
+    cfg: &IndexConfig,
+) -> Vec<Box<dyn NeighborIndex>> {
+    let inner_cfg = IndexConfig {
+        exclude_self: false,
+        shards: 1,
+        ..cfg.clone()
+    };
+    part.shards
+        .iter()
+        .map(|set| {
+            let pts: Vec<Point3> = set.ids.iter().map(|&i| data[i as usize]).collect();
+            IndexBuilder::new(backend).config(inner_cfg.clone()).build(pts)
+        })
+        .collect()
+}
+
+impl ShardedIndex {
+    pub fn new(backend: Backend, data: Vec<Point3>, cfg: IndexConfig) -> Self {
+        let sw = Stopwatch::start();
+        let exec = Executor::new(cfg.threads);
+        let part = Partition::build(&data, cfg.shards.max(1), &exec);
+        let inner = build_inner(backend, &data, &part, &cfg);
+        ShardedIndex {
+            backend,
+            cfg,
+            data,
+            part,
+            inner,
+            exec,
+            retired: HwCounters::new(),
+            rebalances: 0,
+            build_seconds: sw.elapsed_secs(),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.inner.len()
+    }
+
+    /// Rebalance rebuilds performed so far (insert-overflow triggered).
+    pub fn rebalances(&self) -> u64 {
+        self.rebalances
+    }
+
+    /// Current shard sizes (for telemetry and tests).
+    pub fn shard_sizes(&self) -> Vec<usize> {
+        self.part.sizes()
+    }
+
+    /// Per-query shard visit order: ascending box distance, shard id
+    /// tie-break, empty shards dropped. Sharded across the exec engine
+    /// (per-query work is independent; ordered concat).
+    fn shard_orders(&self, queries: &[Point3]) -> Vec<Vec<(f32, u32)>> {
+        let boxes: Vec<(u32, crate::geom::Aabb)> = self
+            .part
+            .shards
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| !s.ids.is_empty())
+            .map(|(i, s)| (i as u32, s.aabb))
+            .collect();
+        let exec = self.exec;
+        let parts = exec.run(queries.len(), PAR_ORDER_MIN, |_, range| {
+            range
+                .map(|qi| {
+                    let q = queries[qi];
+                    let mut ord: Vec<(f32, u32)> = boxes
+                        .iter()
+                        .map(|&(s, b)| (b.dist2_to_point(q).sqrt(), s))
+                        .collect();
+                    ord.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+                    ord
+                })
+                .collect::<Vec<_>>()
+        });
+        parts.concat()
+    }
+}
+
+impl NeighborIndex for ShardedIndex {
+    fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Exact scatter-gather kNN: fan each query to its shards in
+    /// ascending box-distance order, merge per-shard top-k lists, skip
+    /// any shard whose box distance strictly exceeds the query's current
+    /// k-th distance (see the module docs for why the skip is exact).
+    ///
+    /// The fan-out over shards is ordered (the prune needs the closest
+    /// shards first) and therefore serial per round; each per-shard
+    /// sub-query still fans its launches across the exec engine's
+    /// threads. Cross-shard parallelism is the coordinator's job.
+    fn knn(&mut self, queries: &[Point3], k: usize) -> KnnResult {
+        let wall = Stopwatch::start();
+        let mut result = KnnResult::new(queries.len());
+        if self.data.is_empty() || queries.is_empty() || k == 0 {
+            result.wall_seconds = wall.elapsed_secs();
+            return result;
+        }
+        let orders = self.shard_orders(queries);
+        // with global self-exclusion one shard slot may be burnt on the
+        // query's own point; fetch one extra so the k-th survivor is
+        // always reachable
+        let fetch_k = k + usize::from(self.cfg.exclude_self);
+        let mut acc: Vec<Vec<Neighbor>> = vec![Vec::new(); queries.len()];
+        let mut counters = HwCounters::new();
+        let mut launches = 0u64;
+        let rounds = orders.iter().map(|o| o.len()).max().unwrap_or(0);
+        for round in 0..rounds {
+            // group the queries that still need their `round`-th shard;
+            // the prune consults the accumulator as of the previous
+            // round, so the decision is schedule-independent
+            let mut by_shard: Vec<Vec<u32>> = vec![Vec::new(); self.inner.len()];
+            for (qi, ord) in orders.iter().enumerate() {
+                if let Some(&(box_dist, s)) = ord.get(round) {
+                    let bound = if acc[qi].len() >= k {
+                        acc[qi][k - 1].dist
+                    } else {
+                        f32::INFINITY
+                    };
+                    if box_dist > bound {
+                        continue; // prune: the box cannot improve the top-k
+                    }
+                    by_shard[s as usize].push(qi as u32);
+                }
+            }
+            for s in 0..self.inner.len() {
+                if by_shard[s].is_empty() {
+                    continue;
+                }
+                let qids = &by_shard[s];
+                let sub: Vec<Point3> = qids.iter().map(|&qi| queries[qi as usize]).collect();
+                let res = self.inner[s].knn(&sub, fetch_k);
+                counters.add(&res.counters);
+                launches += res.launches;
+                let ids = &self.part.shards[s].ids;
+                for (j, &qi) in qids.iter().enumerate() {
+                    let qg = qi as usize;
+                    let remapped: Vec<Neighbor> = res.neighbors[j]
+                        .iter()
+                        .map(|n| Neighbor {
+                            idx: ids[n.idx as usize],
+                            dist: n.dist,
+                        })
+                        .filter(|n| !(self.cfg.exclude_self && n.idx as usize == qg))
+                        .collect();
+                    merge_topk(&mut acc[qg], &remapped, k);
+                }
+            }
+        }
+        result.neighbors = acc;
+        result.counters = counters;
+        result.launches = launches;
+        result.wall_seconds = wall.elapsed_secs();
+        result.finalize_sim_time(&self.cfg.cost_model);
+        result
+    }
+
+    /// Range query: every shard within `radius` of the query contributes
+    /// its hits (a strictly farther box cannot hold an in-radius point —
+    /// compared in squared space against the same `radius²` threshold
+    /// the traversal uses); per-shard results are concatenated in shard
+    /// order, then sorted with the unsharded path's comparator.
+    fn range(&mut self, queries: &[Point3], radius: f32) -> KnnResult {
+        let wall = Stopwatch::start();
+        let mut result = KnnResult::new(queries.len());
+        if self.data.is_empty() || queries.is_empty() {
+            result.wall_seconds = wall.elapsed_secs();
+            return result;
+        }
+        let r2 = radius * radius;
+        let mut counters = HwCounters::new();
+        let mut launches = 0u64;
+        let mut acc: Vec<Vec<Neighbor>> = vec![Vec::new(); queries.len()];
+        for s in 0..self.inner.len() {
+            if self.part.shards[s].ids.is_empty() {
+                continue;
+            }
+            let sbox = self.part.shards[s].aabb;
+            let qids: Vec<u32> = (0..queries.len() as u32)
+                .filter(|&qi| sbox.dist2_to_point(queries[qi as usize]) <= r2)
+                .collect();
+            if qids.is_empty() {
+                continue;
+            }
+            let sub: Vec<Point3> = qids.iter().map(|&qi| queries[qi as usize]).collect();
+            let res = self.inner[s].range(&sub, radius);
+            counters.add(&res.counters);
+            launches += res.launches;
+            let ids = &self.part.shards[s].ids;
+            for (j, &qi) in qids.iter().enumerate() {
+                let qg = qi as usize;
+                acc[qg].extend(
+                    res.neighbors[j]
+                        .iter()
+                        .map(|n| Neighbor {
+                            idx: ids[n.idx as usize],
+                            dist: n.dist,
+                        })
+                        .filter(|n| !(self.cfg.exclude_self && n.idx as usize == qg)),
+                );
+            }
+        }
+        let exec = self.exec;
+        exec.for_each_chunk(&mut acc, PAR_ORDER_MIN, |_, chunk| {
+            for hits in chunk.iter_mut() {
+                sort_range_hits(hits);
+            }
+        });
+        result.neighbors = acc;
+        result.counters = counters;
+        result.launches = launches;
+        result.wall_seconds = wall.elapsed_secs();
+        result.finalize_sim_time(&self.cfg.cost_model);
+        result
+    }
+
+    /// Route each point to its owning shard (Morton cut containment) and
+    /// insert it there; global ids stay positional across the whole
+    /// index. A shard outgrowing twice its balanced share triggers a
+    /// rebalance: full re-partition + per-shard rebuild.
+    fn insert(&mut self, points: &[Point3]) {
+        if points.is_empty() {
+            return;
+        }
+        let sw = Stopwatch::start();
+        let grouped = self.part.group_routed(points, self.data.len());
+        self.data.extend_from_slice(points);
+        for (s, (ids, pts)) in grouped.into_iter().enumerate() {
+            if pts.is_empty() {
+                continue;
+            }
+            self.inner[s].insert(&pts);
+            let set = &mut self.part.shards[s];
+            for &p in &pts {
+                set.aabb.grow(p);
+            }
+            set.ids.extend(ids);
+        }
+        if self.part.overflowed(self.data.len()) {
+            for idx in &self.inner {
+                self.retired.add(&idx.build_stats().counters);
+            }
+            self.part = Partition::build(&self.data, self.inner.len(), &self.exec);
+            self.inner = build_inner(self.backend, &self.data, &self.part, &self.cfg);
+            self.rebalances += 1;
+        }
+        self.build_seconds += sw.elapsed_secs();
+    }
+
+    fn build_stats(&self) -> BuildStats {
+        let mut counters = self.retired;
+        for idx in &self.inner {
+            counters.add(&idx.build_stats().counters);
+        }
+        BuildStats {
+            backend: self.backend,
+            n_points: self.data.len(),
+            counters,
+            build_seconds: self.build_seconds,
+            start_radius: None,
+            radius_schedule: Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::DatasetKind;
+    use crate::knn::kdtree::KdTree;
+
+    fn sharded(backend: Backend, data: Vec<Point3>, shards: usize) -> ShardedIndex {
+        ShardedIndex::new(
+            backend,
+            data,
+            IndexConfig {
+                shards,
+                exclude_self: false,
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn sharded_knn_matches_kdtree_oracle() {
+        let ds = DatasetKind::Taxi.generate(700, 201);
+        let tree = KdTree::build(&ds.points);
+        for s in [1usize, 3, 7] {
+            let mut idx = sharded(Backend::TrueKnn, ds.points.clone(), s);
+            assert_eq!(idx.shard_count(), s);
+            assert_eq!(idx.len(), 700);
+            let res = idx.knn(&ds.points[..64], 5);
+            for (qi, got) in res.neighbors.iter().enumerate() {
+                let want = tree.knn(ds.points[qi], 5);
+                assert_eq!(got.len(), want.len(), "s={s} q={qi}");
+                for (g, w) in got.iter().zip(&want) {
+                    assert!((g.dist - w.dist).abs() < 1e-5, "s={s} q={qi}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_exclude_self_drops_the_query_point() {
+        let ds = DatasetKind::Uniform.generate(300, 202);
+        let mut idx = ShardedIndex::new(
+            Backend::TrueKnn,
+            ds.points.clone(),
+            IndexConfig {
+                shards: 4,
+                exclude_self: true,
+                ..Default::default()
+            },
+        );
+        let tree = KdTree::build(&ds.points);
+        let res = idx.knn(&ds.points, 4);
+        for (qi, got) in res.neighbors.iter().enumerate() {
+            assert!(got.iter().all(|n| n.idx as usize != qi), "q={qi} kept self");
+            let want = tree.knn_excluding(ds.points[qi], 4, Some(qi as u32));
+            assert_eq!(got.len(), want.len(), "q={qi}");
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g.dist - w.dist).abs() < 1e-5, "q={qi}");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_range_matches_unsharded_bitwise() {
+        let ds = DatasetKind::Iono.generate(500, 203);
+        let r = 0.2f32;
+        let mut whole = sharded(Backend::FixedRadius, ds.points.clone(), 1);
+        let want = whole.range(&ds.points[..40], r);
+        let mut split = sharded(Backend::FixedRadius, ds.points.clone(), 5);
+        let got = split.range(&ds.points[..40], r);
+        for (qi, (g, w)) in got.neighbors.iter().zip(&want.neighbors).enumerate() {
+            let gb: Vec<(u32, u32)> = g.iter().map(|n| (n.idx, n.dist.to_bits())).collect();
+            let wb: Vec<(u32, u32)> = w.iter().map(|n| (n.idx, n.dist.to_bits())).collect();
+            assert_eq!(gb, wb, "q={qi}");
+        }
+    }
+
+    #[test]
+    fn insert_routes_and_rebalance_rebuilds() {
+        let ds = DatasetKind::Uniform.generate(400, 204);
+        let mut idx = sharded(Backend::TrueKnn, ds.points.clone(), 4);
+        let builds_at_start = idx.build_stats().counters.builds;
+        assert_eq!(builds_at_start, 4, "one build per shard");
+
+        // a light scattered insert: routed, no rebalance
+        let extra = DatasetKind::Uniform.generate(40, 205).points;
+        idx.insert(&extra);
+        assert_eq!(idx.len(), 440);
+        assert_eq!(idx.rebalances(), 0);
+        assert_eq!(idx.shard_sizes().iter().sum::<usize>(), 440);
+
+        // a clustered flood aimed at one corner overflows its shard
+        let cluster: Vec<Point3> = (0..400)
+            .map(|i| Point3::new(1e-3 + i as f32 * 1e-6, 1e-3, 1e-3))
+            .collect();
+        idx.insert(&cluster);
+        assert_eq!(idx.rebalances(), 1, "overflow must trigger a rebalance");
+        let stats = idx.build_stats();
+        assert!(
+            stats.counters.builds > builds_at_start,
+            "rebalance builds must accumulate, not reset"
+        );
+        let sizes = idx.shard_sizes();
+        assert_eq!(sizes.iter().sum::<usize>(), 840);
+        let balanced = 840usize.div_ceil(4);
+        assert!(
+            sizes.iter().all(|&n| n <= 2 * balanced),
+            "rebalance left an overflowing shard: {sizes:?}"
+        );
+
+        // everything stays findable, exactly
+        let all: Vec<Point3> = ds.points.iter().chain(&extra).chain(&cluster).copied().collect();
+        let tree = KdTree::build(&all);
+        let res = idx.knn(&all[..50], 3);
+        for (qi, got) in res.neighbors.iter().enumerate() {
+            let want = tree.knn(all[qi], 3);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g.dist - w.dist).abs() < 1e-5, "q={qi}");
+            }
+        }
+    }
+
+    #[test]
+    fn k_larger_than_any_shard_still_gathers_everything() {
+        let ds = DatasetKind::Uniform.generate(60, 206);
+        let mut idx = sharded(Backend::TrueKnn, ds.points.clone(), 7);
+        let res = idx.knn(&ds.points[..5], 25);
+        for nb in &res.neighbors {
+            assert_eq!(nb.len(), 25, "k spanning several shards must fill");
+        }
+        // k > n caps at n
+        let res = idx.knn(&ds.points[..2], 100);
+        for nb in &res.neighbors {
+            assert_eq!(nb.len(), 60);
+        }
+    }
+
+    #[test]
+    fn degenerate_inputs_are_safe() {
+        let mut empty = sharded(Backend::TrueKnn, Vec::new(), 3);
+        let res = empty.knn(&[Point3::ZERO], 3);
+        assert!(res.neighbors[0].is_empty());
+        let res = empty.range(&[Point3::ZERO], 0.5);
+        assert!(res.neighbors[0].is_empty());
+        empty.insert(&[Point3::splat(0.25)]);
+        assert_eq!(empty.len(), 1);
+        let res = empty.knn(&[Point3::ZERO], 3);
+        assert_eq!(res.neighbors[0].len(), 1);
+
+        let ds = DatasetKind::Uniform.generate(100, 207);
+        let mut idx = sharded(Backend::TrueKnn, ds.points.clone(), 2);
+        let res = idx.knn(&[], 3);
+        assert!(res.neighbors.is_empty());
+        let res = idx.knn(&ds.points[..4], 0);
+        assert!(res.neighbors.iter().all(|n| n.is_empty()));
+    }
+}

@@ -1,0 +1,234 @@
+//! Spatial dataset partitioner: balanced Morton-range cuts.
+//!
+//! A [`Partition`] splits a point set into `S` shards by sorting the
+//! canonical [`crate::store::morton3`] codes (through the parallel radix
+//! sort) and cutting the sorted sequence into `S` contiguous runs with
+//! balanced primitive counts — the same balanced-cut arithmetic the exec
+//! engine uses for work sharding. Each shard records its member ids (in
+//! Morton order) and a tight AABB over its points.
+//!
+//! Invariants the scatter-gather layer relies on:
+//!
+//! - **Pure function.** The partition depends only on `(points, S)` —
+//!   never on thread count or timing — so independent workers compute
+//!   identical partitions from the same data without coordination.
+//! - **Cover + disjoint.** Every input id appears in exactly one shard.
+//! - **Tight boxes.** `shards[s].aabb` contains every point of shard `s`
+//!   (grown, never shrunk, by later inserts), so a query's distance to
+//!   the box lower-bounds its distance to every member — the exactness
+//!   basis of the kNN prune.
+//! - **Deterministic routing.** [`Partition::route`] maps any point
+//!   (including NaN / out-of-box ones, whose Morton codes clamp into
+//!   range) to exactly one shard via the cut code ranges, so concurrent
+//!   replicas route an insert stream identically.
+
+use crate::exec::Executor;
+use crate::geom::{Aabb, Point3};
+use crate::store::{morton3, sort_morton_keys};
+
+/// One shard of a [`Partition`]: member ids (dataset indices) plus the
+/// tight bounding box over the members.
+#[derive(Clone, Debug)]
+pub struct ShardSet {
+    /// Global (dataset) ids of the shard's points — Morton order at
+    /// build time, insert order appended after.
+    pub ids: Vec<u32>,
+    /// Tight box over the shard's points; grown in place by inserts.
+    pub aabb: Aabb,
+}
+
+/// Balanced Morton-range partition of a dataset into `S` shards.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    /// Box the Morton codes are normalized over (the build-time data
+    /// bounds; routing clamps later points into it).
+    bb: Aabb,
+    /// `cut_lo[s]` = lowest Morton code routed to shard `s`
+    /// (`cut_lo[0] == 0`; non-decreasing). Shards left empty by `n < S`
+    /// sit at the tail with an unreachable sentinel cut.
+    cut_lo: Vec<u32>,
+    pub shards: Vec<ShardSet>,
+}
+
+impl Partition {
+    /// Partition `points` into `shards` balanced Morton runs. Empty
+    /// datasets and `shards > n` are legal (trailing shards come back
+    /// empty).
+    pub fn build(points: &[Point3], shards: usize, exec: &Executor) -> Partition {
+        let s_count = shards.max(1);
+        let mut bb = Aabb::EMPTY;
+        for &p in points {
+            // Point3::min/max lean on f32::min/max, which ignore NaN
+            // operands, so degenerate points cannot poison the bounds
+            bb.grow(p);
+        }
+        let mut keys: Vec<(u32, u32)> = points
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| (morton3(p, &bb), i as u32))
+            .collect();
+        sort_morton_keys(&mut keys, exec);
+
+        // balanced contiguous cuts: same arithmetic as the exec engine's
+        // shard_ranges, so counts differ by at most one
+        let base = points.len() / s_count;
+        let rem = points.len() % s_count;
+        let mut shard_sets = Vec::with_capacity(s_count);
+        let mut cut_lo = Vec::with_capacity(s_count);
+        let mut start = 0usize;
+        for s in 0..s_count {
+            let len = base + usize::from(s < rem);
+            let run = &keys[start..start + len];
+            cut_lo.push(if s == 0 {
+                0
+            } else {
+                // empty runs (n < S) get an unreachable sentinel: codes
+                // are 30-bit, so u32::MAX routes nothing their way
+                run.first().map(|&(c, _)| c).unwrap_or(u32::MAX)
+            });
+            let ids: Vec<u32> = run.iter().map(|&(_, i)| i).collect();
+            let mut aabb = Aabb::EMPTY;
+            for &i in &ids {
+                aabb.grow(points[i as usize]);
+            }
+            shard_sets.push(ShardSet { ids, aabb });
+            start += len;
+        }
+        debug_assert_eq!(start, points.len());
+        Partition {
+            bb,
+            cut_lo,
+            shards: shard_sets,
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Current shard sizes (build members + routed inserts).
+    pub fn sizes(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.ids.len()).collect()
+    }
+
+    /// The shard owning `p`: the one whose Morton code range contains
+    /// `p`'s code (computed over the build-time bounds; out-of-box
+    /// coordinates clamp, NaN axes read as 0 — always defined, always
+    /// deterministic).
+    pub fn route(&self, p: Point3) -> usize {
+        let code = morton3(p, &self.bb);
+        // last shard whose cut_lo <= code; cut_lo[0] == 0 makes the
+        // result always >= 1 before the -1
+        self.cut_lo.partition_point(|&c| c <= code).saturating_sub(1)
+    }
+
+    /// Group an insert batch by owning shard, assigning global ids from
+    /// `first_id` in input order. This is THE insert-routing step —
+    /// shared by [`crate::shard::ShardedIndex`] and every coordinator
+    /// replica, so shard membership cannot fork between them.
+    pub fn group_routed(
+        &self,
+        points: &[Point3],
+        first_id: usize,
+    ) -> Vec<(Vec<u32>, Vec<Point3>)> {
+        let mut grouped: Vec<(Vec<u32>, Vec<Point3>)> =
+            vec![(Vec::new(), Vec::new()); self.shards.len()];
+        for (i, &p) in points.iter().enumerate() {
+            let s = self.route(p);
+            grouped[s].0.push((first_id + i) as u32);
+            grouped[s].1.push(p);
+        }
+        grouped
+    }
+
+    /// The rebalance predicate, likewise shared by every consumer: true
+    /// once any shard holds more than **twice its balanced share** of
+    /// `total` points. A pure function of the partition's sizes, so
+    /// independent replicas that applied the same insert stream fire
+    /// their rebuilds at the same barrier.
+    pub fn overflowed(&self, total: usize) -> bool {
+        let balanced = total.div_ceil(self.shards.len().max(1));
+        self.shards.iter().any(|s| s.ids.len() > 2 * balanced)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Pcg32};
+
+    #[test]
+    fn partition_covers_disjointly_with_balanced_counts() {
+        let mut rng = Pcg32::new(61);
+        let pts = prop::random_cloud(&mut rng, 1_003, false);
+        for s_count in [1usize, 2, 7, 16] {
+            let part = Partition::build(&pts, s_count, &Executor::new(4));
+            assert_eq!(part.shard_count(), s_count);
+            let mut seen = vec![false; pts.len()];
+            for set in &part.shards {
+                for &i in &set.ids {
+                    assert!(!seen[i as usize], "id {i} in two shards");
+                    seen[i as usize] = true;
+                    assert!(set.aabb.contains(pts[i as usize]), "box not tight");
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "some id unassigned");
+            let min = part.shards.iter().map(|s| s.ids.len()).min().unwrap();
+            let max = part.shards.iter().map(|s| s.ids.len()).max().unwrap();
+            assert!(max - min <= 1, "unbalanced cuts: {min}..{max}");
+        }
+    }
+
+    #[test]
+    fn partition_is_thread_count_invariant() {
+        let mut rng = Pcg32::new(62);
+        let pts = prop::random_cloud(&mut rng, 20_000, false);
+        let base = Partition::build(&pts, 5, &Executor::new(1));
+        for threads in [2usize, 8] {
+            let part = Partition::build(&pts, 5, &Executor::new(threads));
+            for (a, b) in base.shards.iter().zip(&part.shards) {
+                assert_eq!(a.ids, b.ids, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn route_agrees_with_membership_ranges() {
+        // every build point routes to a shard whose code range contains
+        // its code; boundary duplicates may straddle the cut, so check
+        // the code range rather than exact membership
+        let mut rng = Pcg32::new(63);
+        let pts = prop::random_cloud(&mut rng, 600, false);
+        let part = Partition::build(&pts, 7, &Executor::new(2));
+        for &p in &pts {
+            let s = part.route(p);
+            assert!(s < 7);
+            let code = morton3(p, &part.bb);
+            assert!(code >= part.cut_lo[s]);
+            if s + 1 < part.cut_lo.len() {
+                assert!(code <= part.cut_lo[s + 1]);
+            }
+        }
+        // degenerate points still route deterministically
+        let nan = Point3::new(f32::NAN, 0.5, 0.5);
+        assert_eq!(part.route(nan), part.route(nan));
+        let far = Point3::splat(1e9);
+        assert!(part.route(far) < 7);
+    }
+
+    #[test]
+    fn more_shards_than_points_leaves_trailing_shards_empty() {
+        let pts = vec![Point3::ZERO, Point3::splat(0.5), Point3::splat(1.0)];
+        let part = Partition::build(&pts, 5, &Executor::new(2));
+        let sizes = part.sizes();
+        assert_eq!(sizes.iter().sum::<usize>(), 3);
+        assert_eq!(&sizes[3..], &[0, 0], "empties must trail");
+        // routing never lands on an empty shard
+        for &p in &pts {
+            assert!(!part.shards[part.route(p)].ids.is_empty());
+        }
+        let empty = Partition::build(&[], 3, &Executor::new(2));
+        assert_eq!(empty.sizes(), vec![0, 0, 0]);
+        assert_eq!(empty.route(Point3::splat(0.2)), 0);
+    }
+}

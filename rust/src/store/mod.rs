@@ -19,7 +19,13 @@
 //! RTNN-style query reordering and the launch engine's query-cohort
 //! scheduling ([`crate::rt::Pipeline`]) both sort queries along it so a
 //! cohort of rays walks one compact BVH subtree while it is hot in
-//! cache.
+//! cache. The key sort itself is [`sort_morton_keys`], a parallel stable
+//! radix sort over the 30-bit codes shared with the spatial shard
+//! partitioner ([`crate::shard`]).
+
+mod radix;
+
+pub use radix::sort_morton_keys;
 
 use crate::geom::{Aabb, Point3};
 

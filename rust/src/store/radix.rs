@@ -1,0 +1,229 @@
+//! Parallel stable radix sort for the 30-bit Morton cohort keys.
+//!
+//! The cohort scheduler ([`crate::rt::Pipeline`]) and the spatial shard
+//! partitioner ([`crate::shard::Partition`]) both sort `(code, index)`
+//! pairs along the Z-order curve before cutting contiguous runs. That
+//! sort was the ROADMAP-named serial fraction of every parallel launch
+//! (one `O(n log n)` comparison sort on one core per launch); this
+//! module replaces it with a least-significant-digit radix sort over the
+//! 30-bit [`super::morton3`] codes, parallelized across the
+//! [`crate::exec`] engine in both of its phases:
+//!
+//! 1. **Count + local partition.** The input is cut into contiguous
+//!    chunks; each worker counting-sorts its chunk by the current
+//!    10-bit digit into a chunk-local buffer (stable, one sequential
+//!    pass).
+//! 2. **Scatter.** Output positions in (digit, chunk) order are exactly
+//!    sequential, so the output buffer is split into contiguous
+//!    bucket-group slices (one per worker) and each worker memcpy-
+//!    concatenates its buckets' per-chunk segments — disjoint writes,
+//!    no atomics, no unsafe.
+//!
+//! Three 10-bit passes cover the 30 Morton bits (one pass per
+//! interleaved axis resolution). LSD radix is stable and chunks are
+//! processed in input order, so equal codes keep their input order;
+//! with the ascending indices both callers supply, the result is
+//! **identical** to `sort_unstable()` on the `(code, index)` tuples —
+//! bitwise, at any thread count — which is what keeps the cohort
+//! scheduler's bitwise-transparency contract intact.
+//!
+//! Below [`RADIX_MIN_KEYS`] (or on a single-thread executor) the
+//! comparison sort wins on constant factors and runs instead — the
+//! small-n fallback.
+
+use crate::exec::Executor;
+
+const DIGIT_BITS: usize = 10;
+const BUCKETS: usize = 1 << DIGIT_BITS;
+/// 3 × 10-bit passes cover the 30-bit `morton3` code.
+const PASSES: usize = 3;
+/// Below this many keys the comparison sort's constant factors win over
+/// three histogram passes.
+const RADIX_MIN_KEYS: usize = 1 << 13;
+/// Minimum keys per counting chunk (keeps per-chunk histograms amortized).
+const RADIX_MIN_CHUNK: usize = 1 << 12;
+
+/// Sort `(code, index)` pairs ascending by code, equal codes keeping
+/// their input order. **Precondition:** codes fit in 30 bits (always
+/// true for [`super::morton3`] output). Callers that build the pairs
+/// with ascending indices (both in-crate callers do) get exactly the
+/// `(code, index)` lexicographic order of `sort_unstable()`, at any
+/// thread count.
+pub fn sort_morton_keys(keys: &mut Vec<(u32, u32)>, exec: &Executor) {
+    if keys.len() < RADIX_MIN_KEYS || exec.threads() == 1 {
+        // small-n / serial fallback: the comparison sort on the tuples
+        // (indices are distinct, so this is the same total order)
+        keys.sort_unstable();
+        return;
+    }
+    let n = keys.len();
+    let mut src = std::mem::take(keys);
+    let mut dst = vec![(0u32, 0u32); n];
+    for pass in 0..PASSES {
+        let shift = pass * DIGIT_BITS;
+        // Phase 1: each chunk counting-sorts itself by the digit.
+        // parts[c] = (chunk stably partitioned by digit, per-bucket
+        // start offsets within the chunk, len BUCKETS + 1).
+        let src_ref = &src;
+        let parts: Vec<(Vec<(u32, u32)>, Vec<u32>)> = exec.run(n, RADIX_MIN_CHUNK, |_, r| {
+            let chunk = &src_ref[r];
+            let mut starts = vec![0u32; BUCKETS + 1];
+            for &(code, _) in chunk {
+                starts[(((code >> shift) as usize) & (BUCKETS - 1)) + 1] += 1;
+            }
+            for b in 0..BUCKETS {
+                starts[b + 1] += starts[b];
+            }
+            let mut cursors: Vec<u32> = starts[..BUCKETS].to_vec();
+            let mut out = vec![(0u32, 0u32); chunk.len()];
+            for &kv in chunk {
+                let b = ((kv.0 >> shift) as usize) & (BUCKETS - 1);
+                out[cursors[b] as usize] = kv;
+                cursors[b] += 1;
+            }
+            (out, starts)
+        });
+
+        // Bucket totals across chunks: bucket b occupies one contiguous
+        // output range, laid out bucket-major then chunk-minor.
+        let mut bucket_total = vec![0usize; BUCKETS];
+        for (_, starts) in &parts {
+            for (b, total) in bucket_total.iter_mut().enumerate() {
+                *total += (starts[b + 1] - starts[b]) as usize;
+            }
+        }
+
+        // Phase 2: group contiguous buckets into ≈ n/threads output
+        // slices and copy each group's per-chunk segments sequentially.
+        // Group boundaries depend only on (totals, thread count), and
+        // what lands where depends only on the input — never on timing.
+        let target = n.div_ceil(exec.threads());
+        let mut groups: Vec<std::ops::Range<usize>> = Vec::new();
+        let mut gstart = 0usize;
+        let mut acc = 0usize;
+        for (b, total) in bucket_total.iter().enumerate() {
+            acc += total;
+            if acc >= target && b + 1 < BUCKETS {
+                groups.push(gstart..b + 1);
+                gstart = b + 1;
+                acc = 0;
+            }
+        }
+        groups.push(gstart..BUCKETS);
+
+        std::thread::scope(|s| {
+            let parts_ref = &parts;
+            let mut rest: &mut [(u32, u32)] = &mut dst;
+            let mut first: Option<(std::ops::Range<usize>, &mut [(u32, u32)])> = None;
+            for g in groups {
+                let glen: usize = bucket_total[g.clone()].iter().sum();
+                let (slice, tail) = std::mem::take(&mut rest).split_at_mut(glen);
+                rest = tail;
+                if first.is_none() {
+                    // group 0 runs on the calling thread, below
+                    first = Some((g, slice));
+                } else {
+                    s.spawn(move || copy_bucket_group(parts_ref, g, slice));
+                }
+            }
+            if let Some((g, slice)) = first {
+                copy_bucket_group(parts_ref, g, slice);
+            }
+        });
+        std::mem::swap(&mut src, &mut dst);
+    }
+    // PASSES is odd or even — either way the last swap left the sorted
+    // data in `src`.
+    *keys = src;
+}
+
+/// Copy buckets `buckets` of every chunk into `out`, chunk order within
+/// each bucket — the stable concatenation of phase 2. `out` is exactly
+/// the contiguous output range those buckets occupy.
+fn copy_bucket_group(
+    parts: &[(Vec<(u32, u32)>, Vec<u32>)],
+    buckets: std::ops::Range<usize>,
+    out: &mut [(u32, u32)],
+) {
+    let mut w = 0usize;
+    for b in buckets {
+        for (chunk, starts) in parts {
+            let seg = &chunk[starts[b] as usize..starts[b + 1] as usize];
+            out[w..w + seg.len()].copy_from_slice(seg);
+            w += seg.len();
+        }
+    }
+    debug_assert_eq!(w, out.len());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn random_keys(n: usize, code_bits: u32, seed: u64) -> Vec<(u32, u32)> {
+        let mut rng = Pcg32::new(seed);
+        (0..n as u32)
+            .map(|i| (rng.below(1u32 << code_bits), i))
+            .collect()
+    }
+
+    #[test]
+    fn radix_matches_comparison_sort_with_duplicates() {
+        // few distinct codes force heavy duplication: stability must
+        // reproduce the (code, index) order exactly
+        for &bits in &[4u32, 12, 30] {
+            let keys = random_keys(20_000, bits, 7 + bits as u64);
+            let mut want = keys.clone();
+            want.sort_unstable();
+            for threads in [2usize, 3, 8] {
+                let mut got = keys.clone();
+                sort_morton_keys(&mut got, &Executor::new(threads));
+                assert_eq!(got, want, "bits={bits} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn small_inputs_take_the_fallback_and_still_sort() {
+        let mut keys = random_keys(500, 30, 3);
+        let mut want = keys.clone();
+        want.sort_unstable();
+        sort_morton_keys(&mut keys, &Executor::new(8));
+        assert_eq!(keys, want);
+    }
+
+    #[test]
+    fn serial_executor_takes_the_fallback() {
+        let mut keys = random_keys(50_000, 30, 4);
+        let mut want = keys.clone();
+        want.sort_unstable();
+        sort_morton_keys(&mut keys, &Executor::serial());
+        assert_eq!(keys, want);
+    }
+
+    #[test]
+    fn empty_and_degenerate_inputs_are_safe() {
+        let mut empty: Vec<(u32, u32)> = Vec::new();
+        sort_morton_keys(&mut empty, &Executor::new(4));
+        assert!(empty.is_empty());
+
+        // all-equal codes: pure stability check through the radix path
+        let mut same: Vec<(u32, u32)> = (0..30_000u32).map(|i| (42, i)).collect();
+        let want = same.clone();
+        sort_morton_keys(&mut same, &Executor::new(4));
+        assert_eq!(same, want, "equal codes must keep input order");
+    }
+
+    #[test]
+    fn thread_count_never_changes_the_result() {
+        let keys = random_keys(60_000, 30, 11);
+        let mut base = keys.clone();
+        sort_morton_keys(&mut base, &Executor::new(2));
+        for threads in [3usize, 5, 8, 16] {
+            let mut got = keys.clone();
+            sort_morton_keys(&mut got, &Executor::new(threads));
+            assert_eq!(got, base, "threads={threads}");
+        }
+    }
+}

@@ -251,6 +251,153 @@ fn shell_requery_drops_heap_pushes_and_stays_exact() {
 }
 
 #[test]
+fn sharded_index_matrix_is_exact_and_bitwise_deterministic() {
+    // The PR5 tentpole contract. A ShardedIndex must:
+    //  (a) answer exactly like the kd-tree oracle,
+    //  (b) return results bitwise-identical across the FULL matrix
+    //      shards {1, 2, 7} × threads {1, 2, 8} × cohort {off, on} —
+    //      the shards=1 leg is the plain unsharded backend, so this
+    //      also pins scatter-gather to the unsharded result bit for
+    //      bit,
+    //  (c) keep counters bitwise-identical across threads × cohort
+    //      within each shard count (different shard counts legitimately
+    //      traverse different structures),
+    // including post-insert queries and a rebalance-triggered rebuild.
+    use trueknn::geom::Point3;
+
+    let ds = DatasetKind::Taxi.generate(900, 140);
+    let extra = DatasetKind::Taxi.generate(120, 141).points;
+    // a clustered flood aimed at one Morton corner (in-plane: the taxi
+    // analog is 2D): overflows its shard at the higher shard counts and
+    // triggers the rebalance rebuild
+    let flood: Vec<Point3> = (0..600)
+        .map(|i| Point3::new2(1e-3 + i as f32 * 1e-6, 1e-3))
+        .collect();
+    let all: Vec<Point3> = ds.points.iter().chain(&extra).copied().collect();
+    let all2: Vec<Point3> = all.iter().chain(&flood).copied().collect();
+
+    // (results signature, counters signature) over four query legs:
+    // knn, range, post-insert knn, post-rebalance knn
+    let signature = |index: &mut dyn NeighborIndex| {
+        let knn = index.knn(&ds.points, 5);
+        let range = index.range(&ds.points[..200], 0.02);
+        index.insert(&extra);
+        let post_insert = index.knn(&all, 5);
+        index.insert(&flood);
+        let post_rebalance = index.knn(&all2[..300], 5);
+        let mut flat: Vec<(u32, u32)> = Vec::new();
+        let mut counters = Vec::new();
+        for res in [&knn, &range, &post_insert, &post_rebalance] {
+            flat.extend(
+                res.neighbors
+                    .iter()
+                    .flat_map(|q| q.iter().map(|n| (n.idx, n.dist.to_bits()))),
+            );
+            counters.push((
+                res.counters.rays,
+                res.counters.aabb_tests,
+                res.counters.prim_tests,
+                res.counters.hits,
+                res.counters.heap_pushes,
+                res.counters.refits,
+                res.counters.refit_nodes,
+                res.counters.builds,
+            ));
+        }
+        (flat, counters)
+    };
+
+    let tree = KdTree::build(&ds.points);
+    let tree_all2 = KdTree::build(&all2);
+
+    let mut results_baseline: Option<Vec<(u32, u32)>> = None;
+    for shards in [1usize, 2, 7] {
+        let mut counters_baseline = None;
+        for threads in [1usize, 2, 8] {
+            for cohort in [false, true] {
+                let mut index = IndexBuilder::new(Backend::TrueKnn)
+                    .shards(shards)
+                    .threads(threads)
+                    .cohort_queries(cohort)
+                    .build(ds.points.clone());
+                let builds_at_start = index.build_stats().counters.builds;
+                assert_eq!(
+                    builds_at_start,
+                    shards as u64,
+                    "one structure build per shard"
+                );
+
+                // oracle exactness, checked once per shard count on a
+                // throwaway twin (an extra query here would leave the
+                // matrix instance's scene refit state — and hence its
+                // signature counters — different from the other
+                // configs'); the bitwise compares below carry exactness
+                // to every other config
+                if threads == 1 && !cohort {
+                    let mut fresh = IndexBuilder::new(Backend::TrueKnn)
+                        .shards(shards)
+                        .build(ds.points.clone());
+                    let res = fresh.knn(&ds.points, 5);
+                    for (i, got) in res.neighbors.iter().enumerate() {
+                        assert!(
+                            got.iter().all(|n| n.idx as usize != i),
+                            "shards={shards} query {i}: self not excluded"
+                        );
+                        let want = tree.knn_excluding(ds.points[i], 5, Some(i as u32));
+                        assert_exact(got, &want, &format!("shards={shards} pre q{i}"));
+                    }
+                }
+
+                let sig = signature(index.as_mut());
+
+                // the rebalance must actually fire at the higher shard
+                // counts (visible as accumulated builds beyond the
+                // initial per-shard ones); the unsharded leg grafts
+                // within its budget and never rebuilds
+                let builds_now = index.build_stats().counters.builds;
+                if shards >= 7 {
+                    assert!(
+                        builds_now > builds_at_start,
+                        "shards={shards}: flood insert must rebalance-rebuild \
+                         ({builds_at_start} -> {builds_now})"
+                    );
+                } else if shards == 1 {
+                    assert_eq!(builds_now, builds_at_start, "unsharded must only graft");
+                }
+
+                match &results_baseline {
+                    None => results_baseline = Some(sig.0.clone()),
+                    Some(base) => assert_eq!(
+                        &sig.0, base,
+                        "shards={shards} threads={threads} cohort={cohort}: results drifted \
+                         from the unsharded baseline"
+                    ),
+                }
+                match &counters_baseline {
+                    None => counters_baseline = Some(sig.1),
+                    Some(base) => assert_eq!(
+                        &sig.1, base,
+                        "shards={shards} threads={threads} cohort={cohort}: counters drifted \
+                         within the shard count"
+                    ),
+                }
+
+                // post-rebalance exactness against the full oracle,
+                // once per shard count (after the signature, so the
+                // matrix comparison above is untouched)
+                if threads == 1 && !cohort {
+                    let res = index.knn(&all2[..120], 3);
+                    for (i, got) in res.neighbors.iter().enumerate() {
+                        let want = tree_all2.knn_excluding(all2[i], 3, Some(i as u32));
+                        assert_exact(got, &want, &format!("shards={shards} post q{i}"));
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn insert_keeps_every_backend_on_the_oracle() {
     let ds = DatasetKind::Road.generate(300, 127);
     let extra = DatasetKind::Road.generate(60, 128).points;

@@ -201,10 +201,12 @@ fn run_log(
     phase_a: &[LogEntry],
     phase_b: &[LogEntry],
     workers: usize,
+    shards: usize,
     clients: usize,
 ) -> (HashMap<u64, Sig>, MetricsSnapshot) {
     let cfg = ServiceConfig {
         workers,
+        shards,
         // the determinism claim is about responses, not load shedding:
         // size the queues so nothing is rejected
         queue_depth: 1024,
@@ -260,13 +262,13 @@ fn pool_responses_bitwise_match_single_worker_oracle() {
     let phase_b = mixed_log(&all, 1000..1024);
     let total = (phase_a.len() + phase_b.len()) as u64;
 
-    let (oracle, om) = run_log(&ds.points, &extra, &phase_a, &phase_b, 1, 1);
+    let (oracle, om) = run_log(&ds.points, &extra, &phase_a, &phase_b, 1, 1, 1);
     assert_eq!(om.rejected, 0);
     assert_eq!(om.responses, total);
     assert_eq!(om.builds_of(RoutePath::Rt), 1);
 
     for workers in [2usize, 0] {
-        let (got, m) = run_log(&ds.points, &extra, &phase_a, &phase_b, workers, 4);
+        let (got, m) = run_log(&ds.points, &extra, &phase_a, &phase_b, workers, 1, 4);
         assert_eq!(m.rejected, 0, "workers={workers}: pool run shed load");
         assert_eq!(m.responses, total, "workers={workers}: lost responses");
         assert_eq!(
@@ -285,6 +287,128 @@ fn pool_responses_bitwise_match_single_worker_oracle() {
             );
         }
     }
+}
+
+/// A hot-route log over `points`: every request RT-forced (the sharded
+/// route), k cycles 1–5, queries are deterministic slices.
+fn rt_log(points: &[Point3], ids: std::ops::Range<u64>) -> Vec<LogEntry> {
+    ids.map(|id| {
+        let start = (id as usize * 131) % (points.len() - 6);
+        LogEntry {
+            id,
+            queries: points[start..start + 6].to_vec(),
+            k: 1 + (id as usize % 5),
+            mode: QueryMode::Rt,
+        }
+    })
+    .collect()
+}
+
+#[test]
+fn sharded_hot_route_matches_unsharded_oracle_and_spreads() {
+    // the PR5 serving acceptance: a single hot route, sharded S ways
+    // over a worker pool, replays a request log — including post-insert
+    // queries — bitwise-identically to the unsharded single-worker
+    // oracle, while the per-worker batch metrics prove the route's
+    // batches actually ran on >= 2 workers
+    let ds = DatasetKind::Taxi.generate(3_000, 31);
+    let extra = DatasetKind::Uniform.generate(24, 32).points;
+    let all: Vec<Point3> = ds.points.iter().chain(&extra).copied().collect();
+    let phase_a = rt_log(&ds.points, 0..30);
+    let phase_b = rt_log(&all, 1000..1020);
+    let total = (phase_a.len() + phase_b.len()) as u64;
+
+    let (oracle, om) = run_log(&ds.points, &extra, &phase_a, &phase_b, 1, 1, 1);
+    assert_eq!(om.rejected, 0);
+    assert_eq!(om.responses, total);
+    assert_eq!(om.builds_of(RoutePath::Rt), 1);
+
+    // kept from the (2 shards, 2 workers) iteration for the spread
+    // proof below — no extra service lifecycle needed
+    let mut spread_snap: Option<MetricsSnapshot> = None;
+    for (shards, workers) in [(2usize, 2usize), (2, 4), (3, 0)] {
+        let (got, m) = run_log(&ds.points, &extra, &phase_a, &phase_b, workers, shards, 4);
+        if (shards, workers) == (2, 2) {
+            spread_snap = Some(m.clone());
+        }
+        let tag = format!("shards={shards} workers={workers}");
+        assert_eq!(m.rejected, 0, "{tag}: run shed load");
+        assert_eq!(m.responses, total, "{tag}: lost responses");
+        assert_eq!(m.inserts, 1, "{tag}");
+        // every shard built its structure (exactly once: inserts refit)
+        // and served traffic
+        assert_eq!(m.shard_builds.len(), shards, "{tag}");
+        assert!(
+            m.shard_builds.iter().all(|&b| b == 1),
+            "{tag}: per-shard builds {:?}",
+            m.shard_builds
+        );
+        assert!(
+            m.shard_queries.iter().all(|&q| q > 0),
+            "{tag}: idle shard: {:?}",
+            m.shard_queries
+        );
+        assert_eq!(
+            m.builds_of(RoutePath::Rt),
+            shards as u64,
+            "{tag}: the RT route gauge must surface its per-shard builds"
+        );
+        assert_eq!(got.len(), oracle.len(), "{tag}");
+        for (id, want) in &oracle {
+            assert_eq!(
+                got.get(id),
+                Some(want),
+                "request {id} diverged from the unsharded single-worker oracle at {tag}"
+            );
+        }
+    }
+
+    // spread proof at the pinned (2 shards, 2 workers) config: the two
+    // shard owners are distinct by construction, and both must have
+    // served hot-route batches
+    let m = spread_snap.expect("the (2, 2) configuration ran above");
+    let w0 = trueknn::coordinator::Router::worker_for_shard(RoutePath::Rt, 0, 2);
+    let w1 = trueknn::coordinator::Router::worker_for_shard(RoutePath::Rt, 1, 2);
+    assert_ne!(w0, w1, "2 shards on 2 workers must have distinct owners");
+    assert!(
+        m.workers[w0].batches >= 1,
+        "shard-0 owner served no hot-route batches"
+    );
+    assert!(
+        m.workers[w1].batches >= 1,
+        "shard-1 owner served no hot-route batches"
+    );
+}
+
+#[test]
+fn sharded_route_degenerate_requests_are_safe() {
+    let ds = DatasetKind::Uniform.generate(2_500, 33);
+    let cfg = ServiceConfig {
+        workers: 3,
+        shards: 2,
+        ..Default::default()
+    };
+    let (svc, handle) = Service::start(ds.points.clone(), cfg);
+    // empty query list through the scatter path
+    let resp = handle
+        .query(KnnRequest::new(1, vec![], 3).with_mode(QueryMode::Rt))
+        .unwrap();
+    assert!(resp.neighbors.is_empty());
+    // k larger than any single shard: the gather must still fill from
+    // both shards
+    let resp = handle
+        .query(KnnRequest::new(2, ds.points[..2].to_vec(), 2_000).with_mode(QueryMode::Rt))
+        .unwrap();
+    assert!(resp.neighbors.iter().all(|nb| nb.len() == 2_000));
+    // NaN query must not wedge any shard owner
+    let _ = handle.query(
+        KnnRequest::new(3, vec![Point3::new(f32::NAN, 0.0, 0.0)], 3).with_mode(QueryMode::Rt),
+    );
+    let resp = handle
+        .query(KnnRequest::new(4, ds.points[..2].to_vec(), 2).with_mode(QueryMode::Rt))
+        .unwrap();
+    assert_eq!(resp.neighbors.len(), 2);
+    svc.shutdown();
 }
 
 #[test]
