@@ -1,0 +1,122 @@
+//! Tiny key=value reader for `rust/lint.toml`.
+//!
+//! The analyzer is zero-dependency by the PR 1 manifest contract, so the
+//! config file is a deliberately small subset of TOML: blank lines, `#`
+//! comments, and flat `rule-id.key = v1, v2, …` assignments. Two keys
+//! exist per rule:
+//!
+//! * `scope`  — the rule fires **only** inside these module-path
+//!   prefixes (empty/absent = everywhere).
+//! * `allow`  — modules whose findings for this rule are dropped
+//!   (the file-level counterpart of `// lint: allow(rule)`).
+//!
+//! Module prefixes match whole path segments: `util::timer` covers
+//! `util::timer` and `util::timer::x`, never `util::timers`.
+
+use std::collections::BTreeMap;
+
+/// Parsed lint configuration: per-rule module scoping and allowlists.
+#[derive(Debug, Default, Clone)]
+pub struct LintConfig {
+    /// rule id -> module prefixes the rule is restricted to.
+    scope: BTreeMap<String, Vec<String>>,
+    /// rule id -> module prefixes exempt from the rule.
+    allow: BTreeMap<String, Vec<String>>,
+}
+
+/// A malformed line in the config file.
+#[derive(Debug)]
+pub struct ConfError {
+    pub line: u32,
+    pub message: String,
+}
+
+impl std::fmt::Display for ConfError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "lint config line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ConfError {}
+
+impl LintConfig {
+    /// Parse the `lint.toml` subset described in the module docs.
+    pub fn parse(text: &str) -> Result<LintConfig, ConfError> {
+        let mut cfg = LintConfig::default();
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx as u32 + 1;
+            let line = match raw.find('#') {
+                Some(p) => &raw[..p],
+                None => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                return Err(ConfError {
+                    line: lineno,
+                    message: format!("expected `rule.key = values`, got `{raw}`"),
+                });
+            };
+            let key = key.trim();
+            let Some((rule, field)) = key.rsplit_once('.') else {
+                return Err(ConfError {
+                    line: lineno,
+                    message: format!("key `{key}` is missing the `.scope`/`.allow` suffix"),
+                });
+            };
+            let mods: Vec<String> = value
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            let slot = match field {
+                "scope" => &mut cfg.scope,
+                "allow" => &mut cfg.allow,
+                other => {
+                    return Err(ConfError {
+                        line: lineno,
+                        message: format!("unknown field `{other}` (expected scope or allow)"),
+                    });
+                }
+            };
+            slot.entry(rule.to_string()).or_default().extend(mods);
+        }
+        Ok(cfg)
+    }
+
+    /// Load and parse a config file; missing file = default (empty) config.
+    pub fn load(path: &std::path::Path) -> Result<LintConfig, String> {
+        match std::fs::read_to_string(path) {
+            Ok(text) => LintConfig::parse(&text).map_err(|e| e.to_string()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(LintConfig::default()),
+            Err(e) => Err(format!("reading {}: {e}", path.display())),
+        }
+    }
+
+    /// Does `rule` fire in `module` at all? (scope check)
+    pub fn in_scope(&self, rule: &str, module: &str) -> bool {
+        match self.scope.get(rule) {
+            None => true,
+            Some(prefixes) => prefixes.iter().any(|p| module_matches(module, p)),
+        }
+    }
+
+    /// Is `module` exempt from `rule`? (allow check)
+    pub fn is_allowed(&self, rule: &str, module: &str) -> bool {
+        match self.allow.get(rule) {
+            None => false,
+            Some(prefixes) => prefixes.iter().any(|p| module_matches(module, p)),
+        }
+    }
+}
+
+/// Whole-segment prefix match: `util::timer` covers `util::timer` and
+/// `util::timer::x` but not `util::timers`.
+fn module_matches(module: &str, prefix: &str) -> bool {
+    module == prefix
+        || (module.len() > prefix.len()
+            && module.starts_with(prefix)
+            && module[prefix.len()..].starts_with("::"))
+}

@@ -1,0 +1,483 @@
+//! A lightweight Rust lexer for the determinism-contract analyzer.
+//!
+//! This is **not** a full Rust parser — it is a token stream that is
+//! exact about the three things a text-level lint must never get wrong:
+//!
+//! 1. **String/char literals.** `"HashMap"` inside a string, `'a'` char
+//!    literals vs `'a` lifetimes, raw strings (`r"…"`, `r#"…"#`), and
+//!    byte/raw-byte strings all lex as single literal tokens, so a rule
+//!    matching identifier sequences can never fire inside one.
+//! 2. **Comments.** Line comments, nested block comments and doc
+//!    comments are stripped from the token stream (commented-out code is
+//!    invisible to rules) but recorded on the side: doc-comment lines
+//!    feed the `pub-missing-docs` rule, and `// lint: allow(rule)`
+//!    comments feed the suppression engine.
+//! 3. **`#[cfg(test)]` regions.** Tokens inside a `#[cfg(test)]`-gated
+//!    item (the trailing `mod tests { … }` idiom, or a single gated fn)
+//!    are marked so rules that only govern shipping library code can
+//!    skip them.
+//!
+//! Everything else is intentionally coarse: keywords are just idents,
+//! multi-char operators are consecutive single-char puncts, and numeric
+//! literals keep their raw text so rules can ask "is this a float?".
+
+/// Token kind. Literals carry no content (rules never need it); idents
+/// and numbers keep their text.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`HashMap`, `for`, `pub`, …).
+    Ident,
+    /// Numeric literal, raw text preserved (`0.5`, `42usize`, `0x3ff`).
+    Num,
+    /// String / char / byte / raw-string literal (content dropped).
+    Lit,
+    /// Lifetime (`'a`, `'static`).
+    Life,
+    /// Single punctuation character (`::` is two `:` tokens).
+    Punct(char),
+}
+
+/// One token with its source line (1-based) and test-region mark.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    /// Ident/Num text; empty for literals and puncts.
+    pub text: String,
+    /// 1-based line the token starts on.
+    pub line: u32,
+    /// Inside a `#[cfg(test)]`-gated item.
+    pub in_test: bool,
+}
+
+impl Tok {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct(c)
+    }
+}
+
+/// One inline suppression comment: `// lint: allow(rule-a, rule-b) — why`.
+/// Only plain `//` comments count; a doc comment quoting the syntax is
+/// prose, never a suppression.
+#[derive(Clone, Debug)]
+pub struct Allow {
+    /// Line the comment sits on; it suppresses this line and the next.
+    pub line: u32,
+    /// Rule ids listed between the parens.
+    pub rules: Vec<String>,
+    /// Non-empty justification text followed the closing paren.
+    pub justified: bool,
+}
+
+/// Lexer output: tokens plus the comment-derived side channels.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Tok>,
+    /// Lines (1-based) that hold a doc comment (`///`, `//!`, `/** */`).
+    pub doc_lines: Vec<u32>,
+    /// Inline `lint: allow(…)` suppressions, in source order.
+    pub allows: Vec<Allow>,
+    /// Total lines in the file.
+    pub lines: u32,
+}
+
+impl Lexed {
+    pub fn is_doc_line(&self, line: u32) -> bool {
+        self.doc_lines.binary_search(&line).is_ok()
+    }
+}
+
+/// Lex `src` into tokens + comment side channels, then mark
+/// `#[cfg(test)]` regions.
+pub fn lex(src: &str) -> Lexed {
+    let chars: Vec<char> = src.chars().collect();
+    let mut out = Lexed::default();
+    let mut line: u32 = 1;
+    let mut i = 0usize;
+    let n = chars.len();
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // ---- comments -------------------------------------------------
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i;
+            while i < n && chars[i] != '\n' {
+                i += 1;
+            }
+            let text: String = chars[start..i].iter().collect();
+            let body = &text[2..];
+            if body.starts_with('/') || body.starts_with('!') {
+                // doc comments document; only plain `//` comments can
+                // carry a suppression (docs quoting the syntax are prose)
+                out.doc_lines.push(line);
+            } else {
+                record_allow(&text, line, &mut out.allows);
+            }
+            continue;
+        }
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 1;
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            let text: String = chars[start..i.min(n)].iter().collect();
+            if text.starts_with("/**") || text.starts_with("/*!") {
+                for l in start_line..=line {
+                    out.doc_lines.push(l);
+                }
+            } else {
+                record_allow(&text, start_line, &mut out.allows);
+            }
+            continue;
+        }
+        // ---- raw / byte strings --------------------------------------
+        if c == 'r' || c == 'b' {
+            if let Some((next_i, next_line)) = try_raw_or_byte_string(&chars, i, line) {
+                out.tokens.push(Tok {
+                    kind: TokKind::Lit,
+                    text: String::new(),
+                    line,
+                    in_test: false,
+                });
+                line = next_line;
+                i = next_i;
+                continue;
+            }
+        }
+        // ---- plain strings -------------------------------------------
+        if c == '"' {
+            let tok_line = line;
+            i += 1;
+            while i < n {
+                match chars[i] {
+                    '\\' => i += 2,
+                    '\n' => {
+                        line += 1;
+                        i += 1;
+                    }
+                    '"' => {
+                        i += 1;
+                        break;
+                    }
+                    _ => i += 1,
+                }
+            }
+            out.tokens.push(Tok {
+                kind: TokKind::Lit,
+                text: String::new(),
+                line: tok_line,
+                in_test: false,
+            });
+            continue;
+        }
+        // ---- char literal vs lifetime --------------------------------
+        if c == '\'' {
+            if i + 1 < n && chars[i + 1] == '\\' {
+                // escaped char literal: '\n', '\u{…}', …
+                i += 2;
+                while i < n && chars[i] != '\'' {
+                    i += 1;
+                }
+                i += 1;
+                out.tokens.push(Tok {
+                    kind: TokKind::Lit,
+                    text: String::new(),
+                    line,
+                    in_test: false,
+                });
+                continue;
+            }
+            if i + 2 < n && chars[i + 2] == '\'' {
+                // plain char literal 'x'
+                i += 3;
+                out.tokens.push(Tok {
+                    kind: TokKind::Lit,
+                    text: String::new(),
+                    line,
+                    in_test: false,
+                });
+                continue;
+            }
+            // lifetime 'a / 'static
+            let start = i + 1;
+            i += 1;
+            while i < n && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                i += 1;
+            }
+            out.tokens.push(Tok {
+                kind: TokKind::Life,
+                text: chars[start..i].iter().collect(),
+                line,
+                in_test: false,
+            });
+            continue;
+        }
+        // ---- identifiers ---------------------------------------------
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < n && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                i += 1;
+            }
+            out.tokens.push(Tok {
+                kind: TokKind::Ident,
+                text: chars[start..i].iter().collect(),
+                line,
+                in_test: false,
+            });
+            continue;
+        }
+        // ---- numbers -------------------------------------------------
+        if c.is_ascii_digit() {
+            let start = i;
+            i += 1;
+            while i < n && (chars[i].is_ascii_alphanumeric() || chars[i] == '_') {
+                i += 1;
+            }
+            // fraction — but never swallow a `..` range operator
+            if i + 1 < n && chars[i] == '.' && chars[i + 1].is_ascii_digit() {
+                i += 1;
+                while i < n && (chars[i].is_ascii_alphanumeric() || chars[i] == '_') {
+                    i += 1;
+                }
+            } else if i + 1 < n
+                && chars[i] == '.'
+                && chars[i + 1] != '.'
+                && !chars[i + 1].is_alphabetic()
+            {
+                // trailing-dot float like `1.` followed by `)` or `,`
+                i += 1;
+            }
+            out.tokens.push(Tok {
+                kind: TokKind::Num,
+                text: chars[start..i].iter().collect(),
+                line,
+                in_test: false,
+            });
+            continue;
+        }
+        // ---- punctuation ---------------------------------------------
+        out.tokens.push(Tok {
+            kind: TokKind::Punct(c),
+            text: String::new(),
+            line,
+            in_test: false,
+        });
+        i += 1;
+    }
+
+    out.lines = line;
+    out.doc_lines.sort_unstable();
+    out.doc_lines.dedup();
+    mark_test_regions(&mut out.tokens);
+    out
+}
+
+/// Try to lex a raw or byte string starting at `i` (`r"`, `r#"`, `b"`,
+/// `br"`, `br#"`). Returns `(index_after, line_after)` on success.
+fn try_raw_or_byte_string(chars: &[char], i: usize, line: u32) -> Option<(usize, u32)> {
+    let n = chars.len();
+    let mut j = i;
+    let mut raw = false;
+    if chars[j] == 'b' {
+        j += 1;
+        if j < n && chars[j] == 'r' {
+            raw = true;
+            j += 1;
+        }
+    } else if chars[j] == 'r' {
+        raw = true;
+        j += 1;
+    }
+    if raw {
+        let mut hashes = 0usize;
+        while j < n && chars[j] == '#' {
+            hashes += 1;
+            j += 1;
+        }
+        if j >= n || chars[j] != '"' {
+            return None; // raw ident (`r#type`) or plain ident starting with r
+        }
+        j += 1;
+        let mut ln = line;
+        while j < n {
+            if chars[j] == '\n' {
+                ln += 1;
+                j += 1;
+                continue;
+            }
+            if chars[j] == '"' {
+                let mut h = 0usize;
+                while j + 1 + h < n && h < hashes && chars[j + 1 + h] == '#' {
+                    h += 1;
+                }
+                if h == hashes {
+                    return Some((j + 1 + hashes, ln));
+                }
+            }
+            j += 1;
+        }
+        return Some((n, ln));
+    }
+    // byte string b"…" (escapes allowed)
+    if j < n && chars[j] == '"' {
+        j += 1;
+        let mut ln = line;
+        while j < n {
+            match chars[j] {
+                '\\' => j += 2,
+                '\n' => {
+                    ln += 1;
+                    j += 1;
+                }
+                '"' => return Some((j + 1, ln)),
+                _ => j += 1,
+            }
+        }
+        return Some((n, ln));
+    }
+    None
+}
+
+/// Parse a `lint: allow(rule-a, rule-b) — justification` comment.
+fn record_allow(comment: &str, line: u32, allows: &mut Vec<Allow>) {
+    let Some(pos) = comment.find("lint: allow(") else {
+        return;
+    };
+    let after = &comment[pos + "lint: allow(".len()..];
+    let Some(close) = after.find(')') else {
+        return;
+    };
+    let rules: Vec<String> = after[..close]
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let rest = after[close + 1..]
+        .trim_matches(|c: char| c.is_whitespace() || c == '-' || c == '—' || c == ':' || c == '*');
+    allows.push(Allow {
+        line,
+        rules,
+        justified: !rest.is_empty(),
+    });
+}
+
+/// Mark tokens belonging to `#[cfg(test)]`-gated items. Handles the
+/// common shapes: a gated `mod … { … }`, a gated `fn`/`struct`/`impl`
+/// with a brace body, and gated single statements ending in `;`.
+fn mark_test_regions(tokens: &mut [Tok]) {
+    let mut i = 0usize;
+    while i < tokens.len() {
+        if let Some(attr_end) = match_cfg_test_attr(tokens, i) {
+            // skip any further attributes stacked under the cfg
+            let mut j = attr_end;
+            while j + 1 < tokens.len() && tokens[j].is_punct('#') && tokens[j + 1].is_punct('[') {
+                j = skip_attr_group(tokens, j);
+            }
+            // find the gated item's body: first `{` before any `;`
+            let mut k = j;
+            let mut body = None;
+            while k < tokens.len() {
+                if tokens[k].is_punct('{') {
+                    body = Some(k);
+                    break;
+                }
+                if tokens[k].is_punct(';') {
+                    body = None;
+                    k += 1;
+                    break;
+                }
+                k += 1;
+            }
+            let end = match body {
+                Some(open) => matching_brace(tokens, open),
+                None => k,
+            };
+            for t in tokens.iter_mut().take(end.min(tokens.len())).skip(i) {
+                t.in_test = true;
+            }
+            i = end;
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// If tokens at `i` start a `#[cfg(… test …)]` attribute, return the
+/// index just past its closing `]`.
+fn match_cfg_test_attr(tokens: &[Tok], i: usize) -> Option<usize> {
+    if !(tokens.get(i)?.is_punct('#') && tokens.get(i + 1)?.is_punct('[')) {
+        return None;
+    }
+    let end = skip_attr_group(tokens, i);
+    let group = &tokens[i..end];
+    let is_cfg = group.iter().any(|t| t.is_ident("cfg"));
+    let has_test = group.iter().any(|t| t.is_ident("test"));
+    let negated = group.iter().any(|t| t.is_ident("not"));
+    if is_cfg && has_test && !negated {
+        Some(end)
+    } else {
+        None
+    }
+}
+
+/// `tokens[i]` is `#` opening an attribute; return index past its `]`.
+fn skip_attr_group(tokens: &[Tok], i: usize) -> usize {
+    let mut depth = 0i32;
+    let mut j = i + 1;
+    while j < tokens.len() {
+        if tokens[j].is_punct('[') {
+            depth += 1;
+        } else if tokens[j].is_punct(']') {
+            depth -= 1;
+            if depth == 0 {
+                return j + 1;
+            }
+        }
+        j += 1;
+    }
+    tokens.len()
+}
+
+/// `tokens[open]` is `{`; return index just past its matching `}`.
+pub fn matching_brace(tokens: &[Tok], open: usize) -> usize {
+    let mut depth = 0i32;
+    let mut j = open;
+    while j < tokens.len() {
+        if tokens[j].is_punct('{') {
+            depth += 1;
+        } else if tokens[j].is_punct('}') {
+            depth -= 1;
+            if depth == 0 {
+                return j + 1;
+            }
+        }
+        j += 1;
+    }
+    tokens.len()
+}

@@ -1,0 +1,273 @@
+//! `trueknn lint`: a zero-dependency determinism-contract analyzer.
+//!
+//! Every PR since the seed leans on one standing invariant — **results
+//! and counters are bitwise-identical at any threads × workers ×
+//! shards**. Until now that contract was enforced only dynamically, by
+//! oracle tests that can't see a nondeterminism hazard until a schedule
+//! happens to expose it. This module turns the contract from
+//! test-observed into build-enforced: a std-only static analyzer with
+//! its own lightweight Rust lexer ([`lexer`]), a module-path-scoped
+//! rule engine ([`rules`]), a tiny `lint.toml` reader ([`conf`]), and
+//! machine-readable findings with stable ordering. It runs as the
+//! `trueknn lint` CLI subcommand (exit code = finding count) and as a
+//! blocking CI job.
+//!
+//! # Rules and their contract rationale
+//!
+//! * `unordered-iteration` — `HashMap`/`HashSet` iterate in randomized
+//!   order (SipHash seeds differ per process). Any walk feeding a merge
+//!   result, a [`crate::coordinator::MetricsSnapshot`], the `serve` CLI
+//!   summary, or batch emission order silently varies across runs.
+//!   Keyed access is order-free and stays legal; walks must go through
+//!   a sorted key list or an ordered structure (`BTreeMap`, `Vec`).
+//! * `wallclock-in-core` — `Instant::now`/`SystemTime` on a core path
+//!   leaks schedule noise into outputs and makes replay diverge.
+//!   Confined by `lint.toml` to `bench`, `exp`, and `util::timer`.
+//! * `raw-threads` — all parallelism flows through
+//!   [`crate::exec::Executor`] (deterministic shard-then-merge) or the
+//!   coordinator service loop; a raw `thread::spawn`/`scope` anywhere
+//!   else creates schedules the determinism suites never cover.
+//!   Confined to `exec` and `coordinator::service`; everyone else uses
+//!   [`crate::exec::scope`], the sanctioned chokepoint.
+//! * `sync-in-exec` — the exec engine is lock-free by contract
+//!   (disjoint writes + sequential merge); `Mutex`/`Atomic*`/`mpsc`
+//!   inside `exec/` would mean one worker observes another.
+//! * `float-reduce-order` — float addition is non-associative, so
+//!   `.sum::<f32>()`/float `fold` in parallel-reachable modules gives
+//!   chunk-boundary-dependent bits; reductions use ordered sequential
+//!   merges instead.
+//! * `panic-in-lib` — library panics abort serving workers; recoverable
+//!   paths propagate `Error`s, and genuinely-infallible `unwrap`s carry
+//!   an inline justification.
+//! * `truncating-id-cast` — `as u32`/`as usize` on id *arithmetic* in
+//!   merge/remap paths wraps silently past 2^32 points; id widening
+//!   goes through checked helpers
+//!   (e.g. [`crate::shard::Partition::global_id`]).
+//! * `pub-missing-docs` — the `index`/`shard`/`coordinator` public API
+//!   is the surface other layers build on; each `pub` item states its
+//!   contract.
+//! * `bare-allow` — meta-rule: an inline `lint: allow(…)` without a
+//!   justification, or naming an unknown rule id, is itself a finding,
+//!   so the suppression mechanism can't rot.
+//!
+//! # Suppression
+//!
+//! A plain line comment `// lint: allow(rule-a, rule-b) — justification`
+//! suppresses those rules on its own line and the next line. The
+//! justification text after the closing paren is mandatory, and doc
+//! comments never carry suppressions (quoting the syntax is prose).
+//! File-level scoping lives in `rust/lint.toml` (see [`conf`]).
+
+pub mod conf;
+pub mod lexer;
+pub mod rules;
+
+pub use conf::LintConfig;
+
+use std::path::{Path, PathBuf};
+
+/// One analyzer finding, ready for reporting.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Path as scanned, relative to the scan root (slash-normalized).
+    pub file: String,
+    /// 1-based source line.
+    pub line: u32,
+    /// Rule id (one of [`rules::RULES`]).
+    pub rule: &'static str,
+    /// Human-readable explanation.
+    pub message: String,
+    /// The trimmed source line the finding anchors to.
+    pub snippet: String,
+}
+
+/// A whole-tree analysis result.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// All findings, sorted by (file, line, rule).
+    pub findings: Vec<Finding>,
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+    /// Total source lines scanned.
+    pub lines: u64,
+}
+
+/// Map a path relative to the scan root onto a crate module path:
+/// `lib.rs` → `` (crate root), `main.rs` → `main`, `foo/mod.rs` →
+/// `foo`, `foo/bar.rs` → `foo::bar`.
+pub fn module_path_of(rel: &str) -> String {
+    let norm = rel.replace('\\', "/");
+    let no_ext = norm.strip_suffix(".rs").unwrap_or(&norm);
+    let mut parts: Vec<&str> = no_ext.split('/').filter(|p| !p.is_empty()).collect();
+    if parts.last() == Some(&"mod") {
+        parts.pop();
+    }
+    if parts == ["lib"] {
+        return String::new();
+    }
+    parts.join("::")
+}
+
+/// Analyze one file's source. `module` is its crate module path (see
+/// [`module_path_of`]); `file` is used only for labeling findings.
+pub fn analyze_source(module: &str, file: &str, src: &str, cfg: &LintConfig) -> Vec<Finding> {
+    let lexed = lexer::lex(src);
+    // rules only see shipping code: drop `#[cfg(test)]` regions
+    let shipping: Vec<lexer::Tok> = lexed
+        .tokens
+        .iter()
+        .filter(|t| !t.in_test)
+        .cloned()
+        .collect();
+    let raw = rules::scan(&shipping, &lexed);
+    let src_lines: Vec<&str> = src.lines().collect();
+    let snippet = |line: u32| -> String {
+        src_lines
+            .get(line as usize - 1)
+            .map(|s| s.trim().to_string())
+            .unwrap_or_default()
+    };
+
+    let mut out: Vec<Finding> = Vec::new();
+    for f in raw {
+        if !cfg.in_scope(f.rule, module) || cfg.is_allowed(f.rule, module) {
+            continue;
+        }
+        if suppressed(&lexed.allows, f.rule, f.line) {
+            continue;
+        }
+        out.push(Finding {
+            file: file.to_string(),
+            line: f.line,
+            rule: f.rule,
+            message: f.message,
+            snippet: snippet(f.line),
+        });
+    }
+    // meta-rule: suppressions must be justified and name real rules
+    for a in &lexed.allows {
+        if !a.justified {
+            out.push(Finding {
+                file: file.to_string(),
+                line: a.line,
+                rule: "bare-allow",
+                message: "inline `lint: allow(…)` without a justification after the closing paren"
+                    .to_string(),
+                snippet: snippet(a.line),
+            });
+        }
+        for r in &a.rules {
+            if r != "all" && !rules::RULES.contains(&r.as_str()) {
+                out.push(Finding {
+                    file: file.to_string(),
+                    line: a.line,
+                    rule: "bare-allow",
+                    message: format!("inline allow names unknown rule `{r}`"),
+                    snippet: snippet(a.line),
+                });
+            }
+        }
+    }
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+/// A justified allow on the finding's line or the line above covers it.
+fn suppressed(allows: &[lexer::Allow], rule: &str, line: u32) -> bool {
+    allows.iter().any(|a| {
+        a.justified
+            && (a.line == line || a.line + 1 == line)
+            && a.rules.iter().any(|r| r == rule || r == "all")
+    })
+}
+
+/// Recursively collect `.rs` files under `root`, sorted by path so the
+/// report order is machine-independent.
+fn collect_rs_files(root: &Path) -> Result<Vec<PathBuf>, String> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let entries =
+            std::fs::read_dir(&dir).map_err(|e| format!("reading {}: {e}", dir.display()))?;
+        for entry in entries {
+            let entry = entry.map_err(|e| format!("reading {}: {e}", dir.display()))?;
+            let path = entry.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|x| x == "rs") {
+                out.push(path);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Analyze every `.rs` file under `root` (normally `rust/src`) with
+/// `cfg`. Findings come back sorted by (file, line, rule).
+pub fn run_tree(root: &Path, cfg: &LintConfig) -> Result<Report, String> {
+    let mut report = Report::default();
+    for path in collect_rs_files(root)? {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(&path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        let module = module_path_of(&rel);
+        report.files += 1;
+        report.lines += src.lines().count() as u64;
+        report
+            .findings
+            .extend(analyze_source(&module, &rel, &src, cfg));
+    }
+    report
+        .findings
+        .sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(report)
+}
+
+/// Render the report as `file:line [rule] message` lines plus a
+/// one-line summary — the human-facing CLI output.
+pub fn render_text(report: &Report) -> String {
+    let mut s = String::new();
+    for f in &report.findings {
+        s.push_str(&format!(
+            "{}:{} [{}] {}\n    {}\n",
+            f.file, f.line, f.rule, f.message, f.snippet
+        ));
+    }
+    s.push_str(&format!(
+        "lint: {} finding(s) across {} file(s), {} line(s)\n",
+        report.findings.len(),
+        report.files,
+        report.lines
+    ));
+    s
+}
+
+/// Render the report as a machine-readable JSON document (the `--json`
+/// CLI output and the CI artifact).
+pub fn to_json(report: &Report) -> crate::configx::json::Json {
+    use crate::configx::json::Json;
+    let findings: Vec<Json> = report
+        .findings
+        .iter()
+        .map(|f| {
+            Json::obj(vec![
+                ("file", Json::Str(f.file.clone())),
+                ("line", Json::Num(f.line as f64)),
+                ("rule", Json::Str(f.rule.to_string())),
+                ("message", Json::Str(f.message.clone())),
+                ("snippet", Json::Str(f.snippet.clone())),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("files", Json::Num(report.files as f64)),
+        ("lines", Json::Num(report.lines as f64)),
+        ("finding_count", Json::Num(report.findings.len() as f64)),
+        ("findings", Json::Arr(findings)),
+    ])
+}

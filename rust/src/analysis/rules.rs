@@ -1,0 +1,520 @@
+//! The determinism-contract rules, matched over the lexed token stream.
+//!
+//! Each rule is a small token-pattern matcher. Rules see only tokens
+//! outside `#[cfg(test)]` regions, and never see comments or string
+//! contents (the lexer already collapsed those), so `"HashMap"` in a
+//! string literal or `// let m = HashMap::new()` in commented-out code
+//! can never fire. Module scoping (`scope` / `allow` in `lint.toml`)
+//! and inline `// lint: allow(rule)` suppression are applied by the
+//! engine in [`super`], not here.
+//!
+//! See the crate-level "Determinism contract" section in `lib.rs` for
+//! the contract each rule id enforces.
+
+use super::lexer::{Lexed, Tok, TokKind};
+use std::collections::BTreeSet;
+
+/// A rule match before the engine attaches file/snippet context.
+#[derive(Debug)]
+pub struct RawFinding {
+    pub rule: &'static str,
+    pub line: u32,
+    pub message: String,
+}
+
+/// Every rule id the analyzer knows, in report order. `bare-allow` is
+/// the meta-rule guarding the suppression mechanism itself.
+pub const RULES: &[&str] = &[
+    "unordered-iteration",
+    "wallclock-in-core",
+    "raw-threads",
+    "sync-in-exec",
+    "float-reduce-order",
+    "panic-in-lib",
+    "truncating-id-cast",
+    "pub-missing-docs",
+    "bare-allow",
+];
+
+/// Run every token-level rule over the (test-filtered) token stream.
+/// The engine filters by module scope/allow afterwards.
+pub fn scan(toks: &[Tok], lexed: &Lexed) -> Vec<RawFinding> {
+    let mut out = Vec::new();
+    unordered_iteration(toks, &mut out);
+    wallclock_in_core(toks, &mut out);
+    raw_threads(toks, &mut out);
+    sync_in_exec(toks, &mut out);
+    float_reduce_order(toks, &mut out);
+    panic_in_lib(toks, &mut out);
+    truncating_id_cast(toks, &mut out);
+    pub_missing_docs(toks, lexed, &mut out);
+    out
+}
+
+fn ident_at<'a>(toks: &'a [Tok], i: usize) -> Option<&'a str> {
+    match toks.get(i) {
+        Some(t) if t.kind == TokKind::Ident => Some(&t.text),
+        _ => None,
+    }
+}
+
+fn punct_at(toks: &[Tok], i: usize, c: char) -> bool {
+    matches!(toks.get(i), Some(t) if t.is_punct(c))
+}
+
+/// `::` at positions i, i+1.
+fn path_sep(toks: &[Tok], i: usize) -> bool {
+    punct_at(toks, i, ':') && punct_at(toks, i + 1, ':')
+}
+
+// ---------------------------------------------------------------------
+// unordered-iteration
+// ---------------------------------------------------------------------
+
+/// Keywords that can never be a map binding name (guards the backward
+/// walk from a `HashMap` type token landing on `use`, `let`, …).
+const KEYWORDS: &[&str] = &[
+    "use", "let", "pub", "in", "as", "return", "if", "else", "match", "for", "while", "fn",
+    "impl", "struct", "enum", "where", "type", "const", "static", "mut", "ref", "move", "crate",
+    "super", "self", "Self", "dyn", "trait", "mod", "unsafe", "async", "await", "loop", "break",
+    "continue",
+];
+
+const ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "into_iter",
+    "into_keys",
+    "into_values",
+];
+
+/// Hash containers iterate in randomized order; any walk that feeds a
+/// result, snapshot, or emission path breaks bitwise determinism. The
+/// rule binds names declared or assigned as `HashMap`/`HashSet` within
+/// a file, then flags `.iter()`-family calls and `for … in &name {`
+/// loops on them. Keyed access (`get`/`insert`/`remove`/`contains_key`)
+/// is order-free and stays legal.
+fn unordered_iteration(toks: &[Tok], out: &mut Vec<RawFinding>) {
+    // Pass 1: names bound to a hash container in this file, either as a
+    // typed binding/field/param (`name: HashMap<…>`) or an assignment
+    // (`name = HashMap::new()` / `with_capacity` / `default` / `from`).
+    let mut names: BTreeSet<String> = BTreeSet::new();
+    for i in 0..toks.len() {
+        let Some(tyname) = ident_at(toks, i) else {
+            continue;
+        };
+        if tyname != "HashMap" && tyname != "HashSet" {
+            continue;
+        }
+        // walk back over path/borrow noise: `: &mut std::collections::`
+        let mut j = i;
+        while j > 0 {
+            let t = &toks[j - 1];
+            let skip = t.is_punct(':')
+                || t.is_punct('&')
+                || t.is_ident("mut")
+                || t.is_ident("std")
+                || t.is_ident("collections");
+            if !skip {
+                break;
+            }
+            j -= 1;
+        }
+        if j == 0 {
+            continue;
+        }
+        let before = &toks[j - 1];
+        // `name : HashMap` — the skip run starts with the type colon
+        if j < i && toks[j].is_punct(':') {
+            if before.kind == TokKind::Ident && !KEYWORDS.contains(&before.text.as_str()) {
+                names.insert(before.text.clone());
+            }
+            continue;
+        }
+        // `name = HashMap::ctor(…)`
+        if before.is_punct('=') && j >= 2 && path_sep(toks, i + 1) {
+            if let Some(ctor) = ident_at(toks, i + 3) {
+                if matches!(ctor, "new" | "with_capacity" | "default" | "from") {
+                    if let Some(name) = ident_at(toks, j - 2) {
+                        if !KEYWORDS.contains(&name) {
+                            names.insert(name.to_string());
+                        }
+                    }
+                }
+            }
+        }
+    }
+    if names.is_empty() {
+        return;
+    }
+    // Pass 2: flag iteration over those names.
+    for i in 0..toks.len() {
+        // `name.iter()` family
+        if let Some(name) = ident_at(toks, i) {
+            if names.contains(name)
+                && punct_at(toks, i + 1, '.')
+                && ident_at(toks, i + 2).is_some_and(|m| ITER_METHODS.contains(&m))
+                && punct_at(toks, i + 3, '(')
+            {
+                out.push(RawFinding {
+                    rule: "unordered-iteration",
+                    line: toks[i + 2].line,
+                    message: format!(
+                        "iteration over hash container `{name}` (.{}()) is order-nondeterministic; \
+                         iterate a sorted key list or an ordered structure instead",
+                        toks[i + 2].text
+                    ),
+                });
+            }
+        }
+        // `for … in &[mut] name {`
+        if toks[i].is_ident("in") {
+            let mut j = i + 1;
+            while punct_at(toks, j, '&') || ident_at(toks, j) == Some("mut") {
+                j += 1;
+            }
+            if let Some(name) = ident_at(toks, j) {
+                if names.contains(name) && punct_at(toks, j + 1, '{') {
+                    out.push(RawFinding {
+                        rule: "unordered-iteration",
+                        line: toks[j].line,
+                        message: format!(
+                            "`for … in &{name}` walks a hash container in randomized order; \
+                             iterate a sorted key list instead"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// wallclock-in-core
+// ---------------------------------------------------------------------
+
+/// Wall-clock reads on a result path make reruns incomparable and leak
+/// schedule noise into outputs. `Instant::now`/`SystemTime` belong in
+/// the measurement shells (`bench`, `exp`, `util::timer` — scoped via
+/// lint.toml), never in core algorithm or merge code.
+fn wallclock_in_core(toks: &[Tok], out: &mut Vec<RawFinding>) {
+    for i in 0..toks.len() {
+        if toks[i].is_ident("Instant")
+            && path_sep(toks, i + 1)
+            && ident_at(toks, i + 3) == Some("now")
+        {
+            out.push(RawFinding {
+                rule: "wallclock-in-core",
+                line: toks[i].line,
+                message: "`Instant::now()` outside bench/exp/util::timer; core paths must be \
+                          wall-clock free"
+                    .to_string(),
+            });
+        }
+        if toks[i].is_ident("SystemTime") {
+            out.push(RawFinding {
+                rule: "wallclock-in-core",
+                line: toks[i].line,
+                message: "`SystemTime` outside bench/exp/util::timer; core paths must be \
+                          wall-clock free"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// raw-threads
+// ---------------------------------------------------------------------
+
+/// All parallelism flows through `exec::Executor` (deterministic
+/// shard-then-merge) or the coordinator's service loop. Raw
+/// `thread::spawn`/`scope`/`Builder` anywhere else creates schedules
+/// the determinism tests don't cover.
+fn raw_threads(toks: &[Tok], out: &mut Vec<RawFinding>) {
+    for i in 0..toks.len() {
+        if toks[i].is_ident("thread") && path_sep(toks, i + 1) {
+            if let Some(m) = ident_at(toks, i + 3) {
+                if matches!(m, "spawn" | "scope" | "Builder") {
+                    out.push(RawFinding {
+                        rule: "raw-threads",
+                        line: toks[i].line,
+                        message: format!(
+                            "`thread::{m}` outside exec/coordinator::service; route parallelism \
+                             through exec::Executor or exec::scope"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// sync-in-exec
+// ---------------------------------------------------------------------
+
+/// The exec engine is lock-free by contract: workers write disjoint
+/// result slots and merge sequentially. Any `Mutex`/`Atomic*`/`mpsc`
+/// inside `exec/` means a worker observed another worker — the exact
+/// coupling the shard-then-merge design exists to forbid.
+fn sync_in_exec(toks: &[Tok], out: &mut Vec<RawFinding>) {
+    for t in toks {
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        let hit = matches!(t.text.as_str(), "Mutex" | "RwLock" | "Condvar" | "Barrier" | "mpsc")
+            || t.text.starts_with("Atomic");
+        if hit {
+            out.push(RawFinding {
+                rule: "sync-in-exec",
+                line: t.line,
+                message: format!(
+                    "`{}` inside exec/: the shard-then-merge engine is lock-free by contract",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// float-reduce-order
+// ---------------------------------------------------------------------
+
+fn is_float_token(t: &Tok) -> bool {
+    match t.kind {
+        TokKind::Num => {
+            t.text.contains('.') || t.text.ends_with("f32") || t.text.ends_with("f64")
+        }
+        TokKind::Ident => t.text == "f32" || t.text == "f64",
+        _ => false,
+    }
+}
+
+/// Float addition is not associative: `.sum::<f32>()` or a float `fold`
+/// in parallel-reachable modules produces chunk-boundary-dependent
+/// bits. Reductions must go through the ordered sequential merges the
+/// exec engine provides.
+fn float_reduce_order(toks: &[Tok], out: &mut Vec<RawFinding>) {
+    for i in 0..toks.len() {
+        if punct_at(toks, i, '.')
+            && ident_at(toks, i + 1) == Some("sum")
+            && path_sep(toks, i + 2)
+            && punct_at(toks, i + 4, '<')
+            && ident_at(toks, i + 5).is_some_and(|t| t == "f32" || t == "f64")
+        {
+            out.push(RawFinding {
+                rule: "float-reduce-order",
+                line: toks[i + 1].line,
+                message: "float `.sum()` reassociates under chunking; use an ordered sequential \
+                          reduction"
+                    .to_string(),
+            });
+        }
+        if punct_at(toks, i, '.')
+            && ident_at(toks, i + 1) == Some("fold")
+            && punct_at(toks, i + 2, '(')
+            && toks.get(i + 3).is_some_and(is_float_token)
+        {
+            out.push(RawFinding {
+                rule: "float-reduce-order",
+                line: toks[i + 1].line,
+                message: "float `fold` reassociates under chunking; use an ordered sequential \
+                          reduction"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// panic-in-lib
+// ---------------------------------------------------------------------
+
+/// Library code must propagate errors, not abort the process: a panic
+/// inside a worker poisons the whole serving pool. `unwrap`/`expect`
+/// on genuinely-infallible invariants carry an inline
+/// `// lint: allow(panic-in-lib) — why` justification instead.
+fn panic_in_lib(toks: &[Tok], out: &mut Vec<RawFinding>) {
+    for i in 0..toks.len() {
+        if punct_at(toks, i, '.')
+            && ident_at(toks, i + 1).is_some_and(|m| m == "unwrap" || m == "expect")
+            && punct_at(toks, i + 2, '(')
+        {
+            out.push(RawFinding {
+                rule: "panic-in-lib",
+                line: toks[i + 1].line,
+                message: format!(
+                    "`.{}()` in library code; propagate an Error or justify with an inline allow",
+                    toks[i + 1].text
+                ),
+            });
+        }
+        if toks[i].is_ident("panic") && punct_at(toks, i + 1, '!') {
+            out.push(RawFinding {
+                rule: "panic-in-lib",
+                line: toks[i].line,
+                message: "`panic!` in library code; propagate an Error or justify with an inline \
+                          allow"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// truncating-id-cast
+// ---------------------------------------------------------------------
+
+/// In merge/remap paths a truncating `as u32`/`as usize` on id
+/// *arithmetic* silently wraps once a dataset crosses 2^32 points —
+/// and the shard scatter-gather layer is exactly where global ids are
+/// reconstituted from (shard, local) pairs. Flags casts whose operand
+/// is an arithmetic expression; plain index-to-width casts stay legal.
+fn truncating_id_cast(toks: &[Tok], out: &mut Vec<RawFinding>) {
+    for i in 0..toks.len() {
+        if !toks[i].is_ident("as") {
+            continue;
+        }
+        let Some(ty) = ident_at(toks, i + 1) else {
+            continue;
+        };
+        if ty != "u32" && ty != "usize" {
+            continue;
+        }
+        if i == 0 {
+            continue;
+        }
+        let arithmetic = if toks[i - 1].is_punct(')') {
+            paren_group_has_arith(toks, i - 1)
+        } else {
+            // `a + b as u32` — binary op directly before the operand
+            i >= 3
+                && matches!(toks[i - 1].kind, TokKind::Ident | TokKind::Num)
+                && (toks[i - 2].is_punct('+')
+                    || toks[i - 2].is_punct('-')
+                    || toks[i - 2].is_punct('*'))
+                && matches!(
+                    toks[i - 3].kind,
+                    TokKind::Ident | TokKind::Num | TokKind::Punct(')')
+                )
+        };
+        if arithmetic {
+            out.push(RawFinding {
+                rule: "truncating-id-cast",
+                line: toks[i].line,
+                message: format!(
+                    "arithmetic result truncated by `as {ty}`; use a checked id-width helper"
+                ),
+            });
+        }
+    }
+}
+
+/// `toks[close]` is `)`; does the group it closes contain `+`/`-`/`*`
+/// at any depth?
+fn paren_group_has_arith(toks: &[Tok], close: usize) -> bool {
+    let mut depth = 0i32;
+    let mut j = close;
+    loop {
+        let t = &toks[j];
+        if t.is_punct(')') {
+            depth += 1;
+        } else if t.is_punct('(') {
+            depth -= 1;
+            if depth == 0 {
+                return false;
+            }
+        } else if depth >= 1 && (t.is_punct('+') || t.is_punct('-') || t.is_punct('*')) {
+            return true;
+        }
+        if j == 0 {
+            return false;
+        }
+        j -= 1;
+    }
+}
+
+// ---------------------------------------------------------------------
+// pub-missing-docs
+// ---------------------------------------------------------------------
+
+const ITEM_KEYWORDS: &[&str] = &[
+    "fn", "struct", "enum", "trait", "type", "const", "static", "mod", "union",
+];
+
+/// The `index`/`shard`/`coordinator` public API is the surface other
+/// layers build on; every `pub` item there documents its contract.
+/// `pub(crate)` internals, fields, and `pub use` re-exports are exempt.
+fn pub_missing_docs(toks: &[Tok], lexed: &Lexed, out: &mut Vec<RawFinding>) {
+    for i in 0..toks.len() {
+        if !toks[i].is_ident("pub") {
+            continue;
+        }
+        // pub(crate) / pub(super): restricted visibility, not public API
+        if punct_at(toks, i + 1, '(') {
+            continue;
+        }
+        // skip modifier keywords to the item keyword
+        let mut j = i + 1;
+        while ident_at(toks, j).is_some_and(|t| matches!(t, "unsafe" | "async" | "extern")) {
+            j += 1;
+        }
+        let Some(kw) = ident_at(toks, j) else {
+            continue;
+        };
+        if !ITEM_KEYWORDS.contains(&kw) {
+            continue; // struct field, `pub use`, …
+        }
+        let name = ident_at(toks, j + 1).unwrap_or("?");
+        // top line of the attribute chain stacked directly above `pub`
+        let mut first = i;
+        while first >= 1 && punct_at(toks, first - 1, ']') {
+            match attr_open_before(toks, first - 1) {
+                Some(h) => first = h,
+                None => break,
+            }
+        }
+        let attr_top_line = toks[first].line;
+        let pub_line = toks[i].line;
+        let documented = (attr_top_line >= 2 && lexed.is_doc_line(attr_top_line - 1))
+            || (pub_line >= 2 && lexed.is_doc_line(pub_line - 1));
+        if !documented {
+            out.push(RawFinding {
+                rule: "pub-missing-docs",
+                line: pub_line,
+                message: format!("public {kw} `{name}` has no doc comment"),
+            });
+        }
+    }
+}
+
+/// `toks[close]` is `]`; if it closes an attribute (`# [ … ]`), return
+/// the index of the opening `#`.
+fn attr_open_before(toks: &[Tok], close: usize) -> Option<usize> {
+    let mut depth = 0i32;
+    let mut j = close;
+    loop {
+        if toks[j].is_punct(']') {
+            depth += 1;
+        } else if toks[j].is_punct('[') {
+            depth -= 1;
+            if depth == 0 {
+                return if j >= 1 && toks[j - 1].is_punct('#') {
+                    Some(j - 1)
+                } else {
+                    None
+                };
+            }
+        }
+        if j == 0 {
+            return None;
+        }
+        j -= 1;
+    }
+}

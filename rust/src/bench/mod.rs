@@ -8,6 +8,7 @@ pub mod pr2;
 pub mod pr3;
 pub mod pr4;
 pub mod pr5;
+pub mod pr6;
 
 use crate::util::stats::{median, OnlineStats};
 use crate::util::Stopwatch;

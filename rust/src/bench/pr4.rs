@@ -97,10 +97,12 @@ pub(crate) fn replay(
     let sw = Stopwatch::start();
     let receivers: Vec<_> = log
         .iter()
+        // lint: allow(panic-in-lib) — bench harness: queues are sized for the log, a reject is a harness bug
         .map(|req| handle.submit(req.clone()).expect("bench queue sized for the log"))
         .collect();
     let mut sigs: Vec<ResponseSig> = vec![(RoutePath::Rt, Vec::new()); log.len()];
     for rx in receivers {
+        // lint: allow(panic-in-lib) — bench harness: a dead worker invalidates the measurement
         let resp = rx.recv().expect("worker died mid-bench");
         let sig = resp
             .neighbors

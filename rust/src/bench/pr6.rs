@@ -1,0 +1,99 @@
+//! The PR6 perf microbench: the lint gate's own cost, emitted as
+//! `BENCH_PR6.json` alongside `BENCH_PR2/.../PR5.json`.
+//!
+//! `trueknn lint` runs as a blocking CI job and as a tier-1 test
+//! (`tests/lint_suite.rs` asserts the live tree is finding-free), so
+//! the analyzer itself must never become the slow step of the gate.
+//! This bench times a full lex + rule sweep over `rust/src` with the
+//! repo `lint.toml` (best of `iters`) and holds it to
+//! [`BUDGET_SECONDS`]; `trueknn bench` fails the run if the analyzer
+//! blows the budget, putting the gate's cost on the same perf
+//! trajectory CI already archives.
+
+use crate::analysis::{self, LintConfig};
+use crate::configx::Json;
+use crate::util::Stopwatch;
+
+use super::{fmt_secs, Table};
+
+/// The analyzer must sweep the whole tree in under this many seconds.
+pub const BUDGET_SECONDS: f64 = 2.0;
+
+#[derive(Clone, Debug)]
+pub struct Pr6Report {
+    /// `.rs` files swept.
+    pub files: usize,
+    /// Source lines swept.
+    pub lines: u64,
+    /// Findings on the live tree (0 on a green tree).
+    pub findings: usize,
+    /// Best-of-`iters` wall seconds for one full sweep.
+    pub lint_seconds: f64,
+    /// The enforced ceiling ([`BUDGET_SECONDS`]).
+    pub budget_seconds: f64,
+    pub iters: usize,
+}
+
+impl Pr6Report {
+    /// Did the sweep stay under the CI budget?
+    pub fn under_budget(&self) -> bool {
+        self.lint_seconds < self.budget_seconds
+    }
+}
+
+/// Time the analyzer over the crate's own `src/` with the repo
+/// `lint.toml`. Paths resolve via `CARGO_MANIFEST_DIR`, so this works
+/// from any working directory on the machine that built the binary.
+pub fn run(iters: usize) -> Result<Pr6Report, String> {
+    let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let cfg = LintConfig::load(&manifest.join("lint.toml"))?;
+    let root = manifest.join("src");
+    let mut best = f64::INFINITY;
+    let mut last = None;
+    for _ in 0..iters.max(1) {
+        let sw = Stopwatch::start();
+        let report = analysis::run_tree(&root, &cfg)?;
+        let s = sw.elapsed_secs();
+        if s < best {
+            best = s;
+        }
+        last = Some(report);
+    }
+    let report = last.ok_or("lint bench produced no report")?;
+    Ok(Pr6Report {
+        files: report.files,
+        lines: report.lines,
+        findings: report.findings.len(),
+        lint_seconds: best,
+        budget_seconds: BUDGET_SECONDS,
+        iters: iters.max(1),
+    })
+}
+
+pub fn to_json(r: &Pr6Report) -> Json {
+    Json::obj(vec![
+        ("files", Json::Num(r.files as f64)),
+        ("lines", Json::Num(r.lines as f64)),
+        ("findings", Json::Num(r.findings as f64)),
+        ("lint_seconds", Json::Num(r.lint_seconds)),
+        ("budget_seconds", Json::Num(r.budget_seconds)),
+        ("under_budget", Json::Bool(r.under_budget())),
+        ("iters", Json::Num(r.iters as f64)),
+    ])
+}
+
+pub fn render(r: &Pr6Report) -> Table {
+    let mut t = Table::new(
+        "PR6: determinism-lint gate cost",
+        &["files", "lines", "findings", "lint", "budget", "ok"],
+    );
+    t.row(vec![
+        r.files.to_string(),
+        r.lines.to_string(),
+        r.findings.to_string(),
+        fmt_secs(r.lint_seconds),
+        fmt_secs(r.budget_seconds),
+        if r.under_budget() { "yes" } else { "NO" }.to_string(),
+    ]);
+    t
+}

@@ -151,7 +151,7 @@ impl Bvh {
             consumed = end;
         }
 
-        std::thread::scope(|s| {
+        crate::exec::scope(|s| {
             // Static round-robin over the index-sorted blocks: adjacent
             // blocks (which share subtree depth, hence size class) land
             // on different workers. Bucket 0 runs on the calling thread.

@@ -187,7 +187,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn expect(&mut self, b: u8) -> Result<(), JsonError> {
+    fn expect_byte(&mut self, b: u8) -> Result<(), JsonError> {
         let got = self.bump()?;
         if got != b {
             return Err(JsonError::Unexpected(got as char, self.pos - 1));
@@ -197,7 +197,7 @@ impl<'a> Parser<'a> {
 
     fn lit(&mut self, word: &str, v: Json) -> Result<Json, JsonError> {
         for &c in word.as_bytes() {
-            self.expect(c)?;
+            self.expect_byte(c)?;
         }
         Ok(v)
     }
@@ -217,7 +217,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String, JsonError> {
-        self.expect(b'"')?;
+        self.expect_byte(b'"')?;
         let mut s = String::new();
         loop {
             let b = self.bump()?;
@@ -270,14 +270,17 @@ impl<'a> Parser<'a> {
         while matches!(self.peek(), Some(b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')) {
             self.pos += 1;
         }
-        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        // the scanned bytes are all ASCII digits/signs, but propagate
+        // rather than assert — a number error is already representable
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| JsonError::BadNumber(start))?;
         text.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| JsonError::BadNumber(start))
     }
 
     fn array(&mut self) -> Result<Json, JsonError> {
-        self.expect(b'[')?;
+        self.expect_byte(b'[')?;
         let mut v = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
@@ -296,7 +299,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, JsonError> {
-        self.expect(b'{')?;
+        self.expect_byte(b'{')?;
         let mut m = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
@@ -307,7 +310,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             let k = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
+            self.expect_byte(b':')?;
             let v = self.value()?;
             m.insert(k, v);
             self.skip_ws();

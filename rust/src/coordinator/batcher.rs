@@ -33,11 +33,13 @@ pub struct Batch {
 }
 
 impl Batch {
+    /// Total flattened query count across every request in the batch.
     pub fn total_queries(&self) -> usize {
         self.ranges.last().map(|r| r.1).unwrap_or(0)
     }
 }
 
+/// Size bounds that trip a batch flush.
 #[derive(Clone, Debug)]
 pub struct BatcherConfig {
     /// Flush a batch when it reaches this many queries.
@@ -63,6 +65,7 @@ pub struct DynamicBatcher {
 }
 
 impl DynamicBatcher {
+    /// An empty batcher with the given flush bounds.
     pub fn new(cfg: BatcherConfig) -> Self {
         Self {
             cfg,
@@ -70,6 +73,8 @@ impl DynamicBatcher {
         }
     }
 
+    /// Queue one routed request (with its submit-time shard pin and
+    /// arrival instant) for batching.
     pub fn push(
         &mut self,
         req: KnnRequest,
@@ -80,6 +85,7 @@ impl DynamicBatcher {
         self.pending.push((req, path, shard, arrived));
     }
 
+    /// Requests queued but not yet shipped in a batch.
     pub fn pending_len(&self) -> usize {
         self.pending.len()
     }

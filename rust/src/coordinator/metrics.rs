@@ -33,8 +33,11 @@ pub struct WorkerMetrics {
     pub queue_hwm: AtomicU64,
 }
 
+/// Shared counter registry of the service: every field is updated with
+/// relaxed atomics on the hot path and read via [`Metrics::snapshot`].
 #[derive(Default)]
 pub struct Metrics {
+    /// Requests accepted by `submit` (scattered sub-batches excluded).
     pub requests: AtomicU64,
     pub responses: AtomicU64,
     pub rejected: AtomicU64,
@@ -61,8 +64,10 @@ pub struct Metrics {
     latency: Mutex<OnlineStats>,
 }
 
+/// Plain-value copy of one worker's [`WorkerMetrics`] slot.
 #[derive(Clone, Debug)]
 pub struct WorkerSnapshot {
+    /// Messages accepted into this worker's queue.
     pub submitted: u64,
     pub rejected: u64,
     pub batches: u64,
@@ -71,8 +76,11 @@ pub struct WorkerSnapshot {
     pub queue_hwm: u64,
 }
 
+/// Point-in-time copy of the whole registry, with per-route build
+/// gauges resolved to plain values in [`RoutePath::ALL`] order.
 #[derive(Clone, Debug)]
 pub struct MetricsSnapshot {
+    /// Requests accepted by `submit`.
     pub requests: u64,
     pub responses: u64,
     pub rejected: u64,
@@ -117,10 +125,12 @@ impl Metrics {
         }
     }
 
+    /// Bump a counter by one (relaxed).
     pub fn inc(counter: &AtomicU64) {
         counter.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Bump a counter by `v` (relaxed).
     pub fn add(counter: &AtomicU64, v: u64) {
         counter.fetch_add(v, Ordering::Relaxed);
     }
@@ -138,12 +148,22 @@ impl Metrics {
         self.shard_builds[shard].store(builds, Ordering::Relaxed);
     }
 
+    /// Fold one request latency into the online accumulator.
     pub fn record_latency(&self, seconds: f64) {
-        self.latency.lock().unwrap().push(seconds);
+        // poison only means another recorder panicked mid-push; the
+        // accumulator itself is still consistent, so keep recording
+        self.latency
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .push(seconds);
     }
 
+    /// Consistent point-in-time copy of every counter and gauge.
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let lat = self.latency.lock().unwrap();
+        let lat = self
+            .latency
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
         let route_builds: Vec<(RoutePath, u64)> = RoutePath::ALL
             .iter()
             .map(|&p| {

@@ -25,7 +25,10 @@ pub enum RoutePath {
 }
 
 impl RoutePath {
+    /// Every route path, in dense-[`RoutePath::index`] order — the one
+    /// deterministic iteration order for per-route state.
     pub const ALL: [RoutePath; 3] = [RoutePath::Rt, RoutePath::Brute, RoutePath::BruteCpu];
+    /// Number of route paths (`ALL.len()`).
     pub const COUNT: usize = 3;
 
     /// Dense index into per-route metric tables.
@@ -37,6 +40,7 @@ impl RoutePath {
         }
     }
 
+    /// Stable human-readable label (metrics lines, CLI summaries).
     pub fn name(self) -> &'static str {
         match self {
             RoutePath::Rt => "rt",
@@ -46,6 +50,7 @@ impl RoutePath {
     }
 }
 
+/// One client request: `k` neighbors for each query point.
 #[derive(Clone, Debug)]
 pub struct KnnRequest {
     pub id: u64,
@@ -55,6 +60,7 @@ pub struct KnnRequest {
 }
 
 impl KnnRequest {
+    /// A request with the default [`QueryMode::Auto`] routing.
     pub fn new(id: u64, queries: Vec<Point3>, k: usize) -> Self {
         Self {
             id,
@@ -64,12 +70,14 @@ impl KnnRequest {
         }
     }
 
+    /// Same request with the execution path forced.
     pub fn with_mode(mut self, mode: QueryMode) -> Self {
         self.mode = mode;
         self
     }
 }
 
+/// The service's answer to one [`KnnRequest`].
 #[derive(Clone, Debug)]
 pub struct KnnResponse {
     pub id: u64,

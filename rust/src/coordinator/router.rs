@@ -29,6 +29,7 @@
 
 use super::request::{KnnRequest, QueryMode, RoutePath};
 
+/// Thresholds of the RT-vs-brute crossover policy.
 #[derive(Clone, Debug)]
 pub struct RouterConfig {
     /// Below this many data points, brute force always wins.
@@ -50,6 +51,8 @@ impl Default for RouterConfig {
     }
 }
 
+/// Stateless route picker: holds the [`RouterConfig`] thresholds and
+/// exposes the pure worker-assignment functions.
 #[derive(Clone, Debug)]
 pub struct Router {
     cfg: RouterConfig,
@@ -74,6 +77,7 @@ fn splitmix64(mut x: u64) -> u64 {
 const SPREAD_SALT: u64 = 7;
 
 impl Router {
+    /// A router with the given crossover thresholds.
     pub fn new(cfg: RouterConfig) -> Self {
         Self { cfg }
     }
@@ -87,6 +91,7 @@ impl Router {
             .max_by_key(|&w| {
                 splitmix64(SPREAD_SALT ^ (((path.index() as u64) << 32) | (w as u64 + 1)))
             })
+            // lint: allow(panic-in-lib) — 0..workers is non-empty (asserted above)
             .expect("non-empty range")
     }
 

@@ -71,6 +71,8 @@ use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+/// Tuning knobs of the batching query service (pool size, queue depth,
+/// routing, RT-route sharding, TrueKNN parameters).
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
     pub batcher: BatcherConfig,
@@ -117,6 +119,7 @@ impl Default for ServiceConfig {
     }
 }
 
+/// Why a submit was refused: backpressure or a stopped pool.
 #[derive(Debug, PartialEq, Eq)]
 pub enum ServiceError {
     QueueFull,
@@ -209,6 +212,7 @@ impl ServiceHandle {
             let w = Router::worker_for(path, self.txs.len());
             self.try_send(
                 w,
+                // lint: allow(wallclock-in-core) — submit timestamp feeds latency telemetry only, never results
                 Msg::Request(req, path, None, ReplySink::Direct(tx), Instant::now()),
             )?;
         }
@@ -261,6 +265,7 @@ impl ServiceHandle {
             id: req.id,
             k: req.k,
             path,
+            // lint: allow(wallclock-in-core) — submit timestamp feeds latency telemetry only, never results
             submitted: Instant::now(),
             state: Mutex::new(GatherState {
                 reply: Some(reply),
@@ -281,12 +286,18 @@ impl ServiceHandle {
                         path,
                         Some(s),
                         ReplySink::Gather(gather.clone()),
+                        // lint: allow(wallclock-in-core) — per-shard arrival stamp is telemetry only
                         Instant::now(),
                     ),
                 )
             })
             .collect();
-        let _order = self.insert_lock.lock().unwrap();
+        // a poisoned lock only means another handle's thread panicked
+        // mid-scatter; the ordering guard itself carries no data
+        let _order = self
+            .insert_lock
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
         for (w, msg) in msgs {
             self.try_send(w, msg)?;
         }
@@ -315,7 +326,11 @@ impl ServiceHandle {
         // one global insert order across all workers: without the lock,
         // two concurrent inserts could land as [A, B] on one worker and
         // [B, A] on another, forking point ids between routes
-        let _broadcast = self.insert_lock.lock().unwrap();
+        // see scatter(): the guard carries no data, poison is harmless
+        let _broadcast = self
+            .insert_lock
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
         for (w, tx) in self.txs.iter().enumerate() {
             let wm = &self.metrics.workers[w];
             let depth = wm.queue_depth.fetch_add(1, Ordering::SeqCst) + 1;
@@ -332,10 +347,13 @@ impl ServiceHandle {
         Ok(())
     }
 
+    /// Live service counters (shared across every handle and worker).
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
     }
 
+    /// Requests accepted but not yet answered (scatter legs count per
+    /// shard).
     pub fn inflight(&self) -> usize {
         self.inflight.load(Ordering::SeqCst)
     }
@@ -449,10 +467,12 @@ impl Service {
         )
     }
 
+    /// A fresh submitting handle onto this pool.
     pub fn handle(&self) -> ServiceHandle {
         self.handle.clone()
     }
 
+    /// Signal every worker, serve what's queued, and join the pool.
     pub fn shutdown(mut self) {
         self.shutdown_and_join();
         // Drop runs next but finds the pool already drained: exactly one
@@ -562,6 +582,7 @@ impl IndexRegistry {
             return;
         }
         let part: Partition = partition
+            // lint: allow(panic-in-lib) — Service::start always builds the partition when shards > 1; a miss is a construction bug
             .expect("sharded service must hand its workers the start partition")
             .as_ref()
             .clone();
@@ -653,6 +674,7 @@ impl IndexRegistry {
             };
             self.install(path, index, metrics);
         }
+        // lint: allow(panic-in-lib) — the branch above inserts the key when absent; infallible by construction
         self.by_path.get_mut(&path).expect("just inserted")
     }
 
@@ -692,9 +714,14 @@ impl IndexRegistry {
             }
         }
         self.extra.extend_from_slice(points);
-        for (path, index) in self.by_path.iter_mut() {
-            index.insert(points);
-            metrics.set_route_builds(*path, index.build_stats().counters.builds);
+        // fixed route order (RoutePath::ALL), not a HashMap walk: insert
+        // application and gauge refresh must happen in the same order on
+        // every worker and every run
+        for path in RoutePath::ALL {
+            if let Some(index) = self.by_path.get_mut(&path) {
+                index.insert(points);
+                metrics.set_route_builds(path, index.build_stats().counters.builds);
+            }
         }
         let total = self.base.len() + self.extra.len();
         if self.partition.as_ref().is_some_and(|p| p.overflowed(total)) {
@@ -710,19 +737,17 @@ impl IndexRegistry {
         let exec = Executor::new(self.trueknn.threads);
         let data = self.full_data();
         let part = Partition::build(&data, self.shards, &exec);
-        let mut retired: HashMap<usize, u64> = self
-            .shard_slots
-            .drain()
-            .map(|(s, slot)| {
-                (
-                    s,
-                    slot.retired_builds + slot.index.build_stats().counters.builds,
-                )
-            })
-            .collect();
+        // retire and rebuild in my_shards order (ascending by
+        // construction) — slots only ever exist for owned shards, so the
+        // keyed removes cover everything a drain() would have, without
+        // the HashMap's randomized visit order
         let owned = self.my_shards.clone();
         for s in owned {
-            let slot = self.build_shard_slot(&data, &part, s, retired.remove(&s).unwrap_or(0));
+            let retired = match self.shard_slots.remove(&s) {
+                Some(old) => old.retired_builds + old.index.build_stats().counters.builds,
+                None => 0,
+            };
+            let slot = self.build_shard_slot(&data, &part, s, retired);
             metrics.set_shard_builds(
                 s,
                 slot.retired_builds + slot.index.build_stats().counters.builds,
@@ -889,6 +914,7 @@ fn drain(
     while let Some(batch) = batcher.next_batch() {
         Metrics::inc(&metrics.batches);
         Metrics::inc(&metrics.workers[worker_id].batches);
+        // lint: allow(wallclock-in-core) — service-time stamp feeds latency telemetry only, never results
         let served = Instant::now();
         let all_queries: Vec<Point3> = batch
             .requests
@@ -912,6 +938,7 @@ fn drain(
             let slot = registry
                 .shard_slots
                 .get_mut(&s)
+                // lint: allow(panic-in-lib) — routing is the same pure function the handle used; owners build eagerly
                 .expect("shard batch routed to a non-owner worker");
             let res = slot.index.knn(&all_queries, batch.k);
             metrics.set_shard_builds(
@@ -921,6 +948,7 @@ fn drain(
             let ids = &registry
                 .partition
                 .as_ref()
+                // lint: allow(panic-in-lib) — shard owners install the partition before the ready handshake
                 .expect("shard batch without a partition")
                 .shards[s]
                 .ids;
@@ -992,7 +1020,12 @@ fn deliver_partial(
     metrics: &Arc<Metrics>,
 ) {
     let done = {
-        let mut st = g.state.lock().unwrap();
+        // poisoned only if a sibling delivery panicked; the partials it
+        // already parked are still exactly the data we need
+        let mut st = g
+            .state
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
         if st.partials[shard].is_none() {
             st.filled += 1;
         }
@@ -1001,8 +1034,12 @@ fn deliver_partial(
         if st.filled < st.partials.len() {
             None
         } else {
-            let parts: Vec<Vec<Vec<Neighbor>>> =
-                st.partials.iter_mut().map(|p| p.take().expect("filled")).collect();
+            let parts: Vec<Vec<Vec<Neighbor>>> = st
+                .partials
+                .iter_mut()
+                // lint: allow(panic-in-lib) — filled == len means every slot is Some; checked on the line above
+                .map(|p| p.take().expect("filled"))
+                .collect();
             // the reply moves out with us; the merge runs off the lock
             let slowest = st.service_seconds;
             st.reply.take().map(|reply| (parts, slowest, reply))

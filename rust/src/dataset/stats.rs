@@ -27,7 +27,7 @@ impl DistanceProfile {
             let far = nn.last().map(|h| h.dist as f64).unwrap_or(0.0);
             kth.push(far);
         }
-        kth.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        kth.sort_by(f64::total_cmp);
         DistanceProfile { kth_dists: kth, k }
     }
 

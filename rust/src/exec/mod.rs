@@ -130,6 +130,7 @@ impl Executor {
             let mut out = Vec::with_capacity(ranges.len());
             out.push(f(0, ranges[0].clone()));
             for h in handles {
+                // lint: allow(panic-in-lib) — join only errs if the worker panicked; re-raising is the correct propagation
                 out.push(h.join().expect("exec worker panicked"));
             }
             out
@@ -245,8 +246,25 @@ where
     std::thread::scope(|s| {
         let hb = s.spawn(fb);
         let a = fa();
+        // lint: allow(panic-in-lib) — join only errs if the worker panicked; re-raising is the correct propagation
         (a, hb.join().expect("exec join worker panicked"))
     })
+}
+
+/// The sanctioned scoped-spawn chokepoint for callers outside `exec`.
+///
+/// The `raw-threads` lint confines `std::thread::{spawn, scope}` to this
+/// module and the coordinator service loop; everything else that needs
+/// hand-rolled fan-out (the RT pipeline's shard workers, the BVH refit
+/// frontier, the radix scatter phase) goes through this wrapper. The
+/// callers keep the determinism discipline themselves — disjoint writes,
+/// shard-order joins — but routing them here makes every spawn site in
+/// the crate greppable from one place.
+pub fn scope<'env, F, T>(f: F) -> T
+where
+    F: for<'scope> FnOnce(&'scope std::thread::Scope<'scope, 'env>) -> T,
+{
+    std::thread::scope(f)
 }
 
 #[cfg(test)]

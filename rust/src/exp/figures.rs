@@ -73,6 +73,7 @@ pub fn fig4(scale: ExpScale) -> Vec<Fig4Row> {
                 Some(rt) => {
                     let b = crate::runtime::PjrtBruteForce::new(rt)
                         .knn(&ds.points, queries, 5, false)
+                        // lint: allow(panic-in-lib) — experiment driver: a dead runtime should abort the figure run
                         .expect("pjrt brute force");
                     (b.wall_seconds, "pjrt")
                 }

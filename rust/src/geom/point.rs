@@ -122,6 +122,7 @@ impl Index<usize> for Point3 {
             0 => &self.x,
             1 => &self.y,
             2 => &self.z,
+            // lint: allow(panic-in-lib) — std Index contract: out-of-bounds must panic, like slice indexing
             _ => panic!("Point3 index {i} out of range"),
         }
     }

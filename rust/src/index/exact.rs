@@ -23,6 +23,9 @@ const PAR_EXACT_MIN_QUERIES: usize = 16;
 
 // ---------------------------------------------------------------- kdtree
 
+/// Exact kd-tree oracle: median-split tree built once, descended per
+/// query. The correctness reference every other backend is checked
+/// against.
 pub struct KdTreeIndex {
     cfg: IndexConfig,
     data: Vec<Point3>,
@@ -33,6 +36,7 @@ pub struct KdTreeIndex {
 }
 
 impl KdTreeIndex {
+    /// Build the kd-tree over `data` (the timed "structure build").
     pub fn new(data: Vec<Point3>, cfg: IndexConfig) -> Self {
         let sw = Stopwatch::start();
         let tree = KdTree::build(&data);
@@ -142,6 +146,8 @@ impl NeighborIndex for KdTreeIndex {
 
 // ------------------------------------------------------------- brute cpu
 
+/// Exhaustive CPU scan: no structure at all, every query checks every
+/// point. The floor any acceleration claim is measured against.
 pub struct BruteCpuIndex {
     cfg: IndexConfig,
     data: Vec<Point3>,
@@ -149,6 +155,7 @@ pub struct BruteCpuIndex {
 }
 
 impl BruteCpuIndex {
+    /// Wrap `data` (no build work; brute force has no structure).
     pub fn new(data: Vec<Point3>, cfg: IndexConfig) -> Self {
         let exec = Executor::new(cfg.threads);
         BruteCpuIndex { cfg, data, exec }
@@ -309,6 +316,7 @@ pub struct BrutePjrtIndex {
 }
 
 impl BrutePjrtIndex {
+    /// Load the default PJRT artifacts (warning + CPU fallback if absent).
     pub fn new(data: Vec<Point3>, cfg: IndexConfig) -> Self {
         let runtime = match PjrtRuntime::load_default() {
             Ok(rt) => Some(rt),
@@ -332,6 +340,7 @@ impl BrutePjrtIndex {
         }
     }
 
+    /// Did the PJRT runtime actually load? (Else queries take the CPU scan.)
     pub fn pjrt_available(&self) -> bool {
         self.runtime.is_some()
     }

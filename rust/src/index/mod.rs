@@ -69,6 +69,8 @@ pub enum Backend {
 }
 
 impl Backend {
+    /// Every backend, in the fixed presentation order used by sweeps
+    /// and CLI listings.
     pub const ALL: [Backend; 6] = [
         Backend::TrueKnn,
         Backend::FixedRadius,
@@ -78,6 +80,7 @@ impl Backend {
         Backend::BrutePjrt,
     ];
 
+    /// Stable CLI/report label (also the `FromStr` canonical form).
     pub fn name(&self) -> &'static str {
         match self {
             Backend::TrueKnn => "trueknn",
@@ -242,6 +245,7 @@ pub struct IndexBuilder {
 }
 
 impl IndexBuilder {
+    /// A builder for `backend` with the default [`IndexConfig`].
     pub fn new(backend: Backend) -> Self {
         Self {
             backend,
@@ -255,41 +259,49 @@ impl IndexBuilder {
         self
     }
 
+    /// Drop each query point itself from its own result list.
     pub fn exclude_self(mut self, v: bool) -> Self {
         self.cfg.exclude_self = v;
         self
     }
 
+    /// Seed for the backend's internal sampling (start-radius probe).
     pub fn seed(mut self, v: u64) -> Self {
         self.cfg.seed = v;
         self
     }
 
+    /// Cost model used to synthesize the modeled-GPU timing estimates.
     pub fn cost_model(mut self, m: CostModel) -> Self {
         self.cfg.cost_model = m;
         self
     }
 
+    /// Override TrueKNN's sampled initial search radius.
     pub fn start_radius(mut self, r: f32) -> Self {
         self.cfg.start_radius = Some(r);
         self
     }
 
+    /// Cap TrueKNN's radius growth (trades completeness for time).
     pub fn radius_cap(mut self, r: f32) -> Self {
         self.cfg.radius_cap = Some(r);
         self
     }
 
+    /// Bound the number of radius-doubling rounds (0 = unbounded).
     pub fn max_rounds(mut self, n: usize) -> Self {
         self.cfg.max_rounds = n;
         self
     }
 
+    /// Fixed search radius for the fixed-radius/RTNN baselines.
     pub fn radius(mut self, r: f32) -> Self {
         self.cfg.radius = Some(r);
         self
     }
 
+    /// Query partitions per round (RTNN batching knob).
     pub fn partitions(mut self, n: usize) -> Self {
         self.cfg.partitions = n;
         self
@@ -361,6 +373,7 @@ pub(crate) struct RangeCollect {
 }
 
 impl RangeCollect {
+    /// Empty collector with one result bucket per query.
     pub fn new(n_queries: usize, exclude_self: bool) -> Self {
         Self {
             per_query: vec![Vec::new(); n_queries],

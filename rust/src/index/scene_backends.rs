@@ -20,6 +20,8 @@ use crate::knn::{KnnResult, RoundStats};
 use crate::rt::{HwCounters, Pipeline, Scene};
 use crate::util::Stopwatch;
 
+/// Fixed-radius RT-kNNS baseline (Alg. 1): one scene at a
+/// completeness-guaranteeing radius, one traversal per query.
 pub struct FixedRadiusIndex {
     cfg: IndexConfig,
     radius: f32,
@@ -29,6 +31,8 @@ pub struct FixedRadiusIndex {
 }
 
 impl FixedRadiusIndex {
+    /// Build the scene at `cfg.radius` (default: the data-diagonal
+    /// complete-search radius).
     pub fn new(data: Vec<Point3>, cfg: IndexConfig) -> Self {
         let sw = Stopwatch::start();
         let radius = cfg.radius.unwrap_or_else(|| default_radius(&data));
@@ -45,6 +49,7 @@ impl FixedRadiusIndex {
         }
     }
 
+    /// The fixed search radius the scene was built at.
     pub fn radius(&self) -> f32 {
         self.radius
     }
@@ -132,6 +137,8 @@ impl NeighborIndex for FixedRadiusIndex {
     }
 }
 
+/// RTNN-style baseline: fixed radius plus Morton query reordering and
+/// query partitioning.
 pub struct RtnnIndex {
     cfg: IndexConfig,
     radius: f32,
@@ -141,6 +148,8 @@ pub struct RtnnIndex {
 }
 
 impl RtnnIndex {
+    /// Build the scene at `cfg.radius` (default: the data-diagonal
+    /// complete-search radius).
     pub fn new(data: Vec<Point3>, cfg: IndexConfig) -> Self {
         let sw = Stopwatch::start();
         let radius = cfg.radius.unwrap_or_else(|| default_radius(&data));

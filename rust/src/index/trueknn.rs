@@ -40,6 +40,8 @@ use crate::util::Stopwatch;
 /// length check per query — very cheap per item).
 const PAR_BOOKKEEPING_MIN: usize = 1024;
 
+/// The paper's TrueKNN (Alg. 3): multi-round growing-radius search with
+/// per-round retire filtering and shell re-query.
 pub struct TrueKnnIndex {
     cfg: IndexConfig,
     scene: Scene,
@@ -54,6 +56,8 @@ pub struct TrueKnnIndex {
 }
 
 impl TrueKnnIndex {
+    /// Build the scene and sample the Alg. 2 start radius (unless
+    /// overridden via `cfg.start_radius`).
     pub fn new(data: Vec<Point3>, cfg: IndexConfig) -> Self {
         let sw = Stopwatch::start();
         let start_radius = cfg

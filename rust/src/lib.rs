@@ -66,7 +66,42 @@
 //! | `knn::kdtree::KdTree::knn`  | [`index::Backend::KdTree`]     |
 //! | `knn::brute::brute_knn`     | [`index::Backend::BruteCpu`]   |
 //! | `runtime::PjrtBruteForce`   | [`index::Backend::BrutePjrt`]  |
+//!
+//! # Determinism contract
+//!
+//! Results **and** counters are bitwise-identical at any threads ×
+//! workers × shards. The contract is enforced statically by
+//! `trueknn lint` ([`analysis`]), whose rules cite it by id:
+//!
+//! * `unordered-iteration` — no `HashMap`/`HashSet` walk may feed a
+//!   result, snapshot, or emission path; iterate sorted keys or an
+//!   ordered structure. Keyed access is order-free and stays legal.
+//! * `wallclock-in-core` — `Instant::now`/`SystemTime` live only in
+//!   the measurement shells (`bench`, `exp`, `util::timer`); core and
+//!   merge paths are replayable.
+//! * `raw-threads` — all fan-out goes through [`exec::Executor`] /
+//!   [`exec::scope`] or the coordinator service loop; no raw
+//!   `thread::spawn` elsewhere.
+//! * `sync-in-exec` — the exec engine is lock-free: workers write
+//!   disjoint slots, merges are sequential; no `Mutex`/`Atomic*`/`mpsc`
+//!   inside `exec/`.
+//! * `float-reduce-order` — float reductions in parallel-reachable
+//!   modules use ordered sequential merges, never chunk-shaped
+//!   `.sum::<f32>()`/`fold` reassociation.
+//! * `panic-in-lib` — library code propagates errors; every remaining
+//!   `unwrap`/`expect` carries an inline justified allow.
+//! * `truncating-id-cast` — id arithmetic never truncates through
+//!   bare `as u32`/`as usize` in merge/remap paths; widening goes
+//!   through checked helpers.
+//! * `pub-missing-docs` — the `index`/`shard`/`coordinator` public API
+//!   documents its contracts.
+//!
+//! `cargo run --release -- lint` exits with the finding count; the CI
+//! `determinism-lint` job and `tests/lint_suite.rs` both gate on zero.
 
+#![forbid(unsafe_code)]
+
+pub mod analysis;
 pub mod util;
 pub mod exec;
 pub mod geom;

@@ -6,7 +6,8 @@
 //! trueknn exp       regenerate a paper table/figure (table1|fig6|...)
 //! trueknn runtime   inspect/smoke-test the PJRT artifacts
 //! trueknn serve     run the batching query service demo (worker pool)
-//! trueknn bench     perf microbenches, writes BENCH_PR2/PR3/PR4/PR5.json
+//! trueknn bench     perf microbenches, writes BENCH_PR2/.../PR6.json
+//! trueknn lint      determinism-contract analyzer (exit = finding count)
 //! ```
 
 use trueknn::cli::{Args, CliError, Command};
@@ -26,6 +27,9 @@ fn main() {
         Some("runtime") => dispatch(cmd_runtime(), &argv[1..], run_runtime),
         Some("serve") => dispatch(cmd_serve(), &argv[1..], run_serve),
         Some("bench") => dispatch(cmd_bench(), &argv[1..], run_bench),
+        // lint bypasses dispatch(): its exit code is the finding count,
+        // not the 0/1 ok/error convention
+        Some("lint") => run_lint(&argv[1..]),
         Some("--help") | Some("-h") | None => {
             print_usage();
             0
@@ -47,7 +51,8 @@ fn print_usage() {
     println!("  exp      regenerate a paper table/figure");
     println!("  runtime  inspect the PJRT artifacts");
     println!("  serve    run the batching query service demo (worker pool)");
-    println!("  bench    perf microbenches (BENCH_PR2/PR3/PR4/PR5.json)");
+    println!("  bench    perf microbenches (BENCH_PR2/.../PR6.json)");
+    println!("  lint     determinism-contract analyzer (exit code = finding count)");
     println!("run `trueknn <command> --help` for options");
 }
 
@@ -380,7 +385,7 @@ fn run_runtime(a: &Args) -> Result<(), String> {
     let mut names = rt.program_names();
     names.sort();
     for name in names {
-        let s = rt.spec(name).unwrap();
+        let Some(s) = rt.spec(name) else { continue };
         println!("  {name}: q={} n={} k={}", s.q, s.n, s.k);
     }
     if a.flag("smoke") {
@@ -530,12 +535,65 @@ fn run_serve(a: &Args) -> Result<(), String> {
     Ok(())
 }
 
+// ------------------------------------------------------------------ lint
+
+fn cmd_lint() -> Command {
+    Command::new(
+        "lint",
+        "run the determinism-contract analyzer (exit code = finding count)",
+    )
+    .opt("root", "source tree to scan", "src")
+    .opt("config", "lint.toml path", "lint.toml")
+    .flag("json", "emit the machine-readable JSON report")
+}
+
+/// `lint` has its own driver: the exit code is the number of findings
+/// (clamped to 200), so CI and scripts can gate on it directly.
+fn run_lint(argv: &[String]) -> i32 {
+    let cmd = cmd_lint();
+    let args = match cmd.parse(argv) {
+        Ok(a) => a,
+        Err(CliError::HelpRequested) => {
+            print!("{}", cmd.usage());
+            return 0;
+        }
+        Err(e) => {
+            eprintln!("{e}\n\n{}", cmd.usage());
+            return 2;
+        }
+    };
+    let root = std::path::PathBuf::from(args.get_str("root", "src"));
+    let config = std::path::PathBuf::from(args.get_str("config", "lint.toml"));
+    let cfg = match trueknn::analysis::LintConfig::load(&config) {
+        Ok(c) => c,
+        Err(e) => {
+            log_error!("{e}");
+            return 2;
+        }
+    };
+    match trueknn::analysis::run_tree(&root, &cfg) {
+        Ok(report) => {
+            if args.flag("json") {
+                let s = trueknn::analysis::to_json(&report).to_string();
+                println!("{s}");
+            } else {
+                print!("{}", trueknn::analysis::render_text(&report));
+            }
+            report.findings.len().min(200) as i32
+        }
+        Err(e) => {
+            log_error!("{e}");
+            2
+        }
+    }
+}
+
 // ----------------------------------------------------------------- bench
 
 fn cmd_bench() -> Command {
     Command::new(
         "bench",
-        "perf microbenches: launch throughput + shell re-query (PR2), SoA leaf loop + cohort scheduling + round bookkeeping (PR3), worker-pool serving throughput (PR4), sharded hot-route throughput (PR5)",
+        "perf microbenches: launch throughput + shell re-query (PR2), SoA leaf loop + cohort scheduling + round bookkeeping (PR3), worker-pool serving throughput (PR4), sharded hot-route throughput (PR5), determinism-lint gate cost (PR6)",
     )
     .opt("n", "points for the launch-throughput bench", "100000")
     .opt("shell-n", "points for the TrueKNN shell/round bench", "20000")
@@ -547,6 +605,7 @@ fn cmd_bench() -> Command {
     .opt("pr3-out", "PR3 output JSON path", "BENCH_PR3.json")
     .opt("pr4-out", "PR4 output JSON path", "BENCH_PR4.json")
     .opt("pr5-out", "PR5 output JSON path", "BENCH_PR5.json")
+    .opt("pr6-out", "PR6 output JSON path", "BENCH_PR6.json")
 }
 
 fn run_bench(a: &Args) -> Result<(), String> {
@@ -560,6 +619,7 @@ fn run_bench(a: &Args) -> Result<(), String> {
     let pr3_out = a.get_str("pr3-out", "BENCH_PR3.json");
     let pr4_out = a.get_str("pr4-out", "BENCH_PR4.json");
     let pr5_out = a.get_str("pr5-out", "BENCH_PR5.json");
+    let pr6_out = a.get_str("pr6-out", "BENCH_PR6.json");
 
     let report = trueknn::bench::pr2::run(n, shell_n, iters);
     trueknn::bench::pr2::render(&report).print();
@@ -599,5 +659,17 @@ fn run_bench(a: &Args) -> Result<(), String> {
     std::fs::write(&pr5_out, trueknn::bench::pr5::to_json(&pr5).to_string())
         .map_err(|e| e.to_string())?;
     log_info!("wrote {pr5_out}");
+
+    let pr6 = trueknn::bench::pr6::run(iters)?;
+    trueknn::bench::pr6::render(&pr6).print();
+    if !pr6.under_budget() {
+        return Err(format!(
+            "lint gate blew its budget: {:.3}s >= {:.1}s over {} files",
+            pr6.lint_seconds, pr6.budget_seconds, pr6.files
+        ));
+    }
+    std::fs::write(&pr6_out, trueknn::bench::pr6::to_json(&pr6).to_string())
+        .map_err(|e| e.to_string())?;
+    log_info!("wrote {pr6_out}");
     Ok(())
 }

@@ -184,9 +184,10 @@ impl Pipeline {
                 (r, shard)
             })
             .collect();
-        let shard_counters: Vec<HwCounters> = std::thread::scope(|s| {
+        let shard_counters: Vec<HwCounters> = crate::exec::scope(|s| {
             let mut handles = Vec::with_capacity(shards.len() - 1);
             let mut iter = shards.iter_mut();
+            // lint: allow(panic-in-lib) — launch_sharded is only called with ≥ 2 ranges (serial path handles the rest)
             let first = iter.next().expect("at least two shards");
             for (range, shard) in iter {
                 let rays = &rays[range.clone()];
@@ -203,6 +204,7 @@ impl Pipeline {
             Self::launch_slice(scene, &rays[first.0.clone()], &mut first.1, &mut stack, &mut c);
             out.push(c);
             for h in handles {
+                // lint: allow(panic-in-lib) — join only errs if the worker panicked; re-raising is the correct propagation
                 out.push(h.join().expect("launch worker panicked"));
             }
             out

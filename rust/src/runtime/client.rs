@@ -114,11 +114,16 @@ impl PjrtRuntime {
         Self::load(&dir)
     }
 
+    /// Names of every loaded program, sorted (stable listing order).
     #[cfg(trueknn_xla)]
     pub fn program_names(&self) -> Vec<&str> {
-        self.programs.keys().map(String::as_str).collect()
+        // lint: allow(unordered-iteration) — collected then sorted before return
+        let mut names: Vec<&str> = self.programs.keys().map(String::as_str).collect();
+        names.sort_unstable();
+        names
     }
 
+    /// Names of every loaded program, sorted (stable listing order).
     #[cfg(not(trueknn_xla))]
     pub fn program_names(&self) -> Vec<&str> {
         Vec::new()

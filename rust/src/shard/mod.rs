@@ -151,6 +151,8 @@ fn build_inner(
 }
 
 impl ShardedIndex {
+    /// Partition `data` into `cfg.shards` Morton runs and build one
+    /// `backend` index per shard.
     pub fn new(backend: Backend, data: Vec<Point3>, cfg: IndexConfig) -> Self {
         let sw = Stopwatch::start();
         let exec = Executor::new(cfg.threads);
@@ -169,6 +171,7 @@ impl ShardedIndex {
         }
     }
 
+    /// Number of per-shard sub-indexes.
     pub fn shard_count(&self) -> usize {
         self.inner.len()
     }

@@ -102,8 +102,22 @@ impl Partition {
         }
     }
 
+    /// Number of shards (fixed at build; rebalance rebuilds in place).
     pub fn shard_count(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Widen the `i`-th id of a batch starting at `first_id` into the
+    /// `u32` id space the indexes store. Checked, not cast: past
+    /// `u32::MAX` points a plain `as u32` would wrap two distinct
+    /// points onto one id and silently corrupt every downstream merge,
+    /// so overflow fails loudly at the widening site instead.
+    pub fn global_id(first_id: usize, i: usize) -> u32 {
+        match first_id.checked_add(i).and_then(|v| u32::try_from(v).ok()) {
+            Some(id) => id,
+            // lint: allow(panic-in-lib) — id-space exhaustion is silent corruption otherwise; aborting beats wraparound
+            None => panic!("global id {first_id}+{i} overflows the u32 id space"),
+        }
     }
 
     /// Current shard sizes (build members + routed inserts).
@@ -135,7 +149,7 @@ impl Partition {
             vec![(Vec::new(), Vec::new()); self.shards.len()];
         for (i, &p) in points.iter().enumerate() {
             let s = self.route(p);
-            grouped[s].0.push((first_id + i) as u32);
+            grouped[s].0.push(Self::global_id(first_id, i));
             grouped[s].1.push(p);
         }
         grouped

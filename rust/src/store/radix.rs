@@ -111,7 +111,7 @@ pub fn sort_morton_keys(keys: &mut Vec<(u32, u32)>, exec: &Executor) {
         }
         groups.push(gstart..BUCKETS);
 
-        std::thread::scope(|s| {
+        crate::exec::scope(|s| {
             let parts_ref = &parts;
             let mut rest: &mut [(u32, u32)] = &mut dst;
             let mut first: Option<(std::ops::Range<usize>, &mut [(u32, u32)])> = None;

@@ -28,6 +28,7 @@ where
         let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
         let mut rng = Pcg32::new(seed);
         if let Err(msg) = prop(&mut rng) {
+            // lint: allow(panic-in-lib) — test-harness API: the panic with the replay seed IS the failure report
             panic!(
                 "property '{name}' failed at case {case} (replay with TRUEKNN_PROP_SEED={base}): {msg}"
             );

@@ -79,7 +79,7 @@ pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
 /// Percentile of an unsorted slice (copies + sorts).
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     percentile_sorted(&v, q)
 }
 
