@@ -46,6 +46,13 @@
 //! * `pub-missing-docs` — the `index`/`shard`/`coordinator` public API
 //!   is the surface other layers build on; each `pub` item states its
 //!   contract.
+//! * `channel-unwrap-in-coordinator` — in the supervised pool a
+//!   disconnected channel is the *normal* signature of a worker
+//!   mid-restart or a pool tearing down, so `.send(…).unwrap()` /
+//!   `.recv().expect(…)` in the coordinator turns every recovery path
+//!   into a second panic site; the `Result` must flow into explicit
+//!   handling. Scoped to `coordinator`; the supervisor module — the
+//!   recovery path itself — is exempt via `lint.toml`.
 //! * `bare-allow` — meta-rule: an inline `lint: allow(…)` without a
 //!   justification, or naming an unknown rule id, is itself a finding,
 //!   so the suppression mechanism can't rot.

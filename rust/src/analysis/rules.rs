@@ -33,6 +33,7 @@ pub const RULES: &[&str] = &[
     "panic-in-lib",
     "truncating-id-cast",
     "pub-missing-docs",
+    "channel-unwrap-in-coordinator",
     "bare-allow",
 ];
 
@@ -48,6 +49,7 @@ pub fn scan(toks: &[Tok], lexed: &Lexed) -> Vec<RawFinding> {
     panic_in_lib(toks, &mut out);
     truncating_id_cast(toks, &mut out);
     pub_missing_docs(toks, lexed, &mut out);
+    channel_unwrap_in_coordinator(toks, &mut out);
     out
 }
 
@@ -438,6 +440,71 @@ fn paren_group_has_arith(toks: &[Tok], close: usize) -> bool {
         }
         j -= 1;
     }
+}
+
+// ---------------------------------------------------------------------
+// channel-unwrap-in-coordinator
+// ---------------------------------------------------------------------
+
+const CHANNEL_METHODS: &[&str] = &["send", "try_send", "recv", "try_recv", "recv_timeout"];
+
+/// In the coordinator a disconnected channel is not a bug — it is the
+/// normal signature of a worker mid-restart under its supervisor, or a
+/// pool tearing down. Unwrapping a channel `send`/`recv` result turns
+/// every recovery path into a second panic site (and a crash loop when
+/// the supervisor's own replies hit it). The rule flags
+/// `.send(…).unwrap()` / `.recv().expect(…)` shapes — the `Result` must
+/// flow into explicit recovery handling (`let _ =`, `match`, `?`,
+/// `map_err`).
+fn channel_unwrap_in_coordinator(toks: &[Tok], out: &mut Vec<RawFinding>) {
+    for i in 0..toks.len() {
+        if !punct_at(toks, i, '.') {
+            continue;
+        }
+        let Some(method) = ident_at(toks, i + 1) else {
+            continue;
+        };
+        if !CHANNEL_METHODS.contains(&method) || !punct_at(toks, i + 2, '(') {
+            continue;
+        }
+        let Some(close) = matching_close(toks, i + 2) else {
+            continue;
+        };
+        if punct_at(toks, close + 1, '.')
+            && ident_at(toks, close + 2).is_some_and(|m| m == "unwrap" || m == "expect")
+            && punct_at(toks, close + 3, '(')
+        {
+            out.push(RawFinding {
+                rule: "channel-unwrap-in-coordinator",
+                line: toks[close + 2].line,
+                message: format!(
+                    "`.{method}(…).{}()` on a coordinator channel; a disconnect here is a \
+                     recovery-path signal (worker restarting, pool shutting down) — handle the \
+                     Result explicitly",
+                    toks[close + 2].text
+                ),
+            });
+        }
+    }
+}
+
+/// `toks[open]` is `(`; index of the `)` closing it, walking forward
+/// over nested groups. `None` if the stream ends first (unbalanced
+/// source never reaches the matcher — the lexer would have dropped it —
+/// but stay total anyway).
+fn matching_close(toks: &[Tok], open: usize) -> Option<usize> {
+    let mut depth = 0i32;
+    for (j, t) in toks.iter().enumerate().skip(open) {
+        if t.is_punct('(') {
+            depth += 1;
+        } else if t.is_punct(')') {
+            depth -= 1;
+            if depth == 0 {
+                return Some(j);
+            }
+        }
+    }
+    None
 }
 
 // ---------------------------------------------------------------------

@@ -9,6 +9,7 @@ pub mod pr3;
 pub mod pr4;
 pub mod pr5;
 pub mod pr6;
+pub mod pr7;
 
 use crate::util::stats::{median, OnlineStats};
 use crate::util::Stopwatch;

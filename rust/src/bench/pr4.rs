@@ -102,8 +102,8 @@ pub(crate) fn replay(
         .collect();
     let mut sigs: Vec<ResponseSig> = vec![(RoutePath::Rt, Vec::new()); log.len()];
     for rx in receivers {
-        // lint: allow(panic-in-lib) — bench harness: a dead worker invalidates the measurement
-        let resp = rx.recv().expect("worker died mid-bench");
+        // lint: allow(panic-in-lib) — bench harness: a dead worker or typed failure invalidates the measurement
+        let resp = rx.recv().expect("worker died mid-bench").expect("request failed");
         let sig = resp
             .neighbors
             .iter()

@@ -1,0 +1,224 @@
+//! The PR7 robustness microbench: recovery cost of the supervised
+//! coordinator, emitted as `BENCH_PR7.json` so CI can archive the
+//! robustness trajectory alongside the perf benches.
+//!
+//! One scenario, measured twice. A fixed RT-forced request log is
+//! replayed sequentially through a two-worker pool — once under the
+//! inert fault plan (baseline), once with a panic injected into the
+//! route owner halfway through the timed replay (faulted). Each timed
+//! replay runs on a fresh service after an untimed warmup replay, so
+//! both runs pay identical build costs and the gap between them is the
+//! end-to-end price of a worker death: supervised restart,
+//! deterministic rebuild and journal replay. Every faulted replay's
+//! responses are checked bitwise against the baseline — recovery must
+//! be invisible in results, visible only in wall-clock and the
+//! `restarts`/`replays` counters.
+
+use std::time::Duration;
+
+use crate::configx::Json;
+use crate::coordinator::{
+    KnnRequest, QueryMode, RoutePath, Router, Service, ServiceConfig, ServiceHandle,
+};
+use crate::dataset::DatasetKind;
+use crate::faults::FaultPlan;
+use crate::util::Stopwatch;
+
+use super::pr4::{request_log_with, ResponseSig};
+use super::{fmt_secs, Table};
+
+const BENCH_K: usize = 5;
+
+#[derive(Clone, Debug)]
+pub struct Pr7Report {
+    pub n: usize,
+    pub requests: usize,
+    pub queries_per_request: usize,
+    pub k: usize,
+    pub iters: usize,
+    /// Best-of-`iters` wall seconds for the no-fault sequential replay.
+    pub baseline_s: f64,
+    /// Best-of-`iters` wall seconds with one worker kill mid-replay.
+    pub faulted_s: f64,
+    /// Wall-clock price of the kill: `faulted_s - baseline_s`, floored
+    /// at zero (the time-to-recover headline number).
+    pub recover_s: f64,
+    /// `faulted_s / baseline_s`: the replay overhead factor.
+    pub overhead: f64,
+    /// Supervised restarts observed in the last faulted run (must be 1).
+    pub restarts: u64,
+    /// Journal replays observed in the last faulted run (must be 1).
+    pub replays: u64,
+    /// Every replay — baseline and faulted — answered bitwise
+    /// identically to the first baseline replay.
+    pub results_match: bool,
+}
+
+/// Replay the log one request at a time (so the victim's batch sequence
+/// numbers are exact and the kill lands mid-log deterministically) and
+/// return wall seconds plus each response's signature, in log order.
+fn replay_sequential(handle: &ServiceHandle, log: &[KnnRequest]) -> (f64, Vec<ResponseSig>) {
+    let sw = Stopwatch::start();
+    let mut sigs: Vec<ResponseSig> = Vec::with_capacity(log.len());
+    for req in log {
+        // lint: allow(panic-in-lib) — bench harness: a lost request under a recoverable plan invalidates the measurement
+        let resp = handle.query(req.clone()).expect("recoverable plan lost a request");
+        sigs.push((
+            resp.path,
+            resp.neighbors
+                .iter()
+                .flat_map(|nb| nb.iter().map(|n| (n.idx, n.dist.to_bits())))
+                .collect(),
+        ));
+    }
+    (sw.elapsed_secs(), sigs)
+}
+
+/// Run the bench. `iters` timed replays per scenario, reporting the
+/// minimum (the least-perturbed sample).
+pub fn run(n: usize, requests: usize, qpr: usize, iters: usize) -> Pr7Report {
+    let iters = iters.max(1);
+    let requests = requests.max(2);
+    let ds = DatasetKind::Taxi.generate(n, 42);
+    let qpr = qpr.min(ds.len());
+    let log = request_log_with(&ds.points, requests, qpr, 131, |_| QueryMode::Rt);
+    let victim = Router::worker_for(RoutePath::Rt, 2);
+    // the warmup replay drains the victim's sequences 0..requests, so a
+    // kill halfway into the timed replay lands at requests + requests/2
+    let kill_seq = requests as u64 + requests as u64 / 2;
+
+    let run_once = |faults: &FaultPlan| {
+        let cfg = ServiceConfig {
+            workers: 2,
+            // throughput is the measurement, not backpressure
+            queue_depth: requests.max(256),
+            // the restart path is what we price here; keep the failover
+            // monitor out of the measurement
+            heartbeat_timeout: Duration::from_secs(5),
+            faults: faults.clone(),
+            ..Default::default()
+        };
+        let (svc, handle) = Service::start(ds.points.clone(), cfg);
+        // untimed warmup: builds both route indexes, never trips the kill
+        let _ = replay_sequential(&handle, &log);
+        let (s, sigs) = replay_sequential(&handle, &log);
+        let m = handle.metrics().snapshot();
+        svc.shutdown();
+        (s, sigs, m.restarts, m.replays)
+    };
+
+    let mut oracle: Option<Vec<ResponseSig>> = None;
+    let mut results_match = true;
+    let mut baseline_s = f64::INFINITY;
+    for _ in 0..iters {
+        let (s, sigs, _, _) = run_once(&FaultPlan::inert());
+        match &oracle {
+            None => oracle = Some(sigs),
+            Some(want) => results_match &= &sigs == want,
+        }
+        baseline_s = baseline_s.min(s);
+    }
+
+    let kill = FaultPlan::inert().with_panic(victim, kill_seq);
+    let mut faulted_s = f64::INFINITY;
+    let (mut restarts, mut replays) = (0u64, 0u64);
+    for _ in 0..iters {
+        let (s, sigs, r, rp) = run_once(&kill);
+        results_match &= Some(&sigs) == oracle.as_ref();
+        faulted_s = faulted_s.min(s);
+        restarts = r;
+        replays = rp;
+    }
+
+    Pr7Report {
+        n: ds.len(),
+        requests,
+        queries_per_request: qpr,
+        k: BENCH_K,
+        iters,
+        baseline_s,
+        faulted_s,
+        recover_s: (faulted_s - baseline_s).max(0.0),
+        overhead: faulted_s / baseline_s.max(1e-12),
+        restarts,
+        replays,
+        results_match,
+    }
+}
+
+pub fn to_json(r: &Pr7Report) -> Json {
+    Json::obj(vec![
+        ("bench", Json::Str("pr7".into())),
+        (
+            "fault_recovery",
+            Json::obj(vec![
+                ("dataset", Json::Str("taxi".into())),
+                ("n", Json::Num(r.n as f64)),
+                ("requests", Json::Num(r.requests as f64)),
+                ("queries_per_request", Json::Num(r.queries_per_request as f64)),
+                ("k", Json::Num(r.k as f64)),
+                ("iters", Json::Num(r.iters as f64)),
+                ("baseline_seconds", Json::Num(r.baseline_s)),
+                ("faulted_seconds", Json::Num(r.faulted_s)),
+                ("time_to_recover_seconds", Json::Num(r.recover_s)),
+                ("replay_overhead", Json::Num(r.overhead)),
+                ("restarts", Json::Num(r.restarts as f64)),
+                ("replays", Json::Num(r.replays as f64)),
+                ("results_match", Json::Bool(r.results_match)),
+            ]),
+        ),
+    ])
+}
+
+pub fn render(r: &Pr7Report) -> Table {
+    let mut t = Table::new(
+        "PR7 microbench: supervised recovery cost (one worker kill mid-replay)",
+        &["run", "replay", "restarts", "replays"],
+    );
+    t.row(vec![
+        "baseline".into(),
+        fmt_secs(r.baseline_s),
+        "0".into(),
+        "0".into(),
+    ]);
+    t.row(vec![
+        "faulted".into(),
+        fmt_secs(r.faulted_s),
+        r.restarts.to_string(),
+        r.replays.to_string(),
+    ]);
+    t.row(vec![
+        "time to recover".into(),
+        fmt_secs(r.recover_s),
+        String::new(),
+        String::new(),
+    ]);
+    t.row(vec![
+        "recovery invisible in results".into(),
+        r.results_match.to_string(),
+        String::new(),
+        String::new(),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_runs_small_and_serializes() {
+        let r = run(1_200, 8, 4, 1);
+        assert_eq!(r.restarts, 1, "the injected kill must land");
+        assert_eq!(r.replays, 1, "the in-flight request must replay once");
+        assert!(r.results_match, "recovery must not change responses");
+        assert!(r.baseline_s > 0.0 && r.faulted_s > 0.0);
+        assert!(r.recover_s >= 0.0 && r.overhead > 0.0);
+        let j = to_json(&r).to_string();
+        assert!(j.contains("\"bench\":\"pr7\""));
+        assert!(j.contains("fault_recovery"));
+        assert!(j.contains("time_to_recover_seconds"));
+        let parsed = crate::configx::parse_json(&j).unwrap();
+        assert!(parsed.get("fault_recovery").is_some());
+    }
+}

@@ -37,6 +37,17 @@ impl Batch {
     pub fn total_queries(&self) -> usize {
         self.ranges.last().map(|r| r.1).unwrap_or(0)
     }
+
+    /// `(request id, shard)` of every request in the batch, in batch
+    /// order. The supervisor records these before serving a batch so a
+    /// crash mid-batch can be attributed to exactly the requests that
+    /// were in flight (the poison ledger's strike unit).
+    pub fn request_keys(&self) -> Vec<(u64, Option<usize>)> {
+        self.requests
+            .iter()
+            .map(|(r, _)| (r.id, self.shard))
+            .collect()
+    }
 }
 
 /// Size bounds that trip a batch flush.
@@ -168,6 +179,16 @@ mod tests {
         let batch2 = b.next_batch().unwrap();
         assert_eq!(batch2.requests[0].0.id, 2);
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn request_keys_carry_the_batch_shard() {
+        let mut b = DynamicBatcher::new(BatcherConfig::default());
+        let now = Instant::now();
+        b.push(req(4, 2, 5), RoutePath::Rt, Some(1), now);
+        b.push(req(9, 2, 5), RoutePath::Rt, Some(1), now);
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.request_keys(), vec![(4, Some(1)), (9, Some(1))]);
     }
 
     #[test]

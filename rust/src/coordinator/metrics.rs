@@ -61,6 +61,15 @@ pub struct Metrics {
     pub shard_queries: Vec<AtomicU64>,
     /// One slot per pool worker.
     pub workers: Vec<WorkerMetrics>,
+    /// Worker incarnations restarted by the supervisor after a panic.
+    pub restarts: AtomicU64,
+    /// Recovery replays: journaled requests re-enqueued after a worker
+    /// restart, plus scatter partials re-dispatched to a failover owner.
+    pub replays: AtomicU64,
+    /// Requests shed because they aged past `request_deadline`.
+    pub deadline_misses: AtomicU64,
+    /// Requests quarantined by the poison ledger (killed a worker twice).
+    pub poisoned: AtomicU64,
     latency: Mutex<OnlineStats>,
 }
 
@@ -99,6 +108,14 @@ pub struct MetricsSnapshot {
     /// Per-shard queries served (aligned with `shard_builds`).
     pub shard_queries: Vec<u64>,
     pub workers: Vec<WorkerSnapshot>,
+    /// Worker incarnations restarted by the supervisor after a panic.
+    pub restarts: u64,
+    /// Journaled requests replayed plus scatter partials re-dispatched.
+    pub replays: u64,
+    /// Requests shed for aging past `request_deadline`.
+    pub deadline_misses: u64,
+    /// Requests quarantined by the poison ledger.
+    pub poisoned: u64,
     pub latency_mean_s: f64,
     pub latency_max_s: f64,
 }
@@ -216,6 +233,10 @@ impl Metrics {
                     queue_hwm: w.queue_hwm.load(Ordering::Relaxed),
                 })
                 .collect(),
+            restarts: self.restarts.load(Ordering::Relaxed),
+            replays: self.replays.load(Ordering::Relaxed),
+            deadline_misses: self.deadline_misses.load(Ordering::Relaxed),
+            poisoned: self.poisoned.load(Ordering::Relaxed),
             latency_mean_s: if lat.count() > 0 { lat.mean() } else { 0.0 },
             latency_max_s: if lat.count() > 0 { lat.max() } else { 0.0 },
         }
@@ -277,6 +298,26 @@ mod tests {
         assert_eq!(s.shard_queries, vec![0, 20, 0]);
         // sharding off: no slots at all
         assert!(Metrics::with_workers(2).snapshot().shard_builds.is_empty());
+    }
+
+    #[test]
+    fn recovery_counters_surface_in_snapshot() {
+        let m = Metrics::with_workers(2);
+        Metrics::inc(&m.restarts);
+        Metrics::add(&m.replays, 3);
+        Metrics::inc(&m.deadline_misses);
+        Metrics::inc(&m.poisoned);
+        let s = m.snapshot();
+        assert_eq!(s.restarts, 1);
+        assert_eq!(s.replays, 3);
+        assert_eq!(s.deadline_misses, 1);
+        assert_eq!(s.poisoned, 1);
+        // a fresh registry reports all-zero recovery counters
+        let z = Metrics::new().snapshot();
+        assert_eq!(
+            (z.restarts, z.replays, z.deadline_misses, z.poisoned),
+            (0, 0, 0, 0)
+        );
     }
 
     #[test]

@@ -37,15 +37,68 @@
 //! No tokio in the offline build; the event loop is a pool of dedicated
 //! worker threads with `std::sync::mpsc` channels, which is also the
 //! honest analog of a multi-GPU dispatch loop over per-device queues.
+//!
+//! # Failure model
+//!
+//! The pool is **fault-tolerant by supervision** (see `supervisor`):
+//! every worker's serving loop runs under `catch_unwind`, and the
+//! recovery paths are deterministic enough to assert on.
+//!
+//! **What is survived.**
+//!
+//! - *Worker panics* — genuine bugs or faults injected by a seeded
+//!   [`crate::faults::FaultPlan`]. The supervisor restarts the loop on
+//!   the same thread: indexes are rebuilt from the base dataset plus the
+//!   worker's ordered insert log (indexes are pure functions of
+//!   `(base, inserts, config)`, so the rebuild is bit-identical), and
+//!   every accepted-but-unanswered request is re-enqueued from the
+//!   journal in its original submit order. Because a route's requests
+//!   stay FIFO on one worker even across a restart, replayed responses
+//!   are **bitwise-identical** to a run without the crash.
+//! - *Worker hangs* — detected by heartbeat staleness. On a sharded
+//!   pool, a dedicated monitor re-dispatches a timed-out scatter partial
+//!   to the shard's deterministic failover owner
+//!   ([`Router::worker_for_shard_excluding`]), which rebuilds the shard
+//!   from its own partition replica and delivers the identical partial.
+//!   Partial delivery is idempotent, so the owner waking up later and
+//!   delivering a duplicate is harmless — both copies are the same bits.
+//! - *Crash loops* — a crash is attributed to the requests in flight at
+//!   that moment; an id that kills its worker twice is **quarantined**:
+//!   its pending entries fail with [`ServiceError::Poisoned`], later
+//!   submits of the id are refused at the boundary, and the pool keeps
+//!   serving everyone else. A worker crashing repeatedly *without batch
+//!   progress* (a startup crash loop a restart cannot fix) is given up
+//!   on after a bounded number of attempts; its journaled requests fail
+//!   with [`ServiceError::ShutDown`] instead of hanging their clients.
+//!
+//! **What clients observe.** Every accepted request terminates: with its
+//! response, or with a typed [`ServiceError`] (`DeadlineExceeded` when
+//! it out-waited `ServiceConfig::request_deadline`, `Poisoned`,
+//! `ShutDown`) delivered through the same [`ResponseReceiver`]. No
+//! accepted, non-poisoned request is silently lost under any fault
+//! schedule — the fault-injection suite asserts exactly that, plus
+//! bitwise equality of all served responses against a no-fault
+//! single-worker oracle, plus exact recovery counters
+//! (`restarts`/`replays`/`deadline_misses`/`poisoned` in
+//! [`MetricsSnapshot`]).
+//!
+//! **Documented limitation.** The insert barrier and the journal
+//! interact conservatively: a journaled request replayed across an
+//! insert that arrived behind it may be served post-insert. That stays
+//! within the ordering contract (a query submitted before an insert
+//! "may or may not" observe it) but means replay equality is guaranteed
+//! against the oracle fed the same submit order, not against every
+//! interleaving of a racing insert stream.
 
 mod request;
 mod metrics;
 mod batcher;
 mod router;
 mod service;
+mod supervisor;
 
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
 pub use metrics::{Metrics, MetricsSnapshot, WorkerMetrics, WorkerSnapshot};
 pub use request::{KnnRequest, KnnResponse, QueryMode, RoutePath};
 pub use router::{Router, RouterConfig};
-pub use service::{Service, ServiceConfig, ServiceError, ServiceHandle};
+pub use service::{ResponseReceiver, Service, ServiceConfig, ServiceError, ServiceHandle};

@@ -75,6 +75,24 @@ impl KnnRequest {
         self.mode = mode;
         self
     }
+
+    /// Boundary validation: why this request must not enter the pool,
+    /// or `None` if it is well-formed. Checked once at `submit` so
+    /// malformed requests get a typed rejection instead of threading
+    /// degenerate shapes (k = 0, empty batches, NaN/infinite
+    /// coordinates) into every downstream fallback path.
+    pub fn reject_reason(&self) -> Option<&'static str> {
+        if self.k == 0 {
+            return Some("k must be at least 1");
+        }
+        if self.queries.is_empty() {
+            return Some("empty query batch");
+        }
+        if self.queries.iter().any(|q| !q.is_finite()) {
+            return Some("non-finite query coordinate");
+        }
+        None
+    }
 }
 
 /// The service's answer to one [`KnnRequest`].
@@ -88,4 +106,23 @@ pub struct KnnResponse {
     pub service_seconds: f64,
     /// Seconds from submit to completion (includes queueing).
     pub latency_seconds: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reject_reason_flags_every_degenerate_shape() {
+        let ok = KnnRequest::new(1, vec![Point3::splat(0.5)], 3);
+        assert_eq!(ok.reject_reason(), None);
+        assert!(KnnRequest::new(2, vec![Point3::splat(0.5)], 0)
+            .reject_reason()
+            .is_some());
+        assert!(KnnRequest::new(3, Vec::new(), 3).reject_reason().is_some());
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let req = KnnRequest::new(4, vec![Point3::new(0.0, bad, 0.0)], 3);
+            assert!(req.reject_reason().is_some(), "{bad} must be rejected");
+        }
+    }
 }

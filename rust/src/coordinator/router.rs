@@ -108,6 +108,30 @@ impl Router {
         (Self::worker_for(path, workers) + shard) % workers
     }
 
+    /// Failover owner of shard `shard` when worker `dead` is excluded
+    /// from the pool: the shard's normal owner if it is alive, else the
+    /// ring successor — the next worker in the same round-robin order
+    /// [`Router::worker_for_shard`] walks, which is the first worker
+    /// that would own the shard in a pool without `dead`. Still a pure
+    /// function of `(route, shard, pool size, dead)`, so the supervisor
+    /// and any test agree on where a timed-out partial is re-dispatched.
+    /// Requires `workers >= 2` (with one worker there is nobody to fail
+    /// over to).
+    pub fn worker_for_shard_excluding(
+        path: RoutePath,
+        shard: usize,
+        workers: usize,
+        dead: usize,
+    ) -> usize {
+        assert!(workers >= 2, "failover needs a second worker");
+        let w = Self::worker_for_shard(path, shard, workers);
+        if w == dead {
+            (w + 1) % workers
+        } else {
+            w
+        }
+    }
+
     /// Pick the execution path for a request against `n_data` points.
     pub fn route(&self, req: &KnnRequest, n_data: usize) -> RoutePath {
         let brute_path = if self.cfg.pjrt_available {
@@ -232,6 +256,26 @@ mod tests {
             Router::worker_for_shard(RoutePath::Rt, 0, 3),
             Router::worker_for(RoutePath::Rt, 3)
         );
+    }
+
+    #[test]
+    fn failover_owner_excludes_the_dead_worker_deterministically() {
+        for workers in 2..=6usize {
+            for shard in 0..6 {
+                let owner = Router::worker_for_shard(RoutePath::Rt, shard, workers);
+                for dead in 0..workers {
+                    let fo =
+                        Router::worker_for_shard_excluding(RoutePath::Rt, shard, workers, dead);
+                    assert!(fo < workers);
+                    assert_ne!(fo, dead, "failover landed on the dead worker");
+                    if owner != dead {
+                        assert_eq!(fo, owner, "live owner must keep its shard");
+                    } else {
+                        assert_eq!(fo, (owner + 1) % workers, "ring successor");
+                    }
+                }
+            }
+        }
     }
 
     #[test]

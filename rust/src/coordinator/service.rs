@@ -11,11 +11,12 @@
 //!
 //! Pool architecture:
 //!
-//! - **Routing at submit time.** [`ServiceHandle::submit`] routes the
-//!   request ([`Router::route`]) and picks the owning worker by
-//!   rendezvous hashing ([`Router::worker_for`]) — a pure function of
-//!   `(route, pool size)`, so a route's index is built exactly once, on
-//!   exactly one worker, and never migrates.
+//! - **Routing at submit time.** [`ServiceHandle::submit`] validates the
+//!   request at the boundary (typed [`ServiceError::InvalidRequest`] for
+//!   degenerate shapes), routes it ([`Router::route`]) and picks the
+//!   owning worker by rendezvous hashing ([`Router::worker_for`]) — a
+//!   pure function of `(route, pool size)`, so a route's index is built
+//!   exactly once, on exactly one worker, and never migrates.
 //! - **Per-worker queues.** Each worker has its own bounded queue
 //!   (`queue_depth` slots each); rejects, live depth and the high-water
 //!   mark are accounted per worker in [`Metrics`]. Requests for one
@@ -42,12 +43,21 @@
 //!   scattered slices see one consistent point set) and the worker
 //!   delivering the last per-shard partial **gathers**: it merges the
 //!   partials per query (k smallest under `(distance, id)`) and sends
-//!   the one response. Every shard owner holds a replica of the one
+//!   the one response. Every worker holds a replica of the one
 //!   partition `Service::start` computed and applies the broadcast
 //!   insert stream to it through the same routing step, so shard
 //!   membership — and the rebalance-on-overflow rebuild — stays
-//!   consistent across owners with no coordination, and responses stay
-//!   bitwise-identical to an unsharded single-worker service.
+//!   consistent across the pool with no coordination (and a failover
+//!   worker can rebuild a dead owner's shard from its replica), and
+//!   responses stay bitwise-identical to an unsharded single-worker
+//!   service.
+//! - **Supervision.** Every worker runs under
+//!   [`super::supervisor::supervise_worker`]: a panic (or an injected
+//!   fault from [`crate::faults`]) is caught, the worker's index state
+//!   is rebuilt deterministically from the base data plus its ordered
+//!   insert log, and its un-replied requests are replayed in submit
+//!   order. See the "Failure model" section in [`super`] for the full
+//!   contract (deadlines, poison quarantine, scatter failover).
 //!
 //! The PJRT client wraps raw C pointers and is not `Send`, so the
 //! runtime (and every index) is constructed *inside* the worker that
@@ -55,11 +65,16 @@
 //! handshake from each worker so the handle's router knows up front
 //! whether the PJRT path exists.
 
-use super::batcher::{BatcherConfig, DynamicBatcher};
+use super::batcher::{Batch, BatcherConfig, DynamicBatcher};
 use super::metrics::Metrics;
 use super::request::{KnnRequest, KnnResponse, RoutePath};
 use super::router::{Router, RouterConfig};
+use super::supervisor::{
+    run_monitor, supervise_worker, JournalEntry, MonitorCtx, PoisonLedger, ServiceClock,
+    WorkerCtx, WorkerHealth,
+};
 use crate::exec::Executor;
+use crate::faults::{FaultPlan, InjectedFault};
 use crate::geom::Point3;
 use crate::index::{BruteCpuIndex, BrutePjrtIndex, IndexConfig, NeighborIndex, TrueKnnIndex};
 use crate::knn::{Neighbor, TrueKnnParams};
@@ -69,10 +84,11 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Tuning knobs of the batching query service (pool size, queue depth,
-/// routing, RT-route sharding, TrueKNN parameters).
+/// routing, RT-route sharding, deadlines/supervision, TrueKNN
+/// parameters).
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
     pub batcher: BatcherConfig,
@@ -99,6 +115,25 @@ pub struct ServiceConfig {
     /// service while a single hot route finally runs on several workers
     /// at once.
     pub shards: usize,
+    /// Per-request deadline, measured from submit. A request still
+    /// waiting when its worker dequeues it past the deadline is shed
+    /// with [`ServiceError::DeadlineExceeded`] instead of served
+    /// (`None` = never shed). `Duration::ZERO` deterministically sheds
+    /// everything — useful for drain tests.
+    pub request_deadline: Option<Duration>,
+    /// Heartbeat staleness after which the failover monitor treats a
+    /// worker as hung and re-dispatches its timed-out scatter partials
+    /// to the shard's failover owner
+    /// ([`Router::worker_for_shard_excluding`]). Only consulted when
+    /// the RT route is sharded on a pool of at least two workers.
+    pub heartbeat_timeout: Duration,
+    /// Base backoff the supervisor sleeps between a worker crash and
+    /// its replay; doubles per consecutive crash without progress
+    /// (capped at 8×).
+    pub replay_backoff: Duration,
+    /// Seeded fault-injection plan (default inert — production configs
+    /// never fire; see [`crate::faults`]).
+    pub faults: FaultPlan,
     pub trueknn: TrueKnnParams,
 }
 
@@ -111,6 +146,10 @@ impl Default for ServiceConfig {
             queue_depth: 256,
             use_pjrt: false,
             shards: 1,
+            request_deadline: None,
+            heartbeat_timeout: Duration::from_secs(1),
+            replay_backoff: Duration::from_millis(1),
+            faults: FaultPlan::inert(),
             trueknn: TrueKnnParams {
                 exclude_self: false, // service queries are external points
                 ..Default::default()
@@ -119,11 +158,23 @@ impl Default for ServiceConfig {
     }
 }
 
-/// Why a submit was refused: backpressure or a stopped pool.
-#[derive(Debug, PartialEq, Eq)]
+/// Why a submit was refused or a request failed after acceptance.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum ServiceError {
+    /// Backpressure: the target worker's queue is full.
     QueueFull,
+    /// The pool is stopped (or died before answering).
     ShutDown,
+    /// Rejected at the API boundary: degenerate shape (k = 0, empty
+    /// batch, non-finite coordinate). The reason is a static
+    /// human-readable description.
+    InvalidRequest(&'static str),
+    /// Accepted but shed: the request was still queued past its
+    /// [`ServiceConfig::request_deadline`].
+    DeadlineExceeded,
+    /// Quarantined by the poison ledger: this request id crashed its
+    /// worker twice and is refused to protect the pool.
+    Poisoned,
 }
 
 impl std::fmt::Display for ServiceError {
@@ -131,13 +182,24 @@ impl std::fmt::Display for ServiceError {
         match self {
             ServiceError::QueueFull => write!(f, "service queue full (backpressure)"),
             ServiceError::ShutDown => write!(f, "service is shut down"),
+            ServiceError::InvalidRequest(reason) => write!(f, "invalid request: {reason}"),
+            ServiceError::DeadlineExceeded => write!(f, "request deadline exceeded; shed"),
+            ServiceError::Poisoned => write!(f, "request quarantined by the poison ledger"),
         }
     }
 }
 
 impl std::error::Error for ServiceError {}
 
-enum Msg {
+/// Reply half handed back by [`ServiceHandle::submit`]: the response, or
+/// the typed error the service failed the request with after accepting
+/// it (shed deadline, poison quarantine, pool death). A plain channel
+/// disconnect still means [`ServiceError::ShutDown`].
+pub type ResponseReceiver = Receiver<Result<KnnResponse, ServiceError>>;
+
+pub(super) type ResponseSender = Sender<Result<KnnResponse, ServiceError>>;
+
+pub(super) enum Msg {
     /// One routed request (or, for a sharded route, one shard's slice of
     /// a scattered request — the `Option<usize>` names the shard).
     Request(KnnRequest, RoutePath, Option<usize>, ReplySink, Instant),
@@ -147,35 +209,70 @@ enum Msg {
 }
 
 /// Where a request's result goes: straight back to the client, or into
-/// the scatter-gather rendezvous of a sharded request.
-enum ReplySink {
-    Direct(Sender<KnnResponse>),
+/// the scatter-gather rendezvous of a sharded request. Cloneable so the
+/// supervisor's journal can retain a sink across a worker crash while
+/// the incarnation-local reply map holds its own copy.
+#[derive(Clone)]
+pub(super) enum ReplySink {
+    Direct(ResponseSender),
     Gather(Arc<Gather>),
+}
+
+impl ReplySink {
+    /// Deliver a typed failure to whoever is waiting. For a gather this
+    /// fails the *whole* scattered request (the reply sender is taken),
+    /// so a later partial delivery finds the gather completed and drops
+    /// its data — the client never sees half an answer.
+    pub(super) fn fail(&self, err: ServiceError) {
+        match self {
+            ReplySink::Direct(tx) => {
+                let _ = tx.send(Err(err));
+            }
+            ReplySink::Gather(g) => {
+                let mut st = g
+                    .state
+                    .lock()
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
+                if let Some(reply) = st.reply.take() {
+                    let _ = reply.send(Err(err));
+                }
+            }
+        }
+    }
 }
 
 /// Rendezvous of one scattered request: per-shard partials accumulate
 /// here, and whichever worker delivers the **last** partial merges and
 /// replies. The merged result depends only on the partials (fixed merge
 /// order over shard ids), never on delivery order — that is what keeps
-/// scatter-gather responses bitwise-identical to the unsharded oracle.
-struct Gather {
-    id: u64,
-    k: usize,
-    path: RoutePath,
-    submitted: Instant,
-    state: Mutex<GatherState>,
+/// scatter-gather responses bitwise-identical to the unsharded oracle,
+/// *including* when a partial arrives twice (owner recovered after the
+/// monitor already re-dispatched it): delivery is idempotent per shard
+/// slot, and both copies are the same deterministic answer.
+pub(super) struct Gather {
+    pub(super) id: u64,
+    pub(super) k: usize,
+    pub(super) path: RoutePath,
+    /// The original request, retained so the failover monitor can
+    /// re-dispatch a timed-out shard's slice verbatim.
+    pub(super) req: KnnRequest,
+    pub(super) submitted: Instant,
+    pub(super) state: Mutex<GatherState>,
 }
 
-struct GatherState {
+pub(super) struct GatherState {
     /// Taken by the completing worker; behind the mutex so the gather
     /// stays `Sync` on every supported toolchain (`mpsc::Sender` only
     /// recently became `Sync` itself).
-    reply: Option<Sender<KnnResponse>>,
+    pub(super) reply: Option<ResponseSender>,
     /// One slot per shard; `Some` once that shard's partial landed.
-    partials: Vec<Option<Vec<Vec<Neighbor>>>>,
-    filled: usize,
+    pub(super) partials: Vec<Option<Vec<Vec<Neighbor>>>>,
+    pub(super) filled: usize,
+    /// Per-shard flag: the monitor re-dispatched this shard's slice to
+    /// a failover worker (at most once per shard per gather).
+    pub(super) redispatched: Vec<bool>,
     /// Critical-path service time: the slowest shard batch.
-    service_seconds: f64,
+    pub(super) service_seconds: f64,
 }
 
 /// Handle returned by `Service::start`; cheap to clone, submits requests.
@@ -195,14 +292,29 @@ pub struct ServiceHandle {
     shards: usize,
     metrics: Arc<Metrics>,
     inflight: Arc<AtomicUsize>,
+    /// Quarantine ledger shared with every worker's supervisor: a
+    /// request id that crashed its worker twice is refused at submit.
+    ledger: Arc<PoisonLedger>,
+    /// Pending scattered requests, swept by the failover monitor.
+    /// `None` when no monitor runs (unsharded, or a single worker).
+    gathers: Option<Arc<Mutex<Vec<Arc<Gather>>>>>,
 }
 
 impl ServiceHandle {
-    /// Submit a request; returns the response channel. Routes the
-    /// request to its owning worker — or, on a sharded RT route,
-    /// scatters it to every shard owner — and applies backpressure by
-    /// rejecting when a target worker's queue is full.
-    pub fn submit(&self, req: KnnRequest) -> Result<Receiver<KnnResponse>, ServiceError> {
+    /// Submit a request; returns the response channel. Validates at the
+    /// boundary (typed [`ServiceError::InvalidRequest`] for k = 0, an
+    /// empty batch or non-finite coordinates; [`ServiceError::Poisoned`]
+    /// for a quarantined id), then routes the request to its owning
+    /// worker — or, on a sharded RT route, scatters it to every shard
+    /// owner — and applies backpressure by rejecting when a target
+    /// worker's queue is full.
+    pub fn submit(&self, req: KnnRequest) -> Result<ResponseReceiver, ServiceError> {
+        if let Some(reason) = req.reject_reason() {
+            return Err(ServiceError::InvalidRequest(reason));
+        }
+        if self.ledger.is_poisoned(req.id) {
+            return Err(ServiceError::Poisoned);
+        }
         let (tx, rx) = std::sync::mpsc::channel();
         Metrics::inc(&self.metrics.requests);
         let path = self.router.route(&req, self.data_len.load(Ordering::SeqCst));
@@ -224,8 +336,10 @@ impl ServiceHandle {
     /// worker-side decrement can never observe it missing (no
     /// underflow); the high-water mark is recorded only for accepted
     /// messages, and is best-effort under contention (see its doc in
-    /// WorkerMetrics).
-    fn try_send(&self, w: usize, msg: Msg) -> Result<(), ServiceError> {
+    /// WorkerMetrics). A disconnected channel is a recovery-path
+    /// signal (`ShutDown`), never a panic site — the supervisor may be
+    /// mid-restart behind it.
+    pub(super) fn try_send(&self, w: usize, msg: Msg) -> Result<(), ServiceError> {
         let wm = &self.metrics.workers[w];
         let depth = wm.queue_depth.fetch_add(1, Ordering::SeqCst) + 1;
         match self.txs[w].try_send(msg) {
@@ -259,21 +373,29 @@ impl ServiceHandle {
         &self,
         req: KnnRequest,
         path: RoutePath,
-        reply: Sender<KnnResponse>,
+        reply: ResponseSender,
     ) -> Result<(), ServiceError> {
         let gather = Arc::new(Gather {
             id: req.id,
             k: req.k,
             path,
+            req: req.clone(),
             // lint: allow(wallclock-in-core) — submit timestamp feeds latency telemetry only, never results
             submitted: Instant::now(),
             state: Mutex::new(GatherState {
                 reply: Some(reply),
                 partials: vec![None; self.shards],
                 filled: 0,
+                redispatched: vec![false; self.shards],
                 service_seconds: 0.0,
             }),
         });
+        if let Some(gathers) = &self.gathers {
+            gathers
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner)
+                .push(gather.clone());
+        }
         // build every per-shard message (request clones included) before
         // taking the lock, so the critical section every scatter and
         // insert contends on is just the S try_sends
@@ -299,20 +421,30 @@ impl ServiceHandle {
             .lock()
             .unwrap_or_else(std::sync::PoisonError::into_inner);
         for (w, msg) in msgs {
-            self.try_send(w, msg)?;
+            if let Err(err) = self.try_send(w, msg) {
+                // mid-scatter rejection: fail the gather so the monitor's
+                // sweep retires it (already-enqueued shard legs settle
+                // their gauges, then find the gather completed and drop)
+                ReplySink::Gather(gather).fail(err.clone());
+                return Err(err);
+            }
         }
         Ok(())
     }
 
-    /// Submit and wait for the response.
+    /// Submit and wait for the response (flattening the typed failure a
+    /// worker may have sent down the reply channel).
     pub fn query(&self, req: KnnRequest) -> Result<KnnResponse, ServiceError> {
         let rx = self.submit(req)?;
-        rx.recv().map_err(|_| ServiceError::ShutDown)
+        rx.recv().map_err(|_| ServiceError::ShutDown)?
     }
 
     /// Add points to the served dataset: broadcast to every worker, each
-    /// of which updates its own indexes between batches. Uses a blocking
-    /// send (never rejected) — inserts are rare, and dropping one on a
+    /// of which updates its own indexes between batches. Rejects the
+    /// degenerate shapes at the boundary (empty batch, non-finite
+    /// coordinates) — they would otherwise fork the workers' views or
+    /// corrupt every downstream structure. Uses a blocking send (never
+    /// backpressure-rejected) — inserts are rare, and dropping one on a
     /// full queue would silently fork the workers' views of the data.
     ///
     /// Ordering contract: queries **submitted** after `insert` returns
@@ -320,7 +452,10 @@ impl ServiceHandle {
     /// it may or may not, exactly as with a single worker.
     pub fn insert(&self, points: &[Point3]) -> Result<(), ServiceError> {
         if points.is_empty() {
-            return Ok(());
+            return Err(ServiceError::InvalidRequest("empty insert batch"));
+        }
+        if points.iter().any(|p| !p.is_finite()) {
+            return Err(ServiceError::InvalidRequest("non-finite insert coordinate"));
         }
         let pts = Arc::new(points.to_vec());
         // one global insert order across all workers: without the lock,
@@ -374,6 +509,9 @@ pub struct Service {
     handle: ServiceHandle,
     workers: Vec<std::thread::JoinHandle<()>>,
     txs: Vec<SyncSender<Msg>>,
+    /// Failover monitor (stop signal + thread), present only when the
+    /// RT route is sharded on a pool of at least two workers.
+    monitor: Option<(SyncSender<()>, std::thread::JoinHandle<()>)>,
 }
 
 impl Service {
@@ -403,6 +541,11 @@ impl Service {
             if shards > 1 { shards } else { 0 },
         ));
         let inflight = Arc::new(AtomicUsize::new(0));
+        let clock = Arc::new(ServiceClock::default());
+        let health: Arc<Vec<WorkerHealth>> = Arc::new(
+            (0..n_workers).map(|_| WorkerHealth::new(&clock)).collect(),
+        );
+        let ledger = Arc::new(PoisonLedger::default());
         let base = Arc::new(data);
         // the partition is a pure function of (base, shards): build it
         // once here and hand every worker the same copy, instead of S
@@ -420,34 +563,48 @@ impl Service {
         let mut workers = Vec::with_capacity(n_workers);
         for w in 0..n_workers {
             let (tx, rx) = sync_channel::<Msg>(cfg.queue_depth);
-            let worker_base = base.clone();
-            let worker_cfg = cfg.clone();
-            let worker_part = partition.clone();
-            let worker_ready = ready_tx.clone();
-            let worker_metrics = metrics.clone();
-            let worker_inflight = inflight.clone();
-            workers.push(std::thread::spawn(move || {
-                worker_loop(
-                    w,
-                    n_workers,
-                    worker_base,
-                    worker_part,
-                    worker_cfg,
-                    rx,
-                    worker_ready,
-                    worker_metrics,
-                    worker_inflight,
-                );
-            }));
+            let ctx = WorkerCtx {
+                worker_id: w,
+                n_workers,
+                base: base.clone(),
+                partition: partition.clone(),
+                cfg: cfg.clone(),
+                rx,
+                ready: Some(ready_tx.clone()),
+                metrics: metrics.clone(),
+                inflight: inflight.clone(),
+                health: health.clone(),
+                clock: clock.clone(),
+                ledger: ledger.clone(),
+                journal: Vec::new(),
+                insert_log: Vec::new(),
+                batch_seq: 0,
+                crashing_keys: Vec::new(),
+            };
+            workers.push(std::thread::spawn(move || supervise_worker(ctx)));
             txs.push(tx);
         }
         drop(ready_tx);
         let mut pjrt_available = false;
         for _ in 0..n_workers {
-            pjrt_available |= ready_rx.recv().unwrap_or(false);
+            // a recv error means every remaining worker died before its
+            // handshake (the supervisor gave up on it): degrade to
+            // pjrt-unavailable routing instead of panicking the caller
+            match ready_rx.recv() {
+                Ok(avail) => pjrt_available |= avail,
+                Err(_) => {
+                    crate::log_warn!("worker pool lost a worker before its ready handshake");
+                    break;
+                }
+            }
         }
         let mut router_cfg = cfg.router.clone();
         router_cfg.pjrt_available = pjrt_available;
+        let gathers = if shards > 1 && n_workers >= 2 {
+            Some(Arc::new(Mutex::new(Vec::new())))
+        } else {
+            None
+        };
         let handle = ServiceHandle {
             txs: Arc::new(txs.clone()),
             router: Arc::new(Router::new(router_cfg)),
@@ -456,12 +613,28 @@ impl Service {
             shards,
             metrics,
             inflight,
+            ledger,
+            gathers,
         };
+        let monitor = handle.gathers.as_ref().map(|gathers| {
+            let (stop_tx, stop_rx) = sync_channel::<()>(1);
+            let mc = MonitorCtx {
+                handle: handle.clone(),
+                gathers: gathers.clone(),
+                health,
+                clock,
+                timeout: cfg.heartbeat_timeout,
+                shards,
+                stop: stop_rx,
+            };
+            (stop_tx, std::thread::spawn(move || run_monitor(mc)))
+        });
         (
             Service {
                 handle: handle.clone(),
                 workers,
                 txs,
+                monitor,
             },
             handle,
         )
@@ -479,10 +652,15 @@ impl Service {
         // Msg::Shutdown is ever sent per worker.
     }
 
-    /// Shared by `shutdown` and `Drop`: signal every worker once and
-    /// wait for all of them to drain. Idempotent — draining `workers`
-    /// makes a second call a no-op.
+    /// Shared by `shutdown` and `Drop`: stop the monitor, signal every
+    /// worker once and wait for all of them to drain. Idempotent —
+    /// draining `workers` (and taking `monitor`) makes a second call a
+    /// no-op.
     fn shutdown_and_join(&mut self) {
+        if let Some((stop, join)) = self.monitor.take() {
+            let _ = stop.send(());
+            let _ = join.join();
+        }
         if self.workers.is_empty() {
             return;
         }
@@ -502,9 +680,10 @@ impl Drop for Service {
 }
 
 /// One shard sub-index of the sharded RT route, held by its owning
-/// worker. The shard-local→global id remap lives in the registry's
-/// [`Partition`] (`shards[s].ids`) — one source of truth shared with the
-/// routing/rebalance logic, not a second copy here.
+/// worker (or, transiently, by a failover worker serving a dead owner's
+/// re-dispatched partials). The shard-local→global id remap lives in the
+/// registry's [`Partition`] (`shards[s].ids`) — one source of truth
+/// shared with the routing/rebalance logic, not a second copy here.
 struct ShardSlot {
     index: Box<dyn NeighborIndex>,
     /// Builds performed by sub-indexes this slot retired at rebalances,
@@ -520,7 +699,8 @@ struct ShardSlot {
 /// start from the deterministic partition of the base data — every
 /// worker computes the identical partition without coordination, which
 /// is what lets each one route the shared insert stream (and detect
-/// rebalance overflows) in lock-step.
+/// rebalance overflows) in lock-step, and lets a failover worker build
+/// a dead owner's shard on demand from its own replica.
 ///
 /// The base dataset is shared read-only across the pool (`Arc`); a
 /// worker only materializes its own copy inside the indexes it actually
@@ -536,9 +716,11 @@ struct IndexRegistry {
     /// Shard ids of the RT route this worker owns.
     my_shards: Vec<usize>,
     /// The deterministic partition (built over the base data; present on
-    /// shard-owning workers only). Every owner applies the shared insert
-    /// stream to it through [`Partition::group_routed`], so all replicas
-    /// hold identical shard membership — and evaluate the
+    /// **every** worker when sharding is on — owners serve from it, and
+    /// a non-owner needs it the moment the monitor fails a dead owner's
+    /// shard over to it). Every worker applies the shared insert stream
+    /// to it through [`Partition::group_routed`], so all replicas hold
+    /// identical shard membership — and evaluate the
     /// [`Partition::overflowed`] rebalance predicate to the same answer
     /// at the same insert barrier — with no coordination.
     partition: Option<Partition>,
@@ -572,13 +754,16 @@ impl IndexRegistry {
         }
     }
 
-    /// Eagerly build this worker's owned shard sub-indexes from the
-    /// partition `Service::start` computed once over the base data
-    /// (no-op when sharding is off or this worker owns none). Runs
-    /// before the ready handshake so a sharded route serves from the
-    /// first submit.
+    /// Install the shared partition replica and eagerly build this
+    /// worker's owned shard sub-indexes from the partition
+    /// `Service::start` computed once over the base data (no-op when
+    /// sharding is off). Runs before the ready handshake so a sharded
+    /// route serves from the first submit. Non-owners install the
+    /// replica too: the insert stream keeps it current, so a failover
+    /// build ([`IndexRegistry::shard_slot_or_build`]) starts from the
+    /// same membership every owner holds.
     fn build_owned_shards(&mut self, partition: Option<&Arc<Partition>>, metrics: &Metrics) {
-        if self.shards <= 1 || self.my_shards.is_empty() {
+        if self.shards <= 1 {
             return;
         }
         let part: Partition = partition
@@ -623,6 +808,34 @@ impl IndexRegistry {
             index: Box::new(TrueKnnIndex::new(pts, cfg)),
             retired_builds,
         }
+    }
+
+    /// The sub-index serving shard `s`, building it on demand. Owners
+    /// built theirs eagerly at start; a **failover** worker lands here
+    /// when the monitor re-dispatched a dead owner's partial to it, and
+    /// builds the shard deterministically from its own partition replica
+    /// over the full dataset — byte-for-byte the same structure the
+    /// owner held, because both are pure functions of
+    /// `(base, insert log, shard membership)`.
+    fn shard_slot_or_build(&mut self, s: usize, metrics: &Metrics) -> &mut ShardSlot {
+        if !self.shard_slots.contains_key(&s) {
+            let data = self.full_data();
+            let slot = {
+                let part = self
+                    .partition
+                    .as_ref()
+                    // lint: allow(panic-in-lib) — every worker installs the partition replica before the ready handshake when shards > 1
+                    .expect("sharded batch on a worker without a partition replica");
+                self.build_shard_slot(&data, part, s, 0)
+            };
+            metrics.set_shard_builds(
+                s,
+                slot.retired_builds + slot.index.build_stats().counters.builds,
+            );
+            self.shard_slots.insert(s, slot);
+        }
+        // lint: allow(panic-in-lib) — the branch above inserts the key when absent; infallible by construction
+        self.shard_slots.get_mut(&s).expect("just inserted")
     }
 
     /// Everything this registry indexes (base + inserts so far).
@@ -682,18 +895,19 @@ impl IndexRegistry {
     /// pick the points up from `extra` at build time), refreshing the
     /// per-route build gauges in case an insert triggered a rebuild.
     ///
-    /// On a shard-owning worker the points are also routed through the
-    /// shared deterministic partition into the owned shard sub-indexes;
-    /// global ids are assigned against the pre-insert total so they
-    /// match the unsharded oracle's ids exactly. Every owner tracks all
-    /// shards' sizes from the same stream, so the rebalance decision
-    /// below fires on every owner at the same insert barrier.
+    /// When sharding is on, the points are also routed through the
+    /// shared deterministic partition (and into whatever shard
+    /// sub-indexes this worker holds); global ids are assigned against
+    /// the pre-insert total so they match the unsharded oracle's ids
+    /// exactly. Every worker tracks all shards' sizes from the same
+    /// stream, so the rebalance decision below fires on every worker at
+    /// the same insert barrier.
     fn apply_insert(&mut self, points: &[Point3], metrics: &Metrics) {
         if let Some(part) = &mut self.partition {
             let old_total = self.base.len() + self.extra.len();
             // the SAME grouping step ShardedIndex::insert runs — every
             // replica extends its partition identically, and only the
-            // owned shards' sub-indexes do real work
+            // shards' sub-indexes actually held here do real work
             let grouped = part.group_routed(points, old_total);
             for (s, (ids, pts)) in grouped.into_iter().enumerate() {
                 if pts.is_empty() {
@@ -733,15 +947,21 @@ impl IndexRegistry {
     /// worker's owned shards. Deterministic — every owner computes the
     /// same partition from the same data at the same barrier. Retired
     /// build counts roll into the per-shard gauges so they accumulate.
+    /// Any lazily-built **failover** slot (a shard this worker does not
+    /// own) is dropped first: it was built against the old partition and
+    /// would serve stale membership; a later re-dispatch rebuilds it
+    /// from the fresh replica on demand.
     fn rebalance_shards(&mut self, metrics: &Metrics) {
+        let owned = self.my_shards.clone();
+        self.shard_slots.retain(|s, _| owned.contains(s));
         let exec = Executor::new(self.trueknn.threads);
         let data = self.full_data();
         let part = Partition::build(&data, self.shards, &exec);
         // retire and rebuild in my_shards order (ascending by
-        // construction) — slots only ever exist for owned shards, so the
-        // keyed removes cover everything a drain() would have, without
-        // the HashMap's randomized visit order
-        let owned = self.my_shards.clone();
+        // construction) — slots only ever exist for owned shards after
+        // the retain above, so the keyed removes cover everything a
+        // drain() would have, without the HashMap's randomized visit
+        // order
         for s in owned {
             let retired = match self.shard_slots.remove(&s) {
                 Some(old) => old.retired_builds + old.index.build_stats().counters.builds,
@@ -758,29 +978,31 @@ impl IndexRegistry {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn worker_loop(
-    worker_id: usize,
-    n_workers: usize,
-    base: Arc<Vec<Point3>>,
-    partition: Option<Arc<Partition>>,
-    cfg: ServiceConfig,
-    rx: Receiver<Msg>,
-    ready: SyncSender<bool>,
-    metrics: Arc<Metrics>,
-    inflight: Arc<AtomicUsize>,
-) {
-    let mut registry = IndexRegistry::new(base, &cfg, worker_id, n_workers);
+/// One incarnation of a worker: build (or deterministically rebuild)
+/// the index state, replay the journal left by a crashed predecessor,
+/// then serve the queue until shutdown. Runs under
+/// [`supervise_worker`]'s `catch_unwind`; everything that must survive
+/// a crash lives in the [`WorkerCtx`], everything local to this
+/// incarnation (registry, batcher, reply map) is rebuilt here from the
+/// ctx's persistent base + insert log.
+pub(super) fn worker_body(ctx: &mut WorkerCtx) {
+    let mut registry = IndexRegistry::new(ctx.base.clone(), &ctx.cfg, ctx.worker_id, ctx.n_workers);
     // Sharded RT route: owned shard sub-indexes are built before the
     // ready handshake, from the one partition Service::start computed
     // over the base data, so the route serves from the first submit and
-    // every owner starts from identical shard membership.
-    registry.build_owned_shards(partition.as_ref(), &metrics);
+    // every worker starts from identical shard membership.
+    registry.build_owned_shards(ctx.partition.as_ref(), &ctx.metrics);
+    // Deterministic rebuild: the registry is a pure function of
+    // (base, ordered insert log, config) — replaying the log after a
+    // crash reproduces the pre-crash index state bit for bit.
+    for pts in &ctx.insert_log {
+        registry.apply_insert(pts, &ctx.metrics);
+    }
     // PJRT runtime is constructed here: the client is not Send. Only the
     // worker that owns the Brute route loads it (eagerly, so the
     // readiness handshake can tell the router the path exists).
     let mut pjrt_available = false;
-    if cfg.use_pjrt && Router::worker_for(RoutePath::Brute, n_workers) == worker_id {
+    if ctx.cfg.use_pjrt && Router::worker_for(RoutePath::Brute, ctx.n_workers) == ctx.worker_id {
         match PjrtRuntime::load_default() {
             Ok(rt) => {
                 let index = BrutePjrtIndex::with_runtime(
@@ -788,7 +1010,7 @@ fn worker_loop(
                     Some(rt),
                     registry.brute_config(),
                 );
-                registry.install(RoutePath::Brute, Box::new(index), &metrics);
+                registry.install(RoutePath::Brute, Box::new(index), &ctx.metrics);
                 pjrt_available = true;
             }
             Err(e) => {
@@ -796,48 +1018,47 @@ fn worker_loop(
             }
         }
     }
-    let _ = ready.send(pjrt_available);
+    // first incarnation only: later ones already shook hands
+    if let Some(ready) = ctx.ready.take() {
+        let _ = ready.send(pjrt_available);
+    }
 
-    let mut batcher = DynamicBatcher::new(cfg.batcher.clone());
+    let mut batcher = DynamicBatcher::new(ctx.cfg.batcher.clone());
     // response sinks ride alongside their request through the batcher,
     // keyed by (request id, shard tag) — a worker owning several shards
     // of one route receives one message per owned shard
     let mut reply_of: HashMap<(u64, u64), ReplySink> = HashMap::new();
 
+    // Crash recovery: re-enqueue every journaled (accepted, un-replied)
+    // request in its original submit order and serve it before touching
+    // the queue — the replay is indistinguishable from the first
+    // attempt to the client, and the replays counter records it.
+    if !ctx.journal.is_empty() {
+        Metrics::add(&ctx.metrics.replays, ctx.journal.len() as u64);
+        for e in &ctx.journal {
+            reply_of.insert(sink_key(e.req.id, e.shard), e.sink.clone());
+            batcher.push(e.req.clone(), e.path, e.shard, e.arrived);
+        }
+        drain(ctx, &mut registry, &mut batcher, &mut reply_of);
+    }
+
     'outer: loop {
         // block for the first message, then drain whatever else arrived
-        match rx.recv() {
+        match ctx.rx.recv() {
             Ok(msg) => {
-                let keep = on_msg(
-                    worker_id,
-                    msg,
-                    &mut registry,
-                    &mut batcher,
-                    &mut reply_of,
-                    &metrics,
-                    &inflight,
-                );
-                if !keep {
+                ctx.beat();
+                if !on_msg(ctx, msg, &mut registry, &mut batcher, &mut reply_of) {
                     break 'outer;
                 }
             }
             Err(_) => break 'outer,
         }
-        while let Ok(msg) = rx.try_recv() {
-            let keep = on_msg(
-                worker_id,
-                msg,
-                &mut registry,
-                &mut batcher,
-                &mut reply_of,
-                &metrics,
-                &inflight,
-            );
-            if !keep {
+        while let Ok(msg) = ctx.rx.try_recv() {
+            if !on_msg(ctx, msg, &mut registry, &mut batcher, &mut reply_of) {
                 break 'outer;
             }
         }
-        drain(worker_id, &mut registry, &mut batcher, &mut reply_of, &metrics, &inflight);
+        drain(ctx, &mut registry, &mut batcher, &mut reply_of);
     }
 
     // Reconcile gauges for messages accepted behind the shutdown signal:
@@ -846,12 +1067,12 @@ fn worker_loop(
     // submit that races past this sweep before the channel disconnects
     // can still leak one tick — the gauges are operator telemetry, not
     // invariants.
-    let wm = &metrics.workers[worker_id];
-    while let Ok(msg) = rx.try_recv() {
+    let wm = &ctx.metrics.workers[ctx.worker_id];
+    while let Ok(msg) = ctx.rx.try_recv() {
         match msg {
             Msg::Request(..) => {
                 wm.queue_depth.fetch_sub(1, Ordering::SeqCst);
-                inflight.fetch_sub(1, Ordering::SeqCst);
+                ctx.inflight.fetch_sub(1, Ordering::SeqCst);
             }
             Msg::Insert(_) => {
                 wm.queue_depth.fetch_sub(1, Ordering::SeqCst);
@@ -870,50 +1091,139 @@ fn sink_key(id: u64, shard: Option<usize>) -> (u64, u64) {
 /// Handle one queue message on the worker thread; returns `false` when
 /// the worker should exit.
 fn on_msg(
-    worker_id: usize,
+    ctx: &mut WorkerCtx,
     msg: Msg,
     registry: &mut IndexRegistry,
     batcher: &mut DynamicBatcher,
     reply_of: &mut HashMap<(u64, u64), ReplySink>,
-    metrics: &Arc<Metrics>,
-    inflight: &Arc<AtomicUsize>,
 ) -> bool {
-    let wm = &metrics.workers[worker_id];
     match msg {
         Msg::Request(req, path, shard, sink, t) => {
-            wm.queue_depth.fetch_sub(1, Ordering::SeqCst);
+            ctx.metrics.workers[ctx.worker_id]
+                .queue_depth
+                .fetch_sub(1, Ordering::SeqCst);
+            // journal before batching: from this point until its reply
+            // is sent, the request survives a worker crash
+            ctx.journal.push(JournalEntry {
+                req: req.clone(),
+                path,
+                shard,
+                sink: sink.clone(),
+                arrived: t,
+            });
             reply_of.insert(sink_key(req.id, shard), sink);
             batcher.push(req, path, shard, t);
             true
         }
         Msg::Insert(points) => {
-            wm.queue_depth.fetch_sub(1, Ordering::SeqCst);
+            ctx.metrics.workers[ctx.worker_id]
+                .queue_depth
+                .fetch_sub(1, Ordering::SeqCst);
+            // log the insert BEFORE the barrier drain: the message is
+            // already consumed from the queue, so a crash anywhere past
+            // this line must still replay it or the workers' views of
+            // the data fork. (A journaled request replayed across this
+            // barrier may be served post-insert — within the "may or
+            // may not observe" ordering contract for requests submitted
+            // before the insert.)
+            ctx.insert_log.push(points.clone());
             // the insert is a barrier: everything submitted before it is
             // served against the pre-insert structures first
-            drain(worker_id, registry, batcher, reply_of, metrics, inflight);
-            registry.apply_insert(&points, metrics);
-            Metrics::inc(&wm.inserts);
+            drain(ctx, registry, batcher, reply_of);
+            registry.apply_insert(&points, &ctx.metrics);
+            Metrics::inc(&ctx.metrics.workers[ctx.worker_id].inserts);
             true
         }
         Msg::Shutdown => {
             // serve what's queued, then exit
-            drain(worker_id, registry, batcher, reply_of, metrics, inflight);
+            drain(ctx, registry, batcher, reply_of);
             false
         }
     }
 }
 
+/// Shed every request in the batch whose deadline has passed: typed
+/// [`ServiceError::DeadlineExceeded`] to the sink, a `deadline_misses`
+/// tick, and the usual per-request finalization (inflight gauge,
+/// journal completion). Survivors keep their order; ranges are rebuilt.
+fn shed_expired(
+    ctx: &mut WorkerCtx,
+    batch: &mut Batch,
+    reply_of: &mut HashMap<(u64, u64), ReplySink>,
+    deadline: Duration,
+) {
+    let shard = batch.shard;
+    let mut kept = Vec::with_capacity(batch.requests.len());
+    for (req, arrived) in batch.requests.drain(..) {
+        // `>=` so Duration::ZERO deterministically sheds everything
+        if arrived.elapsed() >= deadline {
+            Metrics::inc(&ctx.metrics.deadline_misses);
+            if let Some(sink) = reply_of.remove(&sink_key(req.id, shard)) {
+                sink.fail(ServiceError::DeadlineExceeded);
+            }
+            ctx.inflight.fetch_sub(1, Ordering::SeqCst);
+            ctx.complete(req.id, shard);
+        } else {
+            kept.push((req, arrived));
+        }
+    }
+    batch.requests = kept;
+    let mut off = 0;
+    batch.ranges = batch
+        .requests
+        .iter()
+        .map(|(r, _)| {
+            let start = off;
+            off += r.queries.len();
+            (start, off)
+        })
+        .collect();
+}
+
 fn drain(
-    worker_id: usize,
+    ctx: &mut WorkerCtx,
     registry: &mut IndexRegistry,
     batcher: &mut DynamicBatcher,
     reply_of: &mut HashMap<(u64, u64), ReplySink>,
-    metrics: &Arc<Metrics>,
-    inflight: &Arc<AtomicUsize>,
 ) {
-    while let Some(batch) = batcher.next_batch() {
-        Metrics::inc(&metrics.batches);
-        Metrics::inc(&metrics.workers[worker_id].batches);
+    while let Some(mut batch) = batcher.next_batch() {
+        // per-worker batch sequence: monotonic across restarts, so a
+        // scheduled fault fires exactly once (the replay drains at a
+        // later sequence)
+        let seq = ctx.batch_seq;
+        ctx.batch_seq += 1;
+        ctx.beat();
+        let stall = ctx.cfg.faults.queue_stall_ms(ctx.worker_id, seq);
+        let delay = ctx.cfg.faults.reply_delay_ms(ctx.worker_id, seq);
+        let panic_now = ctx.cfg.faults.should_panic(ctx.worker_id, seq)
+            || ctx
+                .cfg
+                .faults
+                .poisons_any(batch.requests.iter().map(|(r, _)| r.id));
+        if let Some(ms) = stall {
+            // injected queue stall: the heartbeat above is the last one
+            // until the sleep ends, so the monitor sees this worker go
+            // stale — exactly the hang the failover path exists for
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        // record the in-flight keys: a crash between here and the end of
+        // the batch is attributed to exactly these requests (the poison
+        // ledger's strike unit)
+        ctx.crashing_keys = batch.request_keys();
+        if panic_now {
+            std::panic::panic_any(InjectedFault);
+        }
+        if let Some(deadline) = ctx.cfg.request_deadline {
+            shed_expired(ctx, &mut batch, reply_of, deadline);
+            if batch.requests.is_empty() {
+                ctx.crashing_keys.clear();
+                continue;
+            }
+            // a crash while serving the survivors belongs to them alone
+            ctx.crashing_keys = batch.request_keys();
+        }
+        Metrics::inc(&ctx.metrics.batches);
+        Metrics::inc(&ctx.metrics.workers[ctx.worker_id].batches);
         // lint: allow(wallclock-in-core) — service-time stamp feeds latency telemetry only, never results
         let served = Instant::now();
         let all_queries: Vec<Point3> = batch
@@ -928,27 +1238,21 @@ fn drain(
 
         if let Some(s) = batch.shard {
             // sharded scatter leg: serve this shard's slice of every
-            // request against the owned sub-index, remap shard-local ids
-            // to global ones, and park each partial in its gather — the
-            // delivery completing a gather merges and replies. Shard
-            // batches only ever land on the owner (routing is the same
-            // pure function the handle used) and owners build eagerly,
-            // so slot and partition always exist here.
-            Metrics::add(&metrics.shard_queries[s], all_queries.len() as u64);
-            let slot = registry
-                .shard_slots
-                .get_mut(&s)
-                // lint: allow(panic-in-lib) — routing is the same pure function the handle used; owners build eagerly
-                .expect("shard batch routed to a non-owner worker");
+            // request against the shard sub-index (owned and eager, or a
+            // failover build on demand), remap shard-local ids to global
+            // ones, and park each partial in its gather — the delivery
+            // completing a gather merges and replies.
+            Metrics::add(&ctx.metrics.shard_queries[s], all_queries.len() as u64);
+            let slot = registry.shard_slot_or_build(s, &ctx.metrics);
             let res = slot.index.knn(&all_queries, batch.k);
-            metrics.set_shard_builds(
+            ctx.metrics.set_shard_builds(
                 s,
                 slot.retired_builds + slot.index.build_stats().counters.builds,
             );
             let ids = &registry
                 .partition
                 .as_ref()
-                // lint: allow(panic-in-lib) — shard owners install the partition before the ready handshake
+                // lint: allow(panic-in-lib) — every worker installs the partition replica before the ready handshake
                 .expect("shard batch without a partition")
                 .shards[s]
                 .ids;
@@ -965,45 +1269,65 @@ fn drain(
                 })
                 .collect();
             let service_seconds = served.elapsed().as_secs_f64();
+            if let Some(ms) = delay {
+                std::thread::sleep(Duration::from_millis(ms));
+            }
             for ((req, _arrived), range) in batch.requests.iter().zip(&batch.ranges) {
-                inflight.fetch_sub(1, Ordering::SeqCst);
+                // finalization order: deliver, then gauges, then journal
+                // completion — a crash mid-sequence replays the delivery
+                // (idempotent) instead of double-decrementing the gauge
                 if let Some(ReplySink::Gather(g)) = reply_of.remove(&sink_key(req.id, Some(s))) {
                     let partial = neighbors[range.0..range.1].to_vec();
-                    deliver_partial(&g, s, partial, service_seconds, metrics);
+                    deliver_partial(&g, s, partial, service_seconds, &ctx.metrics);
                 }
+                ctx.inflight.fetch_sub(1, Ordering::SeqCst);
+                ctx.complete(req.id, Some(s));
             }
+            ctx.crashing_keys.clear();
+            ctx.beat();
             continue;
         }
 
         match path {
-            RoutePath::Rt => Metrics::add(&metrics.rt_requests, batch.requests.len() as u64),
+            RoutePath::Rt => Metrics::add(&ctx.metrics.rt_requests, batch.requests.len() as u64),
             RoutePath::Brute | RoutePath::BruteCpu => {
-                Metrics::add(&metrics.brute_requests, batch.requests.len() as u64)
+                Metrics::add(&ctx.metrics.brute_requests, batch.requests.len() as u64)
             }
         }
-        let index = registry.get(path, metrics);
+        let index = registry.get(path, &ctx.metrics);
         let neighbors = index.knn(&all_queries, batch.k).neighbors;
         // refresh the gauge: queries only refit, but staying at the
         // index's own count keeps the claim honest if that ever changes
-        metrics.set_route_builds(path, index.build_stats().counters.builds);
+        ctx.metrics
+            .set_route_builds(path, index.build_stats().counters.builds);
         let service_seconds = served.elapsed().as_secs_f64();
+        if let Some(ms) = delay {
+            std::thread::sleep(Duration::from_millis(ms));
+        }
 
         for ((req, arrived), range) in batch.requests.iter().zip(&batch.ranges) {
             let latency = arrived.elapsed().as_secs_f64();
-            metrics.record_latency(latency);
-            Metrics::inc(&metrics.responses);
-            Metrics::add(&metrics.queries_served, req.queries.len() as u64);
-            inflight.fetch_sub(1, Ordering::SeqCst);
+            ctx.metrics.record_latency(latency);
+            Metrics::inc(&ctx.metrics.responses);
+            Metrics::add(&ctx.metrics.queries_served, req.queries.len() as u64);
+            // finalization order: reply, then gauge, then journal
+            // completion — a crash mid-sequence re-sends a reply the
+            // client already has (harmlessly buffered) instead of
+            // double-decrementing the inflight gauge
             if let Some(ReplySink::Direct(reply)) = reply_of.remove(&sink_key(req.id, None)) {
-                let _ = reply.send(KnnResponse {
+                let _ = reply.send(Ok(KnnResponse {
                     id: req.id,
                     neighbors: neighbors[range.0..range.1].to_vec(),
                     path,
                     service_seconds,
                     latency_seconds: latency,
-                });
+                }));
             }
+            ctx.inflight.fetch_sub(1, Ordering::SeqCst);
+            ctx.complete(req.id, None);
         }
+        ctx.crashing_keys.clear();
+        ctx.beat();
     }
 }
 
@@ -1012,7 +1336,11 @@ fn drain(
 /// `(distance, id)` — the same order the unsharded heap drain sorts by)
 /// and sends the response. The merge consumes the partials in shard-id
 /// order, so the outcome is independent of which worker finished last.
-fn deliver_partial(
+/// Delivery is **idempotent**: a duplicate for an already-filled slot
+/// (or an already-completed gather) is dropped — failover re-dispatch
+/// and crash replay both produce the same deterministic partial, so
+/// dropping the copy loses nothing.
+pub(super) fn deliver_partial(
     g: &Gather,
     shard: usize,
     partial: Vec<Vec<Neighbor>>,
@@ -1026,10 +1354,14 @@ fn deliver_partial(
             .state
             .lock()
             .unwrap_or_else(std::sync::PoisonError::into_inner);
+        if st.reply.is_none() {
+            // completed (or failed) before this duplicate landed
+            return;
+        }
         if st.partials[shard].is_none() {
+            st.partials[shard] = Some(partial);
             st.filled += 1;
         }
-        st.partials[shard] = Some(partial);
         st.service_seconds = st.service_seconds.max(service_seconds);
         if st.filled < st.partials.len() {
             None
@@ -1060,13 +1392,13 @@ fn deliver_partial(
     Metrics::inc(&metrics.responses);
     Metrics::add(&metrics.queries_served, n_queries as u64);
     Metrics::add(&metrics.rt_requests, 1);
-    let _ = reply.send(KnnResponse {
+    let _ = reply.send(Ok(KnnResponse {
         id: g.id,
         neighbors,
         path: g.path,
         service_seconds,
         latency_seconds: latency,
-    });
+    }));
 }
 
 #[cfg(test)]
@@ -1140,6 +1472,48 @@ mod tests {
     use super::super::request::QueryMode;
 
     #[test]
+    fn submit_rejects_degenerate_requests_with_typed_errors() {
+        let ds = DatasetKind::Uniform.generate(1_000, 79);
+        let (svc, handle) = Service::start(ds.points.clone(), ServiceConfig::default());
+        // k = 0
+        let err = handle
+            .submit(KnnRequest::new(1, ds.points[..2].to_vec(), 0))
+            .unwrap_err();
+        assert!(matches!(err, ServiceError::InvalidRequest(_)), "{err}");
+        // empty query batch
+        let err = handle.submit(KnnRequest::new(2, Vec::new(), 3)).unwrap_err();
+        assert!(matches!(err, ServiceError::InvalidRequest(_)), "{err}");
+        // non-finite coordinate
+        let err = handle
+            .submit(KnnRequest::new(3, vec![Point3::new(0.0, f32::NAN, 0.0)], 3))
+            .unwrap_err();
+        assert!(matches!(err, ServiceError::InvalidRequest(_)), "{err}");
+        // degenerate inserts
+        assert!(handle.insert(&[]).is_err());
+        assert!(handle.insert(&[Point3::new(f32::INFINITY, 0.0, 0.0)]).is_err());
+        // none of it touched the pool
+        let m = handle.metrics().snapshot();
+        assert_eq!(m.requests, 0);
+        assert_eq!(m.inserts, 0);
+        // a well-formed request still round-trips
+        let resp = handle.query(KnnRequest::new(4, ds.points[..2].to_vec(), 3)).unwrap();
+        assert_eq!(resp.id, 4);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_a_typed_shutdown_error() {
+        let ds = DatasetKind::Uniform.generate(1_000, 80);
+        let (svc, handle) = Service::start(ds.points.clone(), ServiceConfig::default());
+        svc.shutdown();
+        let err = handle
+            .submit(KnnRequest::new(1, ds.points[..2].to_vec(), 2))
+            .unwrap_err();
+        assert_eq!(err, ServiceError::ShutDown);
+        assert_eq!(handle.insert(&[Point3::ZERO]).unwrap_err(), ServiceError::ShutDown);
+    }
+
+    #[test]
     fn serving_many_batches_builds_one_index() {
         // the tentpole claim: N batches against one dataset = exactly 1
         // acceleration-structure build (the seed rebuilt the BVH per batch)
@@ -1182,7 +1556,7 @@ mod tests {
             ));
         }
         for (id, mode, rx) in rxs {
-            let resp = rx.recv().unwrap();
+            let resp = rx.recv().unwrap().unwrap();
             assert_eq!(resp.id, id);
             let want = match mode {
                 QueryMode::Rt => RoutePath::Rt,
@@ -1207,7 +1581,10 @@ mod tests {
             .submit(KnnRequest::new(1, ds.points[..4].to_vec(), 2))
             .unwrap();
         svc.shutdown();
-        let resp = rx.recv().expect("queued request must still be answered");
+        let resp = rx
+            .recv()
+            .expect("queued request must still be answered")
+            .expect("and answered with a response, not a typed failure");
         assert_eq!(resp.id, 1);
     }
 

@@ -1,0 +1,389 @@
+//! Worker supervision: crash containment, deterministic restart and
+//! scatter failover for the service pool.
+//!
+//! Each pool worker's serving loop ([`worker_body`]) runs under a
+//! supervisor ([`supervise_worker`]) that catches panics — injected by a
+//! [`crate::faults::FaultPlan`] or genuine — and restarts the loop
+//! in-place on the same thread. Everything a restart needs to reproduce
+//! the crashed incarnation's state bit for bit lives in the
+//! [`WorkerCtx`] that survives the `catch_unwind` boundary:
+//!
+//! - the **base dataset** and partition replica (shared, immutable);
+//! - the **insert log** — every insert broadcast this worker consumed,
+//!   in arrival order, so the rebuilt registry replays them and lands on
+//!   the exact pre-crash index state (indexes are pure functions of
+//!   `(base, ordered inserts, config)`);
+//! - the **journal** — every accepted-but-unanswered request, in submit
+//!   order, re-enqueued and served before the queue is touched again;
+//! - the **batch sequence**, monotonic across restarts, so a scheduled
+//!   fault fires exactly once and replayed batches sail past it.
+//!
+//! The poison ledger breaks crash loops: a crash is attributed to the
+//! requests in flight at that moment ([`WorkerCtx::crashing_keys`]), and
+//! an id that kills its worker [`POISON_STRIKES`] times is quarantined —
+//! its journal entries fail with [`ServiceError::Poisoned`], later
+//! submits of the id are refused at the boundary, and the pool survives.
+//!
+//! Hangs are handled by a separate **failover monitor** ([`run_monitor`],
+//! one per sharded pool): workers heartbeat through [`WorkerHealth`],
+//! and a scattered request whose shard partial is missing past the
+//! heartbeat timeout — with a stale owner — is re-dispatched to the
+//! shard's deterministic failover owner
+//! ([`Router::worker_for_shard_excluding`]), which rebuilds the shard
+//! from its own partition replica and delivers the identical partial
+//! (delivery is idempotent, so a recovered owner's duplicate is merely
+//! dropped).
+
+use super::metrics::Metrics;
+use super::request::{KnnRequest, RoutePath};
+use super::router::Router;
+use super::service::{
+    worker_body, Gather, Msg, ReplySink, ServiceConfig, ServiceError, ServiceHandle,
+};
+use crate::geom::Point3;
+use crate::shard::Partition;
+use std::collections::{BTreeSet, HashMap};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::{Duration, Instant};
+
+/// Crashes one request id may cause before the ledger quarantines it.
+pub(super) const POISON_STRIKES: u32 = 2;
+
+/// Consecutive crashes **without batch progress** before the supervisor
+/// gives up on a worker (a startup-time crash loop: the panic fires
+/// before any batch is served, so restarting cannot help).
+const MAX_CONSECUTIVE_RESTARTS: u32 = 4;
+
+/// Monotonic time base shared by the pool's heartbeats: milliseconds
+/// since service start, from one common epoch so staleness compares
+/// across threads.
+pub(super) struct ServiceClock {
+    epoch: Instant,
+}
+
+impl Default for ServiceClock {
+    fn default() -> Self {
+        Self {
+            // lint: allow(wallclock-in-core) — heartbeat epoch: feeds staleness intervals only, never results
+            epoch: Instant::now(),
+        }
+    }
+}
+
+impl ServiceClock {
+    /// Milliseconds elapsed since the clock's epoch.
+    pub(super) fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+}
+
+/// One worker's liveness beacon: the clock reading of its last
+/// heartbeat. The worker beats at every message receipt and around every
+/// batch; the monitor reads staleness to tell a hung worker from a busy
+/// one.
+pub(super) struct WorkerHealth {
+    last_beat: AtomicU64,
+}
+
+impl WorkerHealth {
+    /// A health slot initialized to "just beat" (a worker must get its
+    /// startup grace period, not be declared stale before it runs).
+    pub(super) fn new(clock: &ServiceClock) -> Self {
+        Self {
+            last_beat: AtomicU64::new(clock.now_ms()),
+        }
+    }
+
+    /// Record a heartbeat now.
+    pub(super) fn beat(&self, clock: &ServiceClock) {
+        self.last_beat.store(clock.now_ms(), Ordering::SeqCst);
+    }
+
+    /// Milliseconds since the last heartbeat.
+    pub(super) fn staleness_ms(&self, clock: &ServiceClock) -> u64 {
+        clock.now_ms().saturating_sub(self.last_beat.load(Ordering::SeqCst))
+    }
+}
+
+#[derive(Default)]
+struct LedgerState {
+    /// Crash count per request id. Never iterated — keyed access only
+    /// (iteration order would be nondeterministic).
+    strikes: HashMap<u64, u32>,
+    /// Quarantined ids, ordered so any future listing is deterministic.
+    quarantined: BTreeSet<u64>,
+}
+
+/// The pool-wide poison ledger: attributes worker crashes to the request
+/// ids in flight and quarantines an id after [`POISON_STRIKES`] kills.
+/// Shared by every supervisor (strikes) and every handle (submit-time
+/// refusal), so a poisoned request is fenced out of the whole pool, not
+/// one worker.
+#[derive(Default)]
+pub(super) struct PoisonLedger {
+    state: Mutex<LedgerState>,
+}
+
+impl PoisonLedger {
+    /// Record one crash attributed to `id`; returns true exactly once —
+    /// on the strike that crosses the quarantine threshold.
+    pub(super) fn strike(&self, id: u64) -> bool {
+        let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        let n = st.strikes.entry(id).or_insert(0);
+        *n += 1;
+        let n = *n;
+        n >= POISON_STRIKES && st.quarantined.insert(id)
+    }
+
+    /// Is `id` quarantined?
+    pub(super) fn is_poisoned(&self, id: u64) -> bool {
+        self.state
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .quarantined
+            .contains(&id)
+    }
+}
+
+/// One accepted-but-unanswered request, as the supervisor's journal
+/// holds it: everything needed to re-enqueue it verbatim after a crash.
+pub(super) struct JournalEntry {
+    pub(super) req: KnnRequest,
+    pub(super) path: RoutePath,
+    pub(super) shard: Option<usize>,
+    pub(super) sink: ReplySink,
+    pub(super) arrived: Instant,
+}
+
+/// The crash-surviving state of one worker. [`worker_body`] borrows it
+/// for an incarnation; everything incarnation-local (registry, batcher,
+/// reply map) is rebuilt from these fields on restart.
+pub(super) struct WorkerCtx {
+    pub(super) worker_id: usize,
+    pub(super) n_workers: usize,
+    pub(super) base: Arc<Vec<Point3>>,
+    /// The partition `Service::start` computed (shards > 1 only).
+    pub(super) partition: Option<Arc<Partition>>,
+    pub(super) cfg: ServiceConfig,
+    pub(super) rx: Receiver<Msg>,
+    /// Ready-handshake sender; taken by the first incarnation.
+    pub(super) ready: Option<SyncSender<bool>>,
+    pub(super) metrics: Arc<Metrics>,
+    pub(super) inflight: Arc<AtomicUsize>,
+    pub(super) health: Arc<Vec<WorkerHealth>>,
+    pub(super) clock: Arc<ServiceClock>,
+    pub(super) ledger: Arc<PoisonLedger>,
+    /// Accepted, unanswered requests in submit order (replayed on
+    /// restart).
+    pub(super) journal: Vec<JournalEntry>,
+    /// Every insert broadcast consumed, in arrival order (replayed into
+    /// the rebuilt registry on restart).
+    pub(super) insert_log: Vec<Arc<Vec<Point3>>>,
+    /// Per-worker batch sequence; monotonic across restarts.
+    pub(super) batch_seq: u64,
+    /// `(id, shard)` keys of the batch being served right now — the
+    /// requests a crash at this moment is attributed to.
+    pub(super) crashing_keys: Vec<(u64, Option<usize>)>,
+}
+
+impl WorkerCtx {
+    /// Heartbeat: stamp this worker's health slot with the clock's now.
+    pub(super) fn beat(&self) {
+        self.health[self.worker_id].beat(&self.clock);
+    }
+
+    /// Retire the journal entry of an answered request (matched on id
+    /// **and** shard: a worker owning several shards of one route holds
+    /// one entry per shard).
+    pub(super) fn complete(&mut self, id: u64, shard: Option<usize>) {
+        if let Some(pos) = self
+            .journal
+            .iter()
+            .position(|e| e.req.id == id && e.shard == shard)
+        {
+            self.journal.remove(pos);
+        }
+    }
+
+    /// After a crash: strike every request that was in flight, and
+    /// quarantine any id that crossed the threshold — its journal
+    /// entries (all shards) fail with [`ServiceError::Poisoned`] and are
+    /// **not** replayed.
+    fn quarantine_poisoned(&mut self) {
+        let keys = std::mem::take(&mut self.crashing_keys);
+        for (id, _shard) in keys {
+            if self.ledger.strike(id) {
+                Metrics::inc(&self.metrics.poisoned);
+                while let Some(pos) = self.journal.iter().position(|e| e.req.id == id) {
+                    let entry = self.journal.remove(pos);
+                    entry.sink.fail(ServiceError::Poisoned);
+                    self.inflight.fetch_sub(1, Ordering::SeqCst);
+                }
+            }
+        }
+    }
+
+    /// Fail every journaled request with `err` (the supervisor's
+    /// give-up path): clients get a typed error instead of a hang.
+    fn fail_all(&mut self, err: ServiceError) {
+        for entry in self.journal.drain(..) {
+            entry.sink.fail(err.clone());
+            self.inflight.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Run one worker under supervision: serve until clean shutdown,
+/// catching panics and restarting the serving loop with deterministic
+/// state recovery (see the module docs). Gives up — failing the journal
+/// with [`ServiceError::ShutDown`] — only on a crash loop that makes no
+/// batch progress, which a restart cannot fix. Documented edge: the
+/// give-up fails this worker's gather sinks too, even where a scatter
+/// failover could still have saved them — a worker that cannot finish
+/// startup is assumed misconfigured pool-wide.
+pub(super) fn supervise_worker(mut ctx: WorkerCtx) {
+    let mut consecutive = 0u32;
+    let mut seq_at_last_crash = 0u64;
+    loop {
+        let outcome = catch_unwind(AssertUnwindSafe(|| worker_body(&mut ctx)));
+        match outcome {
+            Ok(()) => return,
+            Err(_) => {
+                // batch progress since the last crash resets the loop
+                // detector: the pool is limping, not stuck
+                if ctx.batch_seq > seq_at_last_crash {
+                    consecutive = 0;
+                }
+                seq_at_last_crash = ctx.batch_seq;
+                consecutive += 1;
+                Metrics::inc(&ctx.metrics.restarts);
+                ctx.quarantine_poisoned();
+                if consecutive >= MAX_CONSECUTIVE_RESTARTS {
+                    crate::log_warn!(
+                        "worker {} crashed {consecutive} times without progress; giving up",
+                        ctx.worker_id
+                    );
+                    ctx.fail_all(ServiceError::ShutDown);
+                    return;
+                }
+                // exponential backoff (capped at 8x) between restarts,
+                // so a tight crash loop does not spin a core
+                std::thread::sleep(ctx.cfg.replay_backoff * (1u32 << (consecutive - 1).min(3)));
+                ctx.beat();
+            }
+        }
+    }
+}
+
+/// Everything the failover monitor thread needs: the pending-gather
+/// list it sweeps, the health table it reads, and a handle to
+/// re-dispatch timed-out partials through.
+pub(super) struct MonitorCtx {
+    pub(super) handle: ServiceHandle,
+    pub(super) gathers: Arc<Mutex<Vec<Arc<Gather>>>>,
+    pub(super) health: Arc<Vec<WorkerHealth>>,
+    pub(super) clock: Arc<ServiceClock>,
+    pub(super) timeout: Duration,
+    pub(super) shards: usize,
+    pub(super) stop: Receiver<()>,
+}
+
+/// The failover monitor loop (one thread per sharded pool): every
+/// quarter-timeout tick, sweep the pending gathers and re-dispatch any
+/// shard partial that timed out on a stale owner to the shard's
+/// deterministic failover owner. Exits on the stop signal (or its
+/// disconnect at service teardown).
+pub(super) fn run_monitor(mc: MonitorCtx) {
+    let tick = (mc.timeout / 4).max(Duration::from_millis(1));
+    loop {
+        match mc.stop.recv_timeout(tick) {
+            Ok(()) | Err(RecvTimeoutError::Disconnected) => return,
+            Err(RecvTimeoutError::Timeout) => sweep(&mc),
+        }
+    }
+}
+
+/// One monitor pass: retire completed gathers, then for each gather past
+/// the timeout, re-dispatch every still-missing, not-yet-redispatched
+/// shard whose owner's heartbeat is stale. The failover target rebuilds
+/// the shard from its partition replica and delivers the identical
+/// partial; the `replays` counter records each re-dispatch.
+fn sweep(mc: &MonitorCtx) {
+    let timeout_ms = mc.timeout.as_millis() as u64;
+    let mut gathers = mc.gathers.lock().unwrap_or_else(PoisonError::into_inner);
+    gathers.retain(|g| {
+        g.state
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .reply
+            .is_some()
+    });
+    for g in gathers.iter() {
+        if g.submitted.elapsed() < mc.timeout {
+            continue;
+        }
+        let stale: Vec<usize> = {
+            let st = g.state.lock().unwrap_or_else(PoisonError::into_inner);
+            (0..mc.shards)
+                .filter(|&s| st.partials[s].is_none() && !st.redispatched[s])
+                .collect()
+        };
+        for s in stale {
+            let owner = Router::worker_for_shard(g.path, s, mc.handle.workers());
+            if mc.health[owner].staleness_ms(&mc.clock) < timeout_ms {
+                // the owner is alive (maybe just slow): let it finish —
+                // its delivery is the same bits a failover would produce
+                continue;
+            }
+            let fo = Router::worker_for_shard_excluding(g.path, s, mc.handle.workers(), owner);
+            let msg = Msg::Request(
+                g.req.clone(),
+                g.path,
+                Some(s),
+                ReplySink::Gather(g.clone()),
+                // lint: allow(wallclock-in-core) — re-dispatch arrival stamp feeds latency telemetry only
+                Instant::now(),
+            );
+            // a full failover queue just means we retry at the next
+            // tick (redispatched stays false)
+            if mc.handle.try_send(fo, msg).is_ok() {
+                Metrics::inc(&mc.handle.metrics().replays);
+                let mut st = g.state.lock().unwrap_or_else(PoisonError::into_inner);
+                st.redispatched[s] = true;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poison_ledger_quarantines_on_the_second_strike_once() {
+        let ledger = PoisonLedger::default();
+        assert!(!ledger.is_poisoned(7));
+        assert!(!ledger.strike(7), "first strike must not quarantine");
+        assert!(!ledger.is_poisoned(7));
+        assert!(ledger.strike(7), "second strike crosses the threshold");
+        assert!(ledger.is_poisoned(7));
+        assert!(!ledger.strike(7), "threshold crossing reports only once");
+        assert!(ledger.is_poisoned(7));
+        assert!(!ledger.is_poisoned(8), "ids are independent");
+    }
+
+    #[test]
+    fn health_staleness_tracks_beats() {
+        let clock = ServiceClock::default();
+        let health = WorkerHealth::new(&clock);
+        // a fresh slot starts from "just beat", and a beat resets it
+        let before = health.staleness_ms(&clock);
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(health.staleness_ms(&clock) >= before);
+        health.beat(&clock);
+        assert!(health.staleness_ms(&clock) <= 5, "beat must reset staleness");
+    }
+}

@@ -1,0 +1,271 @@
+//! Seeded fault injection for the coordinator: deterministic,
+//! replayable failure plans (std-only, **default inert**).
+//!
+//! A [`FaultPlan`] names *where* the service misbehaves — worker panics,
+//! reply delays and queue stalls keyed by `(worker, batch sequence)`,
+//! plus an optional poisoned request id that kills its worker every time
+//! it is drained. The plan is pure data: the worker loop consults it at
+//! fixed points and the plan never mutates, so the same plan over the
+//! same request log reproduces the same crashes, the same restarts and
+//! the same recovery counters on every run. That is what turns the
+//! supervision layer's recovery paths (restart, deterministic rebuild,
+//! submit-order replay, scatter failover, poison quarantine) into
+//! ordinary assertable tests instead of hope.
+//!
+//! Batch sequence numbers are **per-worker and monotonic across
+//! restarts** (they never reset when a worker is rebuilt), so a panic
+//! scheduled at sequence `s` fires exactly once: the replayed batch
+//! drains at a later sequence and sails past the trigger. A poisoned
+//! request, by contrast, is matched by id and fires on every attempt —
+//! exactly the crash loop the service's poison ledger must break.
+//!
+//! The default plan ([`FaultPlan::inert`], also `Default`) injects
+//! nothing and is what every production configuration carries; plans
+//! only become active when a test, the fault-injection CI leg
+//! (`TRUEKNN_FAULT_SEED`) or the PR 7 bench installs one explicitly.
+
+use crate::util::rng::Pcg32;
+
+/// Panic payload of an injected crash: the worker loop raises it with
+/// [`std::panic::panic_any`] when a plan's trigger fires, so the
+/// supervisor (and anyone reading a test log) can tell a scheduled
+/// fault from a genuine bug's `panic!` message.
+#[derive(Clone, Copy, Debug)]
+pub struct InjectedFault;
+
+/// Upper bound a seeded plan uses for its panic trigger sequence, so an
+/// injected crash lands within the first few batches of a test log.
+const SEEDED_MAX_SEQ: u64 = 3;
+
+/// Injected sleep length of a seeded reply delay, in milliseconds —
+/// long enough to reorder deliveries, short enough for CI.
+const SEEDED_DELAY_MS: u64 = 2;
+
+/// Injected sleep length of a seeded queue stall, in milliseconds —
+/// long enough to trip a test-sized heartbeat deadline.
+const SEEDED_STALL_MS: u64 = 80;
+
+/// One scheduled fault: a kind, a victim worker and the per-worker
+/// batch sequence number it triggers at.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Panic the worker right before it serves this batch.
+    Panic {
+        /// Victim worker id.
+        worker: usize,
+        /// Per-worker batch sequence the panic triggers at.
+        seq: u64,
+    },
+    /// Sleep after computing a batch, before sending its replies.
+    ReplyDelay {
+        /// Victim worker id.
+        worker: usize,
+        /// Per-worker batch sequence the delay triggers at.
+        seq: u64,
+        /// Sleep length in milliseconds.
+        millis: u64,
+    },
+    /// Sleep before serving a batch: the queue backs up and the worker's
+    /// heartbeat goes stale, exercising the supervisor's failover path.
+    QueueStall {
+        /// Victim worker id.
+        worker: usize,
+        /// Per-worker batch sequence the stall triggers at.
+        seq: u64,
+        /// Sleep length in milliseconds.
+        millis: u64,
+    },
+}
+
+/// A deterministic, replayable fault schedule for the worker pool.
+///
+/// See the module docs for the trigger model. Construct with
+/// [`FaultPlan::inert`] (no faults), the explicit `with_*` builders, or
+/// [`FaultPlan::seeded`] for a reproducible pseudo-random plan.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    faults: Vec<Fault>,
+    /// Request id that panics its worker on **every** drain attempt.
+    poison: Option<u64>,
+}
+
+impl FaultPlan {
+    /// The empty plan: injects nothing. This is the default every
+    /// service configuration ships with.
+    pub fn inert() -> Self {
+        Self::default()
+    }
+
+    /// True when this plan can never fire (the production fast path).
+    pub fn is_inert(&self) -> bool {
+        self.faults.is_empty() && self.poison.is_none()
+    }
+
+    /// Schedule a panic on `worker` at its batch sequence `seq`.
+    pub fn with_panic(mut self, worker: usize, seq: u64) -> Self {
+        self.faults.push(Fault::Panic { worker, seq });
+        self
+    }
+
+    /// Schedule a reply delay of `millis` on `worker` at sequence `seq`.
+    pub fn with_reply_delay(mut self, worker: usize, seq: u64, millis: u64) -> Self {
+        self.faults.push(Fault::ReplyDelay { worker, seq, millis });
+        self
+    }
+
+    /// Schedule a queue stall of `millis` on `worker` at sequence `seq`.
+    pub fn with_queue_stall(mut self, worker: usize, seq: u64, millis: u64) -> Self {
+        self.faults.push(Fault::QueueStall { worker, seq, millis });
+        self
+    }
+
+    /// Mark request id `id` as poisoned: every batch containing it
+    /// panics its worker, until the service's poison ledger quarantines
+    /// the request after the second kill.
+    pub fn with_poison(mut self, id: u64) -> Self {
+        self.poison = Some(id);
+        self
+    }
+
+    /// Derive a reproducible pseudo-random plan for a pool of `workers`
+    /// workers: one panic, one reply delay and one queue stall, each on
+    /// an independently chosen victim within the first few batches. The
+    /// same `(seed, workers)` always yields the same plan.
+    pub fn seeded(seed: u64, workers: usize) -> Self {
+        let w = workers.max(1);
+        let mut rng = Pcg32::new(seed);
+        let mut pick =
+            |rng: &mut Pcg32| (rng.below_usize(w), 1 + rng.next_u64() % SEEDED_MAX_SEQ);
+        let (pw, ps) = pick(&mut rng);
+        let (dw, ds) = pick(&mut rng);
+        let (sw, ss) = pick(&mut rng);
+        FaultPlan::inert()
+            .with_panic(pw, ps)
+            .with_reply_delay(dw, ds, SEEDED_DELAY_MS)
+            .with_queue_stall(sw, ss, SEEDED_STALL_MS)
+    }
+
+    /// The seed pinned by the fault-injection CI leg, if any: parses
+    /// `TRUEKNN_FAULT_SEED` (decimal). Unset or unparsable = `None`.
+    pub fn env_seed() -> Option<u64> {
+        std::env::var("TRUEKNN_FAULT_SEED")
+            .ok()
+            .and_then(|v| v.trim().parse().ok())
+    }
+
+    /// Number of scheduled panics (the restart count a fully exercised
+    /// plan produces, poison crashes excluded).
+    pub fn panic_count(&self) -> usize {
+        self.faults
+            .iter()
+            .filter(|f| matches!(f, Fault::Panic { .. }))
+            .count()
+    }
+
+    /// The poisoned request id, if the plan carries one.
+    pub fn poison_id(&self) -> Option<u64> {
+        self.poison
+    }
+
+    /// Every scheduled fault, in insertion order.
+    pub fn faults(&self) -> &[Fault] {
+        &self.faults
+    }
+
+    /// Should `worker` panic right before serving batch `seq`?
+    pub fn should_panic(&self, worker: usize, seq: u64) -> bool {
+        self.faults
+            .iter()
+            .any(|f| matches!(f, Fault::Panic { worker: w, seq: s } if *w == worker && *s == seq))
+    }
+
+    /// Injected reply delay for `(worker, seq)`, in milliseconds.
+    pub fn reply_delay_ms(&self, worker: usize, seq: u64) -> Option<u64> {
+        self.faults.iter().find_map(|f| match f {
+            Fault::ReplyDelay { worker: w, seq: s, millis } if *w == worker && *s == seq => {
+                Some(*millis)
+            }
+            _ => None,
+        })
+    }
+
+    /// Injected queue stall for `(worker, seq)`, in milliseconds.
+    pub fn queue_stall_ms(&self, worker: usize, seq: u64) -> Option<u64> {
+        self.faults.iter().find_map(|f| match f {
+            Fault::QueueStall { worker: w, seq: s, millis } if *w == worker && *s == seq => {
+                Some(*millis)
+            }
+            _ => None,
+        })
+    }
+
+    /// Does this plan poison any of the given request ids?
+    pub fn poisons_any<I: IntoIterator<Item = u64>>(&self, ids: I) -> bool {
+        match self.poison {
+            Some(p) => ids.into_iter().any(|id| id == p),
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_is_inert() {
+        let p = FaultPlan::default();
+        assert!(p.is_inert());
+        assert_eq!(p.panic_count(), 0);
+        assert!(!p.should_panic(0, 0));
+        assert_eq!(p.reply_delay_ms(0, 0), None);
+        assert_eq!(p.queue_stall_ms(0, 0), None);
+        assert!(!p.poisons_any([0, 1, 2]));
+    }
+
+    #[test]
+    fn explicit_triggers_match_exactly_once_coordinates() {
+        let p = FaultPlan::inert()
+            .with_panic(1, 2)
+            .with_reply_delay(0, 3, 7)
+            .with_queue_stall(2, 1, 50)
+            .with_poison(42);
+        assert!(!p.is_inert());
+        assert!(p.should_panic(1, 2));
+        assert!(!p.should_panic(1, 3), "replayed batch must sail past");
+        assert!(!p.should_panic(0, 2), "wrong worker must not trip");
+        assert_eq!(p.reply_delay_ms(0, 3), Some(7));
+        assert_eq!(p.queue_stall_ms(2, 1), Some(50));
+        assert_eq!(p.poison_id(), Some(42));
+        assert!(p.poisons_any([7, 42]));
+        assert!(!p.poisons_any([7, 8]));
+        assert_eq!(p.panic_count(), 1);
+    }
+
+    #[test]
+    fn seeded_plans_are_reproducible_and_in_range() {
+        let a = FaultPlan::seeded(0xF00D, 4);
+        let b = FaultPlan::seeded(0xF00D, 4);
+        assert_eq!(a, b, "same (seed, workers) must yield the same plan");
+        assert_ne!(a, FaultPlan::seeded(0xF00E, 4));
+        assert_eq!(a.panic_count(), 1);
+        assert_eq!(a.faults().len(), 3);
+        for f in a.faults() {
+            let (w, s) = match *f {
+                Fault::Panic { worker, seq } => (worker, seq),
+                Fault::ReplyDelay { worker, seq, .. } => (worker, seq),
+                Fault::QueueStall { worker, seq, .. } => (worker, seq),
+            };
+            assert!(w < 4);
+            assert!((1..=SEEDED_MAX_SEQ).contains(&s));
+        }
+    }
+
+    #[test]
+    fn env_seed_parses_decimal() {
+        // avoid mutating the process env (tests run in parallel): only
+        // assert the unset/garbage behavior through the parser contract
+        assert_eq!("20260808".trim().parse::<u64>().ok(), Some(20260808));
+        assert_eq!("not-a-seed".trim().parse::<u64>().ok(), None);
+    }
+}

@@ -238,6 +238,31 @@ pub trait NeighborIndex {
     fn build_stats(&self) -> BuildStats;
 }
 
+/// Why [`IndexBuilder::try_build`] refused to build an index.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BuildError {
+    /// The dataset contains a NaN or infinite coordinate. Carries the
+    /// index of the first offending point: every downstream structure
+    /// (Morton codes, AABBs, kd-tree splits) silently corrupts on
+    /// non-finite input, so it is rejected at the front door.
+    NonFiniteCoordinate {
+        /// Index of the first non-finite point in the input data.
+        index: usize,
+    },
+}
+
+impl std::fmt::Display for BuildError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BuildError::NonFiniteCoordinate { index } => {
+                write!(f, "non-finite coordinate at data point {index}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for BuildError {}
+
 /// Front door: configure, then `build` to get a boxed index.
 pub struct IndexBuilder {
     backend: Backend,
@@ -331,6 +356,19 @@ impl IndexBuilder {
     pub fn shards(mut self, n: usize) -> Self {
         self.cfg.shards = n;
         self
+    }
+
+    /// Validating build: reject degenerate datasets with a typed
+    /// [`BuildError`] instead of letting NaN/infinite coordinates
+    /// corrupt the acceleration structure. The service layer validates
+    /// its own boundary ([`crate::coordinator::ServiceHandle`]); this is
+    /// the same guard for direct library users. An empty dataset is
+    /// *valid* (an empty index answers every query with no neighbors).
+    pub fn try_build(self, data: Vec<Point3>) -> Result<Box<dyn NeighborIndex>, BuildError> {
+        if let Some(index) = data.iter().position(|p| !p.is_finite()) {
+            return Err(BuildError::NonFiniteCoordinate { index });
+        }
+        Ok(self.build(data))
     }
 
     /// Build the acceleration structure over `data` and return the index.
@@ -599,6 +637,24 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn try_build_rejects_non_finite_data_with_the_offender_index() {
+        let mut pts = DatasetKind::Uniform.generate(50, 6).points;
+        pts[17] = Point3::new(0.5, f32::NAN, 0.5);
+        let err = IndexBuilder::new(Backend::TrueKnn)
+            .try_build(pts)
+            .unwrap_err();
+        assert_eq!(err, BuildError::NonFiniteCoordinate { index: 17 });
+        assert!(err.to_string().contains("17"));
+        // a clean dataset builds; so does an empty one
+        let ok = IndexBuilder::new(Backend::KdTree)
+            .try_build(DatasetKind::Uniform.generate(50, 6).points)
+            .unwrap();
+        assert_eq!(ok.len(), 50);
+        let empty = IndexBuilder::new(Backend::BruteCpu).try_build(Vec::new()).unwrap();
+        assert!(empty.is_empty());
     }
 
     #[test]

@@ -90,6 +90,9 @@
 //!   `.sum::<f32>()`/`fold` reassociation.
 //! * `panic-in-lib` — library code propagates errors; every remaining
 //!   `unwrap`/`expect` carries an inline justified allow.
+//! * `channel-unwrap-in-coordinator` — channel send/recv results in the
+//!   coordinator are recovery-path signals (a worker may be mid-restart
+//!   behind a disconnected channel), never `unwrap`/`expect` sites.
 //! * `truncating-id-cast` — id arithmetic never truncates through
 //!   bare `as u32`/`as usize` in merge/remap paths; widening goes
 //!   through checked helpers.
@@ -102,6 +105,7 @@
 #![forbid(unsafe_code)]
 
 pub mod analysis;
+pub mod faults;
 pub mod util;
 pub mod exec;
 pub mod geom;

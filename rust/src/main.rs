@@ -6,7 +6,7 @@
 //! trueknn exp       regenerate a paper table/figure (table1|fig6|...)
 //! trueknn runtime   inspect/smoke-test the PJRT artifacts
 //! trueknn serve     run the batching query service demo (worker pool)
-//! trueknn bench     perf microbenches, writes BENCH_PR2/.../PR6.json
+//! trueknn bench     perf microbenches, writes BENCH_PR2/.../PR7.json
 //! trueknn lint      determinism-contract analyzer (exit = finding count)
 //! ```
 
@@ -51,7 +51,7 @@ fn print_usage() {
     println!("  exp      regenerate a paper table/figure");
     println!("  runtime  inspect the PJRT artifacts");
     println!("  serve    run the batching query service demo (worker pool)");
-    println!("  bench    perf microbenches (BENCH_PR2/.../PR6.json)");
+    println!("  bench    perf microbenches (BENCH_PR2/.../PR7.json)");
     println!("  lint     determinism-contract analyzer (exit code = finding count)");
     println!("run `trueknn <command> --help` for options");
 }
@@ -471,6 +471,13 @@ fn run_serve(a: &Args) -> Result<(), String> {
         None => a.get_parse("shards", 1).map_err(|e| e.to_string())?,
     }
     .max(1);
+    // the fault-injection CI leg (and curious operators) can arm a
+    // seeded plan end-to-end; unset, the plan stays inert
+    if let Some(seed) = trueknn::faults::FaultPlan::env_seed() {
+        let pool = if cfg.workers == 0 { 2 } else { cfg.workers };
+        cfg.faults = trueknn::faults::FaultPlan::seeded(seed, pool);
+        log_info!("fault injection armed: TRUEKNN_FAULT_SEED={seed}");
+    }
     let (svc, handle) = Service::start(ds.points.clone(), cfg);
 
     let sw = trueknn::util::Stopwatch::start();
@@ -488,7 +495,10 @@ fn run_serve(a: &Args) -> Result<(), String> {
     }
     let mut served = 0;
     for rx in receivers {
-        let resp = rx.recv().map_err(|e| e.to_string())?;
+        let resp = rx
+            .recv()
+            .map_err(|e| e.to_string())?
+            .map_err(|e| e.to_string())?;
         served += resp.neighbors.len();
     }
     let elapsed = sw.elapsed_secs();
@@ -513,6 +523,11 @@ fn run_serve(a: &Args) -> Result<(), String> {
         .map(|(p, b)| format!("{}={b}", p.name()))
         .collect();
     println!("builds: {}", builds.join(" "));
+    // the supervision story: what the pool survived while serving
+    println!(
+        "recovery: restarts={} replays={} deadline_misses={} poisoned={}",
+        m.restarts, m.replays, m.deadline_misses, m.poisoned
+    );
     // sharded RT route: where each shard's structure work and traffic went
     if !m.shard_builds.is_empty() {
         let per: Vec<String> = m
@@ -593,7 +608,7 @@ fn run_lint(argv: &[String]) -> i32 {
 fn cmd_bench() -> Command {
     Command::new(
         "bench",
-        "perf microbenches: launch throughput + shell re-query (PR2), SoA leaf loop + cohort scheduling + round bookkeeping (PR3), worker-pool serving throughput (PR4), sharded hot-route throughput (PR5), determinism-lint gate cost (PR6)",
+        "perf microbenches: launch throughput + shell re-query (PR2), SoA leaf loop + cohort scheduling + round bookkeeping (PR3), worker-pool serving throughput (PR4), sharded hot-route throughput (PR5), determinism-lint gate cost (PR6), supervised recovery cost (PR7)",
     )
     .opt("n", "points for the launch-throughput bench", "100000")
     .opt("shell-n", "points for the TrueKNN shell/round bench", "20000")
@@ -606,6 +621,7 @@ fn cmd_bench() -> Command {
     .opt("pr4-out", "PR4 output JSON path", "BENCH_PR4.json")
     .opt("pr5-out", "PR5 output JSON path", "BENCH_PR5.json")
     .opt("pr6-out", "PR6 output JSON path", "BENCH_PR6.json")
+    .opt("pr7-out", "PR7 output JSON path", "BENCH_PR7.json")
 }
 
 fn run_bench(a: &Args) -> Result<(), String> {
@@ -620,6 +636,7 @@ fn run_bench(a: &Args) -> Result<(), String> {
     let pr4_out = a.get_str("pr4-out", "BENCH_PR4.json");
     let pr5_out = a.get_str("pr5-out", "BENCH_PR5.json");
     let pr6_out = a.get_str("pr6-out", "BENCH_PR6.json");
+    let pr7_out = a.get_str("pr7-out", "BENCH_PR7.json");
 
     let report = trueknn::bench::pr2::run(n, shell_n, iters);
     trueknn::bench::pr2::render(&report).print();
@@ -671,5 +688,20 @@ fn run_bench(a: &Args) -> Result<(), String> {
     std::fs::write(&pr6_out, trueknn::bench::pr6::to_json(&pr6).to_string())
         .map_err(|e| e.to_string())?;
     log_info!("wrote {pr6_out}");
+
+    let pr7 = trueknn::bench::pr7::run(serve_n, serve_requests, serve_queries, iters);
+    trueknn::bench::pr7::render(&pr7).print();
+    if !pr7.results_match {
+        return Err("recovery changed responses vs the no-fault baseline".into());
+    }
+    if pr7.restarts != 1 {
+        return Err(format!(
+            "the injected kill must produce exactly one restart, saw {}",
+            pr7.restarts
+        ));
+    }
+    std::fs::write(&pr7_out, trueknn::bench::pr7::to_json(&pr7).to_string())
+        .map_err(|e| e.to_string())?;
+    log_info!("wrote {pr7_out}");
     Ok(())
 }

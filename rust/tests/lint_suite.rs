@@ -297,6 +297,69 @@ fn pub_missing_docs_respects_module_scope() {
 }
 
 // ---------------------------------------------------------------------
+// channel-unwrap-in-coordinator
+// ---------------------------------------------------------------------
+
+#[test]
+fn channel_unwrap_flags_send_and_recv_unwraps_with_nested_args() {
+    let src = "fn relay(tx: &std::sync::mpsc::Sender<u32>, rx: &std::sync::mpsc::Receiver<u32>) {\n\
+               \x20   tx.send(compute(1, (2 + 3))).unwrap();\n\
+               \x20   let _v = rx.recv().expect(\"worker died\");\n\
+               }\n\
+               fn compute(a: u32, b: u32) -> u32 { a + b }\n";
+    let f = lint("coordinator::service", src);
+    assert_eq!(
+        rules_of(&f),
+        // panic-in-lib fires on the same unwrap/expect sites; the
+        // channel rule adds the recovery-path diagnosis (same line,
+        // alphabetical rule order)
+        [
+            "channel-unwrap-in-coordinator",
+            "panic-in-lib",
+            "channel-unwrap-in-coordinator",
+            "panic-in-lib"
+        ]
+    );
+    let chan: Vec<u32> = f
+        .iter()
+        .filter(|x| x.rule == "channel-unwrap-in-coordinator")
+        .map(|x| x.line)
+        .collect();
+    assert_eq!(chan, [2, 3], "anchors on the unwrap/expect, through nested parens");
+    assert!(f[0].message.contains("recovery-path"));
+}
+
+#[test]
+fn channel_unwrap_ignores_handled_results_and_non_channel_methods() {
+    let src = "fn relay(tx: &std::sync::mpsc::Sender<u32>, rx: &std::sync::mpsc::Receiver<u32>) {\n\
+               \x20   let _ = tx.send(1);\n\
+               \x20   let _a = rx.recv().map_err(|_| 0u32);\n\
+               \x20   if rx.try_recv().is_ok() {}\n\
+               \x20   let _b = Some(5).map(|v| v).unwrap_or(0);\n\
+               }\n";
+    assert!(lint("coordinator::service", src).is_empty());
+}
+
+#[test]
+fn channel_unwrap_respects_scope_and_the_supervisor_exemption() {
+    let cfg = LintConfig::parse(
+        "channel-unwrap-in-coordinator.scope = coordinator\n\
+         channel-unwrap-in-coordinator.allow = coordinator::supervisor\n",
+    )
+    .unwrap();
+    let src = "fn f(rx: &std::sync::mpsc::Receiver<u32>) -> u32 {\n\
+               \x20   // lint: allow(panic-in-lib) — fixture isolates the channel rule\n\
+               \x20   rx.recv().unwrap()\n\
+               }\n";
+    assert_eq!(
+        rules_of(&analyze_source("coordinator::service", "f.rs", src, &cfg)),
+        ["channel-unwrap-in-coordinator"]
+    );
+    assert!(analyze_source("coordinator::supervisor", "f.rs", src, &cfg).is_empty());
+    assert!(analyze_source("knn", "f.rs", src, &cfg).is_empty(), "out of scope");
+}
+
+// ---------------------------------------------------------------------
 // suppression + bare-allow meta-rule
 // ---------------------------------------------------------------------
 
@@ -423,7 +486,7 @@ fn every_reported_rule_id_is_registered() {
     for f in lint("knn", src) {
         assert!(RULES.contains(&f.rule), "unregistered rule id {}", f.rule);
     }
-    assert_eq!(RULES.len(), 9);
+    assert_eq!(RULES.len(), 10);
 }
 
 // ---------------------------------------------------------------------

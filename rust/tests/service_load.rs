@@ -69,7 +69,8 @@ fn backpressure_rejects_when_queue_full() {
     }
     assert!(rejected > 0, "a depth-2 queue must reject under flood");
     for rx in receivers {
-        let _ = rx.recv().expect("accepted requests must complete");
+        let resp = rx.recv().expect("accepted requests must complete");
+        assert!(resp.is_ok(), "accepted request failed: {resp:?}");
     }
     svc.shutdown();
 }
@@ -88,7 +89,7 @@ fn mixed_modes_and_ks_all_correct() {
         rxs.push((id, k, handle.submit(req).unwrap()));
     }
     for (id, k, rx) in rxs {
-        let resp = rx.recv().unwrap();
+        let resp = rx.recv().unwrap().unwrap();
         assert_eq!(resp.id, id);
         for (qi, nb) in resp.neighbors.iter().enumerate() {
             assert_eq!(nb.len(), k, "req {id} query {qi}");
@@ -107,27 +108,29 @@ fn failure_injection_empty_and_degenerate_requests() {
     let ds = DatasetKind::Uniform.generate(1_000, 4);
     let (svc, handle) = Service::start(ds.points.clone(), ServiceConfig::default());
 
-    // empty query list: legal, returns empty response
-    let resp = handle.query(KnnRequest::new(1, vec![], 3)).unwrap();
-    assert!(resp.neighbors.is_empty());
+    // empty query list: rejected at the submit boundary with a typed
+    // error — no worker ever sees it
+    assert!(matches!(
+        handle.query(KnnRequest::new(1, vec![], 3)),
+        Err(ServiceError::InvalidRequest("empty query batch"))
+    ));
 
-    // k = 0: every query returns no neighbors
-    let resp = handle
-        .query(KnnRequest::new(2, ds.points[..4].to_vec(), 0))
-        .unwrap();
-    assert!(resp.neighbors.iter().all(|n| n.is_empty()));
+    // k = 0: rejected at the boundary
+    assert!(matches!(
+        handle.query(KnnRequest::new(2, ds.points[..4].to_vec(), 0)),
+        Err(ServiceError::InvalidRequest("k must be at least 1"))
+    ));
 
-    // k > n: capped at dataset size
+    // k > n: capped at dataset size (legal)
     let resp = handle
         .query(KnnRequest::new(3, vec![Point3::splat(0.5)], 5_000))
         .unwrap();
     assert_eq!(resp.neighbors[0].len(), ds.len());
 
-    // NaN coordinates: must not wedge the worker (response may be empty)
-    let _ = handle.query(KnnRequest::new(
-        4,
-        vec![Point3::new(f32::NAN, 0.0, 0.0)],
-        3,
+    // NaN coordinates: rejected before any worker can wedge on them
+    assert!(matches!(
+        handle.query(KnnRequest::new(4, vec![Point3::new(f32::NAN, 0.0, 0.0)], 3)),
+        Err(ServiceError::InvalidRequest("non-finite query coordinate"))
     ));
     // the service is still alive afterwards
     let resp = handle
@@ -389,21 +392,25 @@ fn sharded_route_degenerate_requests_are_safe() {
         ..Default::default()
     };
     let (svc, handle) = Service::start(ds.points.clone(), cfg);
-    // empty query list through the scatter path
-    let resp = handle
-        .query(KnnRequest::new(1, vec![], 3).with_mode(QueryMode::Rt))
-        .unwrap();
-    assert!(resp.neighbors.is_empty());
+    // empty query list is rejected before it can reach the scatter path
+    assert!(matches!(
+        handle.query(KnnRequest::new(1, vec![], 3).with_mode(QueryMode::Rt)),
+        Err(ServiceError::InvalidRequest("empty query batch"))
+    ));
     // k larger than any single shard: the gather must still fill from
     // both shards
     let resp = handle
         .query(KnnRequest::new(2, ds.points[..2].to_vec(), 2_000).with_mode(QueryMode::Rt))
         .unwrap();
     assert!(resp.neighbors.iter().all(|nb| nb.len() == 2_000));
-    // NaN query must not wedge any shard owner
-    let _ = handle.query(
-        KnnRequest::new(3, vec![Point3::new(f32::NAN, 0.0, 0.0)], 3).with_mode(QueryMode::Rt),
-    );
+    // NaN query is rejected before any shard owner can wedge on it
+    assert!(matches!(
+        handle.query(
+            KnnRequest::new(3, vec![Point3::new(f32::NAN, 0.0, 0.0)], 3)
+                .with_mode(QueryMode::Rt),
+        ),
+        Err(ServiceError::InvalidRequest("non-finite query coordinate"))
+    ));
     let resp = handle
         .query(KnnRequest::new(4, ds.points[..2].to_vec(), 2).with_mode(QueryMode::Rt))
         .unwrap();
@@ -437,6 +444,7 @@ fn shutdown_is_idempotent_under_concurrent_submits() {
                     // the pool is gone (or went down mid-request): stop
                     Err(ServiceError::ShutDown) => break,
                     Err(ServiceError::QueueFull) => std::thread::yield_now(),
+                    Err(e) => panic!("unexpected error: {e}"),
                 }
             }
             served
