@@ -53,6 +53,14 @@
 //!   into a second panic site; the `Result` must flow into explicit
 //!   handling. Scoped to `coordinator`; the supervisor module — the
 //!   recovery path itself — is exempt via `lint.toml`.
+//! * `io-unwrap-in-persist` — in the durability layer a failed disk
+//!   operation (torn WAL tail, corrupt snapshot, full disk) is a
+//!   *planned* input to cold-start recovery, so `File::open(…).unwrap()`
+//!   / `.write_all(…).expect(…)` shapes would turn a
+//!   readable-but-corrupt file into the crash loop the rebuild fallback
+//!   exists to prevent; I/O `Result`s flow into
+//!   [`crate::persist::PersistError`]. Scoped to `persist` and
+//!   `coordinator` via `lint.toml`.
 //! * `bare-allow` — meta-rule: an inline `lint: allow(…)` without a
 //!   justification, or naming an unknown rule id, is itself a finding,
 //!   so the suppression mechanism can't rot.

@@ -34,6 +34,7 @@ pub const RULES: &[&str] = &[
     "truncating-id-cast",
     "pub-missing-docs",
     "channel-unwrap-in-coordinator",
+    "io-unwrap-in-persist",
     "bare-allow",
 ];
 
@@ -50,6 +51,7 @@ pub fn scan(toks: &[Tok], lexed: &Lexed) -> Vec<RawFinding> {
     truncating_id_cast(toks, &mut out);
     pub_missing_docs(toks, lexed, &mut out);
     channel_unwrap_in_coordinator(toks, &mut out);
+    io_unwrap_in_persist(toks, &mut out);
     out
 }
 
@@ -481,6 +483,76 @@ fn channel_unwrap_in_coordinator(toks: &[Tok], out: &mut Vec<RawFinding>) {
                     "`.{method}(…).{}()` on a coordinator channel; a disconnect here is a \
                      recovery-path signal (worker restarting, pool shutting down) — handle the \
                      Result explicitly",
+                    toks[close + 2].text
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// io-unwrap-in-persist
+// ---------------------------------------------------------------------
+
+const IO_METHODS: &[&str] = &[
+    "open",
+    "create",
+    "create_dir_all",
+    "read",
+    "read_to_end",
+    "read_exact",
+    "read_dir",
+    "write",
+    "write_all",
+    "flush",
+    "sync_all",
+    "sync_data",
+    "set_len",
+    "seek",
+    "rename",
+    "remove_file",
+    "metadata",
+];
+
+/// Durability code must treat every disk operation as fallible: a torn
+/// WAL tail, a corrupt snapshot, or a full disk is a *planned* input to
+/// cold-start recovery, not a bug. Unwrapping an I/O `Result` in the
+/// persistence layer (or the coordinator paths that drive it) turns a
+/// readable-but-corrupt file into the crash loop the rebuild fallback
+/// exists to prevent. Flags `.write_all(…).unwrap()` method shapes and
+/// `File::open(…).expect(…)` associated-fn shapes alike — the `Result`
+/// must flow into `PersistError` (`map_err` + `io_err`) so cold start
+/// can fall back to the deterministic rebuild.
+fn io_unwrap_in_persist(toks: &[Tok], out: &mut Vec<RawFinding>) {
+    for i in 0..toks.len() {
+        // `.method(…)` receiver shape or `fs::method(…)` path shape
+        let m_idx = if punct_at(toks, i, '.') {
+            i + 1
+        } else if path_sep(toks, i) {
+            i + 2
+        } else {
+            continue;
+        };
+        let Some(method) = ident_at(toks, m_idx) else {
+            continue;
+        };
+        if !IO_METHODS.contains(&method) || !punct_at(toks, m_idx + 1, '(') {
+            continue;
+        }
+        let Some(close) = matching_close(toks, m_idx + 1) else {
+            continue;
+        };
+        if punct_at(toks, close + 1, '.')
+            && ident_at(toks, close + 2).is_some_and(|m| m == "unwrap" || m == "expect")
+            && punct_at(toks, close + 3, '(')
+        {
+            out.push(RawFinding {
+                rule: "io-unwrap-in-persist",
+                line: toks[close + 2].line,
+                message: format!(
+                    "`{method}(…).{}()` on a fallible disk operation in a persistence path; \
+                     I/O failure here is a recovery signal (torn tail, corrupt snapshot, full \
+                     disk) — map it into PersistError and let cold start fall back to rebuild",
                     toks[close + 2].text
                 ),
             });

@@ -10,6 +10,7 @@ pub mod pr4;
 pub mod pr5;
 pub mod pr6;
 pub mod pr7;
+pub mod pr8;
 
 use crate::util::stats::{median, OnlineStats};
 use crate::util::Stopwatch;

@@ -1,0 +1,331 @@
+//! The PR8 durability microbench: what crash-safe persistence costs and
+//! what it buys, emitted as `BENCH_PR8.json` so CI archives the
+//! durability trajectory alongside the perf and robustness benches.
+//!
+//! Three measurements:
+//!
+//! 1. **Cold start** — for each dataset size, the wall cost of loading
+//!    a checksummed snapshot versus rebuilding the TrueKNN index from
+//!    raw points. The ratio is the headline number: how much faster a
+//!    recovered process reaches "serving" than a rebuilt one. Every
+//!    loaded index is checked bitwise against its original — a snapshot
+//!    that loads fast but answers differently is worthless.
+//! 2. **WAL replay** — records per second a cold start can re-apply
+//!    from a group-committed log (the recovery path's other half).
+//! 3. **Insert overhead** — the durable-insert tax: wall cost of an
+//!    insert stream through [`crate::coordinator::ServiceHandle`] with
+//!    the WAL fence on versus off.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::configx::Json;
+use crate::coordinator::{PersistConfig, Service, ServiceConfig};
+use crate::dataset::DatasetKind;
+use crate::faults::FaultPlan;
+use crate::geom::Point3;
+use crate::index::{Backend, IndexBuilder, IndexConfig};
+use crate::persist::Wal;
+use crate::util::Stopwatch;
+
+use super::{fmt_secs, Table};
+
+const BENCH_K: usize = 5;
+const BENCH_QUERIES: usize = 32;
+const WAL_RECORDS: usize = 512;
+const WAL_POINTS_PER_RECORD: usize = 8;
+const INSERT_BATCHES: usize = 64;
+
+/// Cold-start load vs rebuild at one dataset size.
+#[derive(Clone, Debug)]
+pub struct Pr8SizeRow {
+    pub n: usize,
+    /// Best-of-iters wall seconds to load + validate the snapshot blob.
+    pub load_s: f64,
+    /// Best-of-iters wall seconds to rebuild the index from raw points.
+    pub rebuild_s: f64,
+    /// `rebuild_s / load_s`: cold-start speedup bought by the snapshot.
+    pub speedup: f64,
+    /// Loaded index answered bitwise-identically to the original.
+    pub results_match: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct Pr8Report {
+    pub k: usize,
+    pub iters: usize,
+    pub sizes: Vec<Pr8SizeRow>,
+    /// WAL records appended and then replayed.
+    pub wal_records: usize,
+    pub wal_points_per_record: usize,
+    /// Best-of-iters wall seconds to replay the whole log at open.
+    pub wal_replay_s: f64,
+    /// `wal_records / wal_replay_s`.
+    pub wal_records_per_s: f64,
+    /// Best-of-iters wall seconds for the insert stream, memory-only.
+    pub insert_mem_s: f64,
+    /// Same stream with the fsynced WAL fence ahead of every broadcast.
+    pub insert_wal_s: f64,
+    /// `insert_wal_s / insert_mem_s`: the durability tax.
+    pub insert_overhead: f64,
+    /// Every cold-start row answered bitwise-identically (the CI gate).
+    pub results_match: bool,
+}
+
+/// A unique scratch directory per call (parallel bench/test runs).
+fn bench_dir() -> PathBuf {
+    static N: AtomicU64 = AtomicU64::new(0);
+    let d = std::env::temp_dir().join(format!(
+        "trueknn-bench-pr8-{}-{}",
+        std::process::id(),
+        N.fetch_add(1, Ordering::Relaxed)
+    ));
+    // lint: allow(panic-in-lib) — bench harness: an unusable temp dir invalidates the measurement
+    std::fs::create_dir_all(&d).expect("bench temp dir");
+    d
+}
+
+fn rt_make() -> IndexBuilder {
+    IndexBuilder::new(Backend::TrueKnn).config(IndexConfig {
+        seed: 42,
+        ..Default::default()
+    })
+}
+
+/// Bitwise knn signature over the bench query set.
+fn knn_sig(index: &mut dyn crate::index::NeighborIndex, queries: &[Point3]) -> Vec<(u32, u32)> {
+    index
+        .knn(queries, BENCH_K)
+        .neighbors
+        .iter()
+        .flat_map(|nb| nb.iter().map(|n| (n.idx, n.dist.to_bits())))
+        .collect()
+}
+
+fn cold_start_row(n: usize, iters: usize) -> Pr8SizeRow {
+    let ds = DatasetKind::Taxi.generate(n, 42);
+    let queries = ds.points[..BENCH_QUERIES.min(ds.len())].to_vec();
+    let mut built = rt_make().build(ds.points.clone());
+    let bytes = rt_make().snapshot(built.as_ref(), 0);
+
+    let mut load_s = f64::INFINITY;
+    let mut loaded = None;
+    for _ in 0..iters {
+        let sw = Stopwatch::start();
+        // lint: allow(panic-in-lib) — bench harness: a snapshot we just wrote failing to load invalidates the measurement
+        let (ix, _) = rt_make().load(&bytes).expect("own snapshot loads");
+        load_s = load_s.min(sw.elapsed_secs());
+        loaded = Some(ix);
+    }
+    let mut rebuild_s = f64::INFINITY;
+    for _ in 0..iters {
+        let data = ds.points.clone();
+        let sw = Stopwatch::start();
+        let ix = rt_make().build(data);
+        rebuild_s = rebuild_s.min(sw.elapsed_secs());
+        std::hint::black_box(ix.len());
+    }
+    // lint: allow(panic-in-lib) — bench harness: iters >= 1, loaded is always set
+    let mut loaded = loaded.expect("at least one load iteration");
+    let results_match = knn_sig(loaded.as_mut(), &queries) == knn_sig(built.as_mut(), &queries);
+    Pr8SizeRow {
+        n: ds.len(),
+        load_s,
+        rebuild_s,
+        speedup: rebuild_s / load_s.max(1e-12),
+        results_match,
+    }
+}
+
+fn wal_replay(iters: usize) -> (f64, f64) {
+    let dir = bench_dir();
+    let path = dir.join("wal.log");
+    let batch = DatasetKind::Uniform.generate(WAL_POINTS_PER_RECORD, 7).points;
+    {
+        // a wide group-commit window: appends are the setup, not the
+        // measurement — one fsync at the end
+        // lint: allow(panic-in-lib) — bench harness: a broken scratch WAL invalidates the measurement
+        let (mut wal, _) = Wal::open(&path, u64::MAX, FaultPlan::inert()).expect("open bench WAL");
+        for _ in 0..WAL_RECORDS {
+            // lint: allow(panic-in-lib) — bench harness: a failed setup append invalidates the measurement
+            wal.append(&batch).expect("bench WAL append");
+        }
+        // lint: allow(panic-in-lib) — bench harness: a failed setup fsync invalidates the measurement
+        wal.sync().expect("bench WAL sync");
+    }
+    let mut replay_s = f64::INFINITY;
+    for _ in 0..iters {
+        let sw = Stopwatch::start();
+        // lint: allow(panic-in-lib) — bench harness: a log we just wrote failing to replay invalidates the measurement
+        let (_, records) = Wal::open(&path, 1, FaultPlan::inert()).expect("replay bench WAL");
+        replay_s = replay_s.min(sw.elapsed_secs());
+        std::hint::black_box(records.len());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    (replay_s, WAL_RECORDS as f64 / replay_s.max(1e-12))
+}
+
+fn insert_stream(base: &[Point3], batches: &[Vec<Point3>], persist: Option<PersistConfig>) -> f64 {
+    let cfg = ServiceConfig {
+        workers: 2,
+        queue_depth: 256,
+        heartbeat_timeout: Duration::from_secs(5),
+        persist,
+        ..Default::default()
+    };
+    let (svc, handle) = Service::start(base.to_vec(), cfg);
+    let sw = Stopwatch::start();
+    for b in batches {
+        // lint: allow(panic-in-lib) — bench harness: a refused insert under an inert plan invalidates the measurement
+        handle.insert(b).expect("bench insert");
+    }
+    let s = sw.elapsed_secs();
+    svc.shutdown();
+    s
+}
+
+/// Run the bench: cold-start rows for each size in `sizes`, the WAL
+/// replay rate, and the durable-insert overhead; `iters` timed samples
+/// per measurement, reporting the minimum.
+pub fn run(sizes: &[usize], iters: usize) -> Pr8Report {
+    let iters = iters.max(1);
+    let rows: Vec<Pr8SizeRow> = sizes.iter().map(|&n| cold_start_row(n, iters)).collect();
+    let (wal_replay_s, wal_records_per_s) = wal_replay(iters);
+
+    let base = DatasetKind::Taxi.generate(2_000, 42).points;
+    let batches: Vec<Vec<Point3>> = (0..INSERT_BATCHES)
+        .map(|i| DatasetKind::Uniform.generate(WAL_POINTS_PER_RECORD, 100 + i as u64).points)
+        .collect();
+    let mut insert_mem_s = f64::INFINITY;
+    let mut insert_wal_s = f64::INFINITY;
+    for _ in 0..iters {
+        insert_mem_s = insert_mem_s.min(insert_stream(&base, &batches, None));
+        // a fresh directory per sample: reusing one would replay the
+        // previous sample's records into the service at start
+        let dir = bench_dir();
+        let durable = Some(PersistConfig::at(&dir));
+        insert_wal_s = insert_wal_s.min(insert_stream(&base, &batches, durable));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    let results_match = rows.iter().all(|r| r.results_match);
+    Pr8Report {
+        k: BENCH_K,
+        iters,
+        sizes: rows,
+        wal_records: WAL_RECORDS,
+        wal_points_per_record: WAL_POINTS_PER_RECORD,
+        wal_replay_s,
+        wal_records_per_s,
+        insert_mem_s,
+        insert_wal_s,
+        insert_overhead: insert_wal_s / insert_mem_s.max(1e-12),
+        results_match,
+    }
+}
+
+pub fn to_json(r: &Pr8Report) -> Json {
+    let rows: Vec<Json> = r
+        .sizes
+        .iter()
+        .map(|row| {
+            Json::obj(vec![
+                ("n", Json::Num(row.n as f64)),
+                ("load_seconds", Json::Num(row.load_s)),
+                ("rebuild_seconds", Json::Num(row.rebuild_s)),
+                ("cold_start_speedup", Json::Num(row.speedup)),
+                ("results_match", Json::Bool(row.results_match)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("bench", Json::Str("pr8".into())),
+        (
+            "crash_recovery",
+            Json::obj(vec![
+                ("dataset", Json::Str("taxi".into())),
+                ("k", Json::Num(r.k as f64)),
+                ("iters", Json::Num(r.iters as f64)),
+                ("cold_start", Json::Arr(rows)),
+                (
+                    "wal",
+                    Json::obj(vec![
+                        ("records", Json::Num(r.wal_records as f64)),
+                        ("points_per_record", Json::Num(r.wal_points_per_record as f64)),
+                        ("replay_seconds", Json::Num(r.wal_replay_s)),
+                        ("records_per_second", Json::Num(r.wal_records_per_s)),
+                    ]),
+                ),
+                (
+                    "insert",
+                    Json::obj(vec![
+                        ("batches", Json::Num(INSERT_BATCHES as f64)),
+                        ("memory_seconds", Json::Num(r.insert_mem_s)),
+                        ("wal_seconds", Json::Num(r.insert_wal_s)),
+                        ("durability_overhead", Json::Num(r.insert_overhead)),
+                    ]),
+                ),
+                ("results_match", Json::Bool(r.results_match)),
+            ]),
+        ),
+    ])
+}
+
+pub fn render(r: &Pr8Report) -> Table {
+    let mut t = Table::new(
+        "PR8 microbench: crash-safe persistence (cold start, WAL replay, insert tax)",
+        &["measurement", "load/wal", "rebuild/mem", "ratio"],
+    );
+    for row in &r.sizes {
+        t.row(vec![
+            format!("cold start n={}", row.n),
+            fmt_secs(row.load_s),
+            fmt_secs(row.rebuild_s),
+            format!("{:.1}x", row.speedup),
+        ]);
+    }
+    t.row(vec![
+        format!("wal replay ({} rec)", r.wal_records),
+        fmt_secs(r.wal_replay_s),
+        String::new(),
+        format!("{:.0} rec/s", r.wal_records_per_s),
+    ]);
+    t.row(vec![
+        format!("insert stream ({} batches)", INSERT_BATCHES),
+        fmt_secs(r.insert_wal_s),
+        fmt_secs(r.insert_mem_s),
+        format!("{:.2}x", r.insert_overhead),
+    ]);
+    t.row(vec![
+        "snapshots answer identically".into(),
+        r.results_match.to_string(),
+        String::new(),
+        String::new(),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_runs_small_and_serializes() {
+        let r = run(&[600, 1_200], 1);
+        assert_eq!(r.sizes.len(), 2);
+        assert!(r.results_match, "loaded snapshots must answer identically");
+        for row in &r.sizes {
+            assert!(row.load_s > 0.0 && row.rebuild_s > 0.0 && row.speedup > 0.0);
+        }
+        assert!(r.wal_replay_s > 0.0 && r.wal_records_per_s > 0.0);
+        assert!(r.insert_mem_s > 0.0 && r.insert_wal_s > 0.0 && r.insert_overhead > 0.0);
+        let j = to_json(&r).to_string();
+        assert!(j.contains("\"bench\":\"pr8\""));
+        assert!(j.contains("crash_recovery"));
+        assert!(j.contains("cold_start_speedup"));
+        assert!(j.contains("records_per_second"));
+        let parsed = crate::configx::parse_json(&j).unwrap();
+        assert!(parsed.get("crash_recovery").is_some());
+    }
+}

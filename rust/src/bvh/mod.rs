@@ -253,6 +253,78 @@ impl Bvh {
         });
     }
 
+    /// Serialize the arena for a crash-safe snapshot: leaf size, root,
+    /// nodes (AABB as 6 float bit patterns + 4 ids), then the leaf-order
+    /// permutation. The arena is already a deterministic preorder
+    /// layout, so encode/decode is a verbatim copy — a loaded tree is
+    /// bitwise-identical to the built one.
+    pub fn encode_into(&self, enc: &mut crate::persist::Enc) {
+        enc.put_u32(self.leaf_size);
+        enc.put_u32(self.root);
+        enc.put_len(self.nodes.len());
+        for n in &self.nodes {
+            enc.put_f32(n.aabb.min.x);
+            enc.put_f32(n.aabb.min.y);
+            enc.put_f32(n.aabb.min.z);
+            enc.put_f32(n.aabb.max.x);
+            enc.put_f32(n.aabb.max.y);
+            enc.put_f32(n.aabb.max.z);
+            enc.put_u32(n.left);
+            enc.put_u32(n.right);
+            enc.put_u32(n.first_prim);
+            enc.put_u32(n.prim_count);
+        }
+        enc.put_len(self.prim_order.len());
+        for &p in &self.prim_order {
+            enc.put_u32(p);
+        }
+    }
+
+    /// Decode an arena written by [`Bvh::encode_into`], re-validating
+    /// the structural invariants (root and child indices in range, leaf
+    /// ranges inside `prim_order`) so corrupt payloads surface as typed
+    /// errors instead of later panics.
+    pub fn decode_from(
+        dec: &mut crate::persist::Dec<'_>,
+    ) -> Result<Bvh, crate::persist::PersistError> {
+        use crate::persist::PersistError;
+        let corrupt = |detail: String| PersistError::Corrupt { what: "bvh", detail };
+        let leaf_size = dec.get_u32()?;
+        let root = dec.get_u32()?;
+        let n_nodes = dec.get_len()?;
+        let mut nodes = Vec::with_capacity(n_nodes);
+        for _ in 0..n_nodes {
+            let min = Point3::new(dec.get_f32()?, dec.get_f32()?, dec.get_f32()?);
+            let max = Point3::new(dec.get_f32()?, dec.get_f32()?, dec.get_f32()?);
+            nodes.push(Node {
+                aabb: Aabb { min, max },
+                left: dec.get_u32()?,
+                right: dec.get_u32()?,
+                first_prim: dec.get_u32()?,
+                prim_count: dec.get_u32()?,
+            });
+        }
+        let n_prims = dec.get_len()?;
+        let mut prim_order = Vec::with_capacity(n_prims);
+        for _ in 0..n_prims {
+            prim_order.push(dec.get_u32()?);
+        }
+        if !nodes.is_empty() && root as usize >= nodes.len() {
+            return Err(corrupt(format!("root {root} outside {} nodes", nodes.len())));
+        }
+        for (i, n) in nodes.iter().enumerate() {
+            if n.is_leaf() {
+                let end = (n.first_prim as usize).checked_add(n.prim_count as usize);
+                if end.is_none() || end.unwrap_or(usize::MAX) > prim_order.len() {
+                    return Err(corrupt(format!("leaf {i} range outside prim_order")));
+                }
+            } else if n.left as usize >= nodes.len() || n.right as usize >= nodes.len() {
+                return Err(corrupt(format!("node {i} child index out of range")));
+            }
+        }
+        Ok(Bvh { nodes, prim_order, root, leaf_size })
+    }
+
     /// Tree statistics for tests and the ablation bench.
     pub fn depth(&self) -> usize {
         fn go(bvh: &Bvh, idx: u32) -> usize {

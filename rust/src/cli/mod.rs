@@ -29,6 +29,7 @@ pub enum CliError {
     UnknownOption(String),
     MissingValue(String),
     BadValue(String, String),
+    BadEnv(String, String),
     HelpRequested,
 }
 
@@ -38,12 +39,34 @@ impl std::fmt::Display for CliError {
             CliError::UnknownOption(name) => write!(f, "unknown option --{name}"),
             CliError::MissingValue(name) => write!(f, "option --{name} requires a value"),
             CliError::BadValue(name, v) => write!(f, "invalid value for --{name}: {v}"),
+            CliError::BadEnv(name, v) => {
+                write!(f, "invalid value for environment variable {name}: {v}")
+            }
             CliError::HelpRequested => write!(f, "help requested"),
         }
     }
 }
 
 impl std::error::Error for CliError {}
+
+/// Parse a typed value out of an environment variable.
+///
+/// Unset returns `Ok(None)`. A set-but-malformed value is a typed
+/// [`CliError::BadEnv`] rather than a silent `None`, so a typo'd
+/// `TRUEKNN_FAULT_SEED=0xbeef` fails the run loudly instead of quietly
+/// disarming the fault plan it was meant to pin.
+pub fn env_parse<T: std::str::FromStr>(name: &str) -> Result<Option<T>, CliError> {
+    match std::env::var(name) {
+        Err(std::env::VarError::NotPresent) => Ok(None),
+        Err(std::env::VarError::NotUnicode(_)) => {
+            Err(CliError::BadEnv(name.into(), "<non-unicode>".into()))
+        }
+        Ok(raw) => match raw.trim().parse() {
+            Ok(v) => Ok(Some(v)),
+            Err(_) => Err(CliError::BadEnv(name.into(), raw)),
+        },
+    }
+}
 
 impl Args {
     pub fn get(&self, name: &str) -> Option<&str> {
@@ -234,6 +257,32 @@ mod tests {
             a.get_parse::<usize>("n", 0),
             Err(CliError::BadValue(_, _))
         ));
+    }
+
+    #[test]
+    fn env_parse_unset_is_none() {
+        // a name nothing else in the test binary reads or writes
+        assert_eq!(env_parse::<u64>("TRUEKNN_CLI_TEST_UNSET"), Ok(None));
+    }
+
+    #[test]
+    fn env_parse_roundtrips_and_rejects() {
+        // unique names per assertion: tests run in parallel and the env
+        // is process-global
+        std::env::set_var("TRUEKNN_CLI_TEST_GOOD", " 42 ");
+        assert_eq!(env_parse::<u64>("TRUEKNN_CLI_TEST_GOOD"), Ok(Some(42)));
+        std::env::set_var("TRUEKNN_CLI_TEST_BAD", "0xbeef");
+        assert_eq!(
+            env_parse::<u64>("TRUEKNN_CLI_TEST_BAD"),
+            Err(CliError::BadEnv(
+                "TRUEKNN_CLI_TEST_BAD".into(),
+                "0xbeef".into()
+            ))
+        );
+        assert!(env_parse::<u64>("TRUEKNN_CLI_TEST_BAD")
+            .unwrap_err()
+            .to_string()
+            .contains("TRUEKNN_CLI_TEST_BAD"));
     }
 
     #[test]

@@ -70,6 +70,20 @@ pub struct Metrics {
     pub deadline_misses: AtomicU64,
     /// Requests quarantined by the poison ledger (killed a worker twice).
     pub poisoned: AtomicU64,
+    /// Indexes restored from a validated snapshot at cold start (one per
+    /// materialization, so a supervised crash-restart that re-loads the
+    /// snapshot counts again).
+    pub recovered: AtomicU64,
+    /// Indexes rebuilt from source data because persistence was on and a
+    /// snapshot existed but failed validation — the deterministic
+    /// fallback the recovery contract promises.
+    pub rebuilt: AtomicU64,
+    /// WAL records past the best snapshot's watermark at cold start: the
+    /// suffix recovery re-applies instead of finding inside a snapshot.
+    pub wal_replayed: AtomicU64,
+    /// Snapshot files or payloads rejected by checksum, version,
+    /// fingerprint, watermark, or structural validation.
+    pub snapshot_corrupt: AtomicU64,
     latency: Mutex<OnlineStats>,
 }
 
@@ -116,6 +130,14 @@ pub struct MetricsSnapshot {
     pub deadline_misses: u64,
     /// Requests quarantined by the poison ledger.
     pub poisoned: u64,
+    /// Indexes restored from a validated snapshot at cold start.
+    pub recovered: u64,
+    /// Indexes rebuilt from source after an unusable snapshot.
+    pub rebuilt: u64,
+    /// WAL records past the best snapshot's watermark at cold start.
+    pub wal_replayed: u64,
+    /// Snapshot files or payloads rejected by validation.
+    pub snapshot_corrupt: u64,
     pub latency_mean_s: f64,
     pub latency_max_s: f64,
 }
@@ -237,6 +259,10 @@ impl Metrics {
             replays: self.replays.load(Ordering::Relaxed),
             deadline_misses: self.deadline_misses.load(Ordering::Relaxed),
             poisoned: self.poisoned.load(Ordering::Relaxed),
+            recovered: self.recovered.load(Ordering::Relaxed),
+            rebuilt: self.rebuilt.load(Ordering::Relaxed),
+            wal_replayed: self.wal_replayed.load(Ordering::Relaxed),
+            snapshot_corrupt: self.snapshot_corrupt.load(Ordering::Relaxed),
             latency_mean_s: if lat.count() > 0 { lat.mean() } else { 0.0 },
             latency_max_s: if lat.count() > 0 { lat.max() } else { 0.0 },
         }
@@ -316,6 +342,25 @@ mod tests {
         let z = Metrics::new().snapshot();
         assert_eq!(
             (z.restarts, z.replays, z.deadline_misses, z.poisoned),
+            (0, 0, 0, 0)
+        );
+    }
+
+    #[test]
+    fn persistence_counters_surface_in_snapshot() {
+        let m = Metrics::with_workers(2);
+        Metrics::inc(&m.recovered);
+        Metrics::inc(&m.rebuilt);
+        Metrics::add(&m.wal_replayed, 5);
+        Metrics::add(&m.snapshot_corrupt, 2);
+        let s = m.snapshot();
+        assert_eq!(s.recovered, 1);
+        assert_eq!(s.rebuilt, 1);
+        assert_eq!(s.wal_replayed, 5);
+        assert_eq!(s.snapshot_corrupt, 2);
+        let z = Metrics::new().snapshot();
+        assert_eq!(
+            (z.recovered, z.rebuilt, z.wal_replayed, z.snapshot_corrupt),
             (0, 0, 0, 0)
         );
     }

@@ -89,6 +89,25 @@
 //! "may or may not" observe it) but means replay equality is guaranteed
 //! against the oracle fed the same submit order, not against every
 //! interleaving of a racing insert stream.
+//!
+//! **Process-level crashes** (the whole service dying, not one worker)
+//! are survived when [`ServiceConfig::persist`] is set — see
+//! [`crate::persist`] for the on-disk formats. Every accepted insert is
+//! appended to a checksummed WAL *before* the in-memory broadcast, and
+//! the RT route's index is periodically serialized into a checksummed,
+//! fingerprint-fenced snapshot (plus a final one at clean shutdown). A
+//! cold [`Service::start`] repairs the WAL's torn tail, loads the
+//! newest snapshot that survives **full** validation, and replays the
+//! WAL suffix past its watermark — landing on a serving state bitwise
+//! identical to the process that wrote it. Any checksum, version,
+//! fingerprint, or structural mismatch rejects the whole file and falls
+//! back to the deterministic rebuild from source data: recovery can
+//! cost build time, never answers. The outcome is observable in
+//! [`MetricsSnapshot`] (`recovered` / `rebuilt` / `wal_replayed` /
+//! `snapshot_corrupt`), and the crash-recovery suite asserts bitwise
+//! equality of post-recovery responses against a never-crashed
+//! single-worker oracle under seeded I/O fault schedules
+//! ([`crate::faults::IoFault`]).
 
 mod request;
 mod metrics;
@@ -101,4 +120,6 @@ pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
 pub use metrics::{Metrics, MetricsSnapshot, WorkerMetrics, WorkerSnapshot};
 pub use request::{KnnRequest, KnnResponse, QueryMode, RoutePath};
 pub use router::{Router, RouterConfig};
-pub use service::{ResponseReceiver, Service, ServiceConfig, ServiceError, ServiceHandle};
+pub use service::{
+    PersistConfig, ResponseReceiver, Service, ServiceConfig, ServiceError, ServiceHandle,
+};

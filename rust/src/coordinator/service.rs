@@ -74,13 +74,17 @@ use super::supervisor::{
     WorkerCtx, WorkerHealth,
 };
 use crate::exec::Executor;
-use crate::faults::{FaultPlan, InjectedFault};
+use crate::faults::{FaultPlan, InjectedFault, IoTarget};
 use crate::geom::Point3;
-use crate::index::{BruteCpuIndex, BrutePjrtIndex, IndexConfig, NeighborIndex, TrueKnnIndex};
+use crate::index::{
+    Backend, BruteCpuIndex, BrutePjrtIndex, IndexBuilder, IndexConfig, NeighborIndex, TrueKnnIndex,
+};
 use crate::knn::{Neighbor, TrueKnnParams};
+use crate::persist::Wal;
 use crate::runtime::PjrtRuntime;
 use crate::shard::{merge_topk, Partition};
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
@@ -134,6 +138,11 @@ pub struct ServiceConfig {
     /// Seeded fault-injection plan (default inert — production configs
     /// never fire; see [`crate::faults`]).
     pub faults: FaultPlan,
+    /// Crash-safe persistence ([`crate::persist`]): `Some` turns on the
+    /// durable insert WAL, periodic RT-route snapshots, and cold-start
+    /// recovery from the configured data directory. `None` (the
+    /// default) keeps the service purely in-memory.
+    pub persist: Option<PersistConfig>,
     pub trueknn: TrueKnnParams,
 }
 
@@ -150,10 +159,43 @@ impl Default for ServiceConfig {
             heartbeat_timeout: Duration::from_secs(1),
             replay_backoff: Duration::from_millis(1),
             faults: FaultPlan::inert(),
+            persist: None,
             trueknn: TrueKnnParams {
                 exclude_self: false, // service queries are external points
                 ..Default::default()
             },
+        }
+    }
+}
+
+/// Durability knobs of the service (see [`crate::persist`] for the
+/// on-disk formats and trust model). The data directory holds one
+/// `wal.log` plus `snapshot-{watermark}.tksn` files; a cold
+/// [`Service::start`] replays them into a serving state bitwise
+/// identical to the one that wrote them.
+#[derive(Clone, Debug)]
+pub struct PersistConfig {
+    /// Directory holding the WAL and snapshots (created if missing).
+    pub data_dir: PathBuf,
+    /// Ask the RT-route owner for a snapshot every this many accepted
+    /// inserts (0 = only at clean shutdown). Snapshots are fire-and-
+    /// forget: a failed write degrades durability to WAL-only, never
+    /// fails the insert.
+    pub snapshot_interval: u64,
+    /// WAL group-commit window: fsync every n-th append (1 = every
+    /// append, the durable default; larger windows trade the tail of a
+    /// power loss for insert throughput).
+    pub wal_group_commit: u64,
+}
+
+impl PersistConfig {
+    /// Durable defaults rooted at `data_dir`: fsync every append,
+    /// snapshot only at clean shutdown.
+    pub fn at(data_dir: impl Into<PathBuf>) -> Self {
+        Self {
+            data_dir: data_dir.into(),
+            snapshot_interval: 0,
+            wal_group_commit: 1,
         }
     }
 }
@@ -175,6 +217,11 @@ pub enum ServiceError {
     /// Quarantined by the poison ledger: this request id crashed its
     /// worker twice and is refused to protect the pool.
     Poisoned,
+    /// The durable WAL append failed, so the insert was **not** applied:
+    /// an insert is acknowledged only once it is in the log (the
+    /// stringified [`crate::persist::PersistError`] says why the log
+    /// refused it).
+    PersistFailed(String),
 }
 
 impl std::fmt::Display for ServiceError {
@@ -185,6 +232,9 @@ impl std::fmt::Display for ServiceError {
             ServiceError::InvalidRequest(reason) => write!(f, "invalid request: {reason}"),
             ServiceError::DeadlineExceeded => write!(f, "request deadline exceeded; shed"),
             ServiceError::Poisoned => write!(f, "request quarantined by the poison ledger"),
+            ServiceError::PersistFailed(detail) => {
+                write!(f, "durable insert log append failed: {detail}")
+            }
         }
     }
 }
@@ -205,6 +255,13 @@ pub(super) enum Msg {
     Request(KnnRequest, RoutePath, Option<usize>, ReplySink, Instant),
     /// Broadcast to every worker; applied between batches.
     Insert(Arc<Vec<Point3>>),
+    /// Ask the RT route's owning worker to write a snapshot fenced at
+    /// this WAL watermark (fire-and-forget; a failure only degrades
+    /// durability to WAL-only).
+    Snapshot {
+        /// Sequence number of the last insert the snapshot must cover.
+        watermark: u64,
+    },
     Shutdown,
 }
 
@@ -298,6 +355,12 @@ pub struct ServiceHandle {
     /// Pending scattered requests, swept by the failover monitor.
     /// `None` when no monitor runs (unsharded, or a single worker).
     gathers: Option<Arc<Mutex<Vec<Arc<Gather>>>>>,
+    /// The durable insert WAL (persistence on): appended under the
+    /// insert lock, **before** the broadcast, so the log order is the
+    /// one global insert order every worker observed.
+    wal: Option<Arc<Mutex<Wal>>>,
+    /// Snapshot cadence in accepted inserts (0 = clean shutdown only).
+    snapshot_interval: u64,
 }
 
 impl ServiceHandle {
@@ -450,6 +513,12 @@ impl ServiceHandle {
     /// Ordering contract: queries **submitted** after `insert` returns
     /// observe the new points on every route; queries submitted before
     /// it may or may not, exactly as with a single worker.
+    ///
+    /// Durability contract (persistence on): the points are appended to
+    /// the WAL **before** any worker sees them, so an insert this method
+    /// acknowledged survives a crash. An append failure is a typed
+    /// [`ServiceError::PersistFailed`] and the insert is *not* applied —
+    /// memory never runs ahead of the log.
     pub fn insert(&self, points: &[Point3]) -> Result<(), ServiceError> {
         if points.is_empty() {
             return Err(ServiceError::InvalidRequest("empty insert batch"));
@@ -466,6 +535,16 @@ impl ServiceHandle {
             .insert_lock
             .lock()
             .unwrap_or_else(std::sync::PoisonError::into_inner);
+        // write-ahead: under the same lock as the broadcast, so WAL
+        // sequence order IS broadcast order
+        let mut watermark = 0u64;
+        if let Some(wal) = &self.wal {
+            let mut wal = wal.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            match wal.append(points) {
+                Ok(seq) => watermark = seq,
+                Err(e) => return Err(ServiceError::PersistFailed(e.to_string())),
+            }
+        }
         for (w, tx) in self.txs.iter().enumerate() {
             let wm = &self.metrics.workers[w];
             let depth = wm.queue_depth.fetch_add(1, Ordering::SeqCst) + 1;
@@ -479,7 +558,45 @@ impl ServiceHandle {
         self.data_len.fetch_add(points.len(), Ordering::SeqCst);
         Metrics::inc(&self.metrics.inserts);
         Metrics::add(&self.metrics.points_inserted, points.len() as u64);
+        // still under the insert lock: the snapshot trigger lands on the
+        // owner's queue behind the insert it fences, never before it
+        if self.wal.is_some() && self.snapshot_interval > 0 && watermark % self.snapshot_interval == 0
+        {
+            self.request_snapshot(watermark);
+        }
         Ok(())
+    }
+
+    /// Fire-and-forget snapshot trigger to the RT route's owning worker
+    /// (unsharded persistence only — a sharded route's durability is
+    /// WAL-only). A full queue just postpones the snapshot to the next
+    /// trigger; the WAL already holds everything it would have covered.
+    fn request_snapshot(&self, watermark: u64) {
+        if self.shards > 1 {
+            return;
+        }
+        let w = Router::worker_for(RoutePath::Rt, self.txs.len());
+        let wm = &self.metrics.workers[w];
+        wm.queue_depth.fetch_add(1, Ordering::SeqCst);
+        if self.txs[w].try_send(Msg::Snapshot { watermark }).is_err() {
+            wm.queue_depth.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Clean-shutdown durability: fsync whatever sits in the WAL's
+    /// group-commit window, then ask the RT owner for a final snapshot
+    /// fenced at the current watermark — so the next cold start loads it
+    /// and replays **zero** records. No-op when persistence is off.
+    fn flush_persist(&self) {
+        let Some(wal) = &self.wal else { return };
+        let watermark = {
+            let mut wal = wal.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            if let Err(e) = wal.sync() {
+                crate::log_warn!("WAL fsync at shutdown failed: {e}");
+            }
+            wal.record_count()
+        };
+        self.request_snapshot(watermark);
     }
 
     /// Live service counters (shared across every handle and worker).
@@ -547,6 +664,32 @@ impl Service {
         );
         let ledger = Arc::new(PoisonLedger::default());
         let base = Arc::new(data);
+        // Durable cold start (persistence on): open the WAL — repairing
+        // any torn tail — so its records seed every worker's insert log,
+        // then scan for the newest snapshot that survives full
+        // validation. A candidate failing any check only bumps
+        // `snapshot_corrupt` and falls through to the rebuild path: a
+        // partially-trusted file is never served. An unusable data
+        // directory degrades the run to in-memory with a warning rather
+        // than failing start.
+        let mut wal = None;
+        let mut wal_records: Vec<Arc<Vec<Point3>>> = Vec::new();
+        let mut snapshot: Option<(Arc<Vec<u8>>, u64)> = None;
+        let mut snapshot_rejected = false;
+        if let Some(pc) = &cfg.persist {
+            match open_persist(pc, &cfg, &metrics, shards) {
+                Ok(st) => {
+                    wal_records = st.records;
+                    snapshot = st.snapshot;
+                    snapshot_rejected = st.rejected;
+                    wal = Some(Arc::new(Mutex::new(st.wal)));
+                }
+                Err(e) => {
+                    crate::log_warn!("persistence disabled for this run: {e}");
+                }
+            }
+        }
+        let recovered_points: usize = wal_records.iter().map(|r| r.len()).sum();
         // the partition is a pure function of (base, shards): build it
         // once here and hand every worker the same copy, instead of S
         // duplicate Morton-sort passes before the ready handshake. The
@@ -577,7 +720,13 @@ impl Service {
                 clock: clock.clone(),
                 ledger: ledger.clone(),
                 journal: Vec::new(),
-                insert_log: Vec::new(),
+                // WAL records seed the insert log: the cold start replays
+                // them exactly like a supervised restart replays a
+                // crashed incarnation's inserts
+                insert_log: wal_records.clone(),
+                snapshot: snapshot.clone(),
+                snapshot_rejected,
+                snapshot_ops: 0,
                 batch_seq: 0,
                 crashing_keys: Vec::new(),
             };
@@ -608,13 +757,17 @@ impl Service {
         let handle = ServiceHandle {
             txs: Arc::new(txs.clone()),
             router: Arc::new(Router::new(router_cfg)),
-            data_len: Arc::new(AtomicUsize::new(base.len())),
+            // recovered WAL inserts are part of the served dataset from
+            // the first submit, so the routing policy's n includes them
+            data_len: Arc::new(AtomicUsize::new(base.len() + recovered_points)),
             insert_lock: Arc::new(Mutex::new(())),
             shards,
             metrics,
             inflight,
             ledger,
             gathers,
+            snapshot_interval: cfg.persist.as_ref().map_or(0, |p| p.snapshot_interval),
+            wal,
         };
         let monitor = handle.gathers.as_ref().map(|gathers| {
             let (stop_tx, stop_rx) = sync_channel::<()>(1);
@@ -646,17 +799,23 @@ impl Service {
     }
 
     /// Signal every worker, serve what's queued, and join the pool.
+    /// With persistence on this is the **clean** stop: the WAL's
+    /// group-commit window is fsynced and a final snapshot is written
+    /// before the workers exit, so the next cold start replays zero
+    /// records.
     pub fn shutdown(mut self) {
         self.shutdown_and_join();
         // Drop runs next but finds the pool already drained: exactly one
         // Msg::Shutdown is ever sent per worker.
     }
 
-    /// Shared by `shutdown` and `Drop`: stop the monitor, signal every
-    /// worker once and wait for all of them to drain. Idempotent —
-    /// draining `workers` (and taking `monitor`) makes a second call a
-    /// no-op.
-    fn shutdown_and_join(&mut self) {
+    /// Stop the pool **without** the durability flush: no final WAL
+    /// fsync, no shutdown snapshot — the on-disk state is whatever the
+    /// insert path and interval snapshots left behind, exactly as a
+    /// process crash would leave it. Queued work is still served (use a
+    /// seeded [`FaultPlan`] to also tear the on-disk tail). Built for
+    /// the crash-recovery suite.
+    pub fn shutdown_abrupt(mut self) {
         if let Some((stop, join)) = self.monitor.take() {
             let _ = stop.send(());
             let _ = join.join();
@@ -671,12 +830,173 @@ impl Service {
             let _ = w.join();
         }
     }
+
+    /// Shared by `shutdown` and `Drop`: stop the monitor, flush
+    /// durability state, signal every worker once and wait for all of
+    /// them to drain. Idempotent — draining `workers` (and taking
+    /// `monitor`) makes a second call a no-op, so the flush and the
+    /// final snapshot happen exactly once.
+    fn shutdown_and_join(&mut self) {
+        if let Some((stop, join)) = self.monitor.take() {
+            let _ = stop.send(());
+            let _ = join.join();
+        }
+        if self.workers.is_empty() {
+            return;
+        }
+        // before the shutdown barrier: the snapshot request must land on
+        // the owner's queue ahead of its Msg::Shutdown
+        self.handle.flush_persist();
+        for tx in &self.txs {
+            let _ = tx.send(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
 }
 
 impl Drop for Service {
     fn drop(&mut self) {
         self.shutdown_and_join();
     }
+}
+
+/// The builder whose fingerprint fences the RT route's snapshots:
+/// exactly the configuration the registry builds (and recovers) the
+/// route with, so a snapshot written under any other backend or
+/// result-affecting setting is refused at load.
+fn rt_builder(trueknn: &TrueKnnParams) -> IndexBuilder {
+    IndexBuilder::new(Backend::TrueKnn).config(IndexConfig {
+        exclude_self: false,
+        ..trueknn.to_index_config()
+    })
+}
+
+/// The on-disk name of a snapshot fenced at `watermark` — zero-padded so
+/// lexicographic order is watermark order and the newest candidate sorts
+/// last.
+fn snapshot_file_name(watermark: u64) -> String {
+    format!("snapshot-{watermark:020}.tksn")
+}
+
+/// Relative name of the WAL inside the data directory.
+const WAL_FILE: &str = "wal.log";
+
+/// Everything a durable cold start recovered from the data directory.
+struct PersistStart {
+    /// The open (tail-repaired) WAL, ready for appends.
+    wal: Wal,
+    /// Replayed WAL records in sequence order, ready to seed every
+    /// worker's insert log.
+    records: Vec<Arc<Vec<Point3>>>,
+    /// The newest snapshot that survived full validation, with its
+    /// watermark.
+    snapshot: Option<(Arc<Vec<u8>>, u64)>,
+    /// Snapshot files existed but none survived validation (the fresh
+    /// build replacing them is counted as `rebuilt`).
+    rejected: bool,
+}
+
+/// Open the data directory for a cold start: create it, open + repair
+/// the WAL, and (unsharded only — a sharded route's durability is
+/// WAL-only) pick the newest trustworthy snapshot. `wal_replayed` is
+/// credited with every record past the chosen snapshot's watermark: the
+/// suffix recovery must re-apply instead of finding inside a snapshot.
+fn open_persist(
+    pc: &PersistConfig,
+    cfg: &ServiceConfig,
+    metrics: &Metrics,
+    shards: usize,
+) -> Result<PersistStart, crate::persist::PersistError> {
+    std::fs::create_dir_all(&pc.data_dir)
+        .map_err(|e| crate::persist::io_err("create_dir_all", e))?;
+    let (wal, raw) = Wal::open(
+        &pc.data_dir.join(WAL_FILE),
+        pc.wal_group_commit.max(1),
+        cfg.faults.clone(),
+    )?;
+    let records: Vec<Arc<Vec<Point3>>> = raw.into_iter().map(|r| Arc::new(r.points)).collect();
+    let (snapshot, rejected) = if shards > 1 {
+        (None, false)
+    } else {
+        scan_snapshots(pc, cfg, metrics, wal.record_count())
+    };
+    let watermark = snapshot.as_ref().map_or(0, |&(_, w)| w);
+    Metrics::add(&metrics.wal_replayed, wal.record_count() - watermark);
+    Ok(PersistStart {
+        wal,
+        records,
+        snapshot,
+        rejected,
+    })
+}
+
+/// Find the newest snapshot in the data directory that survives **full**
+/// validation: container checksums and format version
+/// ([`crate::persist::Snapshot::parse`]), the RT route's config
+/// fingerprint, and a watermark no newer than the repaired WAL. Every
+/// rejected candidate bumps `snapshot_corrupt` and the scan falls back
+/// to the next-newest file — corruption can only ever cost freshness,
+/// never correctness.
+fn scan_snapshots(
+    pc: &PersistConfig,
+    cfg: &ServiceConfig,
+    metrics: &Metrics,
+    wal_records: u64,
+) -> (Option<(Arc<Vec<u8>>, u64)>, bool) {
+    let mut candidates: Vec<PathBuf> = match std::fs::read_dir(&pc.data_dir) {
+        Ok(rd) => rd
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with("snapshot-") && n.ends_with(".tksn"))
+            })
+            .collect(),
+        Err(_) => return (None, false),
+    };
+    // zero-padded names: lexicographic descending = newest watermark first
+    candidates.sort();
+    candidates.reverse();
+    let found_any = !candidates.is_empty();
+    let fingerprint = rt_builder(&cfg.trueknn).fingerprint();
+    for path in candidates {
+        match validate_snapshot(&path, cfg, fingerprint, wal_records) {
+            Ok((bytes, watermark)) => return (Some((Arc::new(bytes), watermark)), false),
+            Err(e) => {
+                Metrics::inc(&metrics.snapshot_corrupt);
+                crate::log_warn!("rejecting snapshot {}: {e}", path.display());
+            }
+        }
+    }
+    (None, found_any)
+}
+
+/// Validate one snapshot candidate end to end; returns its raw bytes and
+/// watermark only if every check passes. A watermark past the repaired
+/// WAL means the snapshot covers inserts the log no longer has — the
+/// file is from a diverged history and must not be replayed onto.
+fn validate_snapshot(
+    path: &Path,
+    cfg: &ServiceConfig,
+    fingerprint: u64,
+    wal_records: u64,
+) -> Result<(Vec<u8>, u64), crate::persist::PersistError> {
+    let bytes = crate::persist::read_file(path, &cfg.faults, IoTarget::Snapshot)?;
+    let snap = crate::persist::Snapshot::parse(&bytes)?;
+    snap.check_fingerprint(fingerprint)?;
+    if snap.watermark > wal_records {
+        return Err(crate::persist::PersistError::Corrupt {
+            what: "snapshot container",
+            detail: format!(
+                "watermark {} is past the WAL's {wal_records} records",
+                snap.watermark
+            ),
+        });
+    }
+    Ok((bytes, snap.watermark))
 }
 
 /// One shard sub-index of the sharded RT route, held by its owning
@@ -725,6 +1045,17 @@ struct IndexRegistry {
     /// at the same insert barrier — with no coordination.
     partition: Option<Partition>,
     shard_slots: HashMap<usize, ShardSlot>,
+    /// Validated snapshot handed down from cold start (persistence on,
+    /// RT route unsharded only); consumed by the first RT build.
+    snapshot: Option<(Arc<Vec<u8>>, u64)>,
+    /// Snapshot files existed at cold start but none survived
+    /// validation: the fresh RT build replacing them counts as
+    /// `rebuilt`.
+    snapshot_rejected: bool,
+    /// Every insert record applied, in order — record-granular (unlike
+    /// `extra`, their concatenation) so a snapshot-loaded index can
+    /// replay exactly the records past its watermark.
+    inserts: Vec<Arc<Vec<Point3>>>,
 }
 
 impl IndexRegistry {
@@ -751,6 +1082,9 @@ impl IndexRegistry {
             my_shards,
             partition: None,
             shard_slots: HashMap::new(),
+            snapshot: None,
+            snapshot_rejected: false,
+            inserts: Vec::new(),
         }
     }
 
@@ -865,30 +1199,71 @@ impl IndexRegistry {
     /// reuses the structure.
     fn get(&mut self, path: RoutePath, metrics: &Metrics) -> &mut Box<dyn NeighborIndex> {
         if !self.by_path.contains_key(&path) {
-            let data = self.full_data();
             let index: Box<dyn NeighborIndex> = match path {
                 // service queries are external points: never
                 // self-exclude (positional exclusion is meaningless
                 // against batch-concatenated queries, and forcing it off
                 // here keeps the unsharded RT route consistent with the
                 // sharded one — sharding stays a pure throughput knob)
-                RoutePath::Rt => {
-                    let cfg = IndexConfig {
-                        exclude_self: false,
-                        ..self.trueknn.to_index_config()
-                    };
-                    Box::new(TrueKnnIndex::new(data, cfg))
-                }
+                RoutePath::Rt => self.build_rt(metrics),
                 // Reached only if the eagerly-installed PJRT index is
                 // missing (runtime load raced or failed): rebuild with
                 // whatever runtime is available now.
-                RoutePath::Brute => Box::new(BrutePjrtIndex::new(data, self.brute_config())),
-                RoutePath::BruteCpu => Box::new(BruteCpuIndex::new(data, self.brute_config())),
+                RoutePath::Brute => {
+                    Box::new(BrutePjrtIndex::new(self.full_data(), self.brute_config()))
+                }
+                RoutePath::BruteCpu => {
+                    Box::new(BruteCpuIndex::new(self.full_data(), self.brute_config()))
+                }
             };
             self.install(path, index, metrics);
         }
         // lint: allow(panic-in-lib) — the branch above inserts the key when absent; infallible by construction
         self.by_path.get_mut(&path).expect("just inserted")
+    }
+
+    /// The RT route's index: **recovered** from the cold-start snapshot
+    /// when one survived validation — load the container, then replay
+    /// exactly the insert records past its watermark, landing on the
+    /// same state as the run that wrote it — and **rebuilt** from source
+    /// data otherwise. Every outcome is counted: `recovered` for a
+    /// snapshot load, `rebuilt` for a fresh build that replaces an
+    /// unusable snapshot, `snapshot_corrupt` for a deep decode failure
+    /// the cold-start container scan could not see. A recovery failure
+    /// can only ever cost build time, never answers.
+    fn build_rt(&mut self, metrics: &Metrics) -> Box<dyn NeighborIndex> {
+        let cfg = IndexConfig {
+            exclude_self: false,
+            ..self.trueknn.to_index_config()
+        };
+        if let Some((bytes, _)) = self.snapshot.take() {
+            match rt_builder(&self.trueknn).load(&bytes) {
+                Ok((mut index, watermark)) if (watermark as usize) <= self.inserts.len() => {
+                    // records at or below the watermark are already
+                    // inside the snapshot; replay only the suffix
+                    for rec in &self.inserts[watermark as usize..] {
+                        index.insert(&rec[..]);
+                    }
+                    Metrics::inc(&metrics.recovered);
+                    return index;
+                }
+                Ok(_) => {
+                    // a watermark past the applied insert records means
+                    // the snapshot covers history this process never saw
+                    Metrics::inc(&metrics.snapshot_corrupt);
+                }
+                Err(e) => {
+                    Metrics::inc(&metrics.snapshot_corrupt);
+                    crate::log_warn!("snapshot rejected at decode; rebuilding: {e}");
+                }
+            }
+            Metrics::inc(&metrics.rebuilt);
+            return Box::new(TrueKnnIndex::new(self.full_data(), cfg));
+        }
+        if self.snapshot_rejected {
+            Metrics::inc(&metrics.rebuilt);
+        }
+        Box::new(TrueKnnIndex::new(self.full_data(), cfg))
     }
 
     /// Apply an insert to every already-built index (lazily-built ones
@@ -902,7 +1277,9 @@ impl IndexRegistry {
     /// exactly. Every worker tracks all shards' sizes from the same
     /// stream, so the rebalance decision below fires on every worker at
     /// the same insert barrier.
-    fn apply_insert(&mut self, points: &[Point3], metrics: &Metrics) {
+    fn apply_insert(&mut self, record: &Arc<Vec<Point3>>, metrics: &Metrics) {
+        self.inserts.push(record.clone());
+        let points: &[Point3] = &record[..];
         if let Some(part) = &mut self.partition {
             let old_total = self.base.len() + self.extra.len();
             // the SAME grouping step ShardedIndex::insert runs — every
@@ -987,6 +1364,11 @@ impl IndexRegistry {
 /// ctx's persistent base + insert log.
 pub(super) fn worker_body(ctx: &mut WorkerCtx) {
     let mut registry = IndexRegistry::new(ctx.base.clone(), &ctx.cfg, ctx.worker_id, ctx.n_workers);
+    // Cold-start recovery state (persistence on): every incarnation gets
+    // the same validated snapshot, so a crash-restart recovers exactly
+    // like the first start did.
+    registry.snapshot = ctx.snapshot.clone();
+    registry.snapshot_rejected = ctx.snapshot_rejected;
     // Sharded RT route: owned shard sub-indexes are built before the
     // ready handshake, from the one partition Service::start computed
     // over the base data, so the route serves from the first submit and
@@ -1074,7 +1456,7 @@ pub(super) fn worker_body(ctx: &mut WorkerCtx) {
                 wm.queue_depth.fetch_sub(1, Ordering::SeqCst);
                 ctx.inflight.fetch_sub(1, Ordering::SeqCst);
             }
-            Msg::Insert(_) => {
+            Msg::Insert(_) | Msg::Snapshot { .. } => {
                 wm.queue_depth.fetch_sub(1, Ordering::SeqCst);
             }
             Msg::Shutdown => {}
@@ -1134,11 +1516,50 @@ fn on_msg(
             Metrics::inc(&ctx.metrics.workers[ctx.worker_id].inserts);
             true
         }
+        Msg::Snapshot { watermark } => {
+            ctx.metrics.workers[ctx.worker_id]
+                .queue_depth
+                .fetch_sub(1, Ordering::SeqCst);
+            // snapshot settled state: pending batches first, so the
+            // write never races index mutation on this worker
+            drain(ctx, registry, batcher, reply_of);
+            write_snapshot(ctx, registry, watermark);
+            true
+        }
         Msg::Shutdown => {
             // serve what's queued, then exit
             drain(ctx, registry, batcher, reply_of);
             false
         }
+    }
+}
+
+/// Write the RT route's snapshot fenced at `watermark` via the
+/// temp-file + fsync + atomic-rename path. Best-effort by design: a
+/// failed (or fault-torn) write is logged and durability degrades to
+/// WAL-only — the log already holds every insert the snapshot would
+/// have covered, so correctness never depends on this write landing.
+/// Skipped while the route has no built index (the WAL alone reproduces
+/// that state) and on sharded pools (WAL-only durability).
+fn write_snapshot(ctx: &mut WorkerCtx, registry: &IndexRegistry, watermark: u64) {
+    let Some(pc) = &ctx.cfg.persist else { return };
+    if registry.shards > 1 {
+        return;
+    }
+    let Some(index) = registry.by_path.get(&RoutePath::Rt) else {
+        return;
+    };
+    let bytes = rt_builder(&registry.trueknn).snapshot(index.as_ref(), watermark);
+    let path = pc.data_dir.join(snapshot_file_name(watermark));
+    ctx.snapshot_ops += 1;
+    if let Err(e) = crate::persist::atomic_write(
+        &path,
+        &bytes,
+        &ctx.cfg.faults,
+        IoTarget::Snapshot,
+        ctx.snapshot_ops,
+    ) {
+        crate::log_warn!("snapshot write failed (durability degrades to WAL-only): {e}");
     }
 }
 

@@ -180,8 +180,22 @@ pub(super) struct WorkerCtx {
     /// restart).
     pub(super) journal: Vec<JournalEntry>,
     /// Every insert broadcast consumed, in arrival order (replayed into
-    /// the rebuilt registry on restart).
+    /// the rebuilt registry on restart). With persistence on, cold start
+    /// seeds it with the WAL's replayed records, so a restarted process
+    /// recovers exactly like a restarted worker.
     pub(super) insert_log: Vec<Arc<Vec<Point3>>>,
+    /// Validated snapshot bytes + WAL watermark found at cold start
+    /// (persistence on, RT route unsharded only). Each incarnation's
+    /// registry recovers the RT index from it instead of rebuilding.
+    pub(super) snapshot: Option<(Arc<Vec<u8>>, u64)>,
+    /// Snapshot files existed at cold start but none survived
+    /// validation: the fresh RT build that replaces them is counted as
+    /// `rebuilt`.
+    pub(super) snapshot_rejected: bool,
+    /// 1-based count of snapshot files this worker has written — the
+    /// `op` coordinate of scheduled snapshot torn-write faults, kept
+    /// monotonic across restarts like `batch_seq`.
+    pub(super) snapshot_ops: u64,
     /// Per-worker batch sequence; monotonic across restarts.
     pub(super) batch_seq: u64,
     /// `(id, shard)` keys of the batch being served right now — the

@@ -45,6 +45,56 @@ const SEEDED_DELAY_MS: u64 = 2;
 /// long enough to trip a test-sized heartbeat deadline.
 const SEEDED_STALL_MS: u64 = 80;
 
+/// Which persisted artifact a seeded I/O fault targets (see
+/// [`IoFault`]): the checksummed index snapshot file or the durable
+/// insert write-ahead log.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IoTarget {
+    /// The `snapshot-*.tksn` container the worker writes.
+    Snapshot,
+    /// The `wal.log` append-only insert log.
+    Wal,
+}
+
+/// One scheduled persistence-path I/O fault. These simulate the storage
+/// failures the recovery layer must detect — a crash mid-write (torn
+/// tail), a partially readable file, a silently flipped bit — and are
+/// applied by the persist helpers themselves
+/// ([`crate::persist::atomic_write`] / [`crate::persist::read_file`] /
+/// the WAL append path), so the corruption lands in exactly the bytes a
+/// real fault would hit while the plan stays pure data.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IoFault {
+    /// Write only the first `keep` bytes of the `op`-th write to
+    /// `target` (per-target op counters start at 1). Simulates a crash
+    /// mid-write: the file ends in a torn record/blob the reader must
+    /// truncate or reject.
+    TornWrite {
+        /// Victim artifact.
+        target: IoTarget,
+        /// 1-based per-target write-operation index the fault fires at.
+        op: u64,
+        /// Bytes actually written before the simulated crash.
+        keep: usize,
+    },
+    /// Every read of `target` returns only its first `keep` bytes.
+    ShortRead {
+        /// Victim artifact.
+        target: IoTarget,
+        /// Bytes the read yields before the simulated truncation.
+        keep: usize,
+    },
+    /// Flip one bit of byte `at` (modulo the payload length) in every
+    /// write to `target`. Simulates silent media corruption the
+    /// checksums must catch.
+    FlipByte {
+        /// Victim artifact.
+        target: IoTarget,
+        /// Byte offset to corrupt, taken modulo the payload length.
+        at: usize,
+    },
+}
+
 /// One scheduled fault: a kind, a victim worker and the per-worker
 /// batch sequence number it triggers at.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -87,6 +137,8 @@ pub struct FaultPlan {
     faults: Vec<Fault>,
     /// Request id that panics its worker on **every** drain attempt.
     poison: Option<u64>,
+    /// Scheduled persistence-path I/O faults (see [`IoFault`]).
+    io: Vec<IoFault>,
 }
 
 impl FaultPlan {
@@ -98,7 +150,7 @@ impl FaultPlan {
 
     /// True when this plan can never fire (the production fast path).
     pub fn is_inert(&self) -> bool {
-        self.faults.is_empty() && self.poison.is_none()
+        self.faults.is_empty() && self.poison.is_none() && self.io.is_empty()
     }
 
     /// Schedule a panic on `worker` at its batch sequence `seq`.
@@ -127,6 +179,27 @@ impl FaultPlan {
         self
     }
 
+    /// Schedule a torn write: the `op`-th write to `target` persists
+    /// only its first `keep` bytes (see [`IoFault::TornWrite`]).
+    pub fn with_torn_write(mut self, target: IoTarget, op: u64, keep: usize) -> Self {
+        self.io.push(IoFault::TornWrite { target, op, keep });
+        self
+    }
+
+    /// Schedule a short read: reads of `target` yield only the first
+    /// `keep` bytes (see [`IoFault::ShortRead`]).
+    pub fn with_short_read(mut self, target: IoTarget, keep: usize) -> Self {
+        self.io.push(IoFault::ShortRead { target, keep });
+        self
+    }
+
+    /// Schedule a flipped byte: every write to `target` has one bit of
+    /// byte `at` (mod length) inverted (see [`IoFault::FlipByte`]).
+    pub fn with_flip_byte(mut self, target: IoTarget, at: usize) -> Self {
+        self.io.push(IoFault::FlipByte { target, at });
+        self
+    }
+
     /// Derive a reproducible pseudo-random plan for a pool of `workers`
     /// workers: one panic, one reply delay and one queue stall, each on
     /// an independently chosen victim within the first few batches. The
@@ -145,8 +218,33 @@ impl FaultPlan {
             .with_queue_stall(sw, ss, SEEDED_STALL_MS)
     }
 
+    /// Derive a reproducible pseudo-random **I/O** fault plan: exactly
+    /// one of torn-write / short-read / flip-byte against one of the
+    /// two persisted artifacts, with small seed-derived offsets. The
+    /// same seed always yields the same plan; worker-loop faults are
+    /// left empty so the plan exercises only the persistence paths.
+    pub fn seeded_io(seed: u64) -> Self {
+        let mut rng = Pcg32::new(seed);
+        let target = if rng.next_u32() % 2 == 0 { IoTarget::Wal } else { IoTarget::Snapshot };
+        match rng.next_u32() % 3 {
+            0 => {
+                // tear an early write a few bytes in
+                let op = 1 + rng.next_u64() % 2;
+                let keep = rng.below_usize(12);
+                FaultPlan::inert().with_torn_write(target, op, keep)
+            }
+            1 => FaultPlan::inert().with_short_read(target, rng.below_usize(96)),
+            _ => FaultPlan::inert().with_flip_byte(target, rng.below_usize(256)),
+        }
+    }
+
     /// The seed pinned by the fault-injection CI leg, if any: parses
     /// `TRUEKNN_FAULT_SEED` (decimal). Unset or unparsable = `None`.
+    ///
+    /// This is the lenient library-side reader; the `serve` CLI goes
+    /// through [`crate::cli::env_parse`] instead, which turns a
+    /// malformed value into a typed error rather than a silently
+    /// disarmed plan.
     pub fn env_seed() -> Option<u64> {
         std::env::var("TRUEKNN_FAULT_SEED")
             .ok()
@@ -206,6 +304,40 @@ impl FaultPlan {
             None => false,
         }
     }
+
+    /// Every scheduled I/O fault, in insertion order.
+    pub fn io_faults(&self) -> &[IoFault] {
+        &self.io
+    }
+
+    /// Bytes the `op`-th write to `target` should keep, if a torn write
+    /// is scheduled there.
+    pub fn torn_write(&self, target: IoTarget, op: u64) -> Option<usize> {
+        self.io.iter().find_map(|f| match f {
+            IoFault::TornWrite { target: t, op: o, keep } if *t == target && *o == op => {
+                Some(*keep)
+            }
+            _ => None,
+        })
+    }
+
+    /// Bytes a read of `target` should yield, if a short read is
+    /// scheduled there.
+    pub fn short_read(&self, target: IoTarget) -> Option<usize> {
+        self.io.iter().find_map(|f| match f {
+            IoFault::ShortRead { target: t, keep } if *t == target => Some(*keep),
+            _ => None,
+        })
+    }
+
+    /// Byte offset to corrupt in writes to `target`, if a flipped byte
+    /// is scheduled there.
+    pub fn flip_byte(&self, target: IoTarget) -> Option<usize> {
+        self.io.iter().find_map(|f| match f {
+            IoFault::FlipByte { target: t, at } if *t == target => Some(*at),
+            _ => None,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -259,6 +391,43 @@ mod tests {
             assert!(w < 4);
             assert!((1..=SEEDED_MAX_SEQ).contains(&s));
         }
+    }
+
+    #[test]
+    fn io_faults_match_their_target_and_op() {
+        let p = FaultPlan::inert()
+            .with_torn_write(IoTarget::Wal, 3, 5)
+            .with_short_read(IoTarget::Snapshot, 64)
+            .with_flip_byte(IoTarget::Snapshot, 17);
+        assert!(!p.is_inert());
+        assert_eq!(p.torn_write(IoTarget::Wal, 3), Some(5));
+        assert_eq!(p.torn_write(IoTarget::Wal, 4), None, "wrong op must not trip");
+        assert_eq!(p.torn_write(IoTarget::Snapshot, 3), None, "wrong target must not trip");
+        assert_eq!(p.short_read(IoTarget::Snapshot), Some(64));
+        assert_eq!(p.short_read(IoTarget::Wal), None);
+        assert_eq!(p.flip_byte(IoTarget::Snapshot), Some(17));
+        assert_eq!(p.flip_byte(IoTarget::Wal), None);
+        assert_eq!(p.io_faults().len(), 3);
+        assert_eq!(p.panic_count(), 0, "io faults are not worker-loop faults");
+    }
+
+    #[test]
+    fn seeded_io_plans_are_reproducible_and_single_fault() {
+        let a = FaultPlan::seeded_io(0xBEEF);
+        assert_eq!(a, FaultPlan::seeded_io(0xBEEF));
+        assert_eq!(a.io_faults().len(), 1);
+        assert!(a.faults().is_empty(), "seeded_io must not schedule worker faults");
+        // across a seed sweep every fault kind appears (guards against a
+        // degenerate derivation that always picks the same arm)
+        let mut kinds = [false; 3];
+        for seed in 0..64u64 {
+            match FaultPlan::seeded_io(seed).io_faults()[0] {
+                IoFault::TornWrite { .. } => kinds[0] = true,
+                IoFault::ShortRead { .. } => kinds[1] = true,
+                IoFault::FlipByte { .. } => kinds[2] = true,
+            }
+        }
+        assert_eq!(kinds, [true; 3]);
     }
 
     #[test]

@@ -55,6 +55,34 @@ impl KdTreeIndex {
             build_seconds: sw.elapsed_secs(),
         }
     }
+
+    /// Restore an index serialized by its `snapshot_into`: the persisted
+    /// tree arena is trusted (post-validation) instead of rebuilt, and
+    /// its point array must mirror `data` exactly.
+    pub(crate) fn decode_from(
+        dec: &mut crate::persist::Dec<'_>,
+        cfg: IndexConfig,
+    ) -> Result<Self, crate::persist::PersistError> {
+        let data = super::get_points(dec)?;
+        let tree = KdTree::decode_from(dec)?;
+        let build = HwCounters::decode_from(dec)?;
+        let build_seconds = dec.get_f64()?;
+        if tree.len() != data.len() {
+            return Err(crate::persist::PersistError::Corrupt {
+                what: "kdtree index",
+                detail: format!("tree holds {} points, data {}", tree.len(), data.len()),
+            });
+        }
+        let exec = Executor::new(cfg.threads);
+        Ok(KdTreeIndex {
+            cfg,
+            data,
+            tree,
+            exec,
+            build,
+            build_seconds,
+        })
+    }
 }
 
 impl NeighborIndex for KdTreeIndex {
@@ -142,6 +170,14 @@ impl NeighborIndex for KdTreeIndex {
             radius_schedule: Vec::new(),
         }
     }
+
+    fn snapshot_into(&self, enc: &mut crate::persist::Enc) {
+        super::write_index_header(enc, false, Backend::KdTree, &self.cfg);
+        super::put_points(enc, &self.data);
+        self.tree.encode_into(enc);
+        self.build.encode_into(enc);
+        enc.put_f64(self.build_seconds);
+    }
 }
 
 // ------------------------------------------------------------- brute cpu
@@ -159,6 +195,16 @@ impl BruteCpuIndex {
     pub fn new(data: Vec<Point3>, cfg: IndexConfig) -> Self {
         let exec = Executor::new(cfg.threads);
         BruteCpuIndex { cfg, data, exec }
+    }
+
+    /// Restore an index serialized by its `snapshot_into` (the point
+    /// array is the entire state).
+    pub(crate) fn decode_from(
+        dec: &mut crate::persist::Dec<'_>,
+        cfg: IndexConfig,
+    ) -> Result<Self, crate::persist::PersistError> {
+        let data = super::get_points(dec)?;
+        Ok(BruteCpuIndex::new(data, cfg))
     }
 }
 
@@ -297,6 +343,11 @@ impl NeighborIndex for BruteCpuIndex {
             radius_schedule: Vec::new(),
         }
     }
+
+    fn snapshot_into(&self, enc: &mut crate::persist::Enc) {
+        super::write_index_header(enc, false, Backend::BruteCpu, &self.cfg);
+        super::put_points(enc, &self.data);
+    }
 }
 
 // ------------------------------------------------------------ brute pjrt
@@ -343,6 +394,19 @@ impl BrutePjrtIndex {
     /// Did the PJRT runtime actually load? (Else queries take the CPU scan.)
     pub fn pjrt_available(&self) -> bool {
         self.runtime.is_some()
+    }
+
+    /// Restore an index serialized by its `snapshot_into`. Only the
+    /// point array persists; the PJRT executables are re-loaded from the
+    /// artifact directory (they are AOT files on disk already — the
+    /// snapshot would only duplicate them), silently falling back to the
+    /// CPU scan exactly as a fresh build does.
+    pub(crate) fn decode_from(
+        dec: &mut crate::persist::Dec<'_>,
+        cfg: IndexConfig,
+    ) -> Result<Self, crate::persist::PersistError> {
+        let data = super::get_points(dec)?;
+        Ok(Self::with_runtime(data, PjrtRuntime::load_default().ok(), cfg))
     }
 }
 
@@ -409,6 +473,11 @@ impl NeighborIndex for BrutePjrtIndex {
             start_radius: None,
             radius_schedule: Vec::new(),
         }
+    }
+
+    fn snapshot_into(&self, enc: &mut crate::persist::Enc) {
+        super::write_index_header(enc, false, Backend::BrutePjrt, &self.cfg);
+        super::put_points(enc, &self.data);
     }
 }
 

@@ -91,6 +91,33 @@ impl Backend {
             Backend::BrutePjrt => "brute-pjrt",
         }
     }
+
+    /// Stable numeric tag used inside snapshot payloads (the position in
+    /// [`Backend::ALL`]). New backends append; existing tags never move.
+    pub fn tag(&self) -> u32 {
+        match self {
+            Backend::TrueKnn => 0,
+            Backend::FixedRadius => 1,
+            Backend::Rtnn => 2,
+            Backend::KdTree => 3,
+            Backend::BruteCpu => 4,
+            Backend::BrutePjrt => 5,
+        }
+    }
+
+    /// Inverse of [`Backend::tag`]; `None` for tags from a future (or
+    /// corrupt) snapshot.
+    pub fn from_tag(tag: u32) -> Option<Backend> {
+        match tag {
+            0 => Some(Backend::TrueKnn),
+            1 => Some(Backend::FixedRadius),
+            2 => Some(Backend::Rtnn),
+            3 => Some(Backend::KdTree),
+            4 => Some(Backend::BruteCpu),
+            5 => Some(Backend::BrutePjrt),
+            _ => None,
+        }
+    }
 }
 
 impl std::fmt::Display for Backend {
@@ -181,6 +208,117 @@ impl Default for IndexConfig {
     }
 }
 
+/// `Option<f32>` wire form: presence tag byte, then the value if present.
+fn put_opt_f32(enc: &mut crate::persist::Enc, v: Option<f32>) {
+    match v {
+        Some(x) => {
+            enc.put_u8(1);
+            enc.put_f32(x);
+        }
+        None => enc.put_u8(0),
+    }
+}
+
+fn get_opt_f32(
+    dec: &mut crate::persist::Dec<'_>,
+) -> Result<Option<f32>, crate::persist::PersistError> {
+    match dec.get_u8()? {
+        0 => Ok(None),
+        1 => Ok(Some(dec.get_f32()?)),
+        t => Err(crate::persist::PersistError::Corrupt {
+            what: "index config",
+            detail: format!("option tag {t} is neither 0 nor 1"),
+        }),
+    }
+}
+
+impl IndexConfig {
+    /// Serialize every field (including `threads`, which the loader
+    /// overrides — see [`IndexBuilder::load`]) for a snapshot payload.
+    pub fn encode_into(&self, enc: &mut crate::persist::Enc) {
+        enc.put_u8(self.exclude_self as u8);
+        enc.put_u64(self.seed);
+        enc.put_f64(self.cost_model.c_aabb);
+        enc.put_f64(self.cost_model.c_prim);
+        enc.put_f64(self.cost_model.c_heap);
+        enc.put_f64(self.cost_model.c_build);
+        enc.put_f64(self.cost_model.c_refit);
+        enc.put_f64(self.cost_model.c_switch);
+        enc.put_f64(self.cost_model.c_launch);
+        put_opt_f32(enc, self.start_radius);
+        put_opt_f32(enc, self.radius_cap);
+        enc.put_u64(self.max_rounds as u64);
+        put_opt_f32(enc, self.radius);
+        enc.put_u64(self.partitions as u64);
+        enc.put_u64(self.threads as u64);
+        enc.put_u8(self.cohort_queries as u8);
+        enc.put_u8(self.shell_requery as u8);
+        enc.put_u64(self.shards as u64);
+    }
+
+    /// Decode a config written by [`IndexConfig::encode_into`].
+    pub fn decode_from(
+        dec: &mut crate::persist::Dec<'_>,
+    ) -> Result<IndexConfig, crate::persist::PersistError> {
+        Ok(IndexConfig {
+            exclude_self: dec.get_u8()? != 0,
+            seed: dec.get_u64()?,
+            cost_model: CostModel {
+                c_aabb: dec.get_f64()?,
+                c_prim: dec.get_f64()?,
+                c_heap: dec.get_f64()?,
+                c_build: dec.get_f64()?,
+                c_refit: dec.get_f64()?,
+                c_switch: dec.get_f64()?,
+                c_launch: dec.get_f64()?,
+            },
+            start_radius: get_opt_f32(dec)?,
+            radius_cap: get_opt_f32(dec)?,
+            max_rounds: dec.get_u64()? as usize,
+            radius: get_opt_f32(dec)?,
+            partitions: dec.get_u64()? as usize,
+            threads: dec.get_u64()? as usize,
+            cohort_queries: dec.get_u8()? != 0,
+            shell_requery: dec.get_u8()? != 0,
+            shards: dec.get_u64()? as usize,
+        })
+    }
+
+    /// Fold the *result-affecting* configuration into a fingerprint
+    /// hasher. Everything except `threads` participates: thread count is
+    /// a pure throughput knob (results are bitwise-identical at any
+    /// value — the crate's determinism contract), so a snapshot written
+    /// by an 8-thread build must load into a 2-thread server.
+    pub fn fingerprint_into(&self, h: &mut crate::persist::Fnv64) {
+        h.write(&[self.exclude_self as u8]);
+        h.write_u64(self.seed);
+        for c in [
+            self.cost_model.c_aabb,
+            self.cost_model.c_prim,
+            self.cost_model.c_heap,
+            self.cost_model.c_build,
+            self.cost_model.c_refit,
+            self.cost_model.c_switch,
+            self.cost_model.c_launch,
+        ] {
+            h.write_u64(c.to_bits());
+        }
+        for opt in [self.start_radius, self.radius_cap, self.radius] {
+            match opt {
+                Some(v) => {
+                    h.write(&[1]);
+                    h.write_f32(v);
+                }
+                None => h.write(&[0]),
+            }
+        }
+        h.write_u64(self.max_rounds as u64);
+        h.write_u64(self.partitions as u64);
+        h.write(&[self.cohort_queries as u8, self.shell_requery as u8]);
+        h.write_u64(self.shards as u64);
+    }
+}
+
 /// Structure-maintenance telemetry: what it cost to *build* (and later
 /// grow) the index, kept separate from per-query work so the
 /// amortization is visible.
@@ -236,6 +374,12 @@ pub trait NeighborIndex {
     fn insert(&mut self, points: &[Point3]);
 
     fn build_stats(&self) -> BuildStats;
+
+    /// Serialize the index's complete state (backend tag, config, and
+    /// every arena, including build counters) into a snapshot payload.
+    /// [`IndexBuilder::load`] restores an index whose query results
+    /// *and* counters are bitwise-identical to the original's.
+    fn snapshot_into(&self, enc: &mut crate::persist::Enc);
 }
 
 /// Why [`IndexBuilder::try_build`] refused to build an index.
@@ -249,6 +393,11 @@ pub enum BuildError {
         /// Index of the first non-finite point in the input data.
         index: usize,
     },
+    /// A snapshot could not be loaded: checksum, version, or config
+    /// fingerprint mismatch, or a structurally invalid payload. The
+    /// caller must fall back to a full deterministic rebuild — a
+    /// partially-trusted file is never served.
+    Persist(crate::persist::PersistError),
 }
 
 impl std::fmt::Display for BuildError {
@@ -257,11 +406,19 @@ impl std::fmt::Display for BuildError {
             BuildError::NonFiniteCoordinate { index } => {
                 write!(f, "non-finite coordinate at data point {index}")
             }
+            BuildError::Persist(e) => write!(f, "snapshot load failed: {e}"),
         }
     }
 }
 
-impl std::error::Error for BuildError {}
+impl std::error::Error for BuildError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            BuildError::Persist(e) => Some(e),
+            _ => None,
+        }
+    }
+}
 
 /// Front door: configure, then `build` to get a boxed index.
 pub struct IndexBuilder {
@@ -385,6 +542,123 @@ impl IndexBuilder {
             Backend::BrutePjrt => Box::new(BrutePjrtIndex::new(data, self.cfg)),
         }
     }
+
+    /// Fingerprint of this builder's result-affecting configuration
+    /// (backend name + every [`IndexConfig`] field except `threads`).
+    /// Snapshots are fenced to it: [`IndexBuilder::load`] refuses a file
+    /// written under any other configuration, because replaying a WAL on
+    /// top of a differently-configured index would silently change
+    /// results.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::persist::Fnv64::new();
+        h.write(self.backend.name().as_bytes());
+        self.cfg.fingerprint_into(&mut h);
+        h.finish()
+    }
+
+    /// Serialize `index` into a complete checksummed snapshot container
+    /// fenced to this builder's [`fingerprint`](IndexBuilder::fingerprint)
+    /// and stamped with the WAL `watermark` (sequence number of the last
+    /// insert the snapshot includes; 0 = none).
+    pub fn snapshot(&self, index: &dyn NeighborIndex, watermark: u64) -> Vec<u8> {
+        let mut enc = crate::persist::Enc::new();
+        index.snapshot_into(&mut enc);
+        let mut w = crate::persist::SnapshotWriter::new(self.fingerprint(), watermark);
+        w.section(crate::persist::SEC_INDEX, enc.into_bytes());
+        w.finish()
+    }
+
+    /// Load a snapshot written by [`IndexBuilder::snapshot`] under the
+    /// same configuration, returning the restored index and the WAL
+    /// watermark it was stamped with. The persisted thread count is
+    /// overridden by this builder's — threads never affect results, so a
+    /// snapshot is portable across machine sizes. Any checksum, version,
+    /// fingerprint, or structural failure is a typed
+    /// [`BuildError::Persist`]; the caller rebuilds from source data.
+    pub fn load(&self, bytes: &[u8]) -> Result<(Box<dyn NeighborIndex>, u64), BuildError> {
+        let snap = crate::persist::Snapshot::parse(bytes).map_err(BuildError::Persist)?;
+        snap.check_fingerprint(self.fingerprint())
+            .map_err(BuildError::Persist)?;
+        let payload = snap.section(crate::persist::SEC_INDEX).ok_or_else(|| {
+            BuildError::Persist(crate::persist::PersistError::Corrupt {
+                what: "snapshot container",
+                detail: "no index section".to_string(),
+            })
+        })?;
+        let mut dec = crate::persist::Dec::new(payload);
+        let index = decode_index(&mut dec, self.cfg.threads).map_err(BuildError::Persist)?;
+        if !dec.finished() {
+            return Err(BuildError::Persist(crate::persist::PersistError::Corrupt {
+                what: "snapshot container",
+                detail: format!("{} trailing bytes after index payload", dec.remaining()),
+            }));
+        }
+        Ok((index, snap.watermark))
+    }
+}
+
+/// Common prefix of every serialized index: a sharded-wrapper flag, the
+/// backend tag, then the full config. Written by each backend's
+/// `snapshot_into`; consumed by [`decode_index`].
+pub(crate) fn write_index_header(
+    enc: &mut crate::persist::Enc,
+    sharded: bool,
+    backend: Backend,
+    cfg: &IndexConfig,
+) {
+    enc.put_u8(sharded as u8);
+    enc.put_u32(backend.tag());
+    cfg.encode_into(enc);
+}
+
+/// Decode one serialized index (header + backend body), overriding the
+/// persisted thread count with `threads`. Also the recursion point for
+/// [`crate::shard::ShardedIndex`]'s per-shard inner indexes.
+pub(crate) fn decode_index(
+    dec: &mut crate::persist::Dec<'_>,
+    threads: usize,
+) -> Result<Box<dyn NeighborIndex>, crate::persist::PersistError> {
+    let sharded = dec.get_u8()? != 0;
+    let tag = dec.get_u32()?;
+    let backend = Backend::from_tag(tag).ok_or_else(|| crate::persist::PersistError::Corrupt {
+        what: "index payload",
+        detail: format!("unknown backend tag {tag}"),
+    })?;
+    let mut cfg = IndexConfig::decode_from(dec)?;
+    cfg.threads = threads;
+    if sharded {
+        return Ok(Box::new(crate::shard::ShardedIndex::decode_from(dec, backend, cfg)?));
+    }
+    Ok(match backend {
+        Backend::TrueKnn => Box::new(TrueKnnIndex::decode_from(dec, cfg)?),
+        Backend::FixedRadius => Box::new(FixedRadiusIndex::decode_from(dec, cfg)?),
+        Backend::Rtnn => Box::new(RtnnIndex::decode_from(dec, cfg)?),
+        Backend::KdTree => Box::new(KdTreeIndex::decode_from(dec, cfg)?),
+        Backend::BruteCpu => Box::new(BruteCpuIndex::decode_from(dec, cfg)?),
+        Backend::BrutePjrt => Box::new(BrutePjrtIndex::decode_from(dec, cfg)?),
+    })
+}
+
+/// Shared codec for a point array (`len` + three `f32` words per point).
+pub(crate) fn put_points(enc: &mut crate::persist::Enc, points: &[Point3]) {
+    enc.put_len(points.len());
+    for p in points {
+        enc.put_f32(p.x);
+        enc.put_f32(p.y);
+        enc.put_f32(p.z);
+    }
+}
+
+/// Inverse of [`put_points`].
+pub(crate) fn get_points(
+    dec: &mut crate::persist::Dec<'_>,
+) -> Result<Vec<Point3>, crate::persist::PersistError> {
+    let n = dec.get_len()?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(Point3::new(dec.get_f32()?, dec.get_f32()?, dec.get_f32()?));
+    }
+    Ok(out)
 }
 
 /// Complete-search default radius for the fixed-radius backends: the
@@ -658,7 +932,51 @@ mod tests {
     }
 
     #[test]
-    fn build_stats_report_one_build_across_queries() {
+    fn snapshot_round_trip_preserves_results_and_stats_bitwise() {
+        let ds = DatasetKind::Taxi.generate(400, 7);
+        for b in Backend::ALL {
+            let mut idx = IndexBuilder::new(b).build(ds.points.clone());
+            let _ = idx.knn(&ds.points[..32], 4); // leave post-query state behind
+            let bytes = IndexBuilder::new(b).snapshot(idx.as_ref(), 9);
+            let (mut loaded, watermark) = IndexBuilder::new(b).load(&bytes).unwrap();
+            assert_eq!(watermark, 9, "{b}");
+            assert_eq!(loaded.len(), idx.len(), "{b}");
+            let want = idx.knn(&ds.points[..32], 4);
+            let got = loaded.knn(&ds.points[..32], 4);
+            for (g, w) in got.neighbors.iter().zip(&want.neighbors) {
+                let gb: Vec<(u32, u32)> = g.iter().map(|n| (n.idx, n.dist.to_bits())).collect();
+                let wb: Vec<(u32, u32)> = w.iter().map(|n| (n.idx, n.dist.to_bits())).collect();
+                assert_eq!(gb, wb, "{b}");
+            }
+            assert_eq!(got.counters, want.counters, "{b} counters diverged after reload");
+            let (gs, ws) = (loaded.build_stats(), idx.build_stats());
+            assert_eq!(gs.counters, ws.counters, "{b}");
+            assert_eq!(gs.start_radius.map(f32::to_bits), ws.start_radius.map(f32::to_bits));
+        }
+    }
+
+    #[test]
+    fn load_rejects_a_different_configuration() {
+        let ds = DatasetKind::Uniform.generate(120, 8);
+        let idx = IndexBuilder::new(Backend::KdTree).build(ds.points.clone());
+        let bytes = IndexBuilder::new(Backend::KdTree).snapshot(idx.as_ref(), 0);
+        // different seed → different fingerprint → typed refusal
+        let err = IndexBuilder::new(Backend::KdTree).seed(7).load(&bytes).unwrap_err();
+        assert!(matches!(
+            err,
+            BuildError::Persist(crate::persist::PersistError::FingerprintMismatch { .. })
+        ));
+        // different backend under the same config: also a fingerprint fence
+        let err = IndexBuilder::new(Backend::BruteCpu).load(&bytes).unwrap_err();
+        assert!(matches!(
+            err,
+            BuildError::Persist(crate::persist::PersistError::FingerprintMismatch { .. })
+        ));
+        // threads are NOT part of the fingerprint: a differently-threaded
+        // builder loads the same file
+        let (loaded, _) = IndexBuilder::new(Backend::KdTree).threads(2).load(&bytes).unwrap();
+        assert_eq!(loaded.len(), 120);
+    }
         let ds = DatasetKind::Taxi.generate(800, 5);
         let mut idx = IndexBuilder::new(Backend::TrueKnn).build(ds.points.clone());
         for _ in 0..3 {

@@ -53,6 +53,26 @@ impl FixedRadiusIndex {
     pub fn radius(&self) -> f32 {
         self.radius
     }
+
+    /// Restore an index serialized by its `snapshot_into` — the scene
+    /// comes back at whatever radius the last call left it, so the next
+    /// query's refit decision matches a never-persisted index exactly.
+    pub(crate) fn decode_from(
+        dec: &mut crate::persist::Dec<'_>,
+        cfg: IndexConfig,
+    ) -> Result<Self, crate::persist::PersistError> {
+        let radius = dec.get_f32()?;
+        let build = HwCounters::decode_from(dec)?;
+        let build_seconds = dec.get_f64()?;
+        let scene = Scene::decode_from(dec, Executor::new(cfg.threads))?;
+        Ok(FixedRadiusIndex {
+            cfg,
+            radius,
+            scene,
+            build,
+            build_seconds,
+        })
+    }
 }
 
 impl NeighborIndex for FixedRadiusIndex {
@@ -135,6 +155,14 @@ impl NeighborIndex for FixedRadiusIndex {
             radius_schedule: Vec::new(),
         }
     }
+
+    fn snapshot_into(&self, enc: &mut crate::persist::Enc) {
+        super::write_index_header(enc, false, Backend::FixedRadius, &self.cfg);
+        enc.put_f32(self.radius);
+        self.build.encode_into(enc);
+        enc.put_f64(self.build_seconds);
+        self.scene.encode_into(enc);
+    }
 }
 
 /// RTNN-style baseline: fixed radius plus Morton query reordering and
@@ -164,6 +192,26 @@ impl RtnnIndex {
             build,
             build_seconds: sw.elapsed_secs(),
         }
+    }
+
+    /// Restore an index serialized by its `snapshot_into` (same wire
+    /// shape as [`FixedRadiusIndex`]; the Morton reordering is per-call
+    /// state and has nothing to persist).
+    pub(crate) fn decode_from(
+        dec: &mut crate::persist::Dec<'_>,
+        cfg: IndexConfig,
+    ) -> Result<Self, crate::persist::PersistError> {
+        let radius = dec.get_f32()?;
+        let build = HwCounters::decode_from(dec)?;
+        let build_seconds = dec.get_f64()?;
+        let scene = Scene::decode_from(dec, Executor::new(cfg.threads))?;
+        Ok(RtnnIndex {
+            cfg,
+            radius,
+            scene,
+            build,
+            build_seconds,
+        })
     }
 }
 
@@ -265,6 +313,14 @@ impl NeighborIndex for RtnnIndex {
             start_radius: None,
             radius_schedule: Vec::new(),
         }
+    }
+
+    fn snapshot_into(&self, enc: &mut crate::persist::Enc) {
+        super::write_index_header(enc, false, Backend::Rtnn, &self.cfg);
+        enc.put_f32(self.radius);
+        self.build.encode_into(enc);
+        enc.put_f64(self.build_seconds);
+        self.scene.encode_into(enc);
     }
 }
 

@@ -80,6 +80,34 @@ impl TrueKnnIndex {
             build_seconds: sw.elapsed_secs(),
         }
     }
+
+    /// Restore an index serialized by its `snapshot_into` — no sampling,
+    /// no build: the persisted scene (at whatever radius the last query
+    /// left it), start radius, schedule, and build counters come back
+    /// exactly, so both future results and reported stats are
+    /// bitwise-identical to an index that never went through disk.
+    pub(crate) fn decode_from(
+        dec: &mut crate::persist::Dec<'_>,
+        cfg: IndexConfig,
+    ) -> Result<Self, crate::persist::PersistError> {
+        let start_radius = dec.get_f32()?;
+        let n = dec.get_len()?;
+        let mut schedule = Vec::with_capacity(n);
+        for _ in 0..n {
+            schedule.push(dec.get_f32()?);
+        }
+        let build = HwCounters::decode_from(dec)?;
+        let build_seconds = dec.get_f64()?;
+        let scene = Scene::decode_from(dec, Executor::new(cfg.threads))?;
+        Ok(TrueKnnIndex {
+            cfg,
+            scene,
+            start_radius,
+            schedule,
+            build,
+            build_seconds,
+        })
+    }
 }
 
 impl NeighborIndex for TrueKnnIndex {
@@ -246,6 +274,18 @@ impl NeighborIndex for TrueKnnIndex {
             start_radius: Some(self.start_radius),
             radius_schedule: self.schedule.clone(),
         }
+    }
+
+    fn snapshot_into(&self, enc: &mut crate::persist::Enc) {
+        super::write_index_header(enc, false, Backend::TrueKnn, &self.cfg);
+        enc.put_f32(self.start_radius);
+        enc.put_len(self.schedule.len());
+        for &r in &self.schedule {
+            enc.put_f32(r);
+        }
+        self.build.encode_into(enc);
+        enc.put_f64(self.build_seconds);
+        self.scene.encode_into(enc);
     }
 }
 

@@ -183,6 +183,106 @@ impl KdTree {
     pub fn is_empty(&self) -> bool {
         self.points.is_empty()
     }
+
+    /// Serialize the tree for a crash-safe snapshot. Lives here because
+    /// the node arena is private — the persist layer sees only bytes.
+    pub fn encode_into(&self, enc: &mut crate::persist::Enc) {
+        enc.put_u32(self.root);
+        enc.put_len(self.nodes.len());
+        for n in &self.nodes {
+            match n {
+                KdNode::Leaf { first, count } => {
+                    enc.put_u8(0);
+                    enc.put_u32(*first);
+                    enc.put_u32(*count);
+                }
+                KdNode::Split { axis, value, left, right } => {
+                    enc.put_u8(1);
+                    enc.put_u8(*axis);
+                    enc.put_f32(*value);
+                    enc.put_u32(*left);
+                    enc.put_u32(*right);
+                }
+            }
+        }
+        enc.put_len(self.order.len());
+        for &i in &self.order {
+            enc.put_u32(i);
+        }
+        enc.put_len(self.points.len());
+        for p in &self.points {
+            enc.put_f32(p.x);
+            enc.put_f32(p.y);
+            enc.put_f32(p.z);
+        }
+    }
+
+    /// Decode a tree written by [`KdTree::encode_into`], re-validating
+    /// every index (root, split children, leaf ranges, leaf-order ids)
+    /// so corrupt payloads become typed errors instead of later panics.
+    pub fn decode_from(
+        dec: &mut crate::persist::Dec<'_>,
+    ) -> Result<KdTree, crate::persist::PersistError> {
+        use crate::persist::PersistError;
+        let corrupt = |detail: String| PersistError::Corrupt { what: "kdtree", detail };
+        let root = dec.get_u32()?;
+        let n_nodes = dec.get_len()?;
+        let mut nodes = Vec::with_capacity(n_nodes);
+        for i in 0..n_nodes {
+            match dec.get_u8()? {
+                0 => nodes.push(KdNode::Leaf { first: dec.get_u32()?, count: dec.get_u32()? }),
+                1 => nodes.push(KdNode::Split {
+                    axis: dec.get_u8()?,
+                    value: dec.get_f32()?,
+                    left: dec.get_u32()?,
+                    right: dec.get_u32()?,
+                }),
+                t => return Err(corrupt(format!("node {i} has unknown tag {t}"))),
+            }
+        }
+        let n_order = dec.get_len()?;
+        let mut order = Vec::with_capacity(n_order);
+        for _ in 0..n_order {
+            order.push(dec.get_u32()?);
+        }
+        let n_points = dec.get_len()?;
+        let mut points = Vec::with_capacity(n_points);
+        for _ in 0..n_points {
+            points.push(Point3::new(dec.get_f32()?, dec.get_f32()?, dec.get_f32()?));
+        }
+        if order.len() != points.len() {
+            return Err(corrupt(format!(
+                "{} order entries for {} points",
+                order.len(),
+                points.len()
+            )));
+        }
+        if order.iter().any(|&i| i as usize >= points.len()) {
+            return Err(corrupt("leaf-order id out of range".to_string()));
+        }
+        if !points.is_empty() && root as usize >= nodes.len() {
+            return Err(corrupt(format!("root {root} outside {} nodes", nodes.len())));
+        }
+        for (i, n) in nodes.iter().enumerate() {
+            match n {
+                KdNode::Leaf { first, count } => {
+                    let end = (*first as usize).checked_add(*count as usize);
+                    if end.is_none() || end.unwrap_or(usize::MAX) > order.len() {
+                        return Err(corrupt(format!("leaf {i} range outside order")));
+                    }
+                }
+                KdNode::Split { axis, left, right, .. } => {
+                    if *axis > 2
+                        || *left as usize >= nodes.len()
+                        || *right as usize >= nodes.len()
+                    {
+                        return Err(corrupt(format!("split {i} has out-of-range fields")));
+                    }
+                }
+            }
+        }
+        Ok(KdTree { nodes, order, points, root })
+    }
 }
 
 #[cfg(test)]

@@ -53,6 +53,33 @@
 //! the unsharded index at any shard count, while the route's batches
 //! spread across `min(shards, pool)` workers.
 //!
+//! # Durability model
+//!
+//! The service can run crash-safe ([`persist`],
+//! `coordinator::PersistConfig`): an accepted insert is appended to a
+//! checksummed write-ahead log **before** it becomes visible to
+//! queries, and built indexes are snapshotted to a versioned,
+//! checksummed `TKSN` container via temp-file + fsync + atomic rename.
+//! What is durable when:
+//!
+//! - **At insert acknowledgement** — the insert's WAL record has been
+//!   written (and fsynced when `wal_group_commit == 1`). With a group
+//!   commit window of `n`, up to the last `n - 1` acknowledged inserts
+//!   may be lost to a *power* failure; a process crash loses nothing.
+//! - **At snapshot watermark `w`** — every insert with WAL sequence
+//!   `≤ w` is inside the snapshot payload; cold start loads the newest
+//!   valid snapshot and replays only records past `w`, in sequence
+//!   order.
+//! - **At clean shutdown** — queues drain, the WAL is fsynced, and a
+//!   final snapshot is written, so the next start replays zero records.
+//!
+//! Recovery never serves from a partially-trusted file: any checksum,
+//! version, or config-fingerprint mismatch rejects the whole snapshot
+//! (`snapshot_corrupt` metric) and falls back to the deterministic
+//! rebuild from base data + full WAL (`rebuilt`), which is
+//! bitwise-identical to a never-crashed service by the determinism
+//! contract. A torn WAL tail is truncated at the last intact record.
+//!
 //! ## Migrating from the free functions
 //!
 //! The historical one-shot entry points remain as shims over the trait;
@@ -96,8 +123,12 @@
 //! * `truncating-id-cast` — id arithmetic never truncates through
 //!   bare `as u32`/`as usize` in merge/remap paths; widening goes
 //!   through checked helpers.
-//! * `pub-missing-docs` — the `index`/`shard`/`coordinator` public API
-//!   documents its contracts.
+//! * `pub-missing-docs` — the `index`/`shard`/`coordinator`/`persist`
+//!   public API documents its contracts.
+//! * `io-unwrap-in-persist` — filesystem results in `persist/` and the
+//!   coordinator recovery paths are corruption signals that must reach
+//!   the rebuild fallback as typed errors, never `unwrap`/`expect`
+//!   sites.
 //!
 //! `cargo run --release -- lint` exits with the finding count; the CI
 //! `determinism-lint` job and `tests/lint_suite.rs` both gate on zero.
@@ -116,6 +147,7 @@ pub mod rt;
 pub mod knn;
 pub mod index;
 pub mod shard;
+pub mod persist;
 pub mod runtime;
 pub mod coordinator;
 pub mod bench;

@@ -6,7 +6,8 @@
 //! trueknn exp       regenerate a paper table/figure (table1|fig6|...)
 //! trueknn runtime   inspect/smoke-test the PJRT artifacts
 //! trueknn serve     run the batching query service demo (worker pool)
-//! trueknn bench     perf microbenches, writes BENCH_PR2/.../PR7.json
+//! trueknn snapshot  build/validate an offline checksummed index snapshot
+//! trueknn bench     perf microbenches, writes BENCH_PR2/.../PR8.json
 //! trueknn lint      determinism-contract analyzer (exit = finding count)
 //! ```
 
@@ -26,6 +27,7 @@ fn main() {
         Some("exp") => dispatch(cmd_exp(), &argv[1..], run_exp),
         Some("runtime") => dispatch(cmd_runtime(), &argv[1..], run_runtime),
         Some("serve") => dispatch(cmd_serve(), &argv[1..], run_serve),
+        Some("snapshot") => dispatch(cmd_snapshot(), &argv[1..], run_snapshot),
         Some("bench") => dispatch(cmd_bench(), &argv[1..], run_bench),
         // lint bypasses dispatch(): its exit code is the finding count,
         // not the 0/1 ok/error convention
@@ -51,7 +53,8 @@ fn print_usage() {
     println!("  exp      regenerate a paper table/figure");
     println!("  runtime  inspect the PJRT artifacts");
     println!("  serve    run the batching query service demo (worker pool)");
-    println!("  bench    perf microbenches (BENCH_PR2/.../PR7.json)");
+    println!("  snapshot build an index offline into a checksummed snapshot blob");
+    println!("  bench    perf microbenches (BENCH_PR2/.../PR8.json)");
     println!("  lint     determinism-contract analyzer (exit code = finding count)");
     println!("run `trueknn <command> --help` for options");
 }
@@ -429,6 +432,16 @@ fn cmd_serve() -> Command {
             "spatial shards for the RT route's dataset (1 = unsharded)",
             "1",
         )
+        .opt(
+            "data-dir",
+            "enable crash-safe persistence (WAL + snapshots) in this directory",
+            "",
+        )
+        .opt(
+            "snapshot-interval",
+            "inserts between index snapshots (0 = only at clean shutdown)",
+            "0",
+        )
         .flag("pjrt", "use the PJRT brute path when routed")
 }
 
@@ -472,12 +485,29 @@ fn run_serve(a: &Args) -> Result<(), String> {
     }
     .max(1);
     // the fault-injection CI leg (and curious operators) can arm a
-    // seeded plan end-to-end; unset, the plan stays inert
-    if let Some(seed) = trueknn::faults::FaultPlan::env_seed() {
+    // seeded plan end-to-end; unset, the plan stays inert. The checked
+    // parse makes a malformed seed a hard error instead of a silently
+    // disarmed plan.
+    if let Some(seed) =
+        trueknn::cli::env_parse::<u64>("TRUEKNN_FAULT_SEED").map_err(|e| e.to_string())?
+    {
         let pool = if cfg.workers == 0 { 2 } else { cfg.workers };
         cfg.faults = trueknn::faults::FaultPlan::seeded(seed, pool);
         log_info!("fault injection armed: TRUEKNN_FAULT_SEED={seed}");
     }
+    let data_dir = a.get_str("data-dir", "");
+    if !data_dir.is_empty() {
+        let mut pc = trueknn::coordinator::PersistConfig::at(&data_dir);
+        pc.snapshot_interval = a
+            .get_parse("snapshot-interval", 0)
+            .map_err(|e| e.to_string())?;
+        log_info!(
+            "crash-safe persistence at {data_dir} (snapshot interval {})",
+            pc.snapshot_interval
+        );
+        cfg.persist = Some(pc);
+    }
+    let persist_on = cfg.persist.is_some();
     let (svc, handle) = Service::start(ds.points.clone(), cfg);
 
     let sw = trueknn::util::Stopwatch::start();
@@ -528,6 +558,13 @@ fn run_serve(a: &Args) -> Result<(), String> {
         "recovery: restarts={} replays={} deadline_misses={} poisoned={}",
         m.restarts, m.replays, m.deadline_misses, m.poisoned
     );
+    // the durability story: what cold start found on disk this run
+    if persist_on {
+        println!(
+            "durability: recovered={} rebuilt={} wal_replayed={} snapshot_corrupt={}",
+            m.recovered, m.rebuilt, m.wal_replayed, m.snapshot_corrupt
+        );
+    }
     // sharded RT route: where each shard's structure work and traffic went
     if !m.shard_builds.is_empty() {
         let per: Vec<String> = m
@@ -547,6 +584,124 @@ fn run_serve(a: &Args) -> Result<(), String> {
         );
     }
     svc.shutdown();
+    Ok(())
+}
+
+// -------------------------------------------------------------- snapshot
+
+fn cmd_snapshot() -> Command {
+    Command::new(
+        "snapshot",
+        "build an index offline and write (or validate) a checksummed snapshot blob",
+    )
+    .opt("dataset", "road|taxi|lidar|iono|uniform", "taxi")
+    .opt("input", "CSV file instead of a generator", "")
+    .opt("n", "number of points", "10000")
+    .opt("seed", "PRNG seed", "42")
+    .opt("algo", "trueknn|baseline|rtnn|kdtree|brute|pjrt", "trueknn")
+    .opt("k", "neighbors for the fixed-radius rule (baseline/rtnn only)", "5")
+    .opt("shards", "spatial shards inside the snapshot (1 = unsharded)", "1")
+    .opt("threads", "build worker threads (0 = all cores)", "0")
+    .opt("out", "output snapshot path", "")
+    .opt("check", "validate an existing snapshot blob instead of building", "")
+}
+
+/// `trueknn snapshot`: the offline snapshot builder. A build farm can
+/// produce checksummed index blobs ahead of time and ship them to
+/// serving hosts, whose cold start then skips the full rebuild — the
+/// same [`IndexBuilder::load`] fences (section + container CRCs, format
+/// version, config fingerprint) guard the hand-off. `--check` instead
+/// re-validates an existing blob under the current flags; it must be
+/// invoked with the same dataset/config flags as the build, because the
+/// seed (and, for the fixed-radius backends, the derived radius)
+/// participates in the fingerprint.
+fn run_snapshot(a: &Args) -> Result<(), String> {
+    use trueknn::faults::{FaultPlan, IoTarget};
+
+    let backend: Backend = a.get_str("algo", "trueknn").parse()?;
+    let k: usize = a.get_parse("k", 5).map_err(|e| e.to_string())?;
+    let ds = load_dataset(a)?;
+    let mut cfg = IndexConfig {
+        seed: a.get_parse("seed", 42).map_err(|e| e.to_string())?,
+        threads: a.get_parse("threads", 0).map_err(|e| e.to_string())?,
+        shards: a.get_parse("shards", 1).map_err(|e| e.to_string())?,
+        ..Default::default()
+    };
+    cfg.shards = cfg.shards.max(1);
+    if matches!(backend, Backend::FixedRadius | Backend::Rtnn) {
+        // the fixed-radius baselines carry their search radius in the
+        // config fingerprint, so build and check both derive it the same
+        // deterministic way the `knn` command does (maxDist rule)
+        let prof = trueknn::dataset::DistanceProfile::compute(&ds, k);
+        cfg.radius = Some((prof.percentile_dist(100.0) * 1.0001) as f32);
+    }
+    let make = || IndexBuilder::new(backend).config(cfg.clone());
+
+    let check = a.get_str("check", "");
+    if !check.is_empty() {
+        let bytes = std::fs::read(&check).map_err(|e| format!("reading {check}: {e}"))?;
+        let (ix, watermark) = make().load(&bytes).map_err(|e| e.to_string())?;
+        log_info!(
+            "{check}: valid {} snapshot ({} bytes) — {} points, watermark {watermark}",
+            ix.backend().name(),
+            bytes.len(),
+            ix.len()
+        );
+        log_info!("config fingerprint {:#018x}", make().fingerprint());
+        return Ok(());
+    }
+
+    let out = a.get_str("out", "");
+    if out.is_empty() {
+        return Err("--out is required (or pass --check to validate a blob)".into());
+    }
+    let sw = trueknn::util::Stopwatch::start();
+    let mut index = make().try_build(ds.points.clone()).map_err(|e| e.to_string())?;
+    let build_s = sw.elapsed_secs();
+    let bytes = make().snapshot(index.as_ref(), 0);
+
+    // prove the blob round-trips before publishing it: a build farm must
+    // never ship a snapshot that fails its own validation, and the
+    // reload must answer bitwise-identically to the index it came from
+    let (mut reloaded, _) = make().load(&bytes).map_err(|e| e.to_string())?;
+    let probes = &ds.points[..ds.len().min(16)];
+    let pk = k.clamp(1, ds.len().saturating_sub(1).max(1));
+    let want = index.knn(probes, pk);
+    let got = reloaded.knn(probes, pk);
+    let identical = want.neighbors.len() == got.neighbors.len()
+        && want.neighbors.iter().zip(&got.neighbors).all(|(x, y)| {
+            x.len() == y.len()
+                && x.iter()
+                    .zip(y)
+                    .all(|(p, q)| p.idx == q.idx && p.dist.to_bits() == q.dist.to_bits())
+        });
+    if !identical {
+        return Err("reloaded snapshot answered differently from the index it came from".into());
+    }
+
+    // same crash-safe discipline as the service's snapshot writer: temp
+    // sibling + fsync + atomic rename, so a crash mid-write can never
+    // leave a half-written blob under the published name
+    trueknn::persist::atomic_write(
+        std::path::Path::new(&out),
+        &bytes,
+        &FaultPlan::inert(),
+        IoTarget::Snapshot,
+        0,
+    )
+    .map_err(|e| e.to_string())?;
+    log_info!(
+        "wrote {out}: {} bytes, {} {} points in {} shard(s), built in {build_s:.3}s",
+        bytes.len(),
+        index.len(),
+        backend.name(),
+        cfg.shards
+    );
+    log_info!(
+        "config fingerprint {:#018x}; reload verified bitwise on {} probe queries",
+        make().fingerprint(),
+        probes.len()
+    );
     Ok(())
 }
 
@@ -608,7 +763,7 @@ fn run_lint(argv: &[String]) -> i32 {
 fn cmd_bench() -> Command {
     Command::new(
         "bench",
-        "perf microbenches: launch throughput + shell re-query (PR2), SoA leaf loop + cohort scheduling + round bookkeeping (PR3), worker-pool serving throughput (PR4), sharded hot-route throughput (PR5), determinism-lint gate cost (PR6), supervised recovery cost (PR7)",
+        "perf microbenches: launch throughput + shell re-query (PR2), SoA leaf loop + cohort scheduling + round bookkeeping (PR3), worker-pool serving throughput (PR4), sharded hot-route throughput (PR5), determinism-lint gate cost (PR6), supervised recovery cost (PR7), crash-safe persistence cost (PR8)",
     )
     .opt("n", "points for the launch-throughput bench", "100000")
     .opt("shell-n", "points for the TrueKNN shell/round bench", "20000")
@@ -622,6 +777,7 @@ fn cmd_bench() -> Command {
     .opt("pr5-out", "PR5 output JSON path", "BENCH_PR5.json")
     .opt("pr6-out", "PR6 output JSON path", "BENCH_PR6.json")
     .opt("pr7-out", "PR7 output JSON path", "BENCH_PR7.json")
+    .opt("pr8-out", "PR8 output JSON path", "BENCH_PR8.json")
 }
 
 fn run_bench(a: &Args) -> Result<(), String> {
@@ -637,6 +793,7 @@ fn run_bench(a: &Args) -> Result<(), String> {
     let pr5_out = a.get_str("pr5-out", "BENCH_PR5.json");
     let pr6_out = a.get_str("pr6-out", "BENCH_PR6.json");
     let pr7_out = a.get_str("pr7-out", "BENCH_PR7.json");
+    let pr8_out = a.get_str("pr8-out", "BENCH_PR8.json");
 
     let report = trueknn::bench::pr2::run(n, shell_n, iters);
     trueknn::bench::pr2::render(&report).print();
@@ -703,5 +860,14 @@ fn run_bench(a: &Args) -> Result<(), String> {
     std::fs::write(&pr7_out, trueknn::bench::pr7::to_json(&pr7).to_string())
         .map_err(|e| e.to_string())?;
     log_info!("wrote {pr7_out}");
+
+    let pr8 = trueknn::bench::pr8::run(&[2_000, 8_000, serve_n], iters);
+    trueknn::bench::pr8::render(&pr8).print();
+    if !pr8.results_match {
+        return Err("a loaded snapshot answered differently from its original index".into());
+    }
+    std::fs::write(&pr8_out, trueknn::bench::pr8::to_json(&pr8).to_string())
+        .map_err(|e| e.to_string())?;
+    log_info!("wrote {pr8_out}");
     Ok(())
 }

@@ -1,0 +1,218 @@
+//! Little-endian byte codec for the snapshot and WAL payloads: a
+//! growing encoder ([`Enc`]) and a bounds-checked cursor decoder
+//! ([`Dec`]). All multi-byte values are little-endian; floats travel as
+//! their IEEE-754 bit patterns, so a round trip is bitwise exact
+//! (including NaN payloads and signed zeros).
+
+use super::PersistError;
+
+/// Append-only little-endian encoder over a growing byte buffer.
+#[derive(Default)]
+pub struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    /// An empty encoder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append one byte.
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Append a `u32` (little-endian).
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a `u64` (little-endian).
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append an `f32` as its bit pattern (bitwise-exact round trip).
+    pub fn put_f32(&mut self, v: f32) {
+        self.put_u32(v.to_bits());
+    }
+
+    /// Append an `f64` as its bit pattern (bitwise-exact round trip).
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    /// Append a collection length as a `u64` (usize widths differ
+    /// across hosts; a snapshot must not).
+    pub fn put_len(&mut self, n: usize) {
+        self.put_u64(n as u64);
+    }
+
+    /// Append raw bytes verbatim (no length prefix).
+    pub fn put_bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    /// Bytes encoded so far.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when nothing has been encoded.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Consume the encoder, yielding its buffer.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Bounds-checked little-endian cursor over a byte slice. Every getter
+/// returns [`PersistError::Corrupt`] instead of panicking when the
+/// slice runs out — a truncated payload is a data problem, not a bug.
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    /// A cursor at the start of `buf`.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Dec { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// True when every byte has been consumed (decoders check this to
+    /// reject payloads with trailing garbage).
+    pub fn finished(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], PersistError> {
+        if self.remaining() < n {
+            return Err(PersistError::Corrupt {
+                what: "payload",
+                detail: format!(
+                    "needed {n} bytes at offset {}, only {} remain",
+                    self.pos,
+                    self.remaining()
+                ),
+            });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Read one byte.
+    pub fn get_u8(&mut self) -> Result<u8, PersistError> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Read a `u32` (little-endian).
+    pub fn get_u32(&mut self) -> Result<u32, PersistError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// Read a `u64` (little-endian).
+    pub fn get_u64(&mut self) -> Result<u64, PersistError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    /// Read an `f32` from its bit pattern.
+    pub fn get_f32(&mut self) -> Result<f32, PersistError> {
+        Ok(f32::from_bits(self.get_u32()?))
+    }
+
+    /// Read an `f64` from its bit pattern.
+    pub fn get_f64(&mut self) -> Result<f64, PersistError> {
+        Ok(f64::from_bits(self.get_u64()?))
+    }
+
+    /// Read a collection length written by [`Enc::put_len`], checked
+    /// against both `usize` range and the bytes actually remaining (an
+    /// element is at least one byte, so a length beyond `remaining` is
+    /// structurally impossible and rejected before any allocation).
+    pub fn get_len(&mut self) -> Result<usize, PersistError> {
+        let v = self.get_u64()?;
+        let n = usize::try_from(v).map_err(|_| PersistError::Corrupt {
+            what: "length",
+            detail: format!("{v} overflows usize"),
+        })?;
+        if n > self.remaining() {
+            return Err(PersistError::Corrupt {
+                what: "length",
+                detail: format!("{n} elements with only {} bytes left", self.remaining()),
+            });
+        }
+        Ok(n)
+    }
+
+    /// Read `n` raw bytes.
+    pub fn get_bytes(&mut self, n: usize) -> Result<&'a [u8], PersistError> {
+        self.take(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_is_bitwise_exact() {
+        let mut e = Enc::new();
+        e.put_u8(7);
+        e.put_u32(0xDEAD_BEEF);
+        e.put_u64(u64::MAX - 1);
+        e.put_f32(-0.0);
+        e.put_f32(f32::NAN);
+        e.put_f64(std::f64::consts::PI);
+        e.put_len(3);
+        e.put_bytes(b"xyz");
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        assert_eq!(d.get_u8().unwrap(), 7);
+        assert_eq!(d.get_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(d.get_u64().unwrap(), u64::MAX - 1);
+        assert_eq!(d.get_f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert!(d.get_f32().unwrap().is_nan());
+        assert_eq!(d.get_f64().unwrap(), std::f64::consts::PI);
+        let n = d.get_len().unwrap();
+        assert_eq!(d.get_bytes(n).unwrap(), b"xyz");
+        assert!(d.finished());
+    }
+
+    #[test]
+    fn truncated_reads_are_typed_errors_not_panics() {
+        let bytes = [1u8, 2, 3];
+        let mut d = Dec::new(&bytes);
+        assert!(d.get_u32().is_err());
+        // the failed read consumed nothing
+        assert_eq!(d.remaining(), 3);
+        assert_eq!(d.get_u8().unwrap(), 1);
+    }
+
+    #[test]
+    fn absurd_lengths_are_rejected_before_allocation() {
+        let mut e = Enc::new();
+        e.put_u64(u64::MAX);
+        let bytes = e.into_bytes();
+        assert!(matches!(
+            Dec::new(&bytes).get_len(),
+            Err(PersistError::Corrupt { what: "length", .. })
+        ));
+        let mut e = Enc::new();
+        e.put_len(10); // 10 "elements" but zero payload bytes follow
+        let bytes = e.into_bytes();
+        assert!(Dec::new(&bytes).get_len().is_err());
+    }
+}

@@ -1,0 +1,328 @@
+//! Crash-safe persistence: checksummed index snapshots and the durable
+//! insert write-ahead log (std-only).
+//!
+//! This layer exists so a crashed or redeployed service recovers to a
+//! **bitwise-identical** serving state without re-building acceleration
+//! structures from raw points (the cost the paper's whole amortization
+//! argument is about). Two artifacts, two trust models:
+//!
+//! - **Snapshots** ([`snapshot`]) — one contiguous `TKSN` container per
+//!   built index: magic + format version + config fingerprint +
+//!   sequence watermark + an offset-table manifest over checksummed
+//!   sections, closed by a whole-file CRC32. The arena `Vec`s inside an
+//!   index are already contiguous deterministic-preorder layouts, so a
+//!   load is a sequential read + reconstruction, not a rebuild.
+//!   Snapshots are written via temp-file + fsync + atomic rename
+//!   ([`atomic_write`]) and are **never partially trusted**: any
+//!   checksum, version, or fingerprint mismatch rejects the whole file
+//!   and the caller falls back to a deterministic rebuild.
+//! - **The WAL** ([`wal`]) — an append-only log of every accepted
+//!   insert, written *before* the in-memory broadcast. Records are
+//!   length-prefixed, checksummed, and carry a contiguous sequence
+//!   number; a torn tail (crash mid-append) is detected and truncated
+//!   on open. The snapshot's watermark fences replay: records past it
+//!   are re-applied in sequence order, records at or below it are
+//!   already inside the snapshot.
+//!
+//! Integrity primitives are std-only: [`crc32`] (IEEE, const-generated
+//! table) for payload checksums and [`Fnv64`] for the config
+//! fingerprint. Seeded I/O faults ([`crate::faults::IoFault`]) are
+//! applied *inside* [`atomic_write`] / [`read_file`] / the WAL append,
+//! so torn-write/short-read/flip-a-byte scenarios corrupt exactly the
+//! bytes a real fault would.
+//!
+//! Everything here propagates [`PersistError`]; the `io-unwrap-in-persist`
+//! lint rule statically rejects `unwrap`/`expect` on I/O results in this
+//! module and the coordinator's recovery paths.
+
+mod codec;
+/// The versioned, checksummed snapshot container (`TKSN` blobs).
+pub mod snapshot;
+/// The durable, length-prefixed, checksummed insert log.
+pub mod wal;
+
+pub use codec::{Dec, Enc};
+pub use snapshot::{Snapshot, SnapshotWriter, FORMAT_VERSION, SEC_INDEX, SEC_PARTITION};
+pub use wal::{Wal, WalRecord};
+
+use crate::faults::{FaultPlan, IoTarget};
+use std::fs::{self, File};
+use std::io::Write;
+use std::path::Path;
+
+/// Why a persistence operation failed: an I/O error on a named
+/// operation, or a trust failure (corruption, stale format, foreign
+/// config) that must send the caller down the rebuild path.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PersistError {
+    /// The underlying filesystem operation failed.
+    Io {
+        /// Which operation (`"create"`, `"write"`, `"sync"`, …).
+        op: &'static str,
+        /// The OS error, stringified (kept `Clone`/`Eq` for the
+        /// coordinator's typed-error plumbing).
+        detail: String,
+    },
+    /// The bytes failed structural validation or a checksum.
+    Corrupt {
+        /// Which structure was being decoded.
+        what: &'static str,
+        /// Human-readable mismatch description.
+        detail: String,
+    },
+    /// The container was written by a different format version.
+    VersionMismatch {
+        /// Version found in the file.
+        found: u32,
+        /// Version this build reads.
+        expected: u32,
+    },
+    /// The container was built under a different result-affecting
+    /// configuration (backend or `IndexConfig` fields).
+    FingerprintMismatch {
+        /// Fingerprint found in the file.
+        found: u64,
+        /// Fingerprint of the loading configuration.
+        expected: u64,
+    },
+}
+
+impl std::fmt::Display for PersistError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PersistError::Io { op, detail } => write!(f, "persist i/o failure in {op}: {detail}"),
+            PersistError::Corrupt { what, detail } => {
+                write!(f, "corrupt {what}: {detail}")
+            }
+            PersistError::VersionMismatch { found, expected } => {
+                write!(f, "snapshot format version {found} (this build reads {expected})")
+            }
+            PersistError::FingerprintMismatch { found, expected } => {
+                write!(
+                    f,
+                    "snapshot config fingerprint {found:#018x} does not match {expected:#018x}"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for PersistError {}
+
+/// Wrap an [`std::io::Error`] with the operation it interrupted.
+pub(crate) fn io_err(op: &'static str, e: std::io::Error) -> PersistError {
+    PersistError::Io { op, detail: e.to_string() }
+}
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC32_TABLE: [u32; 256] = crc32_table();
+
+/// CRC32 (IEEE 802.3 polynomial) over `bytes` — the per-section and
+/// whole-file checksum of the snapshot container and the per-record
+/// checksum of the WAL.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+/// Incremental FNV-1a (64-bit) hasher: the config fingerprint that
+/// fences a snapshot to the exact result-affecting configuration it was
+/// built under.
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv64(u64);
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv64 {
+    /// A hasher at the FNV-1a offset basis.
+    pub fn new() -> Self {
+        Fnv64(0xcbf2_9ce4_8422_2325)
+    }
+
+    /// Fold `bytes` into the hash.
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    /// Fold a `u64` (little-endian bytes) into the hash.
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    /// Fold an `f32` (bit pattern) into the hash.
+    pub fn write_f32(&mut self, v: f32) {
+        self.write(&v.to_bits().to_le_bytes());
+    }
+
+    /// The current hash value.
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Write `bytes` to `path` crash-safely: temp file in the same
+/// directory, `write_all` + `sync_all`, then atomic rename over the
+/// destination. Scheduled faults for `target` are applied to the bytes
+/// first (a flipped byte, then a torn truncation at write op `op`) —
+/// simulating a non-atomic storage layer so the *reader's* corruption
+/// detection can be exercised end to end.
+pub fn atomic_write(
+    path: &Path,
+    bytes: &[u8],
+    faults: &FaultPlan,
+    target: IoTarget,
+    op: u64,
+) -> Result<(), PersistError> {
+    let mut corrupted: Vec<u8>;
+    let mut data: &[u8] = bytes;
+    if faults.flip_byte(target).is_some() || faults.torn_write(target, op).is_some() {
+        corrupted = bytes.to_vec();
+        if let Some(at) = faults.flip_byte(target) {
+            if !corrupted.is_empty() {
+                let i = at % corrupted.len();
+                corrupted[i] ^= 0x01;
+            }
+        }
+        if let Some(keep) = faults.torn_write(target, op) {
+            corrupted.truncate(keep);
+        }
+        data = &corrupted;
+    }
+    let tmp = tmp_sibling(path);
+    let mut f = File::create(&tmp).map_err(|e| io_err("create", e))?;
+    f.write_all(data).map_err(|e| io_err("write", e))?;
+    f.sync_all().map_err(|e| io_err("sync", e))?;
+    drop(f);
+    fs::rename(&tmp, path).map_err(|e| io_err("rename", e))?;
+    // best-effort directory sync: the rename is durable on its own for
+    // the contents; losing the *name* on power loss degrades to the
+    // rebuild path, which is always correct
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+/// The temp-file name `atomic_write` stages under: a `.tmp`-suffixed
+/// sibling (same directory, so the rename is atomic on every sane
+/// filesystem). One writer per path by construction — each snapshot
+/// path is owned by exactly one worker.
+fn tmp_sibling(path: &Path) -> std::path::PathBuf {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// Read a whole file, applying any scheduled short-read fault for
+/// `target` (the returned bytes are truncated to the fault's `keep`).
+pub fn read_file(path: &Path, faults: &FaultPlan, target: IoTarget) -> Result<Vec<u8>, PersistError> {
+    let mut bytes = fs::read(path).map_err(|e| io_err("read", e))?;
+    if let Some(keep) = faults.short_read(target) {
+        bytes.truncate(keep);
+    }
+    Ok(bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // the standard IEEE check values
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn crc32_detects_any_single_byte_change() {
+        let data: Vec<u8> = (0..255u8).collect();
+        let base = crc32(&data);
+        for i in 0..data.len() {
+            let mut mutated = data.clone();
+            mutated[i] ^= 0x01;
+            assert_ne!(crc32(&mutated), base, "flip at {i} went undetected");
+        }
+    }
+
+    #[test]
+    fn fnv64_is_order_sensitive_and_stable() {
+        let mut a = Fnv64::new();
+        a.write(b"ab");
+        let mut b = Fnv64::new();
+        b.write(b"ba");
+        assert_ne!(a.finish(), b.finish());
+        // FNV-1a 64 reference value for "a"
+        let mut c = Fnv64::new();
+        c.write(b"a");
+        assert_eq!(c.finish(), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn atomic_write_round_trips_and_replaces() {
+        let dir = std::env::temp_dir()
+            .join(format!("trueknn-persist-unit-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("blob.bin");
+        let inert = FaultPlan::inert();
+        atomic_write(&path, b"first", &inert, IoTarget::Snapshot, 1).unwrap();
+        assert_eq!(read_file(&path, &inert, IoTarget::Snapshot).unwrap(), b"first");
+        atomic_write(&path, b"second", &inert, IoTarget::Snapshot, 2).unwrap();
+        assert_eq!(read_file(&path, &inert, IoTarget::Snapshot).unwrap(), b"second");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn io_faults_corrupt_writes_and_reads() {
+        let dir = std::env::temp_dir()
+            .join(format!("trueknn-persist-faults-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("blob.bin");
+        let inert = FaultPlan::inert();
+        // torn write keeps a prefix
+        let torn = FaultPlan::inert().with_torn_write(IoTarget::Snapshot, 1, 3);
+        atomic_write(&path, b"abcdef", &torn, IoTarget::Snapshot, 1).unwrap();
+        assert_eq!(read_file(&path, &inert, IoTarget::Snapshot).unwrap(), b"abc");
+        // ...but only at its scheduled op
+        atomic_write(&path, b"abcdef", &torn, IoTarget::Snapshot, 2).unwrap();
+        assert_eq!(read_file(&path, &inert, IoTarget::Snapshot).unwrap(), b"abcdef");
+        // flipped byte lands in the file
+        let flip = FaultPlan::inert().with_flip_byte(IoTarget::Snapshot, 1);
+        atomic_write(&path, b"abcdef", &flip, IoTarget::Snapshot, 1).unwrap();
+        assert_eq!(read_file(&path, &inert, IoTarget::Snapshot).unwrap(), b"accdef");
+        // short read truncates without touching the file
+        atomic_write(&path, b"abcdef", &inert, IoTarget::Snapshot, 1).unwrap();
+        let short = FaultPlan::inert().with_short_read(IoTarget::Snapshot, 2);
+        assert_eq!(read_file(&path, &short, IoTarget::Snapshot).unwrap(), b"ab");
+        assert_eq!(read_file(&path, &inert, IoTarget::Snapshot).unwrap(), b"abcdef");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,342 @@
+//! The durable insert write-ahead log: length-prefixed, checksummed,
+//! sequence-fenced records, appended **before** the in-memory insert
+//! broadcast so no acknowledged insert can be lost to a crash.
+//!
+//! Record wire format (little-endian):
+//!
+//! ```text
+//!   len  u32   payload bytes
+//!   seq  u64   contiguous, starting at 1
+//!   crc  u32   crc32(payload)
+//!   payload    count u32, then count × (x f32, y f32, z f32)
+//! ```
+//!
+//! [`Wal::open`] replays the file front to back and stops at the first
+//! record that is short, checksum-broken, or out of sequence — the
+//! **torn tail** a crash mid-append leaves behind — and truncates the
+//! file there, so the log is always well-formed after open. Everything
+//! past a tear is unrecoverable by construction (later appends landed
+//! behind a hole) and is deliberately dropped rather than guessed at.
+//!
+//! Group commit: `group_commit = n` fsyncs every `n`-th append
+//! (`1` = every append, the durable default). The window between
+//! appends and the next fsync is the only data a power loss may take;
+//! a process crash loses nothing (the OS holds the written bytes).
+
+use super::codec::{Dec, Enc};
+use super::{crc32, io_err, PersistError};
+use crate::faults::{FaultPlan, IoTarget};
+use crate::geom::Point3;
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::Path;
+
+/// Per-record header bytes: len u32 + seq u64 + crc u32.
+const HEADER: usize = 16;
+
+/// One replayed WAL record: the insert batch and its sequence number.
+pub struct WalRecord {
+    /// Contiguous record sequence number, starting at 1.
+    pub seq: u64,
+    /// The insert batch exactly as accepted.
+    pub points: Vec<Point3>,
+}
+
+/// An open write-ahead log: append-only handle plus the group-commit
+/// bookkeeping. Construct with [`Wal::open`], which also replays and
+/// repairs the existing file.
+pub struct Wal {
+    file: File,
+    next_seq: u64,
+    /// Appends since the last fsync.
+    pending: u64,
+    group_commit: u64,
+    /// 1-based append counter, the `op` coordinate of torn-write faults.
+    write_ops: u64,
+    faults: FaultPlan,
+}
+
+impl Wal {
+    /// Open (or create) the log at `path`, replay every intact record,
+    /// truncate any torn tail, and return the handle plus the replayed
+    /// records in sequence order. A scheduled short-read fault makes
+    /// the tail *appear* torn — the truncation then makes the loss
+    /// real, which is exactly the conservative behavior the recovery
+    /// contract wants (never serve from bytes that failed validation).
+    pub fn open(
+        path: &Path,
+        group_commit: u64,
+        faults: FaultPlan,
+    ) -> Result<(Wal, Vec<WalRecord>), PersistError> {
+        let mut bytes = match std::fs::read(path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+            Err(e) => return Err(io_err("read", e)),
+        };
+        if let Some(keep) = faults.short_read(IoTarget::Wal) {
+            bytes.truncate(keep);
+        }
+        let (records, valid_end) = replay(&bytes);
+        let file = OpenOptions::new()
+            .read(true)
+            .append(true)
+            .create(true)
+            .open(path)
+            .map_err(|e| io_err("open", e))?;
+        let disk_len = file.metadata().map_err(|e| io_err("metadata", e))?.len();
+        if (valid_end as u64) < disk_len {
+            file.set_len(valid_end as u64).map_err(|e| io_err("set_len", e))?;
+            file.sync_all().map_err(|e| io_err("sync", e))?;
+        }
+        let next_seq = records.last().map_or(1, |r| r.seq + 1);
+        let wal = Wal {
+            file,
+            next_seq,
+            pending: 0,
+            group_commit: group_commit.max(1),
+            write_ops: 0,
+            faults,
+        };
+        Ok((wal, records))
+    }
+
+    /// Append one insert batch; returns its sequence number. The write
+    /// hits the OS before this returns; it hits the *disk* by the next
+    /// group-commit fsync (immediately when `group_commit == 1`).
+    /// Scheduled WAL faults corrupt the record bytes here — a torn
+    /// write at this op persists only a prefix, so the tail of the log
+    /// (this record and anything appended after it) is lost at the next
+    /// open.
+    pub fn append(&mut self, points: &[Point3]) -> Result<u64, PersistError> {
+        let seq = self.next_seq;
+        let mut payload = Enc::new();
+        payload.put_u32(points.len() as u32);
+        for p in points {
+            payload.put_f32(p.x);
+            payload.put_f32(p.y);
+            payload.put_f32(p.z);
+        }
+        let payload = payload.into_bytes();
+        let mut rec = Enc::new();
+        rec.put_u32(payload.len() as u32);
+        rec.put_u64(seq);
+        rec.put_u32(crc32(&payload));
+        rec.put_bytes(&payload);
+        let mut bytes = rec.into_bytes();
+        self.write_ops += 1;
+        if let Some(at) = self.faults.flip_byte(IoTarget::Wal) {
+            if !bytes.is_empty() {
+                let i = at % bytes.len();
+                bytes[i] ^= 0x01;
+            }
+        }
+        if let Some(keep) = self.faults.torn_write(IoTarget::Wal, self.write_ops) {
+            bytes.truncate(keep);
+        }
+        self.file.write_all(&bytes).map_err(|e| io_err("write", e))?;
+        self.next_seq += 1;
+        self.pending += 1;
+        if self.pending >= self.group_commit {
+            self.sync()?;
+        }
+        Ok(seq)
+    }
+
+    /// Fsync any appends still in the group-commit window (no-op when
+    /// none are pending).
+    pub fn sync(&mut self) -> Result<(), PersistError> {
+        if self.pending > 0 {
+            self.file.sync_all().map_err(|e| io_err("sync", e))?;
+            self.pending = 0;
+        }
+        Ok(())
+    }
+
+    /// The sequence number the next append will carry.
+    pub fn next_seq(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// Records durably accepted so far (`next_seq - 1`).
+    pub fn record_count(&self) -> u64 {
+        self.next_seq - 1
+    }
+}
+
+/// Scan `bytes` front to back, yielding every intact record and the
+/// byte offset where the intact prefix ends (the truncation point for
+/// a torn tail).
+fn replay(bytes: &[u8]) -> (Vec<WalRecord>, usize) {
+    let mut records = Vec::new();
+    let mut pos = 0usize;
+    let mut expected_seq = 1u64;
+    while bytes.len() - pos >= HEADER {
+        let mut dec = Dec::new(&bytes[pos..]);
+        // header reads cannot fail: HEADER bytes were checked above
+        let (Ok(len), Ok(seq), Ok(crc)) = (dec.get_u32(), dec.get_u64(), dec.get_u32()) else {
+            break;
+        };
+        let len = len as usize;
+        let Some(end) = pos.checked_add(HEADER).and_then(|s| s.checked_add(len)) else {
+            break;
+        };
+        if end > bytes.len() {
+            break; // short record: torn tail
+        }
+        let payload = &bytes[pos + HEADER..end];
+        if crc32(payload) != crc || seq != expected_seq {
+            break; // corrupt or out-of-sequence: torn tail
+        }
+        let Ok(points) = decode_points(payload) else {
+            break;
+        };
+        records.push(WalRecord { seq, points });
+        pos = end;
+        expected_seq += 1;
+    }
+    (records, pos)
+}
+
+/// Decode one record payload: count-prefixed point triples, with the
+/// count cross-checked against the payload length.
+fn decode_points(payload: &[u8]) -> Result<Vec<Point3>, PersistError> {
+    let mut dec = Dec::new(payload);
+    let count = dec.get_u32()? as usize;
+    if payload.len() != 4 + count * 12 {
+        return Err(PersistError::Corrupt {
+            what: "wal record",
+            detail: format!("count {count} does not match {} payload bytes", payload.len()),
+        });
+    }
+    let mut points = Vec::with_capacity(count);
+    for _ in 0..count {
+        let x = dec.get_f32()?;
+        let y = dec.get_f32()?;
+        let z = dec.get_f32()?;
+        points.push(Point3::new(x, y, z));
+    }
+    Ok(points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn temp_wal(tag: &str) -> PathBuf {
+        static N: AtomicU64 = AtomicU64::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "trueknn-wal-unit-{}-{}-{}",
+            std::process::id(),
+            tag,
+            N.fetch_add(1, Ordering::SeqCst)
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join("wal.log")
+    }
+
+    fn pts(vals: &[f32]) -> Vec<Point3> {
+        vals.iter().map(|&v| Point3::new(v, v + 0.5, -v)).collect()
+    }
+
+    #[test]
+    fn append_then_reopen_replays_in_order() {
+        let path = temp_wal("roundtrip");
+        let (mut wal, initial) = Wal::open(&path, 1, FaultPlan::inert()).unwrap();
+        assert!(initial.is_empty());
+        assert_eq!(wal.append(&pts(&[1.0])).unwrap(), 1);
+        assert_eq!(wal.append(&pts(&[2.0, 3.0])).unwrap(), 2);
+        assert_eq!(wal.record_count(), 2);
+        drop(wal);
+        let (wal, records) = Wal::open(&path, 1, FaultPlan::inert()).unwrap();
+        assert_eq!(records.len(), 2);
+        assert_eq!(records[0].seq, 1);
+        assert_eq!(records[0].points, pts(&[1.0]));
+        assert_eq!(records[1].seq, 2);
+        assert_eq!(records[1].points, pts(&[2.0, 3.0]));
+        assert_eq!(wal.next_seq(), 3);
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn every_truncation_of_the_last_record_recovers_the_exact_prefix() {
+        let path = temp_wal("truncate");
+        let (mut wal, _) = Wal::open(&path, 1, FaultPlan::inert()).unwrap();
+        wal.append(&pts(&[1.0])).unwrap();
+        wal.append(&pts(&[2.0])).unwrap();
+        drop(wal);
+        let full = std::fs::read(&path).unwrap();
+        let first_len = full.len() / 2; // two identical-shape records
+        for cut in first_len..full.len() {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            let (wal, records) = Wal::open(&path, 1, FaultPlan::inert()).unwrap();
+            assert_eq!(records.len(), 1, "cut at {cut} must keep exactly record 1");
+            assert_eq!(records[0].points, pts(&[1.0]));
+            assert_eq!(wal.next_seq(), 2);
+            drop(wal);
+            // the torn tail was physically truncated
+            assert_eq!(std::fs::read(&path).unwrap().len(), first_len, "cut at {cut}");
+        }
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn appends_resume_after_a_tail_repair() {
+        let path = temp_wal("resume");
+        let (mut wal, _) = Wal::open(&path, 1, FaultPlan::inert()).unwrap();
+        wal.append(&pts(&[1.0])).unwrap();
+        wal.append(&pts(&[2.0])).unwrap();
+        drop(wal);
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 3]).unwrap();
+        let (mut wal, records) = Wal::open(&path, 1, FaultPlan::inert()).unwrap();
+        assert_eq!(records.len(), 1);
+        assert_eq!(wal.append(&pts(&[9.0])).unwrap(), 2, "seq continues past the repair");
+        drop(wal);
+        let (_, records) = Wal::open(&path, 1, FaultPlan::inert()).unwrap();
+        assert_eq!(records.len(), 2);
+        assert_eq!(records[1].points, pts(&[9.0]));
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn torn_and_flipped_appends_are_lost_on_reopen() {
+        // torn write on the 2nd append: record 2 never survives a reopen
+        let path = temp_wal("torn");
+        let plan = FaultPlan::inert().with_torn_write(IoTarget::Wal, 2, 7);
+        let (mut wal, _) = Wal::open(&path, 1, plan).unwrap();
+        wal.append(&pts(&[1.0])).unwrap();
+        wal.append(&pts(&[2.0])).unwrap(); // torn on disk
+        drop(wal);
+        let (_, records) = Wal::open(&path, 1, FaultPlan::inert()).unwrap();
+        assert_eq!(records.len(), 1);
+        assert_eq!(records[0].points, pts(&[1.0]));
+
+        // flipped byte: every record is corrupt, nothing replays
+        let path = temp_wal("flip");
+        let plan = FaultPlan::inert().with_flip_byte(IoTarget::Wal, 20);
+        let (mut wal, _) = Wal::open(&path, 1, plan).unwrap();
+        wal.append(&pts(&[1.0])).unwrap();
+        drop(wal);
+        let (_, records) = Wal::open(&path, 1, FaultPlan::inert()).unwrap();
+        assert!(records.is_empty());
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn group_commit_defers_the_sync_not_the_write() {
+        let path = temp_wal("group");
+        let (mut wal, _) = Wal::open(&path, 8, FaultPlan::inert()).unwrap();
+        for i in 0..5 {
+            wal.append(&pts(&[i as f32])).unwrap();
+        }
+        // a process crash (handle drop without sync) loses nothing: the
+        // bytes are in the OS already
+        drop(wal);
+        let (mut wal, records) = Wal::open(&path, 8, FaultPlan::inert()).unwrap();
+        assert_eq!(records.len(), 5);
+        wal.sync().unwrap();
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+}

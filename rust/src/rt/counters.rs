@@ -46,6 +46,40 @@ impl HwCounters {
         self.context_switches += o.context_switches;
     }
 
+    /// Serialize all ten counters (fixed field order) for a crash-safe
+    /// snapshot — counters are part of the determinism contract, so a
+    /// loaded index must report the build it didn't have to redo.
+    pub fn encode_into(&self, enc: &mut crate::persist::Enc) {
+        enc.put_u64(self.rays);
+        enc.put_u64(self.aabb_tests);
+        enc.put_u64(self.prim_tests);
+        enc.put_u64(self.hits);
+        enc.put_u64(self.heap_pushes);
+        enc.put_u64(self.builds);
+        enc.put_u64(self.build_prims);
+        enc.put_u64(self.refits);
+        enc.put_u64(self.refit_nodes);
+        enc.put_u64(self.context_switches);
+    }
+
+    /// Decode counters written by [`HwCounters::encode_into`].
+    pub fn decode_from(
+        dec: &mut crate::persist::Dec<'_>,
+    ) -> Result<HwCounters, crate::persist::PersistError> {
+        Ok(HwCounters {
+            rays: dec.get_u64()?,
+            aabb_tests: dec.get_u64()?,
+            prim_tests: dec.get_u64()?,
+            hits: dec.get_u64()?,
+            heap_pushes: dec.get_u64()?,
+            builds: dec.get_u64()?,
+            build_prims: dec.get_u64()?,
+            refits: dec.get_u64()?,
+            refit_nodes: dec.get_u64()?,
+            context_switches: dec.get_u64()?,
+        })
+    }
+
     /// Field-wise difference against an earlier snapshot of the same
     /// accumulator (used for per-round telemetry deltas).
     pub fn delta(&self, before: &HwCounters) -> HwCounters {

@@ -306,6 +306,82 @@ impl Scene {
     pub fn is_empty(&self) -> bool {
         self.centers.is_empty()
     }
+
+    /// Serialize the scene for a crash-safe snapshot: centers, radius,
+    /// the cohort schedule knob, the graft budget (`built_prims`), and
+    /// the BVH arena. The AABBs and the SoA store are *derived* state
+    /// (`aabbs[i] == Aabb::around_sphere(centers[i], radius)` is a
+    /// scene invariant; the store is `centers` in leaf order) and are
+    /// reconstructed on decode rather than shipped.
+    pub fn encode_into(&self, enc: &mut crate::persist::Enc) {
+        enc.put_len(self.centers.len());
+        for p in &self.centers {
+            enc.put_f32(p.x);
+            enc.put_f32(p.y);
+            enc.put_f32(p.z);
+        }
+        enc.put_f32(self.radius);
+        enc.put_u8(self.cohort as u8);
+        enc.put_u64(self.built_prims as u64);
+        self.bvh.encode_into(enc);
+    }
+
+    /// Decode a scene written by [`Scene::encode_into`], reattaching the
+    /// caller's executor. Re-derives the AABBs and the SoA store from the
+    /// persisted centers + tree, and re-validates that the tree's leaf
+    /// order is a permutation of the centers — a corrupt payload becomes
+    /// a typed error, never a mis-built scene.
+    pub fn decode_from(
+        dec: &mut crate::persist::Dec<'_>,
+        exec: Executor,
+    ) -> Result<Scene, crate::persist::PersistError> {
+        use crate::persist::PersistError;
+        let corrupt = |detail: String| PersistError::Corrupt { what: "scene", detail };
+        let n = dec.get_len()?;
+        let mut centers = Vec::with_capacity(n);
+        for _ in 0..n {
+            centers.push(Point3::new(dec.get_f32()?, dec.get_f32()?, dec.get_f32()?));
+        }
+        let radius = dec.get_f32()?;
+        let cohort = dec.get_u8()? != 0;
+        let built_prims = dec.get_u64()? as usize;
+        let bvh = Bvh::decode_from(dec)?;
+        if bvh.prim_order.len() != centers.len() {
+            return Err(corrupt(format!(
+                "prim_order has {} entries for {} centers",
+                bvh.prim_order.len(),
+                centers.len()
+            )));
+        }
+        let mut seen = vec![false; centers.len()];
+        for &id in &bvh.prim_order {
+            match seen.get_mut(id as usize) {
+                Some(s) if !*s => *s = true,
+                _ => return Err(corrupt(format!("prim_order id {id} out of range or repeated"))),
+            }
+        }
+        if built_prims > centers.len() {
+            return Err(corrupt(format!(
+                "built_prims {built_prims} exceeds {} centers",
+                centers.len()
+            )));
+        }
+        let aabbs: Vec<Aabb> = centers
+            .iter()
+            .map(|&c| Aabb::around_sphere(c, radius))
+            .collect();
+        let store = PointStore::from_leaf_order(&centers, &bvh.prim_order);
+        Ok(Scene {
+            centers,
+            store,
+            radius,
+            aabbs,
+            bvh,
+            exec,
+            cohort,
+            built_prims,
+        })
+    }
 }
 
 #[cfg(test)]

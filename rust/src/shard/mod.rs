@@ -176,6 +176,71 @@ impl ShardedIndex {
         self.inner.len()
     }
 
+    /// Restore a sharded index serialized by its `snapshot_into`: the
+    /// partition and every per-shard inner index come back from the
+    /// payload (recursively, through the same backend codecs as the
+    /// unsharded path), with cross-checks that the id map, the per-shard
+    /// point counts and the global store still agree — any drift means
+    /// the payload is corrupt and the caller must rebuild.
+    pub(crate) fn decode_from(
+        dec: &mut crate::persist::Dec<'_>,
+        backend: Backend,
+        cfg: IndexConfig,
+    ) -> Result<Self, crate::persist::PersistError> {
+        let corrupt = |detail: String| crate::persist::PersistError::Corrupt {
+            what: "sharded index",
+            detail,
+        };
+        let data = crate::index::get_points(dec)?;
+        let part = Partition::decode_from(dec)?;
+        let retired = HwCounters::decode_from(dec)?;
+        let rebalances = dec.get_u64()?;
+        let build_seconds = dec.get_f64()?;
+        let n_inner = dec.get_len()?;
+        if n_inner != part.shards.len() {
+            return Err(corrupt(format!(
+                "{n_inner} inner indexes for {} partition shards",
+                part.shards.len()
+            )));
+        }
+        let mut total = 0usize;
+        for (s, set) in part.shards.iter().enumerate() {
+            if set.ids.iter().any(|&i| i as usize >= data.len()) {
+                return Err(corrupt(format!("shard {s} id outside the point store")));
+            }
+            total += set.ids.len();
+        }
+        if total != data.len() {
+            return Err(corrupt(format!(
+                "shards hold {total} ids for {} points",
+                data.len()
+            )));
+        }
+        let mut inner = Vec::with_capacity(n_inner);
+        for s in 0..n_inner {
+            let idx = crate::index::decode_index(dec, cfg.threads)?;
+            if idx.len() != part.shards[s].ids.len() {
+                return Err(corrupt(format!(
+                    "inner index {s} holds {} points, its shard {}",
+                    idx.len(),
+                    part.shards[s].ids.len()
+                )));
+            }
+            inner.push(idx);
+        }
+        Ok(ShardedIndex {
+            backend,
+            exec: Executor::new(cfg.threads),
+            cfg,
+            data,
+            part,
+            inner,
+            retired,
+            rebalances,
+            build_seconds,
+        })
+    }
+
     /// Rebalance rebuilds performed so far (insert-overflow triggered).
     pub fn rebalances(&self) -> u64 {
         self.rebalances
@@ -404,6 +469,19 @@ impl NeighborIndex for ShardedIndex {
             build_seconds: self.build_seconds,
             start_radius: None,
             radius_schedule: Vec::new(),
+        }
+    }
+
+    fn snapshot_into(&self, enc: &mut crate::persist::Enc) {
+        crate::index::write_index_header(enc, true, self.backend, &self.cfg);
+        crate::index::put_points(enc, &self.data);
+        self.part.encode_into(enc);
+        self.retired.encode_into(enc);
+        enc.put_u64(self.rebalances);
+        enc.put_f64(self.build_seconds);
+        enc.put_len(self.inner.len());
+        for idx in &self.inner {
+            idx.snapshot_into(enc);
         }
     }
 }

@@ -155,6 +155,64 @@ impl Partition {
         grouped
     }
 
+    /// Serialize the partition for a crash-safe snapshot: the Morton
+    /// normalization box, the cut table, and every shard's id list +
+    /// tight box. Lives here because `bb`/`cut_lo` are private — the
+    /// routing invariants stay encapsulated.
+    pub fn encode_into(&self, enc: &mut crate::persist::Enc) {
+        put_aabb(enc, &self.bb);
+        enc.put_len(self.cut_lo.len());
+        for &c in &self.cut_lo {
+            enc.put_u32(c);
+        }
+        enc.put_len(self.shards.len());
+        for s in &self.shards {
+            enc.put_len(s.ids.len());
+            for &i in &s.ids {
+                enc.put_u32(i);
+            }
+            put_aabb(enc, &s.aabb);
+        }
+    }
+
+    /// Decode a partition written by [`Partition::encode_into`],
+    /// re-validating the cut-table shape so corrupt payloads surface as
+    /// typed errors.
+    pub fn decode_from(
+        dec: &mut crate::persist::Dec<'_>,
+    ) -> Result<Partition, crate::persist::PersistError> {
+        use crate::persist::PersistError;
+        let corrupt = |detail: String| PersistError::Corrupt { what: "partition", detail };
+        let bb = get_aabb(dec)?;
+        let n_cuts = dec.get_len()?;
+        let mut cut_lo = Vec::with_capacity(n_cuts);
+        for _ in 0..n_cuts {
+            cut_lo.push(dec.get_u32()?);
+        }
+        let n_shards = dec.get_len()?;
+        let mut shards = Vec::with_capacity(n_shards);
+        for _ in 0..n_shards {
+            let n_ids = dec.get_len()?;
+            let mut ids = Vec::with_capacity(n_ids);
+            for _ in 0..n_ids {
+                ids.push(dec.get_u32()?);
+            }
+            let aabb = get_aabb(dec)?;
+            shards.push(ShardSet { ids, aabb });
+        }
+        if cut_lo.len() != shards.len() || shards.is_empty() {
+            return Err(corrupt(format!(
+                "{} cuts for {} shards",
+                cut_lo.len(),
+                shards.len()
+            )));
+        }
+        if cut_lo[0] != 0 {
+            return Err(corrupt("cut table must start at code 0".to_string()));
+        }
+        Ok(Partition { bb, cut_lo, shards })
+    }
+
     /// The rebalance predicate, likewise shared by every consumer: true
     /// once any shard holds more than **twice its balanced share** of
     /// `total` points. A pure function of the partition's sizes, so
@@ -164,6 +222,21 @@ impl Partition {
         let balanced = total.div_ceil(self.shards.len().max(1));
         self.shards.iter().any(|s| s.ids.len() > 2 * balanced)
     }
+}
+
+fn put_aabb(enc: &mut crate::persist::Enc, b: &Aabb) {
+    enc.put_f32(b.min.x);
+    enc.put_f32(b.min.y);
+    enc.put_f32(b.min.z);
+    enc.put_f32(b.max.x);
+    enc.put_f32(b.max.y);
+    enc.put_f32(b.max.z);
+}
+
+fn get_aabb(dec: &mut crate::persist::Dec<'_>) -> Result<Aabb, crate::persist::PersistError> {
+    let min = Point3::new(dec.get_f32()?, dec.get_f32()?, dec.get_f32()?);
+    let max = Point3::new(dec.get_f32()?, dec.get_f32()?, dec.get_f32()?);
+    Ok(Aabb { min, max })
 }
 
 #[cfg(test)]

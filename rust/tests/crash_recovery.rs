@@ -1,0 +1,434 @@
+//! Crash/restart matrix for the durable coordinator (PR 8 tentpole):
+//! a service with persistence enabled is killed — cleanly, abruptly
+//! mid-stream, or under seeded I/O faults — and restarted over the same
+//! data directory. Every recovered process must answer bitwise-
+//! identically to a never-crashed single-worker oracle over the durable
+//! prefix, and the `recovered`/`rebuilt`/`wal_replayed`/
+//! `snapshot_corrupt` counters must land exactly where the scenario
+//! says they belong.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+use trueknn::coordinator::{
+    KnnRequest, KnnResponse, MetricsSnapshot, PersistConfig, QueryMode, Service, ServiceConfig,
+};
+use trueknn::dataset::DatasetKind;
+use trueknn::faults::FaultPlan;
+use trueknn::geom::Point3;
+
+/// Bitwise response signature: route + every neighbor's (idx, dist bits).
+type Sig = (trueknn::coordinator::RoutePath, Vec<Vec<(u32, u32)>>);
+
+fn sig_of(resp: &KnnResponse) -> Sig {
+    (
+        resp.path,
+        resp.neighbors
+            .iter()
+            .map(|nb| nb.iter().map(|n| (n.idx, n.dist.to_bits())).collect())
+            .collect(),
+    )
+}
+
+/// One step of a service lifetime: an RT-forced query or a durable insert.
+enum Op {
+    Query(u64, Vec<Point3>, usize),
+    Insert(Vec<Point3>),
+}
+
+/// Deterministic RT-forced query ops over base-point slices, k cycling.
+fn queries(points: &[Point3], ids: std::ops::Range<u64>) -> Vec<Op> {
+    ids.map(|id| {
+        let start = (id as usize * 97) % (points.len() - 5);
+        Op::Query(id, points[start..start + 5].to_vec(), 1 + (id as usize % 4))
+    })
+    .collect()
+}
+
+/// Run one service lifetime: apply `ops` sequentially, snapshot the
+/// metrics, then die — cleanly (flush + final snapshot) or abruptly
+/// (no flush; whatever the group-commit fence already made durable is
+/// all the next life gets).
+fn run_phase(
+    base: &[Point3],
+    cfg: ServiceConfig,
+    ops: &[Op],
+    abrupt: bool,
+) -> (HashMap<u64, Sig>, MetricsSnapshot) {
+    let (svc, handle) = Service::start(base.to_vec(), cfg);
+    let mut sigs = HashMap::new();
+    for op in ops {
+        match op {
+            Op::Query(id, qs, k) => {
+                let resp = handle
+                    .query(KnnRequest::new(*id, qs.clone(), *k).with_mode(QueryMode::Rt))
+                    .expect("recovery must never lose a request");
+                assert_eq!(resp.id, *id);
+                sigs.insert(*id, sig_of(&resp));
+            }
+            Op::Insert(pts) => handle.insert(pts).expect("durable insert"),
+        }
+    }
+    let m = handle.metrics().snapshot();
+    if abrupt {
+        svc.shutdown_abrupt();
+    } else {
+        svc.shutdown();
+    }
+    (sigs, m)
+}
+
+/// A unique scratch data directory per call (tests run in parallel).
+fn temp_dir(tag: &str) -> PathBuf {
+    static N: AtomicU64 = AtomicU64::new(0);
+    let d = std::env::temp_dir().join(format!(
+        "trueknn-crash-{tag}-{}-{}",
+        std::process::id(),
+        N.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn persisted_cfg(dir: &Path, snapshot_interval: u64, faults: FaultPlan) -> ServiceConfig {
+    let mut pc = PersistConfig::at(dir);
+    pc.snapshot_interval = snapshot_interval;
+    ServiceConfig {
+        workers: 2,
+        queue_depth: 64,
+        heartbeat_timeout: Duration::from_secs(5),
+        faults,
+        persist: Some(pc),
+        ..Default::default()
+    }
+}
+
+/// The never-crashed reference: one worker, no persistence.
+fn oracle_cfg() -> ServiceConfig {
+    ServiceConfig {
+        workers: 1,
+        queue_depth: 64,
+        ..Default::default()
+    }
+}
+
+fn snapshot_files(dir: &Path) -> Vec<PathBuf> {
+    let mut v: Vec<PathBuf> = std::fs::read_dir(dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "tksn"))
+        .collect();
+    v.sort();
+    v
+}
+
+fn assert_matches_oracle(got: &HashMap<u64, Sig>, oracle: &HashMap<u64, Sig>, tag: &str) {
+    for (id, sig) in got {
+        assert_eq!(
+            Some(sig),
+            oracle.get(id),
+            "{tag}: response {id} diverged from the never-crashed oracle"
+        );
+    }
+}
+
+#[test]
+fn clean_shutdown_restarts_from_the_final_snapshot_with_zero_replay() {
+    let ds = DatasetKind::Taxi.generate(1_200, 42);
+    let extra = DatasetKind::Uniform.generate(12, 7).points;
+    let dir = temp_dir("clean");
+
+    let mut ops1 = queries(&ds.points, 0..3);
+    ops1.push(Op::Insert(extra.clone()));
+    ops1.extend(queries(&ds.points, 3..5));
+    let ops2 = queries(&ds.points, 100..104);
+
+    // the oracle lives through both phases without ever crashing
+    let mut all_ops = queries(&ds.points, 0..3);
+    all_ops.push(Op::Insert(extra.clone()));
+    all_ops.extend(queries(&ds.points, 3..5));
+    all_ops.extend(queries(&ds.points, 100..104));
+    let (oracle, _) = run_phase(&ds.points, oracle_cfg(), &all_ops, false);
+
+    let (got1, _) = run_phase(
+        &ds.points,
+        persisted_cfg(&dir, 0, FaultPlan::inert()),
+        &ops1,
+        false,
+    );
+    assert_matches_oracle(&got1, &oracle, "first life");
+    // clean shutdown wrote exactly one final snapshot (interval 0)
+    assert_eq!(snapshot_files(&dir).len(), 1, "one snapshot at shutdown");
+
+    let (got2, m2) = run_phase(
+        &ds.points,
+        persisted_cfg(&dir, 0, FaultPlan::inert()),
+        &ops2,
+        false,
+    );
+    assert_matches_oracle(&got2, &oracle, "restarted life");
+    // the final snapshot's watermark equals the WAL length: cold start
+    // replays nothing and recovers the index straight from the blob
+    assert_eq!(m2.wal_replayed, 0, "clean shutdown leaves no WAL suffix");
+    assert_eq!(m2.recovered, 1);
+    assert_eq!(m2.rebuilt, 0);
+    assert_eq!(m2.snapshot_corrupt, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn abrupt_crash_recovers_from_interval_snapshot_plus_wal_suffix() {
+    let ds = DatasetKind::Taxi.generate(1_200, 43);
+    let batches: Vec<Vec<Point3>> = (0..3)
+        .map(|i| DatasetKind::Uniform.generate(10, 50 + i).points)
+        .collect();
+    let dir = temp_dir("abrupt");
+
+    // q q, ins#1, q, ins#2 (-> interval snapshot at watermark 2), q,
+    // ins#3, q — then the process dies with no flush
+    let mut ops1 = queries(&ds.points, 0..2);
+    ops1.push(Op::Insert(batches[0].clone()));
+    ops1.extend(queries(&ds.points, 2..3));
+    ops1.push(Op::Insert(batches[1].clone()));
+    ops1.extend(queries(&ds.points, 3..4));
+    ops1.push(Op::Insert(batches[2].clone()));
+    ops1.extend(queries(&ds.points, 4..5));
+    let ops2 = queries(&ds.points, 100..104);
+
+    let mut all_ops = Vec::new();
+    all_ops.extend(queries(&ds.points, 0..2));
+    all_ops.push(Op::Insert(batches[0].clone()));
+    all_ops.extend(queries(&ds.points, 2..3));
+    all_ops.push(Op::Insert(batches[1].clone()));
+    all_ops.extend(queries(&ds.points, 3..4));
+    all_ops.push(Op::Insert(batches[2].clone()));
+    all_ops.extend(queries(&ds.points, 4..5));
+    all_ops.extend(queries(&ds.points, 100..104));
+    let (oracle, _) = run_phase(&ds.points, oracle_cfg(), &all_ops, false);
+
+    let (got1, _) = run_phase(
+        &ds.points,
+        persisted_cfg(&dir, 2, FaultPlan::inert()),
+        &ops1,
+        true,
+    );
+    assert_matches_oracle(&got1, &oracle, "first life");
+
+    let (got2, m2) = run_phase(
+        &ds.points,
+        persisted_cfg(&dir, 2, FaultPlan::inert()),
+        &ops2,
+        false,
+    );
+    assert_matches_oracle(&got2, &oracle, "restarted life");
+    // every insert was fenced into the WAL before it touched memory, so
+    // the crash lost nothing: snapshot covers 2 records, replay adds 1
+    assert_eq!(m2.wal_replayed, 1, "exactly the post-snapshot suffix");
+    assert_eq!(m2.recovered, 1);
+    assert_eq!(m2.rebuilt, 0);
+    assert_eq!(m2.snapshot_corrupt, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_snapshots_fall_back_to_a_deterministic_full_rebuild() {
+    let ds = DatasetKind::Taxi.generate(1_200, 44);
+    let batches: Vec<Vec<Point3>> = (0..3)
+        .map(|i| DatasetKind::Uniform.generate(10, 60 + i).points)
+        .collect();
+    let dir = temp_dir("corrupt");
+
+    let mut ops1 = queries(&ds.points, 0..2);
+    for b in &batches {
+        ops1.push(Op::Insert(b.clone()));
+    }
+    ops1.extend(queries(&ds.points, 2..5));
+    let ops2 = queries(&ds.points, 100..104);
+
+    let mut all_ops = Vec::new();
+    all_ops.extend(queries(&ds.points, 0..2));
+    for b in &batches {
+        all_ops.push(Op::Insert(b.clone()));
+    }
+    all_ops.extend(queries(&ds.points, 2..5));
+    all_ops.extend(queries(&ds.points, 100..104));
+    let (oracle, _) = run_phase(&ds.points, oracle_cfg(), &all_ops, false);
+
+    // interval 2 + final flush: the first life leaves two snapshots
+    let (got1, _) = run_phase(
+        &ds.points,
+        persisted_cfg(&dir, 2, FaultPlan::inert()),
+        &ops1,
+        false,
+    );
+    assert_matches_oracle(&got1, &oracle, "first life");
+    let snaps = snapshot_files(&dir);
+    assert_eq!(snaps.len(), 2, "interval snapshot + final snapshot");
+
+    // flip one byte in the middle of EVERY snapshot on disk
+    for p in &snaps {
+        let mut bytes = std::fs::read(p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(p, bytes).unwrap();
+    }
+
+    let (got2, m2) = run_phase(
+        &ds.points,
+        persisted_cfg(&dir, 2, FaultPlan::inert()),
+        &ops2,
+        false,
+    );
+    // corruption costs freshness, never correctness: the full WAL
+    // replays onto a fresh deterministic build and answers stay bitwise
+    assert_matches_oracle(&got2, &oracle, "rebuilt life");
+    assert_eq!(m2.snapshot_corrupt, 2, "every candidate detected");
+    assert_eq!(m2.rebuilt, 1);
+    assert_eq!(m2.recovered, 0);
+    assert_eq!(m2.wal_replayed, 3, "whole log replays from watermark 0");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn torn_wal_tail_recovers_exactly_the_durable_prefix() {
+    let ds = DatasetKind::Taxi.generate(1_200, 45);
+    let batch_a = DatasetKind::Uniform.generate(10, 70).points;
+    let batch_b = DatasetKind::Uniform.generate(10, 71).points;
+    let dir = temp_dir("torn");
+
+    let mut ops1 = queries(&ds.points, 0..1);
+    ops1.push(Op::Insert(batch_a.clone()));
+    ops1.extend(queries(&ds.points, 1..2));
+    ops1.push(Op::Insert(batch_b.clone()));
+    ops1.extend(queries(&ds.points, 2..3));
+    let ops2 = queries(&ds.points, 100..104);
+
+    // interval 0 + abrupt death: the WAL is the only durable state
+    let (_, _) = run_phase(
+        &ds.points,
+        persisted_cfg(&dir, 0, FaultPlan::inert()),
+        &ops1,
+        true,
+    );
+    assert!(snapshot_files(&dir).is_empty(), "no snapshots were written");
+
+    // tear the tail: chop 3 bytes off the last record's checksummed body
+    let wal_path = dir.join("wal.log");
+    let bytes = std::fs::read(&wal_path).unwrap();
+    std::fs::write(&wal_path, &bytes[..bytes.len() - 3]).unwrap();
+
+    // the reduced oracle never saw the torn second insert
+    let mut reduced_ops = vec![Op::Insert(batch_a.clone())];
+    reduced_ops.extend(queries(&ds.points, 100..104));
+    let (oracle, _) = run_phase(&ds.points, oracle_cfg(), &reduced_ops, false);
+
+    let (got2, m2) = run_phase(
+        &ds.points,
+        persisted_cfg(&dir, 0, FaultPlan::inert()),
+        &ops2,
+        false,
+    );
+    assert_matches_oracle(&got2, &oracle, "post-tear life");
+    assert_eq!(m2.wal_replayed, 1, "only the intact record survives");
+    assert_eq!(m2.recovered, 0);
+    assert_eq!(m2.rebuilt, 0);
+    assert_eq!(m2.snapshot_corrupt, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn seeded_io_faults_recover_a_durable_prefix_and_never_a_wrong_answer() {
+    // the fuzz face of the matrix: a seeded torn write, bit flip or
+    // short read is armed against the WAL or the snapshot in BOTH lives.
+    // Whatever the fault destroys, the restarted service must equal the
+    // oracle for base + some PREFIX of the inserts — arbitrary data
+    // loss is detectable, silent reordering or corruption never is
+    let ds = DatasetKind::Taxi.generate(1_000, 46);
+    let batches: Vec<Vec<Point3>> = (0..2)
+        .map(|i| DatasetKind::Uniform.generate(8, 80 + i).points)
+        .collect();
+    let ops2 = queries(&ds.points, 100..104);
+
+    // one oracle per reachable durable prefix: base+0, base+1, base+2
+    let oracles: Vec<HashMap<u64, Sig>> = (0..=batches.len())
+        .map(|j| {
+            let mut ops: Vec<Op> = batches[..j].iter().map(|b| Op::Insert(b.clone())).collect();
+            ops.extend(queries(&ds.points, 100..104));
+            run_phase(&ds.points, oracle_cfg(), &ops, false).0
+        })
+        .collect();
+
+    let mut ops1 = queries(&ds.points, 0..2);
+    ops1.push(Op::Insert(batches[0].clone()));
+    ops1.extend(queries(&ds.points, 2..3));
+    ops1.push(Op::Insert(batches[1].clone()));
+    ops1.extend(queries(&ds.points, 3..4));
+
+    // CI pins TRUEKNN_FAULT_SEED so a red run replays locally with the
+    // same torn writes; unset, the matrix walks a fixed seed block
+    let base = FaultPlan::env_seed().unwrap_or(0xC0FFEE);
+    for seed in base..base + 10 {
+        let dir = temp_dir("fuzz");
+        let plan = FaultPlan::seeded_io(seed);
+        let (_, _) = run_phase(&ds.points, persisted_cfg(&dir, 1, plan.clone()), &ops1, false);
+        let (got2, m2) = run_phase(&ds.points, persisted_cfg(&dir, 1, plan), &ops2, false);
+        assert_eq!(got2.len(), ops2.len(), "seed {seed}: every query answered");
+        let matches_prefix = oracles
+            .iter()
+            .any(|o| got2.iter().all(|(id, sig)| o.get(id) == Some(sig)));
+        assert!(
+            matches_prefix,
+            "seed {seed}: recovered state matches no durable prefix \
+             (recovered={} rebuilt={} wal_replayed={} snapshot_corrupt={})",
+            m2.recovered,
+            m2.rebuilt,
+            m2.wal_replayed,
+            m2.snapshot_corrupt
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn sharded_service_recovers_from_the_wal_alone() {
+    // shards > 1 takes the WAL-only durability path: no snapshot files
+    // are ever written or scanned, and recovery still answers bitwise-
+    // identically to the unsharded never-crashed oracle
+    let ds = DatasetKind::Taxi.generate(1_200, 47);
+    let extra = DatasetKind::Uniform.generate(12, 90).points;
+    let dir = temp_dir("sharded");
+
+    let mut ops1 = queries(&ds.points, 0..2);
+    ops1.push(Op::Insert(extra.clone()));
+    ops1.extend(queries(&ds.points, 2..4));
+    let ops2 = queries(&ds.points, 100..104);
+
+    let mut all_ops = queries(&ds.points, 0..2);
+    all_ops.push(Op::Insert(extra.clone()));
+    all_ops.extend(queries(&ds.points, 2..4));
+    all_ops.extend(queries(&ds.points, 100..104));
+    let (oracle, _) = run_phase(&ds.points, oracle_cfg(), &all_ops, false);
+
+    let sharded = |faults: FaultPlan| {
+        let mut cfg = persisted_cfg(&dir, 2, faults);
+        cfg.shards = 2;
+        cfg
+    };
+    let (got1, _) = run_phase(&ds.points, sharded(FaultPlan::inert()), &ops1, false);
+    assert_matches_oracle(&got1, &oracle, "first sharded life");
+    assert!(
+        snapshot_files(&dir).is_empty(),
+        "sharded services never snapshot — the WAL is the durable state"
+    );
+    assert!(dir.join("wal.log").exists());
+
+    let (got2, m2) = run_phase(&ds.points, sharded(FaultPlan::inert()), &ops2, false);
+    assert_matches_oracle(&got2, &oracle, "restarted sharded life");
+    assert_eq!(m2.wal_replayed, 1, "the whole log replays into the shards");
+    assert_eq!(m2.recovered, 0, "no snapshot to recover from");
+    assert_eq!(m2.rebuilt, 0);
+    assert_eq!(m2.snapshot_corrupt, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -360,6 +360,71 @@ fn channel_unwrap_respects_scope_and_the_supervisor_exemption() {
 }
 
 // ---------------------------------------------------------------------
+// io-unwrap-in-persist
+// ---------------------------------------------------------------------
+
+#[test]
+fn io_unwrap_flags_method_and_associated_fn_shapes() {
+    let src = "fn dump(f: &mut std::fs::File, buf: &[u8]) {\n\
+               \x20   f.write_all(buf).unwrap();\n\
+               \x20   let _w = std::fs::File::open(\"wal.log\").expect(\"no wal\");\n\
+               \x20   f.sync_all().unwrap();\n\
+               }\n";
+    let f = lint("persist", src);
+    // panic-in-lib fires on the same unwrap/expect sites; the io rule
+    // adds the corruption-signal diagnosis (same line, alphabetical
+    // rule order puts io-unwrap first)
+    assert_eq!(
+        rules_of(&f),
+        [
+            "io-unwrap-in-persist",
+            "panic-in-lib",
+            "io-unwrap-in-persist",
+            "panic-in-lib",
+            "io-unwrap-in-persist",
+            "panic-in-lib"
+        ]
+    );
+    let io: Vec<u32> = f
+        .iter()
+        .filter(|x| x.rule == "io-unwrap-in-persist")
+        .map(|x| x.line)
+        .collect();
+    assert_eq!(io, [2, 3, 4], "method shape, File::open shape, sync_all");
+    assert!(f[0].message.contains("recovery signal"));
+}
+
+#[test]
+fn io_unwrap_ignores_handled_results_and_non_io_methods() {
+    let src = "fn dump(f: &mut std::fs::File, buf: &[u8]) -> std::io::Result<()> {\n\
+               \x20   f.write_all(buf).map_err(|e| e)?;\n\
+               \x20   let _ = f.sync_all();\n\
+               \x20   let _n = Some(5).map(|v| v).unwrap_or(0);\n\
+               \x20   f.flush()\n\
+               }\n";
+    assert!(lint("persist", src).is_empty());
+}
+
+#[test]
+fn io_unwrap_respects_module_scope() {
+    let cfg =
+        LintConfig::parse("io-unwrap-in-persist.scope = persist, coordinator\n").unwrap();
+    let src = "fn gc() {\n\
+               \x20   // lint: allow(panic-in-lib) — fixture isolates the io rule\n\
+               \x20   std::fs::remove_file(\"stale.tksn\").unwrap();\n\
+               }\n";
+    assert_eq!(
+        rules_of(&analyze_source("persist::wal", "f.rs", src, &cfg)),
+        ["io-unwrap-in-persist"]
+    );
+    assert_eq!(
+        rules_of(&analyze_source("coordinator::service", "f.rs", src, &cfg)),
+        ["io-unwrap-in-persist"]
+    );
+    assert!(analyze_source("dataset::io", "f.rs", src, &cfg).is_empty(), "out of scope");
+}
+
+// ---------------------------------------------------------------------
 // suppression + bare-allow meta-rule
 // ---------------------------------------------------------------------
 
@@ -486,7 +551,7 @@ fn every_reported_rule_id_is_registered() {
     for f in lint("knn", src) {
         assert!(RULES.contains(&f.rule), "unregistered rule id {}", f.rule);
     }
-    assert_eq!(RULES.len(), 10);
+    assert_eq!(RULES.len(), 11);
 }
 
 // ---------------------------------------------------------------------

@@ -1,0 +1,280 @@
+//! Round-trip suite for the checksummed index snapshots (PR 8
+//! tentpole): build → snapshot → load must hand back an index whose
+//! query results **and** counters are bitwise-identical to the
+//! original's, for every backend and shard count; any corrupted byte
+//! must be detected (typed error, never a wrong answer); and a torn WAL
+//! tail must repair to exactly the longest valid record prefix.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use trueknn::dataset::{DatasetKind, DistanceProfile};
+use trueknn::faults::FaultPlan;
+use trueknn::geom::Point3;
+use trueknn::index::{Backend, BuildError, IndexBuilder, IndexConfig, NeighborIndex};
+use trueknn::knn::KnnResult;
+use trueknn::persist::{PersistError, Wal};
+use trueknn::util::prop;
+
+/// A unique scratch directory per call (tests run in parallel).
+fn temp_dir(tag: &str) -> PathBuf {
+    static N: AtomicU64 = AtomicU64::new(0);
+    let d = std::env::temp_dir().join(format!(
+        "trueknn-roundtrip-{tag}-{}-{}",
+        std::process::id(),
+        N.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Bitwise result signature: per-query neighbor (idx, dist bits), plus
+/// the full counter block, launch count and round count.
+fn sig(r: &KnnResult) -> (Vec<Vec<(u32, u32)>>, trueknn::rt::HwCounters, u64, usize) {
+    (
+        r.neighbors
+            .iter()
+            .map(|nb| nb.iter().map(|n| (n.idx, n.dist.to_bits())).collect())
+            .collect(),
+        r.counters,
+        r.launches,
+        r.rounds.len(),
+    )
+}
+
+/// Build-stats signature: counters plus the bit patterns of the sampled
+/// start radius and radius schedule (floats compared exactly).
+fn build_sig(ix: &dyn NeighborIndex) -> (trueknn::rt::HwCounters, Option<u32>, Vec<u32>) {
+    let s = ix.build_stats();
+    (
+        s.counters,
+        s.start_radius.map(f32::to_bits),
+        s.radius_schedule.iter().map(|r| r.to_bits()).collect(),
+    )
+}
+
+const ALL_BACKENDS: [Backend; 6] = [
+    Backend::TrueKnn,
+    Backend::FixedRadius,
+    Backend::Rtnn,
+    Backend::KdTree,
+    Backend::BruteCpu,
+    Backend::BrutePjrt,
+];
+
+#[test]
+fn roundtrip_is_bitwise_identical_across_backends_and_shards() {
+    let ds = DatasetKind::Taxi.generate(500, 11);
+    let k = 4;
+    // the fixed-radius baselines need a search radius; derive it the
+    // same way the CLI does (deterministic maxDist rule)
+    let radius = (DistanceProfile::compute(&ds, k).percentile_dist(100.0) * 1.0001) as f32;
+    let queries = &ds.points[..40];
+
+    for backend in ALL_BACKENDS {
+        for shards in [1usize, 2, 7] {
+            let make = || {
+                let mut cfg = IndexConfig {
+                    seed: 9,
+                    shards,
+                    ..Default::default()
+                };
+                if matches!(backend, Backend::FixedRadius | Backend::Rtnn) {
+                    cfg.radius = Some(radius);
+                }
+                IndexBuilder::new(backend).config(cfg)
+            };
+            let tag = format!("{} shards={shards}", backend.name());
+
+            let mut orig = make().build(ds.points.clone());
+            // snapshot *before* the first query: both copies then see the
+            // identical operation sequence from the just-built state
+            let bytes = make().snapshot(orig.as_ref(), 7);
+            let (mut restored, watermark) = make()
+                .load(&bytes)
+                .unwrap_or_else(|e| panic!("{tag}: load failed: {e}"));
+            assert_eq!(watermark, 7, "{tag}: watermark survives the trip");
+            assert_eq!(restored.backend(), orig.backend(), "{tag}");
+            assert_eq!(restored.len(), orig.len(), "{tag}");
+            assert_eq!(
+                build_sig(restored.as_ref()),
+                build_sig(orig.as_ref()),
+                "{tag}: build stats"
+            );
+
+            let a = orig.knn(queries, k);
+            let b = restored.knn(queries, k);
+            assert_eq!(sig(&a), sig(&b), "{tag}: knn results/counters diverged");
+
+            let ra = orig.range(queries, radius);
+            let rb = restored.range(queries, radius);
+            assert_eq!(sig(&ra), sig(&rb), "{tag}: range results/counters diverged");
+        }
+    }
+}
+
+#[test]
+fn insert_then_snapshot_restores_the_grown_index() {
+    let ds = DatasetKind::Taxi.generate(400, 21);
+    let grow_a = DatasetKind::Uniform.generate(25, 22).points;
+    let grow_b = DatasetKind::Uniform.generate(25, 23).points;
+    let queries: Vec<Point3> = ds.points[..20].iter().chain(&grow_a).copied().collect();
+
+    for shards in [1usize, 2] {
+        let make = || {
+            IndexBuilder::new(Backend::TrueKnn).config(IndexConfig {
+                seed: 5,
+                shards,
+                ..Default::default()
+            })
+        };
+        let mut orig = make().build(ds.points.clone());
+        orig.insert(&grow_a);
+        let bytes = make().snapshot(orig.as_ref(), 1);
+        let (mut restored, watermark) = make().load(&bytes).expect("grown index loads");
+        assert_eq!(watermark, 1);
+        assert_eq!(restored.len(), orig.len(), "shards={shards}: insert persisted");
+
+        // the restored index keeps serving the full lifecycle: another
+        // insert on both sides must stay in lockstep
+        orig.insert(&grow_b);
+        restored.insert(&grow_b);
+        let a = orig.knn(&queries, 3);
+        let b = restored.knn(&queries, 3);
+        assert_eq!(sig(&a), sig(&b), "shards={shards}: post-restore insert diverged");
+    }
+}
+
+#[test]
+fn fingerprint_fences_reject_mismatched_configs() {
+    let ds = DatasetKind::Uniform.generate(300, 31);
+    let builder = |seed: u64, backend: Backend| {
+        IndexBuilder::new(backend).config(IndexConfig {
+            seed,
+            ..Default::default()
+        })
+    };
+    let index = builder(1, Backend::TrueKnn).build(ds.points.clone());
+    let bytes = builder(1, Backend::TrueKnn).snapshot(index.as_ref(), 0);
+
+    // same bytes, same config: accepted
+    assert!(builder(1, Backend::TrueKnn).load(&bytes).is_ok());
+    // any result-affecting config change is fenced out
+    assert!(matches!(
+        builder(2, Backend::TrueKnn).load(&bytes),
+        Err(BuildError::Persist(PersistError::FingerprintMismatch { .. }))
+    ));
+    // and so is a different backend entirely
+    assert!(matches!(
+        builder(1, Backend::KdTree).load(&bytes),
+        Err(BuildError::Persist(PersistError::FingerprintMismatch { .. }))
+    ));
+    // threads are explicitly NOT part of the fence: a snapshot is
+    // portable across machine sizes
+    let threads = IndexBuilder::new(Backend::TrueKnn).config(IndexConfig {
+        seed: 1,
+        threads: 3,
+        ..Default::default()
+    });
+    assert!(threads.load(&bytes).is_ok(), "thread count never fences a snapshot");
+
+    // structural damage: truncation is a typed error, never a panic
+    assert!(builder(1, Backend::TrueKnn).load(&bytes[..bytes.len() - 1]).is_err());
+    assert!(builder(1, Backend::TrueKnn).load(&[]).is_err());
+}
+
+#[test]
+fn corrupting_any_snapshot_byte_is_always_detected() {
+    // every byte of the container sits under a CRC32 (per-section and
+    // whole-file), so a single corrupted byte must always surface as a
+    // typed error — never load into an index that answers wrongly
+    prop::check("snapshot byte flips are detected", 48, |rng| {
+        let pts = prop::random_cloud(rng, 120, false);
+        let make = || {
+            IndexBuilder::new(Backend::TrueKnn).config(IndexConfig {
+                seed: 3,
+                threads: 1,
+                ..Default::default()
+            })
+        };
+        let index = make().build(pts);
+        let bytes = make().snapshot(index.as_ref(), 2);
+        let mut corrupted = bytes.clone();
+        let at = rng.below_usize(corrupted.len());
+        let delta = 1 + (rng.next_u32() % 255) as u8;
+        corrupted[at] ^= delta;
+        match make().load(&corrupted) {
+            Err(_) => Ok(()),
+            Ok(_) => Err(format!(
+                "flipping byte {at} by {delta:#04x} went undetected ({} container bytes)",
+                bytes.len()
+            )),
+        }
+    });
+}
+
+#[test]
+fn torn_wal_tail_repairs_to_the_longest_valid_prefix() {
+    // cut the log at an arbitrary byte (including mid-record and
+    // mid-header): reopening must replay exactly the records that end at
+    // or before the cut, truncate the file there, and continue the
+    // sequence numbering from the repaired tail
+    prop::check("torn WAL tail repairs to a valid prefix", 24, |rng| {
+        let dir = temp_dir("wal-prop");
+        let path = dir.join("wal.log");
+        let recs: Vec<Vec<Point3>> = (0..3)
+            .map(|_| prop::random_cloud(rng, 1 + rng.below_usize(6), false))
+            .collect();
+        let mut ends: Vec<u64> = Vec::new();
+        {
+            let (mut wal, initial) =
+                Wal::open(&path, 1, FaultPlan::inert()).map_err(|e| e.to_string())?;
+            if !initial.is_empty() {
+                return Err("fresh log replayed records".into());
+            }
+            for r in &recs {
+                wal.append(r).map_err(|e| e.to_string())?;
+                ends.push(std::fs::metadata(&path).map_err(|e| e.to_string())?.len());
+            }
+        }
+        let full = std::fs::read(&path).map_err(|e| e.to_string())?;
+        let cut = rng.below_usize(full.len() + 1);
+        std::fs::write(&path, &full[..cut]).map_err(|e| e.to_string())?;
+        let expected = ends.iter().filter(|&&e| e <= cut as u64).count();
+
+        let (mut wal, records) =
+            Wal::open(&path, 1, FaultPlan::inert()).map_err(|e| e.to_string())?;
+        if records.len() != expected {
+            return Err(format!(
+                "cut at {cut}/{}: replayed {} records, wanted {expected}",
+                full.len(),
+                records.len()
+            ));
+        }
+        for (i, rec) in records.iter().enumerate() {
+            if rec.seq != i as u64 + 1 {
+                return Err(format!("record {i} carries seq {}", rec.seq));
+            }
+            let same = rec.points.len() == recs[i].len()
+                && rec.points.iter().zip(&recs[i]).all(|(a, b)| {
+                    a.x.to_bits() == b.x.to_bits()
+                        && a.y.to_bits() == b.y.to_bits()
+                        && a.z.to_bits() == b.z.to_bits()
+                });
+            if !same {
+                return Err(format!("record {i} not bitwise identical after repair"));
+            }
+        }
+        let repaired = std::fs::metadata(&path).map_err(|e| e.to_string())?.len();
+        let want_len = if expected == 0 { 0 } else { ends[expected - 1] };
+        if repaired != want_len {
+            return Err(format!("repaired file is {repaired} bytes, wanted {want_len}"));
+        }
+        // the sequence continues from the repaired tail, not the tear
+        let seq = wal.append(&recs[0]).map_err(|e| e.to_string())?;
+        if seq != expected as u64 + 1 {
+            return Err(format!("post-repair append got seq {seq}"));
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+        Ok(())
+    });
+}
