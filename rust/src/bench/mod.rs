@@ -11,6 +11,7 @@ pub mod pr5;
 pub mod pr6;
 pub mod pr7;
 pub mod pr8;
+pub mod pr9;
 
 use crate::util::stats::{median, OnlineStats};
 use crate::util::Stopwatch;

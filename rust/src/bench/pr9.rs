@@ -1,0 +1,531 @@
+//! The PR9 perf microbench: what the pipelined scatter-gather bought,
+//! emitted as `BENCH_PR9.json` so CI archives it alongside the earlier
+//! perf benches.
+//!
+//! Three measurements:
+//!
+//! 1. **Pipelined serving** — the PR5 hot-route replay re-measured on
+//!    the incremental gather: each shard owner merges its partial into
+//!    the gather as it finishes (the merge itself fanned through the
+//!    exec engine), replacing PR5's single O(queries·k·S) pass on the
+//!    last owner. Same sweep shape as PR5 (`shards × workers` ∈
+//!    {1, 2, max} × {1, max}, launch engine pinned to one thread) so the
+//!    rows are directly comparable against `BENCH_PR5.json`.
+//! 2. **Speculation ablation** — `IndexConfig::speculation` ∈ {0, 2} at
+//!    shards {1, 2, max} × threads {1, max} on the library-level
+//!    sharded index: the two-phase plan's parallel unpruned fan over the
+//!    nearest shards versus the fully serial pruned walk
+//!    (`speculation = 0`).
+//! 3. **Fenced inserts** — one insert + probe workload run two ways:
+//!    *pipelined* (every insert acknowledged back-to-back, then every
+//!    probe — owners pull the whole log suffix in one catch-up) versus
+//!    *lockstep* (a scattered probe after every insert, which is the
+//!    visibility barrier the retired broadcast design imposed on each
+//!    insert). The final probe of both runs lands on the same fence and
+//!    must answer bitwise-identically.
+//!
+//! Every serving row is checked bitwise against the
+//! `shards = 1, workers = 1` oracle and every ablation row against the
+//! unsharded serial `speculation = 0` oracle; `results_match` is the CI
+//! gate over all three sections.
+
+use std::time::Duration;
+
+use crate::configx::Json;
+use crate::coordinator::{KnnRequest, KnnResponse, QueryMode, RoutePath, Service, ServiceConfig};
+use crate::dataset::DatasetKind;
+use crate::exec::Executor;
+use crate::geom::Point3;
+use crate::index::{Backend, IndexBuilder, IndexConfig};
+use crate::knn::TrueKnnParams;
+use crate::util::Stopwatch;
+
+use super::pr4::{replay, request_log_with, ResponseSig};
+use super::{fmt_secs, Table};
+
+const BENCH_K: usize = 5;
+const SPEC_QUERIES: usize = 192;
+const INSERT_BATCHES: usize = 32;
+const INSERT_POINTS: usize = 8;
+const PROBE_QUERIES: usize = 4;
+
+/// One serving-sweep configuration on the incremental gather.
+#[derive(Clone, Debug)]
+pub struct ServeRow {
+    pub shards: usize,
+    /// Pool size requested (0 = all cores) and the size the service
+    /// actually resolved it to.
+    pub workers_requested: usize,
+    pub workers: usize,
+    /// Best-of-`iters` wall seconds for one full replay of the log.
+    pub seconds: f64,
+    pub qps: f64,
+}
+
+/// One speculation-ablation configuration on the library sharded index.
+#[derive(Clone, Debug)]
+pub struct SpecRow {
+    pub shards: usize,
+    /// Exec threads requested (0 = all cores) and the resolved count.
+    pub threads_requested: usize,
+    pub threads: usize,
+    pub speculation: usize,
+    /// Best-of-`iters` wall seconds for one knn pass over the queries.
+    pub seconds: f64,
+    pub qps: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Pr9Report {
+    pub n: usize,
+    pub requests: usize,
+    pub queries_per_request: usize,
+    pub k: usize,
+    pub iters: usize,
+    pub serve_rows: Vec<ServeRow>,
+    /// Every serving row answered bitwise-identically to the
+    /// `shards = 1, workers = 1` oracle.
+    pub serve_match: bool,
+    pub spec_queries: usize,
+    pub spec_rows: Vec<SpecRow>,
+    /// Every ablation row answered bitwise-identically to the unsharded
+    /// serial `speculation = 0` oracle.
+    pub spec_match: bool,
+    pub insert_shards: usize,
+    pub insert_batches: usize,
+    pub insert_points: usize,
+    pub probe_queries: usize,
+    /// Best-of-`iters` wall seconds: all inserts acked, then all probes.
+    pub pipelined_s: f64,
+    /// Best-of-`iters` wall seconds: a scattered probe after every
+    /// insert (the retired broadcast barrier's visibility schedule).
+    pub lockstep_s: f64,
+    /// `lockstep_s / pipelined_s`.
+    pub insert_speedup: f64,
+    /// The final probe (same fence in both runs) answered
+    /// bitwise-identically.
+    pub insert_match: bool,
+    /// All three bitwise gates together (the CI gate).
+    pub results_match: bool,
+}
+
+/// Bitwise response signature: every neighbor's (idx, dist bits).
+fn resp_sig(resp: &KnnResponse) -> Vec<(u32, u32)> {
+    resp.neighbors
+        .iter()
+        .flat_map(|nb| nb.iter().map(|n| (n.idx, n.dist.to_bits())))
+        .collect()
+}
+
+/// Section 1: the PR5 sweep replayed through the incremental gather.
+fn serve_sweep(
+    points: &[Point3],
+    requests: usize,
+    qpr: usize,
+    iters: usize,
+) -> (Vec<ServeRow>, bool) {
+    let log = request_log_with(points, requests, qpr, 163, |_| QueryMode::Rt);
+    let cores = Executor::auto().threads();
+    let mut shard_counts = vec![1usize, 2, cores.clamp(2, 8)];
+    shard_counts.sort_unstable();
+    shard_counts.dedup();
+    let worker_counts = [1usize, 0];
+
+    let mut oracle: Option<Vec<ResponseSig>> = None;
+    let mut serve_match = true;
+    let mut rows = Vec::new();
+    for &shards in &shard_counts {
+        for &workers in &worker_counts {
+            let cfg = ServiceConfig {
+                workers,
+                shards,
+                // size the queues for the whole scatter (requests ×
+                // shards messages): the bench measures throughput, not
+                // backpressure
+                queue_depth: (requests * shards).max(256),
+                trueknn: TrueKnnParams {
+                    exclude_self: false,
+                    // launch-level parallelism pinned off: the sweep
+                    // isolates the shard/worker (gather) dimension
+                    threads: 1,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let (svc, handle) = Service::start(points.to_vec(), cfg);
+            // untimed warmup replay on top of the eager shard builds, so
+            // timed replays measure serving, not construction
+            let (_, sigs) = replay(&handle, &log);
+            match &oracle {
+                None => oracle = Some(sigs),
+                Some(want) => serve_match &= &sigs == want,
+            }
+            let mut best = f64::INFINITY;
+            for _ in 0..iters {
+                let (s, sigs) = replay(&handle, &log);
+                serve_match &= Some(&sigs) == oracle.as_ref();
+                best = best.min(s);
+            }
+            let resolved = handle.workers();
+            svc.shutdown();
+            rows.push(ServeRow {
+                shards,
+                workers_requested: workers,
+                workers: resolved,
+                seconds: best,
+                qps: (requests * qpr) as f64 / best.max(1e-12),
+            });
+        }
+    }
+    (rows, serve_match)
+}
+
+/// Section 2: the speculative shard fan ablated on the library index.
+fn spec_sweep(points: &[Point3], iters: usize) -> (usize, Vec<SpecRow>, bool) {
+    let queries = points[..SPEC_QUERIES.min(points.len())].to_vec();
+    let cores = Executor::auto().threads();
+    let mut shard_counts = vec![1usize, 2, cores.clamp(2, 8)];
+    shard_counts.sort_unstable();
+    shard_counts.dedup();
+    let thread_counts = [1usize, 0];
+
+    let mut oracle: Option<Vec<(u32, u32)>> = None;
+    let mut spec_match = true;
+    let mut rows = Vec::new();
+    for &shards in &shard_counts {
+        for &threads in &thread_counts {
+            // speculation is a property of the sharded walk; the
+            // unsharded rows pin the oracle and skip the redundant knob
+            let widths: &[usize] = if shards <= 1 { &[0] } else { &[0, 2] };
+            for &speculation in widths {
+                let mut index = IndexBuilder::new(Backend::TrueKnn)
+                    .config(IndexConfig {
+                        exclude_self: false,
+                        seed: 42,
+                        threads,
+                        shards,
+                        speculation,
+                        ..Default::default()
+                    })
+                    .build(points.to_vec());
+                // untimed warmup: the first pass settles any lazy state
+                // so timed passes measure the walk, not construction
+                let sig: Vec<(u32, u32)> = index
+                    .knn(&queries, BENCH_K)
+                    .neighbors
+                    .iter()
+                    .flat_map(|nb| nb.iter().map(|n| (n.idx, n.dist.to_bits())))
+                    .collect();
+                match &oracle {
+                    None => oracle = Some(sig),
+                    Some(want) => spec_match &= &sig == want,
+                }
+                let mut best = f64::INFINITY;
+                for _ in 0..iters {
+                    let sw = Stopwatch::start();
+                    let res = index.knn(&queries, BENCH_K);
+                    best = best.min(sw.elapsed_secs());
+                    std::hint::black_box(res.neighbors.len());
+                }
+                rows.push(SpecRow {
+                    shards,
+                    threads_requested: threads,
+                    threads: if threads == 0 { cores } else { threads },
+                    speculation,
+                    seconds: best,
+                    qps: queries.len() as f64 / best.max(1e-12),
+                });
+            }
+        }
+    }
+    (queries.len(), rows, spec_match)
+}
+
+fn insert_cfg(shards: usize, requests: usize) -> ServiceConfig {
+    ServiceConfig {
+        workers: 0,
+        shards,
+        queue_depth: (requests * shards * 2).max(256),
+        heartbeat_timeout: Duration::from_secs(5),
+        trueknn: TrueKnnParams {
+            exclude_self: false,
+            threads: 1,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// Section 3, pipelined schedule: every insert acknowledged first (the
+/// ack waits only on the log append + advance sends), then every probe
+/// — owners catch up to the full fence once, amortizing the structure
+/// maintenance. Returns wall seconds and the final probe's signature.
+fn pipelined_run(
+    base: &[Point3],
+    batches: &[Vec<Point3>],
+    probes: &[Point3],
+    shards: usize,
+) -> (f64, Vec<(u32, u32)>) {
+    let (svc, handle) = Service::start(base.to_vec(), insert_cfg(shards, batches.len() + 1));
+    warm_probe(&handle, probes);
+    let sw = Stopwatch::start();
+    for b in batches {
+        // lint: allow(panic-in-lib) — bench harness: a refused insert under an inert plan invalidates the measurement
+        handle.insert(b).expect("bench insert");
+    }
+    let receivers: Vec<_> = (0..batches.len() as u64)
+        .map(|i| {
+            let req = KnnRequest::new(1 + i, probes.to_vec(), BENCH_K).with_mode(QueryMode::Rt);
+            // lint: allow(panic-in-lib) — bench harness: queues are sized for the run, a reject is a harness bug
+            handle.submit(req).expect("bench queue sized for the probes")
+        })
+        .collect();
+    let mut last = Vec::new();
+    for rx in receivers {
+        // lint: allow(panic-in-lib) — bench harness: a dead worker or typed failure invalidates the measurement
+        let resp = rx.recv().expect("worker died mid-bench").expect("probe failed");
+        last = resp_sig(&resp);
+    }
+    let s = sw.elapsed_secs();
+    svc.shutdown();
+    (s, last)
+}
+
+/// Section 3, lockstep schedule: a scattered probe is forced to
+/// completion after every insert, so each insert is fully applied on
+/// every shard owner before the next is submitted — the per-insert
+/// visibility barrier the retired broadcast design imposed.
+fn lockstep_run(
+    base: &[Point3],
+    batches: &[Vec<Point3>],
+    probes: &[Point3],
+    shards: usize,
+) -> (f64, Vec<(u32, u32)>) {
+    let (svc, handle) = Service::start(base.to_vec(), insert_cfg(shards, batches.len() + 1));
+    warm_probe(&handle, probes);
+    let sw = Stopwatch::start();
+    let mut last = Vec::new();
+    for (i, b) in batches.iter().enumerate() {
+        // lint: allow(panic-in-lib) — bench harness: a refused insert under an inert plan invalidates the measurement
+        handle.insert(b).expect("bench insert");
+        let req =
+            KnnRequest::new(1 + i as u64, probes.to_vec(), BENCH_K).with_mode(QueryMode::Rt);
+        // lint: allow(panic-in-lib) — bench harness: queues are sized for the run, a reject is a harness bug
+        let rx = handle.submit(req).expect("bench queue sized for the probes");
+        // lint: allow(panic-in-lib) — bench harness: a dead worker or typed failure invalidates the measurement
+        let resp = rx.recv().expect("worker died mid-bench").expect("probe failed");
+        last = resp_sig(&resp);
+    }
+    let s = sw.elapsed_secs();
+    svc.shutdown();
+    (s, last)
+}
+
+/// Untimed warmup probe: shard builds are eager at start, this settles
+/// the route so timed schedules measure serving, not construction.
+fn warm_probe(handle: &crate::coordinator::ServiceHandle, probes: &[Point3]) {
+    let req = KnnRequest::new(0, probes.to_vec(), BENCH_K).with_mode(QueryMode::Rt);
+    // lint: allow(panic-in-lib) — bench harness: queues are sized for the run, a reject is a harness bug
+    let rx = handle.submit(req).expect("bench queue sized for the warmup");
+    // lint: allow(panic-in-lib) — bench harness: a dead worker or typed failure invalidates the measurement
+    let _ = rx.recv().expect("worker died mid-bench").expect("warmup probe failed");
+}
+
+/// Run the bench: the serving sweep, the speculation ablation and the
+/// insert-schedule comparison; `iters` timed samples per measurement,
+/// reporting the minimum (the least-perturbed sample).
+pub fn run(n: usize, requests: usize, qpr: usize, iters: usize) -> Pr9Report {
+    let iters = iters.max(1);
+    let ds = DatasetKind::Taxi.generate(n, 42);
+    // the log clamps oversized requests the same way; clamping here too
+    // keeps the reported queries_per_request and q/s honest
+    let qpr = qpr.min(ds.len());
+
+    let (serve_rows, serve_match) = serve_sweep(&ds.points, requests, qpr, iters);
+    let (spec_queries, spec_rows, spec_match) = spec_sweep(&ds.points, iters);
+
+    let insert_shards = Executor::auto().threads().clamp(2, 8);
+    let batches: Vec<Vec<Point3>> = (0..INSERT_BATCHES)
+        .map(|i| DatasetKind::Uniform.generate(INSERT_POINTS, 200 + i as u64).points)
+        .collect();
+    let probes = ds.points[..PROBE_QUERIES.min(ds.len())].to_vec();
+    let mut pipelined_s = f64::INFINITY;
+    let mut lockstep_s = f64::INFINITY;
+    let mut insert_match = true;
+    for _ in 0..iters {
+        let (ps, psig) = pipelined_run(&ds.points, &batches, &probes, insert_shards);
+        let (ls, lsig) = lockstep_run(&ds.points, &batches, &probes, insert_shards);
+        pipelined_s = pipelined_s.min(ps);
+        lockstep_s = lockstep_s.min(ls);
+        // both final probes sit on the full-log fence: one answer
+        insert_match &= !psig.is_empty() && psig == lsig;
+    }
+
+    let results_match = serve_match && spec_match && insert_match;
+    Pr9Report {
+        n: ds.len(),
+        requests,
+        queries_per_request: qpr,
+        k: BENCH_K,
+        iters,
+        serve_rows,
+        serve_match,
+        spec_queries,
+        spec_rows,
+        spec_match,
+        insert_shards,
+        insert_batches: INSERT_BATCHES,
+        insert_points: INSERT_POINTS,
+        probe_queries: PROBE_QUERIES,
+        pipelined_s,
+        lockstep_s,
+        insert_speedup: lockstep_s / pipelined_s.max(1e-12),
+        insert_match,
+        results_match,
+    }
+}
+
+pub fn to_json(r: &Pr9Report) -> Json {
+    let serve_rows: Vec<Json> = r
+        .serve_rows
+        .iter()
+        .map(|row| {
+            Json::obj(vec![
+                ("shards", Json::Num(row.shards as f64)),
+                ("workers_requested", Json::Num(row.workers_requested as f64)),
+                ("workers", Json::Num(row.workers as f64)),
+                ("seconds", Json::Num(row.seconds)),
+                ("qps", Json::Num(row.qps)),
+            ])
+        })
+        .collect();
+    let spec_rows: Vec<Json> = r
+        .spec_rows
+        .iter()
+        .map(|row| {
+            Json::obj(vec![
+                ("shards", Json::Num(row.shards as f64)),
+                ("threads_requested", Json::Num(row.threads_requested as f64)),
+                ("threads", Json::Num(row.threads as f64)),
+                ("speculation", Json::Num(row.speculation as f64)),
+                ("seconds", Json::Num(row.seconds)),
+                ("qps", Json::Num(row.qps)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("bench", Json::Str("pr9".into())),
+        (
+            "pipelined_serving",
+            Json::obj(vec![
+                ("dataset", Json::Str("taxi".into())),
+                ("n", Json::Num(r.n as f64)),
+                ("requests", Json::Num(r.requests as f64)),
+                ("queries_per_request", Json::Num(r.queries_per_request as f64)),
+                ("k", Json::Num(r.k as f64)),
+                ("iters", Json::Num(r.iters as f64)),
+                ("route", Json::Str(RoutePath::Rt.name().into())),
+                ("rows", Json::Arr(serve_rows)),
+                ("results_match", Json::Bool(r.serve_match)),
+            ]),
+        ),
+        (
+            "speculation",
+            Json::obj(vec![
+                ("n", Json::Num(r.n as f64)),
+                ("queries", Json::Num(r.spec_queries as f64)),
+                ("k", Json::Num(r.k as f64)),
+                ("iters", Json::Num(r.iters as f64)),
+                ("rows", Json::Arr(spec_rows)),
+                ("results_match", Json::Bool(r.spec_match)),
+            ]),
+        ),
+        (
+            "fenced_inserts",
+            Json::obj(vec![
+                ("shards", Json::Num(r.insert_shards as f64)),
+                ("batches", Json::Num(r.insert_batches as f64)),
+                ("points_per_batch", Json::Num(r.insert_points as f64)),
+                ("probe_queries", Json::Num(r.probe_queries as f64)),
+                ("pipelined_seconds", Json::Num(r.pipelined_s)),
+                ("lockstep_seconds", Json::Num(r.lockstep_s)),
+                ("speedup", Json::Num(r.insert_speedup)),
+                ("results_match", Json::Bool(r.insert_match)),
+            ]),
+        ),
+        ("results_match", Json::Bool(r.results_match)),
+    ])
+}
+
+pub fn render(r: &Pr9Report) -> Table {
+    let mut t = Table::new(
+        "PR9 microbench: pipelined scatter-gather (incremental gather, speculative fan, fenced inserts)",
+        &["measurement", "config", "time", "rate"],
+    );
+    for row in &r.serve_rows {
+        t.row(vec![
+            "serve replay".into(),
+            format!(
+                "S={} W={} ({})",
+                row.shards, row.workers, row.workers_requested
+            ),
+            fmt_secs(row.seconds),
+            format!("{:.0} q/s", row.qps),
+        ]);
+    }
+    for row in &r.spec_rows {
+        t.row(vec![
+            "spec fan".into(),
+            format!("S={} T={} spec={}", row.shards, row.threads, row.speculation),
+            fmt_secs(row.seconds),
+            format!("{:.0} q/s", row.qps),
+        ]);
+    }
+    t.row(vec![
+        "insert pipelined".into(),
+        format!("S={} {} batches", r.insert_shards, r.insert_batches),
+        fmt_secs(r.pipelined_s),
+        format!("{:.2}x vs lockstep", r.insert_speedup),
+    ]);
+    t.row(vec![
+        "insert lockstep".into(),
+        format!("S={} {} batches", r.insert_shards, r.insert_batches),
+        fmt_secs(r.lockstep_s),
+        String::new(),
+    ]);
+    t.row(vec![
+        "pipelining invisible in results".into(),
+        String::new(),
+        String::new(),
+        r.results_match.to_string(),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_runs_small_and_serializes() {
+        let r = run(1_500, 8, 4, 1);
+        assert_eq!(r.requests, 8);
+        assert!(r.serve_match, "incremental gather must not change responses");
+        assert!(r.spec_match, "speculation must not change results");
+        assert!(r.insert_match, "insert schedule must not change the fenced answer");
+        assert!(r.results_match);
+        assert!(!r.serve_rows.is_empty() && !r.spec_rows.is_empty());
+        assert!(r.serve_rows.iter().all(|row| row.seconds > 0.0));
+        assert!(r.serve_rows.iter().any(|row| row.shards > 1));
+        assert!(r.spec_rows.iter().any(|row| row.speculation > 0));
+        assert!(r.pipelined_s > 0.0 && r.lockstep_s > 0.0 && r.insert_speedup > 0.0);
+        let j = to_json(&r).to_string();
+        assert!(j.contains("\"bench\":\"pr9\""));
+        assert!(j.contains("pipelined_serving"));
+        assert!(j.contains("speculation"));
+        assert!(j.contains("fenced_inserts"));
+        let parsed = crate::configx::parse_json(&j).unwrap();
+        assert!(parsed.get("pipelined_serving").is_some());
+        assert!(parsed.get("fenced_inserts").is_some());
+    }
+}

@@ -30,6 +30,14 @@ pub struct Batch {
     /// handle's scatter, so the worker serves it against exactly the
     /// shard sub-index the submit addressed.
     pub shard: Option<usize>,
+    /// Insert-log fence every request here was stamped with at submit
+    /// time: the batch must be served at exactly this insert prefix.
+    /// Mixing fences in one batch would let one worker serve an older
+    /// request's shard leg at a newer prefix while the sibling shards
+    /// (on other workers) serve it at the older one — a mixed-prefix
+    /// merge. Fence homogeneity in [`DynamicBatcher::next_batch`] is
+    /// what makes "catch up once per batch" exact.
+    pub fence: u64,
 }
 
 impl Batch {
@@ -72,7 +80,7 @@ impl Default for BatcherConfig {
 #[derive(Debug)]
 pub struct DynamicBatcher {
     cfg: BatcherConfig,
-    pending: Vec<(KnnRequest, RoutePath, Option<usize>, Instant)>,
+    pending: Vec<(KnnRequest, RoutePath, Option<usize>, u64, Instant)>,
 }
 
 impl DynamicBatcher {
@@ -84,16 +92,17 @@ impl DynamicBatcher {
         }
     }
 
-    /// Queue one routed request (with its submit-time shard pin and
-    /// arrival instant) for batching.
+    /// Queue one routed request (with its submit-time shard pin,
+    /// insert-log fence and arrival instant) for batching.
     pub fn push(
         &mut self,
         req: KnnRequest,
         path: RoutePath,
         shard: Option<usize>,
+        fence: u64,
         arrived: Instant,
     ) {
-        self.pending.push((req, path, shard, arrived));
+        self.pending.push((req, path, shard, fence, arrived));
     }
 
     /// Requests queued but not yet shipped in a batch.
@@ -102,11 +111,12 @@ impl DynamicBatcher {
     }
 
     /// Form the next batch: take the oldest request, then greedily add
-    /// every other pending request with the same k, mode, route path and
-    /// shard (order preserved) until a size bound trips. Returns None
-    /// when idle. The (k, mode, path, shard) homogeneity is what lets
-    /// the worker serve a whole batch through one index while still
-    /// honoring each request's explicit `QueryMode`.
+    /// every other pending request with the same k, mode, route path,
+    /// shard and insert fence (order preserved) until a size bound
+    /// trips. Returns None when idle. The (k, mode, path, shard, fence)
+    /// homogeneity is what lets the worker serve a whole batch through
+    /// one index at one insert prefix while still honoring each
+    /// request's explicit `QueryMode`.
     pub fn next_batch(&mut self) -> Option<Batch> {
         if self.pending.is_empty() {
             return None;
@@ -115,17 +125,21 @@ impl DynamicBatcher {
         let mode = self.pending[0].0.mode;
         let path = self.pending[0].1;
         let shard = self.pending[0].2;
+        let fence = self.pending[0].3;
         let mut requests = Vec::new();
         let mut total_q = 0usize;
         let mut i = 0;
         while i < self.pending.len() {
-            let (req_i, path_i, shard_i, _) = &self.pending[i];
-            let compatible =
-                req_i.k == k && req_i.mode == mode && *path_i == path && *shard_i == shard;
+            let (req_i, path_i, shard_i, fence_i, _) = &self.pending[i];
+            let compatible = req_i.k == k
+                && req_i.mode == mode
+                && *path_i == path
+                && *shard_i == shard
+                && *fence_i == fence;
             let fits = total_q + req_i.queries.len() <= self.cfg.max_queries
                 || requests.is_empty(); // an oversize request still ships alone
             if compatible && fits && requests.len() < self.cfg.max_requests {
-                let (req, _, _, t) = self.pending.remove(i);
+                let (req, _, _, _, t) = self.pending.remove(i);
                 total_q += req.queries.len();
                 requests.push((req, t));
                 if total_q >= self.cfg.max_queries {
@@ -148,6 +162,7 @@ impl DynamicBatcher {
             mode,
             path,
             shard,
+            fence,
         })
     }
 }
@@ -165,9 +180,9 @@ mod tests {
     fn batches_group_same_k() {
         let mut b = DynamicBatcher::new(BatcherConfig::default());
         let now = Instant::now();
-        b.push(req(1, 10, 5), RoutePath::Rt, None, now);
-        b.push(req(2, 10, 7), RoutePath::Rt, None, now);
-        b.push(req(3, 10, 5), RoutePath::Rt, None, now);
+        b.push(req(1, 10, 5), RoutePath::Rt, None, 0, now);
+        b.push(req(2, 10, 7), RoutePath::Rt, None, 0, now);
+        b.push(req(3, 10, 5), RoutePath::Rt, None, 0, now);
         let batch = b.next_batch().unwrap();
         let ids: Vec<u64> = batch.requests.iter().map(|(r, _)| r.id).collect();
         assert_eq!(ids, vec![1, 3]);
@@ -185,8 +200,8 @@ mod tests {
     fn request_keys_carry_the_batch_shard() {
         let mut b = DynamicBatcher::new(BatcherConfig::default());
         let now = Instant::now();
-        b.push(req(4, 2, 5), RoutePath::Rt, Some(1), now);
-        b.push(req(9, 2, 5), RoutePath::Rt, Some(1), now);
+        b.push(req(4, 2, 5), RoutePath::Rt, Some(1), 0, now);
+        b.push(req(9, 2, 5), RoutePath::Rt, Some(1), 0, now);
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.request_keys(), vec![(4, Some(1)), (9, Some(1))]);
     }
@@ -198,8 +213,8 @@ mod tests {
             max_requests: 64,
         });
         let now = Instant::now();
-        b.push(req(1, 10, 5), RoutePath::Rt, None, now);
-        b.push(req(2, 10, 5), RoutePath::Rt, None, now);
+        b.push(req(1, 10, 5), RoutePath::Rt, None, 0, now);
+        b.push(req(2, 10, 5), RoutePath::Rt, None, 0, now);
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.requests.len(), 1, "second request would exceed cap");
         assert_eq!(b.pending_len(), 1);
@@ -211,7 +226,7 @@ mod tests {
             max_queries: 5,
             max_requests: 64,
         });
-        b.push(req(1, 100, 5), RoutePath::Rt, None, Instant::now());
+        b.push(req(1, 100, 5), RoutePath::Rt, None, 0, Instant::now());
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.total_queries(), 100);
     }
@@ -235,7 +250,7 @@ mod tests {
                     0 => None,
                     s => Some(s as usize),
                 };
-                b.push(r, path, shard, now);
+                b.push(r, path, shard, rng.below(2) as u64, now);
             }
             let mut seen = std::collections::HashSet::new();
             while let Some(batch) = b.next_batch() {
@@ -263,9 +278,9 @@ mod tests {
         use super::super::request::QueryMode;
         let mut b = DynamicBatcher::new(BatcherConfig::default());
         let now = Instant::now();
-        b.push(req(1, 4, 5).with_mode(QueryMode::Rt), RoutePath::Rt, None, now);
-        b.push(req(2, 4, 5).with_mode(QueryMode::Brute), RoutePath::BruteCpu, None, now);
-        b.push(req(3, 4, 5).with_mode(QueryMode::Rt), RoutePath::Rt, None, now);
+        b.push(req(1, 4, 5).with_mode(QueryMode::Rt), RoutePath::Rt, None, 0, now);
+        b.push(req(2, 4, 5).with_mode(QueryMode::Brute), RoutePath::BruteCpu, None, 0, now);
+        b.push(req(3, 4, 5).with_mode(QueryMode::Rt), RoutePath::Rt, None, 0, now);
         let first = b.next_batch().unwrap();
         assert_eq!(first.mode, QueryMode::Rt);
         assert_eq!(first.path, RoutePath::Rt);
@@ -284,9 +299,9 @@ mod tests {
         // batch must stay pinned to one shard sub-index
         let mut b = DynamicBatcher::new(BatcherConfig::default());
         let now = Instant::now();
-        b.push(req(1, 4, 5), RoutePath::Rt, Some(0), now);
-        b.push(req(1, 4, 5), RoutePath::Rt, Some(1), now);
-        b.push(req(2, 4, 5), RoutePath::Rt, Some(0), now);
+        b.push(req(1, 4, 5), RoutePath::Rt, Some(0), 0, now);
+        b.push(req(1, 4, 5), RoutePath::Rt, Some(1), 0, now);
+        b.push(req(2, 4, 5), RoutePath::Rt, Some(0), 0, now);
         let first = b.next_batch().unwrap();
         assert_eq!(first.shard, Some(0));
         let ids: Vec<u64> = first.requests.iter().map(|(r, _)| r.id).collect();
@@ -298,14 +313,34 @@ mod tests {
     }
 
     #[test]
+    fn different_fences_never_batch_together() {
+        // two scatters straddling an insert carry different fences; the
+        // older request's legs must be served at the older prefix on
+        // every worker, so the batch splits on the fence
+        let mut b = DynamicBatcher::new(BatcherConfig::default());
+        let now = Instant::now();
+        b.push(req(1, 4, 5), RoutePath::Rt, Some(0), 3, now);
+        b.push(req(2, 4, 5), RoutePath::Rt, Some(0), 4, now);
+        b.push(req(3, 4, 5), RoutePath::Rt, Some(0), 3, now);
+        let first = b.next_batch().unwrap();
+        assert_eq!(first.fence, 3);
+        let ids: Vec<u64> = first.requests.iter().map(|(r, _)| r.id).collect();
+        assert_eq!(ids, vec![1, 3], "same-fence requests batch together");
+        let second = b.next_batch().unwrap();
+        assert_eq!(second.fence, 4);
+        assert_eq!(second.requests[0].0.id, 2);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
     fn same_mode_different_path_never_batches() {
         // Auto-mode requests can land on different paths when k differs;
         // if k matches but the submit-time route differs (e.g. a request
         // routed before an availability change), the batch must split
         let mut b = DynamicBatcher::new(BatcherConfig::default());
         let now = Instant::now();
-        b.push(req(1, 4, 5), RoutePath::Rt, None, now);
-        b.push(req(2, 4, 5), RoutePath::BruteCpu, None, now);
+        b.push(req(1, 4, 5), RoutePath::Rt, None, 0, now);
+        b.push(req(2, 4, 5), RoutePath::BruteCpu, None, 0, now);
         let first = b.next_batch().unwrap();
         assert_eq!(first.requests.len(), 1);
         assert_eq!(first.path, RoutePath::Rt);

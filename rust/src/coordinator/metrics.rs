@@ -26,10 +26,13 @@ pub struct WorkerMetrics {
     /// Messages currently sitting in the queue (incremented before the
     /// send, decremented by the worker on receive — never underflows).
     pub queue_depth: AtomicU64,
-    /// Deepest the queue has been, recorded at accept time. Best-effort
-    /// under contention: the observed depth includes other submitters'
-    /// in-flight attempts, so a burst can read slightly above the
-    /// queue's physical capacity — operator telemetry, not an invariant.
+    /// Deepest the queue has ever been: an **exact** high-water mark.
+    /// Producers serialize `[depth bump, send, hwm record]` under a
+    /// per-worker enqueue lock and record from a depth load taken after
+    /// the successful send, so every recorded value is an occupancy the
+    /// queue truly attained — never inflated by a concurrent
+    /// submitter's in-flight attempt or a failed send's transient bump,
+    /// and never above the queue's physical capacity.
     pub queue_hwm: AtomicU64,
 }
 
@@ -56,8 +59,12 @@ pub struct Metrics {
     /// is off). Like `route_builds`, the owning worker stores the shard
     /// structure's cumulative build count (rebalance rebuilds included).
     pub shard_builds: Vec<AtomicU64>,
-    /// Queries served per shard of the sharded route (every scattered
-    /// sub-batch adds its query count to its shard's slot).
+    /// Queries served per shard of the sharded route, counted exactly
+    /// **once per (request, shard)**: the tick happens when a shard's
+    /// partial is first merged into its gather, keyed by the gather's
+    /// per-shard `merged` flag — so a failover re-dispatch whose
+    /// original owner recovers (both serve the same leg) still adds a
+    /// shard's work to its slot only once.
     pub shard_queries: Vec<AtomicU64>,
     /// One slot per pool worker.
     pub workers: Vec<WorkerMetrics>,

@@ -21,18 +21,35 @@
 //!
 //! Responses are bitwise-identical at any pool size and any thread
 //! count: routing is a pure function, a route's requests stay FIFO on
-//! one worker, inserts are broadcast barriers, and per-request results
-//! never depend on batch composition (engine determinism contract).
+//! one worker, inserts are fenced through one shared append-once log,
+//! and per-request results never depend on batch composition (engine
+//! determinism contract).
 //!
 //! A route configured with `ServiceConfig::shards > 1` additionally
 //! splits its *dataset* into spatial shards ([`crate::shard`]): each
 //! shard's sub-index lives on its own worker
-//! ([`Router::worker_for_shard`]), the handle scatters such a request to
-//! every shard owner, and the last-finishing owner gathers — merging the
-//! per-shard partials into the one exact response. That turns the
-//! remaining hot-route serialization into data parallelism while
-//! keeping responses bitwise-identical to the unsharded single-worker
-//! oracle at any shards × workers × threads.
+//! ([`Router::worker_for_shard`]), the handle scatters such a request
+//! to every shard owner, and each owner **merges its partial into the
+//! gather as it finishes** — the incremental pairwise merge (itself
+//! fanned across the exec engine) replaces the old single
+//! O(queries·k·S) pass on whichever worker delivered last. Merge order
+//! cannot matter: every top-k cut is keep-k-smallest under the strict
+//! `(distance, id)` total order, so the gathered response is bitwise
+//! identical to the unsharded single-worker oracle at any
+//! shards × workers × threads × speculation.
+//!
+//! **Inserts are fenced, not barriers.** An accepted insert is appended
+//! exactly once to the pool-shared insert log and workers receive only
+//! a sequence advance; each worker pulls the records it needs between
+//! batches, so only owners materialize points. Every request is
+//! stamped at submit with the log sequence it must observe — all S
+//! legs of a scattered request share one fence read under the insert
+//! lock, so an insert can never land *between* two shards of one
+//! request, and a failover re-dispatch re-serves at the gather's
+//! original fence (an ephemeral at-fence shard rebuild, if its new
+//! worker already ran past it). Queries submitted after `insert`
+//! returns observe the points on every route; queries racing it may or
+//! may not, exactly as with a single worker.
 //!
 //! No tokio in the offline build; the event loop is a pool of dedicated
 //! worker threads with `std::sync::mpsc` channels, which is also the
@@ -48,20 +65,24 @@
 //!
 //! - *Worker panics* — genuine bugs or faults injected by a seeded
 //!   [`crate::faults::FaultPlan`]. The supervisor restarts the loop on
-//!   the same thread: indexes are rebuilt from the base dataset plus the
-//!   worker's ordered insert log (indexes are pure functions of
-//!   `(base, inserts, config)`, so the rebuild is bit-identical), and
-//!   every accepted-but-unanswered request is re-enqueued from the
-//!   journal in its original submit order. Because a route's requests
-//!   stay FIFO on one worker even across a restart, replayed responses
-//!   are **bitwise-identical** to a run without the crash.
+//!   the same thread: indexes are rebuilt from the base dataset plus
+//!   the shared insert log's fenced prefix (indexes are pure functions
+//!   of `(base, log prefix, config)`, so the rebuild is bit-identical),
+//!   and every accepted-but-unanswered request is re-enqueued from the
+//!   journal in its original submit order, each carrying its original
+//!   fence. Because a route's requests stay FIFO on one worker even
+//!   across a restart, replayed responses are **bitwise-identical** to
+//!   a run without the crash.
 //! - *Worker hangs* — detected by heartbeat staleness. On a sharded
-//!   pool, a dedicated monitor re-dispatches a timed-out scatter partial
-//!   to the shard's deterministic failover owner
+//!   pool, a dedicated monitor re-dispatches a timed-out scatter
+//!   partial — at the gather's original insert fence — to the shard's
+//!   deterministic failover owner
 //!   ([`Router::worker_for_shard_excluding`]), which rebuilds the shard
-//!   from its own partition replica and delivers the identical partial.
-//!   Partial delivery is idempotent, so the owner waking up later and
-//!   delivering a duplicate is harmless — both copies are the same bits.
+//!   from its own partition replica at exactly that log prefix and
+//!   delivers the identical partial. Partial delivery is idempotent
+//!   *and counter-deduped* (per-shard merged flag), so the owner waking
+//!   up later and delivering a duplicate neither changes the response
+//!   nor double-counts the shard's work.
 //! - *Crash loops* — a crash is attributed to the requests in flight at
 //!   that moment; an id that kills its worker twice is **quarantined**:
 //!   its pending entries fail with [`ServiceError::Poisoned`], later
@@ -82,18 +103,18 @@
 //! (`restarts`/`replays`/`deadline_misses`/`poisoned` in
 //! [`MetricsSnapshot`]).
 //!
-//! **Documented limitation.** The insert barrier and the journal
-//! interact conservatively: a journaled request replayed across an
-//! insert that arrived behind it may be served post-insert. That stays
-//! within the ordering contract (a query submitted before an insert
-//! "may or may not" observe it) but means replay equality is guaranteed
-//! against the oracle fed the same submit order, not against every
-//! interleaving of a racing insert stream.
+//! Replay is insert-exact: a journaled request carries the fence it
+//! was stamped with at submit, so re-serving it after a crash — even
+//! once the log has grown past it — observes precisely the insert
+//! prefix the original attempt would have (scattered legs exactly;
+//! direct legs at-least, which is the same serve-at-least contract a
+//! live direct request has).
 //!
 //! **Process-level crashes** (the whole service dying, not one worker)
 //! are survived when [`ServiceConfig::persist`] is set — see
 //! [`crate::persist`] for the on-disk formats. Every accepted insert is
-//! appended to a checksummed WAL *before* the in-memory broadcast, and
+//! appended to a checksummed WAL *before* the shared insert log (under
+//! the same lock, so WAL order is fence order), and
 //! the RT route's index is periodically serialized into a checksummed,
 //! fingerprint-fenced snapshot (plus a final one at clean shutdown). A
 //! cold [`Service::start`] repairs the WAL's torn tail, loads the

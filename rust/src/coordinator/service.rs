@@ -30,27 +30,39 @@
 //!   never on batch composition or thread count — so responses are
 //!   bitwise-identical to a `workers = 1` service by the engine's
 //!   determinism contract.
-//! - **Inserts are barriers.** [`ServiceHandle::insert`] broadcasts the
-//!   points to every worker; a worker drains its pending batches before
-//!   applying them, so a query observes exactly the inserts submitted
-//!   before it — at any pool size.
+//! - **Inserts are fenced, not barriers.** [`ServiceHandle::insert`]
+//!   appends the record once to the shared [`InsertLog`] and broadcasts
+//!   only a sequence-number *advance* — no worker receives (or copies)
+//!   the points themselves; each one materializes exactly the slices it
+//!   owns when it catches up. Every request is stamped at submit with
+//!   the log sequence it must observe (its **fence**), and a worker
+//!   catches its registry up to a batch's fence before serving it, so a
+//!   query still observes exactly the inserts submitted before it — at
+//!   any pool size — without the old full-pool drain barrier per
+//!   insert.
 //! - **Sharded hot route.** With `ServiceConfig::shards > 1` the RT
 //!   route's dataset is cut into balanced Morton-range shards
 //!   ([`crate::shard`]); shard `s` lives on worker
 //!   [`Router::worker_for_shard`]`(Rt, s, pool)`, so one hot route
 //!   occupies `min(S, pool)` workers. The handle **scatters** each RT
-//!   request (one message per shard, under the insert lock so the
-//!   scattered slices see one consistent point set) and the worker
-//!   delivering the last per-shard partial **gathers**: it merges the
-//!   partials per query (k smallest under `(distance, id)`) and sends
-//!   the one response. Every worker holds a replica of the one
-//!   partition `Service::start` computed and applies the broadcast
-//!   insert stream to it through the same routing step, so shard
-//!   membership — and the rebalance-on-overflow rebuild — stays
-//!   consistent across the pool with no coordination (and a failover
-//!   worker can rebuild a dead owner's shard from its replica), and
-//!   responses stay bitwise-identical to an unsharded single-worker
-//!   service.
+//!   request (one message per shard, stamped with one shared fence read
+//!   under the insert lock so every scattered leg serves the identical
+//!   insert prefix) and the gather is **incremental**: each arriving
+//!   partial is pairwise-merged into the gather's accumulator (k
+//!   smallest under `(distance, id)`, fanned per query across the exec
+//!   engine) by the worker that delivered it, so the last-finishing
+//!   worker sends a response that is already merged instead of paying
+//!   one O(queries·k·S) pass under the gather lock. Keep-k-smallest
+//!   under a total order is merge-order independent, which is why the
+//!   accumulated result — and therefore the response — stays
+//!   bitwise-identical to an unsharded single-worker service. Every
+//!   worker holds a replica of the one partition `Service::start`
+//!   computed and applies the shared insert log to it through the same
+//!   routing step, so shard membership — and the rebalance-on-overflow
+//!   rebuild — stays consistent across the pool with no coordination
+//!   (and a failover worker can rebuild a dead owner's shard **at the
+//!   request's exact fence** from its replica, even when its own
+//!   registry has already run ahead).
 //! - **Supervision.** Every worker runs under
 //!   [`super::supervisor::supervise_worker`]: a panic (or an injected
 //!   fault from [`crate::faults`]) is caught, the worker's index state
@@ -89,6 +101,12 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// Minimum per-chunk query count when fanning gather merges and id
+/// remaps over the exec engine — per-query work is a k-element table
+/// lookup or a 2k-element sort, so chunks below this cost more to
+/// schedule than to run serially.
+const PAR_QUERY_MIN: usize = 64;
 
 /// Tuning knobs of the batching query service (pool size, queue depth,
 /// routing, RT-route sharding, deadlines/supervision, TrueKNN
@@ -249,12 +267,78 @@ pub type ResponseReceiver = Receiver<Result<KnnResponse, ServiceError>>;
 
 pub(super) type ResponseSender = Sender<Result<KnnResponse, ServiceError>>;
 
+/// The shared, append-only insert log: every accepted insert record
+/// lives here exactly **once** (an `Arc` per record), in the one global
+/// order the insert lock serializes. Workers no longer receive point
+/// broadcasts — they receive [`Msg::InsertAdvance`] sequence
+/// notifications and pull the records they need from this log, so only
+/// the worker that owns a slice of the data ever materializes it.
+///
+/// The log sequence doubles as the service's **fence** domain: a
+/// request stamped with fence `f` must be served at exactly (scattered
+/// shard legs) or at least (direct legs) the first `f` records. The
+/// WAL, when persistence is on, is appended under the same lock, so
+/// WAL order, log order and fence order are one order.
+pub(super) struct InsertLog {
+    records: Mutex<Vec<Arc<Vec<Point3>>>>,
+}
+
+impl InsertLog {
+    /// A log seeded with the cold start's replayed WAL records (empty
+    /// for an in-memory start): recovered inserts are part of the fence
+    /// domain from the first submit.
+    pub(super) fn new(seed: Vec<Arc<Vec<Point3>>>) -> Self {
+        Self {
+            records: Mutex::new(seed),
+        }
+    }
+
+    /// Current sequence number = number of appended records. A fence
+    /// read under the insert lock is stable until the lock is released.
+    pub(super) fn seq(&self) -> u64 {
+        self.records
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .len() as u64
+    }
+
+    /// Append one record; returns the new sequence number (the fence
+    /// that observes this record). Called under the insert lock only.
+    pub(super) fn append(&self, record: Arc<Vec<Point3>>) -> u64 {
+        let mut recs = self
+            .records
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        recs.push(record);
+        recs.len() as u64
+    }
+
+    /// The records in `[from, to)`, as cheap `Arc` clones. `to` beyond
+    /// the head is clamped (a torn caller can never read past the log).
+    pub(super) fn range(&self, from: u64, to: u64) -> Vec<Arc<Vec<Point3>>> {
+        let recs = self
+            .records
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        let to = (to as usize).min(recs.len());
+        let from = (from as usize).min(to);
+        recs[from..to].to_vec()
+    }
+}
+
 pub(super) enum Msg {
     /// One routed request (or, for a sharded route, one shard's slice of
-    /// a scattered request — the `Option<usize>` names the shard).
-    Request(KnnRequest, RoutePath, Option<usize>, ReplySink, Instant),
-    /// Broadcast to every worker; applied between batches.
-    Insert(Arc<Vec<Point3>>),
+    /// a scattered request — the `Option<usize>` names the shard). The
+    /// `u64` is the request's insert-log fence, stamped at submit.
+    Request(KnnRequest, RoutePath, Option<usize>, u64, ReplySink, Instant),
+    /// Broadcast to every worker when the shared [`InsertLog`] grows:
+    /// "the log now holds `seq` records". Carries no points — each
+    /// worker pulls the records it owns from the log when it catches
+    /// up, after draining the batches that must not observe them.
+    InsertAdvance {
+        /// The log sequence to catch up to.
+        seq: u64,
+    },
     /// Ask the RT route's owning worker to write a snapshot fenced at
     /// this WAL watermark (fire-and-forget; a failure only degrades
     /// durability to WAL-only).
@@ -298,14 +382,21 @@ impl ReplySink {
     }
 }
 
-/// Rendezvous of one scattered request: per-shard partials accumulate
-/// here, and whichever worker delivers the **last** partial merges and
-/// replies. The merged result depends only on the partials (fixed merge
-/// order over shard ids), never on delivery order — that is what keeps
-/// scatter-gather responses bitwise-identical to the unsharded oracle,
-/// *including* when a partial arrives twice (owner recovered after the
-/// monitor already re-dispatched it): delivery is idempotent per shard
-/// slot, and both copies are the same deterministic answer.
+/// Rendezvous of one scattered request. Each arriving partial is
+/// pairwise-merged into the per-query accumulator **as it lands** by
+/// the worker that delivered it (the incremental gather), and whichever
+/// worker merges the last shard's partial takes the reply sender and
+/// responds — the response is already merged by then, so no worker ever
+/// pays a full O(queries·k·S) pass under the gather lock. Keep-k-
+/// smallest under the `(distance, id)` total order is independent of
+/// merge order (every cut keeps the same lexicographically-smallest k
+/// whatever order candidates arrive in), so the accumulated result
+/// depends only on the partials, never on delivery order — that is
+/// what keeps scatter-gather responses bitwise-identical to the
+/// unsharded oracle, *including* when a partial arrives twice (owner
+/// recovered after the monitor already re-dispatched it): the per-shard
+/// `merged` flag makes delivery idempotent, and both copies are the
+/// same deterministic answer.
 pub(super) struct Gather {
     pub(super) id: u64,
     pub(super) k: usize,
@@ -313,6 +404,12 @@ pub(super) struct Gather {
     /// The original request, retained so the failover monitor can
     /// re-dispatch a timed-out shard's slice verbatim.
     pub(super) req: KnnRequest,
+    /// The insert-log fence every leg of this request was stamped with:
+    /// one value, read under the insert lock at scatter time, so a
+    /// failover re-dispatch serves the **same** insert prefix as every
+    /// sibling shard — a mixed-prefix merge is impossible by
+    /// construction.
+    pub(super) fence: u64,
     pub(super) submitted: Instant,
     pub(super) state: Mutex<GatherState>,
 }
@@ -322,9 +419,16 @@ pub(super) struct GatherState {
     /// stays `Sync` on every supported toolchain (`mpsc::Sender` only
     /// recently became `Sync` itself).
     pub(super) reply: Option<ResponseSender>,
-    /// One slot per shard; `Some` once that shard's partial landed.
-    pub(super) partials: Vec<Option<Vec<Vec<Neighbor>>>>,
-    pub(super) filled: usize,
+    /// Per-query accumulator: the k best seen across every merged
+    /// shard so far, under the `(distance, id)` total order.
+    pub(super) acc: Vec<Vec<Neighbor>>,
+    /// Per-shard flag: this shard's partial has been merged into `acc`
+    /// (and counted — the idempotence **and** the counter-dedupe key,
+    /// see `Metrics::shard_queries`).
+    pub(super) merged: Vec<bool>,
+    /// Shards merged so far; the delivery taking this to `shards`
+    /// replies.
+    pub(super) merged_count: usize,
     /// Per-shard flag: the monitor re-dispatched this shard's slice to
     /// a failover worker (at most once per shard per gather).
     pub(super) redispatched: Vec<bool>,
@@ -339,12 +443,20 @@ pub struct ServiceHandle {
     router: Arc<Router>,
     /// Indexed points (base + inserts) — the `n` of the routing policy.
     data_len: Arc<AtomicUsize>,
-    /// Serializes insert broadcasts: concurrent inserts must reach every
-    /// worker's queue in one global order, or the workers' views of the
-    /// data (and point ids) would fork per route. The sharded scatter
-    /// takes the same lock so an insert can never land between two
-    /// shards of one request.
+    /// Serializes inserts: concurrent inserts must append to the shared
+    /// log (and the WAL) in one global order, or the workers' views of
+    /// the data (and point ids) would fork per route. The sharded
+    /// scatter takes the same lock to read its fence, so an insert can
+    /// never land between two shards of one request — every leg is
+    /// stamped with the identical log prefix.
     insert_lock: Arc<Mutex<()>>,
+    /// The shared append-only insert log (see [`InsertLog`]): records
+    /// live here once; workers pull what they own at catch-up.
+    log: Arc<InsertLog>,
+    /// One lock per worker queue, serializing `[depth bump, send, hwm
+    /// record]` so the recorded high-water mark is always a truly
+    /// attained queue occupancy (see `WorkerMetrics::queue_hwm`).
+    enqueue_locks: Arc<Vec<Mutex<()>>>,
     /// RT-route shard count (1 = unsharded).
     shards: usize,
     metrics: Arc<Metrics>,
@@ -385,29 +497,41 @@ impl ServiceHandle {
             self.scatter(req, path, tx)?;
         } else {
             let w = Router::worker_for(path, self.txs.len());
+            // a direct request's fence is a *lower bound* (serve-at-
+            // least): read without the insert lock, it still orders
+            // after every insert whose `insert()` returned before this
+            // submit, which is exactly the visibility contract
+            let fence = self.log.seq();
             self.try_send(
                 w,
                 // lint: allow(wallclock-in-core) — submit timestamp feeds latency telemetry only, never results
-                Msg::Request(req, path, None, ReplySink::Direct(tx), Instant::now()),
+                Msg::Request(req, path, None, fence, ReplySink::Direct(tx), Instant::now()),
             )?;
         }
         Ok(rx)
     }
 
     /// Try-send one message to worker `w` with full backpressure
-    /// accounting. The depth is incremented *before* the send so the
-    /// worker-side decrement can never observe it missing (no
-    /// underflow); the high-water mark is recorded only for accepted
-    /// messages, and is best-effort under contention (see its doc in
-    /// WorkerMetrics). A disconnected channel is a recovery-path
-    /// signal (`ShutDown`), never a panic site — the supervisor may be
-    /// mid-restart behind it.
+    /// accounting, serialized per worker by its enqueue lock. The depth
+    /// is incremented *before* the send so the worker-side decrement
+    /// can never observe it missing (no underflow). The high-water mark
+    /// is recorded from a **load after the successful send**: under the
+    /// enqueue lock no other producer is mid-`[bump, send]` for this
+    /// queue, so the gauge equals the live occupancy at that instant
+    /// and every recorded value is one the queue truly attained (see
+    /// `WorkerMetrics::queue_hwm`). A disconnected channel is a
+    /// recovery-path signal (`ShutDown`), never a panic site — the
+    /// supervisor may be mid-restart behind it.
     pub(super) fn try_send(&self, w: usize, msg: Msg) -> Result<(), ServiceError> {
         let wm = &self.metrics.workers[w];
-        let depth = wm.queue_depth.fetch_add(1, Ordering::SeqCst) + 1;
+        let _q = self.enqueue_locks[w]
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        wm.queue_depth.fetch_add(1, Ordering::SeqCst);
         match self.txs[w].try_send(msg) {
             Ok(()) => {
-                wm.queue_hwm.fetch_max(depth, Ordering::SeqCst);
+                wm.queue_hwm
+                    .fetch_max(wm.queue_depth.load(Ordering::SeqCst), Ordering::SeqCst);
                 Metrics::inc(&wm.submitted);
                 self.inflight.fetch_add(1, Ordering::SeqCst);
                 Ok(())
@@ -426,71 +550,72 @@ impl ServiceHandle {
     }
 
     /// Scatter a sharded-route request: one message per shard to that
-    /// shard's owning worker. Runs under the insert lock so the
-    /// scattered sub-requests observe one consistent point set — an
-    /// insert broadcast can never interleave between two shards of the
-    /// same request. A mid-scatter rejection abandons the gather:
-    /// already-enqueued shard messages are still served (their gauges
-    /// settle normally) but the merged reply has no receiver.
+    /// shard's owning worker. The fence is read — and every leg sent —
+    /// under the insert lock, so all S legs are stamped with the
+    /// identical log prefix and an insert can never interleave between
+    /// two shards of the same request: the partials merged into one
+    /// response are always computed at one consistent point set, even
+    /// when a leg is later re-dispatched to a failover worker (it
+    /// re-serves at [`Gather::fence`], not at whatever its registry
+    /// holds). A mid-scatter rejection fails the gather before it is
+    /// ever registered with the monitor: already-enqueued shard legs
+    /// settle their gauges, then find the gather completed and drop.
     fn scatter(
         &self,
         req: KnnRequest,
         path: RoutePath,
         reply: ResponseSender,
     ) -> Result<(), ServiceError> {
-        let gather = Arc::new(Gather {
-            id: req.id,
-            k: req.k,
-            path,
-            req: req.clone(),
-            // lint: allow(wallclock-in-core) — submit timestamp feeds latency telemetry only, never results
-            submitted: Instant::now(),
-            state: Mutex::new(GatherState {
-                reply: Some(reply),
-                partials: vec![None; self.shards],
-                filled: 0,
-                redispatched: vec![false; self.shards],
-                service_seconds: 0.0,
-            }),
-        });
-        if let Some(gathers) = &self.gathers {
-            gathers
-                .lock()
-                .unwrap_or_else(std::sync::PoisonError::into_inner)
-                .push(gather.clone());
-        }
-        // build every per-shard message (request clones included) before
-        // taking the lock, so the critical section every scatter and
-        // insert contends on is just the S try_sends
-        let msgs: Vec<(usize, Msg)> = (0..self.shards)
-            .map(|s| {
-                (
-                    Router::worker_for_shard(path, s, self.txs.len()),
-                    Msg::Request(
-                        req.clone(),
-                        path,
-                        Some(s),
-                        ReplySink::Gather(gather.clone()),
-                        // lint: allow(wallclock-in-core) — per-shard arrival stamp is telemetry only
-                        Instant::now(),
-                    ),
-                )
-            })
-            .collect();
+        // clone the per-shard request payloads (the expensive part)
+        // before taking the lock, so the critical section every scatter
+        // and insert contends on is the fence read plus S try_sends
+        let mut legs: Vec<KnnRequest> = (0..self.shards).map(|_| req.clone()).collect();
+        let n_queries = req.queries.len();
         // a poisoned lock only means another handle's thread panicked
         // mid-scatter; the ordering guard itself carries no data
         let _order = self
             .insert_lock
             .lock()
             .unwrap_or_else(std::sync::PoisonError::into_inner);
-        for (w, msg) in msgs {
+        let fence = self.log.seq();
+        let gather = Arc::new(Gather {
+            id: req.id,
+            k: req.k,
+            path,
+            req,
+            fence,
+            // lint: allow(wallclock-in-core) — submit timestamp feeds latency telemetry only, never results
+            submitted: Instant::now(),
+            state: Mutex::new(GatherState {
+                reply: Some(reply),
+                acc: vec![Vec::new(); n_queries],
+                merged: vec![false; self.shards],
+                merged_count: 0,
+                redispatched: vec![false; self.shards],
+                service_seconds: 0.0,
+            }),
+        });
+        for (s, leg) in legs.drain(..).enumerate() {
+            let w = Router::worker_for_shard(path, s, self.txs.len());
+            let msg = Msg::Request(
+                leg,
+                path,
+                Some(s),
+                fence,
+                ReplySink::Gather(gather.clone()),
+                // lint: allow(wallclock-in-core) — per-shard arrival stamp is telemetry only
+                Instant::now(),
+            );
             if let Err(err) = self.try_send(w, msg) {
-                // mid-scatter rejection: fail the gather so the monitor's
-                // sweep retires it (already-enqueued shard legs settle
-                // their gauges, then find the gather completed and drop)
                 ReplySink::Gather(gather).fail(err.clone());
                 return Err(err);
             }
+        }
+        if let Some(gathers) = &self.gathers {
+            gathers
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner)
+                .push(gather);
         }
         Ok(())
     }
@@ -502,17 +627,21 @@ impl ServiceHandle {
         rx.recv().map_err(|_| ServiceError::ShutDown)?
     }
 
-    /// Add points to the served dataset: broadcast to every worker, each
-    /// of which updates its own indexes between batches. Rejects the
-    /// degenerate shapes at the boundary (empty batch, non-finite
-    /// coordinates) — they would otherwise fork the workers' views or
-    /// corrupt every downstream structure. Uses a blocking send (never
-    /// backpressure-rejected) — inserts are rare, and dropping one on a
-    /// full queue would silently fork the workers' views of the data.
+    /// Add points to the served dataset: append the record **once** to
+    /// the shared [`InsertLog`] and broadcast only a sequence advance —
+    /// each worker pulls the slices it owns from the log between its
+    /// batches, so the pool no longer materializes one copy of every
+    /// insert per worker. Rejects the degenerate shapes at the boundary
+    /// (empty batch, non-finite coordinates) — they would otherwise
+    /// fork the workers' views or corrupt every downstream structure.
+    /// Uses a blocking send (never backpressure-rejected) — inserts are
+    /// rare, and dropping an advance on a full queue would silently
+    /// fork the workers' views of the data.
     ///
     /// Ordering contract: queries **submitted** after `insert` returns
-    /// observe the new points on every route; queries submitted before
-    /// it may or may not, exactly as with a single worker.
+    /// observe the new points on every route (their fence is stamped at
+    /// or past this record's sequence); queries submitted before it may
+    /// or may not, exactly as with a single worker.
     ///
     /// Durability contract (persistence on): the points are appended to
     /// the WAL **before** any worker sees them, so an insert this method
@@ -528,15 +657,16 @@ impl ServiceHandle {
         }
         let pts = Arc::new(points.to_vec());
         // one global insert order across all workers: without the lock,
-        // two concurrent inserts could land as [A, B] on one worker and
-        // [B, A] on another, forking point ids between routes
-        // see scatter(): the guard carries no data, poison is harmless
+        // two concurrent inserts could land as [A, B] in one worker's
+        // catch-up and [B, A] in another's, forking point ids between
+        // routes. see scatter(): the guard carries no data, poison is
+        // harmless
         let _broadcast = self
             .insert_lock
             .lock()
             .unwrap_or_else(std::sync::PoisonError::into_inner);
-        // write-ahead: under the same lock as the broadcast, so WAL
-        // sequence order IS broadcast order
+        // write-ahead: under the same lock as the log append, so WAL
+        // sequence order IS log order IS fence order
         let mut watermark = 0u64;
         if let Some(wal) = &self.wal {
             let mut wal = wal.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
@@ -545,14 +675,21 @@ impl ServiceHandle {
                 Err(e) => return Err(ServiceError::PersistFailed(e.to_string())),
             }
         }
+        let seq = self.log.append(pts);
         for (w, tx) in self.txs.iter().enumerate() {
             let wm = &self.metrics.workers[w];
-            let depth = wm.queue_depth.fetch_add(1, Ordering::SeqCst) + 1;
-            if tx.send(Msg::Insert(pts.clone())).is_err() {
+            // same enqueue discipline as try_send: the lock keeps the
+            // recorded high-water mark a truly attained occupancy
+            let _q = self.enqueue_locks[w]
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+            wm.queue_depth.fetch_add(1, Ordering::SeqCst);
+            if tx.send(Msg::InsertAdvance { seq }).is_err() {
                 wm.queue_depth.fetch_sub(1, Ordering::SeqCst);
                 return Err(ServiceError::ShutDown);
             }
-            wm.queue_hwm.fetch_max(depth, Ordering::SeqCst);
+            wm.queue_hwm
+                .fetch_max(wm.queue_depth.load(Ordering::SeqCst), Ordering::SeqCst);
             Metrics::inc(&wm.submitted);
         }
         self.data_len.fetch_add(points.len(), Ordering::SeqCst);
@@ -577,6 +714,11 @@ impl ServiceHandle {
         }
         let w = Router::worker_for(RoutePath::Rt, self.txs.len());
         let wm = &self.metrics.workers[w];
+        // enqueue lock: a failed send's transient depth bump must not be
+        // observable by a concurrent producer's high-water-mark load
+        let _q = self.enqueue_locks[w]
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
         wm.queue_depth.fetch_add(1, Ordering::SeqCst);
         if self.txs[w].try_send(Msg::Snapshot { watermark }).is_err() {
             wm.queue_depth.fetch_sub(1, Ordering::SeqCst);
@@ -690,6 +832,11 @@ impl Service {
             }
         }
         let recovered_points: usize = wal_records.iter().map(|r| r.len()).sum();
+        // the shared insert log, seeded with the WAL's replayed records:
+        // the cold start's recovered inserts are fence-visible (and
+        // worker-pullable) from the first submit, exactly like a
+        // supervised restart's replay
+        let log = Arc::new(InsertLog::new(wal_records));
         // the partition is a pure function of (base, shards): build it
         // once here and hand every worker the same copy, instead of S
         // duplicate Morton-sort passes before the ready handshake. The
@@ -720,10 +867,11 @@ impl Service {
                 clock: clock.clone(),
                 ledger: ledger.clone(),
                 journal: Vec::new(),
-                // WAL records seed the insert log: the cold start replays
-                // them exactly like a supervised restart replays a
-                // crashed incarnation's inserts
-                insert_log: wal_records.clone(),
+                // the shared log replaces the per-worker insert copy: a
+                // restarted incarnation (and a cold start with WAL
+                // records) pulls exactly the prefix each batch's fence
+                // demands
+                log: log.clone(),
                 snapshot: snapshot.clone(),
                 snapshot_rejected,
                 snapshot_ops: 0,
@@ -761,6 +909,8 @@ impl Service {
             // the first submit, so the routing policy's n includes them
             data_len: Arc::new(AtomicUsize::new(base.len() + recovered_points)),
             insert_lock: Arc::new(Mutex::new(())),
+            log,
+            enqueue_locks: Arc::new((0..n_workers).map(|_| Mutex::new(())).collect()),
             shards,
             metrics,
             inflight,
@@ -1024,11 +1174,17 @@ struct ShardSlot {
 ///
 /// The base dataset is shared read-only across the pool (`Arc`); a
 /// worker only materializes its own copy inside the indexes it actually
-/// builds, so idle workers cost no dataset memory.
+/// builds, so idle workers cost no dataset memory. The same holds for
+/// inserts: the registry keeps `Arc` references to the applied prefix
+/// of the shared [`InsertLog`] — never a flattened per-worker copy —
+/// so a worker that owns nothing built copies no inserted points at
+/// all.
 struct IndexRegistry {
     base: Arc<Vec<Point3>>,
-    /// Points inserted after start, in arrival order.
-    extra: Vec<Point3>,
+    /// Total inserted points applied so far (the flattened length of
+    /// `inserts`): global ids for a new record start at
+    /// `base.len() + extra_len`.
+    extra_len: usize,
     trueknn: TrueKnnParams,
     by_path: HashMap<RoutePath, Box<dyn NeighborIndex>>,
     /// RT-route shard count (1 = sharding off).
@@ -1044,6 +1200,12 @@ struct IndexRegistry {
     /// [`Partition::overflowed`] rebalance predicate to the same answer
     /// at the same insert barrier — with no coordination.
     partition: Option<Partition>,
+    /// The pristine partition over the **base** data, untouched by the
+    /// insert stream: the starting point for reconstructing shard
+    /// membership at an arbitrary fence
+    /// ([`IndexRegistry::shard_at_fence`]) when a failover leg arrives
+    /// with a fence this registry has already run past.
+    start_partition: Option<Arc<Partition>>,
     shard_slots: HashMap<usize, ShardSlot>,
     /// Validated snapshot handed down from cold start (persistence on,
     /// RT route unsharded only); consumed by the first RT build.
@@ -1052,9 +1214,10 @@ struct IndexRegistry {
     /// validation: the fresh RT build replacing them counts as
     /// `rebuilt`.
     snapshot_rejected: bool,
-    /// Every insert record applied, in order — record-granular (unlike
-    /// `extra`, their concatenation) so a snapshot-loaded index can
-    /// replay exactly the records past its watermark.
+    /// Every insert record applied, in log order — `Arc` clones of the
+    /// shared log's prefix `[0, applied_seq)`, record-granular so a
+    /// snapshot-loaded index can replay exactly the records past its
+    /// watermark. `inserts.len()` IS the applied sequence number.
     inserts: Vec<Arc<Vec<Point3>>>,
 }
 
@@ -1075,16 +1238,38 @@ impl IndexRegistry {
         };
         IndexRegistry {
             base,
-            extra: Vec::new(),
+            extra_len: 0,
             trueknn: cfg.trueknn.clone(),
             by_path: HashMap::new(),
             shards,
             my_shards,
             partition: None,
+            start_partition: None,
             shard_slots: HashMap::new(),
             snapshot: None,
             snapshot_rejected: false,
             inserts: Vec::new(),
+        }
+    }
+
+    /// Insert-log records applied so far — the registry's position in
+    /// the fence domain.
+    fn applied_seq(&self) -> u64 {
+        self.inserts.len() as u64
+    }
+
+    /// Pull and apply every log record in `[applied_seq, fence)`. A
+    /// registry at or past `fence` is left untouched (catch-up is
+    /// forward-only — the at-fence reconstruction for a leg that must
+    /// observe *less* than the registry holds is
+    /// [`IndexRegistry::shard_at_fence`]).
+    fn catch_up_to(&mut self, fence: u64, log: &InsertLog, metrics: &Metrics) {
+        let applied = self.applied_seq();
+        if applied >= fence {
+            return;
+        }
+        for rec in log.range(applied, fence) {
+            self.apply_insert(&rec, metrics);
         }
     }
 
@@ -1100,11 +1285,13 @@ impl IndexRegistry {
         if self.shards <= 1 {
             return;
         }
-        let part: Partition = partition
+        let part_arc = partition
             // lint: allow(panic-in-lib) — Service::start always builds the partition when shards > 1; a miss is a construction bug
-            .expect("sharded service must hand its workers the start partition")
-            .as_ref()
-            .clone();
+            .expect("sharded service must hand its workers the start partition");
+        let part: Partition = part_arc.as_ref().clone();
+        // keep the pristine base partition around: at-fence shard
+        // reconstruction replays the log onto it from sequence zero
+        self.start_partition = Some(part_arc.clone());
         let base = self.base.clone();
         let owned = self.my_shards.clone();
         for s in owned {
@@ -1172,9 +1359,59 @@ impl IndexRegistry {
         self.shard_slots.get_mut(&s).expect("just inserted")
     }
 
-    /// Everything this registry indexes (base + inserts so far).
+    /// Everything this registry indexes (base + applied insert records,
+    /// flattened on demand — the registry holds no standing copy).
     fn full_data(&self) -> Vec<Point3> {
-        self.base.iter().chain(self.extra.iter()).copied().collect()
+        let mut data = Vec::with_capacity(self.base.len() + self.extra_len);
+        data.extend_from_slice(&self.base);
+        for rec in &self.inserts {
+            data.extend_from_slice(rec);
+        }
+        data
+    }
+
+    /// Rebuild shard `s` — index **and** global-id membership — at
+    /// exactly insert prefix `fence`, from the pristine base partition
+    /// plus the shared log's first `fence` records. The failover path:
+    /// a re-dispatched scatter leg may land on a worker whose registry
+    /// already applied inserts past the leg's fence, and serving it
+    /// from the live slot would merge a newer prefix into a gather
+    /// whose sibling shards served an older one. This replays the exact
+    /// membership evolution every worker computed at that prefix —
+    /// including any rebalance the growth triggered — so the partial is
+    /// byte-for-byte what the dead owner would have delivered. The
+    /// result is intentionally **not** cached (and the shard-build
+    /// gauge untouched): it serves one stale-fence leg and is dropped.
+    fn shard_at_fence(&self, s: usize, fence: u64, log: &InsertLog) -> (ShardSlot, Vec<u32>) {
+        let mut part: Partition = self
+            .start_partition
+            .as_ref()
+            // lint: allow(panic-in-lib) — every sharded worker stores the start partition before the ready handshake
+            .expect("at-fence rebuild on a worker without the start partition")
+            .as_ref()
+            .clone();
+        let mut data: Vec<Point3> = self.base.to_vec();
+        for rec in log.range(0, fence) {
+            let grouped = part.group_routed(&rec, data.len());
+            for (si, (ids, pts)) in grouped.into_iter().enumerate() {
+                if pts.is_empty() {
+                    continue;
+                }
+                let set = &mut part.shards[si];
+                for &p in &pts {
+                    set.aabb.grow(p);
+                }
+                set.ids.extend(ids);
+            }
+            data.extend_from_slice(&rec);
+            if part.overflowed(data.len()) {
+                let exec = Executor::new(self.trueknn.threads);
+                part = Partition::build(&data, self.shards, &exec);
+            }
+        }
+        let slot = self.build_shard_slot(&data, &part, s, 0);
+        let ids = std::mem::take(&mut part.shards[s].ids);
+        (slot, ids)
     }
 
     /// Service queries are external points: never self-exclude. Brute
@@ -1266,9 +1503,12 @@ impl IndexRegistry {
         Box::new(TrueKnnIndex::new(self.full_data(), cfg))
     }
 
-    /// Apply an insert to every already-built index (lazily-built ones
-    /// pick the points up from `extra` at build time), refreshing the
-    /// per-route build gauges in case an insert triggered a rebuild.
+    /// Apply one log record to every already-built index (lazily-built
+    /// ones pick the points up from the applied record list at build
+    /// time), refreshing the per-route build gauges in case an insert
+    /// triggered a rebuild. Workers reach this only through
+    /// [`IndexRegistry::catch_up_to`], so records are always applied in
+    /// log order with no gaps.
     ///
     /// When sharding is on, the points are also routed through the
     /// shared deterministic partition (and into whatever shard
@@ -1281,7 +1521,7 @@ impl IndexRegistry {
         self.inserts.push(record.clone());
         let points: &[Point3] = &record[..];
         if let Some(part) = &mut self.partition {
-            let old_total = self.base.len() + self.extra.len();
+            let old_total = self.base.len() + self.extra_len;
             // the SAME grouping step ShardedIndex::insert runs — every
             // replica extends its partition identically, and only the
             // shards' sub-indexes actually held here do real work
@@ -1304,7 +1544,7 @@ impl IndexRegistry {
                 }
             }
         }
-        self.extra.extend_from_slice(points);
+        self.extra_len += points.len();
         // fixed route order (RoutePath::ALL), not a HashMap walk: insert
         // application and gauge refresh must happen in the same order on
         // every worker and every run
@@ -1314,7 +1554,7 @@ impl IndexRegistry {
                 metrics.set_route_builds(path, index.build_stats().counters.builds);
             }
         }
-        let total = self.base.len() + self.extra.len();
+        let total = self.base.len() + self.extra_len;
         if self.partition.as_ref().is_some_and(|p| p.overflowed(total)) {
             self.rebalance_shards(metrics);
         }
@@ -1374,12 +1614,13 @@ pub(super) fn worker_body(ctx: &mut WorkerCtx) {
     // over the base data, so the route serves from the first submit and
     // every worker starts from identical shard membership.
     registry.build_owned_shards(ctx.partition.as_ref(), &ctx.metrics);
-    // Deterministic rebuild: the registry is a pure function of
-    // (base, ordered insert log, config) — replaying the log after a
-    // crash reproduces the pre-crash index state bit for bit.
-    for pts in &ctx.insert_log {
-        registry.apply_insert(pts, &ctx.metrics);
-    }
+    // No eager insert replay: the registry starts at sequence zero and
+    // pulls from the shared log per batch, to exactly each batch's
+    // fence. A restarted incarnation is still a pure function of
+    // (base, shared log prefix, config) — the journal's fences say
+    // which prefix every replayed batch must observe, so the replay
+    // reproduces the pre-crash answers bit for bit without reapplying
+    // records no pending batch needs.
     // PJRT runtime is constructed here: the client is not Send. Only the
     // worker that owns the Brute route loads it (eagerly, so the
     // readiness handshake can tell the router the path exists).
@@ -1419,7 +1660,7 @@ pub(super) fn worker_body(ctx: &mut WorkerCtx) {
         Metrics::add(&ctx.metrics.replays, ctx.journal.len() as u64);
         for e in &ctx.journal {
             reply_of.insert(sink_key(e.req.id, e.shard), e.sink.clone());
-            batcher.push(e.req.clone(), e.path, e.shard, e.arrived);
+            batcher.push(e.req.clone(), e.path, e.shard, e.fence, e.arrived);
         }
         drain(ctx, &mut registry, &mut batcher, &mut reply_of);
     }
@@ -1456,7 +1697,7 @@ pub(super) fn worker_body(ctx: &mut WorkerCtx) {
                 wm.queue_depth.fetch_sub(1, Ordering::SeqCst);
                 ctx.inflight.fetch_sub(1, Ordering::SeqCst);
             }
-            Msg::Insert(_) | Msg::Snapshot { .. } => {
+            Msg::InsertAdvance { .. } | Msg::Snapshot { .. } => {
                 wm.queue_depth.fetch_sub(1, Ordering::SeqCst);
             }
             Msg::Shutdown => {}
@@ -1480,39 +1721,36 @@ fn on_msg(
     reply_of: &mut HashMap<(u64, u64), ReplySink>,
 ) -> bool {
     match msg {
-        Msg::Request(req, path, shard, sink, t) => {
+        Msg::Request(req, path, shard, fence, sink, t) => {
             ctx.metrics.workers[ctx.worker_id]
                 .queue_depth
                 .fetch_sub(1, Ordering::SeqCst);
             // journal before batching: from this point until its reply
-            // is sent, the request survives a worker crash
+            // is sent, the request survives a worker crash (fence
+            // included, so the replay serves the same insert prefix)
             ctx.journal.push(JournalEntry {
                 req: req.clone(),
                 path,
                 shard,
+                fence,
                 sink: sink.clone(),
                 arrived: t,
             });
             reply_of.insert(sink_key(req.id, shard), sink);
-            batcher.push(req, path, shard, t);
+            batcher.push(req, path, shard, fence, t);
             true
         }
-        Msg::Insert(points) => {
+        Msg::InsertAdvance { seq } => {
             ctx.metrics.workers[ctx.worker_id]
                 .queue_depth
                 .fetch_sub(1, Ordering::SeqCst);
-            // log the insert BEFORE the barrier drain: the message is
-            // already consumed from the queue, so a crash anywhere past
-            // this line must still replay it or the workers' views of
-            // the data fork. (A journaled request replayed across this
-            // barrier may be served post-insert — within the "may or
-            // may not observe" ordering contract for requests submitted
-            // before the insert.)
-            ctx.insert_log.push(points.clone());
-            // the insert is a barrier: everything submitted before it is
-            // served against the pre-insert structures first
+            // drain BEFORE catching up: every pending batch carries a
+            // fence below `seq` (queue FIFO + the insert lock ordered
+            // it ahead of this advance) and must be served at exactly
+            // that older prefix — catching up first would force the
+            // at-fence reconstruction path for all of them
             drain(ctx, registry, batcher, reply_of);
-            registry.apply_insert(&points, &ctx.metrics);
+            registry.catch_up_to(seq, &ctx.log, &ctx.metrics);
             Metrics::inc(&ctx.metrics.workers[ctx.worker_id].inserts);
             true
         }
@@ -1521,8 +1759,12 @@ fn on_msg(
                 .queue_depth
                 .fetch_sub(1, Ordering::SeqCst);
             // snapshot settled state: pending batches first, so the
-            // write never races index mutation on this worker
+            // write never races index mutation on this worker; then pull
+            // the log up to the watermark the snapshot must cover (the
+            // trigger rode the queue behind its insert's advance, so
+            // this is normally a no-op)
             drain(ctx, registry, batcher, reply_of);
+            registry.catch_up_to(watermark, &ctx.log, &ctx.metrics);
             write_snapshot(ctx, registry, watermark);
             true
         }
@@ -1659,36 +1901,42 @@ fn drain(
 
         if let Some(s) = batch.shard {
             // sharded scatter leg: serve this shard's slice of every
-            // request against the shard sub-index (owned and eager, or a
-            // failover build on demand), remap shard-local ids to global
-            // ones, and park each partial in its gather — the delivery
-            // completing a gather merges and replies.
-            Metrics::add(&ctx.metrics.shard_queries[s], all_queries.len() as u64);
-            let slot = registry.shard_slot_or_build(s, &ctx.metrics);
-            let res = slot.index.knn(&all_queries, batch.k);
-            ctx.metrics.set_shard_builds(
-                s,
-                slot.retired_builds + slot.index.build_stats().counters.builds,
-            );
-            let ids = &registry
-                .partition
-                .as_ref()
-                // lint: allow(panic-in-lib) — every worker installs the partition replica before the ready handshake
-                .expect("shard batch without a partition")
-                .shards[s]
-                .ids;
-            let neighbors: Vec<Vec<Neighbor>> = res
-                .neighbors
-                .iter()
-                .map(|nb| {
-                    nb.iter()
-                        .map(|n| Neighbor {
-                            idx: ids[n.idx as usize],
-                            dist: n.dist,
-                        })
-                        .collect()
-                })
-                .collect();
+            // request at exactly the batch's insert fence, remap
+            // shard-local ids to global ones (fanned across the exec
+            // engine), and merge each partial into its gather — the
+            // delivery merging the last shard replies.
+            let exec = Executor::new(ctx.cfg.trueknn.threads);
+            let neighbors: Vec<Vec<Neighbor>> = if registry.applied_seq() <= batch.fence {
+                // owned (or first-dispatch failover) leg: queue FIFO +
+                // the insert lock guarantee the registry has not run
+                // past the fence — pull the log up to exactly it
+                registry.catch_up_to(batch.fence, &ctx.log, &ctx.metrics);
+                let slot = registry.shard_slot_or_build(s, &ctx.metrics);
+                let res = slot.index.knn(&all_queries, batch.k);
+                ctx.metrics.set_shard_builds(
+                    s,
+                    slot.retired_builds + slot.index.build_stats().counters.builds,
+                );
+                let ids = &registry
+                    .partition
+                    .as_ref()
+                    // lint: allow(panic-in-lib) — every worker installs the partition replica before the ready handshake
+                    .expect("shard batch without a partition")
+                    .shards[s]
+                    .ids;
+                let mut nb = res.neighbors;
+                remap_global(&mut nb, ids, &exec);
+                nb
+            } else {
+                // re-dispatched failover leg whose fence is older than
+                // this registry's applied prefix: serve it from an
+                // ephemeral at-fence rebuild so the partial matches the
+                // prefix every sibling shard served
+                let (mut slot, ids) = registry.shard_at_fence(s, batch.fence, &ctx.log);
+                let mut nb = slot.index.knn(&all_queries, batch.k).neighbors;
+                remap_global(&mut nb, &ids, &exec);
+                nb
+            };
             let service_seconds = served.elapsed().as_secs_f64();
             if let Some(ms) = delay {
                 std::thread::sleep(Duration::from_millis(ms));
@@ -1699,7 +1947,7 @@ fn drain(
                 // (idempotent) instead of double-decrementing the gauge
                 if let Some(ReplySink::Gather(g)) = reply_of.remove(&sink_key(req.id, Some(s))) {
                     let partial = neighbors[range.0..range.1].to_vec();
-                    deliver_partial(&g, s, partial, service_seconds, &ctx.metrics);
+                    deliver_partial(&g, s, partial, service_seconds, &ctx.metrics, &exec);
                 }
                 ctx.inflight.fetch_sub(1, Ordering::SeqCst);
                 ctx.complete(req.id, Some(s));
@@ -1709,6 +1957,10 @@ fn drain(
             continue;
         }
 
+        // direct leg: the fence is a lower bound — catch up if behind
+        // (serving at a newer prefix is within the visibility contract
+        // for requests that raced an insert)
+        registry.catch_up_to(batch.fence, &ctx.log, &ctx.metrics);
         match path {
             RoutePath::Rt => Metrics::add(&ctx.metrics.rt_requests, batch.requests.len() as u64),
             RoutePath::Brute | RoutePath::BruteCpu => {
@@ -1752,25 +2004,41 @@ fn drain(
     }
 }
 
-/// Park one shard's partial in the gather; the delivery that completes
-/// the set merges every shard's per-query list (k smallest under
-/// `(distance, id)` — the same order the unsharded heap drain sorts by)
-/// and sends the response. The merge consumes the partials in shard-id
-/// order, so the outcome is independent of which worker finished last.
-/// Delivery is **idempotent**: a duplicate for an already-filled slot
-/// (or an already-completed gather) is dropped — failover re-dispatch
-/// and crash replay both produce the same deterministic partial, so
-/// dropping the copy loses nothing.
+/// Remap shard-local neighbor ids to global ones, fanned per query
+/// list across the exec engine. Pure elementwise table lookup, so the
+/// parallel fan cannot change the result.
+fn remap_global(neighbors: &mut [Vec<Neighbor>], ids: &[u32], exec: &Executor) {
+    exec.for_each_chunk(neighbors, PAR_QUERY_MIN, |_, chunk| {
+        for list in chunk.iter_mut() {
+            for n in list.iter_mut() {
+                n.idx = ids[n.idx as usize];
+            }
+        }
+    });
+}
+
+/// Merge one shard's partial into the gather accumulator **as it
+/// arrives** — no shard waits for the set to complete before its work
+/// is folded in, so the old O(queries·k·S) single-pass merge on
+/// whichever worker delivered last is gone. The pairwise merge is
+/// fanned per query across the exec engine; keep-k-smallest under the
+/// strict `(distance, id)` total order is associative and commutative,
+/// so the accumulator is bitwise independent of delivery order.
+/// Delivery is **idempotent**: `merged[shard]` gates both the merge
+/// and the per-shard query accounting, so a duplicate partial (owner
+/// recovered after the monitor re-dispatched its leg) neither
+/// re-merges nor double-counts `shard_queries`.
 pub(super) fn deliver_partial(
     g: &Gather,
     shard: usize,
-    partial: Vec<Vec<Neighbor>>,
+    mut partial: Vec<Vec<Neighbor>>,
     service_seconds: f64,
     metrics: &Arc<Metrics>,
+    exec: &Executor,
 ) {
     let done = {
-        // poisoned only if a sibling delivery panicked; the partials it
-        // already parked are still exactly the data we need
+        // poisoned only if a sibling delivery panicked; the merges it
+        // already folded in are still exactly the data we need
         let mut st = g
             .state
             .lock()
@@ -1779,35 +2047,37 @@ pub(super) fn deliver_partial(
             // completed (or failed) before this duplicate landed
             return;
         }
-        if st.partials[shard].is_none() {
-            st.partials[shard] = Some(partial);
-            st.filled += 1;
+        if st.merged[shard] {
+            // duplicate delivery: already merged and already counted
+            return;
         }
+        st.merged[shard] = true;
+        st.merged_count += 1;
+        // counted on first delivery, keyed by (request, shard) via the
+        // merged flag — not at batch serve time, where a failover
+        // re-dispatch would tally the same shard's work twice
+        Metrics::add(&metrics.shard_queries[shard], partial.len() as u64);
+        let k = g.k;
+        exec.for_each_chunk2(&mut st.acc, &mut partial, PAR_QUERY_MIN, |_, acc, part| {
+            for (dst, src) in acc.iter_mut().zip(part.iter()) {
+                merge_topk(dst, src, k);
+            }
+        });
         st.service_seconds = st.service_seconds.max(service_seconds);
-        if st.filled < st.partials.len() {
+        if st.merged_count < st.merged.len() {
             None
         } else {
-            let parts: Vec<Vec<Vec<Neighbor>>> = st
-                .partials
-                .iter_mut()
-                // lint: allow(panic-in-lib) — filled == len means every slot is Some; checked on the line above
-                .map(|p| p.take().expect("filled"))
-                .collect();
-            // the reply moves out with us; the merge runs off the lock
+            // last shard in: the finished accumulator and the reply
+            // move out with us; the send runs off the lock
+            let neighbors = std::mem::take(&mut st.acc);
             let slowest = st.service_seconds;
-            st.reply.take().map(|reply| (parts, slowest, reply))
+            st.reply.take().map(|reply| (neighbors, slowest, reply))
         }
     };
-    let Some((parts, service_seconds, reply)) = done else {
+    let Some((neighbors, service_seconds, reply)) = done else {
         return;
     };
-    let n_queries = parts.first().map_or(0, |p| p.len());
-    let mut neighbors: Vec<Vec<Neighbor>> = vec![Vec::new(); n_queries];
-    for part in &parts {
-        for (qi, nb) in part.iter().enumerate() {
-            merge_topk(&mut neighbors[qi], nb, g.k);
-        }
-    }
+    let n_queries = neighbors.len();
     let latency = g.submitted.elapsed().as_secs_f64();
     metrics.record_latency(latency);
     Metrics::inc(&metrics.responses);

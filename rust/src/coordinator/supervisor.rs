@@ -9,10 +9,11 @@
 //! [`WorkerCtx`] that survives the `catch_unwind` boundary:
 //!
 //! - the **base dataset** and partition replica (shared, immutable);
-//! - the **insert log** — every insert broadcast this worker consumed,
-//!   in arrival order, so the rebuilt registry replays them and lands on
-//!   the exact pre-crash index state (indexes are pure functions of
-//!   `(base, ordered inserts, config)`);
+//! - a handle on the **shared insert log** — the append-once record of
+//!   every accepted insert, in submit order; the rebuilt registry
+//!   starts at sequence zero and pulls the log forward to each batch's
+//!   fence, so it lands on the exact pre-crash index state (indexes are
+//!   pure functions of `(base, log prefix, config)`);
 //! - the **journal** — every accepted-but-unanswered request, in submit
 //!   order, re-enqueued and served before the queue is touched again;
 //! - the **batch sequence**, monotonic across restarts, so a scheduled
@@ -26,19 +27,20 @@
 //!
 //! Hangs are handled by a separate **failover monitor** ([`run_monitor`],
 //! one per sharded pool): workers heartbeat through [`WorkerHealth`],
-//! and a scattered request whose shard partial is missing past the
-//! heartbeat timeout — with a stale owner — is re-dispatched to the
-//! shard's deterministic failover owner
-//! ([`Router::worker_for_shard_excluding`]), which rebuilds the shard
-//! from its own partition replica and delivers the identical partial
-//! (delivery is idempotent, so a recovered owner's duplicate is merely
-//! dropped).
+//! and a scattered request whose shard partial is unmerged past the
+//! heartbeat timeout — with a stale owner — is re-dispatched **at the
+//! gather's original insert fence** to the shard's deterministic
+//! failover owner ([`Router::worker_for_shard_excluding`]), which
+//! rebuilds the shard from its own partition replica at exactly that
+//! log prefix and delivers the identical partial (delivery is
+//! idempotent and counter-deduped, so a recovered owner's duplicate is
+//! merely dropped).
 
 use super::metrics::Metrics;
 use super::request::{KnnRequest, RoutePath};
 use super::router::Router;
 use super::service::{
-    worker_body, Gather, Msg, ReplySink, ServiceConfig, ServiceError, ServiceHandle,
+    worker_body, Gather, InsertLog, Msg, ReplySink, ServiceConfig, ServiceError, ServiceHandle,
 };
 use crate::geom::Point3;
 use crate::shard::Partition;
@@ -154,6 +156,10 @@ pub(super) struct JournalEntry {
     pub(super) req: KnnRequest,
     pub(super) path: RoutePath,
     pub(super) shard: Option<usize>,
+    /// Insert-log fence the request was stamped with at submit;
+    /// replaying at the same fence reproduces the pre-crash serve bit
+    /// for bit even if the log has grown since.
+    pub(super) fence: u64,
     pub(super) sink: ReplySink,
     pub(super) arrived: Instant,
 }
@@ -179,11 +185,12 @@ pub(super) struct WorkerCtx {
     /// Accepted, unanswered requests in submit order (replayed on
     /// restart).
     pub(super) journal: Vec<JournalEntry>,
-    /// Every insert broadcast consumed, in arrival order (replayed into
-    /// the rebuilt registry on restart). With persistence on, cold start
-    /// seeds it with the WAL's replayed records, so a restarted process
-    /// recovers exactly like a restarted worker.
-    pub(super) insert_log: Vec<Arc<Vec<Point3>>>,
+    /// The pool-shared append-once insert log. Workers never copy it:
+    /// each incarnation's registry starts at sequence zero and pulls
+    /// the log forward to each batch's fence. With persistence on, cold
+    /// start seeds the log with the WAL's replayed records, so a
+    /// restarted process recovers exactly like a restarted worker.
+    pub(super) log: Arc<InsertLog>,
     /// Validated snapshot bytes + WAL watermark found at cold start
     /// (persistence on, RT route unsharded only). Each incarnation's
     /// registry recovers the RT index from it instead of rebuilding.
@@ -321,10 +328,12 @@ pub(super) fn run_monitor(mc: MonitorCtx) {
 }
 
 /// One monitor pass: retire completed gathers, then for each gather past
-/// the timeout, re-dispatch every still-missing, not-yet-redispatched
-/// shard whose owner's heartbeat is stale. The failover target rebuilds
-/// the shard from its partition replica and delivers the identical
-/// partial; the `replays` counter records each re-dispatch.
+/// the timeout, re-dispatch every still-unmerged, not-yet-redispatched
+/// shard whose owner's heartbeat is stale. The re-dispatch carries the
+/// gather's original insert fence, so the failover target rebuilds the
+/// shard from its partition replica **at that exact log prefix** and
+/// delivers the identical partial; the `replays` counter records each
+/// re-dispatch.
 fn sweep(mc: &MonitorCtx) {
     let timeout_ms = mc.timeout.as_millis() as u64;
     let mut gathers = mc.gathers.lock().unwrap_or_else(PoisonError::into_inner);
@@ -342,7 +351,7 @@ fn sweep(mc: &MonitorCtx) {
         let stale: Vec<usize> = {
             let st = g.state.lock().unwrap_or_else(PoisonError::into_inner);
             (0..mc.shards)
-                .filter(|&s| st.partials[s].is_none() && !st.redispatched[s])
+                .filter(|&s| !st.merged[s] && !st.redispatched[s])
                 .collect()
         };
         for s in stale {
@@ -357,6 +366,7 @@ fn sweep(mc: &MonitorCtx) {
                 g.req.clone(),
                 g.path,
                 Some(s),
+                g.fence,
                 ReplySink::Gather(g.clone()),
                 // lint: allow(wallclock-in-core) — re-dispatch arrival stamp feeds latency telemetry only
                 Instant::now(),

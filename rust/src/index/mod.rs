@@ -187,6 +187,14 @@ pub struct IndexConfig {
     /// are bitwise-identical to the unsharded backend at any shard
     /// count (see the shard module's determinism contract).
     pub shards: usize,
+    /// Sharded kNN speculation width: the first `speculation` shards of
+    /// each query's box-distance order are fanned **in parallel,
+    /// unpruned** before the pruned serial tail walk begins (see the
+    /// shard module's two-phase plan). Like `threads` and
+    /// `cohort_queries`, a pure schedule knob — results are
+    /// bitwise-identical at any value, because the prune it skips is
+    /// only ever a skip. `0` restores the fully serial pruned walk.
+    pub speculation: usize,
 }
 
 impl Default for IndexConfig {
@@ -204,6 +212,7 @@ impl Default for IndexConfig {
             cohort_queries: true,
             shell_requery: true,
             shards: 1,
+            speculation: 2,
         }
     }
 }
@@ -254,6 +263,7 @@ impl IndexConfig {
         enc.put_u8(self.cohort_queries as u8);
         enc.put_u8(self.shell_requery as u8);
         enc.put_u64(self.shards as u64);
+        enc.put_u64(self.speculation as u64);
     }
 
     /// Decode a config written by [`IndexConfig::encode_into`].
@@ -281,14 +291,16 @@ impl IndexConfig {
             cohort_queries: dec.get_u8()? != 0,
             shell_requery: dec.get_u8()? != 0,
             shards: dec.get_u64()? as usize,
+            speculation: dec.get_u64()? as usize,
         })
     }
 
     /// Fold the *result-affecting* configuration into a fingerprint
-    /// hasher. Everything except `threads` participates: thread count is
-    /// a pure throughput knob (results are bitwise-identical at any
-    /// value — the crate's determinism contract), so a snapshot written
-    /// by an 8-thread build must load into a 2-thread server.
+    /// hasher. Everything except `threads` and `speculation`
+    /// participates: both are pure schedule knobs (results are
+    /// bitwise-identical at any value — the crate's determinism
+    /// contract), so a snapshot written by an 8-thread speculative build
+    /// must load into a 2-thread serial server.
     pub fn fingerprint_into(&self, h: &mut crate::persist::Fnv64) {
         h.write(&[self.exclude_self as u8]);
         h.write_u64(self.seed);
@@ -353,7 +365,11 @@ impl BuildStats {
 /// Methods take `&mut self` because querying may *refit* the persistent
 /// acceleration structure (TrueKNN refits between rounds and between
 /// queries; `range` refits to the requested radius).
-pub trait NeighborIndex {
+///
+/// `Send` is a supertrait so index handles can cross thread boundaries —
+/// the sharded scatter-gather fans disjoint `&mut` sub-indexes across
+/// [`crate::exec::scope`] workers, and every backend is plain owned data.
+pub trait NeighborIndex: Send {
     fn backend(&self) -> Backend;
 
     /// Number of indexed data points.
@@ -515,6 +531,13 @@ impl IndexBuilder {
         self
     }
 
+    /// Sharded-kNN speculation width (see [`IndexConfig::speculation`]).
+    /// Only changes the schedule, never results.
+    pub fn speculation(mut self, n: usize) -> Self {
+        self.cfg.speculation = n;
+        self
+    }
+
     /// Validating build: reject degenerate datasets with a typed
     /// [`BuildError`] instead of letting NaN/infinite coordinates
     /// corrupt the acceleration structure. The service layer validates
@@ -544,7 +567,8 @@ impl IndexBuilder {
     }
 
     /// Fingerprint of this builder's result-affecting configuration
-    /// (backend name + every [`IndexConfig`] field except `threads`).
+    /// (backend name + every [`IndexConfig`] field except the pure
+    /// schedule knobs `threads` and `speculation`).
     /// Snapshots are fenced to it: [`IndexBuilder::load`] refuses a file
     /// written under any other configuration, because replaying a WAL on
     /// top of a differently-configured index would silently change
@@ -977,6 +1001,9 @@ mod tests {
         let (loaded, _) = IndexBuilder::new(Backend::KdTree).threads(2).load(&bytes).unwrap();
         assert_eq!(loaded.len(), 120);
     }
+
+    #[test]
+    fn bvh_persists_across_queries() {
         let ds = DatasetKind::Taxi.generate(800, 5);
         let mut idx = IndexBuilder::new(Backend::TrueKnn).build(ds.points.clone());
         for _ in 0..3 {

@@ -4,15 +4,38 @@
 
 use super::Neighbor;
 
-/// Max-heap on squared distance, capacity `k`. `push` keeps the k
-/// smallest items seen; `pushes` counts successful insertions (the
+/// Max-heap ordered lexicographically on `(dist, idx)`, capacity `k`.
+/// `push` takes a *squared* distance (what traversals compute), takes
+/// its square root once, and keeps the k smallest items under the
+/// `(dist, id)` total order; `pushes` counts successful insertions (the
 /// sorting-work telemetry fed to `HwCounters::heap_pushes`).
+///
+/// The ordering key is deliberately the **rounded Euclidean distance**
+/// — the exact value reported in [`Neighbor::dist`] — not the squared
+/// distance, and the id tie-break is load-bearing, not cosmetic. The
+/// kept set is exactly the k lexicographically-smallest candidates
+/// under `(dist, id)` *regardless of push order*, which is the same
+/// total order the sharded gather merges under
+/// ([`crate::shard::merge_topk`]). Cutting on `dist2` instead would
+/// re-open a divergence: two distinct `dist2` values can round to the
+/// same `f32` square root, so a single heap would order them while the
+/// gather (which only sees `dist`) must tie-break by id. With every cut
+/// on `(dist, id)`, results are bitwise-identical across shard counts
+/// even at forced k-th-boundary ties.
 #[derive(Clone, Debug)]
 pub struct KHeap {
     k: usize,
-    /// (dist2, idx) max-heap order on dist2.
+    /// (dist, idx) max-heap, lexicographic order.
     items: Vec<(f32, u32)>,
     pub pushes: u64,
+}
+
+/// Strict "worse than" under the `(dist, idx)` total order. NaN never
+/// enters the heap (rejected at `push`), so `total_cmp` here is purely
+/// a deterministic tie-break, not a NaN policy.
+#[inline]
+fn worse(a: (f32, u32), b: (f32, u32)) -> bool {
+    a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)) == std::cmp::Ordering::Greater
 }
 
 impl KHeap {
@@ -40,8 +63,11 @@ impl KHeap {
         self.k
     }
 
-    /// Current worst (largest) kept squared distance, or +inf if not full.
-    pub fn bound2(&self) -> f32 {
+    /// Current worst (largest) kept distance, or +inf if not full. A
+    /// traversal may skip a subtree only when every point it could hold
+    /// is **strictly farther** than this — a candidate *at* the bound
+    /// can still displace the current worst by winning the id tie-break.
+    pub fn bound_dist(&self) -> f32 {
         if self.is_full() {
             self.items[0].0
         } else {
@@ -53,7 +79,7 @@ impl KHeap {
         self.items.clear();
     }
 
-    /// Offer a candidate; returns true if kept.
+    /// Offer a candidate by squared distance; returns true if kept.
     #[inline]
     pub fn push(&mut self, dist2: f32, idx: u32) -> bool {
         if self.k == 0 || dist2.is_nan() {
@@ -61,13 +87,15 @@ impl KHeap {
             // valid neighbor and would poison the max-heap ordering
             return false;
         }
+        // the ordering key is the rounded distance (see the type docs)
+        let dist = dist2.sqrt();
         if self.items.len() < self.k {
-            self.items.push((dist2, idx));
+            self.items.push((dist, idx));
             self.sift_up(self.items.len() - 1);
             self.pushes += 1;
             true
-        } else if dist2 < self.items[0].0 {
-            self.items[0] = (dist2, idx);
+        } else if worse(self.items[0], (dist, idx)) {
+            self.items[0] = (dist, idx);
             self.sift_down(0);
             self.pushes += 1;
             true
@@ -79,7 +107,7 @@ impl KHeap {
     fn sift_up(&mut self, mut i: usize) {
         while i > 0 {
             let parent = (i - 1) / 2;
-            if self.items[i].0 > self.items[parent].0 {
+            if worse(self.items[i], self.items[parent]) {
                 self.items.swap(i, parent);
                 i = parent;
             } else {
@@ -92,10 +120,10 @@ impl KHeap {
         loop {
             let (l, r) = (2 * i + 1, 2 * i + 2);
             let mut largest = i;
-            if l < self.items.len() && self.items[l].0 > self.items[largest].0 {
+            if l < self.items.len() && worse(self.items[l], self.items[largest]) {
                 largest = l;
             }
-            if r < self.items.len() && self.items[r].0 > self.items[largest].0 {
+            if r < self.items.len() && worse(self.items[r], self.items[largest]) {
                 largest = r;
             }
             if largest == i {
@@ -106,15 +134,13 @@ impl KHeap {
         }
     }
 
-    /// Drain into a distance-ascending neighbor list.
+    /// Drain into a `(dist, id)`-ascending neighbor list (distances were
+    /// already rooted at push time).
     pub fn into_sorted(self) -> Vec<Neighbor> {
         let mut v: Vec<Neighbor> = self
             .items
             .into_iter()
-            .map(|(d2, idx)| Neighbor {
-                idx,
-                dist: d2.sqrt(),
-            })
+            .map(|(dist, idx)| Neighbor { idx, dist })
             .collect();
         v.sort_by(|a, b| a.dist.total_cmp(&b.dist).then(a.idx.cmp(&b.idx)));
         v
@@ -156,12 +182,12 @@ mod tests {
     #[test]
     fn bound_tracks_worst_kept() {
         let mut h = KHeap::new(2);
-        assert_eq!(h.bound2(), f32::INFINITY);
+        assert_eq!(h.bound_dist(), f32::INFINITY);
         h.push(4.0, 0);
         h.push(9.0, 1);
-        assert_eq!(h.bound2(), 9.0);
+        assert_eq!(h.bound_dist(), 3.0);
         h.push(1.0, 2);
-        assert_eq!(h.bound2(), 4.0);
+        assert_eq!(h.bound_dist(), 2.0);
     }
 
     #[test]
@@ -197,5 +223,53 @@ mod tests {
         h.push(2.0, 1); // rejected
         h.push(0.5, 2); // replaces
         assert_eq!(h.pushes, 2);
+    }
+
+    #[test]
+    fn boundary_ties_break_on_id_not_arrival() {
+        // three candidates tie at the k-th distance; the two smallest ids
+        // must win no matter which order they arrive in
+        for order in [[5u32, 3, 4], [4, 5, 3], [3, 4, 5], [5, 4, 3]] {
+            let mut h = KHeap::new(2);
+            for id in order {
+                h.push(1.0, id);
+            }
+            let got: Vec<u32> = h.into_sorted().iter().map(|n| n.idx).collect();
+            assert_eq!(got, vec![3, 4], "arrival order {order:?}");
+        }
+    }
+
+    #[test]
+    fn kept_set_is_push_order_independent() {
+        prop::check("kheap kept set ≡ (dist, id) sort prefix", 50, |rng| {
+            let n = 2 + rng.below(100) as usize;
+            let k = 1 + rng.below(8) as usize;
+            // small value alphabet forces heavy distance ties
+            let xs: Vec<(f32, u32)> = (0..n)
+                .map(|i| ((rng.below(4) as f32) * 0.25, i as u32))
+                .collect();
+            let mut fwd = KHeap::new(k);
+            let mut rev = KHeap::new(k);
+            for &(d, i) in &xs {
+                fwd.push(d, i);
+            }
+            for &(d, i) in xs.iter().rev() {
+                rev.push(d, i);
+            }
+            let want: Vec<(u32, u32)> = {
+                let mut v: Vec<(f32, u32)> = xs.clone();
+                v.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+                v.truncate(k);
+                v.into_iter().map(|(d, i)| (d.sqrt().to_bits(), i)).collect()
+            };
+            for (name, h) in [("fwd", fwd), ("rev", rev)] {
+                let got: Vec<(u32, u32)> =
+                    h.into_sorted().iter().map(|n| (n.dist.to_bits(), n.idx)).collect();
+                if got != want {
+                    return Err(format!("{name}: {got:?} vs {want:?}"));
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -126,7 +126,12 @@ impl KdTree {
                     (*right, *left)
                 };
                 self.search(near, q, exclude, heap);
-                if delta * delta < heap.bound2() {
+                // visit the far side up to *and including* the bound: a
+                // point exactly at the k-th distance can still win the
+                // heap's (dist, id) tie-break. Compared in rooted-distance
+                // space — the heap's canonical order — via the same
+                // monotone sqrt the candidate distances go through.
+                if (delta * delta).sqrt() <= heap.bound_dist() {
                     self.search(far, q, exclude, heap);
                 }
             }

@@ -97,8 +97,28 @@
 //! # Determinism contract
 //!
 //! Results **and** counters are bitwise-identical at any threads ×
-//! workers × shards. The contract is enforced statically by
-//! `trueknn lint` ([`analysis`]), whose rules cite it by id:
+//! workers × shards × speculation. Three mechanisms carry the claim:
+//!
+//! * **One total order on every top-k cut.** Neighbors are ranked by
+//!   the strict `(distance, id)` lexicographic order — on the *rounded*
+//!   distance (the f32 sqrt actually returned), because distinct
+//!   squared distances can round to the same sqrt. Every boundary tie
+//!   at the k-th slot therefore resolves identically in the heap, the
+//!   kd-tree, the shard merge, and the service gather, so shard count
+//!   and merge order can never pick a different (equally-near) winner.
+//! * **Speculation is a pure schedule knob.** `IndexConfig::speculation`
+//!   only chooses how many shards are probed eagerly in parallel; the
+//!   candidate set every query sees — and the order-independent cut
+//!   above — is unchanged at any setting (it is excluded from the
+//!   snapshot config fingerprint for the same reason).
+//! * **Inserts are fenced.** The service appends each insert once to a
+//!   shared log and stamps every request with the log sequence it must
+//!   observe; all shards of a scattered request share one fence, and
+//!   crash replay / failover re-serve at the original fence. Visibility
+//!   is a pure function of submit order, not of pool size or timing.
+//!
+//! The contract is enforced statically by `trueknn lint`
+//! ([`analysis`]), whose rules cite it by id:
 //!
 //! * `unordered-iteration` — no `HashMap`/`HashSet` walk may feed a
 //!   result, snapshot, or emission path; iterate sorted keys or an

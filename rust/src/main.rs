@@ -7,7 +7,7 @@
 //! trueknn runtime   inspect/smoke-test the PJRT artifacts
 //! trueknn serve     run the batching query service demo (worker pool)
 //! trueknn snapshot  build/validate an offline checksummed index snapshot
-//! trueknn bench     perf microbenches, writes BENCH_PR2/.../PR8.json
+//! trueknn bench     perf microbenches, writes BENCH_PR2/.../PR9.json
 //! trueknn lint      determinism-contract analyzer (exit = finding count)
 //! ```
 
@@ -54,7 +54,7 @@ fn print_usage() {
     println!("  runtime  inspect the PJRT artifacts");
     println!("  serve    run the batching query service demo (worker pool)");
     println!("  snapshot build an index offline into a checksummed snapshot blob");
-    println!("  bench    perf microbenches (BENCH_PR2/.../PR8.json)");
+    println!("  bench    perf microbenches (BENCH_PR2/.../PR9.json)");
     println!("  lint     determinism-contract analyzer (exit code = finding count)");
     println!("run `trueknn <command> --help` for options");
 }
@@ -763,7 +763,7 @@ fn run_lint(argv: &[String]) -> i32 {
 fn cmd_bench() -> Command {
     Command::new(
         "bench",
-        "perf microbenches: launch throughput + shell re-query (PR2), SoA leaf loop + cohort scheduling + round bookkeeping (PR3), worker-pool serving throughput (PR4), sharded hot-route throughput (PR5), determinism-lint gate cost (PR6), supervised recovery cost (PR7), crash-safe persistence cost (PR8)",
+        "perf microbenches: launch throughput + shell re-query (PR2), SoA leaf loop + cohort scheduling + round bookkeeping (PR3), worker-pool serving throughput (PR4), sharded hot-route throughput (PR5), determinism-lint gate cost (PR6), supervised recovery cost (PR7), crash-safe persistence cost (PR8), pipelined scatter-gather + fenced inserts (PR9)",
     )
     .opt("n", "points for the launch-throughput bench", "100000")
     .opt("shell-n", "points for the TrueKNN shell/round bench", "20000")
@@ -778,6 +778,7 @@ fn cmd_bench() -> Command {
     .opt("pr6-out", "PR6 output JSON path", "BENCH_PR6.json")
     .opt("pr7-out", "PR7 output JSON path", "BENCH_PR7.json")
     .opt("pr8-out", "PR8 output JSON path", "BENCH_PR8.json")
+    .opt("pr9-out", "PR9 output JSON path", "BENCH_PR9.json")
 }
 
 fn run_bench(a: &Args) -> Result<(), String> {
@@ -794,6 +795,7 @@ fn run_bench(a: &Args) -> Result<(), String> {
     let pr6_out = a.get_str("pr6-out", "BENCH_PR6.json");
     let pr7_out = a.get_str("pr7-out", "BENCH_PR7.json");
     let pr8_out = a.get_str("pr8-out", "BENCH_PR8.json");
+    let pr9_out = a.get_str("pr9-out", "BENCH_PR9.json");
 
     let report = trueknn::bench::pr2::run(n, shell_n, iters);
     trueknn::bench::pr2::render(&report).print();
@@ -869,5 +871,20 @@ fn run_bench(a: &Args) -> Result<(), String> {
     std::fs::write(&pr8_out, trueknn::bench::pr8::to_json(&pr8).to_string())
         .map_err(|e| e.to_string())?;
     log_info!("wrote {pr8_out}");
+
+    let pr9 = trueknn::bench::pr9::run(serve_n, serve_requests, serve_queries, iters);
+    trueknn::bench::pr9::render(&pr9).print();
+    if !pr9.serve_match {
+        return Err("incremental gather changed responses vs the unsharded oracle".into());
+    }
+    if !pr9.spec_match {
+        return Err("shard speculation changed results vs the serial oracle".into());
+    }
+    if !pr9.insert_match {
+        return Err("insert schedule changed the fenced answer".into());
+    }
+    std::fs::write(&pr9_out, trueknn::bench::pr9::to_json(&pr9).to_string())
+        .map_err(|e| e.to_string())?;
+    log_info!("wrote {pr9_out}");
     Ok(())
 }

@@ -44,6 +44,10 @@ const PAR_AABB_MIN: usize = 8192;
 /// [`Scene::insert`] (one short BVH descent per point).
 const PAR_INSERT_MIN: usize = 256;
 
+/// Per-chunk minimum (in *leaves*) for the parallel prim-order splice
+/// fill of [`Scene::insert`] — each leaf segment is a short `memcpy`.
+const PAR_SPLICE_MIN: usize = 64;
+
 impl Scene {
     /// `createSpheres` + `createAABB` + `constructBVH` (Alg. 1 lines 1–3),
     /// built with the default (auto) executor.
@@ -245,24 +249,46 @@ impl Scene {
         self.centers.extend_from_slice(new_points);
 
         // Rebuild prim_order leaf-by-leaf in storage order, appending
-        // each leaf's grafted prims to its range.
+        // each leaf's grafted prims to its range. Segment layout (a
+        // prefix sum over the leaf table) and the node updates stay
+        // serial and O(L); the O(n) splice copies fan across the exec
+        // engine — each leaf's new range is a disjoint slice of the new
+        // order, carved up front, so the parallel fill has no shared
+        // writes and the result is position-for-position the serial one.
         let mut by_offset: Vec<usize> = (0..leaves.len()).collect();
         by_offset.sort_by_key(|&li| self.bvh.nodes[leaves[li]].first_prim);
         let old_order = std::mem::take(&mut self.bvh.prim_order);
-        let mut new_order = Vec::with_capacity(old_order.len() + new_points.len());
+        let total = old_order.len() + new_points.len();
+        let mut new_order = vec![0u32; total];
+        // (leaf-table slot, old range) per carved segment, storage order
+        let mut segs: Vec<(usize, usize, usize, &mut [u32])> =
+            Vec::with_capacity(by_offset.len());
+        let mut rest: &mut [u32] = &mut new_order;
         for &li in &by_offset {
             let node_idx = leaves[li];
             let (first, count) = {
                 let n = &self.bvh.nodes[node_idx];
                 (n.first_prim as usize, n.prim_count as usize)
             };
-            let new_first = new_order.len() as u32;
-            new_order.extend_from_slice(&old_order[first..first + count]);
-            new_order.extend_from_slice(&added[li]);
+            let new_first = (total - rest.len()) as u32;
+            let len = count + added[li].len();
+            let (seg, tail) = std::mem::take(&mut rest).split_at_mut(len);
+            rest = tail;
+            segs.push((li, first, count, seg));
             let n = &mut self.bvh.nodes[node_idx];
             n.first_prim = new_first;
-            n.prim_count = (count + added[li].len()) as u32;
+            n.prim_count = len as u32;
         }
+        debug_assert!(rest.is_empty());
+        let old_order_ref = &old_order;
+        let added_ref = &added;
+        self.exec.for_each_chunk(&mut segs, PAR_SPLICE_MIN, |_, chunk| {
+            for (li, first, count, seg) in chunk.iter_mut() {
+                seg[..*count].copy_from_slice(&old_order_ref[*first..*first + *count]);
+                seg[*count..].copy_from_slice(&added_ref[*li]);
+            }
+        });
+        drop(segs);
         debug_assert_eq!(new_order.len(), self.centers.len());
         self.bvh.prim_order = new_order;
 

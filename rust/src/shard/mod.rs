@@ -12,24 +12,42 @@
 //! across pool workers (see [`crate::coordinator`]) so a single hot
 //! route finally serves batches on several workers at once.
 //!
+//! # The two-phase plan
+//!
+//! `knn` runs each query batch in two phases:
+//!
+//! 1. **Speculative fan.** The first [`crate::index::IndexConfig::speculation`]
+//!    shards of every query's ascending box-distance order are queried
+//!    **unpruned and in parallel** — one scoped exec worker per shard,
+//!    joined and merged in shard-id order. Speculation never changes
+//!    results: the prune it skips is only ever a *skip*, and a shard the
+//!    serial walk would have pruned contributes only candidates strictly
+//!    worse than the query's k-th bound, which the `(dist, id)` merge
+//!    discards. The knob is therefore a pure schedule knob, like
+//!    `threads` — it trades possibly-wasted launches for the removal of
+//!    the serial first rounds, which dominate the walk (most queries
+//!    finish inside their closest few shards).
+//! 2. **Pruned tail.** Remaining rounds walk serially in box-distance
+//!    order, skipping any shard whose box distance exceeds the query's
+//!    current k-th neighbor distance.
+//!
 //! # Exactness: the prune argument
 //!
-//! `knn` visits a query's shards in ascending box-distance order and
-//! skips any shard whose box distance exceeds the query's current k-th
-//! neighbor distance. That skip is exact, not approximate:
+//! The tail skip is exact, not approximate:
 //!
 //! - every shard box **contains** all of the shard's points (tight at
 //!   build, grown — never shrunk — by inserts), so the box distance
 //!   lower-bounds the distance to every member
 //!   ([`crate::geom::Aabb::dist2_to_point`] documents why the bound
 //!   survives f32 rounding: subtraction/multiplication are correctly
-//!   rounded, hence monotone);
+//!   rounded, hence monotone; the square root applied on both sides of
+//!   the comparison is correctly rounded, hence monotone too);
 //! - a shard is skipped only when that lower bound **strictly** exceeds
 //!   the current k-th distance, so no point that could enter the top-k
 //!   (or re-break a tie at the boundary) is ever behind a skipped box;
 //! - the per-query accumulator keeps the k smallest candidates under the
 //!   total order `(distance, id)` — the same order the unsharded
-//!   backends' heap drain sorts by.
+//!   backends' heap cuts and sorts by.
 //!
 //! `range` is pruned the same way against the query radius (a shard
 //! farther than `r` from the query cannot hold an in-radius point) and
@@ -38,27 +56,24 @@
 //!
 //! # Determinism contract
 //!
-//! Results are **bitwise-identical across shard counts, worker counts
-//! and thread counts**, and equal to the unsharded backend:
+//! Results are **bitwise-identical across shard counts, speculation
+//! widths, worker counts and thread counts**, and equal to the unsharded
+//! backend — including at forced k-th-boundary ties:
 //!
 //! - each per-point distance is computed by the inner backend with the
 //!   crate's single canonical op order, so a (point, query) pair yields
 //!   the same f32 everywhere;
 //! - the partition, the scatter order (ascending box distance, shard id
-//!   tie-break) and the gather merge are pure functions of the data —
-//!   never of timing;
-//! - the merged top-k under `(distance, id)` coincides with the
-//!   unsharded heap's content whenever the k-th distance is unique.
-//!   Exact distance **ties at a k-th boundary** — distinct points at
-//!   bitwise-equal distance, measure-zero for continuous data — are the
-//!   one documented divergence: the unsharded heap (and each shard's
-//!   inner heap at its own fetch boundary) keeps whichever tied
-//!   candidate its leaf order pushed first, while the gather merge
-//!   breaks ties by global id. At a **fixed** shard count every
-//!   schedule is deterministic, so results stay bitwise-identical
-//!   across worker and thread counts unconditionally; across
-//!   *different* shard counts a boundary tie may select a different
-//!   tied candidate.
+//!   tie-break), the speculative fan and the gather merge are pure
+//!   functions of the data — never of timing;
+//! - every top-k cut in the crate — the unsharded backends'
+//!   [`crate::knn::KHeap`], each shard's inner heap at its own fetch
+//!   boundary, and the gather's [`merge_topk`] — orders and cuts under
+//!   the **same total order `(dist, id)`** on the same rounded-distance
+//!   key, so the kept set is the k lexicographically-smallest
+//!   candidates no matter how the candidate stream is partitioned.
+//!   Distance ties at the k-th boundary break by global id everywhere;
+//!   there is no shard-count-dependent divergence.
 //!
 //! `insert` routes each point to its owning shard through the
 //! partition's Morton cut ranges ([`Partition::route`] — deterministic
@@ -93,6 +108,38 @@ pub fn merge_topk(acc: &mut Vec<Neighbor>, cands: &[Neighbor], k: usize) {
     acc.extend_from_slice(cands);
     acc.sort_by(|a, b| a.dist.total_cmp(&b.dist).then(a.idx.cmp(&b.idx)));
     acc.truncate(k);
+}
+
+/// Run one shard's kNN sub-query and remap its shard-local prim ids to
+/// global dataset ids (the per-batch local→global remap, sharded across
+/// the exec engine), dropping the global positional self-hit when the
+/// config asks. Returns the remapped per-sub-query lists plus the
+/// launch's counters — shared by both phases of the two-phase plan so
+/// the speculative fan and the pruned tail cannot drift.
+fn query_shard(
+    index: &mut Box<dyn NeighborIndex>,
+    ids: &[u32],
+    exclude_self: bool,
+    queries: &[Point3],
+    qids: &[u32],
+    fetch_k: usize,
+    exec: Executor,
+) -> (Vec<Vec<Neighbor>>, HwCounters, u64) {
+    let sub: Vec<Point3> = qids.iter().map(|&qi| queries[qi as usize]).collect();
+    let res = index.knn(&sub, fetch_k);
+    let mut lists = res.neighbors;
+    exec.for_each_chunk(&mut lists, PAR_ORDER_MIN, |offset, chunk| {
+        for (j, list) in chunk.iter_mut().enumerate() {
+            let qg = qids[offset + j] as usize;
+            for n in list.iter_mut() {
+                n.idx = ids[n.idx as usize];
+            }
+            if exclude_self {
+                list.retain(|n| n.idx as usize != qg);
+            }
+        }
+    });
+    (lists, res.counters, res.launches)
 }
 
 /// The unsharded range path's final comparator (see
@@ -290,15 +337,14 @@ impl NeighborIndex for ShardedIndex {
         self.data.len()
     }
 
-    /// Exact scatter-gather kNN: fan each query to its shards in
-    /// ascending box-distance order, merge per-shard top-k lists, skip
-    /// any shard whose box distance strictly exceeds the query's current
-    /// k-th distance (see the module docs for why the skip is exact).
-    ///
-    /// The fan-out over shards is ordered (the prune needs the closest
-    /// shards first) and therefore serial per round; each per-shard
-    /// sub-query still fans its launches across the exec engine's
-    /// threads. Cross-shard parallelism is the coordinator's job.
+    /// Exact scatter-gather kNN under the two-phase plan (module docs):
+    /// speculatively fan the first [`IndexConfig::speculation`] shards
+    /// of each query's ascending box-distance order in parallel across
+    /// scoped exec workers, merge in shard-id order, then walk the
+    /// pruned tail serially — skipping any shard whose box distance
+    /// strictly exceeds the query's current k-th distance. Results are
+    /// bitwise-identical at any speculation width; the coordinator adds
+    /// cross-worker parallelism on top.
     fn knn(&mut self, queries: &[Point3], k: usize) -> KnnResult {
         let wall = Stopwatch::start();
         let mut result = KnnResult::new(queries.len());
@@ -315,11 +361,95 @@ impl NeighborIndex for ShardedIndex {
         let mut counters = HwCounters::new();
         let mut launches = 0u64;
         let rounds = orders.iter().map(|o| o.len()).max().unwrap_or(0);
-        for round in 0..rounds {
+        let spec = self.cfg.speculation.min(rounds);
+        let exclude_self = self.cfg.exclude_self;
+        let exec = self.exec;
+        let inner = &mut self.inner;
+        let part = &self.part;
+
+        // Phase 1: speculative fan — every query's first `spec` shards,
+        // unpruned, one scoped worker per nonempty shard. Joined and
+        // merged in shard-id order, so the merge schedule is a pure
+        // function of the data; merge order cannot change the kept set
+        // anyway, because `merge_topk` keeps the k smallest under the
+        // `(dist, id)` total order whatever order candidates arrive in.
+        if spec > 0 {
+            let mut by_shard: Vec<Vec<u32>> = vec![Vec::new(); inner.len()];
+            for (qi, ord) in orders.iter().enumerate() {
+                for &(_, s) in ord.iter().take(spec) {
+                    by_shard[s as usize].push(qi as u32);
+                }
+            }
+            type Leg = (Vec<Vec<Neighbor>>, HwCounters, u64);
+            let legs: Vec<Option<Leg>> = if exec.threads() > 1 {
+                crate::exec::scope(|sc| {
+                    let handles: Vec<_> = inner
+                        .iter_mut()
+                        .zip(&by_shard)
+                        .enumerate()
+                        .map(|(s, (index, qids))| {
+                            (!qids.is_empty()).then(|| {
+                                let ids = part.shards[s].ids.as_slice();
+                                sc.spawn(move || {
+                                    query_shard(
+                                        index,
+                                        ids,
+                                        exclude_self,
+                                        queries,
+                                        qids,
+                                        fetch_k,
+                                        exec,
+                                    )
+                                })
+                            })
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| {
+                            h.map(|h| {
+                                // lint: allow(panic-in-lib) — join only errs if the worker panicked; re-raising is the correct propagation
+                                h.join().expect("speculative shard worker panicked")
+                            })
+                        })
+                        .collect()
+                })
+            } else {
+                inner
+                    .iter_mut()
+                    .zip(&by_shard)
+                    .enumerate()
+                    .map(|(s, (index, qids))| {
+                        (!qids.is_empty()).then(|| {
+                            query_shard(
+                                index,
+                                &part.shards[s].ids,
+                                exclude_self,
+                                queries,
+                                qids,
+                                fetch_k,
+                                exec,
+                            )
+                        })
+                    })
+                    .collect()
+            };
+            for (s, leg) in legs.into_iter().enumerate() {
+                let Some((lists, c, l)) = leg else { continue };
+                counters.add(&c);
+                launches += l;
+                for (list, &qi) in lists.iter().zip(&by_shard[s]) {
+                    merge_topk(&mut acc[qi as usize], list, k);
+                }
+            }
+        }
+
+        // Phase 2: pruned tail, serial rounds in box-distance order.
+        for round in spec..rounds {
             // group the queries that still need their `round`-th shard;
             // the prune consults the accumulator as of the previous
             // round, so the decision is schedule-independent
-            let mut by_shard: Vec<Vec<u32>> = vec![Vec::new(); self.inner.len()];
+            let mut by_shard: Vec<Vec<u32>> = vec![Vec::new(); inner.len()];
             for (qi, ord) in orders.iter().enumerate() {
                 if let Some(&(box_dist, s)) = ord.get(round) {
                     let bound = if acc[qi].len() >= k {
@@ -333,27 +463,23 @@ impl NeighborIndex for ShardedIndex {
                     by_shard[s as usize].push(qi as u32);
                 }
             }
-            for s in 0..self.inner.len() {
+            for s in 0..inner.len() {
                 if by_shard[s].is_empty() {
                     continue;
                 }
-                let qids = &by_shard[s];
-                let sub: Vec<Point3> = qids.iter().map(|&qi| queries[qi as usize]).collect();
-                let res = self.inner[s].knn(&sub, fetch_k);
-                counters.add(&res.counters);
-                launches += res.launches;
-                let ids = &self.part.shards[s].ids;
-                for (j, &qi) in qids.iter().enumerate() {
-                    let qg = qi as usize;
-                    let remapped: Vec<Neighbor> = res.neighbors[j]
-                        .iter()
-                        .map(|n| Neighbor {
-                            idx: ids[n.idx as usize],
-                            dist: n.dist,
-                        })
-                        .filter(|n| !(self.cfg.exclude_self && n.idx as usize == qg))
-                        .collect();
-                    merge_topk(&mut acc[qg], &remapped, k);
+                let (lists, c, l) = query_shard(
+                    &mut inner[s],
+                    &part.shards[s].ids,
+                    exclude_self,
+                    queries,
+                    &by_shard[s],
+                    fetch_k,
+                    exec,
+                );
+                counters.add(&c);
+                launches += l;
+                for (list, &qi) in lists.iter().zip(&by_shard[s]) {
+                    merge_topk(&mut acc[qi as usize], list, k);
                 }
             }
         }
@@ -397,17 +523,23 @@ impl NeighborIndex for ShardedIndex {
             counters.add(&res.counters);
             launches += res.launches;
             let ids = &self.part.shards[s].ids;
+            let exclude_self = self.cfg.exclude_self;
+            // local→global remap sharded across the exec engine, like the
+            // kNN path's `query_shard`
+            let mut lists = res.neighbors;
+            self.exec.for_each_chunk(&mut lists, PAR_ORDER_MIN, |offset, chunk| {
+                for (j, list) in chunk.iter_mut().enumerate() {
+                    let qg = qids[offset + j] as usize;
+                    for n in list.iter_mut() {
+                        n.idx = ids[n.idx as usize];
+                    }
+                    if exclude_self {
+                        list.retain(|n| n.idx as usize != qg);
+                    }
+                }
+            });
             for (j, &qi) in qids.iter().enumerate() {
-                let qg = qi as usize;
-                acc[qg].extend(
-                    res.neighbors[j]
-                        .iter()
-                        .map(|n| Neighbor {
-                            idx: ids[n.idx as usize],
-                            dist: n.dist,
-                        })
-                        .filter(|n| !(self.cfg.exclude_self && n.idx as usize == qg)),
-                );
+                acc[qi as usize].append(&mut lists[j]);
             }
         }
         let exec = self.exec;

@@ -228,6 +228,51 @@ fn a_stalled_shard_owner_fails_over_to_the_ring_successor() {
 }
 
 #[test]
+fn failover_duplicate_partials_do_not_double_count_shard_queries() {
+    // PR9 satellite: per-shard query accounting is keyed by (request,
+    // shard) through the gather's merged flag. A stalled owner's legs
+    // are re-dispatched by the monitor, then the owner wakes up and
+    // delivers the same partials again — with both the failover copy
+    // and the recovered owner's copy in flight, the shard-queries
+    // counters must land exactly where a no-fault run lands them.
+    let ds = DatasetKind::Taxi.generate(3_000, 84);
+    let log = rt_log(&ds.points, 0..4);
+    let base_cfg = || ServiceConfig {
+        workers: 2,
+        shards: 2,
+        queue_depth: 64,
+        ..Default::default()
+    };
+    let (oracle, om) = run_sequential(&ds.points, &log, base_cfg());
+    assert!(
+        om.shard_queries.iter().all(|&q| q > 0),
+        "no-fault run must exercise both shards: {:?}",
+        om.shard_queries
+    );
+
+    let victim = Router::worker_for_shard(RoutePath::Rt, 0, 2);
+    let cfg = ServiceConfig {
+        heartbeat_timeout: Duration::from_millis(40),
+        faults: FaultPlan::inert().with_queue_stall(victim, 0, 800),
+        ..base_cfg()
+    };
+    let (got, m) = run_sequential(&ds.points, &log, cfg);
+    for (id, want) in &oracle {
+        assert_eq!(
+            got.get(id),
+            Some(want),
+            "request {id} diverged from the no-fault run under failover"
+        );
+    }
+    assert!(m.replays >= 1, "the stall must trigger at least one re-dispatch");
+    assert_eq!(m.restarts, 0, "a stall is failed over, never restarted");
+    assert_eq!(
+        m.shard_queries, om.shard_queries,
+        "duplicate partials (failover + recovered owner) double-counted shard work"
+    );
+}
+
+#[test]
 fn a_poisoned_request_is_quarantined_after_two_strikes_and_refused_thereafter() {
     let ds = DatasetKind::Taxi.generate(2_000, 78);
     let cfg = ServiceConfig {

@@ -398,6 +398,91 @@ fn sharded_index_matrix_is_exact_and_bitwise_deterministic() {
 }
 
 #[test]
+fn tie_heavy_matrix_is_bitwise_identical_across_shard_counts() {
+    // The PR9 headline regression test: the k-th-boundary tie-break must
+    // be a pure function of the data, never of the shard count. Before
+    // the strict `(distance, id)` total order, a many-way exact-distance
+    // tie at the k-th slot could resolve to different (equally-near)
+    // winner ids depending on which shard — and in which merge order —
+    // the tied candidates arrived from. This matrix forces exactly that
+    // boundary and pins every configuration, bit for bit, to the
+    // shards=1 / speculation=0 / threads=1 result.
+    //
+    // Two adversarial tie shapes, plus a smooth control:
+    //  - duplicate runs: 9 exact copies of each lattice site, so a k=5
+    //    cut always lands mid-run (pure id tie-break) and the Morton
+    //    partition can split a run across a shard boundary;
+    //  - equidistant shells: 6 axis-offset points at exactly the same
+    //    f32 distance from their site, again more candidates than k.
+    use trueknn::geom::Point3;
+
+    let mut ties: Vec<Point3> = Vec::new();
+    for i in 0..120usize {
+        let site = Point3::new(
+            (i % 8) as f32 * 0.1,
+            ((i / 8) % 8) as f32 * 0.1,
+            (i / 64) as f32 * 0.1,
+        );
+        for _ in 0..9 {
+            ties.push(site);
+        }
+    }
+    let d = 0.015f32;
+    for i in 0..40usize {
+        let c = ties[i * 9];
+        for (dx, dy, dz) in [
+            (d, 0.0, 0.0),
+            (-d, 0.0, 0.0),
+            (0.0, d, 0.0),
+            (0.0, -d, 0.0),
+            (0.0, 0.0, d),
+            (0.0, 0.0, -d),
+        ] {
+            ties.push(Point3::new(c.x + dx, c.y + dy, c.z + dz));
+        }
+    }
+    // query the tie sites themselves (distance-0 ties included)
+    let tie_queries: Vec<Point3> = ties.iter().step_by(7).take(64).copied().collect();
+
+    let uniform = DatasetKind::Uniform.generate(800, 150).points;
+    let uniform_queries: Vec<Point3> = uniform[..64].to_vec();
+
+    for (tag, data, queries) in [
+        ("ties", ties, tie_queries),
+        ("uniform", uniform, uniform_queries),
+    ] {
+        let mut baseline: Option<Vec<(u32, u32)>> = None;
+        for shards in [1usize, 2, 7] {
+            for speculation in [0usize, 1, 4] {
+                for threads in [1usize, 2, 8] {
+                    let mut index = IndexBuilder::new(Backend::TrueKnn)
+                        .shards(shards)
+                        .speculation(speculation)
+                        .threads(threads)
+                        .exclude_self(false)
+                        .build(data.clone());
+                    let res = index.knn(&queries, 5);
+                    let flat: Vec<(u32, u32)> = res
+                        .neighbors
+                        .iter()
+                        .flat_map(|q| q.iter().map(|n| (n.idx, n.dist.to_bits())))
+                        .collect();
+                    match &baseline {
+                        None => baseline = Some(flat),
+                        Some(base) => assert_eq!(
+                            &flat, base,
+                            "{tag} shards={shards} speculation={speculation} \
+                             threads={threads}: results drifted from the \
+                             shards=1/speculation=0/threads=1 baseline"
+                        ),
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn insert_keeps_every_backend_on_the_oracle() {
     let ds = DatasetKind::Road.generate(300, 127);
     let extra = DatasetKind::Road.generate(60, 128).points;

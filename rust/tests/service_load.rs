@@ -384,6 +384,97 @@ fn sharded_hot_route_matches_unsharded_oracle_and_spreads() {
 }
 
 #[test]
+fn fenced_inserts_on_the_sharded_route_match_the_oracle_exactly() {
+    // PR9: inserts are append-once log records plus sequence advances,
+    // and every request is served at its submit-time fence. A serial
+    // insert/query interleave on sharded pools must (a) answer bitwise
+    // like the single-worker unsharded oracle fed the same submit
+    // order, (b) make each insert visible to the very next query on
+    // the scattered route, and (c) tick every worker's advance counter
+    // once per insert — no worker materializes a broadcast copy, but
+    // all of them observe every advance.
+    let ds = DatasetKind::Taxi.generate(2_600, 41);
+    // three far-away clusters the base dataset cannot explain: the
+    // first neighbor of a query at an inserted point must be that
+    // exact point (distance bits 0, id past the base range)
+    let batches: Vec<Vec<Point3>> = (0..3)
+        .map(|b| {
+            (0..16)
+                .map(|i| Point3::new(5.0 + b as f32, 5.0, 5.0 + i as f32 * 1e-3))
+                .collect()
+        })
+        .collect();
+
+    let run = |workers: usize, shards: usize| {
+        let cfg = ServiceConfig {
+            workers,
+            shards,
+            queue_depth: 256,
+            ..Default::default()
+        };
+        let (svc, handle) = Service::start(ds.points.clone(), cfg);
+        let mut sigs: Vec<Sig> = Vec::new();
+        let mut next_id = 0u64;
+        let mut inserted_before = 0usize;
+        for batch in &batches {
+            let q = ds.points[(next_id as usize * 37) % 2_000..][..6].to_vec();
+            let resp = handle
+                .query(KnnRequest::new(next_id, q, 4).with_mode(QueryMode::Rt))
+                .unwrap();
+            sigs.push(sig_of(&resp));
+            next_id += 1;
+            handle.insert(batch).unwrap();
+            // the fence contract: this query is submitted after insert()
+            // returned, so every shard leg must observe the new points
+            let resp = handle
+                .query(KnnRequest::new(next_id, batch[..4].to_vec(), 3).with_mode(QueryMode::Rt))
+                .unwrap();
+            for (qi, nb) in resp.neighbors.iter().enumerate() {
+                assert_eq!(
+                    nb[0].dist.to_bits(),
+                    0f32.to_bits(),
+                    "query {qi}: its own inserted point must be the first neighbor"
+                );
+                assert!(
+                    nb[0].idx as usize >= ds.points.len() + inserted_before,
+                    "query {qi}: nearest id {} predates this insert",
+                    nb[0].idx
+                );
+            }
+            sigs.push(sig_of(&resp));
+            next_id += 1;
+            inserted_before += batch.len();
+        }
+        let m = handle.metrics().snapshot();
+        svc.shutdown();
+        (sigs, m)
+    };
+
+    let (oracle, om) = run(1, 1);
+    assert_eq!(om.inserts, 3);
+    assert_eq!(om.points_inserted, 48);
+
+    for (workers, shards) in [(2usize, 2usize), (4, 2), (0, 3)] {
+        let (got, m) = run(workers, shards);
+        let tag = format!("workers={workers} shards={shards}");
+        assert_eq!(m.inserts, 3, "{tag}");
+        assert_eq!(m.points_inserted, 48, "{tag}");
+        assert!(
+            m.workers.iter().all(|w| w.inserts == 3),
+            "{tag}: every worker observes every advance exactly once: {:?}",
+            m.workers.iter().map(|w| w.inserts).collect::<Vec<_>>()
+        );
+        assert_eq!(got.len(), oracle.len(), "{tag}");
+        for (i, (g, w)) in got.iter().zip(&oracle).enumerate() {
+            assert_eq!(
+                g, w,
+                "{tag}: response {i} diverged from the single-worker unsharded oracle"
+            );
+        }
+    }
+}
+
+#[test]
 fn sharded_route_degenerate_requests_are_safe() {
     let ds = DatasetKind::Uniform.generate(2_500, 33);
     let cfg = ServiceConfig {
