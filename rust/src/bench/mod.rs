@@ -12,6 +12,7 @@ pub mod pr6;
 pub mod pr7;
 pub mod pr8;
 pub mod pr9;
+pub mod pr10;
 
 use crate::util::stats::{median, OnlineStats};
 use crate::util::Stopwatch;

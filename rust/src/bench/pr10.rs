@@ -1,0 +1,219 @@
+//! The PR10 perf microbench: tracing overhead and result transparency,
+//! emitted as `BENCH_PR10.json`.
+//!
+//! One measurement, one claim: request-scoped tracing is **free where
+//! it matters**. The same mixed-route request log (even ids RT-forced
+//! and scattered across 2 shards, odd ids brute-forced direct) is
+//! replayed through two identically-configured services — one with
+//! [`ServiceConfig::trace`] unset, one capturing spans into a temp
+//! directory — and the gates enforce both halves of the transparency
+//! contract:
+//!
+//! - **bitwise**: every traced replay's responses must equal the
+//!   untraced oracle's, neighbor for neighbor, bit for bit
+//!   (`results_match`);
+//! - **overhead**: the best traced replay may cost at most
+//!   [`OVERHEAD_BUDGET`] over the best untraced one
+//!   (`overhead_frac`, gated in `trueknn bench`).
+//!
+//! The captured files are also read back through the `trueknn trace`
+//! decoder (`trace_records` / `trace_truncated`), so the bench doubles
+//! as an end-to-end check that the capture path produces verifiable
+//! frames under a real serving load.
+//!
+//! [`ServiceConfig::trace`]: crate::coordinator::ServiceConfig
+
+use crate::configx::Json;
+use crate::coordinator::{QueryMode, Service, ServiceConfig, TraceConfig};
+use crate::dataset::DatasetKind;
+use crate::knn::TrueKnnParams;
+
+use super::pr4::{replay, request_log_with, ResponseSig};
+use super::{fmt_secs, Table};
+
+/// Maximum tolerated tracing overhead (fraction of the untraced replay
+/// time) before `trueknn bench` fails the run.
+pub const OVERHEAD_BUDGET: f64 = 0.05;
+
+#[derive(Clone, Debug)]
+pub struct Pr10Report {
+    pub n: usize,
+    pub requests: usize,
+    pub queries_per_request: usize,
+    pub iters: usize,
+    /// Best-of-`iters` wall seconds with tracing off.
+    pub untraced_s: f64,
+    /// Best-of-`iters` wall seconds with tracing on.
+    pub traced_s: f64,
+    /// `traced_s / untraced_s - 1` (negative means tracing measured
+    /// faster — timing noise, not magic).
+    pub overhead_frac: f64,
+    /// Every traced replay answered bitwise-identically to the
+    /// untraced oracle.
+    pub results_match: bool,
+    /// Verified span records read back from the capture directory.
+    pub trace_records: u64,
+    /// A trace file ended in a torn frame (must be false after a clean
+    /// shutdown).
+    pub trace_truncated: bool,
+}
+
+fn service_config(requests: usize, trace: Option<TraceConfig>) -> ServiceConfig {
+    ServiceConfig {
+        workers: 2,
+        shards: 2,
+        // size the queues for the whole log: the bench measures
+        // throughput, not backpressure
+        queue_depth: requests.max(256),
+        trueknn: TrueKnnParams {
+            exclude_self: false,
+            ..Default::default()
+        },
+        trace,
+        ..Default::default()
+    }
+}
+
+/// Run the off/on sweep. `iters` timed replays per side, reporting the
+/// minimum (the least-perturbed sample).
+pub fn run(n: usize, requests: usize, qpr: usize, iters: usize) -> Pr10Report {
+    let iters = iters.max(1);
+    let ds = DatasetKind::Taxi.generate(n, 42);
+    let qpr = qpr.min(ds.len());
+    let log = request_log_with(&ds.points, requests, qpr, 137, |id| {
+        if id % 2 == 0 {
+            QueryMode::Rt
+        } else {
+            QueryMode::Brute
+        }
+    });
+
+    // tracing off: the oracle side
+    let (svc, handle) = Service::start(ds.points.clone(), service_config(requests, None));
+    // untimed warmup replay: builds every route/shard index, so the
+    // timed replays measure serving, not construction
+    let (_, oracle): (f64, Vec<ResponseSig>) = replay(&handle, &log);
+    let mut untraced_s = f64::INFINITY;
+    let mut results_match = true;
+    for _ in 0..iters {
+        let (s, sigs) = replay(&handle, &log);
+        results_match &= sigs == oracle;
+        untraced_s = untraced_s.min(s);
+    }
+    svc.shutdown();
+
+    // tracing on: same config plus a span capture into a temp dir
+    let trace_dir = std::env::temp_dir().join(format!("trueknn-pr10-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&trace_dir);
+    let cfg = service_config(requests, Some(TraceConfig::new(&trace_dir)));
+    let (svc, handle) = Service::start(ds.points.clone(), cfg);
+    let (_, sigs) = replay(&handle, &log);
+    results_match &= sigs == oracle;
+    let mut traced_s = f64::INFINITY;
+    for _ in 0..iters {
+        let (s, sigs) = replay(&handle, &log);
+        results_match &= sigs == oracle;
+        traced_s = traced_s.min(s);
+    }
+    // clean shutdown drains every worker's span ring before we read
+    svc.shutdown();
+
+    let (trace_records, trace_truncated) = match crate::obs::trace::read_trace_dir(&trace_dir) {
+        Ok((records, truncated)) => (records.len() as u64, truncated),
+        Err(e) => {
+            crate::log_warn!("reading back the pr10 trace capture failed: {e}");
+            (0, true)
+        }
+    };
+    let _ = std::fs::remove_dir_all(&trace_dir);
+
+    Pr10Report {
+        n: ds.len(),
+        requests,
+        queries_per_request: qpr,
+        iters,
+        untraced_s,
+        traced_s,
+        overhead_frac: traced_s / untraced_s.max(1e-12) - 1.0,
+        results_match,
+        trace_records,
+        trace_truncated,
+    }
+}
+
+pub fn to_json(r: &Pr10Report) -> Json {
+    Json::obj(vec![
+        ("bench", Json::Str("pr10".into())),
+        (
+            "trace_overhead",
+            Json::obj(vec![
+                ("dataset", Json::Str("taxi".into())),
+                ("n", Json::Num(r.n as f64)),
+                ("requests", Json::Num(r.requests as f64)),
+                ("queries_per_request", Json::Num(r.queries_per_request as f64)),
+                ("iters", Json::Num(r.iters as f64)),
+                ("untraced_s", Json::Num(r.untraced_s)),
+                ("traced_s", Json::Num(r.traced_s)),
+                ("overhead_frac", Json::Num(r.overhead_frac)),
+                ("overhead_budget", Json::Num(OVERHEAD_BUDGET)),
+                ("results_match", Json::Bool(r.results_match)),
+                ("trace_records", Json::Num(r.trace_records as f64)),
+                ("trace_truncated", Json::Bool(r.trace_truncated)),
+            ]),
+        ),
+    ])
+}
+
+pub fn render(r: &Pr10Report) -> Table {
+    let mut t = Table::new(
+        "PR10 microbench: tracing overhead + transparency (mixed-route sharded log)",
+        &["tracing", "replay", "q/s"],
+    );
+    let qps = |s: f64| (r.requests * r.queries_per_request) as f64 / s.max(1e-12);
+    t.row(vec![
+        "off".into(),
+        fmt_secs(r.untraced_s),
+        format!("{:.0}", qps(r.untraced_s)),
+    ]);
+    t.row(vec![
+        "on".into(),
+        fmt_secs(r.traced_s),
+        format!("{:.0}", qps(r.traced_s)),
+    ]);
+    t.row(vec![
+        "overhead".into(),
+        format!("{:+.1}%", r.overhead_frac * 100.0),
+        String::new(),
+    ]);
+    t.row(vec![
+        "bitwise transparent".into(),
+        r.results_match.to_string(),
+        String::new(),
+    ]);
+    t.row(vec![
+        "span records".into(),
+        r.trace_records.to_string(),
+        if r.trace_truncated { "TORN".into() } else { String::new() },
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracing_is_bitwise_transparent_and_capture_reads_back() {
+        let r = run(1_500, 12, 4, 1);
+        assert!(r.results_match, "tracing must not change responses");
+        assert!(r.trace_records > 0, "the capture must produce verifiable frames");
+        assert!(!r.trace_truncated, "a clean shutdown must not tear frames");
+        // no overhead assertion here: unit-test machines are too noisy;
+        // the budget gate lives in `trueknn bench`
+        let j = to_json(&r).to_string();
+        assert!(j.contains("\"bench\":\"pr10\""));
+        assert!(j.contains("trace_overhead"));
+        let parsed = crate::configx::parse_json(&j).unwrap();
+        assert!(parsed.get("trace_overhead").is_some());
+    }
+}

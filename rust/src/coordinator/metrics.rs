@@ -9,6 +9,7 @@
 //! gauge makes directly observable.
 
 use super::request::RoutePath;
+use crate::obs::{AtomicHistogram, LogHistogram};
 use crate::util::OnlineStats;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -34,6 +35,21 @@ pub struct WorkerMetrics {
     /// submitter's in-flight attempt or a failed send's transient bump,
     /// and never above the queue's physical capacity.
     pub queue_hwm: AtomicU64,
+    /// End-to-end request latencies this worker completed (nanoseconds,
+    /// log2 buckets). Wall-clock telemetry: recorded where the reply is
+    /// handed off, merged across workers in worker-index order at
+    /// snapshot time.
+    pub hist_e2e: AtomicHistogram,
+    /// Queue-wait durations (request arrival → batch service start).
+    pub hist_queue_wait: AtomicHistogram,
+    /// Fence catch-up durations (replaying fenced inserts a batch is
+    /// ordered after, before its queries run).
+    pub hist_fence: AtomicHistogram,
+    /// Batch service durations (the index `knn` call itself).
+    pub hist_service: AtomicHistogram,
+    /// Gather-merge durations (folding one scatter leg's partial into
+    /// its request accumulators).
+    pub hist_merge: AtomicHistogram,
 }
 
 /// Shared counter registry of the service: every field is updated with
@@ -147,6 +163,24 @@ pub struct MetricsSnapshot {
     pub snapshot_corrupt: u64,
     pub latency_mean_s: f64,
     pub latency_max_s: f64,
+    /// End-to-end latency p50, in seconds (log2-bucket upper bound of
+    /// the merged per-worker histograms; 0.0 with no samples).
+    pub latency_p50_s: f64,
+    /// End-to-end latency p95, in seconds (same basis as `latency_p50_s`).
+    pub latency_p95_s: f64,
+    /// End-to-end latency p99, in seconds (same basis as `latency_p50_s`).
+    pub latency_p99_s: f64,
+    /// End-to-end latency histogram, merged across workers in
+    /// worker-index order (nanosecond log2 buckets).
+    pub hist_e2e: LogHistogram,
+    /// Queue-wait histogram (same merge order and bucketing).
+    pub hist_queue_wait: LogHistogram,
+    /// Fence catch-up histogram (same merge order and bucketing).
+    pub hist_fence: LogHistogram,
+    /// Batch service histogram (same merge order and bucketing).
+    pub hist_service: LogHistogram,
+    /// Gather-merge histogram (same merge order and bucketing).
+    pub hist_merge: LogHistogram,
 }
 
 impl Metrics {
@@ -210,6 +244,21 @@ impl Metrics {
             .latency
             .lock()
             .unwrap_or_else(std::sync::PoisonError::into_inner);
+        // merge per-worker stage histograms in worker-index order —
+        // per-bucket addition is order-insensitive, but a fixed order
+        // keeps the merge auditable and byte-reproducible
+        let mut hist_e2e = LogHistogram::new();
+        let mut hist_queue_wait = LogHistogram::new();
+        let mut hist_fence = LogHistogram::new();
+        let mut hist_service = LogHistogram::new();
+        let mut hist_merge = LogHistogram::new();
+        for w in &self.workers {
+            hist_e2e.merge(&w.hist_e2e.snapshot());
+            hist_queue_wait.merge(&w.hist_queue_wait.snapshot());
+            hist_fence.merge(&w.hist_fence.snapshot());
+            hist_service.merge(&w.hist_service.snapshot());
+            hist_merge.merge(&w.hist_merge.snapshot());
+        }
         let route_builds: Vec<(RoutePath, u64)> = RoutePath::ALL
             .iter()
             .map(|&p| {
@@ -272,6 +321,14 @@ impl Metrics {
             snapshot_corrupt: self.snapshot_corrupt.load(Ordering::Relaxed),
             latency_mean_s: if lat.count() > 0 { lat.mean() } else { 0.0 },
             latency_max_s: if lat.count() > 0 { lat.max() } else { 0.0 },
+            latency_p50_s: LogHistogram::seconds(hist_e2e.percentile_upper_ns(50)),
+            latency_p95_s: LogHistogram::seconds(hist_e2e.percentile_upper_ns(95)),
+            latency_p99_s: LogHistogram::seconds(hist_e2e.percentile_upper_ns(99)),
+            hist_e2e,
+            hist_queue_wait,
+            hist_fence,
+            hist_service,
+            hist_merge,
         }
     }
 }
@@ -370,6 +427,23 @@ mod tests {
             (z.recovered, z.rebuilt, z.wal_replayed, z.snapshot_corrupt),
             (0, 0, 0, 0)
         );
+    }
+
+    #[test]
+    fn worker_histograms_merge_into_the_snapshot() {
+        let m = Metrics::with_workers(2);
+        m.workers[0].hist_e2e.record(1_000);
+        m.workers[1].hist_e2e.record(1_000_000);
+        m.workers[1].hist_queue_wait.record(500);
+        let s = m.snapshot();
+        assert_eq!(s.hist_e2e.count(), 2);
+        assert_eq!(s.hist_queue_wait.count(), 1);
+        assert_eq!(s.hist_service.count(), 0);
+        assert!(s.latency_p50_s > 0.0);
+        assert!(s.latency_p99_s >= s.latency_p50_s);
+        // a registry with no samples reports zero percentiles
+        let z = Metrics::new().snapshot();
+        assert_eq!((z.latency_p50_s, z.latency_p99_s), (0.0, 0.0));
     }
 
     #[test]

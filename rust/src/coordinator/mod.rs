@@ -129,6 +129,35 @@
 //! equality of post-recovery responses against a never-crashed
 //! single-worker oracle under seeded I/O fault schedules
 //! ([`crate::faults::IoFault`]).
+//!
+//! # Span taxonomy
+//!
+//! With [`ServiceConfig::trace`] set, every request leaves a span tree
+//! in per-worker CRC-framed JSONL trace files (see [`crate::obs`];
+//! read back with `trueknn trace`). The trace id is the request id;
+//! the `request` root is synthesized by the reader from the spans'
+//! extent. Span names and their attributes:
+//!
+//! | span | emitted by | parent | attributes |
+//! |---|---|---|---|
+//! | `request` | reader (synthesized root) | — | — |
+//! | `queue_wait` | owning worker, per request | root | — |
+//! | `fence_catchup` | owning worker, per request | root | `fence` |
+//! | `shard_leg` | shard owner, per scattered request | root | `shard`, `fence`, `batch` |
+//! | `service` | owning worker, per direct request | root | `fence`, `batch` |
+//! | `round` | worker, per TrueKNN expansion round | leg / service | `round`, `radius`, `queries`, `survivors`, `heap_pushes` |
+//! | `gather_merge` | delivering worker, per merged partial | root | `shard` |
+//! | `reply` | replying worker (zero-duration event) | root | `queries` |
+//! | `redispatched` | failover monitor (control file, event) | root | `shard`, `fence` |
+//! | `recovery` | cold start / RT rebuild (event, trace 0) | — | `snapshot_rejected` or `recovered`, `watermark` |
+//!
+//! The `round` spans carry the **deterministic** per-round convergence
+//! counters verbatim (the same values summed into
+//! [`crate::knn::HwCounters`]), so a trace-reconstructed profile can be
+//! checked *exactly* against the counter oracle; only start/end
+//! timestamps are wall-clock, and those flow exclusively through the
+//! [`crate::obs::clock`] chokepoint. Tracing is result-transparent:
+//! responses and counters are bitwise identical with tracing on or off.
 
 mod request;
 mod metrics;
@@ -144,3 +173,6 @@ pub use router::{Router, RouterConfig};
 pub use service::{
     PersistConfig, ResponseReceiver, Service, ServiceConfig, ServiceError, ServiceHandle,
 };
+// the tracing config rides on ServiceConfig; re-export it here so
+// serving callers configure observability without importing obs paths
+pub use crate::obs::TraceConfig;

@@ -91,7 +91,9 @@ use crate::geom::Point3;
 use crate::index::{
     Backend, BruteCpuIndex, BrutePjrtIndex, IndexBuilder, IndexConfig, NeighborIndex, TrueKnnIndex,
 };
-use crate::knn::{Neighbor, TrueKnnParams};
+use crate::knn::{Neighbor, RoundStats, TrueKnnParams};
+use crate::obs::span::{names as span_names, SpanRecord};
+use crate::obs::{clock, SpanSink, TraceConfig, Tracing};
 use crate::persist::Wal;
 use crate::runtime::PjrtRuntime;
 use crate::shard::{merge_topk, Partition};
@@ -161,6 +163,14 @@ pub struct ServiceConfig {
     /// recovery from the configured data directory. `None` (the
     /// default) keeps the service purely in-memory.
     pub persist: Option<PersistConfig>,
+    /// Request-scoped tracing ([`crate::obs`]): `Some` buffers span
+    /// trees per worker and drains them to CRC-framed JSONL files in
+    /// the configured directory (read back by `trueknn trace`). `None`
+    /// (the default) records no spans. Tracing is result-transparent
+    /// by construction — spans are written from timestamps the serving
+    /// path never branches on, so responses and deterministic counters
+    /// are bitwise identical with tracing on or off.
+    pub trace: Option<TraceConfig>,
     pub trueknn: TrueKnnParams,
 }
 
@@ -178,6 +188,7 @@ impl Default for ServiceConfig {
             replay_backoff: Duration::from_millis(1),
             faults: FaultPlan::inert(),
             persist: None,
+            trace: None,
             trueknn: TrueKnnParams {
                 exclude_self: false, // service queries are external points
                 ..Default::default()
@@ -504,8 +515,9 @@ impl ServiceHandle {
             let fence = self.log.seq();
             self.try_send(
                 w,
-                // lint: allow(wallclock-in-core) — submit timestamp feeds latency telemetry only, never results
-                Msg::Request(req, path, None, fence, ReplySink::Direct(tx), Instant::now()),
+                // submit stamp through the obs chokepoint: feeds latency
+                // telemetry and trace spans only, never results
+                Msg::Request(req, path, None, fence, ReplySink::Direct(tx), clock::now()),
             )?;
         }
         Ok(rx)
@@ -584,8 +596,8 @@ impl ServiceHandle {
             path,
             req,
             fence,
-            // lint: allow(wallclock-in-core) — submit timestamp feeds latency telemetry only, never results
-            submitted: Instant::now(),
+            // submit stamp through the obs chokepoint: telemetry only
+            submitted: clock::now(),
             state: Mutex::new(GatherState {
                 reply: Some(reply),
                 acc: vec![Vec::new(); n_queries],
@@ -603,8 +615,8 @@ impl ServiceHandle {
                 Some(s),
                 fence,
                 ReplySink::Gather(gather.clone()),
-                // lint: allow(wallclock-in-core) — per-shard arrival stamp is telemetry only
-                Instant::now(),
+                // per-shard arrival stamp through the obs chokepoint
+                clock::now(),
             );
             if let Err(err) = self.try_send(w, msg) {
                 ReplySink::Gather(gather).fail(err.clone());
@@ -806,6 +818,24 @@ impl Service {
         );
         let ledger = Arc::new(PoisonLedger::default());
         let base = Arc::new(data);
+        // Request-scoped tracing: fix the session epoch and create the
+        // trace directory up front so every sink stamps against one
+        // origin. An unusable directory degrades the run to tracing-off
+        // with a warning — exactly the persistence idiom below;
+        // observability must never fail serving.
+        let mut tracing = None;
+        if let Some(tc) = &cfg.trace {
+            match Tracing::create(tc) {
+                Ok(t) => tracing = Some(t),
+                Err(e) => {
+                    crate::log_warn!("tracing disabled for this run: {e}");
+                }
+            }
+        }
+        // the control sink is shared by cold-start recovery (here) and
+        // the failover monitor; both are low-rate, so one mutex is fine
+        let control_sink: Option<Arc<Mutex<SpanSink>>> =
+            tracing.as_ref().map(|t| Arc::new(Mutex::new(t.control())));
         // Durable cold start (persistence on): open the WAL — repairing
         // any torn tail — so its records seed every worker's insert log,
         // then scan for the newest snapshot that survives full
@@ -819,7 +849,7 @@ impl Service {
         let mut snapshot: Option<(Arc<Vec<u8>>, u64)> = None;
         let mut snapshot_rejected = false;
         if let Some(pc) = &cfg.persist {
-            match open_persist(pc, &cfg, &metrics, shards) {
+            match open_persist(pc, &cfg, &metrics, shards, control_sink.as_deref()) {
                 Ok(st) => {
                     wal_records = st.records;
                     snapshot = st.snapshot;
@@ -877,6 +907,7 @@ impl Service {
                 snapshot_ops: 0,
                 batch_seq: 0,
                 crashing_keys: Vec::new(),
+                tracer: tracing.as_ref().map(|t| t.worker(w)),
             };
             workers.push(std::thread::spawn(move || supervise_worker(ctx)));
             txs.push(tx);
@@ -929,6 +960,7 @@ impl Service {
                 timeout: cfg.heartbeat_timeout,
                 shards,
                 stop: stop_rx,
+                tracer: control_sink.clone(),
             };
             (stop_tx, std::thread::spawn(move || run_monitor(mc)))
         });
@@ -1058,6 +1090,7 @@ fn open_persist(
     cfg: &ServiceConfig,
     metrics: &Metrics,
     shards: usize,
+    tracer: Option<&Mutex<SpanSink>>,
 ) -> Result<PersistStart, crate::persist::PersistError> {
     std::fs::create_dir_all(&pc.data_dir)
         .map_err(|e| crate::persist::io_err("create_dir_all", e))?;
@@ -1070,7 +1103,7 @@ fn open_persist(
     let (snapshot, rejected) = if shards > 1 {
         (None, false)
     } else {
-        scan_snapshots(pc, cfg, metrics, wal.record_count())
+        scan_snapshots(pc, cfg, metrics, wal.record_count(), tracer)
     };
     let watermark = snapshot.as_ref().map_or(0, |&(_, w)| w);
     Metrics::add(&metrics.wal_replayed, wal.record_count() - watermark);
@@ -1094,6 +1127,7 @@ fn scan_snapshots(
     cfg: &ServiceConfig,
     metrics: &Metrics,
     wal_records: u64,
+    tracer: Option<&Mutex<SpanSink>>,
 ) -> (Option<(Arc<Vec<u8>>, u64)>, bool) {
     let mut candidates: Vec<PathBuf> = match std::fs::read_dir(&pc.data_dir) {
         Ok(rd) => rd
@@ -1118,6 +1152,20 @@ fn scan_snapshots(
             Err(e) => {
                 Metrics::inc(&metrics.snapshot_corrupt);
                 crate::log_warn!("rejecting snapshot {}: {e}", path.display());
+                // recovery event for the trace: cold start rejected a
+                // candidate (the enriched PersistError already named
+                // the failing section and offset in the warn above)
+                if let Some(tracer) = tracer {
+                    let mut tr = tracer
+                        .lock()
+                        .unwrap_or_else(std::sync::PoisonError::into_inner);
+                    tr.event(
+                        0,
+                        span_names::RECOVERY,
+                        vec![("snapshot_rejected".to_string(), 1.0)],
+                    );
+                    tr.flush();
+                }
             }
         }
     }
@@ -1434,7 +1482,12 @@ impl IndexRegistry {
     /// build gauge tracks the index's build count — it stays at 1 across
     /// a serving session because every later batch on the same path
     /// reuses the structure.
-    fn get(&mut self, path: RoutePath, metrics: &Metrics) -> &mut Box<dyn NeighborIndex> {
+    fn get(
+        &mut self,
+        path: RoutePath,
+        metrics: &Metrics,
+        tracer: &mut Option<SpanSink>,
+    ) -> &mut Box<dyn NeighborIndex> {
         if !self.by_path.contains_key(&path) {
             let index: Box<dyn NeighborIndex> = match path {
                 // service queries are external points: never
@@ -1442,7 +1495,7 @@ impl IndexRegistry {
                 // against batch-concatenated queries, and forcing it off
                 // here keeps the unsharded RT route consistent with the
                 // sharded one — sharding stays a pure throughput knob)
-                RoutePath::Rt => self.build_rt(metrics),
+                RoutePath::Rt => self.build_rt(metrics, tracer),
                 // Reached only if the eagerly-installed PJRT index is
                 // missing (runtime load raced or failed): rebuild with
                 // whatever runtime is available now.
@@ -1468,7 +1521,11 @@ impl IndexRegistry {
     /// unusable snapshot, `snapshot_corrupt` for a deep decode failure
     /// the cold-start container scan could not see. A recovery failure
     /// can only ever cost build time, never answers.
-    fn build_rt(&mut self, metrics: &Metrics) -> Box<dyn NeighborIndex> {
+    fn build_rt(
+        &mut self,
+        metrics: &Metrics,
+        tracer: &mut Option<SpanSink>,
+    ) -> Box<dyn NeighborIndex> {
         let cfg = IndexConfig {
             exclude_self: false,
             ..self.trueknn.to_index_config()
@@ -1482,16 +1539,42 @@ impl IndexRegistry {
                         index.insert(&rec[..]);
                     }
                     Metrics::inc(&metrics.recovered);
+                    if let Some(sink) = tracer.as_mut() {
+                        sink.event(
+                            0,
+                            span_names::RECOVERY,
+                            vec![
+                                ("recovered".to_string(), 1.0),
+                                ("watermark".to_string(), watermark as f64),
+                            ],
+                        );
+                    }
                     return index;
                 }
                 Ok(_) => {
                     // a watermark past the applied insert records means
                     // the snapshot covers history this process never saw
                     Metrics::inc(&metrics.snapshot_corrupt);
+                    if let Some(sink) = tracer.as_mut() {
+                        sink.event(
+                            0,
+                            span_names::RECOVERY,
+                            vec![("snapshot_rejected".to_string(), 1.0)],
+                        );
+                    }
                 }
                 Err(e) => {
                     Metrics::inc(&metrics.snapshot_corrupt);
+                    // the enriched PersistError names the failing
+                    // section and offset — surface it verbatim
                     crate::log_warn!("snapshot rejected at decode; rebuilding: {e}");
+                    if let Some(sink) = tracer.as_mut() {
+                        sink.event(
+                            0,
+                            span_names::RECOVERY,
+                            vec![("snapshot_rejected".to_string(), 1.0)],
+                        );
+                    }
                 }
             }
             Metrics::inc(&metrics.rebuilt);
@@ -1703,6 +1786,12 @@ pub(super) fn worker_body(ctx: &mut WorkerCtx) {
             Msg::Shutdown => {}
         }
     }
+    // clean exit is the last chance for buffered spans to reach the
+    // trace file; a crashed incarnation keeps its ring (the sink lives
+    // in the supervisor-owned ctx) and the next one flushes it here
+    if let Some(tracer) = ctx.tracer.as_mut() {
+        tracer.flush();
+    }
 }
 
 /// The reply-map key of one queued message: request id plus the shard
@@ -1887,8 +1976,15 @@ fn drain(
         }
         Metrics::inc(&ctx.metrics.batches);
         Metrics::inc(&ctx.metrics.workers[ctx.worker_id].batches);
-        // lint: allow(wallclock-in-core) — service-time stamp feeds latency telemetry only, never results
-        let served = Instant::now();
+        // serve stamp through the obs chokepoint: every duration below
+        // is telemetry (histograms + spans) the results never observe
+        let served = clock::now();
+        // queue wait per request: submit stamp → this serve stamp
+        for (_, arrived) in &batch.requests {
+            ctx.metrics.workers[ctx.worker_id]
+                .hist_queue_wait
+                .record(served.saturating_duration_since(*arrived).as_nanos() as u64);
+        }
         let all_queries: Vec<Point3> = batch
             .requests
             .iter()
@@ -1906,38 +2002,103 @@ fn drain(
             // engine), and merge each partial into its gather — the
             // delivery merging the last shard replies.
             let exec = Executor::new(ctx.cfg.trueknn.threads);
-            let neighbors: Vec<Vec<Neighbor>> = if registry.applied_seq() <= batch.fence {
-                // owned (or first-dispatch failover) leg: queue FIFO +
-                // the insert lock guarantee the registry has not run
-                // past the fence — pull the log up to exactly it
-                registry.catch_up_to(batch.fence, &ctx.log, &ctx.metrics);
-                let slot = registry.shard_slot_or_build(s, &ctx.metrics);
-                let res = slot.index.knn(&all_queries, batch.k);
-                ctx.metrics.set_shard_builds(
-                    s,
-                    slot.retired_builds + slot.index.build_stats().counters.builds,
-                );
-                let ids = &registry
-                    .partition
-                    .as_ref()
-                    // lint: allow(panic-in-lib) — every worker installs the partition replica before the ready handshake
-                    .expect("shard batch without a partition")
-                    .shards[s]
-                    .ids;
-                let mut nb = res.neighbors;
-                remap_global(&mut nb, ids, &exec);
-                nb
-            } else {
-                // re-dispatched failover leg whose fence is older than
-                // this registry's applied prefix: serve it from an
-                // ephemeral at-fence rebuild so the partial matches the
-                // prefix every sibling shard served
-                let (mut slot, ids) = registry.shard_at_fence(s, batch.fence, &ctx.log);
-                let mut nb = slot.index.knn(&all_queries, batch.k).neighbors;
-                remap_global(&mut nb, &ids, &exec);
-                nb
-            };
-            let service_seconds = served.elapsed().as_secs_f64();
+            let fence_start = clock::now();
+            let (neighbors, rounds, fence_end): (Vec<Vec<Neighbor>>, Vec<RoundStats>, Instant) =
+                if registry.applied_seq() <= batch.fence {
+                    // owned (or first-dispatch failover) leg: queue FIFO +
+                    // the insert lock guarantee the registry has not run
+                    // past the fence — pull the log up to exactly it
+                    registry.catch_up_to(batch.fence, &ctx.log, &ctx.metrics);
+                    let fence_end = clock::now();
+                    let slot = registry.shard_slot_or_build(s, &ctx.metrics);
+                    let res = slot.index.knn(&all_queries, batch.k);
+                    ctx.metrics.set_shard_builds(
+                        s,
+                        slot.retired_builds + slot.index.build_stats().counters.builds,
+                    );
+                    let ids = &registry
+                        .partition
+                        .as_ref()
+                        // lint: allow(panic-in-lib) — every worker installs the partition replica before the ready handshake
+                        .expect("shard batch without a partition")
+                        .shards[s]
+                        .ids;
+                    let mut nb = res.neighbors;
+                    remap_global(&mut nb, ids, &exec);
+                    (nb, res.rounds, fence_end)
+                } else {
+                    // re-dispatched failover leg whose fence is older than
+                    // this registry's applied prefix: serve it from an
+                    // ephemeral at-fence rebuild so the partial matches the
+                    // prefix every sibling shard served. The rebuild IS
+                    // this leg's fence reconciliation, so it lands in the
+                    // fence-catch-up histogram bucket
+                    let (mut slot, ids) = registry.shard_at_fence(s, batch.fence, &ctx.log);
+                    let fence_end = clock::now();
+                    let res = slot.index.knn(&all_queries, batch.k);
+                    let mut nb = res.neighbors;
+                    remap_global(&mut nb, &ids, &exec);
+                    (nb, res.rounds, fence_end)
+                };
+            let leg_end = clock::now();
+            let service_seconds = leg_end.saturating_duration_since(served).as_secs_f64();
+            {
+                let wm = &ctx.metrics.workers[ctx.worker_id];
+                wm.hist_fence
+                    .record(fence_end.saturating_duration_since(fence_start).as_nanos() as u64);
+                wm.hist_service
+                    .record(leg_end.saturating_duration_since(served).as_nanos() as u64);
+            }
+            // span emission after the leg is computed: the serving path
+            // above never observed the sink, so tracing on/off cannot
+            // perturb results (the bitwise oracle in the trace suite)
+            if let Some(sink) = ctx.tracer.as_mut() {
+                let served_ns = sink.ns_since_epoch(served);
+                let fence_start_ns = sink.ns_since_epoch(fence_start);
+                let fence_end_ns = sink.ns_since_epoch(fence_end);
+                let leg_end_ns = sink.ns_since_epoch(leg_end);
+                let worker = sink.worker();
+                for (req, arrived) in &batch.requests {
+                    let qw = sink.next_id();
+                    sink.push(SpanRecord {
+                        trace: req.id,
+                        span: qw,
+                        parent: 0,
+                        name: span_names::QUEUE_WAIT.to_string(),
+                        worker,
+                        start_ns: sink.ns_since_epoch(*arrived),
+                        end_ns: served_ns,
+                        attrs: Vec::new(),
+                    });
+                    let fs = sink.next_id();
+                    sink.push(SpanRecord {
+                        trace: req.id,
+                        span: fs,
+                        parent: 0,
+                        name: span_names::FENCE_CATCHUP.to_string(),
+                        worker,
+                        start_ns: fence_start_ns,
+                        end_ns: fence_end_ns,
+                        attrs: vec![("fence".to_string(), batch.fence as f64)],
+                    });
+                    let leg = sink.next_id();
+                    sink.push(SpanRecord {
+                        trace: req.id,
+                        span: leg,
+                        parent: 0,
+                        name: span_names::SHARD_LEG.to_string(),
+                        worker,
+                        start_ns: served_ns,
+                        end_ns: leg_end_ns,
+                        attrs: vec![
+                            ("shard".to_string(), s as f64),
+                            ("fence".to_string(), batch.fence as f64),
+                            ("batch".to_string(), seq as f64),
+                        ],
+                    });
+                    push_round_spans(sink, req.id, leg, served_ns, leg_end_ns, &rounds);
+                }
+            }
             if let Some(ms) = delay {
                 std::thread::sleep(Duration::from_millis(ms));
             }
@@ -1947,7 +2108,16 @@ fn drain(
                 // (idempotent) instead of double-decrementing the gauge
                 if let Some(ReplySink::Gather(g)) = reply_of.remove(&sink_key(req.id, Some(s))) {
                     let partial = neighbors[range.0..range.1].to_vec();
-                    deliver_partial(&g, s, partial, service_seconds, &ctx.metrics, &exec);
+                    deliver_partial(
+                        &g,
+                        s,
+                        partial,
+                        service_seconds,
+                        ctx.worker_id,
+                        &ctx.metrics,
+                        &exec,
+                        &mut ctx.tracer,
+                    );
                 }
                 ctx.inflight.fetch_sub(1, Ordering::SeqCst);
                 ctx.complete(req.id, Some(s));
@@ -1960,26 +2130,90 @@ fn drain(
         // direct leg: the fence is a lower bound — catch up if behind
         // (serving at a newer prefix is within the visibility contract
         // for requests that raced an insert)
+        let fence_start = clock::now();
         registry.catch_up_to(batch.fence, &ctx.log, &ctx.metrics);
+        let fence_end = clock::now();
         match path {
             RoutePath::Rt => Metrics::add(&ctx.metrics.rt_requests, batch.requests.len() as u64),
             RoutePath::Brute | RoutePath::BruteCpu => {
                 Metrics::add(&ctx.metrics.brute_requests, batch.requests.len() as u64)
             }
         }
-        let index = registry.get(path, &ctx.metrics);
-        let neighbors = index.knn(&all_queries, batch.k).neighbors;
+        let index = registry.get(path, &ctx.metrics, &mut ctx.tracer);
+        let res = index.knn(&all_queries, batch.k);
         // refresh the gauge: queries only refit, but staying at the
         // index's own count keeps the claim honest if that ever changes
         ctx.metrics
             .set_route_builds(path, index.build_stats().counters.builds);
-        let service_seconds = served.elapsed().as_secs_f64();
+        let neighbors = res.neighbors;
+        let rounds = res.rounds;
+        let svc_end = clock::now();
+        let service_seconds = svc_end.saturating_duration_since(served).as_secs_f64();
+        {
+            let wm = &ctx.metrics.workers[ctx.worker_id];
+            wm.hist_fence
+                .record(fence_end.saturating_duration_since(fence_start).as_nanos() as u64);
+            wm.hist_service
+                .record(svc_end.saturating_duration_since(served).as_nanos() as u64);
+        }
+        // span emission after the batch is computed (see the sharded
+        // path above for the result-transparency argument)
+        if let Some(sink) = ctx.tracer.as_mut() {
+            let served_ns = sink.ns_since_epoch(served);
+            let fence_start_ns = sink.ns_since_epoch(fence_start);
+            let fence_end_ns = sink.ns_since_epoch(fence_end);
+            let svc_end_ns = sink.ns_since_epoch(svc_end);
+            let worker = sink.worker();
+            for (req, arrived) in &batch.requests {
+                let qw = sink.next_id();
+                sink.push(SpanRecord {
+                    trace: req.id,
+                    span: qw,
+                    parent: 0,
+                    name: span_names::QUEUE_WAIT.to_string(),
+                    worker,
+                    start_ns: sink.ns_since_epoch(*arrived),
+                    end_ns: served_ns,
+                    attrs: Vec::new(),
+                });
+                let fs = sink.next_id();
+                sink.push(SpanRecord {
+                    trace: req.id,
+                    span: fs,
+                    parent: 0,
+                    name: span_names::FENCE_CATCHUP.to_string(),
+                    worker,
+                    start_ns: fence_start_ns,
+                    end_ns: fence_end_ns,
+                    attrs: vec![("fence".to_string(), batch.fence as f64)],
+                });
+                let svc = sink.next_id();
+                sink.push(SpanRecord {
+                    trace: req.id,
+                    span: svc,
+                    parent: 0,
+                    name: span_names::SERVICE.to_string(),
+                    worker,
+                    start_ns: served_ns,
+                    end_ns: svc_end_ns,
+                    attrs: vec![
+                        ("fence".to_string(), batch.fence as f64),
+                        ("batch".to_string(), seq as f64),
+                    ],
+                });
+                push_round_spans(sink, req.id, svc, served_ns, svc_end_ns, &rounds);
+            }
+        }
         if let Some(ms) = delay {
             std::thread::sleep(Duration::from_millis(ms));
         }
 
         for ((req, arrived), range) in batch.requests.iter().zip(&batch.ranges) {
-            let latency = arrived.elapsed().as_secs_f64();
+            let e2e = clock::now().saturating_duration_since(*arrived);
+            let latency = e2e.as_secs_f64();
+            ctx.metrics.workers[ctx.worker_id]
+                .hist_e2e
+                .record(e2e.as_nanos() as u64);
             ctx.metrics.record_latency(latency);
             Metrics::inc(&ctx.metrics.responses);
             Metrics::add(&ctx.metrics.queries_served, req.queries.len() as u64);
@@ -1996,11 +2230,59 @@ fn drain(
                     latency_seconds: latency,
                 }));
             }
+            if let Some(sink) = ctx.tracer.as_mut() {
+                sink.event(
+                    req.id,
+                    span_names::REPLY,
+                    vec![("queries".to_string(), req.queries.len() as f64)],
+                );
+            }
             ctx.inflight.fetch_sub(1, Ordering::SeqCst);
             ctx.complete(req.id, None);
         }
         ctx.crashing_keys.clear();
         ctx.beat();
+    }
+}
+
+/// Synthesize one [`span_names::ROUND`] child span per TrueKNN
+/// expansion round under `parent`. Durations are each round's
+/// wall-clock share laid end to end from the parent's start; the
+/// convergence attributes (radius, query/survivor counts, heap pushes)
+/// are the deterministic per-round counters verbatim, so a profile
+/// reconstructed from the trace matches [`crate::knn::HwCounters`]
+/// exactly.
+fn push_round_spans(
+    sink: &mut SpanSink,
+    trace: u64,
+    parent: u64,
+    start_ns: u64,
+    end_ns: u64,
+    rounds: &[RoundStats],
+) {
+    let mut cursor = start_ns;
+    for r in rounds {
+        let dur = (r.wall_seconds * 1e9) as u64;
+        let round_end = cursor.saturating_add(dur).min(end_ns.max(cursor));
+        let span = sink.next_id();
+        let worker = sink.worker();
+        sink.push(SpanRecord {
+            trace,
+            span,
+            parent,
+            name: span_names::ROUND.to_string(),
+            worker,
+            start_ns: cursor,
+            end_ns: round_end,
+            attrs: vec![
+                ("round".to_string(), r.round as f64),
+                ("radius".to_string(), f64::from(r.radius)),
+                ("queries".to_string(), r.queries as f64),
+                ("survivors".to_string(), r.survivors as f64),
+                ("heap_pushes".to_string(), r.heap_pushes as f64),
+            ],
+        });
+        cursor = round_end;
     }
 }
 
@@ -2028,14 +2310,18 @@ fn remap_global(neighbors: &mut [Vec<Neighbor>], ids: &[u32], exec: &Executor) {
 /// and the per-shard query accounting, so a duplicate partial (owner
 /// recovered after the monitor re-dispatched its leg) neither
 /// re-merges nor double-counts `shard_queries`.
+#[allow(clippy::too_many_arguments)] // one call site; a struct would only rename the coupling
 pub(super) fn deliver_partial(
     g: &Gather,
     shard: usize,
     mut partial: Vec<Vec<Neighbor>>,
     service_seconds: f64,
+    worker_id: usize,
     metrics: &Arc<Metrics>,
     exec: &Executor,
+    tracer: &mut Option<SpanSink>,
 ) {
+    let merge_start = clock::now();
     let done = {
         // poisoned only if a sibling delivery panicked; the merges it
         // already folded in are still exactly the data we need
@@ -2074,11 +2360,33 @@ pub(super) fn deliver_partial(
             st.reply.take().map(|reply| (neighbors, slowest, reply))
         }
     };
+    // the early returns above exit on duplicate/completed deliveries,
+    // so everything below only runs for a partial that really merged
+    let merge_end = clock::now();
+    let wm = &metrics.workers[worker_id];
+    wm.hist_merge
+        .record(merge_end.saturating_duration_since(merge_start).as_nanos() as u64);
+    if let Some(sink) = tracer.as_mut() {
+        let span = sink.next_id();
+        let worker = sink.worker();
+        sink.push(SpanRecord {
+            trace: g.id,
+            span,
+            parent: 0,
+            name: span_names::GATHER_MERGE.to_string(),
+            worker,
+            start_ns: sink.ns_since_epoch(merge_start),
+            end_ns: sink.ns_since_epoch(merge_end),
+            attrs: vec![("shard".to_string(), shard as f64)],
+        });
+    }
     let Some((neighbors, service_seconds, reply)) = done else {
         return;
     };
     let n_queries = neighbors.len();
-    let latency = g.submitted.elapsed().as_secs_f64();
+    let e2e = clock::now().saturating_duration_since(g.submitted);
+    let latency = e2e.as_secs_f64();
+    wm.hist_e2e.record(e2e.as_nanos() as u64);
     metrics.record_latency(latency);
     Metrics::inc(&metrics.responses);
     Metrics::add(&metrics.queries_served, n_queries as u64);
@@ -2090,6 +2398,13 @@ pub(super) fn deliver_partial(
         service_seconds,
         latency_seconds: latency,
     }));
+    if let Some(sink) = tracer.as_mut() {
+        sink.event(
+            g.id,
+            span_names::REPLY,
+            vec![("queries".to_string(), n_queries as f64)],
+        );
+    }
 }
 
 #[cfg(test)]

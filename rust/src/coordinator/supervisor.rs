@@ -69,8 +69,9 @@ pub(super) struct ServiceClock {
 impl Default for ServiceClock {
     fn default() -> Self {
         Self {
-            // lint: allow(wallclock-in-core) — heartbeat epoch: feeds staleness intervals only, never results
-            epoch: Instant::now(),
+            // heartbeat epoch: feeds staleness intervals only, never
+            // results — read through the sanctioned telemetry chokepoint
+            epoch: crate::obs::clock::now(),
         }
     }
 }
@@ -208,6 +209,11 @@ pub(super) struct WorkerCtx {
     /// `(id, shard)` keys of the batch being served right now — the
     /// requests a crash at this moment is attributed to.
     pub(super) crashing_keys: Vec<(u64, Option<usize>)>,
+    /// This worker's span sink (tracing on only). Lives here — not in
+    /// incarnation state — so span sequence numbers stay monotonic and
+    /// buffered spans survive across supervised restarts; the sink is
+    /// single-owner, so recording needs no locks.
+    pub(super) tracer: Option<crate::obs::SpanSink>,
 }
 
 impl WorkerCtx {
@@ -310,6 +316,9 @@ pub(super) struct MonitorCtx {
     pub(super) timeout: Duration,
     pub(super) shards: usize,
     pub(super) stop: Receiver<()>,
+    /// The shared control-event sink (tracing on only): re-dispatch
+    /// events land in `trace-control.jsonl`, not a worker file.
+    pub(super) tracer: Option<Arc<Mutex<crate::obs::SpanSink>>>,
 }
 
 /// The failover monitor loop (one thread per sharded pool): every
@@ -368,15 +377,31 @@ fn sweep(mc: &MonitorCtx) {
                 Some(s),
                 g.fence,
                 ReplySink::Gather(g.clone()),
-                // lint: allow(wallclock-in-core) — re-dispatch arrival stamp feeds latency telemetry only
-                Instant::now(),
+                // re-dispatch arrival stamp: latency telemetry only
+                crate::obs::clock::now(),
             );
             // a full failover queue just means we retry at the next
             // tick (redispatched stays false)
             if mc.handle.try_send(fo, msg).is_ok() {
                 Metrics::inc(&mc.handle.metrics().replays);
-                let mut st = g.state.lock().unwrap_or_else(PoisonError::into_inner);
-                st.redispatched[s] = true;
+                {
+                    let mut st = g.state.lock().unwrap_or_else(PoisonError::into_inner);
+                    st.redispatched[s] = true;
+                }
+                if let Some(tracer) = &mc.tracer {
+                    let mut tr = tracer.lock().unwrap_or_else(PoisonError::into_inner);
+                    tr.event(
+                        g.id,
+                        crate::obs::span::names::REDISPATCHED,
+                        vec![
+                            ("shard".to_string(), s as f64),
+                            ("fence".to_string(), g.fence as f64),
+                        ],
+                    );
+                    // control events are rare; land them immediately so
+                    // a reader never races a buffered re-dispatch
+                    tr.flush();
+                }
             }
         }
     }

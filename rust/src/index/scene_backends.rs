@@ -117,6 +117,7 @@ impl NeighborIndex for FixedRadiusIndex {
             queries: queries.len(),
             survivors: result.neighbors.iter().filter(|n| n.len() < k).count(),
             prim_tests: result.counters.prim_tests,
+            heap_pushes: result.counters.heap_pushes,
             sim_seconds: self.cfg.cost_model.seconds(&result.counters, 1),
             wall_seconds: result.wall_seconds,
         });
@@ -278,6 +279,7 @@ impl NeighborIndex for RtnnIndex {
             queries: queries.len(),
             survivors: result.neighbors.iter().filter(|n| n.len() < k).count(),
             prim_tests: result.counters.prim_tests,
+            heap_pushes: result.counters.heap_pushes,
             sim_seconds: self.cfg.cost_model.seconds(&result.counters, launches),
             wall_seconds: result.wall_seconds,
         });

@@ -214,6 +214,7 @@ impl NeighborIndex for TrueKnnIndex {
                 queries: queried,
                 survivors: active.len(),
                 prim_tests: delta.prim_tests,
+                heap_pushes: delta.heap_pushes,
                 sim_seconds: self.cfg.cost_model.seconds(&delta, 1),
                 wall_seconds: round_wall.elapsed_secs(),
             });

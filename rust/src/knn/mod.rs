@@ -38,6 +38,10 @@ pub struct RoundStats {
     pub survivors: usize,
     /// Software intersection tests this round.
     pub prim_tests: u64,
+    /// Annulus heap pushes this round (k-heap insertions from shell
+    /// re-query hits — the per-round slice of `HwCounters::heap_pushes`,
+    /// surfaced so trace round spans match the flat counters exactly).
+    pub heap_pushes: u64,
     /// Simulated GPU seconds for this round.
     pub sim_seconds: f64,
     /// Wall-clock seconds for this round.

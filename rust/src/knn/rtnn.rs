@@ -132,6 +132,7 @@ pub fn rtnn_knns(data: &[Point3], queries: &[Point3], params: &RtnnParams) -> Kn
             .filter(|n| n.len() < params.k)
             .count(),
         prim_tests: result.counters.prim_tests,
+        heap_pushes: result.counters.heap_pushes,
         sim_seconds: params.cost_model.seconds(&result.counters, launches),
         wall_seconds: result.wall_seconds,
     });

@@ -80,6 +80,32 @@
 //! bitwise-identical to a never-crashed service by the determinism
 //! contract. A torn WAL tail is truncated at the last intact record.
 //!
+//! # Observability model
+//!
+//! The serving stack is traceable ([`obs`], `ServiceConfig::trace` /
+//! `trueknn serve --trace-dir`) without compromising the determinism
+//! contract, because every observable is classified up front:
+//!
+//! - **Deterministic** — counters (`heap_pushes`, `shard_queries`,
+//!   per-round radius/survivor telemetry) and span *structure*: which
+//!   spans a request produces, their names, parent links, and counter
+//!   attributes are a pure function of the request stream and
+//!   configuration. The tracing-on/off oracle tests assert responses
+//!   are bitwise-identical with tracing enabled vs disabled.
+//! - **Wall-clock** — span start/end timestamps and latency histogram
+//!   samples. These are measurements, not state: they are read through
+//!   the single sanctioned chokepoint [`obs::clock::now`], quarantined
+//!   inside span records and [`coordinator::MetricsSnapshot`] duration
+//!   fields, and never branched on by any result path.
+//!
+//! Latency distributions use fixed-bucket log2 histograms
+//! ([`obs::LogHistogram`]) whose bucket math is pure `u64` arithmetic;
+//! per-worker histograms merge in worker-index order into the
+//! `MetricsSnapshot` p50/p95/p99 fields. Trace files are CRC-framed
+//! JSONL ([`obs::trace`]) read back by `trueknn trace`
+//! ([`obs::profile`]), which reconstructs per-request span trees and
+//! the TrueKNN round-by-round convergence table.
+//!
 //! ## Migrating from the free functions
 //!
 //! The historical one-shot entry points remain as shims over the trait;
@@ -124,8 +150,10 @@
 //!   result, snapshot, or emission path; iterate sorted keys or an
 //!   ordered structure. Keyed access is order-free and stays legal.
 //! * `wallclock-in-core` — `Instant::now`/`SystemTime` live only in
-//!   the measurement shells (`bench`, `exp`, `util::timer`); core and
-//!   merge paths are replayable.
+//!   the measurement shells (`bench`, `exp`, `util::timer`) and the
+//!   sanctioned telemetry chokepoint [`obs::clock`]; core and merge
+//!   paths are replayable, and serving code reads time exclusively
+//!   through `obs::clock::now()`.
 //! * `raw-threads` — all fan-out goes through [`exec::Executor`] /
 //!   [`exec::scope`] or the coordinator service loop; no raw
 //!   `thread::spawn` elsewhere.
@@ -157,6 +185,7 @@
 
 pub mod analysis;
 pub mod faults;
+pub mod obs;
 pub mod util;
 pub mod exec;
 pub mod geom;

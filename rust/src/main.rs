@@ -7,7 +7,8 @@
 //! trueknn runtime   inspect/smoke-test the PJRT artifacts
 //! trueknn serve     run the batching query service demo (worker pool)
 //! trueknn snapshot  build/validate an offline checksummed index snapshot
-//! trueknn bench     perf microbenches, writes BENCH_PR2/.../PR9.json
+//! trueknn trace     profile a serve run's trace directory (span trees)
+//! trueknn bench     perf microbenches, writes BENCH_PR2/.../PR10.json
 //! trueknn lint      determinism-contract analyzer (exit = finding count)
 //! ```
 
@@ -28,6 +29,7 @@ fn main() {
         Some("runtime") => dispatch(cmd_runtime(), &argv[1..], run_runtime),
         Some("serve") => dispatch(cmd_serve(), &argv[1..], run_serve),
         Some("snapshot") => dispatch(cmd_snapshot(), &argv[1..], run_snapshot),
+        Some("trace") => dispatch(cmd_trace(), &argv[1..], run_trace),
         Some("bench") => dispatch(cmd_bench(), &argv[1..], run_bench),
         // lint bypasses dispatch(): its exit code is the finding count,
         // not the 0/1 ok/error convention
@@ -54,7 +56,8 @@ fn print_usage() {
     println!("  runtime  inspect the PJRT artifacts");
     println!("  serve    run the batching query service demo (worker pool)");
     println!("  snapshot build an index offline into a checksummed snapshot blob");
-    println!("  bench    perf microbenches (BENCH_PR2/.../PR9.json)");
+    println!("  trace    profile a serve run's trace directory (span trees, convergence)");
+    println!("  bench    perf microbenches (BENCH_PR2/.../PR10.json)");
     println!("  lint     determinism-contract analyzer (exit code = finding count)");
     println!("run `trueknn <command> --help` for options");
 }
@@ -442,6 +445,16 @@ fn cmd_serve() -> Command {
             "inserts between index snapshots (0 = only at clean shutdown)",
             "0",
         )
+        .opt(
+            "trace-dir",
+            "capture per-request span traces into this directory (read with `trueknn trace`)",
+            "",
+        )
+        .opt(
+            "metrics-out",
+            "write the final metrics snapshot (latency histograms included) as JSON",
+            "",
+        )
         .flag("pjrt", "use the PJRT brute path when routed")
 }
 
@@ -507,6 +520,11 @@ fn run_serve(a: &Args) -> Result<(), String> {
         );
         cfg.persist = Some(pc);
     }
+    let trace_dir = a.get_str("trace-dir", "");
+    if !trace_dir.is_empty() {
+        log_info!("request tracing to {trace_dir}");
+        cfg.trace = Some(trueknn::coordinator::TraceConfig::new(&trace_dir));
+    }
     let persist_on = cfg.persist.is_some();
     let (svc, handle) = Service::start(ds.points.clone(), cfg);
 
@@ -547,6 +565,13 @@ fn run_serve(a: &Args) -> Result<(), String> {
         m.latency_mean_s * 1e3,
         m.latency_max_s * 1e3
     );
+    // log2-bucket upper bounds: "p99 requests finished within this"
+    println!(
+        "latency percentiles: p50<={:.2}ms p95<={:.2}ms p99<={:.2}ms",
+        m.latency_p50_s * 1e3,
+        m.latency_p95_s * 1e3,
+        m.latency_p99_s * 1e3
+    );
     let builds: Vec<String> = m
         .route_builds
         .iter()
@@ -583,8 +608,90 @@ fn run_serve(a: &Args) -> Result<(), String> {
             ws.submitted, ws.batches, ws.rejected, ws.queue_hwm
         );
     }
+    // shut down first: the clean exit drains every worker's trace ring,
+    // so a --trace-dir capture is complete before anyone reads it
     svc.shutdown();
+    let metrics_out = a.get_str("metrics-out", "");
+    if !metrics_out.is_empty() {
+        std::fs::write(&metrics_out, metrics_to_json(&m).to_string())
+            .map_err(|e| format!("writing {metrics_out}: {e}"))?;
+        log_info!("wrote {metrics_out}");
+    }
     Ok(())
+}
+
+/// Serialize a [`MetricsSnapshot`] for `serve --metrics-out`: every
+/// counter, the recovery/durability story, and the merged per-stage
+/// latency histograms (nonzero log2 buckets as `[bit_length, count]`
+/// pairs, plus the percentile upper bounds in seconds).
+///
+/// [`MetricsSnapshot`]: trueknn::coordinator::MetricsSnapshot
+fn metrics_to_json(m: &trueknn::coordinator::MetricsSnapshot) -> trueknn::configx::Json {
+    use trueknn::configx::Json;
+    use trueknn::obs::LogHistogram;
+    let hist = |h: &LogHistogram| {
+        let buckets: Vec<Json> = h
+            .buckets()
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c > 0)
+            .map(|(b, &c)| Json::Arr(vec![Json::Num(b as f64), Json::Num(c as f64)]))
+            .collect();
+        Json::obj(vec![
+            ("count", Json::Num(h.count() as f64)),
+            ("buckets", Json::Arr(buckets)),
+            ("p50_s", Json::Num(LogHistogram::seconds(h.percentile_upper_ns(50)))),
+            ("p95_s", Json::Num(LogHistogram::seconds(h.percentile_upper_ns(95)))),
+            ("p99_s", Json::Num(LogHistogram::seconds(h.percentile_upper_ns(99)))),
+        ])
+    };
+    let workers: Vec<Json> = m
+        .workers
+        .iter()
+        .map(|w| {
+            Json::obj(vec![
+                ("submitted", Json::Num(w.submitted as f64)),
+                ("rejected", Json::Num(w.rejected as f64)),
+                ("batches", Json::Num(w.batches as f64)),
+                ("inserts", Json::Num(w.inserts as f64)),
+                ("queue_hwm", Json::Num(w.queue_hwm as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("requests", Json::Num(m.requests as f64)),
+        ("responses", Json::Num(m.responses as f64)),
+        ("rejected", Json::Num(m.rejected as f64)),
+        ("batches", Json::Num(m.batches as f64)),
+        ("rt_requests", Json::Num(m.rt_requests as f64)),
+        ("brute_requests", Json::Num(m.brute_requests as f64)),
+        ("queries_served", Json::Num(m.queries_served as f64)),
+        ("inserts", Json::Num(m.inserts as f64)),
+        ("builds", Json::Num(m.builds as f64)),
+        ("restarts", Json::Num(m.restarts as f64)),
+        ("replays", Json::Num(m.replays as f64)),
+        ("deadline_misses", Json::Num(m.deadline_misses as f64)),
+        ("poisoned", Json::Num(m.poisoned as f64)),
+        ("recovered", Json::Num(m.recovered as f64)),
+        ("rebuilt", Json::Num(m.rebuilt as f64)),
+        ("wal_replayed", Json::Num(m.wal_replayed as f64)),
+        ("snapshot_corrupt", Json::Num(m.snapshot_corrupt as f64)),
+        ("latency_mean_s", Json::Num(m.latency_mean_s)),
+        ("latency_max_s", Json::Num(m.latency_max_s)),
+        ("latency_p50_s", Json::Num(m.latency_p50_s)),
+        ("latency_p95_s", Json::Num(m.latency_p95_s)),
+        ("latency_p99_s", Json::Num(m.latency_p99_s)),
+        ("hist_e2e", hist(&m.hist_e2e)),
+        ("hist_queue_wait", hist(&m.hist_queue_wait)),
+        ("hist_fence", hist(&m.hist_fence)),
+        ("hist_service", hist(&m.hist_service)),
+        ("hist_merge", hist(&m.hist_merge)),
+        (
+            "shard_queries",
+            Json::Arr(m.shard_queries.iter().map(|&q| Json::Num(q as f64)).collect()),
+        ),
+        ("workers", Json::Arr(workers)),
+    ])
 }
 
 // -------------------------------------------------------------- snapshot
@@ -705,6 +812,57 @@ fn run_snapshot(a: &Args) -> Result<(), String> {
     Ok(())
 }
 
+// ----------------------------------------------------------------- trace
+
+fn cmd_trace() -> Command {
+    Command::new(
+        "trace",
+        "profile a serve run's trace directory: per-stage attribution, per-shard leg skew, TrueKNN convergence",
+    )
+    .req("dir", "trace directory written by `serve --trace-dir`")
+    .opt("tree", "also render the span tree of this request id", "")
+    .flag("json", "emit the machine-readable profile JSON")
+}
+
+/// `trueknn trace`: the offline profiler over a serve run's span
+/// capture. Reads every CRC-framed `trace-*.jsonl` under `--dir`
+/// (tolerating a crashed writer's torn tail), reconstructs span trees,
+/// and prints the aggregate report — or, with `--tree <id>`, one
+/// request's tree. The convergence table's counters are deterministic
+/// (they mirror the engine's own round bookkeeping), so the report is
+/// auditable against `MetricsSnapshot` and the BENCH gates.
+fn run_trace(a: &Args) -> Result<(), String> {
+    use trueknn::obs::profile;
+    let dir = a.get("dir").ok_or("--dir is required")?;
+    let (records, truncated) = trueknn::obs::trace::read_trace_dir(std::path::Path::new(dir))?;
+    if records.is_empty() {
+        return Err(format!("no verified trace records under {dir}"));
+    }
+    if truncated {
+        log_info!("a trace file ended in a torn frame; profiling the verified prefix");
+    }
+    let tree_id = a.get_str("tree", "");
+    if !tree_id.is_empty() {
+        let id: u64 = tree_id
+            .parse()
+            .map_err(|e| format!("--tree wants a request id: {e}"))?;
+        let tree = profile::span_tree(&records, id)
+            .ok_or_else(|| format!("no spans for request {id} under {dir}"))?;
+        print!("{}", profile::render_tree(&tree));
+        if !a.flag("json") {
+            println!();
+        }
+    }
+    let prof = profile::Profile::build(&records, truncated);
+    if a.flag("json") {
+        let s = profile::to_json(&prof).to_string();
+        println!("{s}");
+    } else {
+        print!("{}", profile::render_text(&prof));
+    }
+    Ok(())
+}
+
 // ------------------------------------------------------------------ lint
 
 fn cmd_lint() -> Command {
@@ -763,7 +921,7 @@ fn run_lint(argv: &[String]) -> i32 {
 fn cmd_bench() -> Command {
     Command::new(
         "bench",
-        "perf microbenches: launch throughput + shell re-query (PR2), SoA leaf loop + cohort scheduling + round bookkeeping (PR3), worker-pool serving throughput (PR4), sharded hot-route throughput (PR5), determinism-lint gate cost (PR6), supervised recovery cost (PR7), crash-safe persistence cost (PR8), pipelined scatter-gather + fenced inserts (PR9)",
+        "perf microbenches: launch throughput + shell re-query (PR2), SoA leaf loop + cohort scheduling + round bookkeeping (PR3), worker-pool serving throughput (PR4), sharded hot-route throughput (PR5), determinism-lint gate cost (PR6), supervised recovery cost (PR7), crash-safe persistence cost (PR8), pipelined scatter-gather + fenced inserts (PR9), tracing overhead + transparency (PR10)",
     )
     .opt("n", "points for the launch-throughput bench", "100000")
     .opt("shell-n", "points for the TrueKNN shell/round bench", "20000")
@@ -779,6 +937,7 @@ fn cmd_bench() -> Command {
     .opt("pr7-out", "PR7 output JSON path", "BENCH_PR7.json")
     .opt("pr8-out", "PR8 output JSON path", "BENCH_PR8.json")
     .opt("pr9-out", "PR9 output JSON path", "BENCH_PR9.json")
+    .opt("pr10-out", "PR10 output JSON path", "BENCH_PR10.json")
 }
 
 fn run_bench(a: &Args) -> Result<(), String> {
@@ -796,6 +955,7 @@ fn run_bench(a: &Args) -> Result<(), String> {
     let pr7_out = a.get_str("pr7-out", "BENCH_PR7.json");
     let pr8_out = a.get_str("pr8-out", "BENCH_PR8.json");
     let pr9_out = a.get_str("pr9-out", "BENCH_PR9.json");
+    let pr10_out = a.get_str("pr10-out", "BENCH_PR10.json");
 
     let report = trueknn::bench::pr2::run(n, shell_n, iters);
     trueknn::bench::pr2::render(&report).print();
@@ -886,5 +1046,21 @@ fn run_bench(a: &Args) -> Result<(), String> {
     std::fs::write(&pr9_out, trueknn::bench::pr9::to_json(&pr9).to_string())
         .map_err(|e| e.to_string())?;
     log_info!("wrote {pr9_out}");
+
+    let pr10 = trueknn::bench::pr10::run(serve_n, serve_requests, serve_queries, iters);
+    trueknn::bench::pr10::render(&pr10).print();
+    if !pr10.results_match {
+        return Err("tracing changed responses vs the untraced run — transparency broken".into());
+    }
+    if pr10.overhead_frac > trueknn::bench::pr10::OVERHEAD_BUDGET {
+        return Err(format!(
+            "tracing overhead {:.1}% exceeds the {:.0}% budget",
+            pr10.overhead_frac * 100.0,
+            trueknn::bench::pr10::OVERHEAD_BUDGET * 100.0
+        ));
+    }
+    std::fs::write(&pr10_out, trueknn::bench::pr10::to_json(&pr10).to_string())
+        .map_err(|e| e.to_string())?;
+    log_info!("wrote {pr10_out}");
     Ok(())
 }

@@ -1,0 +1,216 @@
+//! Fixed-bucket log2 latency histograms.
+//!
+//! Bucket math is pure integer arithmetic: a nanosecond sample lands
+//! in the bucket indexed by its bit length (bucket 0 holds exactly the
+//! value 0; bucket `b ≥ 1` holds `[2^(b-1), 2^b - 1]`; bucket 63
+//! absorbs everything from `2^62` up to `u64::MAX`). No floats touch
+//! recording, merging, or percentile extraction, so histogram state is
+//! a deterministic function of the multiset of samples — merging two
+//! histograms is per-bucket `u64` addition, which is associative and
+//! commutative, and the coordinator merges worker histograms in
+//! worker-index order so snapshots are reproducible byte-for-byte
+//! given identical samples.
+//!
+//! Percentiles are *bucket upper bounds*: `p99` answers "99% of
+//! samples were at most this many nanoseconds", rounded up to the
+//! nearest power-of-two boundary. Conversion to floating seconds
+//! happens only at the display edge ([`LogHistogram::seconds`]).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of histogram buckets: one per `u64` bit length, plus the
+/// zero bucket folded into index 0.
+pub const BUCKETS: usize = 64;
+
+/// Bucket index for a nanosecond sample: its bit length, clamped to
+/// the top bucket.
+fn bucket_of(ns: u64) -> usize {
+    if ns == 0 {
+        0
+    } else {
+        ((64 - ns.leading_zeros()) as usize).min(BUCKETS - 1)
+    }
+}
+
+/// Inclusive upper bound of a bucket, in nanoseconds.
+fn upper_bound(bucket: usize) -> u64 {
+    match bucket {
+        0 => 0,
+        b if b >= BUCKETS - 1 => u64::MAX,
+        b => (1u64 << b) - 1,
+    }
+}
+
+/// A plain (single-owner) log2 histogram of nanosecond durations.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LogHistogram {
+    buckets: [u64; BUCKETS],
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram { buckets: [0; BUCKETS] }
+    }
+}
+
+impl LogHistogram {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sample of `ns` nanoseconds.
+    pub fn record(&mut self, ns: u64) {
+        self.buckets[bucket_of(ns)] += 1;
+    }
+
+    /// Total number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// True when no samples have been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    /// Fold another histogram into this one (per-bucket addition —
+    /// associative and commutative, so any merge order yields the same
+    /// state; the coordinator still merges in worker-index order for
+    /// auditability).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (mine, theirs) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *mine += theirs;
+        }
+    }
+
+    /// The raw bucket counts, indexed by bit length.
+    pub fn buckets(&self) -> &[u64; BUCKETS] {
+        &self.buckets
+    }
+
+    /// Upper-bound nanoseconds of the bucket containing the `pct`-th
+    /// percentile sample (rank rounded up). Returns 0 on an empty
+    /// histogram. Pure integer math end to end.
+    pub fn percentile_upper_ns(&self, pct: u64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = (n * pct).div_ceil(100).max(1);
+        let mut cumulative = 0u64;
+        for (b, &c) in self.buckets.iter().enumerate() {
+            cumulative += c;
+            if cumulative >= rank {
+                return upper_bound(b);
+            }
+        }
+        upper_bound(BUCKETS - 1)
+    }
+
+    /// Display-edge conversion of a nanosecond bound to seconds. This
+    /// is the only place histogram values meet floating point.
+    pub fn seconds(ns: u64) -> f64 {
+        ns as f64 / 1e9
+    }
+}
+
+/// A shared log2 histogram: per-bucket atomic counters a worker
+/// records into without coordination. `Relaxed` ordering is enough —
+/// each increment is an independent count and snapshots only run at
+/// quiescent points (or tolerate being approximate mid-run, like every
+/// other gauge in [`crate::coordinator::Metrics`]).
+pub struct AtomicHistogram {
+    buckets: [AtomicU64; BUCKETS],
+}
+
+impl Default for AtomicHistogram {
+    fn default() -> Self {
+        AtomicHistogram { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+}
+
+impl AtomicHistogram {
+    /// An empty shared histogram.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sample of `ns` nanoseconds.
+    pub fn record(&self, ns: u64) {
+        self.buckets[bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Copy the current counts into a plain [`LogHistogram`].
+    pub fn snapshot(&self) -> LogHistogram {
+        let mut h = LogHistogram::new();
+        for (dst, src) in h.buckets.iter_mut().zip(self.buckets.iter()) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_powers_of_two() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(u64::MAX), 63);
+        assert_eq!(upper_bound(0), 0);
+        assert_eq!(upper_bound(1), 1);
+        assert_eq!(upper_bound(2), 3);
+        assert_eq!(upper_bound(63), u64::MAX);
+    }
+
+    #[test]
+    fn percentiles_are_bucket_upper_bounds() {
+        let mut h = LogHistogram::new();
+        // 99 fast samples (bucket of 100ns) and one slow outlier
+        for _ in 0..99 {
+            h.record(100);
+        }
+        h.record(1_000_000);
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.percentile_upper_ns(50), upper_bound(bucket_of(100)));
+        assert_eq!(h.percentile_upper_ns(99), upper_bound(bucket_of(100)));
+        assert_eq!(h.percentile_upper_ns(100), upper_bound(bucket_of(1_000_000)));
+    }
+
+    #[test]
+    fn empty_histogram_reports_zero() {
+        let h = LogHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.percentile_upper_ns(50), 0);
+    }
+
+    #[test]
+    fn merge_is_addition() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        a.record(10);
+        a.record(1000);
+        b.record(10);
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged.count(), 3);
+        assert_eq!(merged.buckets()[bucket_of(10)], 2);
+    }
+
+    #[test]
+    fn atomic_snapshot_matches_plain_recording() {
+        let atomic = AtomicHistogram::new();
+        let mut plain = LogHistogram::new();
+        for ns in [0u64, 1, 7, 4096, 123_456_789] {
+            atomic.record(ns);
+            plain.record(ns);
+        }
+        assert_eq!(atomic.snapshot(), plain);
+    }
+}

@@ -1,0 +1,47 @@
+//! Observability: request-scoped tracing and convergence telemetry.
+//!
+//! This layer makes the serving pipeline *visible* without making it
+//! *nondeterministic*. The split is strict:
+//!
+//! - **Deterministic**: span structure (which spans exist, their
+//!   parent/child shape, their names and ordering keys), and every
+//!   counter attribute carried on a span (shard, fence, round index,
+//!   radius, survivors, heap pushes). These are pure functions of the
+//!   request stream and configuration — bitwise identical across runs.
+//! - **Wall-clock**: span start/end timestamps and every latency
+//!   histogram sample. These are telemetry-only measurements,
+//!   quarantined inside span records and [`MetricsSnapshot`]
+//!   duration fields; no result path ever reads them back.
+//!
+//! The quarantine is enforced three ways: the sanctioned clock
+//! chokepoint ([`clock::now`]) is the only place outside the
+//! measurement shells where the `wallclock-in-core` lint permits a
+//! monotonic clock read; the tracing-on/off oracle tests assert
+//! bitwise-identical responses with tracing enabled vs disabled; and
+//! the `BENCH_PR10` gate re-checks both properties under a serving
+//! sweep in CI.
+//!
+//! Pieces:
+//!
+//! - [`clock`] — the sanctioned monotonic clock read plus a seeded
+//!   deterministic [`clock::MockClock`] for tests.
+//! - [`hist`] — fixed-bucket log2 latency histograms with pure-integer
+//!   bucket math, mergeable across workers in worker-index order.
+//! - [`span`] — the span record model and the span-name taxonomy.
+//! - [`trace`] — per-worker single-owner span sinks drained to
+//!   length-prefixed, CRC-framed JSONL trace files.
+//! - [`profile`] — the `trueknn trace` reader: span-tree
+//!   reconstruction, per-stage attribution, per-shard leg skew, and
+//!   the TrueKNN per-round convergence table.
+//!
+//! [`MetricsSnapshot`]: crate::coordinator::MetricsSnapshot
+
+pub mod clock;
+pub mod hist;
+pub mod profile;
+pub mod span;
+pub mod trace;
+
+pub use hist::{AtomicHistogram, LogHistogram};
+pub use span::SpanRecord;
+pub use trace::{SpanSink, TraceConfig, Tracing};

@@ -1,0 +1,477 @@
+//! The `trueknn trace` profiler: span-tree reconstruction and
+//! aggregate reports over a serve run's trace directory.
+//!
+//! All aggregation is deterministic given a trace directory: records
+//! are keyed and grouped through `BTreeMap`s, sums use integer
+//! nanoseconds, and floating point appears only where a value is
+//! inherently a measurement (radii, skew ratios at the display edge).
+
+use std::collections::BTreeMap;
+
+use super::span::{names, SpanRecord};
+use crate::configx::Json;
+
+/// Per-stage time attribution: every span name seen, with its count
+/// and total duration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageAgg {
+    /// Span taxonomy name.
+    pub name: String,
+    /// Number of spans with this name.
+    pub count: u64,
+    /// Summed duration across them, in nanoseconds.
+    pub total_ns: u64,
+}
+
+/// Per-shard scatter-leg load: how much leg time each shard absorbed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardAgg {
+    /// Shard index (from the leg span's `shard` attribute).
+    pub shard: u64,
+    /// Number of leg spans that served this shard.
+    pub legs: u64,
+    /// Summed leg duration, in nanoseconds.
+    pub total_ns: u64,
+    /// Slowest single leg, in nanoseconds.
+    pub max_ns: u64,
+}
+
+/// One row of the TrueKNN convergence table: every round-`i` span in
+/// the trace, aggregated.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundAgg {
+    /// Round index within the shell re-query loop.
+    pub round: u64,
+    /// Number of round spans at this index.
+    pub count: u64,
+    /// Smallest radius observed at this round.
+    pub radius_min: f64,
+    /// Largest radius observed at this round.
+    pub radius_max: f64,
+    /// Total queries still active entering this round.
+    pub queries: u64,
+    /// Total queries still unconverged after this round.
+    pub survivors: u64,
+    /// Total annulus heap pushes performed in this round.
+    pub heap_pushes: u64,
+}
+
+/// The full profile of one trace directory.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Profile {
+    /// Verified records read.
+    pub records: u64,
+    /// Distinct request traces (control-only trace 0 excluded).
+    pub traces: u64,
+    /// True when any trace file ended in a torn frame (the verified
+    /// prefix is still profiled).
+    pub truncated: bool,
+    /// Per-stage attribution, sorted by span name.
+    pub stages: Vec<StageAgg>,
+    /// Per-shard leg load, sorted by shard index.
+    pub shards: Vec<ShardAgg>,
+    /// Convergence table, sorted by round index.
+    pub rounds: Vec<RoundAgg>,
+    /// Monitor re-dispatch events observed.
+    pub redispatched: u64,
+    /// Cold-start recovery (snapshot rejection) events observed.
+    pub recoveries: u64,
+}
+
+impl Profile {
+    /// Aggregate a record set (as returned by
+    /// [`read_trace_dir`](super::trace::read_trace_dir)).
+    pub fn build(records: &[SpanRecord], truncated: bool) -> Profile {
+        let mut stages: BTreeMap<String, StageAgg> = BTreeMap::new();
+        let mut shards: BTreeMap<u64, ShardAgg> = BTreeMap::new();
+        let mut rounds: BTreeMap<u64, RoundAgg> = BTreeMap::new();
+        let mut traces: BTreeMap<u64, ()> = BTreeMap::new();
+        let mut redispatched = 0u64;
+        let mut recoveries = 0u64;
+        for rec in records {
+            if rec.trace != 0 {
+                traces.insert(rec.trace, ());
+            }
+            let stage = stages.entry(rec.name.clone()).or_insert_with(|| StageAgg {
+                name: rec.name.clone(),
+                count: 0,
+                total_ns: 0,
+            });
+            stage.count += 1;
+            stage.total_ns += rec.duration_ns();
+            match rec.name.as_str() {
+                names::SHARD_LEG => {
+                    let shard = rec.attr("shard").unwrap_or(-1.0) as i64;
+                    if shard >= 0 {
+                        let agg = shards.entry(shard as u64).or_insert_with(|| ShardAgg {
+                            shard: shard as u64,
+                            legs: 0,
+                            total_ns: 0,
+                            max_ns: 0,
+                        });
+                        agg.legs += 1;
+                        agg.total_ns += rec.duration_ns();
+                        agg.max_ns = agg.max_ns.max(rec.duration_ns());
+                    }
+                }
+                names::ROUND => {
+                    let round = rec.attr("round").unwrap_or(0.0) as u64;
+                    let radius = rec.attr("radius").unwrap_or(0.0);
+                    let agg = rounds.entry(round).or_insert_with(|| RoundAgg {
+                        round,
+                        count: 0,
+                        radius_min: f64::INFINITY,
+                        radius_max: f64::NEG_INFINITY,
+                        queries: 0,
+                        survivors: 0,
+                        heap_pushes: 0,
+                    });
+                    agg.count += 1;
+                    agg.radius_min = agg.radius_min.min(radius);
+                    agg.radius_max = agg.radius_max.max(radius);
+                    agg.queries += rec.attr("queries").unwrap_or(0.0) as u64;
+                    agg.survivors += rec.attr("survivors").unwrap_or(0.0) as u64;
+                    agg.heap_pushes += rec.attr("heap_pushes").unwrap_or(0.0) as u64;
+                }
+                names::REDISPATCHED => redispatched += 1,
+                names::RECOVERY => recoveries += 1,
+                _ => {}
+            }
+        }
+        Profile {
+            records: records.len() as u64,
+            traces: traces.len() as u64,
+            truncated,
+            stages: stages.into_values().collect(),
+            shards: shards.into_values().collect(),
+            rounds: rounds.into_values().collect(),
+            redispatched,
+            recoveries,
+        }
+    }
+
+    /// Leg skew across shards: slowest shard's total leg time divided
+    /// by the fastest shard's. 1.0 means perfectly balanced; `None`
+    /// with fewer than two shards.
+    pub fn leg_skew(&self) -> Option<f64> {
+        if self.shards.len() < 2 {
+            return None;
+        }
+        let mut min = u64::MAX;
+        let mut max = 0u64;
+        for s in &self.shards {
+            min = min.min(s.total_ns);
+            max = max.max(s.total_ns);
+        }
+        if min == 0 {
+            return None;
+        }
+        Some(max as f64 / min as f64)
+    }
+}
+
+/// One node of a reconstructed span tree.
+#[derive(Debug, Clone)]
+pub struct SpanNode {
+    /// The record at this node (the synthesized `request` root uses a
+    /// zero-filled record with only name/trace/timestamps set).
+    pub record: SpanRecord,
+    /// Children, sorted by (start, span id).
+    pub children: Vec<SpanNode>,
+}
+
+/// Reconstruct the span tree of one trace: a synthesized `request`
+/// root spanning the earliest start to the latest end, with every
+/// `parent = 0` record as a direct child and deeper records attached
+/// by parent id. Returns `None` when the trace has no records.
+pub fn span_tree(records: &[SpanRecord], trace: u64) -> Option<SpanNode> {
+    let mut mine: Vec<&SpanRecord> = records.iter().filter(|r| r.trace == trace).collect();
+    if mine.is_empty() {
+        return None;
+    }
+    mine.sort_by_key(|r| (r.start_ns, r.span));
+    let start = mine.iter().map(|r| r.start_ns).min().unwrap_or(0);
+    let end = mine.iter().map(|r| r.end_ns).max().unwrap_or(0);
+    let mut by_parent: BTreeMap<u64, Vec<&SpanRecord>> = BTreeMap::new();
+    for r in &mine {
+        by_parent.entry(r.parent).or_default().push(r);
+    }
+    fn attach(rec: &SpanRecord, by_parent: &BTreeMap<u64, Vec<&SpanRecord>>) -> SpanNode {
+        let children = by_parent
+            .get(&rec.span)
+            .map(|kids| kids.iter().map(|k| attach(k, by_parent)).collect())
+            .unwrap_or_default();
+        SpanNode { record: rec.clone(), children }
+    }
+    let children: Vec<SpanNode> = by_parent
+        .get(&0)
+        .map(|tops| tops.iter().map(|r| attach(r, &by_parent)).collect())
+        .unwrap_or_default();
+    let root = SpanRecord {
+        trace,
+        span: 0,
+        parent: 0,
+        name: names::REQUEST.to_string(),
+        worker: 0,
+        start_ns: start,
+        end_ns: end,
+        attrs: Vec::new(),
+    };
+    Some(SpanNode { record: root, children })
+}
+
+/// Render one span tree as an indented text block.
+pub fn render_tree(node: &SpanNode) -> String {
+    let mut out = String::new();
+    fn walk(node: &SpanNode, depth: usize, out: &mut String) {
+        let rec = &node.record;
+        let indent = "  ".repeat(depth);
+        let attrs: Vec<String> =
+            rec.attrs.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        let attrs = if attrs.is_empty() {
+            String::new()
+        } else {
+            format!(" [{}]", attrs.join(" "))
+        };
+        out.push_str(&format!(
+            "{indent}{} {:.3}ms (worker {}){attrs}\n",
+            rec.name,
+            rec.duration_ns() as f64 / 1e6,
+            rec.worker,
+        ));
+        for child in &node.children {
+            walk(child, depth + 1, out);
+        }
+    }
+    walk(node, 0, &mut out);
+    out
+}
+
+/// Render the aggregate profile as the `trueknn trace` text report.
+pub fn render_text(profile: &Profile) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "trace profile: {} records across {} requests{}\n",
+        profile.records,
+        profile.traces,
+        if profile.truncated { " (torn tail: partial)" } else { "" },
+    ));
+    out.push_str("\nper-stage attribution:\n");
+    out.push_str(&format!(
+        "  {:<14} {:>8} {:>12} {:>12}\n",
+        "stage", "spans", "total ms", "mean µs"
+    ));
+    for s in &profile.stages {
+        let mean_us = if s.count == 0 { 0.0 } else { s.total_ns as f64 / s.count as f64 / 1e3 };
+        out.push_str(&format!(
+            "  {:<14} {:>8} {:>12.3} {:>12.2}\n",
+            s.name,
+            s.count,
+            s.total_ns as f64 / 1e6,
+            mean_us,
+        ));
+    }
+    if !profile.shards.is_empty() {
+        out.push_str("\nper-shard leg load:\n");
+        out.push_str(&format!(
+            "  {:<6} {:>8} {:>12} {:>12}\n",
+            "shard", "legs", "total ms", "max ms"
+        ));
+        for s in &profile.shards {
+            out.push_str(&format!(
+                "  {:<6} {:>8} {:>12.3} {:>12.3}\n",
+                s.shard,
+                s.legs,
+                s.total_ns as f64 / 1e6,
+                s.max_ns as f64 / 1e6,
+            ));
+        }
+        if let Some(skew) = profile.leg_skew() {
+            out.push_str(&format!("  leg skew (slowest/fastest shard): {skew:.2}x\n"));
+        }
+    }
+    if !profile.rounds.is_empty() {
+        out.push_str("\nTrueKNN convergence (per shell re-query round):\n");
+        out.push_str(&format!(
+            "  {:<6} {:>6} {:>12} {:>10} {:>10} {:>12}\n",
+            "round", "spans", "radius", "queries", "survivors", "heap pushes"
+        ));
+        for r in &profile.rounds {
+            let radius = if r.radius_min == r.radius_max {
+                format!("{:.4}", r.radius_min)
+            } else {
+                format!("{:.3}..{:.3}", r.radius_min, r.radius_max)
+            };
+            out.push_str(&format!(
+                "  {:<6} {:>6} {:>12} {:>10} {:>10} {:>12}\n",
+                r.round, r.count, radius, r.queries, r.survivors, r.heap_pushes,
+            ));
+        }
+    }
+    if profile.redispatched > 0 || profile.recoveries > 0 {
+        out.push_str(&format!(
+            "\ncontrol events: {} redispatched, {} recovery\n",
+            profile.redispatched, profile.recoveries,
+        ));
+    }
+    out
+}
+
+/// Serialize the profile for `trueknn trace --json`.
+pub fn to_json(profile: &Profile) -> Json {
+    let stages = profile
+        .stages
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("name", Json::Str(s.name.clone())),
+                ("count", Json::Num(s.count as f64)),
+                ("total_ns", Json::Num(s.total_ns as f64)),
+            ])
+        })
+        .collect();
+    let shards = profile
+        .shards
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("shard", Json::Num(s.shard as f64)),
+                ("legs", Json::Num(s.legs as f64)),
+                ("total_ns", Json::Num(s.total_ns as f64)),
+                ("max_ns", Json::Num(s.max_ns as f64)),
+            ])
+        })
+        .collect();
+    let rounds = profile
+        .rounds
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("round", Json::Num(r.round as f64)),
+                ("count", Json::Num(r.count as f64)),
+                ("radius_min", Json::Num(r.radius_min)),
+                ("radius_max", Json::Num(r.radius_max)),
+                ("queries", Json::Num(r.queries as f64)),
+                ("survivors", Json::Num(r.survivors as f64)),
+                ("heap_pushes", Json::Num(r.heap_pushes as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("records", Json::Num(profile.records as f64)),
+        ("traces", Json::Num(profile.traces as f64)),
+        ("truncated", Json::Bool(profile.truncated)),
+        ("stages", Json::Arr(stages)),
+        ("shards", Json::Arr(shards)),
+        ("rounds", Json::Arr(rounds)),
+        ("leg_skew", profile.leg_skew().map(Json::Num).unwrap_or(Json::Null)),
+        ("redispatched", Json::Num(profile.redispatched as f64)),
+        ("recoveries", Json::Num(profile.recoveries as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(trace: u64, span: u64, parent: u64, name: &str, start: u64, end: u64) -> SpanRecord {
+        SpanRecord {
+            trace,
+            span,
+            parent,
+            name: name.to_string(),
+            worker: span >> 32,
+            start_ns: start,
+            end_ns: end,
+            attrs: Vec::new(),
+        }
+    }
+
+    fn with_attrs(mut rec: SpanRecord, attrs: &[(&str, f64)]) -> SpanRecord {
+        rec.attrs = attrs.iter().map(|(k, v)| (k.to_string(), *v)).collect();
+        rec
+    }
+
+    fn sample_records() -> Vec<SpanRecord> {
+        let leg0 = with_attrs(
+            span(1, (1 << 32) | 2, 0, names::SHARD_LEG, 100, 700),
+            &[("shard", 0.0), ("fence", 3.0)],
+        );
+        let leg1 = with_attrs(
+            span(1, (2 << 32) | 2, 0, names::SHARD_LEG, 100, 400),
+            &[("shard", 1.0), ("fence", 3.0)],
+        );
+        let round = with_attrs(
+            span(1, (1 << 32) | 3, (1 << 32) | 2, names::ROUND, 120, 300),
+            &[
+                ("round", 0.0),
+                ("radius", 0.5),
+                ("queries", 16.0),
+                ("survivors", 4.0),
+                ("heap_pushes", 64.0),
+            ],
+        );
+        vec![
+            span(1, (1 << 32) | 1, 0, names::QUEUE_WAIT, 0, 100),
+            leg0,
+            leg1,
+            round,
+            span(1, (2 << 32) | 3, 0, names::GATHER_MERGE, 400, 450),
+        ]
+    }
+
+    #[test]
+    fn profile_aggregates_stages_shards_and_rounds() {
+        let p = Profile::build(&sample_records(), false);
+        assert_eq!(p.records, 5);
+        assert_eq!(p.traces, 1);
+        let legs = p.stages.iter().find(|s| s.name == names::SHARD_LEG).unwrap();
+        assert_eq!(legs.count, 2);
+        assert_eq!(legs.total_ns, 600 + 300);
+        assert_eq!(p.shards.len(), 2);
+        assert_eq!(p.shards[0].shard, 0);
+        assert_eq!(p.shards[0].total_ns, 600);
+        assert_eq!(p.rounds.len(), 1);
+        assert_eq!(p.rounds[0].heap_pushes, 64);
+        assert_eq!(p.rounds[0].survivors, 4);
+        let skew = p.leg_skew().unwrap();
+        assert!((skew - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn span_tree_synthesizes_the_request_root() {
+        let records = sample_records();
+        let tree = span_tree(&records, 1).unwrap();
+        assert_eq!(tree.record.name, names::REQUEST);
+        assert_eq!(tree.record.start_ns, 0);
+        assert_eq!(tree.record.end_ns, 700);
+        // queue_wait, two legs, gather_merge at the top; the round
+        // nests under leg 0
+        assert_eq!(tree.children.len(), 4);
+        let leg0 = tree
+            .children
+            .iter()
+            .find(|c| c.record.name == names::SHARD_LEG && c.record.attr("shard") == Some(0.0))
+            .unwrap();
+        assert_eq!(leg0.children.len(), 1);
+        assert_eq!(leg0.children[0].record.name, names::ROUND);
+        assert!(span_tree(&records, 99).is_none());
+    }
+
+    #[test]
+    fn renderers_and_json_cover_every_section() {
+        let p = Profile::build(&sample_records(), true);
+        let text = render_text(&p);
+        assert!(text.contains("torn tail"));
+        assert!(text.contains("per-stage attribution"));
+        assert!(text.contains("per-shard leg load"));
+        assert!(text.contains("convergence"));
+        let tree = span_tree(&sample_records(), 1).unwrap();
+        let rendered = render_tree(&tree);
+        assert!(rendered.contains(names::REQUEST));
+        assert!(rendered.contains("shard=0"));
+        let j = crate::configx::parse_json(&to_json(&p).to_string()).unwrap();
+        assert_eq!(j.get("records").and_then(Json::as_f64), Some(5.0));
+        assert_eq!(j.get("truncated").and_then(Json::as_bool), Some(true));
+    }
+}

@@ -1,0 +1,178 @@
+//! Span records and the serving-stack span taxonomy.
+//!
+//! A span is one timed region of one request's life, keyed by the
+//! request id (`trace`). Span *structure* — names, parent links,
+//! counter attributes — is deterministic; span *timestamps* are
+//! wall-clock telemetry quarantined inside the record (nanoseconds
+//! relative to the trace epoch, never absolute time, never read back
+//! by result paths).
+//!
+//! Span ids pack the owning worker into the high bits
+//! (`worker << 32 | seq`), so ids are unique across the pool without
+//! coordination and still round-trip exactly through JSON number
+//! formatting (the largest id stays far below 2^53).
+//!
+//! See [`names`] for the taxonomy; the coordinator's module docs carry
+//! the full table of which stage emits which span.
+
+use crate::configx::Json;
+
+/// The span-name taxonomy. Every record written by the serving stack
+/// uses one of these names; the profiler groups stages by them.
+pub mod names {
+    /// Synthesized root: one per request, parent of everything below.
+    /// Writers never emit it; the trace reader reconstructs it.
+    pub const REQUEST: &str = "request";
+    /// Time between a request arriving at a worker's queue and the
+    /// worker starting to serve its batch.
+    pub const QUEUE_WAIT: &str = "queue_wait";
+    /// Replaying fenced inserts a batch is ordered after.
+    pub const FENCE_CATCHUP: &str = "fence_catchup";
+    /// One scatter leg of a sharded request on one worker
+    /// (attrs: `shard`, `fence`, `batch`).
+    pub const SHARD_LEG: &str = "shard_leg";
+    /// The single-index service stage of a direct (unsharded) request.
+    pub const SERVICE: &str = "service";
+    /// One TrueKNN shell re-query round inside a leg or service span
+    /// (attrs: `round`, `radius`, `queries`, `survivors`,
+    /// `heap_pushes`).
+    pub const ROUND: &str = "round";
+    /// Merging one leg's partial results into a request's gather
+    /// accumulator.
+    pub const GATHER_MERGE: &str = "gather_merge";
+    /// Handing the finished response to the reply sink.
+    pub const REPLY: &str = "reply";
+    /// Event: the monitor re-dispatched a stuck scatter leg
+    /// (attrs: `shard`, `fence`).
+    pub const REDISPATCHED: &str = "redispatched";
+    /// Event: cold-start recovery rejected a corrupt snapshot and fell
+    /// back to a deterministic rebuild.
+    pub const RECOVERY: &str = "recovery";
+}
+
+/// Worker-id sentinel for records written by control threads (the
+/// monitor, cold-start recovery) rather than a pool worker.
+pub const CONTROL_WORKER: u64 = 0xFFFF;
+
+/// One span (or zero-duration event) record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanRecord {
+    /// Request id this span belongs to (0 for control events not tied
+    /// to a request).
+    pub trace: u64,
+    /// Unique span id: `worker << 32 | seq`.
+    pub span: u64,
+    /// Parent span id, or 0 when the parent is the synthesized
+    /// per-request root.
+    pub parent: u64,
+    /// Taxonomy name (see [`names`]).
+    pub name: String,
+    /// Worker that recorded the span ([`CONTROL_WORKER`] for control
+    /// threads).
+    pub worker: u64,
+    /// Start, in nanoseconds since the trace epoch (wall-clock
+    /// telemetry — quarantined here, never read by result paths).
+    pub start_ns: u64,
+    /// End, in nanoseconds since the trace epoch (same quarantine).
+    pub end_ns: u64,
+    /// Counter attributes: deterministic values (shard, fence, round,
+    /// radius, survivors, …) keyed by name, in insertion order.
+    pub attrs: Vec<(String, f64)>,
+}
+
+impl SpanRecord {
+    /// Duration in nanoseconds (saturating: a torn record never
+    /// underflows).
+    pub fn duration_ns(&self) -> u64 {
+        self.end_ns.saturating_sub(self.start_ns)
+    }
+
+    /// Look up one attribute by name.
+    pub fn attr(&self, key: &str) -> Option<f64> {
+        self.attrs.iter().find(|(k, _)| k == key).map(|(_, v)| *v)
+    }
+
+    /// Serialize to the canonical JSON object shape. Object keys are
+    /// emitted in sorted order by the JSON layer, so the byte output
+    /// is deterministic for a given record.
+    pub fn to_json(&self) -> Json {
+        let attrs: Vec<(&str, Json)> =
+            self.attrs.iter().map(|(k, v)| (k.as_str(), Json::Num(*v))).collect();
+        Json::obj(vec![
+            ("trace", Json::Num(self.trace as f64)),
+            ("span", Json::Num(self.span as f64)),
+            ("parent", Json::Num(self.parent as f64)),
+            ("name", Json::Str(self.name.clone())),
+            ("worker", Json::Num(self.worker as f64)),
+            ("start_ns", Json::Num(self.start_ns as f64)),
+            ("end_ns", Json::Num(self.end_ns as f64)),
+            ("attrs", Json::obj(attrs)),
+        ])
+    }
+
+    /// Parse a record from its JSON object shape. Attributes come back
+    /// sorted by key (the JSON object is ordered); missing or
+    /// mistyped fields yield `None` rather than a panic — a trace file
+    /// is external input.
+    pub fn from_json(j: &Json) -> Option<SpanRecord> {
+        let num = |key: &str| j.get(key).and_then(Json::as_f64);
+        let mut attrs = Vec::new();
+        if let Some(Json::Obj(map)) = j.get("attrs") {
+            for (k, v) in map {
+                attrs.push((k.clone(), v.as_f64()?));
+            }
+        }
+        Some(SpanRecord {
+            trace: num("trace")? as u64,
+            span: num("span")? as u64,
+            parent: num("parent")? as u64,
+            name: j.get("name")?.as_str()?.to_string(),
+            worker: num("worker")? as u64,
+            start_ns: num("start_ns")? as u64,
+            end_ns: num("end_ns")? as u64,
+            attrs,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> SpanRecord {
+        SpanRecord {
+            trace: 7,
+            span: (3u64 << 32) | 12,
+            parent: (3u64 << 32) | 11,
+            name: names::SHARD_LEG.to_string(),
+            worker: 3,
+            start_ns: 1_000,
+            end_ns: 5_500,
+            attrs: vec![("fence".to_string(), 9.0), ("shard".to_string(), 2.0)],
+        }
+    }
+
+    #[test]
+    fn json_round_trip_is_exact() {
+        let rec = sample();
+        let j = crate::configx::parse_json(&rec.to_json().to_string()).unwrap();
+        let back = SpanRecord::from_json(&j).unwrap();
+        assert_eq!(back, rec);
+    }
+
+    #[test]
+    fn duration_saturates_and_attrs_resolve() {
+        let mut rec = sample();
+        assert_eq!(rec.duration_ns(), 4_500);
+        assert_eq!(rec.attr("shard"), Some(2.0));
+        assert_eq!(rec.attr("missing"), None);
+        rec.end_ns = 0;
+        assert_eq!(rec.duration_ns(), 0);
+    }
+
+    #[test]
+    fn malformed_json_is_none_not_a_panic() {
+        let j = crate::configx::parse_json(r#"{"trace": 1, "name": "x"}"#).unwrap();
+        assert!(SpanRecord::from_json(&j).is_none());
+    }
+}

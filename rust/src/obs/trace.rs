@@ -1,0 +1,406 @@
+//! Trace capture: per-worker span sinks and CRC-framed trace files.
+//!
+//! Each pool worker owns exactly one [`SpanSink`] — a single-owner
+//! ring buffer that is lock-free by construction (only its worker
+//! thread ever touches it; the crate forbids `unsafe`, so exclusive
+//! `&mut` ownership *is* the synchronization). Control threads (the
+//! monitor, cold-start recovery) share one sink behind a mutex since
+//! their event rate is a handful per run.
+//!
+//! A full ring drains to disk as one appended batch of frames. The
+//! on-disk format reuses the persist codec's framing discipline: each
+//! record is
+//!
+//! ```text
+//!   len   u32  (byte length of the JSON line, excluding newline)
+//!   crc   u32  (crc32 of the JSON line bytes)
+//!   json  len bytes (one compact JSON object, sorted keys)
+//!   '\n'  1 byte (keeps the file greppable as JSONL)
+//! ```
+//!
+//! so a reader can both stream it as JSONL *and* verify every record
+//! against torn writes — a crashed worker leaves at most one partial
+//! frame at the tail, which the CRC check isolates without poisoning
+//! the records before it.
+//!
+//! Trace I/O failures never propagate into serving: a failed flush is
+//! counted, logged, and dropped — observability must not become an
+//! availability dependency.
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use super::span::{SpanRecord, CONTROL_WORKER};
+use crate::persist::{crc32, Dec, Enc, PersistError};
+
+/// Default ring capacity (records buffered per worker before a drain).
+const DEFAULT_RING: usize = 1024;
+
+/// Serving-stack tracing configuration ([`ServiceConfig::trace`]).
+///
+/// [`ServiceConfig::trace`]: crate::coordinator::ServiceConfig
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Directory trace files are written under (created if absent).
+    pub dir: PathBuf,
+    /// Records buffered per worker between drains.
+    pub ring_capacity: usize,
+}
+
+impl TraceConfig {
+    /// Tracing into `dir` with the default ring capacity.
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        TraceConfig { dir: dir.into(), ring_capacity: DEFAULT_RING }
+    }
+}
+
+/// A live tracing session: the shared epoch every sink stamps
+/// timestamps against, plus the factory for per-worker sinks.
+pub struct Tracing {
+    dir: PathBuf,
+    epoch: Instant,
+    ring_capacity: usize,
+}
+
+impl Tracing {
+    /// Start a session: create the trace directory and fix the epoch.
+    /// Fails only on directory-creation I/O errors; callers treat that
+    /// like a disabled persistence layer (warn and serve untraced).
+    pub fn create(cfg: &TraceConfig) -> Result<Tracing, std::io::Error> {
+        std::fs::create_dir_all(&cfg.dir)?;
+        Ok(Tracing {
+            dir: cfg.dir.clone(),
+            epoch: super::clock::now(),
+            ring_capacity: cfg.ring_capacity.max(1),
+        })
+    }
+
+    /// The sink for pool worker `worker`, writing
+    /// `trace-worker-{worker}.jsonl`.
+    pub fn worker(&self, worker: usize) -> SpanSink {
+        SpanSink::new(
+            worker as u64,
+            self.epoch,
+            self.dir.join(format!("trace-worker-{worker}.jsonl")),
+            self.ring_capacity,
+        )
+    }
+
+    /// The shared control sink (monitor re-dispatches, recovery
+    /// events), writing `trace-control.jsonl`.
+    pub fn control(&self) -> SpanSink {
+        SpanSink::new(
+            CONTROL_WORKER,
+            self.epoch,
+            self.dir.join("trace-control.jsonl"),
+            self.ring_capacity,
+        )
+    }
+}
+
+/// A single-owner span buffer draining to one trace file.
+pub struct SpanSink {
+    worker: u64,
+    epoch: Instant,
+    seq: u64,
+    ring: Vec<SpanRecord>,
+    ring_capacity: usize,
+    path: PathBuf,
+    io_errors: u64,
+}
+
+impl SpanSink {
+    fn new(worker: u64, epoch: Instant, path: PathBuf, ring_capacity: usize) -> Self {
+        SpanSink {
+            worker,
+            epoch,
+            seq: 0,
+            ring: Vec::with_capacity(ring_capacity),
+            ring_capacity,
+            path,
+            io_errors: 0,
+        }
+    }
+
+    /// The worker id this sink stamps on its records.
+    pub fn worker(&self) -> u64 {
+        self.worker
+    }
+
+    /// Allocate the next span id (`worker << 32 | seq`): unique across
+    /// the pool without coordination, and survives worker restarts
+    /// because the sink lives in the supervisor-owned worker context.
+    pub fn next_id(&mut self) -> u64 {
+        self.seq += 1;
+        (self.worker << 32) | (self.seq & 0xFFFF_FFFF)
+    }
+
+    /// Nanoseconds from the session epoch to `t` (zero if `t` somehow
+    /// precedes the epoch).
+    pub fn ns_since_epoch(&self, t: Instant) -> u64 {
+        t.duration_since(self.epoch).as_nanos() as u64
+    }
+
+    /// Current telemetry time, as nanoseconds since the session epoch.
+    pub fn now_ns(&self) -> u64 {
+        self.ns_since_epoch(super::clock::now())
+    }
+
+    /// Buffer one record, draining the ring to disk when full.
+    pub fn push(&mut self, rec: SpanRecord) {
+        self.ring.push(rec);
+        if self.ring.len() >= self.ring_capacity {
+            self.flush();
+        }
+    }
+
+    /// Buffer a zero-duration event with the given attributes.
+    pub fn event(&mut self, trace: u64, name: &str, attrs: Vec<(String, f64)>) {
+        let now = self.now_ns();
+        let span = self.next_id();
+        let worker = self.worker;
+        self.push(SpanRecord {
+            trace,
+            span,
+            parent: 0,
+            name: name.to_string(),
+            worker,
+            start_ns: now,
+            end_ns: now,
+            attrs,
+        });
+    }
+
+    /// Drain buffered records to the trace file. I/O failures are
+    /// counted and logged, never propagated — tracing must not take
+    /// the serving path down with it.
+    pub fn flush(&mut self) {
+        if self.ring.is_empty() {
+            return;
+        }
+        let mut enc = Enc::new();
+        for rec in &self.ring {
+            let line = rec.to_json().to_string();
+            enc.put_u32(line.len() as u32);
+            enc.put_u32(crc32(line.as_bytes()));
+            enc.put_bytes(line.as_bytes());
+            enc.put_u8(b'\n');
+        }
+        let bytes = enc.into_bytes();
+        let res = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)
+            .and_then(|mut f| std::io::Write::write_all(&mut f, &bytes));
+        if let Err(e) = res {
+            self.io_errors += 1;
+            crate::log_warn!("trace flush to {} failed: {e}", self.path.display());
+        }
+        self.ring.clear();
+    }
+
+    /// Flushes that failed on I/O (each one dropped a ring's records).
+    pub fn io_errors(&self) -> u64 {
+        self.io_errors
+    }
+}
+
+/// Decode one trace file's frames. Records after a torn or corrupt
+/// frame are unreachable (framing is sequential), so decoding stops
+/// there: the successfully verified prefix comes back along with
+/// `truncated = true`. A missing file is an error; an empty file is an
+/// empty, non-truncated trace.
+pub fn read_frames(bytes: &[u8]) -> (Vec<SpanRecord>, bool) {
+    let mut dec = Dec::new(bytes);
+    let mut records = Vec::new();
+    while !dec.finished() {
+        match read_one(&mut dec) {
+            Ok(Some(rec)) => records.push(rec),
+            Ok(None) => continue,
+            Err(_) => return (records, true),
+        }
+    }
+    (records, false)
+}
+
+/// One frame: length, CRC, JSON payload, newline. `Ok(None)` means the
+/// frame verified but its JSON no longer parses as a span record
+/// (e.g. a newer writer) — skippable, unlike a CRC failure.
+fn read_one(dec: &mut Dec<'_>) -> Result<Option<SpanRecord>, PersistError> {
+    let len = dec.get_u32()? as usize;
+    let crc = dec.get_u32()?;
+    let payload = dec.get_bytes(len)?;
+    if crc32(payload) != crc {
+        return Err(PersistError::Corrupt {
+            what: "trace frame",
+            detail: format!("crc mismatch in a {len}-byte frame"),
+        });
+    }
+    let newline = dec.get_u8()?;
+    if newline != b'\n' {
+        return Err(PersistError::Corrupt {
+            what: "trace frame",
+            detail: "missing newline terminator".to_string(),
+        });
+    }
+    let text = match std::str::from_utf8(payload) {
+        Ok(t) => t,
+        Err(_) => return Ok(None),
+    };
+    let parsed = match crate::configx::parse_json(text) {
+        Ok(j) => j,
+        Err(_) => return Ok(None),
+    };
+    Ok(SpanRecord::from_json(&parsed))
+}
+
+/// Read and verify every frame of one trace file.
+pub fn read_trace_file(path: &Path) -> Result<(Vec<SpanRecord>, bool), String> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| format!("reading trace file {}: {e}", path.display()))?;
+    Ok(read_frames(&bytes))
+}
+
+/// Read every `trace-*.jsonl` file under `dir`, in sorted filename
+/// order (worker files first by index, then the control file), and
+/// return all verified records plus whether any file had a torn tail.
+pub fn read_trace_dir(dir: &Path) -> Result<(Vec<SpanRecord>, bool), String> {
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| format!("reading trace dir {}: {e}", dir.display()))?;
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("listing trace dir {}: {e}", dir.display()))?;
+        let path = entry.path();
+        let is_trace = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .is_some_and(|n| n.starts_with("trace-") && n.ends_with(".jsonl"));
+        if is_trace {
+            paths.push(path);
+        }
+    }
+    paths.sort();
+    let mut records = Vec::new();
+    let mut truncated = false;
+    for path in &paths {
+        let (mut recs, torn) = read_trace_file(path)?;
+        records.append(&mut recs);
+        truncated = truncated || torn;
+    }
+    Ok((records, truncated))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::names;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("trueknn-trace-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn rec(sink: &mut SpanSink, trace: u64, name: &str) -> SpanRecord {
+        let span = sink.next_id();
+        SpanRecord {
+            trace,
+            span,
+            parent: 0,
+            name: name.to_string(),
+            worker: sink.worker(),
+            start_ns: 10 * span,
+            end_ns: 10 * span + 5,
+            attrs: vec![("shard".to_string(), 1.0)],
+        }
+    }
+
+    #[test]
+    fn frames_round_trip_through_the_file() {
+        let dir = temp_dir("roundtrip");
+        let tracing = Tracing::create(&TraceConfig::new(&dir)).unwrap();
+        let mut sink = tracing.worker(3);
+        let a = rec(&mut sink, 1, names::QUEUE_WAIT);
+        let b = rec(&mut sink, 1, names::SHARD_LEG);
+        sink.push(a.clone());
+        sink.push(b.clone());
+        sink.flush();
+        let (records, truncated) =
+            read_trace_file(&dir.join("trace-worker-3.jsonl")).unwrap();
+        assert!(!truncated);
+        assert_eq!(records, vec![a, b]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn ring_drains_at_capacity_without_explicit_flush() {
+        let dir = temp_dir("ring");
+        let cfg = TraceConfig { dir: dir.clone(), ring_capacity: 2 };
+        let tracing = Tracing::create(&cfg).unwrap();
+        let mut sink = tracing.worker(0);
+        let a = rec(&mut sink, 1, names::REPLY);
+        let b = rec(&mut sink, 2, names::REPLY);
+        sink.push(a);
+        sink.push(b);
+        // capacity reached: the ring drained itself
+        let (records, _) = read_trace_file(&dir.join("trace-worker-0.jsonl")).unwrap();
+        assert_eq!(records.len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_preserves_the_verified_prefix() {
+        let dir = temp_dir("torn");
+        let tracing = Tracing::create(&TraceConfig::new(&dir)).unwrap();
+        let mut sink = tracing.worker(0);
+        let a = rec(&mut sink, 1, names::REPLY);
+        let b = rec(&mut sink, 2, names::REPLY);
+        sink.push(a.clone());
+        sink.push(b);
+        sink.flush();
+        let path = dir.join("trace-worker-0.jsonl");
+        let bytes = std::fs::read(&path).unwrap();
+        // tear the file mid-way through the second frame
+        let (records, truncated) = read_frames(&bytes[..bytes.len() - 3]);
+        assert!(truncated);
+        assert_eq!(records, vec![a]);
+        // flip one payload byte in the first frame: its crc fails and
+        // nothing survives
+        let mut corrupt = bytes.clone();
+        corrupt[10] ^= 0x01;
+        let (records, truncated) = read_frames(&corrupt);
+        assert!(truncated);
+        assert!(records.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dir_reader_collects_worker_and_control_files() {
+        let dir = temp_dir("dir");
+        let tracing = Tracing::create(&TraceConfig::new(&dir)).unwrap();
+        let mut w0 = tracing.worker(0);
+        let mut ctl = tracing.control();
+        let a = rec(&mut w0, 1, names::REPLY);
+        w0.push(a);
+        ctl.event(1, names::REDISPATCHED, vec![("shard".to_string(), 0.0)]);
+        w0.flush();
+        ctl.flush();
+        let (records, truncated) = read_trace_dir(&dir).unwrap();
+        assert!(!truncated);
+        assert_eq!(records.len(), 2);
+        assert!(records.iter().any(|r| r.name == names::REDISPATCHED
+            && r.worker == crate::obs::span::CONTROL_WORKER));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn span_ids_pack_worker_and_sequence() {
+        let dir = temp_dir("ids");
+        let tracing = Tracing::create(&TraceConfig::new(&dir)).unwrap();
+        let mut sink = tracing.worker(5);
+        assert_eq!(sink.next_id(), (5u64 << 32) | 1);
+        assert_eq!(sink.next_id(), (5u64 << 32) | 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

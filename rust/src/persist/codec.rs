@@ -89,6 +89,13 @@ impl<'a> Dec<'a> {
         self.buf.len() - self.pos
     }
 
+    /// Current cursor offset from the start of the buffer. Decoders
+    /// embed this in corruption diagnostics so an operator can see
+    /// *where* in a payload a parse failed, not just that it did.
+    pub fn position(&self) -> usize {
+        self.pos
+    }
+
     /// True when every byte has been consumed (decoders check this to
     /// reject payloads with trailing garbage).
     pub fn finished(&self) -> bool {

@@ -37,6 +37,17 @@ pub const SEC_PARTITION: u32 = 2;
 
 const MAGIC: &[u8; 4] = b"TKSN";
 
+/// Human-readable name of a section kind, used in corruption
+/// diagnostics so `trueknn snapshot --check` and the serve recovery
+/// log name the failing section instead of only counting the failure.
+pub fn section_name(kind: u32) -> &'static str {
+    match kind {
+        SEC_INDEX => "index",
+        SEC_PARTITION => "partition",
+        _ => "unknown",
+    }
+}
+
 /// Builder for a `TKSN` container: collect sections, then
 /// [`SnapshotWriter::finish`] into the final checksummed blob.
 pub struct SnapshotWriter {
@@ -161,13 +172,17 @@ impl Snapshot {
             let crc = dec.get_u32()?;
             let end = offset.checked_add(len).ok_or_else(|| PersistError::Corrupt {
                 what: "snapshot table",
-                detail: "section range overflows".to_string(),
+                detail: format!(
+                    "{} section (kind {kind}) at offset {offset}: range overflows",
+                    section_name(kind)
+                ),
             })?;
             if offset < header_len as u64 || end > body.len() as u64 {
                 return Err(PersistError::Corrupt {
                     what: "snapshot table",
                     detail: format!(
-                        "section [{offset}, {end}) outside payload area [{header_len}, {})",
+                        "{} section (kind {kind}) [{offset}, {end}) outside payload area [{header_len}, {})",
+                        section_name(kind),
                         body.len()
                     ),
                 });
@@ -177,7 +192,10 @@ impl Snapshot {
             if actual != crc {
                 return Err(PersistError::Corrupt {
                     what: "snapshot section",
-                    detail: format!("kind {kind}: crc {actual:#010x} != recorded {crc:#010x}"),
+                    detail: format!(
+                        "{} section (kind {kind}) at offset {offset}: crc {actual:#010x} != recorded {crc:#010x}",
+                        section_name(kind)
+                    ),
                 });
             }
             sections.push(SnapshotSection { kind, payload: payload.to_vec() });
@@ -271,6 +289,30 @@ mod tests {
             Err(PersistError::VersionMismatch { found, expected: FORMAT_VERSION })
                 if found == FORMAT_VERSION + 1
         ));
+    }
+
+    #[test]
+    fn section_corruption_names_the_section_and_offset() {
+        let mut bytes = sample();
+        // the index payload starts right after the header + table
+        // (2 sections × 24 bytes); corrupt its first byte and re-seal
+        // the footer so only the per-section crc check can fire
+        let header_len = 4 + 4 + 8 + 8 + 4 + 2 * 24;
+        bytes[header_len] ^= 0x01;
+        let body_len = bytes.len() - 4;
+        let crc = crc32(&bytes[..body_len]).to_le_bytes();
+        bytes[body_len..].copy_from_slice(&crc);
+        let err = Snapshot::parse(&bytes).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("index section"), "section name missing: {msg}");
+        assert!(msg.contains(&format!("offset {header_len}")), "offset missing: {msg}");
+    }
+
+    #[test]
+    fn section_names_cover_known_kinds() {
+        assert_eq!(section_name(SEC_INDEX), "index");
+        assert_eq!(section_name(SEC_PARTITION), "partition");
+        assert_eq!(section_name(77), "unknown");
     }
 
     #[test]

@@ -127,6 +127,29 @@ fn wallclock_respects_config_allowlist() {
     assert_eq!(rules_of(&analyze_source("knn", "f.rs", src, &cfg)), ["wallclock-in-core"]);
 }
 
+#[test]
+fn raw_instant_in_obs_is_flagged_outside_the_clock_chokepoint() {
+    // fixture pair for the repo's own allowlist shape: within obs, only
+    // the sanctioned `obs::clock` chokepoint may read the wall clock —
+    // a raw `Instant::now()` in any *other* obs module (the span sinks,
+    // the trace writer) is exactly the drift the chokepoint exists to
+    // prevent, and stays a wallclock-in-core finding (no new rule id)
+    let cfg =
+        LintConfig::parse("wallclock-in-core.allow = bench, exp, util::timer, obs::clock\n")
+            .unwrap();
+    let src = "fn t() -> std::time::Instant { std::time::Instant::now() }\n";
+    assert!(analyze_source("obs::clock", "f.rs", src, &cfg).is_empty());
+    assert_eq!(rules_of(&analyze_source("obs::span", "f.rs", src, &cfg)), ["wallclock-in-core"]);
+    assert_eq!(rules_of(&analyze_source("obs::trace", "f.rs", src, &cfg)), ["wallclock-in-core"]);
+    // the allow is a whole-segment prefix: submodules of the chokepoint
+    // inherit it, name-prefix siblings do not
+    assert!(analyze_source("obs::clock::mock", "f.rs", src, &cfg).is_empty());
+    assert_eq!(
+        rules_of(&analyze_source("obs::clockwork", "f.rs", src, &cfg)),
+        ["wallclock-in-core"]
+    );
+}
+
 // ---------------------------------------------------------------------
 // raw-threads
 // ---------------------------------------------------------------------

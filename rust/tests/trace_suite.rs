@@ -1,0 +1,569 @@
+//! PR10 observability suite: span-tree shape, histogram algebra, and
+//! the tracing-on/off transparency oracle.
+//!
+//! Three layers of assertion:
+//!
+//! - **shape** — a scattered request leaves exactly one `shard_leg`
+//!   per shard (all sharing one insert fence) and exactly one
+//!   `gather_merge` per shard, even when a failover re-dispatch puts a
+//!   duplicate partial in flight; round spans nest under their leg.
+//! - **algebra** — log2 histograms merge associatively and
+//!   commutatively, so any worker merge order yields one snapshot;
+//!   [`MockClock`]-driven timelines make duration assertions exact.
+//! - **transparency** — over the PR9 tie-heavy matrix (the adversarial
+//!   shard-boundary workload), responses with tracing on are bitwise
+//!   identical to tracing off, and the traced round spans carry the
+//!   engine's deterministic convergence counters verbatim.
+//!
+//! [`MockClock`]: trueknn::obs::clock::MockClock
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use trueknn::coordinator::{
+    KnnRequest, KnnResponse, QueryMode, RoutePath, Router, Service, ServiceConfig, TraceConfig,
+};
+use trueknn::dataset::DatasetKind;
+use trueknn::faults::FaultPlan;
+use trueknn::geom::Point3;
+use trueknn::index::{Backend, IndexBuilder, IndexConfig};
+use trueknn::knn::TrueKnnParams;
+use trueknn::obs::clock::MockClock;
+use trueknn::obs::profile::{span_tree, Profile};
+use trueknn::obs::span::{names, SpanRecord};
+use trueknn::obs::trace::read_trace_dir;
+use trueknn::obs::LogHistogram;
+
+/// A unique per-test trace directory under the system temp dir,
+/// wiped before use.
+fn trace_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("trueknn-trace-suite-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Bitwise response signature: route taken + every neighbor's
+/// (idx, dist bits), per query.
+type Sig = (RoutePath, Vec<Vec<(u32, u32)>>);
+
+fn sig_of(resp: &KnnResponse) -> Sig {
+    (
+        resp.path,
+        resp.neighbors
+            .iter()
+            .map(|nb| nb.iter().map(|n| (n.idx, n.dist.to_bits())).collect())
+            .collect(),
+    )
+}
+
+/// Serve `log` sequentially (one request in flight at a time) through a
+/// fresh service and return every response signature in request order.
+fn serve_sequential(
+    base: &[Point3],
+    log: &[(u64, Vec<Point3>, usize)],
+    cfg: ServiceConfig,
+) -> Vec<Sig> {
+    let (svc, handle) = Service::start(base.to_vec(), cfg);
+    let sigs = log
+        .iter()
+        .map(|(id, qs, k)| {
+            let resp = handle
+                .query(KnnRequest::new(*id, qs.clone(), *k).with_mode(QueryMode::Rt))
+                .expect("request must be served");
+            assert_eq!(resp.id, *id);
+            sig_of(&resp)
+        })
+        .collect();
+    svc.shutdown();
+    sigs
+}
+
+/// RT-forced request log over deterministic query slices.
+fn rt_log(
+    points: &[Point3],
+    ids: std::ops::Range<u64>,
+    qpr: usize,
+    k: usize,
+) -> Vec<(u64, Vec<Point3>, usize)> {
+    ids.map(|id| {
+        let start = (id as usize * 131) % (points.len() - qpr);
+        (id, points[start..start + qpr].to_vec(), k)
+    })
+    .collect()
+}
+
+#[test]
+fn a_scattered_request_leaves_one_leg_per_shard_sharing_one_fence() {
+    let dir = trace_dir("scatter");
+    let ds = DatasetKind::Taxi.generate(2_500, 91);
+    let log = rt_log(&ds.points, 0..4, 6, 4);
+    let shards = 2usize;
+    let cfg = ServiceConfig {
+        workers: 2,
+        shards,
+        queue_depth: 64,
+        trace: Some(TraceConfig::new(&dir)),
+        ..Default::default()
+    };
+    serve_sequential(&ds.points, &log, cfg);
+
+    let (records, truncated) = read_trace_dir(&dir).expect("trace dir must read back");
+    assert!(!truncated, "a clean shutdown must not tear frames");
+
+    for (id, queries, _) in &log {
+        let mine: Vec<&SpanRecord> = records.iter().filter(|r| r.trace == *id).collect();
+        assert!(!mine.is_empty(), "request {id} left no spans");
+
+        // exactly one leg per shard, every leg stamped with the same
+        // insert fence (all S legs share one fence read at scatter time)
+        let legs: Vec<&&SpanRecord> =
+            mine.iter().filter(|r| r.name == names::SHARD_LEG).collect();
+        assert_eq!(legs.len(), shards, "request {id}: one leg span per shard");
+        let mut shard_ids: Vec<i64> =
+            legs.iter().map(|l| l.attr("shard").unwrap_or(-1.0) as i64).collect();
+        shard_ids.sort_unstable();
+        assert_eq!(shard_ids, vec![0, 1], "request {id}: distinct shard legs");
+        let fences: Vec<f64> = legs.iter().map(|l| l.attr("fence").unwrap_or(-1.0)).collect();
+        assert!(
+            fences.iter().all(|f| *f == fences[0] && *f >= 0.0),
+            "request {id}: all legs must share one fence, got {fences:?}"
+        );
+
+        // exactly one merge per shard, one reply event on completion
+        let merges = mine.iter().filter(|r| r.name == names::GATHER_MERGE).count();
+        assert_eq!(merges, shards, "request {id}: one gather_merge per shard");
+        let replies: Vec<&&SpanRecord> =
+            mine.iter().filter(|r| r.name == names::REPLY).collect();
+        assert_eq!(replies.len(), 1, "request {id}: exactly one reply event");
+        assert_eq!(
+            replies[0].attr("queries"),
+            Some(queries.len() as f64),
+            "request {id}: the reply event reports the query count"
+        );
+
+        // the reconstructed tree has the synthesized root and nests
+        // every round span under one of the legs
+        let tree = span_tree(&records, *id).expect("request {id} must reconstruct");
+        assert_eq!(tree.record.name, names::REQUEST);
+        let tree_rounds: usize = tree
+            .children
+            .iter()
+            .filter(|c| c.record.name == names::SHARD_LEG)
+            .map(|leg| {
+                leg.children
+                    .iter()
+                    .filter(|c| c.record.name == names::ROUND)
+                    .count()
+            })
+            .sum();
+        let flat_rounds = mine.iter().filter(|r| r.name == names::ROUND).count();
+        assert!(flat_rounds > 0, "request {id}: the TrueKNN path must log rounds");
+        assert_eq!(
+            tree_rounds, flat_rounds,
+            "request {id}: every round span nests under a leg"
+        );
+    }
+}
+
+#[test]
+fn a_failover_redispatch_traces_an_event_and_no_duplicate_merge() {
+    // a stalled shard owner's leg is re-dispatched by the monitor; the
+    // owner later wakes and delivers a duplicate partial. The control
+    // trace must carry the redispatched event, and the dedup must keep
+    // the merge spans at exactly one per (request, shard) — a duplicate
+    // delivery records no second gather_merge.
+    let dir = trace_dir("failover");
+    let ds = DatasetKind::Taxi.generate(3_000, 80);
+    let log = rt_log(&ds.points, 0..2, 6, 3);
+    let oracle = serve_sequential(
+        &ds.points,
+        &log,
+        ServiceConfig {
+            queue_depth: 64,
+            ..Default::default()
+        },
+    );
+
+    let victim = Router::worker_for_shard(RoutePath::Rt, 0, 2);
+    let cfg = ServiceConfig {
+        workers: 2,
+        shards: 2,
+        queue_depth: 64,
+        heartbeat_timeout: Duration::from_millis(40),
+        faults: FaultPlan::inert().with_queue_stall(victim, 0, 800),
+        trace: Some(TraceConfig::new(&dir)),
+        ..Default::default()
+    };
+    let got = serve_sequential(&ds.points, &log, cfg);
+    assert_eq!(got, oracle, "failover + tracing must not change responses");
+
+    let (records, truncated) = read_trace_dir(&dir).expect("trace dir must read back");
+    assert!(!truncated);
+    let redispatched: Vec<&SpanRecord> = records
+        .iter()
+        .filter(|r| r.name == names::REDISPATCHED)
+        .collect();
+    assert!(
+        !redispatched.is_empty(),
+        "the monitor must trace its re-dispatch"
+    );
+    assert!(
+        redispatched.iter().all(|r| r.attr("shard").is_some() && r.attr("fence").is_some()),
+        "redispatched events carry the shard and the gather's fence"
+    );
+    for (id, _, _) in &log {
+        let merges = records
+            .iter()
+            .filter(|r| r.trace == *id && r.name == names::GATHER_MERGE)
+            .count();
+        assert_eq!(
+            merges, 2,
+            "request {id}: duplicate partial delivery must not add a merge span"
+        );
+        let replies = records
+            .iter()
+            .filter(|r| r.trace == *id && r.name == names::REPLY)
+            .count();
+        assert_eq!(replies, 1, "request {id}: one reply even under failover");
+    }
+    let profile = Profile::build(&records, false);
+    assert!(profile.redispatched >= 1);
+}
+
+#[test]
+fn histogram_merge_is_associative_and_commutative_across_worker_orders() {
+    // three "workers" with disjoint but overlapping-bucket samples
+    let samples: [&[u64]; 3] = [
+        &[0, 1, 900, 70_000, 70_001],
+        &[2, 950, 1_000_000_000],
+        &[3, 3, 3, 80_000, u64::MAX],
+    ];
+    let hists: Vec<LogHistogram> = samples
+        .iter()
+        .map(|s| {
+            let mut h = LogHistogram::new();
+            for &ns in *s {
+                h.record(ns);
+            }
+            h
+        })
+        .collect();
+
+    // every permutation of the merge order lands on identical state
+    let orders: [[usize; 3]; 6] = [
+        [0, 1, 2],
+        [0, 2, 1],
+        [1, 0, 2],
+        [1, 2, 0],
+        [2, 0, 1],
+        [2, 1, 0],
+    ];
+    let merged: Vec<LogHistogram> = orders
+        .iter()
+        .map(|ord| {
+            let mut acc = LogHistogram::new();
+            for &i in ord {
+                acc.merge(&hists[i]);
+            }
+            acc
+        })
+        .collect();
+    for m in &merged[1..] {
+        assert_eq!(m, &merged[0], "merge order changed histogram state");
+    }
+    // and associativity proper: (a ∪ b) ∪ c == a ∪ (b ∪ c)
+    let mut left = hists[0].clone();
+    left.merge(&hists[1]);
+    left.merge(&hists[2]);
+    let mut bc = hists[1].clone();
+    bc.merge(&hists[2]);
+    let mut right = hists[0].clone();
+    right.merge(&bc);
+    assert_eq!(left, right);
+    assert_eq!(left.count(), 11);
+    // percentiles of the merged state are a pure function of it
+    for pct in [50, 95, 99, 100] {
+        assert_eq!(
+            left.percentile_upper_ns(pct),
+            merged[0].percentile_upper_ns(pct)
+        );
+    }
+}
+
+#[test]
+fn mock_clock_timelines_make_span_shapes_and_histograms_exact() {
+    // two identically-seeded mock clocks must drive byte-identical
+    // telemetry: same histogram state, same span tree, same profile
+    let build = |seed: u64| {
+        let mut clock = MockClock::new(seed);
+        let mut hist = LogHistogram::new();
+        let mut records = Vec::new();
+        let t0 = clock.now_ns();
+        // one scattered request: queue_wait, two legs (a round under
+        // each), two merges, one reply — timestamps all mock-driven
+        let wait_end = clock.tick();
+        records.push(SpanRecord {
+            trace: 7,
+            span: (1 << 32) | 1,
+            parent: 0,
+            name: names::QUEUE_WAIT.to_string(),
+            worker: 1,
+            start_ns: t0,
+            end_ns: wait_end,
+            attrs: vec![],
+        });
+        hist.record(wait_end - t0);
+        for (w, shard) in [(1u64, 0u64), (2, 1)] {
+            let leg_start = clock.now_ns();
+            let round_end = clock.tick();
+            let leg_end = clock.tick();
+            let leg_id = (w << 32) | 2;
+            records.push(SpanRecord {
+                trace: 7,
+                span: leg_id,
+                parent: 0,
+                name: names::SHARD_LEG.to_string(),
+                worker: w,
+                start_ns: leg_start,
+                end_ns: leg_end,
+                attrs: vec![("shard".into(), shard as f64), ("fence".into(), 3.0)],
+            });
+            records.push(SpanRecord {
+                trace: 7,
+                span: (w << 32) | 3,
+                parent: leg_id,
+                name: names::ROUND.to_string(),
+                worker: w,
+                start_ns: leg_start,
+                end_ns: round_end,
+                attrs: vec![
+                    ("round".into(), 0.0),
+                    ("radius".into(), 0.25),
+                    ("queries".into(), 6.0),
+                    ("survivors".into(), 2.0),
+                    ("heap_pushes".into(), 40.0),
+                ],
+            });
+            hist.record(leg_end - leg_start);
+        }
+        (hist, records)
+    };
+
+    let (hist_a, recs_a) = build(42);
+    let (hist_b, recs_b) = build(42);
+    assert_eq!(hist_a, hist_b, "same seed, same histogram");
+    assert_eq!(recs_a.len(), recs_b.len());
+    for (a, b) in recs_a.iter().zip(&recs_b) {
+        assert_eq!(a.start_ns, b.start_ns);
+        assert_eq!(a.end_ns, b.end_ns);
+    }
+
+    let tree = span_tree(&recs_a, 7).expect("tree must reconstruct");
+    assert_eq!(tree.record.name, names::REQUEST);
+    assert_eq!(tree.children.len(), 3, "queue_wait + two legs at the top");
+    let legs: Vec<_> = tree
+        .children
+        .iter()
+        .filter(|c| c.record.name == names::SHARD_LEG)
+        .collect();
+    assert_eq!(legs.len(), 2);
+    for leg in legs {
+        assert_eq!(leg.children.len(), 1);
+        assert_eq!(leg.children[0].record.name, names::ROUND);
+    }
+    let p = Profile::build(&recs_a, false);
+    assert_eq!(p.traces, 1);
+    assert_eq!(p.rounds.len(), 1);
+    assert_eq!(p.rounds[0].heap_pushes, 80);
+    assert_eq!(p.rounds[0].survivors, 4);
+    // a different seed shifts timestamps but never the deterministic
+    // shape or the counter attributes
+    let (_, recs_c) = build(1234);
+    let pc = Profile::build(&recs_c, false);
+    assert_eq!(pc.rounds, p.rounds);
+    assert_eq!(pc.traces, p.traces);
+}
+
+/// The PR9 adversarial tie workload, scaled for a suite run: duplicate
+/// runs of lattice sites (pure id tie-breaks at every k-cut) plus
+/// equidistant shells, so shard boundaries split exact-distance ties.
+fn tie_points() -> Vec<Point3> {
+    let mut ties: Vec<Point3> = Vec::new();
+    for i in 0..60usize {
+        let site = Point3::new(
+            (i % 8) as f32 * 0.1,
+            ((i / 8) % 8) as f32 * 0.1,
+            (i / 64) as f32 * 0.1,
+        );
+        for _ in 0..9 {
+            ties.push(site);
+        }
+    }
+    let d = 0.015f32;
+    for i in 0..20usize {
+        let c = ties[i * 9];
+        for (dx, dy, dz) in [
+            (d, 0.0, 0.0),
+            (-d, 0.0, 0.0),
+            (0.0, d, 0.0),
+            (0.0, -d, 0.0),
+            (0.0, 0.0, d),
+            (0.0, 0.0, -d),
+        ] {
+            ties.push(Point3::new(c.x + dx, c.y + dy, c.z + dz));
+        }
+    }
+    ties
+}
+
+#[test]
+fn tracing_is_bitwise_invisible_on_the_tie_heavy_matrix() {
+    // the transparency oracle on the workload where a hidden
+    // result-path dependency would show first: every tie-heavy
+    // configuration must answer bitwise-identically with tracing on
+    // and off, and every configuration must agree with the first
+    let ties = tie_points();
+    let queries: Vec<Point3> = ties.iter().step_by(7).take(32).copied().collect();
+    let log: Vec<(u64, Vec<Point3>, usize)> = (0..4u64)
+        .map(|id| {
+            let start = (id as usize * 8) % (queries.len() - 8);
+            (id, queries[start..start + 8].to_vec(), 5)
+        })
+        .collect();
+
+    let mut baseline: Option<Vec<Sig>> = None;
+    for shards in [1usize, 2, 3] {
+        for workers in [1usize, 2] {
+            let cfg = |trace: Option<TraceConfig>| ServiceConfig {
+                workers,
+                shards,
+                queue_depth: 64,
+                trueknn: TrueKnnParams {
+                    exclude_self: false,
+                    ..Default::default()
+                },
+                trace,
+                ..Default::default()
+            };
+            let off = serve_sequential(&ties, &log, cfg(None));
+            let dir = trace_dir(&format!("ties-s{shards}-w{workers}"));
+            let on = serve_sequential(&ties, &log, cfg(Some(TraceConfig::new(&dir))));
+            assert_eq!(
+                on, off,
+                "shards={shards} workers={workers}: tracing changed responses"
+            );
+            let _ = std::fs::remove_dir_all(&dir);
+            match &baseline {
+                None => baseline = Some(off),
+                Some(base) => assert_eq!(
+                    &off, base,
+                    "shards={shards} workers={workers}: drifted from the matrix baseline"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn traced_round_spans_match_the_deterministic_counters_exactly() {
+    // the convergence table is not a sample: every round span's
+    // (round, radius, queries, survivors, heap_pushes) must equal the
+    // engine's own RoundStats for the same batch, bit for bit — the
+    // oracle is a directly-built index with the service's RT config
+    let dir = trace_dir("convergence");
+    let ds = DatasetKind::Taxi.generate(2_000, 92);
+    let log = rt_log(&ds.points, 0..4, 8, 4);
+    let cfg = ServiceConfig {
+        // single worker, unsharded: each sequential request is its own
+        // batch on the direct path, so trace rounds align 1:1 with an
+        // oracle knn() call per request
+        workers: 1,
+        shards: 1,
+        queue_depth: 64,
+        trace: Some(TraceConfig::new(&dir)),
+        ..Default::default()
+    };
+    serve_sequential(&ds.points, &log, cfg);
+    let (records, truncated) = read_trace_dir(&dir).expect("trace dir must read back");
+    assert!(!truncated);
+
+    // the service's RT route config: TrueKnnParams::default() with
+    // exclude_self forced off (service queries are external points)
+    let params = TrueKnnParams {
+        exclude_self: false,
+        ..Default::default()
+    };
+    let oracle_cfg = IndexConfig {
+        exclude_self: false,
+        ..params.to_index_config()
+    };
+    let mut oracle = IndexBuilder::new(Backend::TrueKnn)
+        .config(oracle_cfg)
+        .build(ds.points.clone());
+
+    let mut expected_rounds: BTreeMap<u64, Vec<(f64, f64, f64, f64, f64)>> = BTreeMap::new();
+    for (id, queries, k) in &log {
+        let res = oracle.knn(queries, *k);
+        expected_rounds.insert(
+            *id,
+            res.rounds
+                .iter()
+                .map(|r| {
+                    (
+                        r.round as f64,
+                        f64::from(r.radius),
+                        r.queries as f64,
+                        r.survivors as f64,
+                        r.heap_pushes as f64,
+                    )
+                })
+                .collect(),
+        );
+    }
+
+    for (id, want) in &expected_rounds {
+        let mut got: Vec<(f64, f64, f64, f64, f64)> = records
+            .iter()
+            .filter(|r| r.trace == *id && r.name == names::ROUND)
+            .map(|r| {
+                (
+                    r.attr("round").unwrap_or(-1.0),
+                    r.attr("radius").unwrap_or(-1.0),
+                    r.attr("queries").unwrap_or(-1.0),
+                    r.attr("survivors").unwrap_or(-1.0),
+                    r.attr("heap_pushes").unwrap_or(-1.0),
+                )
+            })
+            .collect();
+        got.sort_by(|a, b| a.0.total_cmp(&b.0));
+        assert!(!want.is_empty(), "request {id}: oracle must run rounds");
+        assert_eq!(
+            &got, want,
+            "request {id}: traced convergence diverged from the engine's RoundStats"
+        );
+    }
+
+    // and the aggregate profile's convergence table sums them exactly
+    let profile = Profile::build(&records, false);
+    let mut want_sum: BTreeMap<u64, (u64, u64, u64)> = BTreeMap::new();
+    for rounds in expected_rounds.values() {
+        for &(round, _, queries, survivors, pushes) in rounds {
+            let slot = want_sum.entry(round as u64).or_insert((0, 0, 0));
+            slot.0 += queries as u64;
+            slot.1 += survivors as u64;
+            slot.2 += pushes as u64;
+        }
+    }
+    assert_eq!(profile.rounds.len(), want_sum.len());
+    for agg in &profile.rounds {
+        let want = want_sum.get(&agg.round).expect("round present in oracle");
+        assert_eq!(
+            (agg.queries, agg.survivors, agg.heap_pushes),
+            *want,
+            "round {}: profile aggregation drifted",
+            agg.round
+        );
+    }
+}
